@@ -1,0 +1,67 @@
+//! Edge-deployment scenario (the paper's Orin-Nano story, §H/Fig. 9):
+//! single-stream long generation under a tight memory budget. Prints a
+//! live token stream for FP vs Quamba plus the TPOT trace and the
+//! constant per-request state footprint.
+//!
+//!     cargo run --release --example edge_generation -- [--max-new 96]
+
+use anyhow::Result;
+use quamba::config::Manifest;
+use quamba::coordinator::engine::{Engine, EngineConfig};
+use quamba::coordinator::request::{Request, SamplingParams};
+use quamba::data;
+use quamba::runtime::Runtime;
+use quamba::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let root = Manifest::default_root();
+    let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
+    let tier = args
+        .get("tier")
+        .map(String::from)
+        .or_else(|| mani.tiers.keys().filter(|t| *t != "jamba").last().cloned())
+        .expect("no artifacts");
+    let max_new = args.get_usize("max-new", 96);
+    let stream = data::load_stream(&mani.data["pile_eval"])?;
+    let vocab = data::Vocab::load(&mani.data["vocab"])?;
+    let prompt = stream[100..132].to_vec();
+    println!("tier {tier}; prompt: {}\n", vocab.decode(&prompt));
+
+    for method in ["fp16", "quamba"] {
+        let rt = Runtime::new(&root)?;
+        let mut engine = match Engine::new(rt, EngineConfig::new(&tier, method)) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        engine.warmup()?;
+        println!(
+            "=== {method}: model {:.2} MB, per-request state {:.1} KB (constant) ===",
+            mani.weights
+                .get(&format!("{tier}_{method}"))
+                .map(|w| w.bytes as f64 / 1e6)
+                .unwrap_or(f64::NAN),
+            engine.state_bytes_per_request() as f64 / 1024.0
+        );
+        engine.submit(Request {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new_tokens: max_new,
+            params: SamplingParams { temperature: 0.7, top_k: 30, seed: 3 },
+            stop_at_eos: false,
+        });
+        let t0 = std::time::Instant::now();
+        let responses = engine.run_to_completion()?;
+        let resp = &responses[0];
+        println!("{}", vocab.decode(&resp.tokens));
+        println!(
+            "\nTTFT {:.1} ms · TPOT mean {:.2} ms · {} tokens in {:.2}s · decode p99 {:.2} ms\n",
+            resp.ttft_ms,
+            resp.tpot_ms,
+            resp.tokens.len(),
+            t0.elapsed().as_secs_f64(),
+            engine.metrics.decode_step_ms.quantile(0.99),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! END-TO-END DRIVER (DESIGN.md deliverable (b)/EXPERIMENTS.md §E2E):
+//! exercises every layer on a real small workload — loads the trained
+//! tiers through PJRT, serves batched requests (throughput/latency),
+//! evaluates perplexity on both corpora and the six-task suite for FP
+//! vs Quamba, and prints the headline comparison the paper makes:
+//! near-FP accuracy at roughly half the model bytes.
+//!
+//!     make artifacts && cargo run --release --example eval_all
+
+use anyhow::Result;
+use quamba::bench_support::{f2, pct, Table, Workload};
+use quamba::config::Manifest;
+use quamba::coordinator::server::ServerHandle;
+use quamba::coordinator::{EngineConfig, SamplingParams};
+use quamba::data::{load_stream, load_tasks};
+use quamba::eval::{average_accuracy, perplexity, run_tasks};
+use quamba::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let root = Manifest::default_root();
+    let mut rt = Runtime::new(&root)?;
+    let tiers: Vec<String> = rt
+        .manifest()
+        .tiers
+        .keys()
+        .filter(|t| *t != "jamba")
+        .cloned()
+        .collect();
+    let wiki = load_stream(&rt.manifest().data["wiki_eval"])?;
+    let pile = load_stream(&rt.manifest().data["pile_eval"])?;
+    let tasks = load_tasks(&rt.manifest().data["tasks"])?;
+
+    // 1) accuracy: FP vs Quamba on every tier
+    let mut t = Table::new(
+        "End-to-end — FP32 vs Quamba W8A8 (perplexity / avg accuracy / bytes)",
+        &["tier", "fp ppl(wiki)", "q ppl(wiki)", "fp ppl(pile)", "q ppl(pile)",
+          "fp acc", "q acc", "size ratio"],
+    );
+    for tier in &tiers {
+        let fp_w = perplexity(&mut rt, tier, "fp16", &wiki, 8).map(|r| r.ppl);
+        let q_w = perplexity(&mut rt, tier, "quamba", &wiki, 8).map(|r| r.ppl);
+        let fp_p = perplexity(&mut rt, tier, "fp16", &pile, 8).map(|r| r.ppl);
+        let q_p = perplexity(&mut rt, tier, "quamba", &pile, 8).map(|r| r.ppl);
+        let fp_a = run_tasks(&mut rt, tier, "fp16", &tasks, 30).map(|r| average_accuracy(&r));
+        let q_a = run_tasks(&mut rt, tier, "quamba", &tasks, 30).map(|r| average_accuracy(&r));
+        let ratio = match (
+            rt.model_bytes(&format!("{tier}_fp16")),
+            rt.model_bytes(&format!("{tier}_quamba")),
+        ) {
+            (Some(f), Some(q)) => format!("{:.2}x", f as f64 / q as f64),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            tier.clone(),
+            fp_w.map(f2).unwrap_or_default(),
+            q_w.map(f2).unwrap_or_default(),
+            fp_p.map(f2).unwrap_or_default(),
+            q_p.map(f2).unwrap_or_default(),
+            fp_a.map(pct).unwrap_or_default(),
+            q_a.map(pct).unwrap_or_default(),
+            ratio,
+        ]);
+    }
+    t.print();
+    drop(rt);
+
+    // 2) serving: batched workload through the threaded coordinator
+    let serve_tier = tiers.last().cloned().unwrap();
+    let stream = load_stream(&Manifest::load(&root).map_err(anyhow::Error::msg)?.data["pile_eval"])?;
+    let wl = Workload::poisson(&stream, 12, 20.0, 8, 32, 16, 99);
+    for method in ["fp16", "quamba"] {
+        let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
+        if !mani
+            .graphs
+            .values()
+            .any(|g| g.tier == serve_tier && g.method == method && g.kind == "decode")
+        {
+            continue;
+        }
+        let mut server = ServerHandle::spawn(root.clone(), EngineConfig::new(&serve_tier, method))?;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = wl
+            .prompts
+            .iter()
+            .map(|p| server.submit(p.clone(), 16, SamplingParams::default()))
+            .collect();
+        let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+        println!(
+            "\nserving {serve_tier}/{method}: {done}/12 requests in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        if let Some(r) = server.metrics_report() {
+            println!("{r}");
+        }
+        server.shutdown();
+    }
+    println!("\neval_all complete — see EXPERIMENTS.md for the recorded run.");
+    Ok(())
+}

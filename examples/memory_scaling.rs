@@ -1,0 +1,64 @@
+//! Memory-scaling scenario (paper Fig. 1(c)): drive both state pools —
+//! the SSM's constant slabs and the transformer's growing KV cache —
+//! through a simulated long-context serving session and print the
+//! per-request + aggregate memory trajectory, including the KV pool's
+//! backpressure watermark kicking in.
+//!
+//!     cargo run --release --example memory_scaling
+
+use anyhow::Result;
+use quamba::bench_support::Table;
+use quamba::config::Manifest;
+use quamba::coordinator::state::{KvCachePool, SsmStatePool};
+
+fn main() -> Result<()> {
+    let root = Manifest::default_root();
+    let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
+    let tier = mani
+        .tiers
+        .values()
+        .filter(|t| t.name != "jamba")
+        .last()
+        .expect("run `make artifacts`")
+        .clone();
+
+    let mut t = Table::new(
+        "Per-request state while a conversation grows (KB)",
+        &["context len", "mamba state", "pythia KV"],
+    );
+    let ssm = SsmStatePool::new(&tier, 8);
+    let kv_tier = mani.transformer_tiers.values().next().cloned();
+    for ctx in [64usize, 128, 256, 512, 1024, 2048] {
+        let kv = kv_tier
+            .as_ref()
+            .map(|pt| {
+                let pool = KvCachePool::new(pt, 1, usize::MAX);
+                format!("{:.1}", pool.bytes_per_request(ctx) as f64 / 1024.0)
+            })
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            ctx.to_string(),
+            format!("{:.1}", ssm.bytes_per_request() as f64 / 1024.0),
+            kv,
+        ]);
+    }
+    t.print();
+
+    // aggregate: admit requests until the KV watermark rejects; the SSM
+    // pool admits capacity-many regardless of context
+    if let Some(pt) = kv_tier {
+        let budget = 2 * 1024 * 1024; // 2 MB budget, edge-device flavored
+        let mut kv = KvCachePool::new(&pt, 64, budget);
+        let mut admitted = 0;
+        while kv.alloc(512).is_some() {
+            admitted += 1;
+        }
+        println!(
+            "\nKV pool with a {budget} B budget admits {admitted} requests at ctx=512\n\
+             (then backpressures); the SSM pool admits its full capacity at\n\
+             {:.1} KB each regardless of context — the paper's Fig. 1(c) story.",
+            ssm.bytes_per_request() as f64 / 1024.0
+        );
+    }
+    Ok(())
+}

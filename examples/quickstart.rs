@@ -1,0 +1,50 @@
+//! Quickstart: load the artifacts, pick the smallest tier, generate a
+//! few tokens with the FP and the Quamba W8A8 model, and print the
+//! latency + memory comparison.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use quamba::config::Manifest;
+use quamba::coordinator::server::ServerHandle;
+use quamba::coordinator::{EngineConfig, SamplingParams};
+use quamba::data;
+
+fn main() -> Result<()> {
+    let root = Manifest::default_root();
+    let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
+    let tier = mani
+        .tiers
+        .keys()
+        .find(|t| *t != "jamba")
+        .cloned()
+        .expect("no tiers built — run `make artifacts`");
+    println!("tier: {tier} ({})", mani.tiers[&tier].paper_name);
+
+    let stream = data::load_stream(&mani.data["pile_eval"])?;
+    let vocab = data::Vocab::load(&mani.data["vocab"])?;
+    let prompt = stream[..24].to_vec();
+    println!("prompt: {}\n", vocab.decode(&prompt));
+
+    for method in ["fp16", "quamba"] {
+        let mut server = ServerHandle::spawn(root.clone(), EngineConfig::new(&tier, method))?;
+        let rx = server.submit(
+            prompt.clone(),
+            32,
+            SamplingParams { temperature: 0.8, top_k: 20, seed: 1 },
+        );
+        let resp = rx.recv()?;
+        let bytes = mani
+            .weights
+            .get(&format!("{tier}_{method}"))
+            .map(|w| w.bytes as f64 / 1e6)
+            .unwrap_or(f64::NAN);
+        println!("[{method:>7}] {}", vocab.decode(&resp.tokens));
+        println!(
+            "          TTFT {:.1} ms · TPOT {:.2} ms · model {bytes:.2} MB\n",
+            resp.ttft_ms, resp.tpot_ms
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Batched-serving scenario (the paper's "request-intensive cloud"
+//! motivation): Poisson arrivals into the threaded server, continuous
+//! bucketed decode batching, TTFT/TPOT/TTLT + throughput report,
+//! FP vs Quamba side by side.
+//!
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8]
+
+use anyhow::Result;
+use quamba::bench_support::Workload;
+use quamba::config::Manifest;
+use quamba::coordinator::server::ServerHandle;
+use quamba::coordinator::{EngineConfig, SamplingParams};
+use quamba::data;
+use quamba::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let root = Manifest::default_root();
+    let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
+    // prefer the tier with wide decode buckets (m2p8 in the full build)
+    let tier = args
+        .get("tier")
+        .map(String::from)
+        .or_else(|| {
+            mani.graphs
+                .values()
+                .filter(|g| g.kind == "decode" && g.batch > 1)
+                .map(|g| g.tier.clone())
+                .next()
+        })
+        .or_else(|| mani.tiers.keys().next().cloned())
+        .expect("no artifacts");
+    let n = args.get_usize("requests", 24);
+    let rate = args.get_f64("rate", 8.0);
+    let max_new = args.get_usize("max-new", 24);
+    let stream = data::load_stream(&mani.data["pile_eval"])?;
+    let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
+
+    for method in ["fp16", "quamba"] {
+        if !mani
+            .graphs
+            .values()
+            .any(|g| g.tier == tier && g.method == method && g.kind == "decode")
+        {
+            continue;
+        }
+        println!("\n=== {tier}/{method}: {n} requests, ~{rate}/s, {max_new} new tokens each ===");
+        let mut server = ServerHandle::spawn(root.clone(), EngineConfig::new(&tier, method))?;
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for (i, prompt) in wl.prompts.iter().enumerate() {
+            let target = wl.arrival_s[i];
+            let now = t0.elapsed().as_secs_f64();
+            if target > now {
+                std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+            }
+            rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
+        }
+        let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+        let wall = t0.elapsed().as_secs_f64();
+        println!("completed {done}/{n} in {wall:.2}s");
+        if let Some(r) = server.metrics_report() {
+            println!("{r}");
+        }
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""Figure-data exporter (paper Figures 3, 8, 12, 13 and Section I).
+
+Runs the fp models over calibration text and dumps per-layer activation
+statistics (box-plot quantiles, per-channel maxima, rotated-space
+maxima) as JSON — the numbers behind the paper's distribution plots,
+consumable by any plotting frontend and by the docs.
+
+Usage (build path, after `make artifacts`):
+
+    cd python && python -m compile.analyze --out ../artifacts/analysis.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import qtz
+from . import transformer as tr_mod
+from .quant import hadamard_util as hu
+
+
+def tensor_stats(a: np.ndarray) -> dict:
+    """Box-plot quantiles + outlier summary over a (.., C) activation."""
+    flat = np.abs(a.reshape(-1))
+    chan = np.abs(a.reshape(-1, a.shape[-1])).max(axis=0)
+    qs = np.percentile(flat, [50, 75, 90, 99, 99.9, 100])
+    return {
+        "p50": float(qs[0]),
+        "p75": float(qs[1]),
+        "p90": float(qs[2]),
+        "p99": float(qs[3]),
+        "p99_9": float(qs[4]),
+        "max": float(qs[5]),
+        "chan_max_median": float(np.median(chan)),
+        "chan_max_max": float(chan.max()),
+        "outlier_channels": int((chan > 6 * max(1e-9, np.median(chan))).sum()),
+    }
+
+
+def analyze_mamba(artifacts: str, tier_name: str, tokens: np.ndarray) -> dict:
+    cfg = model_mod.TIERS[tier_name]
+    w = qtz.load(os.path.join(artifacts, f"weights/{tier_name}_fp16.qtz"))
+    gains = (jnp.asarray(w.pop("__gains.g_x")), jnp.asarray(w.pop("__gains.g_y")))
+    params = {k: jnp.asarray(v) for k, v in w.items()}
+    _, _, _, taps = model_mod.forward_fp(cfg, params, jnp.asarray(tokens[None]),
+                                         collect=True, gains=gains)
+    out: dict = {"tier": tier_name, "layers": OrderedDict()}
+    for i in range(cfg.n_layer):
+        x = np.asarray(taps[f"l{i}.x_ssm"])
+        gated = np.asarray(taps[f"l{i}.gated"])
+        gated_h = np.asarray(taps[f"l{i}.gated_h"])
+        out["layers"][str(i)] = {
+            "x_ssm": tensor_stats(x),          # paper Fig 8 left / Fig 12 x
+            "y_gated": tensor_stats(gated),    # paper Fig 8 right / Fig 12 y
+            "y_rotated": tensor_stats(gated_h),
+            "hadamard_suppression": float(
+                np.abs(gated).max() * np.sqrt(gated.shape[-1]) / max(1e-9, np.abs(gated_h).max())
+            ),
+        }
+    return out
+
+
+def analyze_transformer(artifacts: str, tier_name: str, tokens: np.ndarray) -> dict:
+    cfg = tr_mod.T_TIERS[tier_name]
+    w = qtz.load(os.path.join(artifacts, f"weights/{tier_name}_fp16.qtz"))
+    params = {k: jnp.asarray(v) for k, v in w.items()}
+    # bound the cache to the sample length for speed
+    small = tr_mod.TransformerTier(
+        name=cfg.name, paper_name=cfg.paper_name, d_model=cfg.d_model,
+        n_layer=cfg.n_layer, n_head=cfg.n_head, max_ctx=len(tokens), vocab=cfg.vocab)
+    _, _, _, taps = tr_mod.forward_fp(small, params, jnp.asarray(tokens[None].astype(np.int32)),
+                                      collect=True)
+    out: dict = {"tier": tier_name, "layers": OrderedDict()}
+    for i in range(cfg.n_layer):
+        out["layers"][str(i)] = {
+            "attn_out_y": tensor_stats(np.asarray(taps[f"l{i}.attn_out"])),  # Fig 13: smooth
+            "mlp_hidden_h_d": tensor_stats(np.asarray(taps[f"l{i}.h_d"])),   # Fig 13: outliers
+        }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--out", default="../artifacts/analysis.json")
+    ap.add_argument("--tokens", type=int, default=256)
+    args = ap.parse_args(argv)
+
+    stream = qtz.load(os.path.join(args.artifacts, "data/pile_eval.qtz"))["tokens"]
+    toks = stream[: args.tokens].astype(np.int32)
+    with open(os.path.join(args.artifacts, "manifest.json")) as f:
+        mani = json.load(f)
+    report: dict = {"mamba": {}, "transformer": {}}
+    for tier in mani["tiers"]:
+        if tier in model_mod.TIERS:
+            print(f"[analyze] mamba {tier}")
+            report["mamba"][tier] = analyze_mamba(args.artifacts, tier, toks)
+    for tier in mani.get("transformer_tiers", {}):
+        if tier in tr_mod.T_TIERS:
+            print(f"[analyze] transformer {tier}")
+            report["transformer"][tier] = analyze_transformer(args.artifacts, tier, toks)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[analyze] wrote {args.out}")
+    # quick textual digest (the paper's qualitative claims)
+    for tier, rep in report["mamba"].items():
+        last = rep["layers"][str(len(rep["layers"]) - 1)]
+        print(
+            f"  {tier}: x p99={last['x_ssm']['p99']:.2f} max={last['x_ssm']['max']:.2f} | "
+            f"y max={last['y_gated']['max']:.1f} outlier_ch={last['y_gated']['outlier_channels']} | "
+            f"H-suppression {last['hadamard_suppression']:.1f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,573 @@
+"""AOT artifact builder: corpus → train → calibrate → quantize → lower.
+
+Emits everything the rust runtime consumes (HLO **text** — jax ≥0.5
+serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids):
+
+    artifacts/
+      manifest.json                      the artifact index (rust reads it)
+      graphs/{tier}_{method}_prefill_b{B}_t{T}.hlo.txt
+      graphs/{tier}_{method}_decode_b{B}.hlo.txt
+      graphs/{ttier}_{method}_...        transformer baseline graphs
+      weights/{tier}_{method}.qtz        runtime weight parameters
+      data/pile_eval.qtz  wiki_eval.qtz  calib.qtz   token streams
+      data/tasks.json                    six-task zero-shot suite
+      train_cache/{tier}.qtz             trained fp weights (reused)
+
+Python runs once; `make artifacts` is a no-op when inputs are
+unchanged. Nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import outliers as outliers_mod
+from . import qtz
+from . import train as train_mod
+from . import transformer as tr_mod
+from .quant import calibrate as cal_mod
+from .quant import config as qconf
+
+TRAIN_STEPS = {"m130": 260, "m370": 230, "m1p4": 210, "m2p8": 220}
+T_TRAIN_STEPS = {"p2p8": 150}
+PREFILL_T = 256
+LONG_T = (512, 1024, 2048)
+LONG_T_METHODS = ("fp16", "quamba", "smoothquant", "quarot", "w8a8_static")
+DECODE_BATCHES_WIDE = (2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # Two sharp edges of the HLO-text interchange (DESIGN.md §2):
+    # 1. jax DCE may DROP unused parameters from the entry signature;
+    #    the rust runtime feeds every manifest weight, so the counts
+    #    must match exactly — fail the build here, not at serve time.
+    n_params = len(comp.program_shape().parameter_shapes())
+    if n_params != len(example_args):
+        raise RuntimeError(
+            f"graph lost parameters in lowering: {n_params} != {len(example_args)} "
+            "(an unused weight was DCE'd; keep every weight on the used path)"
+        )
+    # 2. print_large_constants=True is LOAD-BEARING: the default printer
+    #    elides big constant payloads as `constant({...})`, which the
+    #    xla_extension 0.5.1 text parser silently mis-reads — every
+    #    baked constant (outlier gains, Hadamard bases, Jamba combo
+    #    weights) would be corrupted on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sds(arr):
+    return jax.ShapeDtypeStruct(np.asarray(arr).shape, np.asarray(arr).dtype)
+
+
+# ---------------------------------------------------------------------------
+# Graph constructors (close over baked scales & gains; weights runtime)
+# ---------------------------------------------------------------------------
+
+def mamba_graph_fn(cfg, method, qa, weight_names, gains, fresh_state):
+    """Returns f(tokens, conv, ssm, *weights) -> (logits, conv', ssm')."""
+    gains_j = None if gains is None else (jnp.asarray(gains.g_x), jnp.asarray(gains.g_y))
+
+    if method.is_fp:
+        def fn(tokens, conv, ssm, *weights):
+            params = dict(zip(weight_names, weights))
+            return model_mod.forward_fp(cfg, params, tokens, conv, ssm, gains=gains_j)
+        return fn
+    if method.weight_only:
+        def fn(tokens, conv, ssm, *weights):
+            w = dict(zip(weight_names, weights))
+            return model_mod.forward_weight_only(cfg, qa, w, tokens, conv, ssm, gains=gains_j)
+        return fn
+
+    def fn(tokens, conv, ssm, *weights):
+        w = dict(zip(weight_names, weights))
+        return model_mod.forward_q(cfg, qa, w, tokens, conv, ssm,
+                                   use_pallas=True, fresh_state=fresh_state, gains=gains_j)
+    return fn
+
+
+def transformer_graph_fn(cfg, method, wscales, ascales, weight_names):
+    if method == "fp16":
+        def fn(tokens, k_cache, v_cache, cache_len, *weights):
+            p = dict(zip(weight_names, weights))
+            return tr_mod.forward_fp(cfg, p, tokens, k_cache, v_cache, cache_len)
+        return fn
+
+    def fn(tokens, k_cache, v_cache, cache_len, *weights):
+        wq = dict(zip(weight_names, weights))
+        return tr_mod.forward_q(cfg, method, None, wq, wscales, ascales, tokens,
+                                k_cache, v_cache, cache_len)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+class Builder:
+    def __init__(self, out_dir: str, quick: bool = False, verbose: bool = True):
+        self.out = out_dir
+        self.quick = quick
+        self.verbose = verbose
+        self.manifest = {
+            "version": 1,
+            "built_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+            "quick": quick,
+            "vocab_size": data_mod.VOCAB_SIZE,
+            "graphs": {},
+            "weights": {},
+            "tiers": {},
+            "transformer_tiers": {},
+            "data": {},
+            "methods": sorted(qconf.METHODS.keys()),
+        }
+        for sub in ("graphs", "weights", "data", "train_cache"):
+            os.makedirs(os.path.join(out_dir, sub), exist_ok=True)
+        # incremental builds: merge into an existing manifest so partial
+        # rebuilds (--tiers / --methods) do not clobber earlier entries
+        prev = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(prev):
+            try:
+                with open(prev) as f:
+                    old = json.load(f)
+                if old.get("quick") == quick:
+                    for k in ("graphs", "weights", "tiers", "transformer_tiers", "data"):
+                        merged = dict(old.get(k, {}))
+                        merged.update(self.manifest[k])
+                        self.manifest[k] = merged
+            except (json.JSONDecodeError, OSError):
+                pass
+
+    def log(self, *a):
+        if self.verbose:
+            print("[aot]", *a, flush=True)
+
+    # -- data -----------------------------------------------------------------
+    def build_data(self):
+        self.log("building corpora + task suite")
+        pile, wiki = data_mod.make_corpora()
+        n_train = 40_000 if self.quick else 220_000
+        n_eval = 4_000 if self.quick else 24_000
+        self.train_stream = data_mod.token_stream(pile, n_train, seed=1)
+        pile_eval = data_mod.token_stream(pile, n_eval, seed=2)
+        wiki_eval = data_mod.token_stream(wiki, n_eval, seed=3)
+        qtz.save(self._p("data/calib.qtz"), {"tokens": self.train_stream[:n_eval]})
+        qtz.save(self._p("data/pile_eval.qtz"), {"tokens": pile_eval})
+        qtz.save(self._p("data/wiki_eval.qtz"), {"tokens": wiki_eval})
+        n_ex = 24 if self.quick else 120
+        suite = data_mod.build_task_suite(pile, n_ex=n_ex)
+        with open(self._p("data/tasks.json"), "w") as f:
+            json.dump(suite, f, default=int)
+        with open(self._p("data/vocab.json"), "w") as f:
+            f.write(data_mod.Vocab().to_json())
+        self.manifest["data"] = {
+            "calib": "data/calib.qtz",
+            "pile_eval": "data/pile_eval.qtz",
+            "wiki_eval": "data/wiki_eval.qtz",
+            "tasks": "data/tasks.json",
+            "vocab": "data/vocab.json",
+        }
+
+    # -- training (cached) ------------------------------------------------------
+    def trained_params(self, cfg, tier_index):
+        gains = outliers_mod.OutlierSpec.for_tier(cfg, tier_index)
+        cache = self._p(f"train_cache/{cfg.name}.qtz")
+        steps = 30 if self.quick else TRAIN_STEPS[cfg.name]
+        key = f"{cfg.name}-{steps}-{cfg.d_model}-{cfg.n_layer}"
+        if os.path.exists(cache):
+            t = qtz.load(cache)
+            if "__key" in t and bytes(t["__key"]).decode() == key:
+                self.log(f"{cfg.name}: using cached weights")
+                t.pop("__key")
+                return OrderedDict(t), gains
+        self.log(f"{cfg.name}: training {steps} steps "
+                 f"({cfg.n_params()/1e6:.2f}M params)")
+        params, _ = train_mod.train_mamba(
+            cfg, self.train_stream, steps=steps, quiet=not self.verbose, gains=gains)
+        params = outliers_mod.inject_conv_in(cfg, params)
+        save = OrderedDict(params)
+        save["__key"] = np.frombuffer(key.encode(), dtype=np.uint8).copy()
+        qtz.save(cache, save)
+        return params, gains
+
+    # -- one (tier, methods) bundle ----------------------------------------------
+    def build_mamba_tier(self, cfg, tier_index, methods):
+        params, gains = self.trained_params(cfg, tier_index)
+        self.log(f"{cfg.name}: calibrating")
+        stats = cal_mod.calibrate(
+            cfg, params, self.train_stream,
+            n_samples=16 if self.quick else 64,
+            seqlen=64 if self.quick else 256,
+            batch=8, gains=gains)
+        self.manifest["tiers"][cfg.name] = {
+            "paper_name": cfg.paper_name,
+            "d_model": cfg.d_model, "n_layer": cfg.n_layer,
+            "d_state": cfg.d_state, "d_conv": cfg.d_conv,
+            "d_inner": cfg.d_inner, "dt_rank": cfg.dt_rank,
+            "vocab": cfg.vocab, "n_params": cfg.n_params(),
+            "outliers": gains.stats(),
+        }
+        T = 64 if self.quick else PREFILL_T
+        for mname in methods:
+            method = qconf.METHODS[mname]
+            t0 = time.time()
+            if method.is_fp:
+                weights = OrderedDict((k, np.asarray(v, np.float32)) for k, v in params.items())
+                qa = None
+            else:
+                qa = cal_mod.build_artifacts(cfg, params, method, stats)
+                weights = qa.weights
+            wfile = f"weights/{cfg.name}_{mname}.qtz"
+            wnames = list(weights.keys())
+            # the gains are baked into the graphs as constants; ship them
+            # in the qtz too (outside the graph-param list) so the rust
+            # reference simulator can reproduce the same model
+            save_w = OrderedDict(weights)
+            save_w["__gains.g_x"] = gains.g_x
+            save_w["__gains.g_y"] = gains.g_y
+            qtz.save(self._p(wfile), save_w)
+            self.manifest["weights"][f"{cfg.name}_{mname}"] = {
+                "file": wfile, "params": wnames,
+                "bytes": int(sum(np.asarray(v).nbytes for v in weights.values())),
+            }
+            # (1, T): latency reference; (4, T): perplexity windows;
+            # (8, T_task): zero-shot task scoring
+            T_task = 32 if self.quick else 64
+            batches_T = [(1, T), (4, T), (8, T_task)]
+            if cfg.name == "m2p8" and not self.quick and mname in LONG_T_METHODS:
+                batches_T += [(1, t) for t in LONG_T]
+            decode_bs = [1]
+            if cfg.name == "m2p8" and not self.quick and mname in ("fp16", "quamba"):
+                decode_bs += list(DECODE_BATCHES_WIDE)
+            for (B, t_len) in batches_T:
+                self._lower_mamba(cfg, method, qa, weights, wnames, gains, B, t_len, "prefill")
+            for B in decode_bs:
+                self._lower_mamba(cfg, method, qa, weights, wnames, gains, B, 1, "decode")
+            self.log(f"{cfg.name}/{mname}: lowered in {time.time()-t0:.1f}s")
+
+    def _lower_mamba(self, cfg, method, qa, weights, wnames, gains, B, T, kind):
+        fresh = kind == "prefill"
+        fn = mamba_graph_fn(cfg, method, qa, wnames, gains, fresh_state=fresh)
+        tokens = jax.ShapeDtypeStruct((B, T), np.int32)
+        conv = jax.ShapeDtypeStruct((cfg.n_layer, B, cfg.d_conv - 1, cfg.d_inner), np.float32)
+        ssm = jax.ShapeDtypeStruct((cfg.n_layer, B, cfg.d_inner, cfg.d_state), np.float32)
+        args = [tokens, conv, ssm] + [_sds(weights[n]) for n in wnames]
+        text = to_hlo_text(fn, args)
+        name = (f"{cfg.name}_{method.name}_prefill_b{B}_t{T}" if kind == "prefill"
+                else f"{cfg.name}_{method.name}_decode_b{B}")
+        gfile = f"graphs/{name}.hlo.txt"
+        with open(self._p(gfile), "w") as f:
+            f.write(text)
+        self.manifest["graphs"][name] = {
+            "file": gfile,
+            "family": "mamba",
+            "tier": cfg.name,
+            "method": method.name,
+            "kind": kind,
+            "batch": B,
+            "seq": T,
+            "weights": f"{cfg.name}_{method.name}",
+            "inputs": ["tokens:i32", "conv_state:f32", "ssm_state:f32"] + wnames,
+            "outputs": ["logits:f32", "conv_state:f32", "ssm_state:f32"],
+        }
+
+    # -- transformer baseline -------------------------------------------------
+    def build_transformer(self, cfg, methods=("fp16", "w8a8_static", "smoothquant")):
+        cache = self._p(f"train_cache/{cfg.name}.qtz")
+        steps = 30 if self.quick else T_TRAIN_STEPS.get(cfg.name, 150)
+        if os.path.exists(cache):
+            params = OrderedDict(qtz.load(cache))
+            self.log(f"{cfg.name}: using cached weights")
+        else:
+            self.log(f"{cfg.name}: training transformer {steps} steps "
+                     f"({cfg.n_params()/1e6:.2f}M params)")
+            params, _ = train_mod.train_transformer(
+                cfg, self.train_stream, steps=steps, quiet=not self.verbose)
+            qtz.save(cache, params)
+        self.manifest["transformer_tiers"][cfg.name] = {
+            "paper_name": cfg.paper_name,
+            "d_model": cfg.d_model, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+            "max_ctx": cfg.max_ctx, "vocab": cfg.vocab, "n_params": cfg.n_params(),
+        }
+        T = 64 if self.quick else PREFILL_T
+        for mname in methods:
+            if mname == "fp16":
+                weights = OrderedDict((k, np.asarray(v, np.float32)) for k, v in params.items())
+                wsc, asc = {}, {}
+            else:
+                alpha = 0.5 if mname == "smoothquant" else None
+                wq, wsc, asc = tr_mod.calibrate_and_quantize(
+                    cfg, params, self.train_stream, mname, smooth_alpha=alpha)
+                weights = wq
+            wfile = f"weights/{cfg.name}_{mname}.qtz"
+            qtz.save(self._p(wfile), weights)
+            wnames = list(weights.keys())
+            self.manifest["weights"][f"{cfg.name}_{mname}"] = {
+                "file": wfile, "params": wnames,
+                "bytes": int(sum(np.asarray(v).nbytes for v in weights.values())),
+            }
+            t_lens = [T] + (list(LONG_T) if (not self.quick and mname == "fp16") else [])
+            for t_len in t_lens:
+                self._lower_transformer(cfg, mname, weights, wnames, wsc, asc, 1, t_len, "prefill")
+            self._lower_transformer(cfg, mname, weights, wnames, wsc, asc, 1, 1, "decode")
+
+    def _lower_transformer(self, cfg, mname, weights, wnames, wsc, asc, B, T, kind):
+        fn = transformer_graph_fn(cfg, mname, wsc, asc, wnames)
+        tokens = jax.ShapeDtypeStruct((B, T), np.int32)
+        kc = jax.ShapeDtypeStruct((cfg.n_layer, B, cfg.max_ctx, cfg.n_head, cfg.d_head),
+                                  np.float32)
+        cache_len = jax.ShapeDtypeStruct((), np.int32)
+        args = [tokens, kc, kc, cache_len] + [_sds(weights[n]) for n in wnames]
+        text = to_hlo_text(fn, args)
+        name = (f"{cfg.name}_{mname}_prefill_b{B}_t{T}" if kind == "prefill"
+                else f"{cfg.name}_{mname}_decode_b{B}")
+        gfile = f"graphs/{name}.hlo.txt"
+        with open(self._p(gfile), "w") as f:
+            f.write(text)
+        self.manifest["graphs"][name] = {
+            "file": gfile,
+            "family": "transformer",
+            "tier": cfg.name,
+            "method": mname,
+            "kind": kind,
+            "batch": B,
+            "seq": T,
+            "weights": f"{cfg.name}_{mname}",
+            "inputs": ["tokens:i32", "k_cache:f32", "v_cache:f32", "cache_len:i32"] + wnames,
+            "outputs": ["logits:f32", "k_cache:f32", "v_cache:f32"],
+        }
+
+    # -- Jamba hybrid (Table 4) -------------------------------------------------
+    def build_jamba(self):
+        from . import jamba as jm
+
+        cfg = jm.JAMBA_TIER
+        cache = self._p("train_cache/jamba.qtz")
+        steps = 20 if self.quick else 320
+        if os.path.exists(cache):
+            params = OrderedDict(qtz.load(cache))
+            self.log("jamba: using cached weights")
+        else:
+            self.log(f"jamba: training hybrid {steps} steps "
+                     f"({cfg.n_params()/1e6:.2f}M params)")
+            params = self._train_jamba(cfg, steps)
+            qtz.save(cache, params)
+        self.log("jamba: calibrating")
+        sites, chan = jm.calibrate(cfg, params, self.train_stream,
+                                   n_samples=8 if self.quick else 24)
+        T = 32 if self.quick else 64
+        for combo in jm.TABLE4_COMBOS:
+            t0 = time.time()
+            fwd = jm.build_combo(cfg, params, sites, chan, *combo)
+            tokens = jax.ShapeDtypeStruct((8, T), np.int32)
+            text = to_hlo_text(lambda tok: (fwd(tok),), [tokens])
+            cname = "_".join(combo)
+            name = f"jamba_{cname}_prefill_b8_t{T}"
+            gfile = f"graphs/{name}.hlo.txt"
+            with open(self._p(gfile), "w") as f:
+                f.write(text)
+            self.manifest["graphs"][name] = {
+                "file": gfile,
+                "family": "hybrid",
+                "tier": "jamba",
+                "method": cname,
+                "kind": "prefill",
+                "batch": 8,
+                "seq": T,
+                "weights": "",
+                "inputs": ["tokens:i32"],
+                "outputs": ["logits:f32"],
+                "combo": jm.combo_name(combo),
+            }
+            self.log(f"jamba/{cname}: lowered in {time.time()-t0:.1f}s")
+        self.manifest["tiers"]["jamba"] = {
+            "paper_name": "Jamba-52B (hybrid analog)",
+            "d_model": cfg.d_model, "n_layer": cfg.n_layer,
+            "d_state": cfg.d_state, "d_conv": cfg.d_conv,
+            "d_inner": cfg.d_inner, "dt_rank": cfg.dt_rank,
+            "vocab": cfg.vocab, "n_params": cfg.n_params(),
+        }
+
+    def _train_jamba(self, cfg, steps):
+        from . import jamba as jm
+
+        params = {k: jnp.asarray(v) for k, v in jm.init_params(cfg).items()}
+        opt = train_mod.adamw_init(params)
+
+        def loss_fn(p, x, y):
+            logits = jm.forward_fp(cfg, p, x, use_topk=True)
+            return train_mod.cross_entropy(logits, y)
+
+        @jax.jit
+        def step_fn(p, o, x, y):
+            loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+            p, o = train_mod.adamw_update(p, grads, o, lr=3e-3)
+            return p, o, loss
+
+        gen = data_mod.batches(self.train_stream, 8, 96, seed=17)
+        for it in range(steps):
+            x, y = next(gen)
+            params, opt, loss = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y))
+            if self.verbose and (it % 50 == 0 or it == steps - 1):
+                print(f"  [jamba] step {it:4d} loss {float(loss):.4f}", flush=True)
+        return OrderedDict((k, np.asarray(v)) for k, v in params.items())
+
+    def finish(self):
+        with open(self._p("manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        self.log(f"manifest: {len(self.manifest['graphs'])} graphs, "
+                 f"{len(self.manifest['weights'])} weight bundles")
+
+    def _p(self, rel):
+        return os.path.join(self.out, rel)
+
+
+def reindex(out_dir: str):
+    """Rebuild manifest.json from the artifact files on disk (recovery
+    path for builds that crashed after lowering but before finish())."""
+    import re
+
+    from . import jamba as jm
+
+    b = Builder(out_dir, quick=False)
+    b.manifest["data"] = {
+        "calib": "data/calib.qtz", "pile_eval": "data/pile_eval.qtz",
+        "wiki_eval": "data/wiki_eval.qtz", "tasks": "data/tasks.json",
+        "vocab": "data/vocab.json",
+    }
+    for ti, (tname, cfg) in enumerate(model_mod.TIERS.items()):
+        if os.path.exists(b._p(f"weights/{tname}_fp16.qtz")):
+            b.manifest["tiers"][tname] = {
+                "paper_name": cfg.paper_name, "d_model": cfg.d_model,
+                "n_layer": cfg.n_layer, "d_state": cfg.d_state,
+                "d_conv": cfg.d_conv, "d_inner": cfg.d_inner,
+                "dt_rank": cfg.dt_rank, "vocab": cfg.vocab,
+                "n_params": cfg.n_params(),
+                "outliers": outliers_mod.OutlierSpec.for_tier(cfg, ti).stats(),
+            }
+    for tname, cfg in tr_mod.T_TIERS.items():
+        if os.path.exists(b._p(f"weights/{tname}_fp16.qtz")):
+            b.manifest["transformer_tiers"][tname] = {
+                "paper_name": cfg.paper_name, "d_model": cfg.d_model,
+                "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+                "max_ctx": cfg.max_ctx, "vocab": cfg.vocab,
+                "n_params": cfg.n_params(),
+            }
+    if any(f.startswith("jamba_") for f in os.listdir(b._p("graphs"))):
+        cfg = jm.JAMBA_TIER
+        b.manifest["tiers"]["jamba"] = {
+            "paper_name": "Jamba-52B (hybrid analog)", "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer, "d_state": cfg.d_state, "d_conv": cfg.d_conv,
+            "d_inner": cfg.d_inner, "dt_rank": cfg.dt_rank, "vocab": cfg.vocab,
+            "n_params": cfg.n_params(),
+        }
+    # weight bundles: param order = qtz file order minus shipped gains
+    for fn in sorted(os.listdir(b._p("weights"))):
+        key = fn[: -len(".qtz")]
+        q = qtz.load(b._p(f"weights/{fn}"))
+        params = [n for n in q.keys() if not n.startswith("__")]
+        b.manifest["weights"][key] = {
+            "file": f"weights/{fn}", "params": params,
+            "bytes": int(sum(v.nbytes for n, v in q.items() if not n.startswith("__"))),
+        }
+    # graphs: parse the {tier}_{method}_{kind}_b{B}[_t{T}] convention
+    pat = re.compile(r"^(.*)_(prefill|decode)_b(\d+)(?:_t(\d+))?\.hlo\.txt$")
+    for fn in sorted(os.listdir(b._p("graphs"))):
+        m = pat.match(fn)
+        if not m:
+            continue
+        stem, kind, batch, seq = m.group(1), m.group(2), int(m.group(3)), m.group(4)
+        tier = next((t for t in list(model_mod.TIERS) + list(tr_mod.T_TIERS) + ["jamba"]
+                     if stem.startswith(t + "_")), None)
+        if tier is None:
+            continue
+        method = stem[len(tier) + 1:]
+        family = ("hybrid" if tier == "jamba"
+                  else "transformer" if tier in tr_mod.T_TIERS else "mamba")
+        b.manifest["graphs"][fn[: -len(".hlo.txt")]] = {
+            "file": f"graphs/{fn}", "family": family, "tier": tier,
+            "method": method, "kind": kind, "batch": batch,
+            "seq": int(seq) if seq else 1,
+            "weights": "" if family == "hybrid" else f"{tier}_{method}",
+            "inputs": [], "outputs": [],
+        }
+    b.finish()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--quick", action="store_true", help="tiny build for CI/pytest")
+    ap.add_argument("--tiers", default=None, help="comma list (default: all)")
+    ap.add_argument("--methods", default=None, help="comma list (default: full matrix)")
+    ap.add_argument("--skip-transformer", action="store_true")
+    ap.add_argument("--reindex", action="store_true",
+                    help="rebuild manifest.json from existing artifact files")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir or os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    if args.reindex:
+        reindex(out_dir)
+        return
+    b = Builder(out_dir, quick=args.quick)
+    b.build_data()
+
+    all_methods = (qconf.CORE_METHODS + qconf.PERCENTILE_METHODS
+                   + qconf.TABLE9_METHODS + qconf.IO_METHODS)
+    if args.quick:
+        tier_list = ["m130"]
+        methods = ["fp16", "quamba", "w8a8_static"]
+    else:
+        tier_list = list(model_mod.TIERS.keys())
+        methods = all_methods
+    if args.tiers:
+        tier_list = args.tiers.split(",")
+    if args.methods:
+        methods = args.methods.split(",")
+
+    t0 = time.time()
+    for ti, tname in enumerate(model_mod.TIERS):
+        if tname not in tier_list:
+            continue
+        cfg = model_mod.TIERS[tname]
+        m = list(methods)
+        if tname == "m2p8" and not args.quick and not args.methods:
+            m += qconf.LOWBIT_METHODS
+        b.build_mamba_tier(cfg, ti, m)
+
+    if not args.skip_transformer and not args.quick:
+        for tname in ["p2p8"]:
+            if args.tiers and tname not in (args.tiers or ""):
+                continue
+            b.build_transformer(tr_mod.T_TIERS[tname])
+
+    if not args.quick and (not args.tiers or "jamba" in args.tiers):
+        b.build_jamba()
+
+    b.finish()
+    b.log(f"total build time {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Deterministic synthetic language substrate.
+
+The paper trains/evaluates on Pile / WikiText2 / LAMBADA / HellaSwag /
+PIQA / ARC / WinoGrande — none of which we can ship. This module builds
+the closest synthetic equivalents that exercise the same code paths:
+
+* a 256-word procedural vocabulary (syllable combinator, seeded),
+* a second-order Markov "English" generator with Zipfian unigram
+  marginals and per-style topic mixtures — two styles give us distinct
+  "pile-synth" (training + calibration + eval) and "wiki-synth"
+  (eval-only, mildly out-of-distribution) corpora,
+* six procedural zero-shot tasks mirroring the paper's suite:
+  - lambada_synth    : predict the last word of a long passage (the
+                       passage deterministically re-mentions the target)
+  - hellaswag_synth  : choose the most likely 8-token continuation (4-way)
+  - piqa_synth       : 2-way continuation choice
+  - arc_easy_synth   : 4-way, distractors drawn from frequent words
+  - arc_chal_synth   : 4-way, distractors drawn from plausible bigrams
+  - winogrande_synth : 2-way fill-in with a re-mention cue
+
+Everything is a pure function of the seed, so python (training) and the
+rust eval harness (which reads the emitted token bins / task JSON) see
+identical data across rebuilds.
+
+Token space: 0 = PAD, 1 = BOS, 2 = EOS, 3 = SEP, 4.. = words.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import OrderedDict
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+N_SPECIAL = 4
+VOCAB_SIZE = 256
+N_WORDS = VOCAB_SIZE - N_SPECIAL
+
+_ONSETS = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "ch", "st"]
+_NUCLEI = ["a", "e", "i", "o", "u", "ai", "ou"]
+_CODAS = ["", "n", "r", "s", "t", "l", "m"]
+
+
+def build_words(seed: int = 7) -> list:
+    """Procedurally generate ``N_WORDS`` distinct pronounceable words."""
+    rng = np.random.default_rng(seed)
+    words, seen = [], set()
+    while len(words) < N_WORDS:
+        n_syll = 1 + int(rng.integers(0, 3))
+        w = "".join(
+            _ONSETS[int(rng.integers(len(_ONSETS)))]
+            + _NUCLEI[int(rng.integers(len(_NUCLEI)))]
+            + _CODAS[int(rng.integers(len(_CODAS)))]
+            for _ in range(n_syll)
+        )
+        if w not in seen and 2 <= len(w) <= 12:
+            seen.add(w)
+            words.append(w)
+    return words
+
+
+class Vocab:
+    def __init__(self, seed: int = 7):
+        self.words = build_words(seed)
+        self.id_of = {w: i + N_SPECIAL for i, w in enumerate(self.words)}
+
+    def decode(self, ids) -> str:
+        toks = []
+        for t in ids:
+            t = int(t)
+            if t == BOS:
+                continue
+            if t == EOS:
+                break
+            toks.append("<sep>" if t == SEP else (self.words[t - N_SPECIAL] if t >= N_SPECIAL else "<pad>"))
+        return " ".join(toks)
+
+    def to_json(self) -> str:
+        return json.dumps({"special": ["<pad>", "<bos>", "<eos>", "<sep>"], "words": self.words})
+
+
+class MarkovLM:
+    """Second-order Markov chain over word ids with Zipfian marginals.
+
+    The transition structure is low-rank-ish: each word belongs to one of
+    ``n_topics`` topics; next-word logits = zipf prior + topic affinity +
+    a seeded bigram bonus table. ``style`` shifts the topic mixture so
+    two styles produce measurably different distributions (distinct
+    eval perplexities, like Wiki2 vs Pile).
+    """
+
+    def __init__(self, seed: int = 11, n_topics: int = 8, style: int = 0):
+        rng = np.random.default_rng(seed + 1000 * style)
+        self.rng = rng
+        ranks = np.arange(1, N_WORDS + 1, dtype=np.float64)
+        zipf = 1.0 / ranks**1.05
+        self.log_prior = np.log(zipf / zipf.sum())
+        self.topic_of = rng.integers(0, n_topics, size=N_WORDS)
+        self.affinity = rng.normal(0.0, 1.0, size=(n_topics, n_topics))
+        # style skews which topics talk to which
+        self.affinity += 0.8 * rng.normal(0.0, 1.0, size=(n_topics, n_topics)) * style
+        # sparse bigram bonuses make some continuations strongly preferred
+        self.bigram_bonus = np.zeros((N_WORDS, N_WORDS))
+        n_bonus = 6 * N_WORDS
+        ii = rng.integers(0, N_WORDS, n_bonus)
+        jj = rng.integers(0, N_WORDS, n_bonus)
+        self.bigram_bonus[ii, jj] = rng.uniform(2.0, 4.0, n_bonus)
+        self._row_cache = {}
+
+    def next_dist(self, w1: int, w2: int) -> np.ndarray:
+        """P(next | prev2=w1, prev=w2) over word indices [0, N_WORDS)."""
+        key = (w1, w2)
+        p = self._row_cache.get(key)
+        if p is None:
+            logits = (
+                self.log_prior
+                + 1.2 * self.affinity[self.topic_of[w2]][self.topic_of]
+                + 0.4 * self.affinity[self.topic_of[w1]][self.topic_of]
+                + self.bigram_bonus[w2]
+            )
+            logits -= logits.max()
+            p = np.exp(logits)
+            p /= p.sum()
+            if len(self._row_cache) < 60000:
+                self._row_cache[key] = p
+        return p
+
+    def sample_tokens(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """Sample a token stream of length ``n`` (word ids + sentence SEPs)."""
+        out = np.empty(n, dtype=np.uint16)
+        w1 = int(rng.integers(0, N_WORDS))
+        w2 = int(rng.integers(0, N_WORDS))
+        sent_len = 0
+        for i in range(n):
+            if sent_len > 6 and rng.random() < 0.12:
+                out[i] = SEP
+                sent_len = 0
+                continue
+            p = self.next_dist(w1, w2)
+            w = int(rng.choice(N_WORDS, p=p))
+            out[i] = w + N_SPECIAL
+            w1, w2 = w2, w
+            sent_len += 1
+        return out
+
+    def greedy_next(self, w1: int, w2: int) -> int:
+        return int(np.argmax(self.next_dist(w1, w2)))
+
+
+def make_corpora(seed: int = 11):
+    """Return (pile_lm, wiki_lm) — two styles of the generator."""
+    return MarkovLM(seed=seed, style=0), MarkovLM(seed=seed, style=1)
+
+
+def token_stream(lm: MarkovLM, n_tokens: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return lm.sample_tokens(n_tokens, rng)
+
+
+# ---------------------------------------------------------------------------
+# Zero-shot task suite
+# ---------------------------------------------------------------------------
+
+def _passage(lm: MarkovLM, rng, n: int) -> list:
+    return list(lm.sample_tokens(n, rng))
+
+
+def make_lambada(lm: MarkovLM, rng, n_ex: int) -> list:
+    """Last-word prediction (LAMBADA-style exact match). The target is
+    the generator's modal continuation of the passage — recoverable by
+    any model that learned the corpus distribution (exactly the
+    training objective), and the first casualty when quantization noise
+    pushes the argmax off the mode. Only confidently-peaked contexts
+    are kept (mode probability ≥ 0.25) so the FP ceiling is high and
+    the measured drop is quantization, not task noise."""
+    exs = []
+    while len(exs) < n_ex:
+        ctx = list(_passage(lm, rng, 48))
+        words = [t - N_SPECIAL for t in ctx if t >= N_SPECIAL]
+        if len(words) < 2:
+            continue
+        w1, w2 = words[-2], words[-1]
+        # ensure the passage *ends* with the two cue words
+        if ctx[-1] != w2 + N_SPECIAL or ctx[-2] != w1 + N_SPECIAL:
+            ctx = ctx[: len(ctx) - 1]
+            ctx += [w1 + N_SPECIAL, w2 + N_SPECIAL]
+        p = lm.next_dist(w1, w2)
+        if p.max() < 0.25:
+            continue
+        target = int(np.argmax(p)) + N_SPECIAL
+        exs.append({"prompt": ctx, "target": [target]})
+    return exs
+
+
+def _choice_task(lm: MarkovLM, rng, n_ex: int, n_choices: int, cont_len: int, distractor: str) -> list:
+    exs = []
+    for _ in range(n_ex):
+        ctx = _passage(lm, rng, 24)
+        w1 = next((t - N_SPECIAL for t in reversed(ctx[:-1]) if t >= N_SPECIAL), 0)
+        w2 = ctx[-1] - N_SPECIAL if ctx[-1] >= N_SPECIAL else 0
+        # gold continuation = greedy rollout of the generator
+        gold, a, b = [], w1, w2
+        for _ in range(cont_len):
+            w = lm.greedy_next(a, b)
+            gold.append(w + N_SPECIAL)
+            a, b = b, w
+        choices = [gold]
+        while len(choices) < n_choices:
+            if distractor == "frequent":
+                c = [int(rng.integers(0, 24)) + N_SPECIAL for _ in range(cont_len)]
+            elif distractor == "bigram":
+                # plausible-but-wrong: greedy rollout from a random state
+                c, a2, b2 = [], int(rng.integers(0, N_WORDS)), int(rng.integers(0, N_WORDS))
+                for _ in range(cont_len):
+                    w = lm.greedy_next(a2, b2)
+                    c.append(w + N_SPECIAL)
+                    a2, b2 = b2, w
+            else:  # uniform
+                c = [int(rng.integers(0, N_WORDS)) + N_SPECIAL for _ in range(cont_len)]
+            if c != gold:
+                choices.append(c)
+        order = rng.permutation(n_choices)
+        exs.append(
+            {
+                "prompt": ctx,
+                "choices": [choices[i] for i in order],
+                "gold": int(np.argwhere(order == 0)[0][0]),
+            }
+        )
+    return exs
+
+
+def make_winogrande(lm: MarkovLM, rng, n_ex: int) -> list:
+    """2-way fill-in: context mentions entity A repeatedly; the question
+    asks which of {A, B} follows a cue."""
+    exs = []
+    for _ in range(n_ex):
+        a_tok = int(rng.integers(0, N_WORDS)) + N_SPECIAL
+        b_tok = int(rng.integers(0, N_WORDS)) + N_SPECIAL
+        if a_tok == b_tok:
+            continue
+        ctx = _passage(lm, rng, 32)
+        for pos in sorted(rng.choice(np.arange(4, 28), 4, replace=False)):
+            ctx[int(pos)] = a_tok
+        prompt = ctx + [SEP]
+        choices = [[a_tok], [b_tok]]
+        order = rng.permutation(2)
+        exs.append({"prompt": prompt, "choices": [choices[i] for i in order],
+                    "gold": int(np.argwhere(order == 0)[0][0])})
+    return exs
+
+
+def build_task_suite(lm: MarkovLM, seed: int = 23, n_ex: int = 120) -> "OrderedDict[str, dict]":
+    rng = np.random.default_rng(seed)
+    suite = OrderedDict()
+    suite["lambada_synth"] = {"kind": "exact_last", "examples": make_lambada(lm, rng, n_ex)}
+    suite["hellaswag_synth"] = {
+        "kind": "choice_norm",  # accuracy normalized by length, like the paper
+        "examples": _choice_task(lm, rng, n_ex, 4, 8, "bigram"),
+    }
+    suite["piqa_synth"] = {"kind": "choice", "examples": _choice_task(lm, rng, n_ex, 2, 6, "uniform")}
+    suite["arc_easy_synth"] = {"kind": "choice", "examples": _choice_task(lm, rng, n_ex, 4, 4, "frequent")}
+    suite["arc_chal_synth"] = {"kind": "choice_norm", "examples": _choice_task(lm, rng, n_ex, 4, 4, "bigram")}
+    suite["winogrande_synth"] = {"kind": "choice", "examples": make_winogrande(lm, rng, n_ex)}
+    return suite
+
+
+def batches(stream: np.ndarray, batch: int, seqlen: int, seed: int):
+    """Yield (inputs, targets) next-token batches forever from a stream."""
+    rng = np.random.default_rng(seed)
+    n = len(stream) - seqlen - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        x = np.stack([stream[i : i + seqlen] for i in idx]).astype(np.int32)
+        y = np.stack([stream[i + 1 : i + seqlen + 1] for i in idx]).astype(np.int32)
+        yield x, y

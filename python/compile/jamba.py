@@ -1,0 +1,414 @@
+"""Jamba-like hybrid model (paper §5.5, Table 4): interleaved
+self-attention, Mamba, and top-2-of-4 MoE blocks.
+
+The paper's Table 4 asks which *combination* of per-block-type
+quantizers keeps the hybrid usable:
+
+    attention ∈ {FP16, LLM.int8, SmQ}
+    mamba     ∈ {FP16, LLM.int8, Quamba}
+    moe       ∈ {FP16, LLM.int8}
+
+LLM.int8-style mixed-precision decomposition lives in
+`quant/mixed.py`; "LLM.int8 on Mamba" means applying it naively to the
+Mamba linears while leaving the SSM input/output activations at plain
+static int8 — the configuration the paper reports as `fail`, because
+the decomposition never addresses the x/y sensitivity. Quamba-on-Mamba
+uses the full recipe from `model.py`.
+
+Layer pattern (L blocks): attention at indices ≡ 0 (mod 4), MoE MLP
+after every block (as in Jamba, each block = mixer + MoE/MLP), Mamba
+elsewhere.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .kernels import ref
+from .quant import core as qc
+from .quant import hadamard_util as hu
+from .quant.mixed import matmul_mixed, outlier_columns, split_weight
+
+
+@dataclass(frozen=True)
+class JambaTier:
+    name: str
+    d_model: int = 96
+    n_layer: int = 4
+    n_head: int = 4
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    n_experts: int = 4
+    top_k: int = 2
+    vocab: int = data_mod.VOCAB_SIZE
+    eps: float = 1e-5
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self):
+        return max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def d_ff(self):
+        return 2 * self.d_model
+
+    def attn_layers(self):
+        return [i for i in range(self.n_layer) if i % 4 == 0]
+
+    def n_params(self) -> int:
+        d, di, r, n, w = self.d_model, self.d_inner, self.dt_rank, self.d_state, self.d_conv
+        mamba = d + d * 2 * di + w * di + di + di * (r + 2 * n) + r * di + di + di * n + di + di * d
+        attn = d + 4 * d * d
+        moe = d + d * self.n_experts + self.n_experts * (2 * d * self.d_ff + self.d_ff)
+        n_attn = len(self.attn_layers())
+        return self.vocab * d + d + n_attn * attn + (self.n_layer - n_attn) * mamba + self.n_layer * moe
+
+
+JAMBA_TIER = JambaTier("jamba")
+
+
+def init_params(cfg: JambaTier, seed: int = 5) -> "OrderedDict[str, np.ndarray]":
+    rng = np.random.default_rng(seed)
+    P: "OrderedDict[str, np.ndarray]" = OrderedDict()
+
+    def dense(shape, scale=None):
+        s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return rng.uniform(-s, s, size=shape).astype(np.float32)
+
+    d, di, r, n, w, ff = cfg.d_model, cfg.d_inner, cfg.dt_rank, cfg.d_state, cfg.d_conv, cfg.d_ff
+    P["embedding.weight"] = rng.normal(0, 0.02, size=(cfg.vocab, d)).astype(np.float32)
+    attn_set = set(cfg.attn_layers())
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        P[p + "norm.weight"] = np.ones(d, np.float32)
+        if i in attn_set:
+            P[p + "wqkv"] = dense((d, 3 * d))
+            P[p + "wo"] = dense((d, d))
+        else:
+            P[p + "in_proj.weight"] = dense((d, 2 * di))
+            P[p + "conv1d.weight"] = dense((w, di), scale=1 / math.sqrt(w))
+            P[p + "conv1d.bias"] = np.zeros(di, np.float32)
+            P[p + "x_proj.weight"] = dense((di, r + 2 * n))
+            P[p + "dt_proj.weight"] = dense((r, di), scale=r**-0.5)
+            dt = np.exp(rng.uniform(math.log(1e-3), math.log(1e-1), size=di))
+            P[p + "dt_proj.bias"] = (dt + np.log(-np.expm1(-dt))).astype(np.float32)
+            P[p + "A_log"] = np.log(np.tile(np.arange(1, n + 1, dtype=np.float32), (di, 1)))
+            P[p + "D"] = np.ones(di, np.float32)
+            P[p + "out_proj.weight"] = dense((di, d))
+        # MoE after every block
+        P[p + "moe_norm.weight"] = np.ones(d, np.float32)
+        P[p + "router"] = dense((d, cfg.n_experts))
+        for e in range(cfg.n_experts):
+            P[p + f"expert{e}.w1"] = dense((d, ff))
+            P[p + f"expert{e}.b1"] = np.zeros(ff, np.float32)
+            P[p + f"expert{e}.w2"] = dense((ff, d))
+    P["norm_f.weight"] = np.ones(d, np.float32)
+    return P
+
+
+def _attn_block(cfg, P, p, h):
+    """Causal attention with ALiBi (shared shape with transformer.py)."""
+    B, T, d = h.shape
+    H, Dh = cfg.n_head, cfg.d_model // cfg.n_head
+    qkv = h @ P[p + "wqkv"]
+    q, k, v = jnp.split(qkv.reshape(B, T, 3, H, Dh), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    slopes = jnp.asarray([2.0 ** (-(i + 1) * 8.0 / H) for i in range(H)], jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(Dh)
+    dist = jnp.arange(T)[:, None] - jnp.arange(T)[None, :]
+    bias = -slopes[:, None, None] * jnp.maximum(dist, 0)
+    logits = jnp.where((dist >= 0)[None, None], logits + bias[None], -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, T, d)
+    return out @ P[p + "wo"]
+
+
+def _mamba_block(cfg, P, p, h):
+    di, n, r, W = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    xz = h @ P[p + "in_proj.weight"]
+    x, z = xz[..., :di], xz[..., di:]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pads[:, j : j + x.shape[1], :] * P[p + "conv1d.weight"][j][None, None, :]
+               for j in range(W))
+    xs = ref.silu(conv + P[p + "conv1d.bias"][None, None, :])
+    bcdt = xs @ P[p + "x_proj.weight"]
+    dt = ref.softplus(bcdt[..., :r] @ P[p + "dt_proj.weight"] + P[p + "dt_proj.bias"])
+    A = -jnp.exp(P[p + "A_log"])
+    y, _ = ref.selective_scan(xs, dt, A, bcdt[..., r : r + n], bcdt[..., r + n :], P[p + "D"])
+    return (y * ref.silu(z)) @ P[p + "out_proj.weight"]
+
+
+def _moe_block(cfg, P, p, h, use_topk=False):
+    """Top-k routed MoE MLP (dense compute, sparse mixture weights —
+    exact for evaluation; a serving system would gather).
+
+    Routing threshold via sort, not lax.top_k: the xla_extension 0.5.1
+    HLO-text parser predates `topk(..., largest=true)`. Training sets
+    `use_topk=True` (identical numerics) because this jax build cannot
+    differentiate through sort's gather VJP."""
+    gate = jax.nn.softmax(h @ P[p + "router"], axis=-1)     # (B,T,E)
+    if use_topk:
+        kth = jax.lax.top_k(gate, cfg.top_k)[0][..., -1:]
+    else:
+        kth = jnp.sort(gate, axis=-1)[..., -cfg.top_k : gate.shape[-1] - cfg.top_k + 1]
+    mask = (gate >= kth).astype(gate.dtype)
+    gate = gate * mask
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    out = 0.0
+    for e in range(cfg.n_experts):
+        hid = jax.nn.gelu(h @ P[p + f"expert{e}.w1"] + P[p + f"expert{e}.b1"])
+        out = out + gate[..., e : e + 1] * (hid @ P[p + f"expert{e}.w2"])
+    return out
+
+
+def forward_fp(cfg: JambaTier, P, tokens, use_topk=False):
+    """fp32 hybrid forward (prefill only — Table 4 is accuracy-only)."""
+    resid = P["embedding.weight"][tokens]
+    attn_set = set(cfg.attn_layers())
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        h = ref.rmsnorm(resid, P[p + "norm.weight"], cfg.eps)
+        mixer = _attn_block(cfg, P, p, h) if i in attn_set else _mamba_block(cfg, P, p, h)
+        resid = resid + mixer
+        h2 = ref.rmsnorm(resid, P[p + "moe_norm.weight"], cfg.eps)
+        resid = resid + _moe_block(cfg, P, p, h2, use_topk=use_topk)
+    final = ref.rmsnorm(resid, P["norm_f.weight"], cfg.eps)
+    return final @ P["embedding.weight"].T
+
+
+# ---------------------------------------------------------------------------
+# Quantized combinations (Table 4)
+# ---------------------------------------------------------------------------
+
+def calibrate(cfg: JambaTier, P, stream, n_samples=24, seqlen=96, batch=8, seed=11):
+    """Collect per-site amax + per-channel amax for all linear inputs."""
+    P_j = {k: jnp.asarray(v) for k, v in P.items()}
+    sites: dict = {}
+    chan: dict = {}
+
+    def record(name, x):
+        a = np.abs(np.asarray(x, np.float32))
+        sites[name] = max(sites.get(name, 0.0), float(a.max()))
+        cm = a.reshape(-1, a.shape[-1]).max(axis=0)
+        chan[name] = np.maximum(chan.get(name, 0.0), cm)
+
+    gen = data_mod.batches(stream, batch, seqlen, seed)
+    attn_set = set(cfg.attn_layers())
+    for _ in range(max(1, n_samples // batch)):
+        x, _ = next(gen)
+        resid = P_j["embedding.weight"][jnp.asarray(x)]
+        for i in range(cfg.n_layer):
+            p = f"layers.{i}."
+            h = ref.rmsnorm(resid, P_j[p + "norm.weight"], cfg.eps)
+            record(p + "mixer_in", h)
+            if i in attn_set:
+                mixer = _attn_block(cfg, P_j, p, h)
+            else:
+                mixer = _mamba_block(cfg, P_j, p, h)
+                # tap mamba internals for quamba scales
+                _tap_mamba(cfg, P_j, p, h, record)
+            record(p + "mixer_out", mixer)
+            resid = resid + mixer
+            h2 = ref.rmsnorm(resid, P_j[p + "moe_norm.weight"], cfg.eps)
+            record(p + "moe_in", h2)
+            resid = resid + _moe_block(cfg, P_j, p, h2)
+        record("head_in", ref.rmsnorm(resid, P_j["norm_f.weight"], cfg.eps))
+    return sites, chan
+
+
+def _tap_mamba(cfg, P, p, h, record):
+    di, n, r, W = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    xz = h @ P[p + "in_proj.weight"]
+    x, z = xz[..., :di], xz[..., di:]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pads[:, j : j + x.shape[1], :] * P[p + "conv1d.weight"][j][None, None, :]
+               for j in range(W))
+    xs = ref.silu(conv + P[p + "conv1d.bias"][None, None, :])
+    record(p + "x_ssm", xs)
+    bcdt = xs @ P[p + "x_proj.weight"]
+    record(p + "bcdt", bcdt)
+    dt = ref.softplus(bcdt[..., :r] @ P[p + "dt_proj.weight"] + P[p + "dt_proj.bias"])
+    A = -jnp.exp(P[p + "A_log"])
+    y, _ = ref.selective_scan(xs, dt, A, bcdt[..., r : r + n], bcdt[..., r + n :], P[p + "D"])
+    gated = y * ref.silu(z)
+    record(p + "gated", gated)
+    record(p + "gated_h", hu.fwht_jnp(gated))
+
+
+def _q_linear_static(x, w, s_x, nbits=8):
+    """plain static W8A8 linear (x fp in, quantize with s_x)."""
+    wq, sw = qc.quantize_weight_np(np.asarray(w), nbits)
+    return lambda xv: ref.matmul_i8(qc.quantize_sym(xv, s_x, nbits), jnp.asarray(wq), s_x, float(sw))
+
+
+def build_combo(cfg: JambaTier, P, sites, chan, attn_mode: str, mamba_mode: str, moe_mode: str):
+    """Return a jittable fp-in/fp-out forward implementing one Table 4
+    combination. Modes: 'fp', 'int8' (LLM.int8 mixed), 'smq' (attn
+    only), 'quamba' (mamba only)."""
+    P_j = {k: jnp.asarray(v) for k, v in P.items()}
+    attn_set = set(cfg.attn_layers())
+
+    # precompute per-layer quantized operators
+    ops: dict = {}
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        if i in attn_set and attn_mode in ("int8", "smq"):
+            for leaf, site in [("wqkv", p + "mixer_in"), ("wo", p + "mixer_out")]:
+                w = np.asarray(P[p + leaf], np.float32)
+                cam = chan[site if leaf == "wqkv" else p + "mixer_out"]
+                if attn_mode == "smq" and leaf == "wqkv":
+                    from .quant.smoothquant import fold_linear
+
+                    s, w = fold_linear(cam, w, 0.5)
+                    ops[p + leaf + ".smooth"] = jnp.asarray(1.0 / s)
+                    amax = float((cam / s).max())
+                else:
+                    ops[p + leaf + ".outliers"] = split_weight(w, outlier_columns(cam))
+                    amax = float(np.median(cam) * 4 + 1e-6)
+                if attn_mode == "smq" and leaf == "wqkv":
+                    wq, sw = qc.quantize_weight_np(w)
+                    ops[p + leaf] = (jnp.asarray(wq), float(sw), qc.scale_sym(amax, 8))
+        if i not in attn_set and mamba_mode in ("int8", "quamba"):
+            for leaf in ["in_proj.weight", "x_proj.weight", "dt_proj.weight", "out_proj.weight"]:
+                w = np.asarray(P[p + leaf], np.float32)
+                if mamba_mode == "quamba" and leaf == "out_proj.weight":
+                    w = hu.hadamard_np(cfg.d_inner) @ w
+                wq, sw = qc.quantize_weight_np(w)
+                scale = float(sw) / (cfg.d_inner if (mamba_mode == "quamba" and leaf == "out_proj.weight") else 1)
+                ops[p + leaf] = (jnp.asarray(wq), scale)
+        if moe_mode == "int8":
+            for e in range(cfg.n_experts):
+                for leaf, site in [(f"expert{e}.w1", p + "moe_in")]:
+                    w = np.asarray(P[p + leaf], np.float32)
+                    ops[p + leaf + ".outliers"] = split_weight(w, outlier_columns(chan[site]))
+
+    def fwd(tokens):
+        resid = P_j["embedding.weight"][tokens]
+        for i in range(cfg.n_layer):
+            p = f"layers.{i}."
+            h = ref.rmsnorm(resid, P_j[p + "norm.weight"], cfg.eps)
+            if i in attn_set:
+                mixer = _attn_combo(cfg, P_j, p, h, attn_mode, sites, ops)
+            else:
+                mixer = _mamba_combo(cfg, P_j, p, h, mamba_mode, sites, ops)
+            resid = resid + mixer
+            h2 = ref.rmsnorm(resid, P_j[p + "moe_norm.weight"], cfg.eps)
+            resid = resid + _moe_combo(cfg, P_j, p, h2, moe_mode, sites, ops)
+        final = ref.rmsnorm(resid, P_j["norm_f.weight"], cfg.eps)
+        return final @ P_j["embedding.weight"].T
+
+    return fwd
+
+
+def _attn_combo(cfg, P, p, h, mode, sites, ops):
+    if mode == "fp":
+        return _attn_block(cfg, P, p, h)
+    B, T, d = h.shape
+    H, Dh = cfg.n_head, cfg.d_model // cfg.n_head
+    if mode == "smq":
+        h = h * ops[p + "wqkv.smooth"]
+        wq, sw, s_x = ops[p + "wqkv"]
+        qkv = ref.matmul_i8(qc.quantize_sym(h, s_x), wq, s_x, sw)
+    else:  # int8 (LLM.int8 mixed)
+        parts = ops[p + "wqkv.outliers"]
+        s_x = qc.scale_sym(sites[p + "mixer_in"], 8)
+        qkv = matmul_mixed(h, parts, float(s_x))
+    q, k, v = jnp.split(qkv.reshape(B, T, 3, H, Dh), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    slopes = jnp.asarray([2.0 ** (-(i + 1) * 8.0 / H) for i in range(H)], jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(Dh)
+    dist = jnp.arange(T)[:, None] - jnp.arange(T)[None, :]
+    bias = -slopes[:, None, None] * jnp.maximum(dist, 0)
+    logits = jnp.where((dist >= 0)[None, None], logits + bias[None], -1e9)
+    out = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), v).reshape(B, T, d)
+    parts_o = ops.get(p + "wo.outliers")
+    if parts_o is not None:
+        s_o = qc.scale_sym(sites[p + "mixer_out"], 8)
+        return matmul_mixed(out, parts_o, float(s_o))
+    return out @ P[p + "wo"]
+
+
+def _mamba_combo(cfg, P, p, h, mode, sites, ops):
+    if mode == "fp":
+        return _mamba_block(cfg, P, p, h)
+    di, n, r, W = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    s_in = qc.scale_sym(sites[p + "mixer_in"], 8)
+    wq, sw = ops[p + "in_proj.weight"]
+    xz = ref.matmul_i8(qc.quantize_sym(h, s_in), wq, float(s_in), sw)
+    x, z = xz[..., :di], xz[..., di:]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pads[:, j : j + x.shape[1], :] * P[p + "conv1d.weight"][j][None, None, :]
+               for j in range(W))
+    xs = ref.silu(conv + P[p + "conv1d.bias"][None, None, :])
+    if mode == "quamba":
+        # percentile-clipped static x (the Quamba x-site recipe)
+        s_x = qc.scale_sym(sites[p + "x_ssm"] * 0.7, 8)  # p≈99.9 proxy on amax
+    else:
+        s_x = qc.scale_sym(sites[p + "x_ssm"], 8)
+    xs = qc.dequantize_sym(qc.quantize_sym(xs, s_x), s_x)
+    wq, sw = ops[p + "x_proj.weight"]
+    bcdt = ref.matmul_i8(qc.quantize_sym(xs, s_x), wq, float(s_x), sw)
+    s_dt = qc.scale_sym(sites[p + "bcdt"], 8)
+    wq2, sw2 = ops[p + "dt_proj.weight"]
+    dt = ref.softplus(
+        ref.matmul_i8(qc.quantize_sym(bcdt[..., :r], s_dt), wq2, float(s_dt), sw2)
+        + P[p + "dt_proj.bias"]
+    )
+    A = -jnp.exp(P[p + "A_log"])
+    s_bc = qc.scale_sym(sites[p + "bcdt"], 8)
+    B_ = qc.fake_quant_sym(bcdt[..., r : r + n], s_bc)
+    C_ = qc.fake_quant_sym(bcdt[..., r + n :], s_bc)
+    y, _ = ref.selective_scan(xs, dt, A, B_, C_, P[p + "D"])
+    gated = y * ref.silu(z)
+    wq3, sw3 = ops[p + "out_proj.weight"]
+    if mode == "quamba":
+        s_yh = qc.scale_sym(sites[p + "gated_h"], 8)
+        y8 = qc.quantize_sym(hu.fwht_jnp(gated), s_yh)
+        return ref.matmul_i8(y8, wq3, float(s_yh), sw3)
+    # LLM.int8-on-mamba: naive static y quantization — the `fail` row
+    s_y = qc.scale_sym(sites[p + "gated"], 8)
+    return ref.matmul_i8(qc.quantize_sym(gated, s_y), wq3, float(s_y), sw3)
+
+
+def _moe_combo(cfg, P, p, h, mode, sites, ops):
+    if mode == "fp":
+        return _moe_block(cfg, P, p, h)
+    gate = jax.nn.softmax(h @ P[p + "router"], axis=-1)
+    kth = jnp.sort(gate, axis=-1)[..., -cfg.top_k : gate.shape[-1] - cfg.top_k + 1]
+    mask = (gate >= kth).astype(gate.dtype)
+    gate = gate * mask
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    s_in = qc.scale_sym(sites[p + "moe_in"], 8)
+    out = 0.0
+    for e in range(cfg.n_experts):
+        parts = ops[p + f"expert{e}.w1.outliers"]
+        hid = jax.nn.gelu(matmul_mixed(h, parts, float(s_in)) + P[p + f"expert{e}.b1"])
+        out = out + gate[..., e : e + 1] * (hid @ P[p + f"expert{e}.w2"])
+    return out
+
+
+# Table 4 rows: (attn, mamba, moe)
+TABLE4_COMBOS = [
+    ("fp", "fp", "fp"),
+    ("int8", "fp", "int8"),
+    ("smq", "fp", "int8"),
+    ("int8", "int8", "int8"),
+    ("smq", "quamba", "int8"),
+    ("int8", "quamba", "int8"),
+]
+
+
+def combo_name(c):
+    names = {"fp": "FP16", "int8": "LLM.int8", "smq": "SmQ", "quamba": "Quamba"}
+    return "+".join(names[m] for m in c)

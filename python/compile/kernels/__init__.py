@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for the Quamba hot paths.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the supported
+execution path on this testbed; real-TPU tiling/VMEM notes live in
+DESIGN.md §7. Every kernel has a pure-jnp oracle in :mod:`.ref`.
+"""
+
+from . import ref  # noqa: F401
+from .selective_scan import selective_scan_pallas, selective_scan_q_pallas  # noqa: F401
+from .hadamard import hadamard_quant_pallas  # noqa: F401
+from .causal_conv import causal_conv_silu_pallas, causal_conv_silu_q_pallas  # noqa: F401
+from .rmsnorm import rmsnorm_resid_q_pallas  # noqa: F401
+from .matmul_i8 import matmul_i8_pallas  # noqa: F401

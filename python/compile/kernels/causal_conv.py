@@ -1,0 +1,115 @@
+"""Pallas fused causal conv1d + SiLU + requantize (paper §4.3).
+
+Depthwise causal convolution of width W over time with the SiLU and the
+output quantization fused before the write — the operator is
+memory-bound (as the paper notes, citing depthwise-conv studies), so
+int8 I/O halves its memory traffic and the fusion removes two extra
+memory passes.
+
+Grid tiles (batch × channel-blocks); each step loads a (T, BD) slab,
+does W shift-multiplies in registers (W=4), applies SiLU and the static
+requant scale. VMEM per step ≈ (T·BD)·(1B in + 4B fp + 1B out).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BD = 32
+
+
+def _pick_bd(di: int) -> int:
+    for bd in (BD, 16, 8, 4, 2, 1):
+        if di % bd == 0:
+            return bd
+    return 1
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _make_kernel_fp(W: int):
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        x = x_ref[0]                       # (T, BD) f32
+        w = w_ref[...]                     # (W, BD)
+        b = b_ref[...]                     # (BD,)
+        T = x.shape[0]
+        acc = jnp.zeros_like(x)
+        for i in range(W):
+            # x[t - (W-1) + i]: shift x down by (W-1-i) rows, zero-fill
+            shift = W - 1 - i
+            shifted = jnp.pad(x, ((shift, 0), (0, 0)))[:T]
+            acc = acc + shifted * w[i][None, :]
+        o_ref[0] = _silu(acc + b[None, :])
+
+    return kernel
+
+
+def _make_kernel_q(W: int, s_x: float, s_w: float, s_out: float, nbits: int):
+    qmax = 2 ** (nbits - 1) - 1
+    qmin = -(2 ** (nbits - 1))
+    s_in = float(s_x) * float(s_w)
+    inv_out = 1.0 / float(s_out)
+
+    def kernel(x_ref, w_ref, b_ref, g_ref, o_ref):
+        x = x_ref[0].astype(jnp.int32)     # (T, BD) i8 -> i32
+        w = w_ref[...].astype(jnp.int32)   # (W, BD)
+        b = b_ref[...]                     # (BD,) f32
+        g = g_ref[...]                     # (BD,) f32 post-SiLU gain
+        T = x.shape[0]
+        acc = jnp.zeros(x.shape, jnp.int32)
+        for i in range(W):
+            shift = W - 1 - i
+            shifted = jnp.pad(x, ((shift, 0), (0, 0)))[:T]
+            acc = acc + shifted * w[i][None, :]
+        out = _silu(acc.astype(jnp.float32) * s_in + b[None, :]) * g[None, :]
+        q = jnp.clip(jnp.round(out * inv_out), qmin, qmax)
+        o_ref[0] = q.astype(jnp.int8)
+
+    return kernel
+
+
+def causal_conv_silu_pallas(x, w, bias):
+    """fp32 variant: x (Bb,T,Di), w (W,Di), bias (Di,) → f32 (Bb,T,Di)."""
+    Bb, T, Di = x.shape
+    W = w.shape[0]
+    bd = _pick_bd(Di)
+    return pl.pallas_call(
+        _make_kernel_fp(W),
+        grid=(Bb, Di // bd),
+        in_specs=[
+            pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((W, bd), lambda b, d: (0, d)),
+            pl.BlockSpec((bd,), lambda b, d: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((Bb, T, Di), jnp.float32),
+        interpret=True,
+    )(x, w, bias)
+
+
+def causal_conv_silu_q_pallas(x_q, s_x, w_q, s_w, bias, s_out, nbits: int = 8, gain=None):
+    """Quantized variant: int8 in/out; matches ref.causal_conv_silu_q.
+    `gain` is the optional per-channel post-SiLU diagonal (outlier
+    injection, DESIGN.md §5); identity when None."""
+    Bb, T, Di = x_q.shape
+    W = w_q.shape[0]
+    bd = _pick_bd(Di)
+    if gain is None:
+        gain = jnp.ones((Di,), jnp.float32)
+    return pl.pallas_call(
+        _make_kernel_q(W, s_x, s_w, s_out, nbits),
+        grid=(Bb, Di // bd),
+        in_specs=[
+            pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((W, bd), lambda b, d: (0, d)),
+            pl.BlockSpec((bd,), lambda b, d: (d,)),
+            pl.BlockSpec((bd,), lambda b, d: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, T, bd), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((Bb, T, Di), jnp.int8),
+        interpret=True,
+    )(x_q, w_q, bias, gain)

@@ -1,0 +1,77 @@
+"""Pallas fused Hadamard-quantize kernel (paper §4.2, Eq. 3).
+
+Computes ȳ^H = clamp(round((H_n y) / s_y)) over the channel dimension
+with the quantization scale fused into the last butterfly stage, so the
+transform+quantize is a single memory pass — the paper fuses 1/s_y into
+the FWHT the same way. n = 2^p · m with m ∈ {1, 12, 20} (Paley base
+matrices), covering every d_inner tier; the 2^p part is log₂ stages of
+add/sub butterflies — no multiplies, ideal for the TPU VPU. The base-m
+part is one small dense m×m contraction whose ±1 matrix is passed in
+as a kernel operand (pallas kernels cannot capture traced constants).
+
+Grid tiles rows (flattened batch·time); each step holds an (R_BLK, n)
+tile in VMEM (R_BLK=8, n=320 → 10 KiB f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..quant import hadamard_util as hu
+
+R_BLK = 8
+
+
+def _make_kernel(n: int, p: int, m: int, s_y: float, nbits: int):
+    qmax = 2 ** (nbits - 1) - 1
+    qmin = -(2 ** (nbits - 1))
+    inv_s = 1.0 / float(s_y)
+
+    def kernel(y_ref, hm_ref, o_ref):
+        y = y_ref[...].astype(jnp.float32)          # (R, n)
+        r = y.shape[0]
+        if m > 1:
+            hm = hm_ref[...]
+            y = (y.reshape(r, 2**p, m) @ hm.T).reshape(r, n)
+        h = 1
+        while h < 2**p:
+            y = y.reshape(r, (2**p) // (2 * h), 2, h * m)
+            a = y[:, :, 0, :]
+            b = y[:, :, 1, :]
+            y = jnp.stack([a + b, a - b], axis=2).reshape(r, n)
+            h *= 2
+        # final stage: fuse the 1/s_y scaling and the int8 clamp/round
+        q = jnp.clip(jnp.round(y * inv_s), qmin, qmax)
+        o_ref[...] = q.astype(jnp.int8)
+
+    return kernel
+
+
+def hadamard_quant_pallas(y, s_y, nbits: int = 8):
+    """y: (..., n) f32 → int8 (..., n). Matches ref.hadamard_quant."""
+    shape = y.shape
+    n = shape[-1]
+    p, m = hu.decompose(n)
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    rb = R_BLK if rows % R_BLK == 0 else 1
+    y2 = y.reshape(rows, n)
+    # base matrix operand (H_1 dummy when n is a pure power of two)
+    hm = jnp.asarray(hu.hadamard(m) if m > 1 else np.eye(1), dtype=jnp.float32)
+    mm = hm.shape[0]
+    out = pl.pallas_call(
+        _make_kernel(n, p, m, float(s_y), nbits),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, n), lambda r: (r, 0)),
+            pl.BlockSpec((mm, mm), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, n), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.int8),
+        interpret=True,
+    )(y2, hm)
+    return out.reshape(shape)

@@ -1,0 +1,76 @@
+"""Pallas int8 GEMM with i32 accumulation (paper §4.3 projections).
+
+The CUTLASS-INT8-tensor-core stand-in: x̄ (M,K) i8 · W̄ (K,N) i8 →
+i32 accumulate → dequantize by s_x·s_w → f32 (+bias). On TPU this
+contraction maps onto the MXU's native 8-bit path (DESIGN.md §7); the
+dequant multiply fuses into the MXU drain.
+
+Grid tiles the N dimension (bn = 64 when it divides N, else one
+block); M and K stay whole — our tiers keep M·K ≤ 2048·640 i8 ≈
+1.3 MiB, within a double-buffered VMEM budget. MXU-utilization
+estimate per tier is recorded in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 64
+
+
+def _pick_bn(n: int) -> int:
+    for bn in (BN, 32, 16, 8):
+        if n % bn == 0:
+            return bn
+    return n
+
+
+def _make_kernel(s: float, has_bias: bool):
+    def kernel(*refs):
+        if has_bias:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            x_ref, w_ref, o_ref = refs
+        acc = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        out = acc.astype(jnp.float32) * s
+        if has_bias:
+            out = out + b_ref[...][None, :]
+        o_ref[...] = out
+
+    return kernel
+
+
+def matmul_i8_pallas(x_q, w_q, s_x, s_w, bias=None):
+    """x_q (..., K) i8 × w_q (K, N) i8 → f32 (..., N). Static scales.
+    Matches ref.matmul_i8."""
+    shape = x_q.shape
+    K = shape[-1]
+    N = w_q.shape[1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    bn = _pick_bn(N)
+    x2 = x_q.reshape(rows, K)
+    s = float(s_x) * float(s_w)
+    in_specs = [
+        pl.BlockSpec((rows, K), lambda n: (0, 0)),
+        pl.BlockSpec((K, bn), lambda n: (0, n)),
+    ]
+    args = [x2, w_q]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda n: (n,)))
+        args.append(bias)
+    out = pl.pallas_call(
+        _make_kernel(s, bias is not None),
+        grid=(N // bn,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((rows, bn), lambda n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((rows, N), jnp.float32),
+        interpret=True,
+    )(*args)
+    return out.reshape(shape[:-1] + (N,))

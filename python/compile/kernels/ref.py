@@ -1,0 +1,160 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth). Each function here is the mathematical definition; the Pallas
+kernels in this package must match it to float tolerance under
+``interpret=True`` — checked by ``python/tests/test_kernels.py`` with
+hypothesis sweeps over shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..quant import core as qc
+from ..quant import hadamard_util as hu
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan (paper Eq. 1, selective/discretized form)
+# ---------------------------------------------------------------------------
+
+def selective_scan(x, dt, A, B, C, D, h0=None):
+    """Reference selective scan.
+
+    x  : (Bb, T, Di)    SSM input
+    dt : (Bb, T, Di)    softplus-ed time-scale Δ
+    A  : (Di, N)        continuous state matrix (negative reals)
+    B  : (Bb, T, N)     input-dependent input matrix
+    C  : (Bb, T, N)     input-dependent output matrix
+    D  : (Di,)          skip parameter
+    h0 : (Bb, Di, N)    optional initial state
+
+    Returns (y, hT): y (Bb, T, Di), hT (Bb, Di, N).
+    Discretization: Ȧ = exp(Δ A), Ḃ = Δ B (paper §3.1 ZOH approx).
+    """
+    Bb, T, Di = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, Di, N), dtype=jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A[None, :, :])        # (Bb, Di, N)
+        dB = dt_t[:, :, None] * B_t[:, None, :]               # (Bb, Di, N)
+        h = dA * h + dB * x_t[:, :, None]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x * D[None, None, :]
+    return y, hT
+
+
+def selective_scan_q(x_q, s_x, dt, A_q, s_A, B_q, s_B, C_q, s_C, D_q, s_D, h0=None):
+    """Quantized selective scan oracle (paper §4.2): int8 weights (A, D)
+    and activations (x, B, C) plus their static scales come in; the
+    recurrence runs in f32 on dequantized values; y leaves in f32
+    ("half precision" in the paper's GPU setting). Δ arrives already in
+    f32 (it is produced by softplus of a quantized projection)."""
+    x = qc.dequantize_sym(x_q, s_x)
+    A = qc.dequantize_sym(A_q, s_A)
+    B = qc.dequantize_sym(B_q, s_B)
+    C = qc.dequantize_sym(C_q, s_C)
+    D = qc.dequantize_sym(D_q, s_D)
+    return selective_scan(x, dt, A, B, C, D, h0)
+
+
+# ---------------------------------------------------------------------------
+# Fused Hadamard quantize (paper §4.2, Eq. 3)
+# ---------------------------------------------------------------------------
+
+def hadamard_quant(y, s_y):
+    """ȳ^H = clamp(round((H_n y) / s_y)) — the forward WHT with the
+    quantization scale fused into the final butterfly stage."""
+    yh = hu.fwht_jnp(y.astype(jnp.float32))
+    return qc.quantize_sym(yh, s_y)
+
+
+# ---------------------------------------------------------------------------
+# Fused causal conv1d + SiLU + requant (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def causal_conv_silu(x, w, bias):
+    """Depthwise causal conv over time. x: (Bb, T, Di), w: (W, Di),
+    bias: (Di,). Output f32 (Bb, T, Di): silu(conv(x) + b)."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return silu(out + bias[None, None, :])
+
+
+def causal_conv_silu_q(x_q, s_x, w_q, s_w, bias, s_out, nbits=8, gain=None):
+    """Quantized fused op: int8 in, int8 out. The int8×int8 products
+    accumulate in i32; dequant by s_x*s_w; SiLU in f32; an optional
+    per-channel gain (the outlier-injection diagonal, DESIGN.md §5)
+    multiplies post-SiLU; requantize with the pre-calibrated s_out
+    before the (simulated) write to memory."""
+    W = w_q.shape[0]
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, 0), (W - 1, 0), (0, 0)))
+    acc = sum(xp[:, i : i + x_q.shape[1], :] * w_q[i].astype(jnp.int32)[None, None, :] for i in range(W))
+    out = silu(acc.astype(jnp.float32) * (s_x * s_w) + bias[None, None, :])
+    if gain is not None:
+        out = out * gain[None, None, :]
+    return qc.quantize_sym(out, s_out, nbits)
+
+
+def causal_conv_step(x_t, conv_state, w, bias):
+    """Single decode step of the causal conv. x_t: (Bb, Di),
+    conv_state: (Bb, W-1, Di) holding the previous inputs.
+    Returns (y_t, new_state)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (Bb, W, Di)
+    out = jnp.einsum("bwd,wd->bd", window, w) + bias[None, :]
+    return silu(out), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm + residual + requant (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps=1e-5):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def rmsnorm_resid_q(x_out, x_res, weight, s_out, eps=1e-5, nbits=8):
+    """(x̄_in^{L+1}, x_res^{L+1}) = (Q(RMSNorm(x_out + x_res)), x_out+x_res).
+    Norm weights stay fp (paper: normalization in half precision)."""
+    res = x_out + x_res
+    return qc.quantize_sym(rmsnorm(res, weight, eps), s_out, nbits), res
+
+
+# ---------------------------------------------------------------------------
+# Int8 GEMM with i32 accumulation (paper §4.3 projection layers)
+# ---------------------------------------------------------------------------
+
+def matmul_i8(x_q, w_q, s_x, s_w, bias=None):
+    """(.., K) i8 × (K, N) i8 → f32: i32 accumulate then dequantize.
+    This is the CUTLASS-INT8-GEMM stand-in; on TPU it maps to the MXU
+    i8 path."""
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((x_q.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    out = acc.astype(jnp.float32) * (s_x * s_w)
+    if bias is not None:
+        out = out + bias
+    return out

@@ -1,0 +1,64 @@
+"""Pallas fused RMSNorm + residual-add + static requantize (paper §4.3).
+
+Takes the half-precision tuple (x_out, x_res) from the previous Quamba
+block, returns (x̄_in int8 for the next block, new residual in fp). The
+norm weight stays fp (the paper does not quantize normalization
+weights). One memory pass: load both inputs, write both outputs.
+
+Grid tiles rows; the whole d_model fits one block (<= 160 channels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_BLK = 8
+
+
+def _make_kernel(s_out: float, eps: float, nbits: int):
+    qmax = 2 ** (nbits - 1) - 1
+    qmin = -(2 ** (nbits - 1))
+    inv = 1.0 / float(s_out)
+
+    def kernel(xo_ref, xr_ref, w_ref, q_ref, res_ref):
+        xo = xo_ref[...].astype(jnp.float32)   # (R, D)
+        xr = xr_ref[...].astype(jnp.float32)
+        w = w_ref[...]
+        res = xo + xr
+        var = jnp.mean(res * res, axis=-1, keepdims=True)
+        normed = res * jax.lax.rsqrt(var + eps) * w[None, :]
+        q_ref[...] = jnp.clip(jnp.round(normed * inv), qmin, qmax).astype(jnp.int8)
+        res_ref[...] = res
+
+    return kernel
+
+
+def rmsnorm_resid_q_pallas(x_out, x_res, weight, s_out, eps: float = 1e-5, nbits: int = 8):
+    """Matches ref.rmsnorm_resid_q; shapes (..., D)."""
+    shape = x_out.shape
+    D = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    rb = R_BLK if rows % R_BLK == 0 else 1
+    q, res = pl.pallas_call(
+        _make_kernel(float(s_out), eps, nbits),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, D), lambda r: (r, 0)),
+            pl.BlockSpec((rb, D), lambda r: (r, 0)),
+            pl.BlockSpec((D,), lambda r: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, D), lambda r: (r, 0)),
+            pl.BlockSpec((rb, D), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, D), jnp.int8),
+            jax.ShapeDtypeStruct((rows, D), jnp.float32),
+        ],
+        interpret=True,
+    )(x_out.reshape(rows, D), x_res.reshape(rows, D), weight)
+    return q.reshape(shape), res.reshape(shape)

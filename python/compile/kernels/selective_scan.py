@@ -1,0 +1,127 @@
+"""Pallas selective-scan kernels (the paper's compute hot-spot).
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §7): the
+grid tiles (batch × channel-blocks); each grid step holds an
+(x-block, Δ-block, B, C, h-carry) working set in VMEM and walks the
+time dimension with a fori loop, exactly where the CUDA kernel walked
+it with a threadblock-resident state. The quantized variant takes int8
+activations/weights plus their *static* scales (baked as compile-time
+constants — per-tensor symmetric, paper §4.2) and runs the recurrence
+in f32, emitting f32 y ("half" on the paper's GPUs).
+
+Block size: BD channels per grid step. VMEM working set per step
+(prefill, T time steps, N states):
+    x, Δ, y blocks : 3 · T·BD·4  B
+    B, C blocks    : 2 · T·N·4   B
+    h carry        : BD·N·4      B
+For T=256, BD=32, N=16: ≈ 130 KiB — comfortably double-bufferable in
+a 16 MiB VMEM; the MXU is not used here (the scan is elementwise +
+small contractions), so this kernel is VPU-bound, matching the
+memory-bound character of the CUDA original.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BD = 32
+
+
+def _pick_bd(di: int) -> int:
+    for bd in (DEFAULT_BD, 16, 8, 4, 2, 1):
+        if di % bd == 0:
+            return bd
+    return 1
+
+
+def _make_kernel(T: int, N: int, BD: int, quant: bool, scales):
+    """Build the kernel body. When `quant`, int8 refs are dequantized
+    with the static `scales` dict (python floats, compile-time)."""
+
+    def kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, D_ref, h0_ref, y_ref, hT_ref):
+        if quant:
+            A = A_ref[...].astype(jnp.float32) * scales["A"]     # (BD, N)
+            D = D_ref[...].astype(jnp.float32) * scales["D"]     # (BD,)
+        else:
+            A = A_ref[...]
+            D = D_ref[...]
+        h0 = h0_ref[0]                                            # (BD, N)
+
+        def step(t, h):
+            x_t = x_ref[0, pl.dslice(t, 1), :][0]    # (BD,)
+            dt_t = dt_ref[0, pl.dslice(t, 1), :][0]
+            B_t = B_ref[0, pl.dslice(t, 1), :][0]    # (N,)
+            C_t = C_ref[0, pl.dslice(t, 1), :][0]
+            if quant:
+                x_t = x_t.astype(jnp.float32) * scales["x"]
+                B_t = B_t.astype(jnp.float32) * scales["B"]
+                C_t = C_t.astype(jnp.float32) * scales["C"]
+            dA = jnp.exp(dt_t[:, None] * A)                       # (BD, N)
+            h = dA * h + (dt_t * x_t)[:, None] * B_t[None, :]
+            y_t = h @ C_t + D * x_t                               # (BD,)
+            y_ref[0, pl.dslice(t, 1), :] = y_t[None, :]
+            return h
+
+        hT = jax.lax.fori_loop(0, T, step, h0)
+        hT_ref[0] = hT
+
+    return kernel
+
+
+def _call(x, dt, A, B, C, D, h0, quant: bool, scales=None):
+    Bb, T, Di = x.shape
+    N = A.shape[1]
+    BD = _pick_bd(Di)
+    grid = (Bb, Di // BD)
+    kernel = _make_kernel(T, N, BD, quant, scales)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, BD), lambda b, d: (b, 0, d)),   # x
+            pl.BlockSpec((1, T, BD), lambda b, d: (b, 0, d)),   # dt
+            pl.BlockSpec((1, T, N), lambda b, d: (b, 0, 0)),    # B
+            pl.BlockSpec((1, T, N), lambda b, d: (b, 0, 0)),    # C
+            pl.BlockSpec((BD, N), lambda b, d: (d, 0)),         # A
+            pl.BlockSpec((BD,), lambda b, d: (d,)),             # D
+            pl.BlockSpec((1, BD, N), lambda b, d: (b, d, 0)),   # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, BD), lambda b, d: (b, 0, d)),   # y
+            pl.BlockSpec((1, BD, N), lambda b, d: (b, d, 0)),   # hT
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, T, Di), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, Di, N), jnp.float32),
+        ],
+        interpret=True,
+    )(x, dt, B, C, A, D, h0)
+    return y, hT
+
+
+def selective_scan_pallas(x, dt, A, B, C, D, h0=None):
+    """fp32 Pallas selective scan; matches ref.selective_scan."""
+    Bb, T, Di = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, Di, N), dtype=jnp.float32)
+    # the D·x skip connection is computed inside the kernel
+    return _call(x, dt, A, B, C, D, h0, quant=False)
+
+
+def selective_scan_q_pallas(x_q, s_x, dt, A_q, s_A, B_q, s_B, C_q, s_C, D_q, s_D, h0=None):
+    """Quantized Pallas selective scan; matches ref.selective_scan_q.
+    Scales are python floats — they are baked into the lowered HLO as
+    constants (the paper's *static* quantization; zero runtime scale
+    traffic)."""
+    Bb, T, Di = x_q.shape
+    N = A_q.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, Di, N), dtype=jnp.float32)
+    scales = {"x": float(s_x), "A": float(s_A), "B": float(s_B), "C": float(s_C), "D": float(s_D)}
+    y, hT = _call(x_q, dt, A_q, B_q, C_q, D_q, h0, quant=True, scales=scales)
+    return y, hT

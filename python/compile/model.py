@@ -1,0 +1,456 @@
+"""L2: the Mamba language model in JAX, with every quantization-method
+variant folded into the traced graph.
+
+Two forward paths exist:
+
+* :func:`forward_fp` — the pure-jnp fp32 reference. Used for training,
+  calibration (``collect=True`` returns every interesting activation),
+  and as the "FP16" baseline graph. No Pallas.
+* :func:`forward_q` — the quantized deployment graph. Calls the Pallas
+  kernels (int8 GEMMs, fused conv/norm/Hadamard, quantized selective
+  scan) with static scales baked in; weights arrive as *runtime
+  parameters* (int8 for W8A8 sites) so the rust runtime feeds them once
+  as device buffers and reports true int8 resident bytes.
+
+Both paths share the parameter naming scheme (`layers.{i}.<leaf>`) and
+are cross-checked in `python/tests/test_model.py`.
+
+State layout (shared with the rust coordinator):
+  conv_state : (L, B, W-1, d_inner) f32 — causal-conv window tail
+  ssm_state  : (L, B, d_inner, N)   f32 — recurrent SSM state
+Prefill and decode both consume and produce the pair, so the rust side
+can chain prefill → decode and chunk long sequences. States are f32
+for every method (quantized methods store the *dequantized* conv
+window — exactly representable, so the int8 conv math is preserved).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .kernels import ref
+from .kernels.causal_conv import causal_conv_silu_q_pallas
+from .kernels.hadamard import hadamard_quant_pallas
+from .kernels.matmul_i8 import matmul_i8_pallas
+from .kernels.rmsnorm import rmsnorm_resid_q_pallas
+from .kernels.selective_scan import selective_scan_pallas, selective_scan_q_pallas
+from .quant import core as qc
+from .quant import hadamard_util as hu
+from .quant.config import Method
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierConfig:
+    """A scaled-down analog of one paper model size (DESIGN.md §2)."""
+
+    name: str
+    paper_name: str
+    d_model: int
+    n_layer: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    vocab: int = data_mod.VOCAB_SIZE
+    eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, math.ceil(self.d_model / 16))
+
+    def n_params(self) -> int:
+        d, di, r, n, w, v = (self.d_model, self.d_inner, self.dt_rank,
+                             self.d_state, self.d_conv, self.vocab)
+        per_layer = (d + d * 2 * di + w * di + di + di * (r + 2 * n)
+                     + r * di + di + di * n + di + di * d)
+        return v * d + d + self.n_layer * per_layer
+
+
+TIERS = OrderedDict(
+    (t.name, t)
+    for t in [
+        TierConfig("m130", "Mamba-130M", d_model=64, n_layer=2),
+        TierConfig("m370", "Mamba-370M", d_model=96, n_layer=3),
+        TierConfig("m1p4", "Mamba-1.4B", d_model=128, n_layer=4),
+        TierConfig("m2p8", "Mamba-2.8B", d_model=160, n_layer=5),
+    ]
+)
+
+
+def layer_param_names(i: int) -> list:
+    p = f"layers.{i}."
+    return [
+        p + "norm.weight",
+        p + "in_proj.weight",
+        p + "conv1d.weight",
+        p + "conv1d.bias",
+        p + "x_proj.weight",
+        p + "dt_proj.weight",
+        p + "dt_proj.bias",
+        p + "A_log",
+        p + "D",
+        p + "out_proj.weight",
+    ]
+
+
+def param_names(cfg: TierConfig) -> list:
+    names = ["embedding.weight"]
+    for i in range(cfg.n_layer):
+        names += layer_param_names(i)
+    names += ["norm_f.weight"]
+    return names
+
+
+def init_params(cfg: TierConfig, seed: int = 0) -> "OrderedDict[str, np.ndarray]":
+    """Mamba-style initialization (S4D-real A, dt bias softplus-inverse
+    log-uniform in [1e-3, 1e-1], fan-in scaled projections)."""
+    rng = np.random.default_rng(seed)
+    d, di, r, n, w = cfg.d_model, cfg.d_inner, cfg.dt_rank, cfg.d_state, cfg.d_conv
+    params: "OrderedDict[str, np.ndarray]" = OrderedDict()
+
+    def dense(shape, scale=None):
+        s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return rng.uniform(-s, s, size=shape).astype(np.float32)
+
+    params["embedding.weight"] = rng.normal(0, 0.02, size=(cfg.vocab, d)).astype(np.float32)
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        params[p + "norm.weight"] = np.ones(d, np.float32)
+        params[p + "in_proj.weight"] = dense((d, 2 * di))
+        params[p + "conv1d.weight"] = dense((w, di), scale=1.0 / math.sqrt(w))
+        params[p + "conv1d.bias"] = np.zeros(di, np.float32)
+        params[p + "x_proj.weight"] = dense((di, r + 2 * n))
+        params[p + "dt_proj.weight"] = dense((r, di), scale=r**-0.5)
+        # dt bias: softplus^{-1}(dt) with dt ~ logUniform[1e-3, 1e-1]
+        dt = np.exp(rng.uniform(math.log(1e-3), math.log(1e-1), size=di))
+        params[p + "dt_proj.bias"] = (dt + np.log(-np.expm1(-dt))).astype(np.float32)
+        # S4D-real: A = -(1..n) per channel
+        params[p + "A_log"] = np.log(np.tile(np.arange(1, n + 1, dtype=np.float32), (di, 1)))
+        params[p + "D"] = np.ones(di, np.float32)
+        params[p + "out_proj.weight"] = dense((di, d))
+    params["norm_f.weight"] = np.ones(d, np.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# fp32 reference forward (training / calibration / FP16 baseline)
+# ---------------------------------------------------------------------------
+
+def zero_states(cfg: TierConfig, batch: int):
+    conv = jnp.zeros((cfg.n_layer, batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32)
+    ssm = jnp.zeros((cfg.n_layer, batch, cfg.d_inner, cfg.d_state), jnp.float32)
+    return conv, ssm
+
+
+def _conv_fp(x, conv_st, w, bias):
+    """f32 causal conv over the window [conv_st ; x] + SiLU.
+    Returns (activated, new_conv_state)."""
+    W = w.shape[0]
+    T = x.shape[1]
+    full = jnp.concatenate([conv_st, x], axis=1)        # (B, W-1+T, di)
+    conv = sum(full[:, j : j + T, :] * w[j][None, None, :] for j in range(W))
+    return ref.silu(conv + bias[None, None, :]), full[:, -(W - 1):, :]
+
+
+def _block_fp(cfg: TierConfig, params, i: int, x_in, conv_st, ssm_st, taps=None, gains=None):
+    """One Mamba block, fp32. x_in: (B, T, d) post-norm. `gains` is an
+    optional (g_x, g_y) pair of (L, d_inner) fixed diagonal maps — the
+    outlier-injection mechanism (DESIGN.md §5), part of the model
+    definition and identical across fp/quantized paths."""
+    p = f"layers.{i}."
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    xz = x_in @ params[p + "in_proj.weight"]            # (B,T,2di)
+    x, z = xz[..., :di], xz[..., di:]
+    if taps is not None:
+        taps[f"l{i}.conv_in"] = x
+    x_ssm, new_conv = _conv_fp(x, conv_st, params[p + "conv1d.weight"], params[p + "conv1d.bias"])
+    if gains is not None:
+        x_ssm = x_ssm * gains[0][i][None, None, :]
+    if taps is not None:
+        taps[f"l{i}.x_ssm"] = x_ssm
+    bcdt = x_ssm @ params[p + "x_proj.weight"]          # (B,T,r+2n)
+    dt_low, B_, C_ = bcdt[..., :r], bcdt[..., r : r + n], bcdt[..., r + n :]
+    dt = ref.softplus(dt_low @ params[p + "dt_proj.weight"] + params[p + "dt_proj.bias"])
+    if taps is not None:
+        taps[f"l{i}.dt_in"] = dt_low
+        taps[f"l{i}.B"] = B_
+        taps[f"l{i}.C"] = C_
+    A = -jnp.exp(params[p + "A_log"])
+    y, hT = ref.selective_scan(x_ssm, dt, A, B_, C_, params[p + "D"], h0=ssm_st)
+    if taps is not None:
+        taps[f"l{i}.y"] = y
+    gated = y * ref.silu(z)
+    if gains is not None:
+        gated = gated * gains[1][i][None, None, :]
+    if taps is not None:
+        taps[f"l{i}.gated"] = gated
+        taps[f"l{i}.gated_h"] = hu.fwht_jnp(gated)
+    out = gated @ params[p + "out_proj.weight"]
+    return out, new_conv, hT
+
+
+def forward_fp(cfg: TierConfig, params, tokens, conv_state=None, ssm_state=None, collect=False,
+               gains=None):
+    """fp32 forward. tokens: (B, T) int32.
+    Returns (logits, conv_state', ssm_state'[, taps])."""
+    B, T = tokens.shape
+    if conv_state is None:
+        conv_state, ssm_state = zero_states(cfg, B)
+    taps = OrderedDict() if collect else None
+    resid = params["embedding.weight"][tokens]          # (B,T,d)
+    new_conv, new_ssm = [], []
+    for i in range(cfg.n_layer):
+        x_in = ref.rmsnorm(resid, params[f"layers.{i}.norm.weight"], cfg.eps)
+        if taps is not None:
+            taps[f"l{i}.resid_in"] = x_in
+        out, c, s = _block_fp(cfg, params, i, x_in, conv_state[i], ssm_state[i], taps, gains)
+        resid = resid + out
+        new_conv.append(c)
+        new_ssm.append(s)
+    final = ref.rmsnorm(resid, params["norm_f.weight"], cfg.eps)
+    if taps is not None:
+        taps["head_in"] = final
+    logits = final @ params["embedding.weight"].T
+    out = (logits, jnp.stack(new_conv), jnp.stack(new_ssm))
+    return out + (taps,) if collect else out
+
+
+# ---------------------------------------------------------------------------
+# Quantized deployment graphs
+# ---------------------------------------------------------------------------
+#
+# A `QuantArtifacts` bundle (produced by quant.calibrate + quantize_weights)
+# carries:
+#   weights : OrderedDict[str, np.ndarray] — runtime parameters (int8 for
+#             W8A8 sites; f32 for norm weights, biases, embedding; folds
+#             such as W_out^H = H·W_out or SmoothQuant diag(s)·W already
+#             applied offline)
+#   wscales : dict[str, float]     per-tensor weight scales (baked)
+#   ascales : dict[str, ...]       per-site activation scales (baked)
+#   method  : Method
+
+
+class QuantArtifacts:
+    def __init__(self, method: Method, weights, wscales, ascales):
+        self.method = method
+        self.weights = weights
+        self.wscales = wscales
+        self.ascales = ascales
+
+
+def _mm(x8, w, s_x, s_w, use_pallas, bias=None):
+    if use_pallas:
+        return matmul_i8_pallas(x8, w, s_x, s_w, bias)
+    return ref.matmul_i8(x8, w, s_x, s_w, bias)
+
+
+def _block_q(cfg: TierConfig, qa: QuantArtifacts, weights, i: int, x8, conv_st, ssm_st,
+             use_pallas: bool, fresh_state: bool, gains=None):
+    """One quantized Mamba block. x8: int8 (B,T,d) from the fused norm.
+    `fresh_state` marks a from-zero prefill, enabling the fully fused
+    int8 conv kernel (whose causal padding is zeros)."""
+    m = qa.method
+    p = f"layers.{i}."
+    di, n, r, W = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    T = x8.shape[1]
+    asc, wsc = qa.ascales, qa.wscales
+    x_mode = "quarot" if m.quarot else m.x_quant
+    g_x = None if gains is None else gains[0][i]
+    g_y = None if gains is None else gains[1][i]
+
+    # -- in_proj (W8A8) --
+    s_in = asc[p + "in_proj.weight.in_s"]
+    xz = _mm(x8, weights[p + "in_proj.weight"], s_in, wsc[p + "in_proj.weight.s"], use_pallas)
+    x, z = xz[..., :di], xz[..., di:]
+
+    # -- causal conv + SiLU + x-site quantizer --
+    s_cin = asc[p + "conv.in_s"]
+    x8c = qc.quantize_sym(x, s_cin, m.a_bits)
+    x_deq = qc.dequantize_sym(x8c, s_cin)
+    new_conv = jnp.concatenate([conv_st, x_deq], axis=1)[:, -(W - 1):, :]
+    w_conv = weights[p + "conv1d.weight"]               # int8 (W, di)
+    s_wc = wsc[p + "conv1d.weight.s"]
+    bias = weights[p + "conv1d.bias"]                   # f32
+
+    x_i8 = None                                          # (x_q, s_x) when the scan runs int8
+    if x_mode in ("minmax", "percentile"):
+        s_x = asc[f"l{i}.x_ssm.s"]
+        if fresh_state and T > 1 and use_pallas:
+            # fully fused int8 path (paper §4.3): conv+SiLU+requant
+            x8s = causal_conv_silu_q_pallas(x8c, s_cin, w_conv, s_wc, bias, s_x, m.a_bits, gain=g_x)
+        else:
+            x8s = ref.causal_conv_silu_q(x8c, s_cin, w_conv, s_wc, bias, s_x, m.a_bits, gain=g_x) \
+                if fresh_state else _conv_live_q(x_deq, conv_st, w_conv, s_wc, bias, s_x,
+                                                 m.a_bits, gain=g_x)
+        x_i8 = (x8s, s_x)
+        x_ssm_f = qc.dequantize_sym(x8s, s_x)
+    else:
+        # general path: f32 conv over [state ; x], then the x-site mode
+        w_deq = w_conv.astype(jnp.float32) * s_wc
+        full = jnp.concatenate([conv_st, x_deq], axis=1)
+        conv = sum(full[:, j : j + T, :] * w_deq[j][None, None, :] for j in range(W))
+        x_ssm_f = ref.silu(conv + bias[None, None, :])
+        if g_x is not None:
+            x_ssm_f = x_ssm_f * g_x[None, None, :]
+        if x_mode == "fp":
+            pass
+        elif x_mode == "dynamic":
+            x_ssm_f, _ = qc.dynamic_fake_quant(x_ssm_f, m.a_bits)
+        elif x_mode == "asym":
+            s, zp = asc[f"l{i}.x_ssm.asym"]
+            x_ssm_f = qc.fake_quant_asym(x_ssm_f, s, zp, m.a_bits)
+        elif x_mode == "log2":
+            x_ssm_f = qc.fake_quant_log2(x_ssm_f, asc[f"l{i}.x_ssm.amax"], m.a_bits)
+        elif x_mode == "quarot":
+            # rotate channels, quantize outlier-free, rotate back (the
+            # extra transforms the paper charges QuaRot-SSM for);
+            # inverse must be (1/n)Hᵀ — Paley bases are not symmetric
+            xr = hu.fwht_jnp(x_ssm_f)
+            xr = qc.fake_quant_sym(xr, asc[f"l{i}.x_ssm.rot_s"], m.a_bits)
+            x_ssm_f = hu.ifwht_jnp(xr)
+
+    # -- selection projections (W8A8 off the quantized x) --
+    if x_i8 is not None:
+        xq_proj, s_xp = x_i8
+    else:
+        s_xp = asc[p + "x_proj.weight.in_s"]
+        xq_proj = qc.quantize_sym(x_ssm_f, s_xp, m.a_bits)
+    bcdt = _mm(xq_proj, weights[p + "x_proj.weight"], s_xp, wsc[p + "x_proj.weight.s"], use_pallas)
+    dt_low, B_f, C_f = bcdt[..., :r], bcdt[..., r : r + n], bcdt[..., r + n :]
+    s_dt = asc[p + "dt_proj.weight.in_s"]
+    dt8 = qc.quantize_sym(dt_low, s_dt, m.a_bits)
+    dt = ref.softplus(
+        _mm(dt8, weights[p + "dt_proj.weight"], s_dt, wsc[p + "dt_proj.weight.s"], use_pallas,
+            bias=weights[p + "dt_proj.bias"])
+    )
+
+    # -- selective scan (int8 fast path or fp fallback) --
+    A_q, D_q = weights[p + "A_q"], weights[p + "D_q"]
+    s_A, s_D = wsc[p + "A_q.s"], wsc[p + "D_q.s"]
+    if x_i8 is not None and m.a_bits == 8:
+        s_B, s_C = asc[f"l{i}.B.s"], asc[f"l{i}.C.s"]
+        B8 = qc.quantize_sym(B_f, s_B, m.a_bits)
+        C8 = qc.quantize_sym(C_f, s_C, m.a_bits)
+        scan = selective_scan_q_pallas if use_pallas else ref.selective_scan_q
+        y, hT = scan(x_i8[0], x_i8[1], dt, A_q, s_A, B8, s_B, C8, s_C, D_q, s_D, h0=ssm_st)
+    else:
+        A = qc.dequantize_sym(A_q, s_A)
+        D = qc.dequantize_sym(D_q, s_D)
+        if m.act_mode == "dynamic":
+            B_f, _ = qc.dynamic_fake_quant(B_f, m.a_bits)
+            C_f, _ = qc.dynamic_fake_quant(C_f, m.a_bits)
+        elif x_mode != "fp" or m.a_bits < 8:
+            B_f = qc.fake_quant_sym(B_f, asc[f"l{i}.B.s"], m.a_bits)
+            C_f = qc.fake_quant_sym(C_f, asc[f"l{i}.C.s"], m.a_bits)
+        scan = selective_scan_pallas if use_pallas else ref.selective_scan
+        y, hT = scan(x_ssm_f, dt, A, B_f, C_f, D, h0=ssm_st)
+
+    # -- gate + output projection --
+    gated = y * ref.silu(z)
+    if g_y is not None:
+        gated = gated * g_y[None, None, :]
+    w_out = weights[p + "out_proj.weight"]
+    s_wo = wsc[p + "out_proj.weight.s"]
+    if m.y_mode == "hadamard":
+        # W_out was folded offline to H·W_out with 1/n in its scale
+        s_yh = asc[f"l{i}.gated_h.s"]
+        if use_pallas:
+            y8 = hadamard_quant_pallas(gated, s_yh, m.a_bits)
+        else:
+            y8 = qc.quantize_sym(hu.fwht_jnp(gated), s_yh, m.a_bits)
+        out = _mm(y8, w_out, s_yh, s_wo, use_pallas)
+    elif m.y_mode == "fp":
+        out = gated @ (w_out.astype(jnp.float32) * s_wo)
+    else:
+        if m.smooth_alpha is not None:
+            gated = gated * asc[f"l{i}.smooth_y_inv"]
+        if m.act_mode == "dynamic":
+            gated, _ = qc.dynamic_fake_quant(gated, m.a_bits)
+            out = gated @ (w_out.astype(jnp.float32) * s_wo)
+        else:
+            s_y = asc[f"l{i}.gated.s"]
+            y8 = qc.quantize_sym(gated, s_y, m.a_bits)
+            out = _mm(y8, w_out, s_y, s_wo, use_pallas)
+    return out, new_conv, hT
+
+
+def _conv_live_q(x_deq, conv_st, w_conv, s_wc, bias, s_x, a_bits, gain=None):
+    """Int8-semantics conv with a live (non-zero) window: compute in f32
+    on exactly-representable dequantized values, requantize with s_x.
+    Bit-equivalent to the fused int8 kernel for fresh state."""
+    W = w_conv.shape[0]
+    T = x_deq.shape[1]
+    w_deq = w_conv.astype(jnp.float32) * s_wc
+    full = jnp.concatenate([conv_st, x_deq], axis=1)
+    conv = sum(full[:, j : j + T, :] * w_deq[j][None, None, :] for j in range(W))
+    act = ref.silu(conv + bias[None, None, :])
+    if gain is not None:
+        act = act * gain[None, None, :]
+    return qc.quantize_sym(act, s_x, a_bits)
+
+
+def forward_q(cfg: TierConfig, qa: QuantArtifacts, weights, tokens, conv_state, ssm_state,
+              use_pallas: bool = True, fresh_state: bool = False, gains=None):
+    """Quantized forward. Residual spine in f32; fused norm+requant
+    between blocks; QuaRot additionally rotates the in_proj input."""
+    m = qa.method
+    resid = weights["embedding.weight"][tokens]
+    new_conv, new_ssm = [], []
+    out = jnp.zeros_like(resid)
+    d = cfg.d_model
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        s_in = qa.ascales[p + "in_proj.weight.in_s"]
+        nw = weights[p + "norm.weight"]
+        if m.quarot:
+            # explicit rotate-then-quantize on the block input; H folded
+            # into in_proj offline (W' = H·W_in, 1/d in its scale)
+            resid = resid + out
+            x_f = ref.rmsnorm(resid, nw, cfg.eps)
+            x8 = qc.quantize_sym(hu.fwht_jnp(x_f), s_in, m.a_bits)
+        elif use_pallas:
+            x8, resid = rmsnorm_resid_q_pallas(out, resid, nw, s_in, cfg.eps, m.a_bits)
+        else:
+            x8, resid = ref.rmsnorm_resid_q(out, resid, nw, s_in, cfg.eps, m.a_bits)
+        out, c, s = _block_q(cfg, qa, weights, i, x8, conv_state[i], ssm_state[i],
+                             use_pallas, fresh_state, gains)
+        new_conv.append(c)
+        new_ssm.append(s)
+    resid = resid + out
+    final = ref.rmsnorm(resid, weights["norm_f.weight"], cfg.eps)
+    s_h = qa.ascales["head.in_s"]
+    h8 = qc.quantize_sym(final, s_h, m.a_bits)
+    logits = _mm(h8, weights["lm_head.weight"], s_h, qa.wscales["lm_head.weight.s"], use_pallas)
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
+# ---------------------------------------------------------------------------
+# Weight-only (W2A16 Quip#-like) forward: fp activations, weights
+# dequantized from their 2-bit incoherent (rotated) form.
+# ---------------------------------------------------------------------------
+
+def forward_weight_only(cfg: TierConfig, qa: QuantArtifacts, weights, tokens,
+                        conv_state, ssm_state, gains=None):
+    params = {}
+    for name in param_names(cfg):
+        if name + ".q" in weights:
+            w_q = weights[name + ".q"].astype(jnp.float32)
+            s = weights[name + ".q.s"]          # per-channel scale row
+            params[name] = w_q * s
+        else:
+            params[name] = weights[name]
+    return forward_fp(cfg, params, tokens, conv_state, ssm_state, gains=gains)

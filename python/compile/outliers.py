@@ -1,0 +1,96 @@
+"""Outlier injection substrate (DESIGN.md §5).
+
+Tiny from-scratch models do not develop the extreme activation outliers
+of billion-parameter pretrained Mamba, and the paper's premise rests on
+them: massive outliers (≥100) in the SSM output y, and small (<10) but
+scale-skewing outliers in the SSM input x. We recreate both regimes
+with *fixed per-channel gain vectors* that are part of the model
+definition and present throughout training:
+
+    x_ssm ← g_x ⊙ x_ssm      (after the conv's SiLU)
+    gated ← g_y ⊙ (y · SiLU(z))   (before the output projection)
+
+Because the gains are constant diagonal maps immediately followed by
+trainable linear consumers (x_proj / the scan, and out_proj), the model
+*function class* is exactly unchanged — training simply learns the
+1/g-compensated weights it would have learned without gains. What does
+change is the tensor that deployment quantizes at those sites: it now
+carries genuine channel outliers, the same mechanism (high effective
+channel gain) believed to produce outliers in large pretrained models.
+
+Gain design, matching the paper's observations:
+  * y gains: ~2% of channels, magnitude 8·2^tier (8→64 across tiers,
+    paper §6.2: larger models have more/stronger outliers), growing
+    toward later layers (paper Fig. 8: layers near the output have
+    larger outliers).
+  * x gains: a single channel per layer with modest magnitude
+    (2+tier), keeping |x| ≲ 10 as in paper Fig. 12 while skewing the
+    abs-max scale enough that percentile clipping matters.
+
+A second, fully *post-hoc and exactly function-preserving* injection is
+also provided for the conv-input site: scale in_proj x-columns by α and
+divide the matching conv weight channels — the SiLU input is untouched
+(the chain in-between is linear), so the fp32 outputs are bit-identical
+while the quantized `conv_in` site sees outliers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class OutlierSpec:
+    """Per-layer fixed gain vectors; part of the model definition."""
+
+    g_x: np.ndarray   # (L, d_inner) f32
+    g_y: np.ndarray   # (L, d_inner) f32
+
+    @staticmethod
+    def identity(n_layer: int, d_inner: int) -> "OutlierSpec":
+        return OutlierSpec(
+            g_x=np.ones((n_layer, d_inner), np.float32),
+            g_y=np.ones((n_layer, d_inner), np.float32),
+        )
+
+    @staticmethod
+    def for_tier(cfg, tier_index: int, seed: int = 99, k_frac_y: float = 0.02) -> "OutlierSpec":
+        rng = np.random.default_rng(seed + tier_index)
+        L, di = cfg.n_layer, cfg.d_inner
+        g_x = np.ones((L, di), np.float32)
+        g_y = np.ones((L, di), np.float32)
+        k_y = max(1, int(k_frac_y * di))
+        # strong enough that even the smallest tier loses accuracy under
+        # naive per-tensor W8A8 (paper Table 5: the 130M model already
+        # drops 7 points), growing 2× per tier (paper §6.2)
+        alpha_y_base = min(12.0 * (2.0 ** tier_index), 64.0)  # 12, 24, 48, 64
+        alpha_x = 3.0 + 0.5 * tier_index
+        for i in range(L):
+            depth = (i + 1) / L                            # later layers: larger
+            ch_y = rng.choice(di, size=k_y, replace=False)
+            g_y[i, ch_y] = alpha_y_base * (0.5 + depth) * rng.uniform(0.8, 1.2, k_y)
+            ch_x = rng.choice(di, size=1, replace=False)
+            g_x[i, ch_x] = alpha_x * rng.uniform(0.9, 1.1)
+        return OutlierSpec(g_x=g_x, g_y=g_y)
+
+    def stats(self) -> dict:
+        return {
+            "gx_max": float(self.g_x.max()),
+            "gy_max": float(self.g_y.max()),
+            "gy_outlier_channels": int((self.g_y > 1.5).sum()),
+        }
+
+
+def inject_conv_in(cfg, params, alpha: float = 4.0, k: int = 2, seed: int = 7):
+    """Exactly function-preserving conv-input outliers: in_proj x-half
+    columns × α, conv weight channels ÷ α. Returns a mutated copy."""
+    rng = np.random.default_rng(seed)
+    params = {key: np.array(v, copy=True) for key, v in params.items()}
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        ch = rng.choice(cfg.d_inner, size=k, replace=False)
+        params[p + "in_proj.weight"][:, ch] *= alpha
+        params[p + "conv1d.weight"][:, ch] /= alpha
+    return params

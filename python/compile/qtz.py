@@ -1,0 +1,88 @@
+"""QTZ: a tiny self-describing binary tensor container.
+
+The build path (python) writes model weights, quantized weights, scales
+and token streams into ``.qtz`` files; the rust runtime reads them with
+``rust/src/tensor/qtz.rs``. The format is deliberately trivial so both
+sides can implement it in ~100 lines with zero dependencies:
+
+    magic   : 4 bytes  b"QTZ1"
+    count   : u32 LE   number of tensors
+    then per tensor:
+      name_len : u16 LE
+      name     : utf-8 bytes
+      dtype    : u8     (0=f32, 1=i8, 2=i32, 3=u16, 4=i64, 5=u8)
+      ndim     : u8
+      dims     : ndim * u32 LE
+      data     : product(dims) * itemsize bytes, little endian, C order
+
+All multi-byte values are little-endian. Tensors are stored in
+insertion order; readers must preserve it (the artifact manifest refers
+to parameter positions by name, but order makes files diffable).
+"""
+
+from __future__ import annotations
+
+import struct
+from collections import OrderedDict
+
+import numpy as np
+
+MAGIC = b"QTZ1"
+
+# dtype code <-> numpy dtype
+_DTYPES = {
+    0: np.dtype("<f4"),
+    1: np.dtype("i1"),
+    2: np.dtype("<i4"),
+    3: np.dtype("<u2"),
+    4: np.dtype("<i8"),
+    5: np.dtype("u1"),
+}
+_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+def dtype_code(dt: np.dtype) -> int:
+    dt = np.dtype(dt).newbyteorder("<") if np.dtype(dt).itemsize > 1 else np.dtype(dt)
+    if dt not in _CODES:
+        raise ValueError(f"unsupported dtype for qtz: {dt}")
+    return _CODES[dt]
+
+
+def save(path: str, tensors: "OrderedDict[str, np.ndarray] | dict") -> None:
+    """Write a dict of name -> ndarray to ``path``."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.ndim > 0:
+                arr = np.ascontiguousarray(arr)
+            code = dtype_code(arr.dtype)
+            nb = name.encode("utf-8")
+            if len(nb) > 0xFFFF:
+                raise ValueError("tensor name too long")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(_DTYPES[code], copy=False).tobytes(order="C"))
+
+
+def load(path: str) -> "OrderedDict[str, np.ndarray]":
+    """Read a ``.qtz`` file back into an ordered dict of ndarrays."""
+    out: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic (not a QTZ1 file)")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = _DTYPES[code]
+            n = int(np.prod(dims)) if ndim else 1
+            buf = f.read(n * dt.itemsize)
+            out[name] = np.frombuffer(buf, dtype=dt).reshape(dims).copy()
+    return out

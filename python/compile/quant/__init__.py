@@ -1,0 +1,18 @@
+"""Quantization library for the Quamba reproduction.
+
+Submodules:
+  core          symmetric / asymmetric / percentile / log2 quantizers
+  hadamard_util Walsh-Hadamard + Paley constructions (H12, H20), FWHT
+  config        method descriptors (which recipe each paper baseline uses)
+  calibrate     activation observers -> static scale sets
+  smoothquant   SmoothQuant-SSM (alpha-folding for Mamba linears)
+  quarot        QuaRot-SSM rotations (W8A8 and W4A4)
+  lowbit        Quip#-like W2A16 weight-only quantization
+  mixed         LLM.int8-style mixed-precision decomposition
+"""
+
+from . import core, hadamard_util, config  # noqa: F401
+
+# calibrate/smoothquant/quarot/lowbit/mixed are imported lazily by their
+# users (they depend on the kernels package, which imports back into
+# quant.core — eager importing here would be circular).

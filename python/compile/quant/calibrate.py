@@ -1,0 +1,219 @@
+"""Calibration: activation observers → static per-tensor scale sets.
+
+Mirrors the paper §5.1: run the fp model over a calibration set sampled
+from the training corpus, record the absolute maximum (and percentile
+maxima, per-channel maxima, min/max for the asymmetric ablation, and
+rotated-space maxima) per activation site, then derive every method's
+`QuantArtifacts` (quantized weights + baked scales) without touching
+the data again. The same scale set is reused by every experiment.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict, defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as model_mod
+from . import core as qc
+from . import hadamard_util as hu
+from .config import Method
+
+PERCENTILES = (99.0, 99.9, 99.99, 99.999)
+
+
+class CalibStats:
+    """Running activation statistics keyed by tap-site name."""
+
+    def __init__(self):
+        self.amax = defaultdict(float)                 # site -> max |x|
+        self.pctl = defaultdict(lambda: defaultdict(list))  # site -> p -> [per-batch pctl]
+        self.vmin = defaultdict(lambda: float("inf"))
+        self.vmax = defaultdict(lambda: float("-inf"))
+        self.chan_amax = {}                            # site -> per-channel max |x|
+        self.rot_amax = defaultdict(float)             # site -> max |H x|
+        self.n_batches = 0
+
+    def update(self, taps):
+        for site, v in taps.items():
+            a = np.asarray(v, dtype=np.float32)
+            ax = np.abs(a)
+            self.amax[site] = max(self.amax[site], float(ax.max()))
+            self.vmin[site] = min(self.vmin[site], float(a.min()))
+            self.vmax[site] = max(self.vmax[site], float(a.max()))
+            for p in PERCENTILES:
+                self.pctl[site][p].append(float(np.percentile(ax.reshape(-1), p)))
+            cam = ax.reshape(-1, a.shape[-1]).max(axis=0)
+            if site in self.chan_amax:
+                self.chan_amax[site] = np.maximum(self.chan_amax[site], cam)
+            else:
+                self.chan_amax[site] = cam
+            # rotated-space amax (only meaningful for power-friendly dims)
+            try:
+                r = np.asarray(hu.fwht(a.reshape(-1, a.shape[-1])))
+                self.rot_amax[site] = max(self.rot_amax[site], float(np.abs(r).max()))
+            except ValueError:
+                pass
+        self.n_batches += 1
+
+    def percentile_amax(self, site: str, p: float) -> float:
+        """Across-batch aggregate of the per-batch percentile maxima."""
+        if p >= 100.0:
+            return self.amax[site]
+        return float(np.mean(self.pctl[site][p]))
+
+
+def calibrate(cfg, params, stream: np.ndarray, n_samples: int = 64, seqlen: int = 256,
+              batch: int = 8, seed: int = 123, gains=None) -> CalibStats:
+    """Run the fp model over `n_samples` calibration sequences."""
+    params_j = {k: jnp.asarray(v) for k, v in params.items()}
+    gains_j = None if gains is None else (jnp.asarray(gains.g_x), jnp.asarray(gains.g_y))
+
+    @jax.jit
+    def fwd(tokens):
+        logits, c, s, taps = model_mod.forward_fp(cfg, params_j, tokens, collect=True,
+                                                  gains=gains_j)
+        return taps
+
+    stats = CalibStats()
+    gen = model_mod.data_mod.batches(stream, batch, seqlen, seed)
+    for _ in range(max(1, n_samples // batch)):
+        x, _ = next(gen)
+        stats.update(jax.device_get(fwd(jnp.asarray(x))))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Per-method artifact construction
+# ---------------------------------------------------------------------------
+
+def _smooth_vec(act_chan_amax: np.ndarray, w_chan_amax: np.ndarray, alpha: float) -> np.ndarray:
+    s = np.power(np.maximum(act_chan_amax, 1e-5), alpha) / np.power(
+        np.maximum(w_chan_amax, 1e-5), 1.0 - alpha
+    )
+    return np.clip(s, 1e-2, 1e2).astype(np.float32)
+
+
+def build_artifacts(cfg, params, method: Method, stats: CalibStats):
+    """Produce the runtime weights + baked scales for one method.
+
+    Weight folds applied here, offline (zero runtime cost — the paper's
+    compute-invariance argument, §4.2):
+      * Hadamard:   W_out ← H_di · W_out   (wscale absorbs 1/d_inner)
+      * QuaRot:     W_in  ← H_d  · W_in    (wscale absorbs 1/d_model)
+      * SmoothQuant: norm.weight ← norm.weight / s_ch,
+                     W_in ← diag(s_ch) · W_in  (exact, α = 0.5)
+    """
+    from . import lowbit  # local import (circular-free)
+
+    if method.weight_only:
+        return lowbit.build_weight_only(cfg, params, method)
+
+    nb = method.w_bits
+    weights: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    wscales: dict = {}
+    ascales: dict = {}
+
+    weights["embedding.weight"] = params["embedding.weight"].astype(np.float32)
+
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        norm_w = params[p + "norm.weight"].astype(np.float32).copy()
+        w_in = params[p + "in_proj.weight"].astype(np.float32).copy()
+        w_out = params[p + "out_proj.weight"].astype(np.float32).copy()
+
+        if method.smooth_alpha is not None:
+            # fold smoothing into (norm, in_proj): exact
+            s_ch = _smooth_vec(stats.chan_amax[f"l{i}.resid_in"],
+                               np.abs(w_in).max(axis=1), method.smooth_alpha)
+            norm_w /= s_ch
+            w_in *= s_ch[:, None]
+            # post-smooth activation amax: per-channel amax / s_ch
+            sm_in = stats.chan_amax[f"l{i}.resid_in"] / s_ch
+            ascales[p + "in_proj.weight.in_s"] = float(qc.scale_sym(float(sm_in.max()), method.a_bits))
+            # out_proj smoothing: explicit divide in-graph
+            s_chy = _smooth_vec(stats.chan_amax[f"l{i}.gated"],
+                                np.abs(w_out).max(axis=1), method.smooth_alpha)
+            ascales[f"l{i}.smooth_y_inv"] = (1.0 / s_chy).astype(np.float32)
+            w_out = w_out * s_chy[:, None]
+            sm_y = stats.chan_amax[f"l{i}.gated"] / s_chy
+            ascales[f"l{i}.gated.s"] = float(qc.scale_sym(float(sm_y.max()), method.a_bits))
+        else:
+            ascales[p + "in_proj.weight.in_s"] = float(
+                qc.scale_sym(stats.amax[f"l{i}.resid_in"], method.a_bits))
+            ascales[f"l{i}.gated.s"] = float(qc.scale_sym(stats.amax[f"l{i}.gated"], method.a_bits))
+
+        if method.quarot:
+            # rotate the in_proj input space; scale absorbs 1/d
+            H = hu.hadamard_np(cfg.d_model)
+            w_in = H @ w_in
+            ascales[p + "in_proj.weight.in_s"] = float(
+                qc.scale_sym(stats.rot_amax[f"l{i}.resid_in"], method.a_bits))
+
+        weights[p + "norm.weight"] = norm_w
+        q, s = qc.quantize_weight_np(w_in, nb)
+        weights[p + "in_proj.weight"] = q
+        wscales[p + "in_proj.weight.s"] = float(s) / (cfg.d_model if method.quarot else 1)
+
+        q, s = qc.quantize_weight_np(params[p + "conv1d.weight"], nb)
+        weights[p + "conv1d.weight"] = q
+        wscales[p + "conv1d.weight.s"] = float(s)
+        weights[p + "conv1d.bias"] = params[p + "conv1d.bias"].astype(np.float32)
+
+        q, s = qc.quantize_weight_np(params[p + "x_proj.weight"], nb)
+        weights[p + "x_proj.weight"] = q
+        wscales[p + "x_proj.weight.s"] = float(s)
+
+        q, s = qc.quantize_weight_np(params[p + "dt_proj.weight"], nb)
+        weights[p + "dt_proj.weight"] = q
+        wscales[p + "dt_proj.weight.s"] = float(s)
+        weights[p + "dt_proj.bias"] = params[p + "dt_proj.bias"].astype(np.float32)
+
+        A = -np.exp(params[p + "A_log"].astype(np.float64)).astype(np.float32)
+        q, s = qc.quantize_weight_np(A, nb)
+        weights[p + "A_q"] = q
+        wscales[p + "A_q.s"] = float(s)
+        q, s = qc.quantize_weight_np(params[p + "D"], nb)
+        weights[p + "D_q"] = q
+        wscales[p + "D_q.s"] = float(s)
+
+        if method.y_mode == "hadamard":
+            H = hu.hadamard_np(cfg.d_inner)
+            w_out = H @ w_out
+        q, s = qc.quantize_weight_np(w_out, nb)
+        weights[p + "out_proj.weight"] = q
+        wscales[p + "out_proj.weight.s"] = float(s) / (cfg.d_inner if method.y_mode == "hadamard" else 1)
+
+        # --- activation scales (per-site, per Eq. 2) ---
+        ascales[p + "conv.in_s"] = float(qc.scale_sym(stats.amax[f"l{i}.conv_in"], method.a_bits))
+        site = f"l{i}.x_ssm"
+        ascales[f"l{i}.x_ssm.amax"] = stats.amax[site]
+        if method.x_quant == "percentile":
+            ascales[f"l{i}.x_ssm.s"] = float(
+                qc.scale_sym(stats.percentile_amax(site, method.x_percentile), method.a_bits))
+        else:
+            ascales[f"l{i}.x_ssm.s"] = float(qc.scale_sym(stats.amax[site], method.a_bits))
+        ascales[f"l{i}.x_ssm.asym"] = qc.asym_params(stats.vmin[site], stats.vmax[site], method.a_bits)
+        if stats.rot_amax.get(site):
+            ascales[f"l{i}.x_ssm.rot_s"] = float(qc.scale_sym(stats.rot_amax[site], method.a_bits))
+        ascales[p + "x_proj.weight.in_s"] = ascales[f"l{i}.x_ssm.s"]
+        ascales[p + "dt_proj.weight.in_s"] = float(qc.scale_sym(stats.amax[f"l{i}.dt_in"], method.a_bits))
+        ascales[f"l{i}.B.s"] = float(qc.scale_sym(stats.amax[f"l{i}.B"], method.a_bits))
+        ascales[f"l{i}.C.s"] = float(qc.scale_sym(stats.amax[f"l{i}.C"], method.a_bits))
+        ascales[f"l{i}.gated_h.s"] = float(qc.scale_sym(stats.amax[f"l{i}.gated_h"], method.a_bits))
+
+    weights["norm_f.weight"] = params["norm_f.weight"].astype(np.float32)
+    q, s = qc.quantize_weight_np(params["embedding.weight"].T.copy(), nb)
+    weights["lm_head.weight"] = q
+    wscales["lm_head.weight.s"] = float(s)
+    ascales["head.in_s"] = float(qc.scale_sym(stats.amax["head_in"], method.a_bits))
+
+    return model_mod.QuantArtifacts(method, weights, wscales, ascales)
+
+
+def quantized_model_bytes(weights) -> int:
+    """Resident model bytes for the quantized parameter set (Table 1
+    'Size' column analog)."""
+    return sum(np.asarray(v).nbytes for v in weights.values())

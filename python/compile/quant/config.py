@@ -1,0 +1,95 @@
+"""Method descriptors: one entry per quantization recipe the paper
+evaluates. A `Method` fully determines (a) how weights are transformed
+and quantized offline, (b) which in-graph quantizers the model builder
+inserts, and (c) which calibration statistics it needs.
+
+Paper mapping:
+  fp16            FP16 baseline (fp32 on this CPU testbed; documented)
+  w8a8_static     "static"  naive per-tensor W8A8 (Table 2/3 `static`)
+  w8a8_dynamic    "dynamic" scales recomputed in-graph (Table 2/3)
+  smoothquant     SmQ-SSM re-implementation (alpha = 0.5)
+  quarot          QuaRot-SSM re-implementation (W8A8)
+  quamba          the paper's method: percentile-clipped SSM input +
+                  fused Hadamard-quantized SSM output
+  quamba_inper    ablation `+ In Per.`  (Table 5)
+  quamba_outhad   ablation `+ Out Had.` (Table 5)
+  quamba_p*       percentile sweep (Table 6)
+  t9_*            SSM-input quantizer alternatives (Table 9)
+  io_*            skip-quantize sensitivity variants (Figure 6)
+  w4a4_quarot     low-bit QuaRot (Table 7/8)
+  w2a16_quip      Quip#-like weight-only 2-bit (Table 7/8)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Method:
+    name: str
+    # weights
+    w_bits: int = 8
+    weight_only: bool = False          # W2A16: activations stay fp
+    # activations
+    a_bits: int = 8
+    # SSM input x quantizer: minmax | percentile | dynamic | asym | log2 | fp
+    x_quant: str = "minmax"
+    x_percentile: float = 100.0
+    # SSM output y treatment: none | hadamard | fp
+    y_mode: str = "none"
+    # non-SSM activation sites: static | dynamic
+    act_mode: str = "static"
+    # SmoothQuant folding on linear inputs (None = off)
+    smooth_alpha: float | None = None
+    # QuaRot-style rotations (input-path transforms + rotated linears)
+    quarot: bool = False
+    notes: str = ""
+
+    @property
+    def is_fp(self) -> bool:
+        return self.name == "fp16"
+
+
+def _m(name, **kw) -> Method:
+    return Method(name=name, **kw)
+
+
+METHODS = {
+    m.name: m
+    for m in [
+        _m("fp16", notes="fp32 stand-in for FP16 on the CPU testbed"),
+        _m("w8a8_static", x_quant="minmax", y_mode="none"),
+        _m("w8a8_dynamic", x_quant="dynamic", y_mode="none", act_mode="dynamic"),
+        _m("smoothquant", x_quant="minmax", smooth_alpha=0.5),
+        _m("quarot", x_quant="minmax", y_mode="hadamard", quarot=True),
+        _m("quamba", x_quant="percentile", x_percentile=99.999, y_mode="hadamard"),
+        _m("quamba_inper", x_quant="percentile", x_percentile=99.999, y_mode="none"),
+        _m("quamba_outhad", x_quant="minmax", y_mode="hadamard"),
+        # Table 6 percentile sweep (99.999 == quamba itself)
+        _m("quamba_p99", x_quant="percentile", x_percentile=99.0, y_mode="hadamard"),
+        _m("quamba_p99_9", x_quant="percentile", x_percentile=99.9, y_mode="hadamard"),
+        _m("quamba_p99_99", x_quant="percentile", x_percentile=99.99, y_mode="hadamard"),
+        # Table 9: SSM-input quantizer alternatives (rest as Quamba)
+        _m("t9_dyn", x_quant="dynamic", y_mode="hadamard"),
+        _m("t9_asym", x_quant="asym", y_mode="hadamard"),
+        _m("t9_log2", x_quant="log2", y_mode="hadamard"),
+        # Figure 6: skip-quantize SSM I/O
+        _m("io_fp_fp", x_quant="fp", y_mode="fp"),
+        _m("io_i8_fp", x_quant="minmax", y_mode="fp"),
+        _m("io_fp_i8", x_quant="fp", y_mode="none"),
+        # low-bit (Tables 7/8)
+        _m("w4a4_quarot", w_bits=4, a_bits=4, x_quant="minmax", y_mode="hadamard", quarot=True),
+        _m("w2a16_quip", w_bits=2, weight_only=True, x_quant="fp", y_mode="fp"),
+    ]
+}
+
+# Method groups used by aot.py to decide the artifact matrix.
+CORE_METHODS = [
+    "fp16", "w8a8_static", "w8a8_dynamic", "smoothquant", "quarot",
+    "quamba", "quamba_inper", "quamba_outhad",
+]
+PERCENTILE_METHODS = ["quamba_p99", "quamba_p99_9", "quamba_p99_99"]
+TABLE9_METHODS = ["t9_dyn", "t9_asym", "t9_log2"]
+IO_METHODS = ["io_fp_fp", "io_i8_fp", "io_fp_i8"]
+LOWBIT_METHODS = ["w4a4_quarot", "w2a16_quip"]

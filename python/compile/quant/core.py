@@ -1,0 +1,121 @@
+"""Core quantization primitives (numpy for offline, jnp for in-graph).
+
+Everything here implements Eq. 2 of the paper and its variants:
+
+    x_q = clamp(round(x / s), -2^{N-1}, 2^{N-1}-1),  s = amax / (2^{N-1}-1)
+
+Static scales are *pre-calibrated* floats; the graph bakes them as
+constants (per-tensor symmetric, matching the paper's deployment
+setting, CUTLASS-compatible). The alternatives explored in paper
+Table 9 — dynamic, asymmetric and log2 quantization — are implemented
+here as well so the Table 9 bench can regenerate the comparison.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def qmax(nbits: int) -> int:
+    return 2 ** (nbits - 1) - 1
+
+
+def qmin(nbits: int) -> int:
+    return -(2 ** (nbits - 1))
+
+
+def scale_sym(amax, nbits: int = 8):
+    """Symmetric scale from an absolute max (avoids zero scales)."""
+    amax = np.maximum(np.asarray(amax, dtype=np.float64), 1e-8)
+    return (amax / qmax(nbits)).astype(np.float32)
+
+
+def percentile_amax(x: np.ndarray, p: float) -> float:
+    """The paper's percentile max: the p-th percentile of |x| (p in %,
+    e.g. 99.999). p=100 reduces to the plain abs-max."""
+    ax = np.abs(np.asarray(x, dtype=np.float32)).reshape(-1)
+    if p >= 100.0:
+        return float(ax.max(initial=0.0))
+    return float(np.percentile(ax, p))
+
+
+# --- in-graph (jnp) ---------------------------------------------------------
+
+def quantize_sym(x, s, nbits: int = 8, dtype=jnp.int8):
+    """Quantize to signed integers with a static scale (jnp)."""
+    q = jnp.clip(jnp.round(x / s), qmin(nbits), qmax(nbits))
+    return q.astype(dtype)
+
+
+def dequantize_sym(q, s):
+    return q.astype(jnp.float32) * s
+
+
+def fake_quant_sym(x, s, nbits: int = 8):
+    """Quantize-dequantize round trip (used for sites where the next op
+    consumes floats, and for the low-bit ablations)."""
+    return dequantize_sym(quantize_sym(x, s, nbits, dtype=jnp.int32), s)
+
+
+def dynamic_fake_quant(x, nbits: int = 8):
+    """Dynamic per-tensor quantization: the scale is recomputed from the
+    live tensor inside the graph (paper's `dynamic` baseline; accurate
+    but adds a reduction + host-side scale churn on real HW)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax(nbits)
+    return fake_quant_sym(x, s, nbits), s
+
+
+def quantize_asym(x, s, z, nbits: int = 8):
+    """Asymmetric: x_q = clamp(round(x/s)+z). (Table 9 `MinMax Asym.`)"""
+    lo, hi = 0, 2**nbits - 1
+    q = jnp.clip(jnp.round(x / s) + z, lo, hi)
+    return q.astype(jnp.int32)
+
+
+def dequantize_asym(q, s, z):
+    return (q.astype(jnp.float32) - z) * s
+
+
+def fake_quant_asym(x, s, z, nbits: int = 8):
+    return dequantize_asym(quantize_asym(x, s, z, nbits), s, z)
+
+
+def asym_params(xmin: float, xmax: float, nbits: int = 8):
+    """Offline computation of (s, zero_point) from observed min/max."""
+    xmin, xmax = min(xmin, 0.0), max(xmax, 0.0)
+    s = max((xmax - xmin), 1e-8) / (2**nbits - 1)
+    z = round(-xmin / s)
+    return np.float32(s), np.int32(z)
+
+
+def fake_quant_log2(x, s, nbits: int = 8):
+    """Log2 quantization (Table 9): values map to +/- s * 2^e with e an
+    integer exponent code; preserves small magnitudes that uniform
+    quantization crushes when the scale is outlier-skewed."""
+    sign = jnp.sign(x)
+    mag = jnp.abs(x) / s
+    # exponent codes: 0 encodes zero, 1..2^{N-1}-1 encode 2^{e_min+k}
+    e = jnp.round(jnp.log2(jnp.maximum(mag, 1e-12)))
+    levels = 2 ** (nbits - 1) - 1
+    e = jnp.clip(e, -levels + 1, 0.0)  # mag <= 1 after amax scaling
+    out = sign * (2.0**e) * s
+    return jnp.where(jnp.abs(x) < s * 2.0 ** (-levels + 1) * 0.5, 0.0, out)
+
+
+# --- offline (numpy) weight quantization ------------------------------------
+
+def quantize_weight_np(w: np.ndarray, nbits: int = 8):
+    """Per-tensor symmetric weight quantization; returns (w_q, s)."""
+    s = scale_sym(np.abs(w).max(initial=0.0), nbits)
+    q = np.clip(np.round(w / s), qmin(nbits), qmax(nbits))
+    dtype = np.int8 if nbits <= 8 else np.int32
+    return q.astype(dtype), np.float32(s)
+
+
+def quantize_weight_perchannel_np(w: np.ndarray, axis: int, nbits: int = 8):
+    """Per-channel symmetric (used by the W2A16 Quip#-like baseline)."""
+    amax = np.abs(w).max(axis=tuple(i for i in range(w.ndim) if i != axis), keepdims=True)
+    s = np.maximum(amax, 1e-8) / qmax(nbits)
+    q = np.clip(np.round(w / s), qmin(nbits), qmax(nbits)).astype(np.int8)
+    return q, s.astype(np.float32)

@@ -1,0 +1,161 @@
+"""Walsh-Hadamard transform utilities (paper §3.3, §4.2).
+
+For n = 2^k the fast Walsh-Hadamard transform (FWHT) applies log n
+butterfly stages of additions/subtractions — no multiplies. For
+n != 2^k the paper factorizes n = 2^p * m where m is the size of a
+known Hadamard matrix (Sloane's library); we construct H_12 and H_20
+with the Paley type-I construction (q prime, q ≡ 3 mod 4 → H_{q+1}),
+which covers every d_inner in our model tiers:
+
+    128 = 2^7            192 = 2^6 * 12 / 4 -> 16 * 12
+    256 = 2^8            320 = 16 * 20
+
+Conventions: `hadamard(n)` returns the *unnormalized* +/-1 matrix H_n
+with H_n @ H_n.T = n I. The compute-invariant fusion in the model uses
+W_out' = H W_out and y' = H y with a 1/n correction folded into the
+output scale (paper §4.2).
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _legendre(a: int, q: int) -> int:
+    """Legendre symbol (a/q) for odd prime q."""
+    a %= q
+    if a == 0:
+        return 0
+    r = pow(a, (q - 1) // 2, q)
+    return 1 if r == 1 else -1
+
+
+@lru_cache(maxsize=None)
+def paley_hadamard(q: int) -> np.ndarray:
+    """Paley construction I: for prime q ≡ 3 (mod 4), builds H_{q+1}."""
+    if q % 4 != 3:
+        raise ValueError("Paley-I needs q ≡ 3 (mod 4)")
+    n = q + 1
+    # Jacobsthal matrix Q_{ij} = legendre(j - i); H = I + S with the
+    # skew core S = [[0, 1],[−1, Q]] (type-I construction)
+    Q = np.empty((q, q), dtype=np.int64)
+    for i in range(q):
+        for j in range(q):
+            Q[i, j] = _legendre(j - i, q)
+    H = np.ones((n, n), dtype=np.int64)
+    H[1:, 1:] = Q + np.eye(q, dtype=np.int64)
+    H[1:, 0] = -1
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all()
+    return H
+
+
+@lru_cache(maxsize=None)
+def hadamard(n: int) -> np.ndarray:
+    """Hadamard matrix of size n (n = 2^p * m, m in {1, 12, 20})."""
+    if n == 1:
+        return np.array([[1]], dtype=np.int64)
+    if n == 12:
+        return paley_hadamard(11)
+    if n == 20:
+        return paley_hadamard(19)
+    if n % 2 == 0:
+        h = hadamard(n // 2)
+        return np.block([[h, h], [h, -h]])
+    raise ValueError(f"no Hadamard construction for n={n}")
+
+
+def decompose(n: int):
+    """Factor n = 2^p * m with m in {1, 12, 20}; returns (p, m)."""
+    p = 0
+    while n % 2 == 0:
+        n //= 2
+        p += 1
+    if n in (1, 12 >> 2, 20 >> 2):  # pragma: no cover - unreachable guard
+        pass
+    if n == 1:
+        return p, 1
+    if n in (3, 5):
+        # 12 = 4*3, 20 = 4*5: move two powers of two into the base matrix
+        if p < 2:
+            raise ValueError(f"cannot factorize {n << p} into 2^p * (12|20)")
+        return p - 2, n * 4
+    raise ValueError(f"cannot factorize Hadamard size with odd part {n}")
+
+
+def fwht(x: np.ndarray) -> np.ndarray:
+    """In-place-style FWHT over the last axis (n = 2^p * m). Returns
+    H_n @ x along the last dim, unnormalized. numpy reference."""
+    n = x.shape[-1]
+    p, m = decompose(n)
+    y = np.asarray(x, dtype=np.float64).copy()
+    shape = y.shape
+    y = y.reshape(-1, n)
+    if m > 1:
+        hm = hadamard(m).astype(np.float64)
+        y = y.reshape(-1, 2**p, m) @ hm.T
+        y = y.reshape(-1, n)
+    h = 1
+    while h < 2**p:
+        y = y.reshape(-1, 2**p // (2 * h), 2, h * m)
+        a = y[:, :, 0, :].copy()
+        b = y[:, :, 1, :].copy()
+        y[:, :, 0, :] = a + b
+        y[:, :, 1, :] = a - b
+        y = y.reshape(-1, n)
+        h *= 2
+    return y.reshape(shape).astype(x.dtype if np.issubdtype(x.dtype, np.floating) else np.float64)
+
+
+def fwht_jnp(x, n: int | None = None):
+    """FWHT over the last axis in jnp (structured as the log-n butterfly
+    the Pallas kernel mirrors — O(n log n) adds, zero multiplies)."""
+    n = n or x.shape[-1]
+    p, m = decompose(n)
+    shape = x.shape
+    y = x.reshape((-1, n))
+    if m > 1:
+        hm = jnp.asarray(hadamard(m), dtype=x.dtype)
+        y = y.reshape(-1, 2**p, m) @ hm.T
+        y = y.reshape(-1, n)
+    h = 1
+    while h < 2**p:
+        y = y.reshape(-1, 2**p // (2 * h), 2, h * m)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        y = y.reshape(-1, n)
+        h *= 2
+    return y.reshape(shape)
+
+
+def ifwht_jnp(y, n: int | None = None):
+    """Inverse transform x = (1/n)·Hᵀy over the last axis. For pure
+    2^k sizes H is symmetric and this equals fwht/n, but the Paley
+    bases (H12, H20) are NOT symmetric — the base contraction must use
+    H_mᵀ. (Getting this wrong silently corrupts every d ∈ {96, 160,
+    192, 320} path; regression-tested in test_hadamard.py.)"""
+    n = n or y.shape[-1]
+    p, m = decompose(n)
+    shape = y.shape
+    v = y.reshape((-1, n))
+    # butterfly stages are symmetric and mutually commuting
+    h = 1
+    while h < 2**p:
+        v = v.reshape(-1, 2**p // (2 * h), 2, h * m)
+        a = v[:, :, 0, :]
+        b = v[:, :, 1, :]
+        v = jnp.stack([a + b, a - b], axis=2)
+        v = v.reshape(-1, n)
+        h *= 2
+    if m > 1:
+        hm = jnp.asarray(hadamard(m), dtype=y.dtype)
+        v = v.reshape(-1, 2**p, m) @ hm      # r @ H_m == H_mᵀ r
+        v = v.reshape(-1, n)
+    return v.reshape(shape) / n
+
+
+def hadamard_np(n: int) -> np.ndarray:
+    return hadamard(n).astype(np.float32)

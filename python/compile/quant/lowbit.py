@@ -1,0 +1,63 @@
+"""Low-bit baselines (paper §E, Tables 7/8).
+
+* W2A16 "Quip#-like": weight-only 2-bit with Hadamard incoherence
+  processing — W is rotated (H_in W), quantized per-channel at 2 bits,
+  then de-rotated offline, so the deployment graph is a plain fp
+  forward over the (heavily) degraded weights. Rotation happens purely
+  offline for weight-only quantization, which is exactly why Quip#
+  carries no runtime transform cost.
+* W4A4 QuaRot reuses the `quarot` graph with 4-bit clamps (see
+  quant.config.w4a4_quarot); nothing extra lives here.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from .. import model as model_mod
+from . import core as qc
+from . import hadamard_util as hu
+
+
+def _incoherent_quant(w: np.ndarray, nbits: int) -> np.ndarray:
+    """Rotate → per-channel quantize → de-rotate (all offline)."""
+    n = w.shape[0]
+    try:
+        H = hu.hadamard_np(n)
+    except ValueError:
+        H = None
+    wr = (H @ w) if H is not None else w
+    q, s = qc.quantize_weight_perchannel_np(wr, axis=1, nbits=nbits)
+    wq = q.astype(np.float32) * s
+    return ((H.T @ wq) / n).astype(np.float32) if H is not None else wq.astype(np.float32)
+
+
+def build_weight_only(cfg, params, method):
+    """QuantArtifacts for the W2A16 path: weights stored as int8 codes +
+    per-channel scales; activations untouched. 1-D parameters (biases,
+    norms, D) and the embedding stay fp — matching weight-only practice
+    of quantizing only the big matrices."""
+    weights: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    wscales: dict = {}
+    for name, w in params.items():
+        if w.ndim == 2 and "embedding" not in name and "A_log" not in name:
+            n = w.shape[0]
+            try:
+                H = hu.hadamard_np(n)
+            except ValueError:
+                H = None
+            wr = (H @ w) if H is not None else np.asarray(w, np.float32)
+            q, s = qc.quantize_weight_perchannel_np(wr, axis=1, nbits=method.w_bits)
+            wq = q.astype(np.float32) * s
+            deq = ((H.T @ wq) / n).astype(np.float32) if H is not None else wq.astype(np.float32)
+            # store the dequantized-derotated weight as the runtime param
+            # (weight-only: the graph consumes fp weights; the 4x memory
+            # saving is accounted analytically in the size table)
+            weights[name + ".q"] = np.clip(np.round(deq / max(1e-8, np.abs(deq).max() / 127)),
+                                           -127, 127).astype(np.int8)
+            weights[name + ".q.s"] = np.full((1,), np.abs(deq).max() / 127, np.float32)
+        else:
+            weights[name] = np.asarray(w, np.float32)
+    return model_mod.QuantArtifacts(method, weights, wscales, {})

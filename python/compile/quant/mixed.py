@@ -1,0 +1,61 @@
+"""LLM.int8-style mixed-precision decomposition (Dettmers et al. 2022),
+used by the Jamba hybrid experiments (paper Table 4).
+
+Columns of the input whose calibrated per-channel amax exceeds a
+threshold are kept in fp and matmul'ed separately; the rest go through
+the int8 path:
+
+    y = X[:, O] @ W[O, :]  (fp)  +  Q(X[:, R]) @ Q(W[R, :])  (int8)
+
+The outlier set O is chosen offline from calibration stats (static,
+like the rest of our pipeline; the original does it dynamically, which
+only grows O over batches — the static set is its fixed-point on the
+calibration distribution).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import core as qc
+
+
+def outlier_columns(chan_amax: np.ndarray, threshold: float = 6.0) -> np.ndarray:
+    """LLM.int8's magnitude criterion: columns with amax above
+    `threshold` (in units of the median channel amax) are outliers."""
+    med = max(1e-8, float(np.median(chan_amax)))
+    return np.where(chan_amax > threshold * med)[0].astype(np.int32)
+
+
+def split_weight(w: np.ndarray, outliers: np.ndarray, nbits: int = 8):
+    """Split W (K, N) into the fp outlier rows and the quantized rest.
+    Returns dict of arrays for the artifact bundle."""
+    mask = np.zeros(w.shape[0], dtype=bool)
+    mask[outliers] = True
+    w_o = w[mask].astype(np.float32)                  # (|O|, N)
+    q, s = qc.quantize_weight_np(w[~mask], nbits)     # (K-|O|, N) int8
+    return {
+        "outlier_idx": outliers,
+        "w_outlier": w_o,
+        "w_q": q,
+        "w_s": np.float32(s),
+        "keep_idx": np.where(~mask)[0].astype(np.int32),
+    }
+
+
+def matmul_mixed(x, parts, s_x_rest: float, nbits: int = 8):
+    """y = x[:, O] @ W_O + Q(x[:, R]) @ W_R_q (jnp, in-graph)."""
+    o_idx = jnp.asarray(parts["outlier_idx"])
+    k_idx = jnp.asarray(parts["keep_idx"])
+    x_o = jnp.take(x, o_idx, axis=-1)
+    x_r = jnp.take(x, k_idx, axis=-1)
+    y_fp = x_o @ parts["w_outlier"] if parts["w_outlier"].shape[0] else 0.0
+    x_q = qc.quantize_sym(x_r, s_x_rest, nbits)
+    acc = jax.lax.dot_general(
+        x_q, parts["w_q"], (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y_q = acc.astype(jnp.float32) * (s_x_rest * float(parts["w_s"]))
+    return y_fp + y_q

@@ -1,0 +1,43 @@
+"""QuaRot-SSM (paper §C): rotation-based outlier suppression
+re-implemented for the Mamba architecture.
+
+Three rotations are used, mirroring the paper's Figure 7(b):
+
+  1. block input  : x̄ = Q(H_d · norm(x)); H_d folded into in_proj
+                    offline (compute-invariant, exact);
+  2. SSM input x  : online rotate → quantize → de-rotate. The scan is
+                    channel-diagonal, so the rotation CANNOT be folded —
+                    this is precisely the "extra transpose and Hadamard
+                    transforms" overhead the paper charges QuaRot-SSM
+                    with (Table 1);
+  3. SSM output   : identical to Quamba's fused Hadamard-quantize with
+                    H folded into out_proj.
+
+The offline folds live in quant.calibrate.build_artifacts; this module
+keeps the standalone helpers + the W4A4 variant knobs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import hadamard_util as hu
+
+
+def rotate_in_proj(w_in: np.ndarray, d_model: int) -> np.ndarray:
+    """W' = H_d · W_in; pair with x' = H_d x and a 1/d factor in the
+    dequant scale."""
+    return (hu.hadamard_np(d_model) @ w_in).astype(np.float32)
+
+
+def rotate_out_proj(w_out: np.ndarray, d_inner: int) -> np.ndarray:
+    """W' = H_di · W_out; pair with y' = H_di y and 1/d_inner."""
+    return (hu.hadamard_np(d_inner) @ w_out).astype(np.float32)
+
+
+def online_rotation_cost(d_inner: int, T: int) -> int:
+    """Extra adds QuaRot-SSM spends per block on the x path (the cost
+    Quamba avoids): two FWHTs + a transpose ≈ 2·T·d·log2(d) adds."""
+    import math
+
+    return int(2 * T * d_inner * math.log2(d_inner))

@@ -1,0 +1,41 @@
+"""SmoothQuant-SSM (paper §5.1 baselines): α-balanced rescaling between
+activations and weights, re-implemented for the Mamba architecture.
+
+The migration identity (Xiao et al. 2023):  X W = (X · diag(s)^-1)(diag(s) W)
+with s_j = amax(X_j)^α / amax(W_j)^{1-α}. For Mamba we fold:
+
+  * in_proj  : the activation divide folds into the preceding RMSNorm
+               weight — exact and free;
+  * out_proj : the input is the gated SSM output (no producer weight to
+               fold into), so the divide stays in-graph as one
+               elementwise multiply by a baked 1/s vector — this is the
+               cost profile the paper describes for SmQ-SSM.
+  * x_proj / dt_proj : unsmoothed (their input is the percentile-less
+               conv output; smoothing through the SiLU is not exact —
+               DESIGN.md §4 documents the simplification).
+
+The folds themselves are applied in quant.calibrate.build_artifacts;
+this module hosts the vector computation so it can be unit-tested and
+reused by the Jamba mixed pipeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def smooth_vector(act_chan_amax: np.ndarray, w_chan_amax: np.ndarray,
+                  alpha: float = 0.5, clip: float = 1e2) -> np.ndarray:
+    """Per-input-channel migration factors s (clipped for stability)."""
+    s = np.power(np.maximum(act_chan_amax, 1e-5), alpha) / np.power(
+        np.maximum(w_chan_amax, 1e-5), 1.0 - alpha
+    )
+    return np.clip(s, 1.0 / clip, clip).astype(np.float32)
+
+
+def fold_linear(act_chan_amax: np.ndarray, w: np.ndarray, alpha: float = 0.5):
+    """Return (s, w_folded): w_folded = diag(s) @ w. The caller is
+    responsible for dividing the activation (or the producer weight)
+    by s."""
+    s = smooth_vector(act_chan_amax, np.abs(w).max(axis=1), alpha)
+    return s, (w * s[:, None]).astype(np.float32)

@@ -1,0 +1,269 @@
+"""Pythia-like Transformer baseline (paper Figures 1b/1c/10, Table 2/3
+`Pythia` rows): a pre-norm GPT-NeoX-style decoder with rotary-free
+learned positions kept out (we use RoPE-free causal attention with a
+learned absolute embedding folded away — positions are encoded with a
+simple ALiBi-style linear bias, which keeps the decode-step graph free
+of a position input), KV-cache decode step, and the same vocabulary /
+tier scheme as the Mamba models so iso-size comparisons are direct.
+
+The serving-relevant property this baseline exists to demonstrate is
+the paper's Figure 1(c): the KV cache grows linearly with context
+while the SSM state is constant — the rust state manager implements
+both pools and regenerates that figure.
+
+Quantization: the `w8a8_static` and `smoothquant` recipes apply to the
+linear layers (q/k/v/o and the MLP), with attention probabilities and
+softmax in fp — mirroring how SmoothQuant treats Transformers and
+enabling the Figure 10 sensitivity comparison.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .kernels import ref
+from .quant import core as qc
+
+
+@dataclass(frozen=True)
+class TransformerTier:
+    name: str
+    paper_name: str
+    d_model: int
+    n_layer: int
+    n_head: int
+    max_ctx: int = 2048
+    vocab: int = data_mod.VOCAB_SIZE
+    eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 2 * d + 4 * d * d + 2 * d * self.d_ff + self.d_ff + d
+        return self.vocab * d + d + self.n_layer * per_layer
+
+
+T_TIERS = OrderedDict(
+    (t.name, t)
+    for t in [
+        TransformerTier("p1p4", "Pythia-1.4B", d_model=128, n_layer=4, n_head=4),
+        TransformerTier("p2p8", "Pythia-2.8B", d_model=160, n_layer=5, n_head=5),
+    ]
+)
+
+
+def param_names(cfg: TransformerTier) -> list:
+    names = ["embedding.weight"]
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        names += [
+            p + "norm1.weight", p + "wqkv", p + "wo",
+            p + "norm2.weight", p + "w1", p + "b1", p + "w2",
+        ]
+    names += ["norm_f.weight"]
+    return names
+
+
+def init_params(cfg: TransformerTier, seed: int = 1) -> "OrderedDict[str, np.ndarray]":
+    rng = np.random.default_rng(seed)
+    d, ff = cfg.d_model, cfg.d_ff
+    P: "OrderedDict[str, np.ndarray]" = OrderedDict()
+
+    def dense(shape):
+        return rng.uniform(-1, 1, size=shape).astype(np.float32) / math.sqrt(shape[0])
+
+    P["embedding.weight"] = rng.normal(0, 0.02, size=(cfg.vocab, d)).astype(np.float32)
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        P[p + "norm1.weight"] = np.ones(d, np.float32)
+        P[p + "wqkv"] = dense((d, 3 * d))
+        P[p + "wo"] = dense((d, d))
+        P[p + "norm2.weight"] = np.ones(d, np.float32)
+        P[p + "w1"] = dense((d, ff))
+        P[p + "b1"] = np.zeros(ff, np.float32)
+        P[p + "w2"] = dense((ff, d))
+    P["norm_f.weight"] = np.ones(d, np.float32)
+    return P
+
+
+def _alibi_slopes(n_head: int) -> np.ndarray:
+    return np.array([2.0 ** (-(i + 1) * 8.0 / n_head) for i in range(n_head)], np.float32)
+
+
+def _attn(cfg, q, k, v, pos_q, pos_k):
+    """Causal attention with ALiBi bias. q: (B,Tq,H,Dh), k/v: (B,Tk,H,Dh);
+    pos_q/pos_k are absolute position vectors (Tq,), (Tk,)."""
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    slopes = jnp.asarray(_alibi_slopes(cfg.n_head))
+    dist = pos_q[:, None] - pos_k[None, :]
+    bias = -slopes[:, None, None] * jnp.maximum(dist, 0).astype(jnp.float32)
+    mask = dist >= 0
+    logits = logits + bias[None]
+    logits = jnp.where(mask[None, None], logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def forward_fp(cfg: TransformerTier, params, tokens, k_cache=None, v_cache=None, cache_len=0,
+               collect=False):
+    """fp32 forward with optional KV cache.
+
+    Prefill: tokens (B, T), caches None → returns logits (B,T,V) and the
+    (L, B, max_ctx, H, Dh) caches filled at [0, T).
+    Decode: tokens (B, 1), caches present, `cache_len` scalar position.
+    """
+    B, T = tokens.shape
+    H, Dh, L, M = cfg.n_head, cfg.d_head, cfg.n_layer, cfg.max_ctx
+    taps = OrderedDict() if collect else None
+    if k_cache is None:
+        k_cache = jnp.zeros((L, B, M, H, Dh), jnp.float32)
+        v_cache = jnp.zeros((L, B, M, H, Dh), jnp.float32)
+    resid = params["embedding.weight"][tokens]
+    pos_q = cache_len + jnp.arange(T)
+    new_k, new_v = [], []
+    for i in range(L):
+        p = f"layers.{i}."
+        h = ref.rmsnorm(resid, params[p + "norm1.weight"], cfg.eps)
+        if taps is not None:
+            taps[f"l{i}.attn_in"] = h
+        qkv = h @ params[p + "wqkv"]
+        if taps is not None:
+            taps[f"l{i}.qkv"] = qkv
+        q, k, v = jnp.split(qkv.reshape(B, T, 3, H, Dh), 3, axis=2)
+        q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+        kc = jax.lax.dynamic_update_slice(k_cache[i], k, (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[i], v, (0, cache_len, 0, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        pos_k = jnp.arange(M)
+        attn = _attn(cfg, q, kc, vc, pos_q, pos_k)
+        # mask out cache slots beyond the live length
+        attn_out = attn.reshape(B, T, H * Dh)
+        if taps is not None:
+            taps[f"l{i}.attn_out"] = attn_out
+        resid = resid + attn_out @ params[p + "wo"]
+        h2 = ref.rmsnorm(resid, params[p + "norm2.weight"], cfg.eps)
+        if taps is not None:
+            taps[f"l{i}.mlp_in"] = h2
+        hd = jax.nn.gelu(h2 @ params[p + "w1"] + params[p + "b1"])
+        if taps is not None:
+            taps[f"l{i}.h_d"] = hd
+        resid = resid + hd @ params[p + "w2"]
+    final = ref.rmsnorm(resid, params["norm_f.weight"], cfg.eps)
+    if taps is not None:
+        taps["head_in"] = final
+    logits = final @ params["embedding.weight"].T
+    out = (logits, jnp.stack(new_k), jnp.stack(new_v))
+    return out + (taps,) if collect else out
+
+
+def forward_q(cfg: TransformerTier, method, params, wq, wscales, ascales, tokens,
+              k_cache=None, v_cache=None, cache_len=0):
+    """W8A8 transformer: int8 GEMMs on the projections, attention math
+    in fp (standard SmoothQuant precision mapping)."""
+    B, T = tokens.shape
+    H, Dh, L, M = cfg.n_head, cfg.d_head, cfg.n_layer, cfg.max_ctx
+    if k_cache is None:
+        k_cache = jnp.zeros((L, B, M, H, Dh), jnp.float32)
+        v_cache = jnp.zeros((L, B, M, H, Dh), jnp.float32)
+    resid = wq["embedding.weight"][tokens]
+    pos_q = cache_len + jnp.arange(T)
+    new_k, new_v = [], []
+    for i in range(L):
+        p = f"layers.{i}."
+        h = ref.rmsnorm(resid, wq[p + "norm1.weight"], cfg.eps)
+        h8 = qc.quantize_sym(h, ascales[p + "wqkv.in_s"], 8)
+        qkv = ref.matmul_i8(h8, wq[p + "wqkv"], ascales[p + "wqkv.in_s"], wscales[p + "wqkv.s"])
+        q, k, v = jnp.split(qkv.reshape(B, T, 3, H, Dh), 3, axis=2)
+        q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+        kc = jax.lax.dynamic_update_slice(k_cache[i], k, (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[i], v, (0, cache_len, 0, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        attn = _attn(cfg, q, kc, vc, pos_q, jnp.arange(M)).reshape(B, T, H * Dh)
+        a8 = qc.quantize_sym(attn, ascales[p + "wo.in_s"], 8)
+        resid = resid + ref.matmul_i8(a8, wq[p + "wo"], ascales[p + "wo.in_s"], wscales[p + "wo.s"])
+        h2 = ref.rmsnorm(resid, wq[p + "norm2.weight"], cfg.eps)
+        h28 = qc.quantize_sym(h2, ascales[p + "w1.in_s"], 8)
+        hd = jax.nn.gelu(ref.matmul_i8(h28, wq[p + "w1"], ascales[p + "w1.in_s"],
+                                       wscales[p + "w1.s"], bias=wq[p + "b1"]))
+        hd8 = qc.quantize_sym(hd, ascales[p + "w2.in_s"], 8)
+        resid = resid + ref.matmul_i8(hd8, wq[p + "w2"], ascales[p + "w2.in_s"], wscales[p + "w2.s"])
+    final = ref.rmsnorm(resid, wq["norm_f.weight"], cfg.eps)
+    h8 = qc.quantize_sym(final, ascales["head.in_s"], 8)
+    logits = ref.matmul_i8(h8, wq["lm_head.weight"], ascales["head.in_s"], wscales["lm_head.weight.s"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def calibrate_and_quantize(cfg, params, stream, method, n_samples=32, seqlen=128, batch=8,
+                           smooth_alpha=None):
+    """Collect per-site amax for the transformer, fold SmoothQuant if
+    requested, and return (wq, wscales, ascales)."""
+    params_j = {k: jnp.asarray(v) for k, v in params.items()}
+
+    @jax.jit
+    def fwd(tokens):
+        _, _, _, taps = forward_fp(cfg, params_j, tokens, collect=True)
+        return taps
+
+    gen = data_mod.batches(stream, batch, seqlen, seed=321)
+    amax: dict = {}
+    chan: dict = {}
+    for _ in range(max(1, n_samples // batch)):
+        x, _ = next(gen)
+        taps = jax.device_get(fwd(jnp.asarray(x)))
+        for site, v in taps.items():
+            a = np.abs(np.asarray(v, np.float32))
+            amax[site] = max(amax.get(site, 0.0), float(a.max()))
+            cam = a.reshape(-1, a.shape[-1]).max(axis=0)
+            chan[site] = np.maximum(chan.get(site, 0.0), cam)
+
+    from .quant.smoothquant import fold_linear
+
+    wq: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    wscales: dict = {}
+    ascales: dict = {}
+    wq["embedding.weight"] = params["embedding.weight"].astype(np.float32)
+    site_of = {"wqkv": "attn_in", "wo": "attn_out", "w1": "mlp_in", "w2": "h_d"}
+    for i in range(cfg.n_layer):
+        p = f"layers.{i}."
+        wq[p + "norm1.weight"] = params[p + "norm1.weight"].astype(np.float32)
+        wq[p + "norm2.weight"] = params[p + "norm2.weight"].astype(np.float32)
+        wq[p + "b1"] = params[p + "b1"].astype(np.float32)
+        for leaf in ("wqkv", "wo", "w1", "w2"):
+            w = params[p + leaf].astype(np.float32)
+            site = f"l{i}.{site_of[leaf]}"
+            a = amax[site]
+            if smooth_alpha is not None and leaf in ("wqkv", "w1"):
+                s, w = fold_linear(chan[site], w, smooth_alpha)
+                if leaf == "wqkv":
+                    wq[p + "norm1.weight"] = wq[p + "norm1.weight"] / s
+                else:
+                    wq[p + "norm2.weight"] = wq[p + "norm2.weight"] / s
+                a = float((chan[site] / s).max())
+            q, sw = qc.quantize_weight_np(w, 8)
+            wq[p + leaf] = q
+            wscales[p + leaf + ".s"] = float(sw)
+            ascales[p + leaf + ".in_s"] = float(qc.scale_sym(a, 8))
+    wq["norm_f.weight"] = params["norm_f.weight"].astype(np.float32)
+    q, sw = qc.quantize_weight_np(params["embedding.weight"].T.copy(), 8)
+    wq["lm_head.weight"] = q
+    wscales["lm_head.weight.s"] = float(sw)
+    # final-norm output amax ≈ head input; reuse the last mlp_in bound
+    ascales["head.in_s"] = float(qc.scale_sym(amax.get("head_in", max(amax.values())), 8))
+    return wq, wscales, ascales

@@ -1,0 +1,77 @@
+"""End-to-end AOT smoke: the --quick build must produce a loadable,
+self-consistent artifact tree (graphs in HLO text, weights in qtz,
+manifest indexing both). The rust side consumes the same tree in
+rust/tests/integration.rs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import qtz
+
+ART = "/tmp/quamba_pytest_artifacts"
+
+
+@pytest.fixture(scope="module")
+def quick_build():
+    # reuse a previous build in the same session if present
+    manifest = os.path.join(ART, "manifest.json")
+    if not os.path.exists(manifest):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART, "--quick"],
+            check=True,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            timeout=900,
+        )
+    with open(manifest) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(quick_build):
+    m = quick_build
+    assert m["vocab_size"] == 256
+    assert m["quick"] is True
+    assert len(m["graphs"]) >= 6
+    for g in m["graphs"].values():
+        assert g["kind"] in ("prefill", "decode")
+        assert os.path.exists(os.path.join(ART, g["file"]))
+
+
+def test_graphs_are_hlo_text(quick_build):
+    g = next(iter(quick_build["graphs"].values()))
+    text = open(os.path.join(ART, g["file"])).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_weights_match_manifest_params(quick_build):
+    for key, w in quick_build["weights"].items():
+        f = qtz.load(os.path.join(ART, w["file"]))
+        for p in w["params"]:
+            assert p in f, f"{key}: missing {p}"
+
+
+def test_quantized_weights_are_int8(quick_build):
+    key = next(k for k in quick_build["weights"] if k.endswith("_quamba"))
+    f = qtz.load(os.path.join(ART, quick_build["weights"][key]["file"]))
+    assert f["layers.0.in_proj.weight"].dtype == np.int8
+    # size reduction vs fp bundle (the Table 1 "Size" claim)
+    fp_key = key.replace("_quamba", "_fp16")
+    assert quick_build["weights"][key]["bytes"] < 0.65 * quick_build["weights"][fp_key]["bytes"]
+
+
+def test_eval_data_present(quick_build):
+    for k in ("calib", "pile_eval", "wiki_eval", "tasks", "vocab"):
+        assert os.path.exists(os.path.join(ART, quick_build["data"][k]))
+    tasks = json.load(open(os.path.join(ART, quick_build["data"]["tasks"])))
+    assert len(tasks) == 6
+
+
+def test_gains_shipped_for_reference_sim(quick_build):
+    key = next(k for k in quick_build["weights"] if k.endswith("_fp16"))
+    f = qtz.load(os.path.join(ART, quick_build["weights"][key]["file"]))
+    assert "__gains.g_x" in f and "__gains.g_y" in f

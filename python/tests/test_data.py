@@ -1,0 +1,113 @@
+"""Synthetic corpus + task-suite substrate."""
+
+import numpy as np
+import pytest
+
+from compile import data as dm
+
+
+@pytest.fixture(scope="module")
+def lms():
+    return dm.make_corpora(seed=11)
+
+
+class TestVocab:
+    def test_size_and_uniqueness(self):
+        v = dm.Vocab()
+        assert len(v.words) == dm.N_WORDS
+        assert len(set(v.words)) == dm.N_WORDS
+
+    def test_decode(self):
+        v = dm.Vocab()
+        ids = [dm.BOS, 4, 5, dm.SEP, 6, dm.EOS, 7]
+        s = v.decode(ids)
+        assert v.words[0] in s and "<sep>" in s
+        assert v.words[3] not in s  # after EOS
+
+    def test_deterministic(self):
+        assert dm.Vocab(seed=7).words == dm.Vocab(seed=7).words
+        assert dm.Vocab(seed=7).words != dm.Vocab(seed=8).words
+
+
+class TestMarkov:
+    def test_streams_deterministic(self, lms):
+        pile, _ = lms
+        a = dm.token_stream(pile, 500, seed=3)
+        b = dm.token_stream(pile, 500, seed=3)
+        np.testing.assert_array_equal(a, b)
+
+    def test_styles_differ(self, lms):
+        pile, wiki = lms
+        a = dm.token_stream(pile, 2000, seed=3)
+        b = dm.token_stream(wiki, 2000, seed=3)
+        # unigram histograms must differ measurably (they are the two
+        # eval distributions in Table 2)
+        ha = np.bincount(a, minlength=256) / len(a)
+        hb = np.bincount(b, minlength=256) / len(b)
+        assert np.abs(ha - hb).sum() > 0.1
+
+    def test_tokens_in_range(self, lms):
+        pile, _ = lms
+        s = dm.token_stream(pile, 1000, seed=4)
+        assert s.max() < dm.VOCAB_SIZE
+        assert (s >= dm.SEP).all()  # no PAD/BOS/EOS inside a stream
+
+    def test_distribution_learnable(self, lms):
+        """the chain must be peaked (low-entropy next-token dist), else
+        training could never beat unigram and the eval would be noise."""
+        pile, _ = lms
+        p = pile.next_dist(3, 7)
+        assert p.max() > 5.0 / dm.N_WORDS  # much more peaked than uniform
+
+    def test_batches_shapes(self, lms):
+        pile, _ = lms
+        s = dm.token_stream(pile, 3000, seed=5)
+        x, y = next(dm.batches(s, 4, 32, seed=0))
+        assert x.shape == (4, 32) and y.shape == (4, 32)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+class TestTasks:
+    @pytest.fixture(scope="class")
+    def suite(self, lms):
+        return dm.build_task_suite(lms[0], n_ex=12)
+
+    def test_all_six_tasks(self, suite):
+        assert list(suite.keys()) == [
+            "lambada_synth", "hellaswag_synth", "piqa_synth",
+            "arc_easy_synth", "arc_chal_synth", "winogrande_synth",
+        ]
+        for name, t in suite.items():
+            assert len(t["examples"]) == 12, name
+
+    def test_choice_golds_valid(self, suite):
+        for name, t in suite.items():
+            if t["kind"].startswith("choice"):
+                for ex in t["examples"]:
+                    assert 0 <= ex["gold"] < len(ex["choices"])
+                    lens = {len(c) for c in ex["choices"]}
+                    assert len(lens) == 1, "choices must be same length for fairness"
+
+    def test_lambada_target_is_modal_continuation(self, suite, lms):
+        """the target must be the generator's argmax continuation of the
+        prompt's final word bigram (the solvable-by-training design)."""
+        import numpy as np
+
+        pile = lms[0]
+        for ex in suite["lambada_synth"]["examples"]:
+            w1 = ex["prompt"][-2] - dm.N_SPECIAL
+            w2 = ex["prompt"][-1] - dm.N_SPECIAL
+            assert w1 >= 0 and w2 >= 0, "prompt must end with two words"
+            want = int(np.argmax(pile.next_dist(w1, w2))) + dm.N_SPECIAL
+            assert ex["target"][0] == want
+
+    def test_gold_not_trivially_positional(self, suite):
+        """gold indices must be shuffled, not always 0."""
+        golds = [ex["gold"] for ex in suite["piqa_synth"]["examples"]]
+        assert len(set(golds)) > 1
+
+    def test_deterministic(self, lms):
+        a = dm.build_task_suite(lms[0], n_ex=5)
+        b = dm.build_task_suite(lms[0], n_ex=5)
+        for k in a:
+            assert a[k]["examples"][0]["prompt"] == b[k]["examples"][0]["prompt"]

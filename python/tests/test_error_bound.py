@@ -1,0 +1,92 @@
+"""Theorem 4.1 / paper §A: quantization error of a stable discrete LTI
+SSM stays bounded over time (the python half of the Figure 5
+experiment; the HiPPO-materialized rust version lives in
+rust/src/ssm/hippo.rs and benches/fig5_error_bound)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def run_lti(a_diag, b, c, xs, T):
+    """diagonal stable LTI: h[t] = diag(a) h[t-1] + b x[t]; y = c·h."""
+    n = len(a_diag)
+    h = np.zeros(n)
+    ys = []
+    for t in range(T):
+        h = a_diag * h + b * xs[t]
+        ys.append(c @ h)
+    return np.array(ys)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_error_bounded_for_stable_system(seed):
+    rng = np.random.default_rng(seed)
+    n, T = 4, 100
+    a = np.exp(-rng.uniform(0.05, 1.0, n))      # |a| < 1: stable
+    b = rng.normal(0, 1, n)
+    c = rng.normal(0, 1, n)
+    xs = rng.normal(0, 1, (T, n))
+    s = np.abs(xs).max() / 127
+    xq = np.clip(np.round(xs / s), -127, 127) * s
+    eps = s / 2
+    err = np.abs(run_lti(a, b, c, xs, T) - run_lti(a, b, c, xq, T))
+    # geometric-series bound: |err| ≤ ε·|b|·|c|·n / (1 - a_max)
+    bound = eps * np.abs(b).max() * np.abs(c).sum() * 1.0 / (1 - a.max())
+    assert (err <= bound + 1e-9).all(), f"max err {err.max()} bound {bound}"
+
+
+def test_error_does_not_grow_with_time():
+    rng = np.random.default_rng(1)
+    n, T = 4, 400
+    a = np.exp(-rng.uniform(0.1, 1.0, n))
+    b = rng.normal(0, 1, n)
+    c = rng.normal(0, 1, n)
+    xs = rng.normal(0, 1, (T, n))
+    s = np.abs(xs).max() / 127
+    xq = np.clip(np.round(xs / s), -127, 127) * s
+    err = np.abs(run_lti(a, b, c, xs, T) - run_lti(a, b, c, xq, T))
+    head = err[: T // 4].max()
+    tail = err[-T // 4 :].max()
+    assert tail < 5 * head + 1e-9, "error must not accumulate over steps"
+
+
+def test_unstable_system_would_diverge():
+    """sanity contrast: with |a| > 1 the same bound logic fails — shows
+    the theorem's stability premise is load-bearing."""
+    n, T = 2, 60
+    a = np.array([1.08, 1.05])
+    b = np.ones(n)
+    c = np.ones(n)
+    rng = np.random.default_rng(2)
+    xs = rng.normal(0, 1, (T, n))
+    s = np.abs(xs).max() / 127
+    xq = np.clip(np.round(xs / s), -127, 127) * s
+    err = np.abs(run_lti(a, b, c, xs, T) - run_lti(a, b, c, xq, T))
+    assert err[-1] > 10 * err[: T // 4].max()
+
+
+def test_selective_scan_error_bounded_in_practice():
+    """the selective (time-varying) case the paper actually quantizes:
+    errors at the SSM output stay bounded when Δ·A < 0."""
+    import jax.numpy as jnp
+
+    from compile.kernels import ref
+    from compile.quant import core as qc
+
+    rng = np.random.default_rng(3)
+    Bb, T, Di, N = 1, 200, 8, 4
+    x = rng.normal(size=(Bb, T, Di)).astype(np.float32)
+    dt = (0.01 + 0.2 * rng.random((Bb, T, Di))).astype(np.float32)
+    A = -(0.5 + rng.random((Di, N))).astype(np.float32)
+    B = rng.normal(size=(Bb, T, N)).astype(np.float32)
+    C = rng.normal(size=(Bb, T, N)).astype(np.float32)
+    D = rng.normal(size=Di).astype(np.float32)
+    y0, _ = ref.selective_scan(*map(jnp.asarray, (x, dt, A, B, C, D)))
+    s = np.abs(x).max() / 127
+    xq = np.clip(np.round(x / s), -127, 127) * s
+    y1, _ = ref.selective_scan(*map(jnp.asarray, (xq, dt, A, B, C, D)))
+    err = np.abs(np.asarray(y0) - np.asarray(y1)).mean(axis=(0, 2))
+    assert err[-50:].max() < 10 * (err[:50].max() + 1e-6)

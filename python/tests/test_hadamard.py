@@ -1,0 +1,99 @@
+"""Walsh-Hadamard transform + Paley constructions (paper §3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import hadamard_util as hu
+
+
+@pytest.mark.parametrize("q", [11, 19])
+def test_paley_orthogonal(q):
+    h = hu.paley_hadamard(q)
+    n = q + 1
+    assert ((h @ h.T) == n * np.eye(n, dtype=np.int64)).all()
+    assert set(np.unique(h)) <= {-1, 1}
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 12, 16, 20, 24, 64, 96, 128, 160, 192, 256, 320])
+def test_hadamard_orthogonal(n):
+    h = hu.hadamard(n)
+    assert ((h @ h.T) == n * np.eye(n, dtype=np.int64)).all()
+
+
+@pytest.mark.parametrize(
+    "n,expect",
+    [(128, (7, 1)), (192, (4, 12)), (256, (8, 1)), (320, (4, 20)), (96, (3, 12)), (64, (6, 1))],
+)
+def test_decompose(n, expect):
+    assert hu.decompose(n) == expect
+
+
+@pytest.mark.parametrize("n", [7, 9, 15, 28 * 3])
+def test_decompose_rejects(n):
+    with pytest.raises(ValueError):
+        hu.decompose(n)
+
+
+@pytest.mark.parametrize("n", [8, 64, 96, 128, 160, 192, 256, 320])
+def test_fwht_matches_matrix(n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(5, n)).astype(np.float32)
+    want = x @ hu.hadamard(n).astype(np.float64).T  # (H x) rowwise
+    got = hu.fwht(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 96, 192, 320])
+def test_fwht_jnp_matches_numpy(n):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(n + 1)
+    x = rng.normal(size=(3, 4, n)).astype(np.float32)
+    got = np.asarray(hu.fwht_jnp(jnp.asarray(x)))
+    want = hu.fwht(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 6), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_fwht_involution_pow2(p, seed):
+    # H (H x) = n x for 2^p sizes
+    n = 2**p
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, n))
+    y = hu.fwht(hu.fwht(x))
+    np.testing.assert_allclose(y, n * x, rtol=1e-6, atol=1e-8)
+
+
+def test_energy_preservation():
+    rng = np.random.default_rng(0)
+    for n in (96, 320):
+        x = rng.normal(size=(7, n))
+        y = hu.fwht(x)
+        np.testing.assert_allclose(
+            (y**2).sum(axis=-1), n * (x**2).sum(axis=-1), rtol=1e-6
+        )
+
+
+@pytest.mark.parametrize("n", [8, 64, 96, 128, 160, 192, 256, 320])
+def test_ifwht_inverts_fwht(n):
+    """regression: Paley bases are not symmetric — the inverse must use
+    Hᵀ, or every d ∈ {96, 160, 192, 320} QuaRot path corrupts."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(4, n)).astype(np.float32)
+    back = np.asarray(hu.ifwht_jnp(hu.fwht_jnp(jnp.asarray(x))))
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-4)
+
+
+def test_outlier_spreading():
+    """The paper's motivation: a channel spike spreads to ~uniform."""
+    n = 256
+    x = np.zeros((1, n), np.float32)
+    x[0, 13] = 100.0
+    y = hu.fwht(x)
+    assert np.abs(y).max() <= 100.0 + 1e-3       # no amplification of a spike
+    assert np.abs(y).min() >= 100.0 - 1e-3       # perfectly spread (|·| = 100)

@@ -1,0 +1,210 @@
+"""L1 Pallas kernels vs their pure-jnp oracles — the core correctness
+signal for the compute layer. Hypothesis sweeps shapes/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.causal_conv import causal_conv_silu_pallas, causal_conv_silu_q_pallas
+from compile.kernels.hadamard import hadamard_quant_pallas
+from compile.kernels.matmul_i8 import matmul_i8_pallas
+from compile.kernels.rmsnorm import rmsnorm_resid_q_pallas
+from compile.kernels.selective_scan import selective_scan_pallas, selective_scan_q_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _scan_inputs(b, t, di, n, seed=0):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(b, t, di)), jnp.float32)
+    dt = jnp.asarray(np.abs(r.normal(size=(b, t, di))) * 0.1 + 0.01, jnp.float32)
+    a = -jnp.asarray(np.abs(r.normal(size=(di, n))) + 0.5, jnp.float32)
+    bb = jnp.asarray(r.normal(size=(b, t, n)), jnp.float32)
+    c = jnp.asarray(r.normal(size=(b, t, n)), jnp.float32)
+    d = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+    return x, dt, a, bb, c, d
+
+
+def _q(x, s):
+    return jnp.asarray(np.clip(np.round(np.asarray(x) / s), -128, 127).astype(np.int8))
+
+
+class TestSelectiveScan:
+    @given(
+        b=st.sampled_from([1, 2]),
+        t=st.sampled_from([1, 4, 17]),
+        di=st.sampled_from([8, 32, 96]),
+        n=st.sampled_from([4, 16]),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_fp_matches_ref(self, b, t, di, n, seed):
+        x, dt, a, bb, c, d = _scan_inputs(b, t, di, n, seed)
+        y0, h0 = ref.selective_scan(x, dt, a, bb, c, d)
+        y1, h1 = selective_scan_pallas(x, dt, a, bb, c, d)
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h0, h1, rtol=1e-4, atol=1e-5)
+
+    def test_quantized_matches_ref(self):
+        x, dt, a, bb, c, d = _scan_inputs(2, 16, 64, 16, 7)
+        sx, sa, sb, sc, sd = 0.05, 0.02, 0.03, 0.03, 0.02
+        args = (_q(x, sx), sx, dt, _q(a, sa), sa, _q(bb, sb), sb, _q(c, sc), sc, _q(d, sd), sd)
+        y0, h0 = ref.selective_scan_q(*args)
+        y1, h1 = selective_scan_q_pallas(*args)
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h0, h1, rtol=1e-4, atol=1e-5)
+
+    def test_initial_state_continuation(self):
+        """scan(T) then scan(T, h0=hT) == scan(2T) — the property the
+        serving prefill→decode chain relies on."""
+        x, dt, a, bb, c, d = _scan_inputs(1, 8, 16, 4, 3)
+        y_full, h_full = ref.selective_scan(x, dt, a, bb, c, d)
+        y1, h1 = selective_scan_pallas(x[:, :4], dt[:, :4], a, bb[:, :4], c[:, :4], d)
+        y2, h2 = selective_scan_pallas(x[:, 4:], dt[:, 4:], a, bb[:, 4:], c[:, 4:], d, h0=h1)
+        np.testing.assert_allclose(np.concatenate([y1, y2], 1), y_full, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h2, h_full, rtol=1e-4, atol=1e-5)
+
+    def test_odd_channel_count_falls_back_to_smaller_blocks(self):
+        x, dt, a, bb, c, d = _scan_inputs(1, 4, 24, 4, 9)  # 24 % 32 != 0
+        y0, _ = ref.selective_scan(x, dt, a, bb, c, d)
+        y1, _ = selective_scan_pallas(x, dt, a, bb, c, d)
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-5)
+
+
+class TestHadamardQuant:
+    @pytest.mark.parametrize("n", [64, 96, 128, 160, 192, 256, 320])
+    def test_matches_ref(self, n):
+        y = jnp.asarray(RNG.normal(size=(2, 8, n)), jnp.float32)
+        a = ref.hadamard_quant(y, 0.1)
+        b = hadamard_quant_pallas(y, 0.1)
+        assert int(np.abs(a.astype(np.int32) - b.astype(np.int32)).max()) == 0
+
+    def test_4bit(self):
+        y = jnp.asarray(RNG.normal(size=(1, 8, 64)), jnp.float32)
+        b = hadamard_quant_pallas(y, 0.5, nbits=4)
+        assert int(np.asarray(b).max()) <= 7 and int(np.asarray(b).min()) >= -8
+
+    @given(rows=st.sampled_from([1, 3, 8, 16]), seed=st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_row_counts(self, rows, seed):
+        r = np.random.default_rng(seed)
+        y = jnp.asarray(r.normal(size=(rows, 96)), jnp.float32)
+        a = ref.hadamard_quant(y, 0.2)
+        b = hadamard_quant_pallas(y, 0.2)
+        assert int(np.abs(a.astype(np.int32) - b.astype(np.int32)).max()) == 0
+
+
+class TestCausalConv:
+    def test_fp_matches_ref(self):
+        x = jnp.asarray(RNG.normal(size=(2, 12, 64)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(4, 64)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(64,)), jnp.float32)
+        np.testing.assert_allclose(
+            ref.causal_conv_silu(x, w, b), causal_conv_silu_pallas(x, w, b),
+            rtol=1e-5, atol=1e-6)
+
+    @given(t=st.sampled_from([1, 5, 16]), di=st.sampled_from([8, 32, 64]), seed=st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_quantized_matches_ref(self, t, di, seed):
+        r = np.random.default_rng(seed)
+        x = r.normal(size=(1, t, di)).astype(np.float32)
+        w = r.normal(size=(4, di)).astype(np.float32)
+        bias = jnp.asarray(r.normal(size=(di,)), jnp.float32)
+        xq, wq = _q(x, 0.05), _q(w, 0.04)
+        a = ref.causal_conv_silu_q(xq, 0.05, wq, 0.04, bias, 0.02)
+        b = causal_conv_silu_q_pallas(xq, 0.05, wq, 0.04, bias, 0.02)
+        assert int(np.abs(np.asarray(a, np.int32) - np.asarray(b, np.int32)).max()) == 0
+
+    def test_gain_applied(self):
+        """per-channel post-SiLU gain (outlier injection) must match."""
+        r = np.random.default_rng(1)
+        di = 16
+        x = r.normal(size=(1, 8, di)).astype(np.float32)
+        w = r.normal(size=(4, di)).astype(np.float32)
+        bias = jnp.zeros((di,), jnp.float32)
+        gain = jnp.asarray(np.where(np.arange(di) == 3, 50.0, 1.0), jnp.float32)
+        xq, wq = _q(x, 0.05), _q(w, 0.04)
+        a = ref.causal_conv_silu_q(xq, 0.05, wq, 0.04, bias, 0.1, gain=gain)
+        b = causal_conv_silu_q_pallas(xq, 0.05, wq, 0.04, bias, 0.1, gain=gain)
+        assert int(np.abs(np.asarray(a, np.int32) - np.asarray(b, np.int32)).max()) == 0
+        assert int(np.abs(np.asarray(a)[..., 3]).max()) > int(np.abs(np.asarray(a)[..., 4]).max())
+
+    def test_causality(self):
+        """future tokens must not affect earlier outputs."""
+        x = np.zeros((1, 8, 8), np.float32)
+        x2 = x.copy()
+        x2[0, 7, :] = 100.0
+        w = jnp.asarray(RNG.normal(size=(4, 8)), jnp.float32)
+        b = jnp.zeros((8,), jnp.float32)
+        y1 = np.asarray(causal_conv_silu_pallas(jnp.asarray(x), w, b))
+        y2 = np.asarray(causal_conv_silu_pallas(jnp.asarray(x2), w, b))
+        np.testing.assert_array_equal(y1[:, :7], y2[:, :7])
+        assert np.abs(y2[:, 7] - y1[:, 7]).max() > 0
+
+
+class TestRmsNorm:
+    @given(rows=st.sampled_from([1, 8, 24]), d=st.sampled_from([16, 64, 160]), seed=st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, rows, d, seed):
+        r = np.random.default_rng(seed)
+        xo = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        xr = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+        w = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+        a1, a2 = ref.rmsnorm_resid_q(xo, xr, w, 0.03)
+        b1, b2 = rmsnorm_resid_q_pallas(xo, xr, w, 0.03)
+        assert int(np.abs(np.asarray(a1, np.int32) - np.asarray(b1, np.int32)).max()) == 0
+        np.testing.assert_allclose(a2, b2, rtol=1e-6)
+
+    def test_residual_passthrough_exact(self):
+        xo = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
+        xr = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
+        w = jnp.ones((32,), jnp.float32)
+        _, res = rmsnorm_resid_q_pallas(xo, xr, w, 0.1)
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(xo + xr))
+
+
+class TestMatmulI8:
+    @given(
+        m=st.sampled_from([1, 7, 64]),
+        k=st.sampled_from([16, 48]),
+        n=st.sampled_from([8, 40, 64, 128]),
+        seed=st.integers(0, 30),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matches_ref(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.integers(-127, 128, size=(m, k)), jnp.int8)
+        w = jnp.asarray(r.integers(-127, 128, size=(k, n)), jnp.int8)
+        a = ref.matmul_i8(x, w, 0.1, 0.2)
+        b = matmul_i8_pallas(x, w, 0.1, 0.2)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_bias(self):
+        r = np.random.default_rng(9)
+        x = jnp.asarray(r.integers(-127, 128, size=(3, 8)), jnp.int8)
+        w = jnp.asarray(r.integers(-127, 128, size=(8, 16)), jnp.int8)
+        bias = jnp.asarray(r.normal(size=(16,)), jnp.float32)
+        a = ref.matmul_i8(x, w, 0.1, 0.2, bias)
+        b = matmul_i8_pallas(x, w, 0.1, 0.2, bias)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_i32_accumulation_no_overflow(self):
+        """worst-case int8 products must accumulate exactly in i32."""
+        k = 512
+        x = jnp.full((1, k), 127, jnp.int8)
+        w = jnp.full((k, 8), 127, jnp.int8)
+        out = matmul_i8_pallas(x, w, 1.0, 1.0)
+        assert float(out[0, 0]) == 127.0 * 127.0 * k
+
+    def test_batched_leading_dims(self):
+        r = np.random.default_rng(11)
+        x = jnp.asarray(r.integers(-10, 10, size=(2, 5, 16)), jnp.int8)
+        w = jnp.asarray(r.integers(-10, 10, size=(16, 8)), jnp.int8)
+        a = ref.matmul_i8(x, w, 0.5, 0.5)
+        b = matmul_i8_pallas(x, w, 0.5, 0.5)
+        assert b.shape == (2, 5, 8)
+        np.testing.assert_allclose(a, b, rtol=1e-6)

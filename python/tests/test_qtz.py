@@ -1,0 +1,52 @@
+"""qtz container format round-trips."""
+
+import numpy as np
+import pytest
+
+from compile import qtz
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    p = str(tmp_path / "t.qtz")
+    tensors = {
+        "f32": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "i8": np.array([-128, 0, 127], dtype=np.int8),
+        "i32": np.array([[2**30, -5]], dtype=np.int32),
+        "u16": np.array([0, 65535], dtype=np.uint16),
+        "i64": np.array([2**40], dtype=np.int64),
+        "u8": np.frombuffer(b"hello", dtype=np.uint8),
+    }
+    qtz.save(p, tensors)
+    back = qtz.load(p)
+    assert list(back.keys()) == list(tensors.keys())
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype.itemsize == tensors[k].dtype.itemsize
+
+
+def test_scalar_and_empty(tmp_path):
+    p = str(tmp_path / "s.qtz")
+    qtz.save(p, {"scalar": np.float32(3.5), "empty": np.zeros((0, 4), np.float32)})
+    back = qtz.load(p)
+    assert back["scalar"].shape == ()
+    assert float(back["scalar"]) == 3.5
+    assert back["empty"].shape == (0, 4)
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.qtz"
+    p.write_bytes(b"NOPE1234")
+    with pytest.raises(ValueError):
+        qtz.load(str(p))
+
+
+def test_unsupported_dtype():
+    with pytest.raises(ValueError):
+        qtz.dtype_code(np.dtype(np.float64))
+
+
+def test_preserves_order(tmp_path):
+    p = str(tmp_path / "o.qtz")
+    names = [f"t{i}" for i in range(20)]
+    qtz.save(p, {n: np.array([i], np.int32) for i, n in enumerate(names)})
+    assert list(qtz.load(p).keys()) == names

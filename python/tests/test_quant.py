@@ -1,0 +1,137 @@
+"""Quantization primitives (paper Eq. 2 + Table 9 variants)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import core as qc
+
+
+class TestSymmetric:
+    def test_roundtrip_error_bounded_by_half_step(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=1000), jnp.float32)
+        s = float(qc.scale_sym(float(jnp.abs(x).max()), 8))
+        xq = qc.fake_quant_sym(x, s, 8)
+        assert float(jnp.abs(x - xq).max()) <= s / 2 + 1e-7
+
+    def test_range_clamp(self):
+        x = jnp.asarray([1e6, -1e6], jnp.float32)
+        q = qc.quantize_sym(x, 1.0, 8)
+        assert int(q[0]) == 127 and int(q[1]) == -128
+
+    @given(st.integers(2, 8), st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_codes_in_range_any_bitwidth(self, nbits, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=64) * 10, jnp.float32)
+        s = float(qc.scale_sym(float(jnp.abs(x).max()), nbits))
+        q = qc.quantize_sym(x, s, nbits, dtype=jnp.int32)
+        assert int(q.max()) <= qc.qmax(nbits)
+        assert int(q.min()) >= qc.qmin(nbits)
+
+    def test_zero_scale_guard(self):
+        s = qc.scale_sym(0.0, 8)
+        assert s > 0
+
+
+class TestPercentile:
+    def test_percentile_ignores_outliers(self):
+        x = np.full(100_000, 0.5, np.float32)
+        x[:5] = 50.0
+        assert qc.percentile_amax(x, 99.9) < 1.0
+        assert qc.percentile_amax(x, 100.0) == 50.0
+
+    def test_monotone_in_p(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=10000)
+        vals = [qc.percentile_amax(x, p) for p in (99.0, 99.9, 99.99, 100.0)]
+        assert vals == sorted(vals)
+
+
+class TestAsymmetric:
+    def test_recovers_skewed_range(self):
+        x = jnp.asarray(np.linspace(-0.1, 3.0, 128), jnp.float32)
+        s, z = qc.asym_params(-0.1, 3.0, 8)
+        xr = qc.fake_quant_asym(x, s, z, 8)
+        assert float(jnp.abs(x - xr).max()) < s + 1e-6
+
+    def test_asym_beats_sym_on_skewed_data(self):
+        rng = np.random.default_rng(2)
+        x = np.abs(rng.normal(size=4096)).astype(np.float32) + 1.0  # all ≥ 1
+        xj = jnp.asarray(x)
+        s_sym = float(qc.scale_sym(float(np.abs(x).max()), 8))
+        err_sym = float(jnp.mean((xj - qc.fake_quant_sym(xj, s_sym, 8)) ** 2))
+        s, z = qc.asym_params(float(x.min()), float(x.max()), 8)
+        err_asym = float(jnp.mean((xj - qc.fake_quant_asym(xj, s, z, 8)) ** 2))
+        assert err_asym < err_sym
+
+
+class TestLog2:
+    def test_small_values_survive(self):
+        """log2 keeps small magnitudes that a skewed uniform grid kills."""
+        x = jnp.asarray([0.001, 0.01, 0.1, 1.0, 10.0], jnp.float32)
+        amax = 10.0
+        uni = qc.fake_quant_sym(x, float(qc.scale_sym(amax, 8)), 8)
+        log = qc.fake_quant_log2(x, amax, 8)
+        # relative error of the small entries
+        rel_uni = float(jnp.abs(uni[0] - x[0]) / x[0])
+        rel_log = float(jnp.abs(log[0] - x[0]) / x[0])
+        assert rel_log < rel_uni
+
+    def test_sign_preserved(self):
+        x = jnp.asarray([-0.5, 0.5], jnp.float32)
+        y = qc.fake_quant_log2(x, 1.0, 8)
+        assert float(y[0]) < 0 < float(y[1])
+
+
+class TestDynamic:
+    def test_dynamic_scale_tracks_tensor(self):
+        x = jnp.asarray([0.1, -0.2, 0.05], jnp.float32)
+        _, s = qc.dynamic_fake_quant(x, 8)
+        assert abs(float(s) - 0.2 / 127) < 1e-9
+
+
+class TestWeightQuant:
+    def test_per_tensor(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(size=(32, 16)).astype(np.float32)
+        q, s = qc.quantize_weight_np(w, 8)
+        assert q.dtype == np.int8
+        np.testing.assert_allclose(q.astype(np.float32) * s, w, atol=s)
+
+    def test_per_channel_tighter_than_per_tensor(self):
+        rng = np.random.default_rng(4)
+        w = rng.normal(size=(16, 8)).astype(np.float32)
+        w[0] *= 100.0  # one huge row
+        q_t, s_t = qc.quantize_weight_np(w, 8)
+        q_c, s_c = qc.quantize_weight_perchannel_np(w, axis=0, nbits=8)
+        err_t = np.abs(q_t.astype(np.float32) * s_t - w)[1:].max()
+        err_c = np.abs(q_c.astype(np.float32) * s_c - w)[1:].max()
+        assert err_c < err_t
+
+    def test_low_bit_codes(self):
+        w = np.linspace(-1, 1, 64).astype(np.float32).reshape(8, 8)
+        q, _ = qc.quantize_weight_np(w, 2)
+        assert set(np.unique(q)) <= {-2, -1, 0, 1}
+
+
+class TestMixed:
+    def test_llm_int8_outlier_split(self):
+        from compile.quant.mixed import matmul_mixed, outlier_columns, split_weight
+
+        rng = np.random.default_rng(5)
+        k, n = 32, 16
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        x = rng.normal(size=(4, k)).astype(np.float32)
+        chan = np.abs(x).max(axis=0)
+        chan[3] = 100.0
+        x[:, 3] = rng.normal(size=4) * 100
+        o = outlier_columns(chan, threshold=6.0)
+        assert 3 in o
+        parts = split_weight(w, o)
+        s_rest = float(np.abs(np.delete(x, o, axis=1)).max() / 127)
+        y = np.asarray(matmul_mixed(jnp.asarray(x), parts, s_rest))
+        np.testing.assert_allclose(y, x @ w, rtol=0.05, atol=0.2)

@@ -1,0 +1,103 @@
+"""Pythia-like Transformer baseline: KV-cache decode consistency,
+quantization path, and SmoothQuant folding."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as dm
+from compile import transformer as tr
+
+CFG = tr.TransformerTier("ptiny", "Pythia-tiny", d_model=32, n_layer=2, n_head=2, max_ctx=64)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = {k: jnp.asarray(v) for k, v in tr.init_params(CFG, seed=3).items()}
+    lm, _ = dm.make_corpora()
+    stream = dm.token_stream(lm, 4000, seed=9)
+    return params, stream
+
+
+def test_shapes(setup):
+    params, stream = setup
+    toks = jnp.asarray(stream[None, :16].astype(np.int32))
+    logits, k, v = tr.forward_fp(CFG, params, toks)
+    assert logits.shape == (1, 16, 256)
+    assert k.shape == (2, 1, 64, 2, 16)
+
+
+def test_prefill_decode_consistency(setup):
+    """prefill T then decode steps == prefill T+k (the KV-cache chain
+    the Fig 1b bench drives)."""
+    params, stream = setup
+    toks = jnp.asarray(stream[None, :20].astype(np.int32))
+    full, _, _ = tr.forward_fp(CFG, params, toks)
+    l8, k, v = tr.forward_fp(CFG, params, toks[:, :16])
+    outs = []
+    for i in range(16, 20):
+        li, k, v = tr.forward_fp(CFG, params, toks[:, i : i + 1], k, v, cache_len=i)
+        outs.append(np.asarray(li[:, 0]))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(full[:, 16:]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_causality(setup):
+    params, stream = setup
+    t1 = stream[:16].astype(np.int32).copy()
+    t2 = t1.copy()
+    t2[-1] = (t2[-1] + 7) % 250 + 4
+    l1, _, _ = tr.forward_fp(CFG, params, jnp.asarray(t1[None]))
+    l2, _, _ = tr.forward_fp(CFG, params, jnp.asarray(t2[None]))
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]), rtol=1e-5)
+    assert np.abs(np.asarray(l1[:, -1]) - np.asarray(l2[:, -1])).max() > 1e-3
+
+
+@pytest.mark.parametrize("alpha", [None, 0.5])
+def test_quantized_close_to_fp(setup, alpha):
+    params, stream = setup
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    wq, wsc, asc = tr.calibrate_and_quantize(
+        CFG, np_params, stream, "w8a8", n_samples=8, seqlen=32, smooth_alpha=alpha)
+    wq = {k: jnp.asarray(v) for k, v in wq.items()}
+    toks = jnp.asarray(stream[None, :24].astype(np.int32))
+    fp, _, _ = tr.forward_fp(CFG, params, toks)
+    q, _, _ = tr.forward_q(CFG, "w8a8", None, wq, wsc, asc, toks)
+    agree = (np.argmax(np.asarray(q), -1) == np.argmax(np.asarray(fp), -1)).mean()
+    # attention tensors are robust to W8A8 (the paper's Fig 10 claim)
+    assert agree > 0.7, f"alpha={alpha}: top-1 agreement {agree}"
+
+
+def test_jamba_forward_and_combos():
+    """Jamba hybrid: fp forward finite; each Table 4 combo jittable and
+    finite; fp/fp/fp combo equals plain forward."""
+    import jax
+
+    from compile import jamba as jm
+
+    cfg = jm.JambaTier("jt", d_model=32, n_layer=2, n_head=2)
+    params = jm.init_params(cfg, seed=1)
+    lm, _ = dm.make_corpora()
+    stream = dm.token_stream(lm, 3000, seed=4)
+    toks = jnp.asarray(stream[None, :24].astype(np.int32))
+    P = {k: jnp.asarray(v) for k, v in params.items()}
+    base = jm.forward_fp(cfg, P, toks)
+    assert np.isfinite(np.asarray(base)).all()
+    sites, chan = jm.calibrate(cfg, params, stream, n_samples=8, seqlen=24)
+    fwd = jm.build_combo(cfg, params, sites, chan, "fp", "fp", "fp")
+    np.testing.assert_allclose(np.asarray(fwd(toks)), np.asarray(base), rtol=1e-4, atol=1e-4)
+    for combo in jm.TABLE4_COMBOS[1:]:
+        f = jm.build_combo(cfg, params, sites, chan, *combo)
+        out = jax.jit(f)(toks)
+        assert np.isfinite(np.asarray(out)).all(), combo
+
+
+def test_moe_top_k_mass():
+    """router keeps exactly top-k experts with renormalized weights."""
+    from compile import jamba as jm
+
+    cfg = jm.JambaTier("jt", d_model=16, n_layer=1, n_head=2, n_experts=4, top_k=2)
+    params = {k: jnp.asarray(v) for k, v in jm.init_params(cfg, seed=2).items()}
+    h = jnp.asarray(np.random.default_rng(0).normal(size=(1, 4, 16)), jnp.float32)
+    out = jm._moe_block(cfg, params, "layers.0.", h)
+    assert np.isfinite(np.asarray(out)).all()

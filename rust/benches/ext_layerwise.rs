@@ -1,0 +1,90 @@
+//! Extension experiment (paper §D future work): "layers closer to the
+//! model output have larger outlier values, suggesting that different
+//! quantization schemes can be applied to the earlier layers."
+//!
+//! We probe it: quantize the SSM I/O of (a) all layers, (b) only the
+//! first half, (c) only the last half — with and without the Hadamard
+//! treatment — and score lambada-synth. If the paper's conjecture
+//! holds, quantizing only EARLY layers costs much less than only LATE
+//! layers, and the gap shrinks once the Hadamard rotation handles the
+//! late-layer outliers.
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::coordinator::sampler::argmax;
+use quamba::data::{load_tasks, Example};
+use quamba::ssm::mamba::{MambaModel, MambaTier, QuantSites};
+
+fn main() {
+    let Some(rt) = open_runtime_or_skip("ext_layerwise") else { return };
+    let mani = rt.manifest();
+    let tier_name = mani.tiers.keys().filter(|t| *t != "jamba").last().cloned().unwrap();
+    let tinfo = mani.tiers[&tier_name].clone();
+    let q = rt.weight_qtz(&format!("{tier_name}_fp16")).expect("weights");
+    let model = MambaModel::from_qtz(
+        MambaTier {
+            name: tinfo.name.clone(),
+            d_model: tinfo.d_model,
+            n_layer: tinfo.n_layer,
+            d_state: tinfo.d_state,
+            d_conv: tinfo.d_conv,
+            d_inner: tinfo.d_inner,
+            dt_rank: tinfo.dt_rank,
+            vocab: tinfo.vocab,
+        },
+        &q,
+    )
+    .expect("model");
+    let tasks = load_tasks(&mani.data["tasks"]).expect("tasks");
+    let lambada = tasks.iter().find(|t| t.name == "lambada_synth").unwrap();
+    let examples: Vec<(&Vec<u16>, u16)> = lambada
+        .examples
+        .iter()
+        .take(iters(30))
+        .filter_map(|e| match e {
+            Example::ExactLast { prompt, target } => Some((prompt, target[0])),
+            _ => None,
+        })
+        .collect();
+    let acc = |sites: &QuantSites| -> f64 {
+        let mut hit = 0;
+        for (prompt, target) in &examples {
+            let logits = model.forward(prompt, sites, None);
+            let v = tinfo.vocab;
+            if argmax(&logits[(prompt.len() - 1) * v..prompt.len() * v]) == *target as usize {
+                hit += 1;
+            }
+        }
+        hit as f64 / examples.len() as f64
+    };
+    let l = tinfo.n_layer;
+    let early: Vec<bool> = (0..l).map(|i| i < l / 2).collect();
+    let late: Vec<bool> = (0..l).map(|i| i >= l / 2).collect();
+    let base = |mask: Option<Vec<bool>>, had: bool| QuantSites {
+        bits: 8,
+        x_ssm: true,
+        gated: true,
+        x_percentile: 100.0,
+        y_hadamard: had,
+        layer_mask: mask,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        &format!("Extension — layer-selective SSM I/O quantization, tier {tier_name}"),
+        &["configuration", "naive", "+ Hadamard on y"],
+    );
+    t.row(vec!["fp32 (none)".into(), pct(acc(&QuantSites::none())), "-".into()]);
+    for (label, mask) in [
+        ("all layers", None),
+        ("early half only", Some(early)),
+        ("late half only", Some(late)),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            pct(acc(&base(mask.clone(), false))),
+            pct(acc(&base(mask, true))),
+        ]);
+    }
+    t.print();
+    println!("\nConjecture check (paper §D): late-layer quantization should cost more\n\
+              than early-layer (bigger outliers), and Hadamard should close it.");
+}

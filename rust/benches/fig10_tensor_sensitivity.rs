@@ -1,0 +1,136 @@
+//! Paper Figure 10 (+§I): per-tensor quantization sensitivity, Mamba
+//! vs the iso-size Transformer, measured as last-word accuracy on
+//! lambada-synth prompts through the rust reference simulators (which
+//! can fake-quantize any single site — the instrument HLO graphs can't
+//! easily provide).
+
+use quamba::attn::{AttnModel, AttnQuantSites, AttnTier};
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::{load_tasks, Example};
+use quamba::ssm::mamba::{MambaModel, MambaTier, QuantSites};
+
+fn main() {
+    let Some(rt) = open_runtime_or_skip("fig10_tensor_sensitivity") else { return };
+    let mani = rt.manifest();
+    let tasks = load_tasks(&mani.data["tasks"]).expect("tasks");
+    let lambada = tasks.iter().find(|t| t.name == "lambada_synth").expect("lambada");
+    let n_ex = iters(30);
+    let examples: Vec<(&Vec<u16>, u16)> = lambada
+        .examples
+        .iter()
+        .take(n_ex)
+        .filter_map(|e| match e {
+            Example::ExactLast { prompt, target } => Some((prompt, target[0])),
+            _ => None,
+        })
+        .collect();
+
+    // --- Mamba side (largest tier available) ---
+    let tier_name = mani
+        .tiers
+        .keys()
+        .filter(|t| *t != "jamba")
+        .last()
+        .cloned()
+        .unwrap();
+    let tinfo = mani.tiers[&tier_name].clone();
+    let q = rt.weight_qtz(&format!("{tier_name}_fp16")).expect("weights");
+    let model = MambaModel::from_qtz(
+        MambaTier {
+            name: tinfo.name.clone(),
+            d_model: tinfo.d_model,
+            n_layer: tinfo.n_layer,
+            d_state: tinfo.d_state,
+            d_conv: tinfo.d_conv,
+            d_inner: tinfo.d_inner,
+            dt_rank: tinfo.dt_rank,
+            vocab: tinfo.vocab,
+        },
+        &q,
+    )
+    .expect("model");
+
+    let acc_mamba = |sites: &QuantSites| -> f64 {
+        let mut hit = 0;
+        for (prompt, target) in &examples {
+            let logits = model.forward(prompt, sites, None);
+            let v = tinfo.vocab;
+            let row = &logits[(prompt.len() - 1) * v..prompt.len() * v];
+            let arg = quamba::coordinator::sampler::argmax(row);
+            if arg == *target as usize {
+                hit += 1;
+            }
+        }
+        hit as f64 / examples.len() as f64
+    };
+
+    let mut t = Table::new(
+        &format!("Figure 10 analog — quantize ONE tensor, Mamba tier {tier_name}"),
+        &["site", "lambada acc"],
+    );
+    t.row(vec!["none (fp32)".into(), pct(acc_mamba(&QuantSites::none()))]);
+    let cases: Vec<(&str, Box<dyn Fn(&mut QuantSites)>)> = vec![
+        ("x (SSM in)", Box::new(|s: &mut QuantSites| s.x_ssm = true)),
+        ("y (SSM out)", Box::new(|s| s.y_out = true)),
+        ("gated", Box::new(|s| s.gated = true)),
+        ("B", Box::new(|s| s.b = true)),
+        ("C", Box::new(|s| s.c = true)),
+        ("dt", Box::new(|s| s.dt = true)),
+        ("conv in", Box::new(|s| s.conv_in = true)),
+    ];
+    for (label, set) in cases {
+        let mut s = QuantSites::none();
+        set(&mut s);
+        t.row(vec![label.into(), pct(acc_mamba(&s))]);
+    }
+    t.print();
+
+    // --- Transformer side ---
+    if let Some((pname, pt)) = mani.transformer_tiers.iter().next() {
+        if let Ok(q) = rt.weight_qtz(&format!("{pname}_fp16")) {
+            let am = AttnModel::from_qtz(
+                AttnTier {
+                    name: pt.name.clone(),
+                    d_model: pt.d_model,
+                    n_layer: pt.n_layer,
+                    n_head: pt.n_head,
+                    vocab: pt.vocab,
+                },
+                &q,
+            )
+            .expect("attn");
+            let acc_attn = |sites: &AttnQuantSites| -> f64 {
+                let mut hit = 0;
+                for (prompt, target) in &examples {
+                    let logits = am.forward(prompt, sites);
+                    let v = pt.vocab;
+                    let row = &logits[(prompt.len() - 1) * v..prompt.len() * v];
+                    if quamba::coordinator::sampler::argmax(row) == *target as usize {
+                        hit += 1;
+                    }
+                }
+                hit as f64 / examples.len() as f64
+            };
+            let mut t2 = Table::new(
+                &format!("Figure 10 analog — quantize ONE tensor, Transformer {pname}"),
+                &["site", "lambada acc"],
+            );
+            t2.row(vec!["none (fp32)".into(), pct(acc_attn(&AttnQuantSites::none()))]);
+            let cases: Vec<(&str, Box<dyn Fn(&mut AttnQuantSites)>)> = vec![
+                ("h", Box::new(|s: &mut AttnQuantSites| s.h_in = true)),
+                ("qkv", Box::new(|s| s.qkv = true)),
+                ("attn y", Box::new(|s| s.attn_y = true)),
+                ("mlp in", Box::new(|s| s.mlp_in = true)),
+                ("h_d", Box::new(|s| s.h_d = true)),
+            ];
+            for (label, set) in cases {
+                let mut s = AttnQuantSites::none();
+                set(&mut s);
+                t2.row(vec![label.into(), pct(acc_attn(&s))]);
+            }
+            t2.print();
+        }
+    }
+    println!("\nShape check vs paper: the SSM x/y/gated sites cost accuracy; the\n\
+              attention sites are robust (h_d is the transformer's sore spot).");
+}

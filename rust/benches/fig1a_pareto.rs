@@ -1,0 +1,56 @@
+//! Paper Figure 1(a): the accuracy-vs-latency Pareto frontier. For
+//! each method on the largest tier, measure decode TPOT and average
+//! zero-shot accuracy; Quamba should sit on the frontier (QuaRot-SSM
+//! matches accuracy but pays the extra-transform latency).
+
+use quamba::bench_support::{bench_ms, iters, ms, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::{average_accuracy, run_tasks};
+use quamba::tensor::{DType, Tensor};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("fig1a_pareto") else { return };
+    let tier = std::env::var("QUAMBA_TIER").unwrap_or_else(|_| "m2p8".into());
+    let Some(tinfo) = rt.manifest().tiers.get(&tier).cloned() else {
+        println!("[skip] tier {tier} missing");
+        return;
+    };
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let methods = ["fp16", "w8a8_static", "w8a8_dynamic", "smoothquant", "quarot", "quamba"];
+    let mut t = Table::new(
+        &format!("Figure 1(a) analog — accuracy vs TPOT, tier {tier}"),
+        &["method", "TPOT (ms)", "avg acc", "size (MB)"],
+    );
+    let mut points: Vec<(String, f64, f64)> = Vec::new();
+    for m in methods {
+        let Some(g) = rt.manifest().find_graph(&tier, m, "decode", 1, None) else { continue };
+        let gname = g.name.clone();
+        rt.load(&gname).expect("compile");
+        let tok = Tensor::from_i32(&[1, 1], &[5]);
+        let conv = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_conv - 1, tinfo.d_inner]);
+        let ssm = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_inner, tinfo.d_state]);
+        let lat = bench_ms(3, iters(30), || {
+            rt.execute(&gname, &[tok.clone(), conv.clone(), ssm.clone()]).unwrap();
+        });
+        let acc = run_tasks(&mut rt, &tier, m, &tasks, iters(30))
+            .map(|r| average_accuracy(&r))
+            .unwrap_or(f64::NAN);
+        let size = rt
+            .model_bytes(&format!("{tier}_{m}"))
+            .map(|b| format!("{:.2}", b as f64 / 1e6))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![m.to_string(), ms(lat.mean), pct(acc), size]);
+        points.push((m.to_string(), lat.mean, acc));
+    }
+    t.print();
+    // report who is Pareto-optimal (no point with both lower latency
+    // and higher accuracy)
+    let frontier: Vec<&str> = points
+        .iter()
+        .filter(|(_, l, a)| {
+            !points.iter().any(|(_, l2, a2)| l2 < l && a2 > a)
+        })
+        .map(|(m, _, _)| m.as_str())
+        .collect();
+    println!("\nPareto frontier: {frontier:?}");
+}

@@ -1,0 +1,127 @@
+//! Paper Figure 1(b): time-to-last-token (prefill L/2 + generate L/2)
+//! as a function of sequence length, Mamba-FP vs Quamba vs the
+//! Pythia-like Transformer. The SSM advantage widens with length (no
+//! KV cache, constant-size state updates).
+
+use quamba::bench_support::{iters, ms, open_runtime_or_skip, Table};
+use quamba::tensor::{DType, Tensor};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("fig1b_ttlt") else { return };
+    let tier = "m2p8";
+    let ttier = "p2p8";
+    let Some(tinfo) = rt.manifest().tiers.get(tier).cloned() else {
+        println!("[skip] {tier} missing");
+        return;
+    };
+    let seqs: Vec<usize> = {
+        let mut s: Vec<usize> = rt
+            .manifest()
+            .graphs
+            .values()
+            .filter(|g| g.tier == tier && g.kind == "prefill" && g.batch == 1)
+            .map(|g| g.seq)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    let mut header = vec!["system".to_string()];
+    header.extend(seqs.iter().map(|s| format!("L={} (pre {} + gen {})", 2 * s, s, s)));
+    let hdr: Vec<&str> = header.iter().map(|x| x.as_str()).collect();
+    let mut t = Table::new("Figure 1(b) analog — TTLT (ms) vs sequence length", &hdr);
+
+    for method in ["fp16", "quamba"] {
+        let mut row = vec![format!("mamba/{method}")];
+        for &seq in &seqs {
+            row.push(mamba_ttlt(&mut rt, tier, &tinfo, method, seq).map(ms).unwrap_or("-".into()));
+        }
+        t.row(row);
+    }
+    if let Some(pt) = rt.manifest().transformer_tiers.get(ttier).cloned() {
+        let mut row = vec![format!("pythia/fp16 (KV cache)")];
+        for &seq in &seqs {
+            row.push(pythia_ttlt(&mut rt, ttier, &pt, seq).map(ms).unwrap_or("-".into()));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\nShape check vs paper: SSM TTLT grows ~linearly; transformer decode cost\n\
+              grows with live context, widening the gap at long L.");
+}
+
+fn mamba_ttlt(
+    rt: &mut quamba::runtime::Runtime,
+    tier: &str,
+    tinfo: &quamba::config::TierInfo,
+    method: &str,
+    seq: usize,
+) -> Option<f64> {
+    let pf = rt.manifest().find_graph(tier, method, "prefill", 1, Some(seq))?;
+    if pf.seq != seq {
+        return None;
+    }
+    let pf = pf.name.clone();
+    let dec = rt.manifest().find_graph(tier, method, "decode", 1, None)?.name.clone();
+    rt.load(&pf).ok()?;
+    rt.load(&dec).ok()?;
+    let reps = iters(3);
+    let mut total = 0.0;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let toks: Vec<i32> = (0..seq as i32).map(|i| (i % 200) + 4).collect();
+        let tok = Tensor::from_i32(&[1, seq], &toks);
+        let conv = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_conv - 1, tinfo.d_inner]);
+        let ssm = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_inner, tinfo.d_state]);
+        let out = rt.execute(&pf, &[tok, conv, ssm]).ok()?;
+        let (mut conv, mut ssm) = (out[1].clone(), out[2].clone());
+        // generate `seq` tokens
+        for i in 0..seq {
+            let tok = Tensor::from_i32(&[1, 1], &[((i % 200) + 4) as i32]);
+            let out = rt.execute(&dec, &[tok, conv, ssm]).ok()?;
+            conv = out[1].clone();
+            ssm = out[2].clone();
+        }
+        total += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    Some(total / reps as f64)
+}
+
+fn pythia_ttlt(
+    rt: &mut quamba::runtime::Runtime,
+    tier: &str,
+    pt: &quamba::config::TransformerTierInfo,
+    seq: usize,
+) -> Option<f64> {
+    let pf = rt.manifest().find_graph(tier, "fp16", "prefill", 1, Some(seq))?;
+    if pf.seq != seq {
+        return None;
+    }
+    let pf = pf.name.clone();
+    let dec = rt.manifest().find_graph(tier, "fp16", "decode", 1, None)?.name.clone();
+    rt.load(&pf).ok()?;
+    rt.load(&dec).ok()?;
+    let shape = [pt.n_layer, 1, pt.max_ctx, pt.n_head, pt.d_model / pt.n_head];
+    let reps = iters(2);
+    let mut total = 0.0;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let toks: Vec<i32> = (0..seq as i32).map(|i| (i % 200) + 4).collect();
+        let tok = Tensor::from_i32(&[1, seq], &toks);
+        let k = Tensor::zeros(DType::F32, &shape);
+        let v = Tensor::zeros(DType::F32, &shape);
+        let clen = Tensor::from_i32(&[], &[0]);
+        let out = rt.execute(&pf, &[tok, k, v, clen]).ok()?;
+        let (mut k, mut v) = (out[1].clone(), out[2].clone());
+        for i in 0..seq {
+            let pos = (seq + i).min(pt.max_ctx - 1);
+            let tok = Tensor::from_i32(&[1, 1], &[((i % 200) + 4) as i32]);
+            let clen = Tensor::from_i32(&[], &[pos as i32]);
+            let out = rt.execute(&dec, &[tok, k, v, clen]).ok()?;
+            k = out[1].clone();
+            v = out[2].clone();
+        }
+        total += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    Some(total / reps as f64)
+}

@@ -1,0 +1,55 @@
+//! Paper Figure 1(c): per-request memory vs context length. The SSM
+//! state is constant; the transformer KV cache grows linearly. Both
+//! pools are the coordinator's real state managers, so these are the
+//! bytes the serving engine actually allocates, plus the resident
+//! model bytes per precision.
+
+use quamba::bench_support::{open_runtime_or_skip, Table};
+use quamba::coordinator::state::{KvCachePool, SsmStatePool};
+
+fn main() {
+    let Some(rt) = open_runtime_or_skip("fig1c_memory") else { return };
+    let mani = rt.manifest();
+    let ctxs = [128usize, 256, 512, 1024, 2048];
+
+    let mut header = vec!["system (per-request state)".to_string()];
+    header.extend(ctxs.iter().map(|c| format!("ctx={c}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Figure 1(c) analog — per-request state bytes vs context (KB)", &hdr);
+
+    for tier in mani.tiers.values().filter(|t| t.name != "jamba") {
+        let pool = SsmStatePool::new(tier, 1);
+        let kb = pool.bytes_per_request() as f64 / 1024.0;
+        let mut row = vec![format!("mamba {} (constant)", tier.name)];
+        for _ in ctxs {
+            row.push(format!("{kb:.1}"));
+        }
+        t.row(row);
+    }
+    for pt in mani.transformer_tiers.values() {
+        let pool = KvCachePool::new(pt, 1, usize::MAX);
+        let mut row = vec![format!("pythia {} (KV cache)", pt.name)];
+        for &c in &ctxs {
+            row.push(format!("{:.1}", pool.bytes_per_request(c) as f64 / 1024.0));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // resident model bytes per precision (the other Figure 1(c) axis)
+    let mut t2 = Table::new("Resident model bytes (MB)", &["bundle", "fp32", "quamba W8A8", "ratio"]);
+    for tier in mani.tiers.keys().filter(|t| *t != "jamba") {
+        let fp = mani.weights.get(&format!("{tier}_fp16")).map(|w| w.bytes);
+        let q = mani.weights.get(&format!("{tier}_quamba")).map(|w| w.bytes);
+        if let (Some(fp), Some(q)) = (fp, q) {
+            t2.row(vec![
+                tier.clone(),
+                format!("{:.2}", fp as f64 / 1e6),
+                format!("{:.2}", q as f64 / 1e6),
+                format!("{:.2}x", fp as f64 / q as f64),
+            ]);
+        }
+    }
+    t2.print();
+    println!("\nShape check vs paper: SSM rows flat in ctx; KV rows linear; W8A8 ≈ half(+) size.");
+}

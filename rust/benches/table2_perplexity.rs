@@ -1,0 +1,41 @@
+//! Paper Table 2: perplexity of every quantization method across the
+//! Mamba tier family, on the two held-out synthetic corpora
+//! (wiki-synth ↔ WikiText2, pile-synth ↔ Pile). Expected shape: naive
+//! static collapses, dynamic degrades, SmQ-SSM partially recovers,
+//! QuaRot-SSM ≈ Quamba ≈ FP.
+
+use quamba::bench_support::{f2, iters, open_runtime_or_skip, Table};
+use quamba::data::load_stream;
+use quamba::eval::perplexity;
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table2_perplexity") else { return };
+    let wiki = load_stream(&rt.manifest().data["wiki_eval"]).expect("wiki stream");
+    let pile = load_stream(&rt.manifest().data["pile_eval"]).expect("pile stream");
+    let tiers = quamba::bench_support::tier_order(&rt);
+    let methods = ["fp16", "w8a8_dynamic", "w8a8_static", "smoothquant", "quarot", "quamba"];
+    let windows = iters(12);
+
+    for stream_name in ["wiki-synth", "pile-synth"] {
+        let stream = if stream_name == "wiki-synth" { &wiki } else { &pile };
+        let mut header = vec!["method".to_string()];
+        header.extend(tiers.iter().cloned());
+        let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Table 2 analog — {stream_name} perplexity (lower is better)"),
+            &hdr,
+        );
+        for m in methods {
+            let mut row = vec![m.to_string()];
+            for tier in &tiers {
+                match perplexity(&mut rt, tier, m, stream, windows) {
+                    Ok(r) => row.push(f2(r.ppl)),
+                    Err(_) => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("\nShape checks vs paper: static ≫ dynamic > smq > (quarot ≈ quamba ≈ fp16)");
+}

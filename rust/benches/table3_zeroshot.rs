@@ -1,0 +1,35 @@
+//! Paper Table 3: zero-shot accuracy on the six-task suite across the
+//! Mamba family × quantization methods (likelihood scoring through the
+//! deployed quantized graphs — same code path as serving).
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::{average_accuracy, run_tasks};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table3_zeroshot") else { return };
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let tiers = quamba::bench_support::tier_order(&rt);
+    let methods = ["fp16", "w8a8_dynamic", "w8a8_static", "smoothquant", "quarot", "quamba"];
+    let max_ex = iters(40);
+
+    for tier in &tiers {
+        let mut header: Vec<String> = vec!["method".into()];
+        header.extend(tasks.iter().map(|t| t.name.replace("_synth", "")));
+        header.push("avg".into());
+        let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&format!("Table 3 analog — zero-shot accuracy, tier {tier}"), &hdr);
+        for m in methods {
+            match run_tasks(&mut rt, tier, m, &tasks, max_ex) {
+                Ok(res) => {
+                    let mut row = vec![m.to_string()];
+                    row.extend(res.iter().map(|(_, a)| pct(*a)));
+                    row.push(pct(average_accuracy(&res)));
+                    table.row(row);
+                }
+                Err(_) => {}
+            }
+        }
+        table.print();
+    }
+}

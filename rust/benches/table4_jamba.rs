@@ -1,0 +1,39 @@
+//! Paper Table 4: quantizing the Jamba-like hybrid — which combination
+//! of per-block-type quantizers (attention / Mamba / MoE) keeps the
+//! model usable. Expected shape: LLM.int8 on attention+MoE is fine;
+//! LLM.int8 naively on Mamba fails; Quamba-on-Mamba recovers.
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::run_tasks;
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table4_jamba") else { return };
+    let combos = [
+        ("fp_fp_fp", "FP16 / FP16 / FP16"),
+        ("int8_fp_int8", "LLM.int8 / FP16 / LLM.int8"),
+        ("smq_fp_int8", "SmQ / FP16 / LLM.int8"),
+        ("int8_int8_int8", "LLM.int8 / LLM.int8 / LLM.int8"),
+        ("smq_quamba_int8", "SmQ / Quamba / LLM.int8"),
+        ("int8_quamba_int8", "LLM.int8 / Quamba / LLM.int8"),
+    ];
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let lambada: Vec<_> = tasks.into_iter().filter(|t| t.name == "lambada_synth").collect();
+    if lambada.is_empty() {
+        println!("[skip] lambada_synth task missing");
+        return;
+    }
+    let max_ex = iters(60);
+    let mut t = Table::new(
+        "Table 4 analog — Jamba hybrid, LAMBADA-synth accuracy",
+        &["self-attention / mamba / moe", "accuracy"],
+    );
+    for (mname, label) in combos {
+        match run_tasks(&mut rt, "jamba", mname, &lambada, max_ex) {
+            Ok(res) => t.row(vec![label.to_string(), pct(res[0].1)]),
+            Err(_) => t.row(vec![label.to_string(), "- (artifact missing)".into()]),
+        }
+    }
+    t.print();
+    println!("\nShape check vs paper: int8/int8/int8 degrades hard; */Quamba/* recovers.");
+}

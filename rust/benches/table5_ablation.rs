@@ -1,0 +1,38 @@
+//! Paper Table 5: component ablation. Average zero-shot accuracy for
+//! naive W8A8, + input percentile clipping, + output Hadamard, and the
+//! full Quamba recipe, across all tiers. Expected ordering:
+//! W8A8 < +InPer < +OutHad < Quamba ≈ FP16.
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::{average_accuracy, run_tasks};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table5_ablation") else { return };
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let tiers = quamba::bench_support::tier_order(&rt);
+    let cols = [
+        ("fp16", "FP16"),
+        ("w8a8_static", "W8A8"),
+        ("quamba_inper", "+ In Per."),
+        ("quamba_outhad", "+ Out Had."),
+        ("quamba", "Quamba"),
+    ];
+    let max_ex = iters(40);
+    let mut header = vec!["size".to_string()];
+    header.extend(cols.iter().map(|(_, l)| l.to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 5 analog — ablation, avg zero-shot accuracy", &hdr);
+    for tier in &tiers {
+        let mut row = vec![tier.clone()];
+        for (m, _) in cols {
+            match run_tasks(&mut rt, tier, m, &tasks, max_ex) {
+                Ok(res) => row.push(pct(average_accuracy(&res))),
+                Err(_) => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\nShape check vs paper: W8A8 < +InPer < +OutHad < Quamba.");
+}

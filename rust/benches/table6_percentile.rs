@@ -1,0 +1,37 @@
+//! Paper Table 6: sensitivity to the percentile p used to clip the SSM
+//! input x, scored on lambada-synth. Expected shape: p=99 over-clips
+//! (catastrophic for small tiers); high percentiles best for small
+//! models, slightly lower for the largest (more outliers to clip).
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::run_tasks;
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table6_percentile") else { return };
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let lambada: Vec<_> = tasks.into_iter().filter(|t| t.name == "lambada_synth").collect();
+    let tiers = quamba::bench_support::tier_order(&rt);
+    let cols = [
+        ("quamba_p99", "p=99"),
+        ("quamba_p99_9", "99.9"),
+        ("quamba_p99_99", "99.99"),
+        ("quamba", "99.999"),
+    ];
+    let max_ex = iters(60);
+    let mut header = vec!["size".to_string()];
+    header.extend(cols.iter().map(|(_, l)| l.to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 6 analog — percentile sweep, LAMBADA-synth accuracy", &hdr);
+    for tier in &tiers {
+        let mut row = vec![tier.clone()];
+        for (m, _) in cols {
+            match run_tasks(&mut rt, tier, m, &lambada, max_ex) {
+                Ok(res) => row.push(pct(res[0].1)),
+                Err(_) => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+}

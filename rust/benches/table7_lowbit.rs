@@ -1,0 +1,39 @@
+//! Paper Tables 7/8: low-bit-width methods ported from Transformers
+//! (Quip#-like W2A16, QuaRot W4A4) fail to hold up on the SSM, while
+//! Quamba's W8A8 stays near FP.
+
+use quamba::bench_support::{f2, iters, open_runtime_or_skip, pct, Table};
+use quamba::data::{load_stream, load_tasks};
+use quamba::eval::{average_accuracy, perplexity, run_tasks};
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table7_lowbit") else { return };
+    let tier = "m2p8";
+    if !rt.manifest().tiers.contains_key(tier) {
+        println!("[skip] tier {tier} not built");
+        return;
+    }
+    let wiki = load_stream(&rt.manifest().data["wiki_eval"]).expect("wiki");
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let rows = [
+        ("fp16", "FP16"),
+        ("w2a16_quip", "Quip#-SSM (W2A16)"),
+        ("w4a4_quarot", "QuaRot-SSM (W4A4)"),
+        ("quamba", "Quamba (W8A8)"),
+    ];
+    let mut t = Table::new(
+        "Table 7/8 analog — low-bit methods on the largest tier",
+        &["method", "wiki-synth ppl", "avg zero-shot acc"],
+    );
+    for (m, label) in rows {
+        let ppl = perplexity(&mut rt, tier, m, &wiki, iters(8))
+            .map(|r| f2(r.ppl))
+            .unwrap_or_else(|_| "-".into());
+        let acc = run_tasks(&mut rt, tier, m, &tasks, iters(30))
+            .map(|r| pct(average_accuracy(&r)))
+            .unwrap_or_else(|_| "-".into());
+        t.row(vec![label.to_string(), ppl, acc]);
+    }
+    t.print();
+    println!("\nShape check vs paper: W2A16/W4A4 degrade ≫ W8A8 Quamba.");
+}

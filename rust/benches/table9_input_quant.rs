@@ -1,0 +1,39 @@
+//! Paper Table 9: alternative 8-bit quantizers for the SSM input x
+//! (everything else per the Quamba recipe): dynamic, asymmetric
+//! percentile, log2, and the shipped symmetric percentile. Scored on
+//! lambada-synth across tiers.
+
+use quamba::bench_support::{iters, open_runtime_or_skip, pct, Table};
+use quamba::data::load_tasks;
+use quamba::eval::run_tasks;
+
+fn main() {
+    let Some(mut rt) = open_runtime_or_skip("table9_input_quant") else { return };
+    let tasks = load_tasks(&rt.manifest().data["tasks"]).expect("tasks");
+    let lambada: Vec<_> = tasks.into_iter().filter(|t| t.name == "lambada_synth").collect();
+    let tiers = quamba::bench_support::tier_order(&rt);
+    let cols = [
+        ("fp16", "FP16"),
+        ("t9_dyn", "MinMax Sym. (dynamic)"),
+        ("quamba_outhad", "MinMax Sym. (static)"),
+        ("t9_log2", "MinMax Sym. Log2"),
+        ("t9_asym", "MinMax Asym."),
+        ("quamba", "MinMax Sym. Per. (ours)"),
+    ];
+    let max_ex = iters(60);
+    let mut header = vec!["x-quantizer".to_string()];
+    header.extend(tiers.iter().cloned());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 9 analog — SSM-input quantizers, LAMBADA-synth accuracy", &hdr);
+    for (m, label) in cols {
+        let mut row = vec![label.to_string()];
+        for tier in &tiers {
+            match run_tasks(&mut rt, tier, m, &lambada, max_ex) {
+                Ok(res) => row.push(pct(res[0].1)),
+                Err(_) => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+}

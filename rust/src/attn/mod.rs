@@ -1,0 +1,216 @@
+//! Pure-rust Transformer reference (the Pythia-like comparator) — the
+//! self-attention half of the Figure 2/10/13 sensitivity analyses:
+//! quantize one tensor site at a time (h, qkv, attention output, the
+//! feed-forward hidden h_d) and measure the damage; the paper's finding
+//! is that attention tensors are robust where the SSM's x/y are not.
+//!
+//! Mirrors `python/compile/transformer.py::forward_fp` (ALiBi-biased
+//! causal attention, pre-norm, GELU MLP) over the same `.qtz` weights.
+
+use crate::quant;
+use crate::tensor::qtz::QtzFile;
+
+#[derive(Debug, Clone)]
+pub struct AttnTier {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AttnQuantSites {
+    pub bits: u32,
+    pub h_in: bool,    // attention input (post-norm)
+    pub qkv: bool,     // fused qkv projections output
+    pub attn_y: bool,  // attention output (token mixing result)
+    pub mlp_in: bool,
+    pub h_d: bool,     // MLP hidden — the transformer's outlier tensor
+}
+
+impl AttnQuantSites {
+    pub fn none() -> Self {
+        AttnQuantSites { bits: 8, ..Default::default() }
+    }
+}
+
+pub struct AttnModel {
+    pub tier: AttnTier,
+    embedding: Vec<f32>,
+    norm_f: Vec<f32>,
+    layers: Vec<Layer>,
+}
+
+struct Layer {
+    norm1: Vec<f32>,
+    wqkv: Vec<f32>, // (d, 3d)
+    wo: Vec<f32>,   // (d, d)
+    norm2: Vec<f32>,
+    w1: Vec<f32>,   // (d, ff)
+    b1: Vec<f32>,
+    w2: Vec<f32>,   // (ff, d)
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn rmsnorm_rows(x: &[f32], w: &[f32], d: usize, out: &mut [f32]) {
+    for (ri, ro) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = ri.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        for j in 0..d {
+            ro[j] = ri[j] * r * w[j];
+        }
+    }
+}
+
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let xv = x[i * k + p];
+            let wrow = &w[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+fn fq(on: bool, xs: &mut [f32], bits: u32) {
+    if on {
+        let s = quant::scale_sym(quant::amax(xs), bits);
+        quant::fake_quant_sym(xs, s, bits);
+    }
+}
+
+impl AttnModel {
+    pub fn from_qtz(tier: AttnTier, q: &QtzFile) -> Result<AttnModel, String> {
+        let g = |n: &str| q.get(n).map(|t| t.to_f32()).ok_or_else(|| format!("missing {n}"));
+        let mut layers = Vec::new();
+        for i in 0..tier.n_layer {
+            let p = format!("layers.{i}.");
+            layers.push(Layer {
+                norm1: g(&format!("{p}norm1.weight"))?,
+                wqkv: g(&format!("{p}wqkv"))?,
+                wo: g(&format!("{p}wo"))?,
+                norm2: g(&format!("{p}norm2.weight"))?,
+                w1: g(&format!("{p}w1"))?,
+                b1: g(&format!("{p}b1"))?,
+                w2: g(&format!("{p}w2"))?,
+            });
+        }
+        Ok(AttnModel {
+            embedding: g("embedding.weight")?,
+            norm_f: g("norm_f.weight")?,
+            layers,
+            tier,
+        })
+    }
+
+    /// Forward (B=1). Returns logits (T × V).
+    pub fn forward(&self, tokens: &[u16], sites: &AttnQuantSites) -> Vec<f32> {
+        let t = &self.tier;
+        let (d, hn, tl) = (t.d_model, t.n_head, tokens.len());
+        let dh = d / hn;
+        let ff = 4 * d;
+        let slopes: Vec<f32> = (0..hn).map(|i| 2f32.powf(-((i + 1) as f32) * 8.0 / hn as f32)).collect();
+        let mut resid = vec![0.0f32; tl * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            resid[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let mut h = vec![0.0f32; tl * d];
+        let mut qkv = vec![0.0f32; tl * 3 * d];
+        let mut attn_out = vec![0.0f32; tl * d];
+        let mut proj = vec![0.0f32; tl * d];
+        let mut hid = vec![0.0f32; tl * ff];
+        for layer in &self.layers {
+            rmsnorm_rows(&resid, &layer.norm1, d, &mut h);
+            fq(sites.h_in, &mut h, sites.bits);
+            matmul(&h, &layer.wqkv, tl, d, 3 * d, &mut qkv);
+            fq(sites.qkv, &mut qkv, sites.bits);
+            // attention per head, causal with ALiBi
+            attn_out.fill(0.0);
+            for head in 0..hn {
+                for qi in 0..tl {
+                    let qv = &qkv[qi * 3 * d + head * dh..qi * 3 * d + head * dh + dh];
+                    // logits over keys 0..=qi
+                    let mut w = Vec::with_capacity(qi + 1);
+                    let mut wmax = f32::NEG_INFINITY;
+                    for ki in 0..=qi {
+                        let kv = &qkv[ki * 3 * d + d + head * dh..ki * 3 * d + d + head * dh + dh];
+                        let mut dot = 0.0f32;
+                        for j in 0..dh {
+                            dot += qv[j] * kv[j];
+                        }
+                        let logit = dot / (dh as f32).sqrt() - slopes[head] * (qi - ki) as f32;
+                        wmax = wmax.max(logit);
+                        w.push(logit);
+                    }
+                    let mut z = 0.0f32;
+                    for wv in w.iter_mut() {
+                        *wv = (*wv - wmax).exp();
+                        z += *wv;
+                    }
+                    let orow = &mut attn_out[qi * d + head * dh..qi * d + head * dh + dh];
+                    for (ki, wv) in w.iter().enumerate() {
+                        let vv = &qkv[ki * 3 * d + 2 * d + head * dh..ki * 3 * d + 2 * d + head * dh + dh];
+                        let p = wv / z;
+                        for j in 0..dh {
+                            orow[j] += p * vv[j];
+                        }
+                    }
+                }
+            }
+            fq(sites.attn_y, &mut attn_out, sites.bits);
+            matmul(&attn_out, &layer.wo, tl, d, d, &mut proj);
+            for i in 0..resid.len() {
+                resid[i] += proj[i];
+            }
+            rmsnorm_rows(&resid, &layer.norm2, d, &mut h);
+            fq(sites.mlp_in, &mut h, sites.bits);
+            matmul(&h, &layer.w1, tl, d, ff, &mut hid);
+            for ti in 0..tl {
+                for j in 0..ff {
+                    hid[ti * ff + j] = gelu(hid[ti * ff + j] + layer.b1[j]);
+                }
+            }
+            fq(sites.h_d, &mut hid, sites.bits);
+            matmul(&hid, &layer.w2, tl, ff, d, &mut proj);
+            for i in 0..resid.len() {
+                resid[i] += proj[i];
+            }
+        }
+        let mut fin = vec![0.0f32; tl * d];
+        rmsnorm_rows(&resid, &self.norm_f, d, &mut fin);
+        let v = t.vocab;
+        let mut logits = vec![0.0f32; tl * v];
+        for ti in 0..tl {
+            for tok in 0..v {
+                let erow = &self.embedding[tok * d..(tok + 1) * d];
+                logits[ti * v + tok] = erow
+                    .iter()
+                    .zip(&fin[ti * d..(ti + 1) * d])
+                    .map(|(a, b)| a * b)
+                    .sum();
+            }
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+}

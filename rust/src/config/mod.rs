@@ -1,0 +1,246 @@
+//! Artifact manifest + runtime configuration.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is
+//! the single source of truth: which graphs exist, their parameter
+//! order, tier dimensions, data files. This module parses it into
+//! typed structs the runtime and coordinator consume.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+#[derive(Debug, Clone)]
+pub struct TierInfo {
+    pub name: String,
+    pub paper_name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub d_inner: usize,
+    pub dt_rank: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransformerTierInfo {
+    pub name: String,
+    pub paper_name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub max_ctx: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub family: String, // "mamba" | "transformer"
+    pub tier: String,
+    pub method: String,
+    pub kind: String, // "prefill" | "decode"
+    pub batch: usize,
+    pub seq: usize,
+    pub weights_key: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsInfo {
+    pub file: PathBuf,
+    pub params: Vec<String>,
+    pub bytes: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_size: usize,
+    pub quick: bool,
+    pub graphs: BTreeMap<String, GraphInfo>,
+    pub weights: BTreeMap<String, WeightsInfo>,
+    pub tiers: BTreeMap<String, TierInfo>,
+    pub transformer_tiers: BTreeMap<String, TransformerTierInfo>,
+    pub data: BTreeMap<String, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest, String> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e}. Run `make artifacts` first."))?;
+        let j = json::parse(&text)?;
+        let mut m = Manifest {
+            root: root.to_path_buf(),
+            vocab_size: j.get("vocab_size").as_usize().unwrap_or(256),
+            quick: j.get("quick").as_bool().unwrap_or(false),
+            graphs: BTreeMap::new(),
+            weights: BTreeMap::new(),
+            tiers: BTreeMap::new(),
+            transformer_tiers: BTreeMap::new(),
+            data: BTreeMap::new(),
+        };
+        if let Some(obj) = j.get("graphs").as_obj() {
+            for (name, g) in obj {
+                m.graphs.insert(
+                    name.clone(),
+                    GraphInfo {
+                        name: name.clone(),
+                        file: root.join(g.get("file").as_str().unwrap_or_default()),
+                        family: g.get("family").as_str().unwrap_or("mamba").to_string(),
+                        tier: g.get("tier").as_str().unwrap_or_default().to_string(),
+                        method: g.get("method").as_str().unwrap_or_default().to_string(),
+                        kind: g.get("kind").as_str().unwrap_or_default().to_string(),
+                        batch: g.get("batch").as_usize().unwrap_or(1),
+                        seq: g.get("seq").as_usize().unwrap_or(1),
+                        weights_key: g.get("weights").as_str().unwrap_or_default().to_string(),
+                    },
+                );
+            }
+        }
+        if let Some(obj) = j.get("weights").as_obj() {
+            for (name, w) in obj {
+                let params = w
+                    .get("params")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default();
+                m.weights.insert(
+                    name.clone(),
+                    WeightsInfo {
+                        file: root.join(w.get("file").as_str().unwrap_or_default()),
+                        params,
+                        bytes: w.get("bytes").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+        if let Some(obj) = j.get("tiers").as_obj() {
+            for (name, t) in obj {
+                m.tiers.insert(
+                    name.clone(),
+                    TierInfo {
+                        name: name.clone(),
+                        paper_name: t.get("paper_name").as_str().unwrap_or_default().to_string(),
+                        d_model: t.get("d_model").as_usize().unwrap_or(0),
+                        n_layer: t.get("n_layer").as_usize().unwrap_or(0),
+                        d_state: t.get("d_state").as_usize().unwrap_or(16),
+                        d_conv: t.get("d_conv").as_usize().unwrap_or(4),
+                        d_inner: t.get("d_inner").as_usize().unwrap_or(0),
+                        dt_rank: t.get("dt_rank").as_usize().unwrap_or(1),
+                        vocab: t.get("vocab").as_usize().unwrap_or(256),
+                        n_params: t.get("n_params").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+        if let Some(obj) = j.get("transformer_tiers").as_obj() {
+            for (name, t) in obj {
+                m.transformer_tiers.insert(
+                    name.clone(),
+                    TransformerTierInfo {
+                        name: name.clone(),
+                        paper_name: t.get("paper_name").as_str().unwrap_or_default().to_string(),
+                        d_model: t.get("d_model").as_usize().unwrap_or(0),
+                        n_layer: t.get("n_layer").as_usize().unwrap_or(0),
+                        n_head: t.get("n_head").as_usize().unwrap_or(1),
+                        max_ctx: t.get("max_ctx").as_usize().unwrap_or(2048),
+                        vocab: t.get("vocab").as_usize().unwrap_or(256),
+                        n_params: t.get("n_params").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+        if let Some(obj) = j.get("data").as_obj() {
+            for (k, v) in obj {
+                if let Some(s) = v.as_str() {
+                    m.data.insert(k.clone(), root.join(s));
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Default artifacts root: $QUAMBA_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("QUAMBA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Find a graph by (tier, method, kind, batch) with the largest
+    /// seq ≤ `seq_at_most` (prefill) or exact batch (decode).
+    pub fn find_graph(
+        &self,
+        tier: &str,
+        method: &str,
+        kind: &str,
+        batch: usize,
+        seq: Option<usize>,
+    ) -> Option<&GraphInfo> {
+        let mut best: Option<&GraphInfo> = None;
+        for g in self.graphs.values() {
+            if g.tier == tier && g.method == method && g.kind == kind && g.batch == batch {
+                match seq {
+                    None => return Some(g),
+                    Some(s) => {
+                        if g.seq == s {
+                            return Some(g);
+                        }
+                        if best.map(|b| g.seq > b.seq).unwrap_or(true) {
+                            best = Some(g);
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    pub fn methods_for_tier(&self, tier: &str, kind: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .graphs
+            .values()
+            .filter(|g| g.tier == tier && g.kind == kind)
+            .map(|g| g.method.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("quamba_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"vocab_size": 256, "quick": true,
+                "graphs": {"m130_fp16_decode_b1": {"file": "g.hlo.txt", "family": "mamba",
+                  "tier": "m130", "method": "fp16", "kind": "decode", "batch": 1, "seq": 1,
+                  "weights": "m130_fp16", "inputs": [], "outputs": []}},
+                "weights": {"m130_fp16": {"file": "w.qtz", "params": ["a", "b"], "bytes": 10}},
+                "tiers": {"m130": {"paper_name": "Mamba-130M", "d_model": 64, "n_layer": 2,
+                  "d_state": 16, "d_conv": 4, "d_inner": 128, "dt_rank": 4,
+                  "vocab": 256, "n_params": 1000}},
+                "data": {"tasks": "data/tasks.json"}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab_size, 256);
+        assert!(m.quick);
+        let g = m.find_graph("m130", "fp16", "decode", 1, None).unwrap();
+        assert_eq!(g.weights_key, "m130_fp16");
+        assert_eq!(m.weights["m130_fp16"].params, vec!["a", "b"]);
+        assert_eq!(m.tiers["m130"].d_inner, 128);
+    }
+}

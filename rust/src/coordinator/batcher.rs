@@ -1,0 +1,90 @@
+//! Bucketed continuous batching for the decode loop.
+//!
+//! Decode executables are compiled AOT for a fixed set of batch sizes
+//! (e.g. {1, 2, 4, 8}); each scheduler tick packs the active requests
+//! into rounds: every round runs the smallest bucket that fits its
+//! group, padding unused lanes (their outputs are discarded by the
+//! state scatter). This is the SSM analog of vLLM's continuous
+//! batching — with constant-size states there is no fragmentation
+//! problem, so the packing is pure arithmetic.
+
+/// Plan one scheduler tick: split `n_active` requests into rounds.
+/// `buckets` must be sorted ascending. Returns bucket size per round.
+pub fn plan_rounds(n_active: usize, buckets: &[usize]) -> Vec<usize> {
+    assert!(!buckets.is_empty(), "no decode buckets available");
+    debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]));
+    let max = *buckets.last().unwrap();
+    let mut rounds = Vec::new();
+    let mut left = n_active;
+    while left > 0 {
+        let take = left.min(max);
+        // smallest bucket that fits `take`
+        let b = *buckets.iter().find(|&&b| b >= take).unwrap_or(&max);
+        rounds.push(b);
+        left -= take;
+    }
+    rounds
+}
+
+/// Padding overhead of a plan: padded lanes / total lanes.
+pub fn padding_waste(n_active: usize, plan: &[usize]) -> f64 {
+    let lanes: usize = plan.iter().sum();
+    if lanes == 0 {
+        return 0.0;
+    }
+    (lanes - n_active) as f64 / lanes as f64
+}
+
+/// Assign request indices to rounds following a plan.
+pub fn assign(n_active: usize, plan: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(plan.len());
+    let mut next = 0usize;
+    for &b in plan {
+        let take = b.min(n_active - next);
+        out.push((next..next + take).collect());
+        next += take;
+    }
+    assert_eq!(next, n_active, "plan does not cover all requests");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit() {
+        assert_eq!(plan_rounds(8, &[1, 2, 4, 8]), vec![8]);
+        assert_eq!(plan_rounds(4, &[1, 2, 4, 8]), vec![4]);
+        assert_eq!(plan_rounds(1, &[1, 2, 4, 8]), vec![1]);
+    }
+
+    #[test]
+    fn padding_cases() {
+        assert_eq!(plan_rounds(3, &[1, 2, 4, 8]), vec![4]); // 1 padded lane
+        assert_eq!(plan_rounds(5, &[1, 2, 4, 8]), vec![8]); // 3 padded lanes
+        assert!((padding_waste(5, &[8]) - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_multiple_rounds() {
+        assert_eq!(plan_rounds(17, &[1, 2, 4, 8]), vec![8, 8, 1]);
+        assert_eq!(plan_rounds(10, &[1, 2, 4, 8]), vec![8, 2]);
+    }
+
+    #[test]
+    fn only_b1_available() {
+        assert_eq!(plan_rounds(3, &[1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn assign_covers_everything() {
+        let plan = plan_rounds(10, &[1, 2, 4, 8]);
+        let groups = assign(10, &plan);
+        let all: Vec<usize> = groups.concat();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        for (g, &b) in groups.iter().zip(&plan) {
+            assert!(g.len() <= b);
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! The execution engine: single-owner loop over the PJRT runtime.
+//!
+//! One `Engine` owns the `Runtime` (PJRT client is not `Send`), the
+//! SSM state pool, the admission queue, and the decode batcher. The
+//! scheduler is prefill-priority: new requests are prefilled one at a
+//! time (B=1 graph, left-padded to the graph length — every method
+//! sees the identical treatment, so comparisons stay fair), then join
+//! the continuous-batching decode pool, which packs live requests into
+//! bucketed decode rounds each tick.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use crate::coordinator::batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{LiveRequest, Request, Response};
+use crate::coordinator::sampler::Sampler;
+use crate::coordinator::state::{SsmSlab, SsmStatePool};
+use crate::data::BOS;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub tier: String,
+    pub method: String,
+    /// state-pool capacity (max concurrent requests)
+    pub capacity: usize,
+    /// admission limit per tick
+    pub max_prefills_per_tick: usize,
+}
+
+impl EngineConfig {
+    pub fn new(tier: &str, method: &str) -> Self {
+        EngineConfig {
+            tier: tier.to_string(),
+            method: method.to_string(),
+            capacity: 32,
+            max_prefills_per_tick: 2,
+        }
+    }
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub rt: Runtime,
+    pool: SsmStatePool,
+    queue: VecDeque<Request>,
+    live: Vec<LiveRequest>,
+    done: Vec<Response>,
+    sampler: Sampler,
+    pub metrics: Metrics,
+    decode_buckets: Vec<usize>,
+    prefill_graph: String,
+    prefill_len: usize,
+    vocab: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Engine> {
+        let mani = rt.manifest();
+        let tier = mani
+            .tiers
+            .get(&cfg.tier)
+            .ok_or_else(|| anyhow!("unknown tier {}", cfg.tier))?
+            .clone();
+        // discover decode buckets for this (tier, method)
+        let mut buckets: Vec<usize> = mani
+            .graphs
+            .values()
+            .filter(|g| g.tier == cfg.tier && g.method == cfg.method && g.kind == "decode")
+            .map(|g| g.batch)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            return Err(anyhow!("no decode graphs for {}/{}", cfg.tier, cfg.method));
+        }
+        // B=1 prefill with the smallest T (shortest latency for short prompts)
+        let pf = mani
+            .graphs
+            .values()
+            .filter(|g| {
+                g.tier == cfg.tier && g.method == cfg.method && g.kind == "prefill" && g.batch == 1
+            })
+            .min_by_key(|g| g.seq)
+            .ok_or_else(|| anyhow!("no prefill graph for {}/{}", cfg.tier, cfg.method))?;
+        let prefill_graph = pf.name.clone();
+        let prefill_len = pf.seq;
+        let vocab = mani.vocab_size;
+        let pool = SsmStatePool::new(&tier, cfg.capacity);
+        Ok(Engine {
+            pool,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: Vec::new(),
+            sampler: Sampler::new(0xC0FFEE),
+            metrics: Metrics::new(),
+            decode_buckets: buckets,
+            prefill_graph,
+            prefill_len,
+            vocab,
+            rt,
+            cfg,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.rt.manifest()
+    }
+
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+
+    /// Pre-compile the graphs this engine will use (avoids paying the
+    /// one-time XLA compile inside latency measurements).
+    pub fn warmup(&mut self) -> Result<()> {
+        let g = self.prefill_graph.clone();
+        self.rt.load(&g)?;
+        for b in self.decode_buckets.clone() {
+            let name = self.decode_graph_name(b)?;
+            self.rt.load(&name)?;
+        }
+        Ok(())
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn state_bytes_per_request(&self) -> usize {
+        self.pool.bytes_per_request()
+    }
+
+    /// Tokens generated so far (live requests + completed).
+    pub fn tokens_generated(&self) -> usize {
+        self.live.iter().map(|lr| lr.generated.len()).sum::<usize>()
+            + self.metrics.tokens_out as usize
+    }
+
+    fn decode_graph_name(&self, b: usize) -> Result<String> {
+        self.rt
+            .manifest()
+            .find_graph(&self.cfg.tier, &self.cfg.method, "decode", b, None)
+            .map(|g| g.name.clone())
+            .ok_or_else(|| anyhow!("no decode graph b={b}"))
+    }
+
+    /// Run one scheduler tick: admit + prefill a few queued requests,
+    /// then one decode round over all live requests. Returns finished
+    /// responses (also retained in `take_done`).
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        // -- admission + prefill --
+        for _ in 0..self.cfg.max_prefills_per_tick {
+            if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            self.prefill(req)?;
+        }
+        // -- decode round(s) --
+        if !self.live.is_empty() {
+            self.decode_tick()?;
+        }
+        // -- harvest --
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].done() {
+                let lr = self.live.swap_remove(i);
+                self.pool.release(lr.state_slot);
+                let resp = lr.into_response();
+                self.metrics.record_response(
+                    resp.ttft_ms,
+                    resp.tpot_ms,
+                    resp.ttlt_ms,
+                    resp.tokens.len(),
+                );
+                finished.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        self.done.extend(finished.iter().cloned());
+        Ok(finished)
+    }
+
+    /// Drive until everything queued + live has finished.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        while !self.queue.is_empty() || !self.live.is_empty() {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    pub fn take_done(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    fn prefill(&mut self, req: Request) -> Result<()> {
+        let slot = self
+            .pool
+            .alloc()
+            .ok_or_else(|| anyhow!("state pool exhausted"))?;
+        let t = self.prefill_len;
+        // left-pad with BOS; truncate to the last t tokens if longer
+        let prompt: Vec<u16> = if req.prompt.len() > t {
+            req.prompt[req.prompt.len() - t..].to_vec()
+        } else {
+            let mut p = vec![BOS; t - req.prompt.len()];
+            p.extend_from_slice(&req.prompt);
+            p
+        };
+        let toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
+        let mut lr = LiveRequest::new(req, slot);
+        let t0 = std::time::Instant::now();
+        let (cs, ss) = self.state_shapes(1);
+        let inputs = [
+            crate::runtime::lit_from_i32(&[1, t], &toks)?,
+            crate::runtime::lit_from_f32(&cs, &vec![0.0; cs.iter().product()])?,
+            crate::runtime::lit_from_f32(&ss, &vec![0.0; ss.iter().product()])?,
+        ];
+        let g = self.prefill_graph.clone();
+        let out = self.rt.execute_lit(&g, &inputs)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.prefill_ms.record(ms);
+        let (logits, conv, ssm) = unpack3_lit(&out)?;
+        // store state
+        self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
+        // first token from the last position
+        let v = self.vocab_dim(&out[0], t)?;
+        let row = &logits[(t - 1) * v..t * v];
+        let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
+        lr.generated.push(tok);
+        lr.prefill_done = Some(std::time::Instant::now());
+        lr.last_token = lr.prefill_done;
+        self.live.push(lr);
+        Ok(())
+    }
+
+    fn state_shapes(&self, b: usize) -> (Vec<usize>, Vec<usize>) {
+        let l = self.pool.n_layer;
+        let di = self.pool.d_inner;
+        let w1 = self.pool.conv_per_layer / di;
+        let n = self.pool.ssm_per_layer / di;
+        (vec![l, b, w1, di], vec![l, b, di, n])
+    }
+
+    fn vocab_dim(&self, logits: &xla::Literal, rows: usize) -> Result<usize> {
+        let n = logits.element_count();
+        if n % rows != 0 {
+            return Err(anyhow!("logits size {n} not divisible by {rows}"));
+        }
+        Ok(n / rows)
+    }
+
+    fn decode_tick(&mut self) -> Result<()> {
+        let n = self.live.len();
+        let plan = batcher::plan_rounds(n, &self.decode_buckets);
+        let groups = batcher::assign(n, &plan);
+        for (gi, group) in groups.iter().enumerate() {
+            let b = plan[gi];
+            self.metrics.record_round(b, group.len());
+            self.decode_round(group, b)?;
+        }
+        Ok(())
+    }
+
+    fn decode_round(&mut self, group: &[usize], b: usize) -> Result<()> {
+        let slots: Vec<usize> = group.iter().map(|&i| self.live[i].state_slot).collect();
+        let (conv, ssm) = self.pool.gather_raw(&slots, b);
+        let mut toks = vec![0i32; b];
+        for (bi, &i) in group.iter().enumerate() {
+            toks[bi] = self.live[i].next_input_token() as i32;
+        }
+        let (cs, ss) = self.state_shapes(b);
+        let inputs = [
+            crate::runtime::lit_from_i32(&[b, 1], &toks)?,
+            crate::runtime::lit_from_f32(&cs, &conv)?,
+            crate::runtime::lit_from_f32(&ss, &ssm)?,
+        ];
+        let graph = self.decode_graph_name(b)?;
+        let t0 = std::time::Instant::now();
+        let out = self.rt.execute_lit(&graph, &inputs)?;
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.decode_step_ms.record(step_ms);
+        let (logits, conv_o, ssm_o) = unpack3_lit(&out)?;
+        self.pool.scatter_raw(&slots, b, &conv_o, &ssm_o);
+        let v = logits.len() / b;
+        for (bi, &i) in group.iter().enumerate() {
+            let row = &logits[bi * v..(bi + 1) * v];
+            let lr = &mut self.live[i];
+            let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
+            lr.generated.push(tok);
+            let now = std::time::Instant::now();
+            if let Some(last) = lr.last_token {
+                lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+            }
+            lr.last_token = Some(now);
+        }
+        Ok(())
+    }
+}
+
+/// (logits, conv, ssm) as raw f32 vectors from a 3-output literal set.
+fn unpack3_lit(out: &[xla::Literal]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    if out.len() != 3 {
+        return Err(anyhow!("expected 3 outputs, got {}", out.len()));
+    }
+    Ok((
+        crate::runtime::lit_to_f32(&out[0])?,
+        crate::runtime::lit_to_f32(&out[1])?,
+        crate::runtime::lit_to_f32(&out[2])?,
+    ))
+}
+
+// allow the state pool to accept slabs from prefill via scatter
+impl SsmStatePool {
+    /// Build a slab directly from (L,1,...) prefill state tensors.
+    pub fn slab_from_tensors(&self, conv: &Tensor, ssm: &Tensor) -> SsmSlab {
+        SsmSlab { conv: conv.to_f32(), ssm: ssm.to_f32() }
+    }
+}

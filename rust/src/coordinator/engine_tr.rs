@@ -1,0 +1,221 @@
+//! Transformer serving engine — the KV-cache comparator to [`super::engine`].
+//!
+//! Exists so the Figure 1(b)/1(c) comparisons run through the *same
+//! coordinator abstractions* rather than hand-rolled loops: requests
+//! are admitted against the KV pool's byte watermark (backpressure),
+//! each holds a growing (L, max_ctx, H, Dh) K/V slab, and decode steps
+//! thread the cache through the AOT graph with an explicit position.
+//!
+//! Single-lane decode (the transformer artifacts ship B=1 graphs; the
+//! KV-gather cost of batched decode on a host-roundtrip runtime would
+//! measure the harness, not the model — noted in DESIGN.md §8).
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TransformerTierInfo;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{LiveRequest, Request, Response};
+use crate::coordinator::sampler::Sampler;
+use crate::data::BOS;
+use crate::runtime::{lit_from_f32, lit_from_i32, lit_to_f32, Runtime};
+
+pub struct TransformerEngine {
+    pub tier: TransformerTierInfo,
+    pub method: String,
+    pub rt: Runtime,
+    queue: VecDeque<Request>,
+    /// (request, K cache, V cache, live length)
+    live: Vec<(LiveRequest, Vec<f32>, Vec<f32>, usize)>,
+    done: Vec<Response>,
+    sampler: Sampler,
+    pub metrics: Metrics,
+    prefill_graph: String,
+    prefill_len: usize,
+    decode_graph: String,
+    vocab: usize,
+    /// KV byte budget across live requests (backpressure watermark)
+    pub byte_budget: usize,
+}
+
+impl TransformerEngine {
+    pub fn new(rt: Runtime, tier: &str, method: &str, byte_budget: usize) -> Result<Self> {
+        let tinfo = rt
+            .manifest()
+            .transformer_tiers
+            .get(tier)
+            .ok_or_else(|| anyhow!("unknown transformer tier {tier}"))?
+            .clone();
+        let pf = rt
+            .manifest()
+            .graphs
+            .values()
+            .filter(|g| g.tier == tier && g.method == method && g.kind == "prefill" && g.batch == 1)
+            .min_by_key(|g| g.seq)
+            .ok_or_else(|| anyhow!("no transformer prefill graph"))?;
+        let prefill_graph = pf.name.clone();
+        let prefill_len = pf.seq;
+        let decode_graph = rt
+            .manifest()
+            .find_graph(tier, method, "decode", 1, None)
+            .ok_or_else(|| anyhow!("no transformer decode graph"))?
+            .name
+            .clone();
+        let vocab = rt.manifest().vocab_size;
+        Ok(TransformerEngine {
+            tier: tinfo,
+            method: method.to_string(),
+            rt,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: Vec::new(),
+            sampler: Sampler::new(0xC0FFEE),
+            metrics: Metrics::new(),
+            prefill_graph,
+            prefill_len,
+            decode_graph,
+            vocab,
+            byte_budget,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn cache_elems(&self) -> usize {
+        let t = &self.tier;
+        t.n_layer * t.max_ctx * t.n_head * (t.d_model / t.n_head)
+    }
+
+    /// Bytes a live request holds at context length `ctx` (K + V).
+    pub fn bytes_at(&self, ctx: usize) -> usize {
+        let t = &self.tier;
+        2 * 4 * t.n_layer * t.n_head * (t.d_model / t.n_head) * ctx
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.live.iter().map(|(_, _, _, len)| self.bytes_at(*len)).sum()
+    }
+
+    /// One scheduler tick: admit while the KV watermark allows, then
+    /// one decode step per live request.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        while let Some(req) = self.queue.front() {
+            let need = self.bytes_at(req.prompt.len().min(self.prefill_len) + req.max_new_tokens);
+            if self.live_bytes() + need > self.byte_budget && !self.live.is_empty() {
+                break; // backpressure: keep queued until KV frees up
+            }
+            let req = self.queue.pop_front().unwrap();
+            self.prefill(req)?;
+        }
+        // decode one token per live request
+        for idx in 0..self.live.len() {
+            self.decode_one(idx)?;
+        }
+        // harvest
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].0.done() {
+                let (lr, _, _, _) = self.live.swap_remove(i);
+                let resp = lr.into_response();
+                self.metrics.record_response(resp.ttft_ms, resp.tpot_ms, resp.ttlt_ms,
+                                             resp.tokens.len());
+                finished.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        self.done.extend(finished.iter().cloned());
+        Ok(finished)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        while !self.queue.is_empty() || !self.live.is_empty() {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    fn prefill(&mut self, req: Request) -> Result<()> {
+        let t = self.prefill_len;
+        let prompt: Vec<u16> = if req.prompt.len() > t {
+            req.prompt[req.prompt.len() - t..].to_vec()
+        } else {
+            let mut p = vec![BOS; t - req.prompt.len()];
+            p.extend_from_slice(&req.prompt);
+            p
+        };
+        let toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
+        let mut lr = LiveRequest::new(req, usize::MAX);
+        let n = self.cache_elems();
+        let sh = self.cache_shape();
+        let t0 = std::time::Instant::now();
+        let inputs = [
+            lit_from_i32(&[1, t], &toks)?,
+            lit_from_f32(&sh, &vec![0.0; n])?,
+            lit_from_f32(&sh, &vec![0.0; n])?,
+            lit_from_i32(&[], &[0])?,
+        ];
+        let g = self.prefill_graph.clone();
+        let out = self.rt.execute_lit(&g, &inputs)?;
+        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        let logits = lit_to_f32(&out[0])?;
+        let k = lit_to_f32(&out[1])?;
+        let v = lit_to_f32(&out[2])?;
+        let vdim = logits.len() / t;
+        let row = &logits[(t - 1) * vdim..t * vdim];
+        let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
+        lr.generated.push(tok);
+        lr.prefill_done = Some(std::time::Instant::now());
+        lr.last_token = lr.prefill_done;
+        self.live.push((lr, k, v, t));
+        Ok(())
+    }
+
+    fn cache_shape(&self) -> Vec<usize> {
+        let t = &self.tier;
+        vec![t.n_layer, 1, t.max_ctx, t.n_head, t.d_model / t.n_head]
+    }
+
+    fn decode_one(&mut self, idx: usize) -> Result<()> {
+        let sh = self.cache_shape();
+        let (tok, pos, k, v) = {
+            let (lr, k, v, len) = &self.live[idx];
+            (lr.next_input_token() as i32, (*len).min(self.tier.max_ctx - 1), k.clone(), v.clone())
+        };
+        let inputs = [
+            lit_from_i32(&[1, 1], &[tok])?,
+            lit_from_f32(&sh, &k)?,
+            lit_from_f32(&sh, &v)?,
+            lit_from_i32(&[], &[pos as i32])?,
+        ];
+        let g = self.decode_graph.clone();
+        let t0 = std::time::Instant::now();
+        let out = self.rt.execute_lit(&g, &inputs)?;
+        self.metrics.decode_step_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        let logits = lit_to_f32(&out[0])?;
+        let (lr, kc, vc, len) = &mut self.live[idx];
+        *kc = lit_to_f32(&out[1])?;
+        *vc = lit_to_f32(&out[2])?;
+        *len = (*len + 1).min(self.tier.max_ctx);
+        let next = self.sampler.sample(&logits, self.vocab, &lr.req.params);
+        lr.generated.push(next);
+        let now = std::time::Instant::now();
+        if let Some(last) = lr.last_token {
+            lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+        }
+        lr.last_token = Some(now);
+        Ok(())
+    }
+}

@@ -1,0 +1,131 @@
+//! Serving metrics: TTFT / TPOT / TTLT histograms, throughput and
+//! queue gauges — the quantities behind paper Table 1 and Fig. 1(a/b).
+
+use std::time::Instant;
+
+use crate::util::stats::{LogHistogram, Summary};
+
+pub struct Metrics {
+    pub ttft_ms: LogHistogram,
+    pub tpot_ms: LogHistogram,
+    pub ttlt_ms: LogHistogram,
+    pub decode_step_ms: LogHistogram,
+    pub prefill_ms: LogHistogram,
+    /// raw samples for exact summaries in reports
+    ttft_raw: Vec<f64>,
+    tpot_raw: Vec<f64>,
+    ttlt_raw: Vec<f64>,
+    pub tokens_out: u64,
+    pub requests_done: u64,
+    pub padded_lanes: u64,
+    pub total_lanes: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            ttft_ms: LogHistogram::new(0.01, 60_000.0, 64),
+            tpot_ms: LogHistogram::new(0.01, 10_000.0, 64),
+            ttlt_ms: LogHistogram::new(0.01, 600_000.0, 64),
+            decode_step_ms: LogHistogram::new(0.01, 10_000.0, 64),
+            prefill_ms: LogHistogram::new(0.01, 60_000.0, 64),
+            ttft_raw: Vec::new(),
+            tpot_raw: Vec::new(),
+            ttlt_raw: Vec::new(),
+            tokens_out: 0,
+            requests_done: 0,
+            padded_lanes: 0,
+            total_lanes: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_response(&mut self, ttft: f64, tpot: f64, ttlt: f64, n_tokens: usize) {
+        if ttft.is_finite() {
+            self.ttft_ms.record(ttft);
+            self.ttft_raw.push(ttft);
+        }
+        if tpot.is_finite() {
+            self.tpot_ms.record(tpot);
+            self.tpot_raw.push(tpot);
+        }
+        if ttlt.is_finite() {
+            self.ttlt_ms.record(ttlt);
+            self.ttlt_raw.push(ttlt);
+        }
+        self.tokens_out += n_tokens as u64;
+        self.requests_done += 1;
+    }
+
+    pub fn record_round(&mut self, bucket: usize, live: usize) {
+        self.total_lanes += bucket as u64;
+        self.padded_lanes += (bucket - live) as u64;
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.tokens_out as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn padding_fraction(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.padded_lanes as f64 / self.total_lanes as f64
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttft_raw)
+    }
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.tpot_raw)
+    }
+    pub fn ttlt_summary(&self) -> Summary {
+        Summary::of(&self.ttlt_raw)
+    }
+
+    pub fn report(&self) -> String {
+        let t = self.ttft_summary();
+        let p = self.tpot_summary();
+        let l = self.ttlt_summary();
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s padding={:.1}%\n\
+             TTFT ms  mean={:.2} p50={:.2} p99={:.2}\n\
+             TPOT ms  mean={:.3} p50={:.3} p99={:.3}\n\
+             TTLT ms  mean={:.1} p50={:.1} p99={:.1}",
+            self.requests_done,
+            self.tokens_out,
+            self.throughput_tok_s(),
+            100.0 * self.padding_fraction(),
+            t.mean, t.p50, t.p99,
+            p.mean, p.p50, p.p99,
+            l.mean, l.p50, l.p99,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let mut m = Metrics::new();
+        m.record_response(10.0, 1.0, 50.0, 40);
+        m.record_response(20.0, 2.0, 80.0, 30);
+        m.record_round(8, 5);
+        assert_eq!(m.requests_done, 2);
+        assert_eq!(m.tokens_out, 70);
+        assert!((m.padding_fraction() - 3.0 / 8.0).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("requests=2"));
+        assert!((m.ttft_summary().mean - 15.0).abs() < 1e-9);
+    }
+}

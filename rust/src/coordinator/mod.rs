@@ -1,0 +1,29 @@
+//! L3 coordinator: the serving-framework layer (DESIGN.md §8).
+//!
+//! The paper is an inference/deployment paper, so the coordination
+//! contribution is a serving runtime shaped like a miniature vLLM
+//! router for SSMs:
+//!
+//! * [`request`]  — request/response types + lifecycle
+//! * [`state`]    — the SSM state manager (constant bytes/request) and
+//!                  the KV-cache pool (linear bytes/request) — the two
+//!                  memory models behind paper Figure 1(c)
+//! * [`batcher`]  — bucketed continuous batching for the decode loop
+//! * [`sampler`]  — greedy / temperature / top-k sampling
+//! * [`metrics`]  — TTFT / TPOT / TTLT histograms + queue gauges
+//! * [`engine`]   — the single-owner execution loop over [`crate::runtime`]
+//! * [`server`]   — a threaded front door (std::mpsc; tokio is not in
+//!                  the offline vendor set, and one executor thread is
+//!                  the right shape for one PJRT CPU device anyway)
+
+pub mod batcher;
+pub mod engine;
+pub mod engine_tr;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod server;
+pub mod state;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};

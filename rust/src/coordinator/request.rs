@@ -1,0 +1,152 @@
+//! Request / response types and per-request lifecycle bookkeeping.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// 0.0 = greedy
+    pub temperature: f32,
+    /// 0 = full vocab
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    /// stop at EOS (token 2)
+    pub stop_at_eos: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    Eos,
+    Cancelled,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u16>,
+    pub finish: FinishReason,
+    pub ttft_ms: f64,
+    /// mean time-per-output-token over the decode phase
+    pub tpot_ms: f64,
+    /// time to last token (prefill + decode)
+    pub ttlt_ms: f64,
+}
+
+/// Engine-internal per-request state.
+pub struct LiveRequest {
+    pub req: Request,
+    pub generated: Vec<u16>,
+    pub state_slot: usize,
+    pub submitted: Instant,
+    pub prefill_done: Option<Instant>,
+    pub last_token: Option<Instant>,
+    pub decode_ms: Vec<f64>,
+}
+
+impl LiveRequest {
+    pub fn new(req: Request, state_slot: usize) -> Self {
+        LiveRequest {
+            req,
+            generated: Vec::new(),
+            state_slot,
+            submitted: Instant::now(),
+            prefill_done: None,
+            last_token: None,
+            decode_ms: Vec::new(),
+        }
+    }
+
+    pub fn next_input_token(&self) -> u16 {
+        *self
+            .generated
+            .last()
+            .unwrap_or_else(|| self.req.prompt.last().expect("empty prompt"))
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.max_new_tokens
+            || (self.req.stop_at_eos && self.generated.last() == Some(&crate::data::EOS))
+    }
+
+    pub fn finish_reason(&self) -> FinishReason {
+        if self.req.stop_at_eos && self.generated.last() == Some(&crate::data::EOS) {
+            FinishReason::Eos
+        } else {
+            FinishReason::Length
+        }
+    }
+
+    pub fn into_response(self) -> Response {
+        let now = Instant::now();
+        let ttft = self
+            .prefill_done
+            .map(|t| (t - self.submitted).as_secs_f64() * 1e3)
+            .unwrap_or(f64::NAN);
+        let tpot = if self.decode_ms.is_empty() {
+            f64::NAN
+        } else {
+            self.decode_ms.iter().sum::<f64>() / self.decode_ms.len() as f64
+        };
+        let finish = self.finish_reason();
+        Response {
+            id: self.req.id,
+            tokens: self.generated,
+            finish,
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            ttlt_ms: (now - self.submitted).as_secs_f64() * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(max_new: usize) -> Request {
+        Request {
+            id: 1,
+            prompt: vec![1, 5, 9],
+            max_new_tokens: max_new,
+            params: SamplingParams::default(),
+            stop_at_eos: true,
+        }
+    }
+
+    #[test]
+    fn lifecycle_done_by_length() {
+        let mut lr = LiveRequest::new(req(2), 0);
+        assert!(!lr.done());
+        assert_eq!(lr.next_input_token(), 9);
+        lr.generated.push(7);
+        assert_eq!(lr.next_input_token(), 7);
+        assert!(!lr.done());
+        lr.generated.push(8);
+        assert!(lr.done());
+        assert_eq!(lr.finish_reason(), FinishReason::Length);
+    }
+
+    #[test]
+    fn lifecycle_done_by_eos() {
+        let mut lr = LiveRequest::new(req(10), 0);
+        lr.generated.push(crate::data::EOS);
+        assert!(lr.done());
+        assert_eq!(lr.finish_reason(), FinishReason::Eos);
+    }
+}

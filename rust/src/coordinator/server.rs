@@ -1,0 +1,155 @@
+//! Threaded serving front door.
+//!
+//! tokio is not in the offline vendor set — and one executor thread is
+//! the natural shape for one PJRT CPU device — so the server is a
+//! dedicated engine thread plus std::mpsc channels: clients submit
+//! requests with a response channel and block (or poll) on it. This is
+//! the same single-owner architecture a GPU-stream-bound executor uses.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
+use crate::runtime::Runtime;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Report(Sender<String>),
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    next_id: RequestId,
+}
+
+impl ServerHandle {
+    /// Spawn the engine thread. The `Runtime` is constructed *inside*
+    /// the thread (PJRT client is not Send).
+    pub fn spawn(artifacts_root: std::path::PathBuf, cfg: EngineConfig) -> Result<ServerHandle> {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("quamba-engine".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&artifacts_root) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let mut engine = match Engine::new(rt, cfg) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                if let Err(e) = engine.warmup() {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(()));
+                let mut waiters: Vec<(RequestId, Sender<Response>)> = Vec::new();
+                loop {
+                    // drain the mailbox without blocking while work exists
+                    let busy = engine.n_live() > 0 || engine.n_queued() > 0;
+                    let msg = if busy {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+                        }
+                    } else {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => break,
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Submit(req, resp_tx)) => {
+                            waiters.push((req.id, resp_tx));
+                            engine.submit(req);
+                        }
+                        Some(Msg::Report(tx)) => {
+                            let _ = tx.send(engine.metrics.report());
+                        }
+                        Some(Msg::Shutdown) => break,
+                        None => {}
+                    }
+                    if engine.n_live() > 0 || engine.n_queued() > 0 {
+                        match engine.step() {
+                            Ok(done) => {
+                                for resp in done {
+                                    if let Some(pos) =
+                                        waiters.iter().position(|(id, _)| *id == resp.id)
+                                    {
+                                        let (_, tx) = waiters.swap_remove(pos);
+                                        let _ = tx.send(resp);
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("engine step error: {e:#}");
+                                break;
+                            }
+                        }
+                    }
+                }
+            })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow::anyhow!(e)),
+            Err(_) => return Err(anyhow::anyhow!("engine thread died during startup")),
+        }
+        Ok(ServerHandle { tx, join: Some(join), next_id: 1 })
+    }
+
+    /// Submit a prompt; returns a receiver for the final response.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        params: SamplingParams,
+    ) -> Receiver<Response> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (tx, rx) = channel();
+        let req = Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            params,
+            stop_at_eos: false,
+        };
+        let _ = self.tx.send(Msg::Submit(req, tx));
+        rx
+    }
+
+    pub fn metrics_report(&self) -> Option<String> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Report(tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Per-request model state pools — the memory story of paper Fig 1(c).
+//!
+//! * [`SsmStatePool`]: each request owns a *constant-size* slab
+//!   (conv window + recurrent state), independent of how many tokens it
+//!   has consumed. Gather/scatter pack request slabs into the batched
+//!   (L, B, ...) tensors the decode graphs expect.
+//! * [`KvCachePool`]: the Transformer comparator — each request's slab
+//!   grows with its context; a capacity watermark drives backpressure.
+
+use crate::config::{TierInfo, TransformerTierInfo};
+use crate::tensor::Tensor;
+
+/// Constant-size per-request SSM state slab.
+#[derive(Clone)]
+pub struct SsmSlab {
+    /// (L, W-1, d_inner) flattened
+    pub conv: Vec<f32>,
+    /// (L, d_inner, N) flattened
+    pub ssm: Vec<f32>,
+}
+
+pub struct SsmStatePool {
+    pub n_layer: usize,
+    pub d_inner: usize,
+    pub conv_per_layer: usize, // (W-1) * d_inner
+    pub ssm_per_layer: usize,  // d_inner * N
+    slots: Vec<Option<SsmSlab>>,
+    free: Vec<usize>,
+}
+
+impl SsmStatePool {
+    pub fn new(tier: &TierInfo, capacity: usize) -> Self {
+        SsmStatePool {
+            n_layer: tier.n_layer,
+            d_inner: tier.d_inner,
+            conv_per_layer: (tier.d_conv - 1) * tier.d_inner,
+            ssm_per_layer: tier.d_inner * tier.d_state,
+            slots: (0..capacity).map(|_| None).collect(),
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Bytes a single request's state occupies — CONSTANT in context
+    /// length (the SSM selling point).
+    pub fn bytes_per_request(&self) -> usize {
+        4 * self.n_layer * (self.conv_per_layer + self.ssm_per_layer)
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.slots[slot] = Some(SsmSlab {
+            conv: vec![0.0; self.n_layer * self.conv_per_layer],
+            ssm: vec![0.0; self.n_layer * self.ssm_per_layer],
+        });
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.slots[slot].is_some(), "double free of slot {slot}");
+        self.slots[slot] = None;
+        self.free.push(slot);
+    }
+
+    pub fn write(&mut self, slot: usize, slab: SsmSlab) {
+        assert_eq!(slab.conv.len(), self.n_layer * self.conv_per_layer);
+        assert_eq!(slab.ssm.len(), self.n_layer * self.ssm_per_layer);
+        self.slots[slot] = Some(slab);
+    }
+
+    pub fn get(&self, slot: usize) -> &SsmSlab {
+        self.slots[slot].as_ref().expect("slot not allocated")
+    }
+
+    /// Pack `slots` into raw batched (L, B, ...) f32 buffers for a
+    /// decode graph of batch `b` (slots.len() ≤ b; missing slots pad
+    /// with zeros — those lanes' outputs are discarded by scatter).
+    /// Raw form feeds `runtime::lit_from_f32` on the hot path.
+    pub fn gather_raw(&self, slots: &[usize], b: usize) -> (Vec<f32>, Vec<f32>) {
+        let (l, cpl, spl) = (self.n_layer, self.conv_per_layer, self.ssm_per_layer);
+        let mut conv = vec![0.0f32; l * b * cpl];
+        let mut ssm = vec![0.0f32; l * b * spl];
+        for (bi, &slot) in slots.iter().enumerate() {
+            let slab = self.get(slot);
+            for li in 0..l {
+                conv[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
+                    .copy_from_slice(&slab.conv[li * cpl..(li + 1) * cpl]);
+                ssm[(li * b + bi) * spl..(li * b + bi + 1) * spl]
+                    .copy_from_slice(&slab.ssm[li * spl..(li + 1) * spl]);
+            }
+        }
+        (conv, ssm)
+    }
+
+    /// Tensor-typed convenience wrapper over [`Self::gather_raw`].
+    pub fn gather(&self, slots: &[usize], b: usize) -> (Tensor, Tensor) {
+        let (conv, ssm) = self.gather_raw(slots, b);
+        let (l, cpl, spl) = (self.n_layer, self.conv_per_layer, self.ssm_per_layer);
+        let di = self.d_inner;
+        let conv_t = Tensor::from_f32(&[l, b, cpl / di, di], &conv);
+        let ssm_t = Tensor::from_f32(&[l, b, di, spl / di], &ssm);
+        (conv_t, ssm_t)
+    }
+
+    /// Scatter raw batched output states back into request slots.
+    pub fn scatter_raw(&mut self, slots: &[usize], b: usize, cf: &[f32], sf: &[f32]) {
+        let l = self.n_layer;
+        let cpl = self.conv_per_layer;
+        let spl = self.ssm_per_layer;
+        debug_assert_eq!(cf.len(), l * b * cpl);
+        debug_assert_eq!(sf.len(), l * b * spl);
+        for (bi, &slot) in slots.iter().enumerate() {
+            let mut slab = SsmSlab {
+                conv: vec![0.0; l * cpl],
+                ssm: vec![0.0; l * spl],
+            };
+            for li in 0..l {
+                slab.conv[li * cpl..(li + 1) * cpl]
+                    .copy_from_slice(&cf[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]);
+                slab.ssm[li * spl..(li + 1) * spl]
+                    .copy_from_slice(&sf[(li * b + bi) * spl..(li * b + bi + 1) * spl]);
+            }
+            self.write(slot, slab);
+        }
+    }
+
+    /// Tensor-typed convenience wrapper over [`Self::scatter_raw`].
+    pub fn scatter(&mut self, slots: &[usize], conv: &Tensor, ssm: &Tensor) {
+        let b = conv.shape[1];
+        self.scatter_raw(slots, b, &conv.to_f32(), &ssm.to_f32());
+    }
+}
+
+/// KV-cache pool for the Transformer baseline: bytes grow linearly
+/// with each request's context length.
+pub struct KvCachePool {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_head: usize,
+    pub max_ctx: usize,
+    /// context length per live request slot
+    lengths: Vec<Option<usize>>,
+    /// capacity watermark in bytes (backpressure trigger)
+    pub byte_budget: usize,
+}
+
+impl KvCachePool {
+    pub fn new(tier: &TransformerTierInfo, capacity: usize, byte_budget: usize) -> Self {
+        KvCachePool {
+            n_layer: tier.n_layer,
+            n_head: tier.n_head,
+            d_head: tier.d_model / tier.n_head,
+            max_ctx: tier.max_ctx,
+            lengths: vec![None; capacity],
+            byte_budget,
+        }
+    }
+
+    /// Bytes one request at context length `ctx` occupies (K + V, f32).
+    pub fn bytes_per_request(&self, ctx: usize) -> usize {
+        2 * 4 * self.n_layer * self.n_head * self.d_head * ctx
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.lengths
+            .iter()
+            .flatten()
+            .map(|&c| self.bytes_per_request(c))
+            .sum()
+    }
+
+    /// Admit a request with prompt length `ctx`; None = backpressure.
+    pub fn alloc(&mut self, ctx: usize) -> Option<usize> {
+        if self.total_bytes() + self.bytes_per_request(ctx) > self.byte_budget {
+            return None;
+        }
+        let slot = self.lengths.iter().position(|l| l.is_none())?;
+        self.lengths[slot] = Some(ctx);
+        Some(slot)
+    }
+
+    pub fn grow(&mut self, slot: usize, by: usize) {
+        if let Some(l) = self.lengths[slot].as_mut() {
+            *l = (*l + by).min(self.max_ctx);
+        }
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        self.lengths[slot] = None;
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.lengths.iter().flatten().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier() -> TierInfo {
+        TierInfo {
+            name: "t".into(),
+            paper_name: "T".into(),
+            d_model: 8,
+            n_layer: 2,
+            d_state: 4,
+            d_conv: 4,
+            d_inner: 16,
+            dt_rank: 1,
+            vocab: 256,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = SsmStatePool::new(&tier(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert!(p.alloc().is_none());
+        assert_eq!(p.in_use(), 3);
+        p.release(b);
+        assert_eq!(p.in_use(), 2);
+        let b2 = p.alloc().unwrap();
+        assert_eq!(b2, b);
+        let _ = (a, c);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = tier();
+        let mut p = SsmStatePool::new(&t, 4);
+        let s0 = p.alloc().unwrap();
+        let s1 = p.alloc().unwrap();
+        // write recognizable values
+        let mut slab = p.get(s0).clone();
+        slab.conv.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        slab.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = -(i as f32));
+        p.write(s0, slab.clone());
+        let (conv, ssm) = p.gather(&[s0, s1], 4);
+        assert_eq!(conv.shape, vec![2, 4, 3, 16]);
+        assert_eq!(ssm.shape, vec![2, 4, 16, 4]);
+        // scatter back into fresh slots and compare
+        let mut p2 = SsmStatePool::new(&t, 4);
+        let d0 = p2.alloc().unwrap();
+        let d1 = p2.alloc().unwrap();
+        p2.scatter(&[d0, d1], &conv, &ssm);
+        assert_eq!(p2.get(d0).conv, slab.conv);
+        assert_eq!(p2.get(d0).ssm, slab.ssm);
+        assert!(p2.get(d1).conv.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn ssm_state_constant_kv_grows() {
+        let t = tier();
+        let p = SsmStatePool::new(&t, 1);
+        let b0 = p.bytes_per_request();
+        // context length does not appear anywhere in the SSM slab
+        assert_eq!(b0, 4 * 2 * (3 * 16 + 16 * 4));
+        let tt = TransformerTierInfo {
+            name: "p".into(),
+            paper_name: "P".into(),
+            d_model: 16,
+            n_layer: 2,
+            n_head: 2,
+            max_ctx: 128,
+            vocab: 256,
+            n_params: 0,
+        };
+        let kv = KvCachePool::new(&tt, 4, usize::MAX);
+        assert!(kv.bytes_per_request(64) == 2 * kv.bytes_per_request(32));
+    }
+
+    #[test]
+    fn kv_backpressure() {
+        let tt = TransformerTierInfo {
+            name: "p".into(),
+            paper_name: "P".into(),
+            d_model: 16,
+            n_layer: 1,
+            n_head: 2,
+            max_ctx: 128,
+            vocab: 256,
+            n_params: 0,
+        };
+        let per32 = 2 * 4 * 1 * 2 * 8 * 32;
+        let mut kv = KvCachePool::new(&tt, 8, per32 * 2);
+        assert!(kv.alloc(32).is_some());
+        assert!(kv.alloc(32).is_some());
+        assert!(kv.alloc(32).is_none(), "watermark must reject the third");
+        kv.release(0);
+        assert!(kv.alloc(32).is_some());
+    }
+}

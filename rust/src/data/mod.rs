@@ -1,0 +1,159 @@
+//! Data loading: token streams, vocab decode, and the six-task
+//! zero-shot suite (all emitted by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::qtz;
+use crate::util::json::{self, Json};
+
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+pub const SEP: u16 = 3;
+
+/// Load a token stream from a `.qtz` (tensor "tokens", u16).
+pub fn load_stream(path: &Path) -> Result<Vec<u16>> {
+    let f = qtz::load(path).with_context(|| format!("loading {path:?}"))?;
+    let t = f
+        .get("tokens")
+        .ok_or_else(|| anyhow!("{path:?}: no 'tokens' tensor"))?;
+    Ok(t.to_u16())
+}
+
+/// Word-level vocab for decoding generations.
+pub struct Vocab {
+    pub words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> Result<Vocab> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text).map_err(|e| anyhow!(e))?;
+        let words = j
+            .get("words")
+            .as_arr()
+            .ok_or_else(|| anyhow!("vocab.json: no words"))?
+            .iter()
+            .filter_map(|w| w.as_str().map(String::from))
+            .collect();
+        Ok(Vocab { words })
+    }
+
+    pub fn decode(&self, ids: &[u16]) -> String {
+        let mut out = Vec::new();
+        for &t in ids {
+            match t {
+                BOS | PAD => {}
+                EOS => break,
+                SEP => out.push("<sep>".to_string()),
+                t => {
+                    let i = t as usize - 4;
+                    out.push(
+                        self.words
+                            .get(i)
+                            .cloned()
+                            .unwrap_or_else(|| format!("<{t}>")),
+                    );
+                }
+            }
+        }
+        out.join(" ")
+    }
+}
+
+/// One zero-shot example.
+#[derive(Debug, Clone)]
+pub enum Example {
+    /// exact-match last-token prediction (lambada-style)
+    ExactLast { prompt: Vec<u16>, target: Vec<u16> },
+    /// choose among continuations by (optionally length-normalized)
+    /// likelihood
+    Choice {
+        prompt: Vec<u16>,
+        choices: Vec<Vec<u16>>,
+        gold: usize,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    /// "exact_last" | "choice" | "choice_norm"
+    pub kind: String,
+    pub examples: Vec<Example>,
+}
+
+pub fn load_tasks(path: &Path) -> Result<Vec<Task>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = json::parse(&text).map_err(|e| anyhow!(e))?;
+    let obj = j.as_obj().ok_or_else(|| anyhow!("tasks.json: not an object"))?;
+    let toks = |v: &Json| -> Vec<u16> {
+        v.as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_i64().map(|n| n as u16)).collect())
+            .unwrap_or_default()
+    };
+    let mut tasks = Vec::new();
+    for (name, t) in obj {
+        let kind = t.get("kind").as_str().unwrap_or("choice").to_string();
+        let mut examples = Vec::new();
+        if let Some(exs) = t.get("examples").as_arr() {
+            for e in exs {
+                if kind == "exact_last" {
+                    examples.push(Example::ExactLast {
+                        prompt: toks(e.get("prompt")),
+                        target: toks(e.get("target")),
+                    });
+                } else {
+                    let choices = e
+                        .get("choices")
+                        .as_arr()
+                        .map(|a| a.iter().map(toks).collect())
+                        .unwrap_or_default();
+                    examples.push(Example::Choice {
+                        prompt: toks(e.get("prompt")),
+                        choices,
+                        gold: e.get("gold").as_usize().unwrap_or(0),
+                    });
+                }
+            }
+        }
+        tasks.push(Task {
+            name: name.clone(),
+            kind,
+            examples,
+        });
+    }
+    Ok(tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tasks_json() {
+        let dir = std::env::temp_dir().join("quamba_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tasks.json");
+        std::fs::write(
+            &p,
+            r#"{"lambada_synth": {"kind": "exact_last",
+                 "examples": [{"prompt": [1,2,3], "target": [9]}]},
+                "piqa_synth": {"kind": "choice",
+                 "examples": [{"prompt": [4], "choices": [[5],[6]], "gold": 1}]}}"#,
+        )
+        .unwrap();
+        let tasks = load_tasks(&p).unwrap();
+        assert_eq!(tasks.len(), 2);
+        let lam = tasks.iter().find(|t| t.name == "lambada_synth").unwrap();
+        match &lam.examples[0] {
+            Example::ExactLast { prompt, target } => {
+                assert_eq!(prompt, &vec![1, 2, 3]);
+                assert_eq!(target, &vec![9]);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+}

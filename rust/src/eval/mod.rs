@@ -1,0 +1,301 @@
+//! Evaluation harness (the lm-eval substitute): perplexity over token
+//! streams and likelihood-scored zero-shot tasks, all through the AOT
+//! prefill graphs — the same code path serving uses, so every accuracy
+//! number in the tables reflects the deployed quantized model.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use crate::data::{Example, Task};
+use crate::runtime::Runtime;
+use crate::tensor::{DType, Tensor};
+
+/// Perplexity of a (tier, method) model over a token stream, evaluated
+/// on non-overlapping windows through the (B=4, T) prefill graph.
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll_sum: f64,
+    pub n_tokens: usize,
+    pub n_windows: usize,
+}
+
+fn log_softmax_pick(logits: &[f32], v: usize, pick: usize) -> f64 {
+    let m = logits.iter().take(v).cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f64;
+    for &l in logits.iter().take(v) {
+        z += ((l - m) as f64).exp();
+    }
+    (logits[pick] - m) as f64 - z.ln()
+}
+
+fn zero_states(mani: &Manifest, tier: &str, b: usize) -> Result<(Tensor, Tensor)> {
+    let t = mani
+        .tiers
+        .get(tier)
+        .ok_or_else(|| anyhow!("unknown tier {tier}"))?;
+    Ok((
+        Tensor::zeros(DType::F32, &[t.n_layer, b, t.d_conv - 1, t.d_inner]),
+        Tensor::zeros(DType::F32, &[t.n_layer, b, t.d_inner, t.d_state]),
+    ))
+}
+
+fn transformer_zero(mani: &Manifest, tier: &str, b: usize) -> Result<(Tensor, Tensor)> {
+    let t = mani
+        .transformer_tiers
+        .get(tier)
+        .ok_or_else(|| anyhow!("unknown transformer tier {tier}"))?;
+    let shape = [t.n_layer, b, t.max_ctx, t.n_head, t.d_model / t.n_head];
+    Ok((Tensor::zeros(DType::F32, &shape), Tensor::zeros(DType::F32, &shape)))
+}
+
+/// Run a prefill graph on a batch of fixed-length windows; returns the
+/// logits tensor (B, T, V).
+pub fn run_prefill(rt: &mut Runtime, graph: &str, tokens: &[i32], b: usize, t: usize) -> Result<Tensor> {
+    let info = rt
+        .manifest()
+        .graphs
+        .get(graph)
+        .ok_or_else(|| anyhow!("unknown graph {graph}"))?
+        .clone();
+    let tok = Tensor::from_i32(&[b, t], tokens);
+    let outputs = match info.family.as_str() {
+        "transformer" => {
+            let (k, v) = transformer_zero(rt.manifest(), &info.tier, b)?;
+            let clen = Tensor::from_i32(&[], &[0]);
+            rt.execute(graph, &[tok, k, v, clen])?
+        }
+        "hybrid" => rt.execute(graph, &[tok])?, // stateless jamba combos
+        _ => {
+            let (conv, ssm) = zero_states(rt.manifest(), &info.tier, b)?;
+            rt.execute(graph, &[tok, conv, ssm])?
+        }
+    };
+    Ok(outputs.into_iter().next().unwrap())
+}
+
+pub fn perplexity(
+    rt: &mut Runtime,
+    tier: &str,
+    method: &str,
+    stream: &[u16],
+    max_windows: usize,
+) -> Result<PplResult> {
+    // prefer the B=4 eval graph; fall back to B=1
+    let mani = rt.manifest();
+    let vocab = mani.vocab_size;
+    let (graph, b, t) = pick_ppl_graph(mani, tier, method)?;
+    let per_call = b * t;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let mut windows = 0usize;
+    let mut pos = 0usize;
+    while pos + per_call + 1 <= stream.len() && windows < max_windows {
+        let mut toks = Vec::with_capacity(per_call);
+        for i in 0..per_call {
+            toks.push(stream[pos + i] as i32);
+        }
+        let logits = run_prefill(rt, &graph, &toks, b, t)?;
+        let lf = logits.to_f32();
+        let v = logits.shape[2];
+        for bi in 0..b {
+            for ti in 0..t - 1 {
+                let next = stream[pos + bi * t + ti + 1] as usize;
+                let row = &lf[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+                nll -= log_softmax_pick(row, vocab, next);
+                count += 1;
+            }
+        }
+        pos += per_call;
+        windows += b;
+    }
+    if count == 0 {
+        return Err(anyhow!("stream too short for {graph}"));
+    }
+    Ok(PplResult {
+        ppl: (nll / count as f64).exp(),
+        nll_sum: nll,
+        n_tokens: count,
+        n_windows: windows,
+    })
+}
+
+fn pick_ppl_graph(mani: &Manifest, tier: &str, method: &str) -> Result<(String, usize, usize)> {
+    for want_b in [4usize, 1] {
+        let mut best: Option<(&str, usize, usize)> = None;
+        for g in mani.graphs.values() {
+            if g.tier == tier && g.method == method && g.kind == "prefill" && g.batch == want_b
+                && g.seq >= 64
+            {
+                if best.map(|(_, _, s)| g.seq < s).unwrap_or(true) {
+                    best = Some((&g.name, g.batch, g.seq));
+                }
+            }
+        }
+        if let Some((n, b, t)) = best {
+            return Ok((n.to_string(), b, t));
+        }
+    }
+    Err(anyhow!("no prefill graph for {tier}/{method}"))
+}
+
+/// Task accuracy via likelihood scoring through the (B=8, T_task)
+/// prefill graph. Sequences are right-padded; only live positions are
+/// read. Returns per-task accuracy in task order.
+pub fn run_tasks(
+    rt: &mut Runtime,
+    tier: &str,
+    method: &str,
+    tasks: &[Task],
+    max_examples: usize,
+) -> Result<Vec<(String, f64)>> {
+    let mani = rt.manifest();
+    let vocab = mani.vocab_size;
+    let (graph, b, t) = pick_task_graph(mani, tier, method)?;
+
+    // Flatten every (example, choice) into one scored sequence.
+    struct Seq {
+        tokens: Vec<u16>,
+        score_from: usize, // first predicted position (prompt_len - 1)
+        task: usize,
+        example: usize,
+        choice: usize, // usize::MAX = exact-match probe
+        target: u16,
+    }
+    let mut seqs = Vec::new();
+    for (tidx, task) in tasks.iter().enumerate() {
+        for (eidx, ex) in task.examples.iter().take(max_examples).enumerate() {
+            match ex {
+                Example::ExactLast { prompt, target } => {
+                    let mut toks = prompt.clone();
+                    toks.truncate(t);
+                    seqs.push(Seq {
+                        score_from: toks.len() - 1,
+                        tokens: toks,
+                        task: tidx,
+                        example: eidx,
+                        choice: usize::MAX,
+                        target: target[0],
+                    });
+                }
+                Example::Choice { prompt, choices, .. } => {
+                    for (ci, ch) in choices.iter().enumerate() {
+                        let mut toks = prompt.clone();
+                        let keep_prompt = prompt.len().min(t - ch.len());
+                        toks.truncate(keep_prompt);
+                        let score_from = toks.len() - 1;
+                        toks.extend_from_slice(ch);
+                        seqs.push(Seq {
+                            tokens: toks,
+                            score_from,
+                            task: tidx,
+                            example: eidx,
+                            choice: ci,
+                            target: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // score all sequences in batches of `b`
+    let mut scores = vec![0.0f64; seqs.len()];
+    let mut exact_hits = vec![false; seqs.len()];
+    for chunk_start in (0..seqs.len()).step_by(b) {
+        let chunk = &seqs[chunk_start..(chunk_start + b).min(seqs.len())];
+        let mut toks = vec![0i32; b * t];
+        for (bi, s) in chunk.iter().enumerate() {
+            for (i, &tk) in s.tokens.iter().enumerate().take(t) {
+                toks[bi * t + i] = tk as i32;
+            }
+        }
+        let logits = run_prefill(rt, &graph, &toks, b, t)?;
+        let lf = logits.to_f32();
+        let v = logits.shape[2];
+        for (bi, s) in chunk.iter().enumerate() {
+            if s.choice == usize::MAX {
+                // exact match: argmax over the last prompt position
+                let row = &lf[(bi * t + s.score_from) * v..(bi * t + s.score_from + 1) * v];
+                let mut arg = 0usize;
+                for j in 1..vocab {
+                    if row[j] > row[arg] {
+                        arg = j;
+                    }
+                }
+                exact_hits[chunk_start + bi] = arg == s.target as usize;
+            } else {
+                let mut lp = 0.0f64;
+                for i in s.score_from..s.tokens.len() - 1 {
+                    let row = &lf[(bi * t + i) * v..(bi * t + i + 1) * v];
+                    lp += log_softmax_pick(row, vocab, s.tokens[i + 1] as usize);
+                }
+                scores[chunk_start + bi] = lp;
+            }
+        }
+    }
+
+    // aggregate per task
+    let mut results = Vec::new();
+    for (tidx, task) in tasks.iter().enumerate() {
+        let n = task.examples.len().min(max_examples);
+        if n == 0 {
+            results.push((task.name.clone(), f64::NAN));
+            continue;
+        }
+        let mut correct = 0usize;
+        match task.kind.as_str() {
+            "exact_last" => {
+                for (si, s) in seqs.iter().enumerate() {
+                    if s.task == tidx && exact_hits[si] {
+                        correct += 1;
+                    }
+                }
+            }
+            kind => {
+                let norm = kind == "choice_norm";
+                for (eidx, ex) in task.examples.iter().take(max_examples).enumerate() {
+                    if let Example::Choice { choices, gold, .. } = ex {
+                        let mut best = (f64::NEG_INFINITY, 0usize);
+                        for (si, s) in seqs.iter().enumerate() {
+                            if s.task == tidx && s.example == eidx && s.choice != usize::MAX {
+                                let len = choices[s.choice].len().max(1) as f64;
+                                let sc = if norm { scores[si] / len } else { scores[si] };
+                                if sc > best.0 {
+                                    best = (sc, s.choice);
+                                }
+                            }
+                        }
+                        if best.1 == *gold {
+                            correct += 1;
+                        }
+                    }
+                }
+            }
+        }
+        results.push((task.name.clone(), correct as f64 / n as f64));
+    }
+    Ok(results)
+}
+
+fn pick_task_graph(mani: &Manifest, tier: &str, method: &str) -> Result<(String, usize, usize)> {
+    for want_b in [8usize, 4, 1] {
+        let mut best: Option<(&str, usize, usize)> = None;
+        for g in mani.graphs.values() {
+            if g.tier == tier && g.method == method && g.kind == "prefill" && g.batch == want_b {
+                if best.map(|(_, _, s)| g.seq < s).unwrap_or(true) {
+                    best = Some((&g.name, g.batch, g.seq));
+                }
+            }
+        }
+        if let Some((n, b, t)) = best {
+            return Ok((n.to_string(), b, t));
+        }
+    }
+    Err(anyhow!("no task graph for {tier}/{method}"))
+}
+
+/// Average of the per-task accuracies (the paper's "Avg." column).
+pub fn average_accuracy(results: &[(String, f64)]) -> f64 {
+    let vals: Vec<f64> = results.iter().map(|(_, a)| *a).filter(|a| !a.is_nan()).collect();
+    vals.iter().sum::<f64>() / vals.len().max(1) as f64
+}

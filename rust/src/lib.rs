@@ -1,0 +1,31 @@
+//! Quamba: a Rust + JAX + Pallas reproduction of
+//! *"Quamba: A Post-Training Quantization Recipe for Selective State
+//! Space Models"* (ICLR 2025).
+//!
+//! Architecture (DESIGN.md):
+//! * **L3 (this crate)** — the serving coordinator: request router,
+//!   bucketed continuous batcher, SSM-state / KV-cache pools, sampler,
+//!   metrics, plus the evaluation + benchmark harnesses that regenerate
+//!   every table and figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — the JAX Mamba /
+//!   Transformer / hybrid models and the Pallas kernels, AOT-lowered to
+//!   HLO text which [`runtime`] loads through the PJRT CPU client.
+//!
+//! The offline vendor set has no tokio/serde/clap/criterion/proptest;
+//! [`util`] provides the std-only substrates (JSON, CLI, PRNG, stats;
+//! a micro property-testing harness lives in `tests/`).
+
+pub mod attn;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod quant;
+pub mod runtime;
+pub mod ssm;
+pub mod tensor;
+pub mod util;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

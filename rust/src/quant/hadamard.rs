@@ -1,0 +1,244 @@
+//! Walsh–Hadamard transform + Paley constructions (paper §3.3).
+//! Mirrors `python/compile/quant/hadamard_util.py`: n = 2^p · m with
+//! m ∈ {1, 12, 20}; the FWHT is the in-place O(n log n) butterfly the
+//! fused Pallas kernel implements, reproduced here for the rust-side
+//! analyses and cross-checks.
+
+/// Legendre symbol (a/q) for odd prime q.
+fn legendre(a: i64, q: i64) -> i64 {
+    let a = a.rem_euclid(q);
+    if a == 0 {
+        return 0;
+    }
+    // a^((q-1)/2) mod q by fast exponentiation
+    let mut base = a % q;
+    let mut e = (q - 1) / 2;
+    let mut acc = 1i64;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc * base % q;
+        }
+        base = base * base % q;
+        e >>= 1;
+    }
+    if acc == 1 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Paley type-I Hadamard matrix H_{q+1} for prime q ≡ 3 (mod 4).
+pub fn paley(q: i64) -> Vec<Vec<f32>> {
+    assert_eq!(q % 4, 3, "Paley-I needs q ≡ 3 (mod 4)");
+    let n = (q + 1) as usize;
+    let mut h = vec![vec![1.0f32; n]; n];
+    for i in 1..n {
+        h[i][0] = -1.0;
+        for j in 1..n {
+            let chi = legendre(j as i64 - i as i64, q);
+            h[i][j] = if i == j { 1.0 } else { chi as f32 };
+        }
+    }
+    h
+}
+
+/// Factor n = 2^p · m with m ∈ {1, 12, 20}. Returns (p, m).
+pub fn decompose(n: usize) -> Option<(u32, usize)> {
+    let mut odd = n;
+    let mut p = 0u32;
+    while odd % 2 == 0 {
+        odd /= 2;
+        p += 1;
+    }
+    match odd {
+        1 => Some((p, 1)),
+        3 | 5 if p >= 2 => Some((p - 2, odd * 4)),
+        _ => None,
+    }
+}
+
+/// Base matrix for m ∈ {1, 12, 20}.
+pub fn base_matrix(m: usize) -> Vec<Vec<f32>> {
+    match m {
+        1 => vec![vec![1.0]],
+        12 => paley(11),
+        20 => paley(19),
+        _ => panic!("no Hadamard base of size {m}"),
+    }
+}
+
+/// In-place FWHT over the last axis of a row-major (rows × n) buffer.
+/// Computes y = H_n x (unnormalized). Panics if n has no construction.
+pub fn fwht_rows(x: &mut [f32], n: usize) {
+    assert_eq!(x.len() % n, 0);
+    let (p, m) = decompose(n).unwrap_or_else(|| panic!("no Hadamard factorization for n={n}"));
+    let rows = x.len() / n;
+    // base m×m contraction first (on contiguous m-blocks)
+    if m > 1 {
+        let hm = base_matrix(m);
+        let mut tmp = vec![0.0f32; m];
+        for r in 0..rows {
+            let row = &mut x[r * n..(r + 1) * n];
+            for blk in row.chunks_exact_mut(m) {
+                for (i, t) in tmp.iter_mut().enumerate() {
+                    *t = (0..m).map(|j| hm[i][j] * blk[j]).sum();
+                }
+                blk.copy_from_slice(&tmp);
+            }
+        }
+    }
+    // 2^p butterfly stages over stride = h*m blocks
+    let mut h = m;
+    while h < n {
+        for r in 0..rows {
+            let row = &mut x[r * n..(r + 1) * n];
+            let mut start = 0;
+            while start < n {
+                for i in start..start + h {
+                    let a = row[i];
+                    let b = row[i + h];
+                    row[i] = a + b;
+                    row[i + h] = a - b;
+                }
+                start += 2 * h;
+            }
+        }
+        h *= 2;
+    }
+    let _ = p;
+}
+
+/// Convenience: transform a single vector, returning a new Vec.
+pub fn fwht(x: &[f32]) -> Vec<f32> {
+    let mut v = x.to_vec();
+    let n = x.len();
+    fwht_rows(&mut v, n);
+    v
+}
+
+/// Inverse transform: x = (1/n) H_nᵀ y. For the 2^p part H = Hᵀ; for
+/// the Paley base Hᵀ ≠ H, so we apply the transpose base explicitly.
+pub fn ifwht(y: &[f32]) -> Vec<f32> {
+    let n = y.len();
+    let (_, m) = decompose(n).unwrap();
+    let mut v = y.to_vec();
+    // butterflies are involutive up to scale; undo them first
+    let mut h = n / 2;
+    while h >= m {
+        let mut start = 0;
+        while start < n {
+            for i in start..start + h {
+                let a = v[i];
+                let b = v[i + h];
+                v[i] = a + b;
+                v[i + h] = a - b;
+            }
+            start += 2 * h;
+        }
+        if h == m {
+            break;
+        }
+        h /= 2;
+    }
+    if m > 1 {
+        let hm = base_matrix(m);
+        let mut tmp = vec![0.0f32; m];
+        for blk in v.chunks_exact_mut(m) {
+            for (i, t) in tmp.iter_mut().enumerate() {
+                *t = (0..m).map(|j| hm[j][i] * blk[j]).sum(); // Hᵀ
+            }
+            blk.copy_from_slice(&tmp);
+        }
+    }
+    for x in v.iter_mut() {
+        *x /= n as f32;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn paley_orthogonal() {
+        for q in [11i64, 19] {
+            let h = paley(q);
+            let n = (q + 1) as usize;
+            for i in 0..n {
+                for j in 0..n {
+                    let dot: f32 = (0..n).map(|k| h[i][k] * h[j][k]).sum();
+                    let expect = if i == j { n as f32 } else { 0.0 };
+                    assert!((dot - expect).abs() < 1e-3, "q={q} i={i} j={j} dot={dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_inverse_roundtrip() {
+        let mut rng = Pcg32::new(7);
+        for n in [8usize, 64, 96, 128, 160, 192, 256, 320] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y = fwht(&x);
+            let back = ifwht(&y);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-3, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_energy() {
+        // Parseval: ||Hx||² = n ||x||²
+        let mut rng = Pcg32::new(3);
+        for n in [64usize, 192, 320] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y = fwht(&x);
+            let ex: f32 = x.iter().map(|v| v * v).sum();
+            let ey: f32 = y.iter().map(|v| v * v).sum();
+            assert!((ey / (n as f32 * ex) - 1.0).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fwht_smooths_outliers() {
+        // The paper's use-case (§4.2): quantizing in the rotated space
+        // preserves the small values that a direct outlier-skewed scale
+        // crushes. Compare end-to-end reconstruction error.
+        let n = 256;
+        let mut rng = Pcg32::new(11);
+        let mut x: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal()).collect();
+        x[17] = 100.0; // one massive outlier channel
+
+        // direct: quantize x with its own abs-max scale
+        let s_d = crate::quant::scale_sym(crate::quant::amax(&x), 8);
+        let mut direct = x.clone();
+        crate::quant::fake_quant_sym(&mut direct, s_d, 8);
+        let err_direct: f32 = x.iter().zip(&direct).map(|(a, b)| (a - b) * (a - b)).sum();
+
+        // rotated: quantize Hx, reconstruct via (1/n)Hᵀ
+        let mut y = fwht(&x);
+        let s_r = crate::quant::scale_sym(crate::quant::amax(&y), 8);
+        crate::quant::fake_quant_sym(&mut y, s_r, 8);
+        let back = ifwht(&y);
+        let err_rot: f32 = x.iter().zip(&back).map(|(a, b)| (a - b) * (a - b)).sum();
+
+        assert!(
+            err_rot * 4.0 < err_direct,
+            "rotated err {err_rot} should be ≪ direct err {err_direct}"
+        );
+    }
+
+    #[test]
+    fn decompose_all_tiers() {
+        assert_eq!(decompose(128), Some((7, 1)));
+        assert_eq!(decompose(192), Some((4, 12)));
+        assert_eq!(decompose(256), Some((8, 1)));
+        assert_eq!(decompose(320), Some((4, 20)));
+        assert_eq!(decompose(96), Some((3, 12)));
+        assert_eq!(decompose(7), None);
+    }
+}

@@ -1,0 +1,217 @@
+//! Rust-side quantization library: the same primitives as
+//! `python/compile/quant/`, used by the pure-rust SSM/attention
+//! reference simulators, the Figure 2/5/6/8/10 analyses, and the
+//! coordinator's size accounting. Numerics match the python
+//! implementations (cross-checked via the `.qtz` artifacts in
+//! integration tests).
+
+pub mod hadamard;
+
+/// Largest representable magnitude at bit-width `n` (signed symmetric).
+pub fn qmax(nbits: u32) -> f32 {
+    ((1i32 << (nbits - 1)) - 1) as f32
+}
+
+pub fn qmin(nbits: u32) -> f32 {
+    -((1i32 << (nbits - 1)) as f32)
+}
+
+/// Symmetric scale from an absolute max (Eq. 2 of the paper).
+pub fn scale_sym(amax: f32, nbits: u32) -> f32 {
+    amax.max(1e-8) / qmax(nbits)
+}
+
+/// Quantize one value to the signed grid.
+pub fn quantize_one(x: f32, s: f32, nbits: u32) -> i32 {
+    (x / s).round().clamp(qmin(nbits), qmax(nbits)) as i32
+}
+
+/// Quantize a slice; returns i8 codes (nbits ≤ 8).
+pub fn quantize_sym(xs: &[f32], s: f32, nbits: u32) -> Vec<i8> {
+    debug_assert!(nbits <= 8);
+    xs.iter().map(|&x| quantize_one(x, s, nbits) as i8).collect()
+}
+
+pub fn dequantize_sym(q: &[i8], s: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * s).collect()
+}
+
+/// Fake-quant round trip (quantize-dequantize) in place.
+pub fn fake_quant_sym(xs: &mut [f32], s: f32, nbits: u32) {
+    for x in xs.iter_mut() {
+        *x = quantize_one(*x, s, nbits) as f32 * s;
+    }
+}
+
+/// Absolute maximum of a slice.
+pub fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// The paper's percentile max (§4.2): the p-th percentile of |x|,
+/// p in percent (99.999 keeps all but the top 0.001%).
+pub fn percentile_amax(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    if p >= 100.0 {
+        return amax(xs);
+    }
+    let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = (rank - lo as f64) as f32;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Asymmetric parameters from observed (min, max).
+pub fn asym_params(xmin: f32, xmax: f32, nbits: u32) -> (f32, i32) {
+    let lo = xmin.min(0.0);
+    let hi = xmax.max(0.0);
+    let s = ((hi - lo) as f64 / ((1u32 << nbits) - 1) as f64).max(1e-8) as f32;
+    let z = (-lo / s).round() as i32;
+    (s, z)
+}
+
+pub fn fake_quant_asym(xs: &mut [f32], s: f32, z: i32, nbits: u32) {
+    let hi = ((1u32 << nbits) - 1) as f32;
+    for x in xs.iter_mut() {
+        let q = ((*x / s).round() + z as f32).clamp(0.0, hi);
+        *x = (q - z as f32) * s;
+    }
+}
+
+/// FP8 fake-quantization (paper §F "other alternatives": E4M3/E5M2 on
+/// NVIDIA Hopper as a possible SSM-input format — probed here as the
+/// `ext_fp8` extension experiment). Rounds to the nearest representable
+/// value of an (exp_bits, man_bits) minifloat with IEEE-style bias,
+/// subnormals, and saturation to the max finite value.
+pub fn fake_quant_fp8_one(x: f32, exp_bits: i32, man_bits: i32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return if x.is_finite() { 0.0 } else { x.signum() * fp8_max(exp_bits, man_bits) };
+    }
+    let bias = (1 << (exp_bits - 1)) - 1;
+    let e_min = 1 - bias; // smallest normal exponent
+    let sign = x.signum();
+    let a = x.abs();
+    let e = a.log2().floor() as i32;
+    let e_clamped = e.max(e_min);
+    // quantize the significand on a 2^man_bits grid at exponent e
+    let scale = 2f32.powi(e_clamped - man_bits);
+    let q = (a / scale).round() * scale;
+    let max = fp8_max(exp_bits, man_bits);
+    sign * q.min(max)
+}
+
+fn fp8_max(exp_bits: i32, man_bits: i32) -> f32 {
+    let bias = (1 << (exp_bits - 1)) - 1;
+    // E4M3 convention: top exponent kept for normals (minus one NaN code)
+    let e_max = (1 << exp_bits) - 2 - bias + 1;
+    (2.0 - 2f32.powi(-man_bits)) * 2f32.powi(e_max - 1)
+}
+
+/// In-place FP8 round trip with a per-tensor scale into the format's
+/// dynamic range (like the int8 path's amax scaling).
+pub fn fake_quant_fp8(xs: &mut [f32], exp_bits: i32, man_bits: i32) {
+    let am = amax(xs).max(1e-8);
+    let s = fp8_max(exp_bits, man_bits) / am;
+    for x in xs.iter_mut() {
+        *x = fake_quant_fp8_one(*x * s, exp_bits, man_bits) / s;
+    }
+}
+
+/// Mean-squared quantization error of a fake-quant round trip.
+pub fn mse_of_quant(xs: &[f32], s: f32, nbits: u32) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in xs {
+        let xq = quantize_one(x, s, nbits) as f32 * s;
+        let d = (x - xq) as f64;
+        acc += d * d;
+    }
+    acc / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_small_error() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i as f32) / 100.0).sin()).collect();
+        let s = scale_sym(amax(&xs), 8);
+        let q = quantize_sym(&xs, s, 8);
+        let d = dequantize_sym(&q, s);
+        for (a, b) in xs.iter().zip(&d) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut xs = vec![0.5f32; 10_000];
+        xs[0] = 100.0; // one massive outlier
+        let naive = scale_sym(amax(&xs), 8);
+        let clipped = scale_sym(percentile_amax(&xs, 99.9), 8);
+        assert!(clipped < naive / 50.0, "clipped={clipped} naive={naive}");
+    }
+
+    #[test]
+    fn asym_covers_range() {
+        let (s, z) = asym_params(-1.0, 3.0, 8);
+        let mut xs = vec![-1.0f32, 0.0, 3.0];
+        fake_quant_asym(&mut xs, s, z, 8);
+        assert!((xs[0] + 1.0).abs() < 0.05);
+        assert!(xs[1].abs() < 0.02);
+        assert!((xs[2] - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn fp8_exact_on_representable_values() {
+        // powers of two and small integers are exactly representable
+        for v in [1.0f32, 2.0, 0.5, 0.25, 3.0, -6.0] {
+            assert_eq!(fake_quant_fp8_one(v, 4, 3), v, "E4M3 {v}");
+            assert_eq!(fake_quant_fp8_one(v, 5, 2), v, "E5M2 {v}");
+        }
+    }
+
+    #[test]
+    fn fp8_relative_error_bounded() {
+        let mut r = crate::util::rng::Pcg32::new(9);
+        for _ in 0..2000 {
+            let x = r.normal() * 10f32.powf(r.range_f32(-2.0, 2.0));
+            let q = fake_quant_fp8_one(x, 4, 3);
+            if x.abs() < fp8_max(4, 3) && x.abs() > 2f32.powi(-6) {
+                let rel = (x - q).abs() / x.abs();
+                assert!(rel <= 2f32.powi(-3) / 2.0 + 1e-6, "x={x} q={q} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_better_than_int8_on_outlier_skewed_data() {
+        // the paper's §F motivation: exponent formats keep small values
+        // when the range is skewed by outliers
+        let mut r = crate::util::rng::Pcg32::new(4);
+        let mut xs: Vec<f32> = (0..4096).map(|_| 0.01 * r.normal()).collect();
+        xs[0] = 50.0;
+        let mut int8 = xs.clone();
+        let s = scale_sym(amax(&xs), 8);
+        fake_quant_sym(&mut int8, s, 8);
+        let mut fp8 = xs.clone();
+        fake_quant_fp8(&mut fp8, 4, 3);
+        let err = |ys: &[f32]| -> f64 {
+            xs.iter().zip(ys).skip(1).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(err(&fp8) < err(&int8) / 10.0);
+    }
+
+    #[test]
+    fn four_bit_coarser_than_eight() {
+        let xs: Vec<f32> = (0..512).map(|i| (i as f32 / 37.0).cos()).collect();
+        let s8 = scale_sym(amax(&xs), 8);
+        let s4 = scale_sym(amax(&xs), 4);
+        assert!(mse_of_quant(&xs, s4, 4) > 10.0 * mse_of_quant(&xs, s8, 8));
+    }
+}

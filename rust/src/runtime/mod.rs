@@ -1,0 +1,382 @@
+//! PJRT runtime: load AOT-compiled HLO text, upload weights once as
+//! device buffers, execute prefill/decode steps from the rust hot path.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO *text* is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax ≥0.5 emits).
+//!
+//! Threading: `PjRtClient` is `Rc`-based (not `Send`), so one
+//! [`Runtime`] lives on a dedicated executor thread inside the
+//! coordinator; everything else talks to it over channels — the same
+//! single-owner discipline a GPU stream requires.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{GraphInfo, Manifest};
+use crate::tensor::{qtz, DType, Tensor};
+
+/// Host→device bridge for one graph + its resident weight buffers.
+pub struct LoadedModel {
+    pub info: GraphInfo,
+    exe: xla::PjRtLoadedExecutable,
+    /// weights uploaded once; passed by reference on every execute
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// host literals backing the uploads — `execute_b` does NOT await
+    /// the host→device transfer, so the source literal must stay alive
+    /// as long as the buffer may still be read (see xla_rs.cc:execute)
+    _weight_lits: Vec<xla::Literal>,
+    pub weight_bytes: usize,
+    pub compile_ms: f64,
+}
+
+fn dtype_to_elem(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::I32 => xla::ElementType::S32,
+        DType::U16 => xla::ElementType::U16,
+        DType::I64 => xla::ElementType::S64,
+        DType::U8 => xla::ElementType::U8,
+    }
+}
+
+fn elem_to_dtype(e: xla::ElementType) -> Option<DType> {
+    Some(match e {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::S8 => DType::I8,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::U16 => DType::U16,
+        xla::ElementType::S64 => DType::I64,
+        xla::ElementType::U8 => DType::U8,
+        _ => return None,
+    })
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(dtype_to_elem(t.dtype), &t.shape, &t.data)
+        .map_err(|e| anyhow!("literal create failed: {e:?}"))
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dtype = elem_to_dtype(shape.element_type())
+        .ok_or_else(|| anyhow!("unsupported element type {:?}", shape.element_type()))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let n: usize = dims.iter().product();
+    let mut bytes = vec![0u8; n * dtype.itemsize()];
+    match dtype {
+        DType::F32 => {
+            let mut v = vec![0f32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 4..(i + 1) * 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::I32 => {
+            let mut v = vec![0i32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 4..(i + 1) * 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::I8 => {
+            let mut v = vec![0i8; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i] = *x as u8;
+            }
+        }
+        DType::U8 => {
+            lit.copy_raw_to(&mut bytes).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+        }
+        DType::U16 => {
+            let mut v = vec![0u16; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 2..(i + 1) * 2].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::I64 => {
+            let mut v = vec![0i64; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 8..(i + 1) * 8].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    Ok(Tensor::new(dtype, dims, bytes))
+}
+
+/// The PJRT runtime: client + compile cache + weight-bundle cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    manifest: Manifest,
+    models: BTreeMap<String, LoadedModel>,
+    weight_tensors: BTreeMap<String, Vec<(String, Tensor)>>,
+    pub stats: RuntimeStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executes: usize,
+    pub compile_ms_total: f64,
+    pub resident_weight_bytes: usize,
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_root).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            models: BTreeMap::new(),
+            weight_tensors: BTreeMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load a weight bundle (cached) in manifest parameter order.
+    fn weight_list(&mut self, key: &str) -> Result<&Vec<(String, Tensor)>> {
+        if !self.weight_tensors.contains_key(key) {
+            let info = self
+                .manifest
+                .weights
+                .get(key)
+                .ok_or_else(|| anyhow!("unknown weight bundle {key}"))?
+                .clone();
+            let q = qtz::load(&info.file).with_context(|| format!("loading {:?}", info.file))?;
+            let mut list = Vec::with_capacity(info.params.len());
+            for name in &info.params {
+                let t = q
+                    .get(name)
+                    .ok_or_else(|| anyhow!("{key}: missing weight {name}"))?
+                    .clone();
+                list.push((name.clone(), t));
+            }
+            self.weight_tensors.insert(key.to_string(), list);
+        }
+        Ok(&self.weight_tensors[key])
+    }
+
+    /// Raw weight tensors of a bundle (for the rust reference sims).
+    pub fn weight_qtz(&self, key: &str) -> Result<qtz::QtzFile> {
+        let info = self
+            .manifest
+            .weights
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown weight bundle {key}"))?;
+        Ok(qtz::load(&info.file)?)
+    }
+
+    /// Compile a graph (cached) and upload its weights as device
+    /// buffers (once per graph).
+    pub fn load(&mut self, graph_name: &str) -> Result<&LoadedModel> {
+        if !self.models.contains_key(graph_name) {
+            let info = self
+                .manifest
+                .graphs
+                .get(graph_name)
+                .ok_or_else(|| anyhow!("unknown graph {graph_name}"))?
+                .clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                info.file.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse HLO {:?}: {e:?}", info.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {graph_name}: {e:?}"))?;
+            let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let wkey = info.weights_key.clone();
+            // graphs with baked-in constants (e.g. the Jamba Table 4
+            // combos) have no weight bundle
+            let wl: Vec<(String, Tensor)> = if wkey.is_empty() {
+                Vec::new()
+            } else {
+                self.weight_list(&wkey)?.clone()
+            };
+            let mut weight_bufs = Vec::with_capacity(wl.len());
+            let mut weight_lits = Vec::with_capacity(wl.len());
+            let mut weight_bytes = 0;
+            for (_, t) in &wl {
+                weight_bytes += t.nbytes();
+                let lit = tensor_to_literal(t)?;
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("weight upload: {e:?}"))?;
+                weight_bufs.push(buf);
+                weight_lits.push(lit);
+            }
+            self.stats.compiles += 1;
+            self.stats.compile_ms_total += compile_ms;
+            self.stats.resident_weight_bytes =
+                self.stats.resident_weight_bytes.max(weight_bytes);
+            self.models.insert(
+                graph_name.to_string(),
+                LoadedModel {
+                    info,
+                    exe,
+                    weight_bufs,
+                    _weight_lits: weight_lits,
+                    weight_bytes,
+                    compile_ms,
+                },
+            );
+        }
+        Ok(&self.models[graph_name])
+    }
+
+    pub fn is_loaded(&self, graph_name: &str) -> bool {
+        self.models.contains_key(graph_name)
+    }
+
+    /// Execute a loaded graph on host tensors. `inputs` are the
+    /// non-weight leading parameters (tokens, states, ...); weights are
+    /// appended from the resident device buffers. Returns the output
+    /// tuple elements as host tensors.
+    pub fn execute(&mut self, graph_name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(graph_name)?;
+        let model = &self.models[graph_name];
+        // NB: keep the input literals alive until the outputs are
+        // materialized — execute_b does not await the input transfers.
+        let mut input_lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = tensor_to_literal(t)?;
+            args.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("input upload: {e:?}"))?,
+            );
+            input_lits.push(lit);
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        refs.extend(model.weight_bufs.iter());
+        let out = model
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {graph_name}: {e:?}"))?;
+        self.stats.executes += 1;
+        let first = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        let mut tensors = Vec::new();
+        if first.len() == 1 {
+            // single tuple buffer: pull to host and split
+            let lit = first[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            if lit.array_shape().is_ok() {
+                // plain array output (single-output graph)
+                tensors.push(literal_to_tensor(&lit)?);
+            } else {
+                for e in lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))? {
+                    tensors.push(literal_to_tensor(&e)?);
+                }
+            }
+        } else {
+            for buf in first {
+                let lit = buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                tensors.push(literal_to_tensor(&lit)?);
+            }
+        }
+        if tensors.is_empty() {
+            bail!("graph {graph_name} produced no outputs");
+        }
+        drop(input_lits); // outputs are on host; transfers are done
+        Ok(tensors)
+    }
+
+    /// Total bytes of a tier+method's resident weights (Table 1 size).
+    pub fn model_bytes(&self, weights_key: &str) -> Option<usize> {
+        self.manifest.weights.get(weights_key).map(|w| w.bytes)
+    }
+
+    /// Hot-path execute: literals in, literals out — skips the
+    /// byte-level `Tensor` round-trips of [`Runtime::execute`] (§Perf:
+    /// the decode loop moves ~1 MB of state per step at B=8; the typed
+    /// literal path saves four per-element byte-conversion passes).
+    pub fn execute_lit(
+        &mut self,
+        graph_name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.load(graph_name)?;
+        let model = &self.models[graph_name];
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for lit in inputs {
+            args.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("input upload: {e:?}"))?,
+            );
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        refs.extend(model.weight_bufs.iter());
+        let out = model
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {graph_name}: {e:?}"))?;
+        self.stats.executes += 1;
+        let first = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        let mut lits = Vec::new();
+        for buf in first {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            if lit.array_shape().is_ok() {
+                lits.push(lit);
+            } else {
+                lits.extend(lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?);
+            }
+        }
+        if lits.is_empty() {
+            bail!("graph {graph_name} produced no outputs");
+        }
+        Ok(lits)
+    }
+}
+
+/// Typed literal constructors/readers for the hot path (single copy,
+/// no per-element byte packing).
+pub fn lit_from_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, shape);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("copy_raw_from: {e:?}"))?;
+    Ok(lit)
+}
+
+pub fn lit_from_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, shape);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("copy_raw_from: {e:?}"))?;
+    Ok(lit)
+}
+
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    let n = lit.element_count();
+    let mut v = vec![0f32; n];
+    lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy_raw_to: {e:?}"))?;
+    Ok(v)
+}

@@ -1,0 +1,367 @@
+//! Pure-rust fp32 Mamba model over `.qtz` weights — the instrumentable
+//! reference simulator (Fig. 2/8/10/12 analyses + runtime cross-check).
+//!
+//! Matches `python/compile/model.py::forward_fp` (including the
+//! outlier-injection gain diagonals shipped as `__gains.*` in the
+//! weight bundle). Single-sequence (B=1) — the analyses never batch.
+
+use crate::quant;
+use crate::tensor::qtz::QtzFile;
+
+#[derive(Debug, Clone)]
+pub struct MambaTier {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub d_inner: usize,
+    pub dt_rank: usize,
+    pub vocab: usize,
+}
+
+/// Which tensor sites to fake-quantize during a forward pass — the
+/// instrument behind the Figure 2/6/10 sensitivity analyses.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSites {
+    pub bits: u32,
+    pub x_ssm: bool,
+    pub y_out: bool,
+    pub b: bool,
+    pub c: bool,
+    pub dt: bool,
+    pub conv_in: bool,
+    pub gated: bool,
+    /// clip percentile for the x site (100 = abs-max)
+    pub x_percentile: f64,
+    /// rotate the gated tensor with H before quantizing (Quamba out)
+    pub y_hadamard: bool,
+    /// restrict quantization to these layers (None = all) — the paper
+    /// §D future-work probe: "layers closer to the model output have
+    /// larger outlier values, suggesting different quantization
+    /// schemes can be applied to the earlier layers"
+    pub layer_mask: Option<Vec<bool>>,
+    /// quantize the x site with an FP8 minifloat instead of int8 —
+    /// (exp_bits, man_bits), e.g. (4,3)=E4M3, (5,2)=E5M2 (paper §F)
+    pub x_fp8: Option<(i32, i32)>,
+}
+
+impl QuantSites {
+    pub fn none() -> Self {
+        QuantSites { bits: 8, x_percentile: 100.0, ..Default::default() }
+    }
+
+    fn layer_on(&self, li: usize) -> bool {
+        self.layer_mask.as_ref().map(|m| m.get(li).copied().unwrap_or(true)).unwrap_or(true)
+    }
+}
+
+/// Per-layer activation statistics collected during a forward pass
+/// (drives the Fig. 3/8/12 distribution dumps).
+#[derive(Debug, Clone, Default)]
+pub struct LayerTaps {
+    pub x_ssm_absmax: f32,
+    pub x_ssm_p99: f32,
+    pub y_absmax: f32,
+    pub gated_absmax: f32,
+    pub gated_h_absmax: f32,
+    pub conv_in_absmax: f32,
+}
+
+pub struct MambaModel {
+    pub tier: MambaTier,
+    // weights, all fp32 row-major
+    embedding: Vec<f32>,            // (V, d)
+    norm_f: Vec<f32>,               // (d,)
+    layers: Vec<Layer>,
+    g_x: Vec<f32>,                  // (L, di)
+    g_y: Vec<f32>,                  // (L, di)
+}
+
+struct Layer {
+    norm: Vec<f32>,       // (d,)
+    in_proj: Vec<f32>,    // (d, 2di)
+    conv_w: Vec<f32>,     // (W, di)
+    conv_b: Vec<f32>,     // (di,)
+    x_proj: Vec<f32>,     // (di, r+2n)
+    dt_proj: Vec<f32>,    // (r, di)
+    dt_bias: Vec<f32>,    // (di,)
+    a: Vec<f32>,          // (di, n) = -exp(A_log)
+    d: Vec<f32>,          // (di,)
+    out_proj: Vec<f32>,   // (di, d)
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// y (M×N) = x (M×K) @ w (K×N)
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let xv = x[i * k + p];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], d: usize, eps: f32, out: &mut [f32]) {
+    for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = row_in.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for j in 0..d {
+            row_out[j] = row_in[j] * r * w[j];
+        }
+    }
+}
+
+fn maybe_quant(site_on: bool, xs: &mut [f32], bits: u32, pctl: f64) {
+    if !site_on {
+        return;
+    }
+    let am = if pctl >= 100.0 {
+        quant::amax(xs)
+    } else {
+        quant::percentile_amax(xs, pctl)
+    };
+    let s = quant::scale_sym(am, bits);
+    quant::fake_quant_sym(xs, s, bits);
+}
+
+impl MambaModel {
+    /// Load the fp16-method weight bundle for a tier.
+    pub fn from_qtz(tier: MambaTier, q: &QtzFile) -> Result<MambaModel, String> {
+        let f32s = |name: &str| -> Result<Vec<f32>, String> {
+            q.get(name)
+                .map(|t| t.to_f32())
+                .ok_or_else(|| format!("missing tensor {name}"))
+        };
+        let mut layers = Vec::with_capacity(tier.n_layer);
+        for i in 0..tier.n_layer {
+            let p = format!("layers.{i}.");
+            layers.push(Layer {
+                norm: f32s(&format!("{p}norm.weight"))?,
+                in_proj: f32s(&format!("{p}in_proj.weight"))?,
+                conv_w: f32s(&format!("{p}conv1d.weight"))?,
+                conv_b: f32s(&format!("{p}conv1d.bias"))?,
+                x_proj: f32s(&format!("{p}x_proj.weight"))?,
+                dt_proj: f32s(&format!("{p}dt_proj.weight"))?,
+                dt_bias: f32s(&format!("{p}dt_proj.bias"))?,
+                a: f32s(&format!("{p}A_log"))?
+                    .iter()
+                    .map(|v| -v.exp())
+                    .collect(),
+                d: f32s(&format!("{p}D"))?,
+                out_proj: f32s(&format!("{p}out_proj.weight"))?,
+            });
+        }
+        let di = tier.d_inner;
+        let ones = vec![1.0f32; tier.n_layer * di];
+        Ok(MambaModel {
+            embedding: f32s("embedding.weight")?,
+            norm_f: f32s("norm_f.weight")?,
+            layers,
+            g_x: f32s("__gains.g_x").unwrap_or_else(|_| ones.clone()),
+            g_y: f32s("__gains.g_y").unwrap_or(ones),
+            tier,
+        })
+    }
+
+    /// Forward over a token sequence (B=1). Returns logits (T × V).
+    /// `sites` selects fake-quantized tensors; `taps` (if given)
+    /// collects per-layer activation stats.
+    pub fn forward(
+        &self,
+        tokens: &[u16],
+        sites: &QuantSites,
+        mut taps: Option<&mut Vec<LayerTaps>>,
+    ) -> Vec<f32> {
+        let t = self.tier.clone();
+        let (d, di, n, r, w, tl) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv, tokens.len());
+        let mut resid = vec![0.0f32; tl * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            resid[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let mut x_in = vec![0.0f32; tl * d];
+        let mut xz = vec![0.0f32; tl * 2 * di];
+        let mut bcdt = vec![0.0f32; tl * (r + 2 * n)];
+        let mut out = vec![0.0f32; tl * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&resid, &layer.norm, d, 1e-5, &mut x_in);
+            matmul(&x_in, &layer.in_proj, tl, d, 2 * di, &mut xz);
+            // split x / z
+            let mut x: Vec<f32> = (0..tl)
+                .flat_map(|i| xz[i * 2 * di..i * 2 * di + di].to_vec())
+                .collect();
+            let z: Vec<f32> = (0..tl)
+                .flat_map(|i| xz[i * 2 * di + di..(i + 1) * 2 * di].to_vec())
+                .collect();
+            let conv_in_absmax = quant::amax(&x);
+            maybe_quant(sites.conv_in && sites.layer_on(li), &mut x, sites.bits, 100.0);
+            // causal depthwise conv + SiLU + x-gain
+            let gx = &self.g_x[li * di..(li + 1) * di];
+            let mut xs = vec![0.0f32; tl * di];
+            for ti in 0..tl {
+                for ch in 0..di {
+                    let mut acc = layer.conv_b[ch];
+                    for j in 0..w {
+                        let src = ti as isize - (w as isize - 1) + j as isize;
+                        if src >= 0 {
+                            acc += x[src as usize * di + ch] * layer.conv_w[j * di + ch];
+                        }
+                    }
+                    xs[ti * di + ch] = silu(acc) * gx[ch];
+                }
+            }
+            let x_ssm_absmax = quant::amax(&xs);
+            let x_ssm_p99 = quant::percentile_amax(&xs, 99.0);
+            if sites.layer_on(li) {
+                if let Some((e, m)) = sites.x_fp8 {
+                    quant::fake_quant_fp8(&mut xs, e, m);
+                } else {
+                    maybe_quant(sites.x_ssm, &mut xs, sites.bits, sites.x_percentile);
+                }
+            }
+            // selection projections
+            matmul(&xs, &layer.x_proj, tl, di, r + 2 * n, &mut bcdt);
+            let mut dt_low = vec![0.0f32; tl * r];
+            let mut bmat = vec![0.0f32; tl * n];
+            let mut cmat = vec![0.0f32; tl * n];
+            for ti in 0..tl {
+                dt_low[ti * r..(ti + 1) * r].copy_from_slice(&bcdt[ti * (r + 2 * n)..ti * (r + 2 * n) + r]);
+                bmat[ti * n..(ti + 1) * n]
+                    .copy_from_slice(&bcdt[ti * (r + 2 * n) + r..ti * (r + 2 * n) + r + n]);
+                cmat[ti * n..(ti + 1) * n]
+                    .copy_from_slice(&bcdt[ti * (r + 2 * n) + r + n..(ti + 1) * (r + 2 * n)]);
+            }
+            maybe_quant(sites.dt && sites.layer_on(li), &mut dt_low, sites.bits, 100.0);
+            maybe_quant(sites.b && sites.layer_on(li), &mut bmat, sites.bits, 100.0);
+            maybe_quant(sites.c && sites.layer_on(li), &mut cmat, sites.bits, 100.0);
+            let mut dt = vec![0.0f32; tl * di];
+            matmul(&dt_low, &layer.dt_proj, tl, r, di, &mut dt);
+            for ti in 0..tl {
+                for ch in 0..di {
+                    dt[ti * di + ch] = softplus(dt[ti * di + ch] + layer.dt_bias[ch]);
+                }
+            }
+            // scan
+            let p = super::scan::ScanParams { a: &layer.a, d: &layer.d, d_inner: di, n_state: n };
+            let mut h = vec![0.0f32; di * n];
+            let mut y = super::scan::selective_scan(&p, &xs, &dt, &bmat, &cmat, &mut h);
+            let y_absmax = quant::amax(&y);
+            maybe_quant(sites.y_out && sites.layer_on(li), &mut y, sites.bits, 100.0);
+            // gate + y-gain
+            let gy = &self.g_y[li * di..(li + 1) * di];
+            let mut gated = vec![0.0f32; tl * di];
+            for ti in 0..tl {
+                for ch in 0..di {
+                    gated[ti * di + ch] = y[ti * di + ch] * silu(z[ti * di + ch]) * gy[ch];
+                }
+            }
+            let gated_absmax = quant::amax(&gated);
+            let mut gated_h_absmax = 0.0f32;
+            if sites.gated && sites.layer_on(li) {
+                if sites.y_hadamard {
+                    // rotate → quantize → rotate back (compute-invariant
+                    // analog of the fused-Hadamard deployment path)
+                    crate::quant::hadamard::fwht_rows(&mut gated, di);
+                    gated_h_absmax = quant::amax(&gated);
+                    let s = quant::scale_sym(gated_h_absmax, sites.bits);
+                    quant::fake_quant_sym(&mut gated, s, sites.bits);
+                    let mut und = Vec::with_capacity(gated.len());
+                    for row in gated.chunks_exact(di) {
+                        und.extend(crate::quant::hadamard::ifwht(row));
+                    }
+                    gated = und;
+                } else {
+                    maybe_quant(true, &mut gated, sites.bits, 100.0);
+                }
+            }
+            if taps.is_some() && gated_h_absmax == 0.0 {
+                let mut gh = gated.clone();
+                crate::quant::hadamard::fwht_rows(&mut gh, di);
+                gated_h_absmax = quant::amax(&gh);
+            }
+            matmul(&gated, &layer.out_proj, tl, di, d, &mut out);
+            for i in 0..resid.len() {
+                resid[i] += out[i];
+            }
+            if let Some(tv) = taps.as_deref_mut() {
+                tv.push(LayerTaps {
+                    x_ssm_absmax,
+                    x_ssm_p99,
+                    y_absmax,
+                    gated_absmax,
+                    gated_h_absmax,
+                    conv_in_absmax,
+                });
+            }
+        }
+        let mut fin = vec![0.0f32; tl * d];
+        rmsnorm(&resid, &self.norm_f, d, 1e-5, &mut fin);
+        // logits = fin @ embeddingᵀ
+        let v = self.tier.vocab;
+        let mut logits = vec![0.0f32; tl * v];
+        for ti in 0..tl {
+            for tok in 0..v {
+                let erow = &self.embedding[tok * d..(tok + 1) * d];
+                let frow = &fin[ti * d..(ti + 1) * d];
+                logits[ti * v + tok] = erow.iter().zip(frow).map(|(a, b)| a * b).sum();
+            }
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // end-to-end checks live in rust/tests/ (they need artifacts);
+    // here only pure-math units.
+    use super::*;
+
+    #[test]
+    fn silu_softplus_sane() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!(softplus(30.0) - 30.0 < 1e-3);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let mut out = vec![0.0; 4];
+        matmul(&x, &eye, 2, 2, 2, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rmsnorm(&x, &w, 2, 0.0, &mut out);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-rust selective-SSM substrate: the CPU reference simulator.
+//!
+//! The request path executes AOT-compiled HLO ([`crate::runtime`]);
+//! this module exists because the paper's analyses need a model we can
+//! instrument arbitrarily: per-tensor quantization-error propagation
+//! (Fig. 2/10), activation distributions (Fig. 3/8/12), the LTI error
+//! bound (Thm 4.1 / Fig. 5 via [`hippo`]), and property tests of scan
+//! invariants that would be awkward through PJRT. It also cross-checks
+//! the runtime's outputs bit-for-bit-ish (fp tolerance) in integration
+//! tests, loading the same `.qtz` weights.
+
+pub mod hippo;
+pub mod mamba;
+pub mod scan;
+
+pub use mamba::{MambaModel, MambaTier};
+pub use scan::{selective_scan, selective_scan_q, ScanParams};

@@ -1,0 +1,205 @@
+//! Reference selective scan (paper Eq. 1, discretized), fp32 and
+//! quantized — semantics identical to the Pallas kernels
+//! (`python/compile/kernels/selective_scan.py`) and to
+//! `kernels/ref.py::selective_scan`.
+
+/// Dimensions + parameters of one scan invocation (single sequence).
+/// Layout: time-major slices over `d_inner` channels and `n` states.
+pub struct ScanParams<'a> {
+    /// A (d_inner × n), negative reals (state decay)
+    pub a: &'a [f32],
+    /// D (d_inner), skip gain
+    pub d: &'a [f32],
+    pub d_inner: usize,
+    pub n_state: usize,
+}
+
+/// fp32 selective scan for one sequence.
+///
+/// x, dt: (T × d_inner) time-major; b, c: (T × n); h0: (d_inner × n),
+/// updated in place to the final state. Returns y (T × d_inner):
+/// y[t] = C_t · h_t + D ⊙ x_t with h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t.
+pub fn selective_scan(
+    p: &ScanParams,
+    x: &[f32],
+    dt: &[f32],
+    b: &[f32],
+    c: &[f32],
+    h: &mut [f32],
+) -> Vec<f32> {
+    let (di, n) = (p.d_inner, p.n_state);
+    let t_len = x.len() / di;
+    assert_eq!(x.len(), t_len * di);
+    assert_eq!(b.len(), t_len * n);
+    assert_eq!(h.len(), di * n);
+    let mut y = vec![0.0f32; t_len * di];
+    for t in 0..t_len {
+        let xt = &x[t * di..(t + 1) * di];
+        let dtt = &dt[t * di..(t + 1) * di];
+        let bt = &b[t * n..(t + 1) * n];
+        let ct = &c[t * n..(t + 1) * n];
+        for ch in 0..di {
+            let hrow = &mut h[ch * n..(ch + 1) * n];
+            let arow = &p.a[ch * n..(ch + 1) * n];
+            let dtx = dtt[ch] * xt[ch];
+            let mut acc = 0.0f32;
+            for s in 0..n {
+                let da = (dtt[ch] * arow[s]).exp();
+                hrow[s] = da * hrow[s] + dtx * bt[s];
+                acc += hrow[s] * ct[s];
+            }
+            y[t * di + ch] = acc + p.d[ch] * xt[ch];
+        }
+    }
+    y
+}
+
+/// Quantized selective scan (paper §4.2): int8 activations (x, B, C)
+/// and weights (A, D) with static scales; recurrence in f32; f32 out.
+/// Matches `ref.selective_scan_q`.
+#[allow(clippy::too_many_arguments)]
+pub fn selective_scan_q(
+    d_inner: usize,
+    n_state: usize,
+    x_q: &[i8],
+    s_x: f32,
+    dt: &[f32],
+    a_q: &[i8],
+    s_a: f32,
+    b_q: &[i8],
+    s_b: f32,
+    c_q: &[i8],
+    s_c: f32,
+    d_q: &[i8],
+    s_d: f32,
+    h: &mut [f32],
+) -> Vec<f32> {
+    let (di, n) = (d_inner, n_state);
+    let t_len = x_q.len() / di;
+    let mut y = vec![0.0f32; t_len * di];
+    for t in 0..t_len {
+        for ch in 0..di {
+            let x = x_q[t * di + ch] as f32 * s_x;
+            let dtv = dt[t * di + ch];
+            let dtx = dtv * x;
+            let hrow = &mut h[ch * n..(ch + 1) * n];
+            let arow = &a_q[ch * n..(ch + 1) * n];
+            let mut acc = 0.0f32;
+            for s in 0..n {
+                let a = arow[s] as f32 * s_a;
+                let bq = b_q[t * n + s] as f32 * s_b;
+                let cq = c_q[t * n + s] as f32 * s_c;
+                let da = (dtv * a).exp();
+                hrow[s] = da * hrow[s] + dtx * bq;
+                acc += hrow[s] * cq;
+            }
+            y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup(di: usize, n: usize, t: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut r = Pcg32::new(seed);
+        let a: Vec<f32> = (0..di * n).map(|_| -(r.f32() + 0.5)).collect();
+        let d: Vec<f32> = (0..di).map(|_| r.normal()).collect();
+        let x: Vec<f32> = (0..t * di).map(|_| r.normal()).collect();
+        let dt: Vec<f32> = (0..t * di).map(|_| 0.01 + 0.1 * r.f32()).collect();
+        let b: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+        let c: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+        (a, d, x, dt, b, c)
+    }
+
+    #[test]
+    fn zero_input_zero_output() {
+        let (a, d, _, dt, b, c) = setup(4, 3, 8, 1);
+        let p = ScanParams { a: &a, d: &d, d_inner: 4, n_state: 3 };
+        let x = vec![0.0; 8 * 4];
+        let mut h = vec![0.0; 4 * 3];
+        let y = selective_scan(&p, &x, &dt, &b, &c, &mut h);
+        assert!(y.iter().all(|v| v.abs() < 1e-7));
+        assert!(h.iter().all(|v| v.abs() < 1e-7));
+    }
+
+    #[test]
+    fn chunked_equals_full() {
+        // scanning T then continuing == scanning 2T in one call
+        let (a, d, x, dt, b, c) = setup(6, 4, 16, 2);
+        let p = ScanParams { a: &a, d: &d, d_inner: 6, n_state: 4 };
+        let mut h_full = vec![0.0; 6 * 4];
+        let y_full = selective_scan(&p, &x, &dt, &b, &c, &mut h_full);
+        let mut h_chunk = vec![0.0; 6 * 4];
+        let half_x = 8 * 6;
+        let half_bn = 8 * 4;
+        let mut y_chunk = selective_scan(&p, &x[..half_x], &dt[..half_x], &b[..half_bn], &c[..half_bn], &mut h_chunk);
+        let y2 = selective_scan(&p, &x[half_x..], &dt[half_x..], &b[half_bn..], &c[half_bn..], &mut h_chunk);
+        y_chunk.extend(y2);
+        for (u, v) in y_full.iter().zip(&y_chunk) {
+            assert!((u - v).abs() < 1e-5);
+        }
+        for (u, v) in h_full.iter().zip(&h_chunk) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn linearity_in_x() {
+        // given fixed (Δ, B, C), y is linear in x: y(αx) = α y(x)
+        let (a, d, x, dt, b, c) = setup(4, 4, 12, 3);
+        let p = ScanParams { a: &a, d: &d, d_inner: 4, n_state: 4 };
+        let mut h1 = vec![0.0; 16];
+        let y1 = selective_scan(&p, &x, &dt, &b, &c, &mut h1);
+        let x2: Vec<f32> = x.iter().map(|v| 3.0 * v).collect();
+        let mut h2 = vec![0.0; 16];
+        let y2 = selective_scan(&p, &x2, &dt, &b, &c, &mut h2);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((3.0 * u - v).abs() < 1e-4 * (1.0 + v.abs()));
+        }
+    }
+
+    #[test]
+    fn quantized_matches_fp_on_grid_values() {
+        // if all inputs already sit on the int8 grid, q-scan == fp-scan
+        let (mut a, mut d, mut x, dt, mut b, mut c) = setup(4, 4, 10, 4);
+        let s = 0.05f32;
+        let snap = |v: &mut Vec<f32>| {
+            for e in v.iter_mut() {
+                *e = (*e / s).round().clamp(-127.0, 127.0) * s;
+            }
+        };
+        snap(&mut a);
+        snap(&mut d);
+        snap(&mut x);
+        snap(&mut b);
+        snap(&mut c);
+        let q = |v: &[f32]| -> Vec<i8> { v.iter().map(|e| (e / s).round() as i8).collect() };
+        let p = ScanParams { a: &a, d: &d, d_inner: 4, n_state: 4 };
+        let mut h1 = vec![0.0; 16];
+        let y_fp = selective_scan(&p, &x, &dt, &b, &c, &mut h1);
+        let mut h2 = vec![0.0; 16];
+        let y_q = selective_scan_q(4, 4, &q(&x), s, &dt, &q(&a), s, &q(&b), s, &q(&c), s, &q(&d), s, &mut h2);
+        for (u, v) in y_fp.iter().zip(&y_q) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn state_decays_with_negative_a() {
+        // with x = 0 after t0, the state decays monotonically
+        let (a, d, _, _, _, _) = setup(2, 2, 1, 5);
+        let p = ScanParams { a: &a, d: &d, d_inner: 2, n_state: 2 };
+        let mut h = vec![1.0f32; 4];
+        let t = 20;
+        let x = vec![0.0f32; t * 2];
+        let dt = vec![0.5f32; t * 2];
+        let b = vec![0.0f32; t * 2];
+        let c = vec![1.0f32; t * 2];
+        let _ = selective_scan(&p, &x, &dt, &b, &c, &mut h);
+        assert!(h.iter().all(|v| v.abs() < 1.0));
+    }
+}

@@ -1,0 +1,204 @@
+//! Shape-checked host tensors + the `.qtz` container (shared with
+//! `python/compile/qtz.py`). These are the host-side carriers between
+//! the artifact files, the coordinator's state manager, and the PJRT
+//! literals.
+
+pub mod qtz;
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    U16,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn itemsize(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+            DType::U16 => 2,
+            DType::I64 => 8,
+        }
+    }
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I8 => 1,
+            DType::I32 => 2,
+            DType::U16 => 3,
+            DType::I64 => 4,
+            DType::U8 => 5,
+        }
+    }
+    pub fn from_code(c: u8) -> Option<DType> {
+        Some(match c {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            3 => DType::U16,
+            4 => DType::I64,
+            5 => DType::U8,
+            _ => return None,
+        })
+    }
+}
+
+/// A dense host tensor: raw little-endian bytes + shape + dtype.
+/// Conversions to typed slices are zero-copy views where alignment
+/// allows (always, for our Vec<u8>-backed buffers, via `bytemuck`-less
+/// manual reads on the safe path).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor({:?}, {:?}, {} bytes)", self.dtype, self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n * dtype.itemsize(), data.len(), "shape/bytes mismatch");
+        Tensor { dtype, shape, data }
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.itemsize()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], v: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i8(shape: &[usize], v: &[i8]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        Tensor {
+            dtype: DType::I8,
+            shape: shape.to_vec(),
+            data: v.iter().map(|&x| x as u8).collect(),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], v: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_u16(shape: &[usize], v: &[u16]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(v.len() * 2);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::U16,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "dtype {:?} != F32", self.dtype);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_i8(&self) -> Vec<i8> {
+        assert_eq!(self.dtype, DType::I8);
+        self.data.iter().map(|&b| b as i8).collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_u16(&self) -> Vec<u16> {
+        assert_eq!(self.dtype, DType::U16);
+        self.data
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect()
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, -2.0, 3.5, 0.0, 1e-8, -1e8]);
+        assert_eq!(t.to_f32(), vec![1.0, -2.0, 3.5, 0.0, 1e-8, -1e8]);
+        assert_eq!(t.nbytes(), 24);
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let t = Tensor::from_i8(&[4], &[-128, -1, 0, 127]);
+        assert_eq!(t.to_i8(), vec![-128, -1, 0, 127]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[3], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! `.qtz` container reader/writer — byte-compatible with
+//! `python/compile/qtz.py` (see that file for the format spec).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::{DType, Tensor};
+
+pub const MAGIC: &[u8; 4] = b"QTZ1";
+
+/// Ordered tensor map (insertion order preserved — the manifest refers
+/// to weights positionally by name list, but order keeps files stable).
+pub struct QtzFile {
+    pub names: Vec<String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl QtzFile {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.nbytes()).sum()
+    }
+}
+
+pub fn load(path: &Path) -> io::Result<QtzFile> {
+    let mut f = File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    load_bytes(&buf).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{path:?}: {e}")))
+}
+
+pub fn load_bytes(buf: &[u8]) -> Result<QtzFile, String> {
+    let mut p = 0usize;
+    let take = |p: &mut usize, n: usize| -> Result<&[u8], String> {
+        if *p + n > buf.len() {
+            return Err(format!("truncated at byte {p}"));
+        }
+        let s = &buf[*p..*p + n];
+        *p += n;
+        Ok(s)
+    };
+    if take(&mut p, 4)? != MAGIC {
+        return Err("bad magic (not a QTZ1 file)".into());
+    }
+    let count = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
+    // every tensor needs ≥ 4 header bytes: reject absurd counts before
+    // any allocation (corrupted headers must error, not OOM-abort)
+    if count > buf.len() / 4 {
+        return Err(format!("implausible tensor count {count} for {} bytes", buf.len()));
+    }
+    let mut names = Vec::with_capacity(count);
+    let mut tensors = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(take(&mut p, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut p, nlen)?.to_vec())
+            .map_err(|_| "non-utf8 tensor name")?;
+        let hdr = take(&mut p, 2)?;
+        let dtype = DType::from_code(hdr[0]).ok_or(format!("bad dtype code {}", hdr[0]))?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let data = take(&mut p, n * dtype.itemsize())?.to_vec();
+        names.push(name.clone());
+        tensors.insert(name, Tensor::new(dtype, shape, data));
+    }
+    if p != buf.len() {
+        return Err(format!("trailing bytes: {} of {}", buf.len() - p, buf.len()));
+    }
+    Ok(QtzFile { names, tensors })
+}
+
+pub fn save(path: &Path, entries: &[(String, Tensor)]) -> io::Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        out.push(t.dtype.code());
+        out.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&t.data);
+    }
+    let mut f = File::create(path)?;
+    f.write_all(&out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("qtz_test_rs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.qtz");
+        let entries = vec![
+            ("a".to_string(), Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0])),
+            ("b.weight".to_string(), Tensor::from_i8(&[3], &[-1, 0, 1])),
+            ("c".to_string(), Tensor::from_u16(&[4], &[0, 1, 65535, 7])),
+        ];
+        save(&p, &entries).unwrap();
+        let f = load(&p).unwrap();
+        assert_eq!(f.names, vec!["a", "b.weight", "c"]);
+        assert_eq!(f.get("a").unwrap().to_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(f.get("b.weight").unwrap().to_i8(), vec![-1, 0, 1]);
+        assert_eq!(f.get("c").unwrap().to_u16(), vec![0, 1, 65535, 7]);
+    }
+
+    #[test]
+    fn reject_garbage() {
+        assert!(load_bytes(b"NOPE").is_err());
+        assert!(load_bytes(b"QTZ1\x01\x00\x00\x00").is_err());
+    }
+}

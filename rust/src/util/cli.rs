@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with
+//! typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-dash token becomes the command;
+    /// `--key value` pairs become options unless `key` is declared in
+    /// `bool_flags` (then it is a flag and consumes no value).
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if i + 1 < argv.len() {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, bool_flags)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(
+            &v(&["serve", "--tier", "m2p8", "--verbose", "extra", "--n", "4"]),
+            &["verbose"],
+        );
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("tier"), Some("m2p8"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+        assert_eq!(a.get_usize("n", 0), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&v(&["x", "--last"]), &[]);
+        assert!(a.has("last"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(&v(&["x", "--methods", "fp16, quamba"]), &[]);
+        assert_eq!(
+            a.get_list("methods").unwrap(),
+            vec!["fp16".to_string(), "quamba".to_string()]
+        );
+    }
+}

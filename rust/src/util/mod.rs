@@ -1,0 +1,13 @@
+//! std-only substrates for crates missing from the offline vendor set
+//! (serde/serde_json, clap, rand, parts of criterion). Each submodule
+//! is deliberately small, fully tested, and used across the crate.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Wall-clock helper: seconds elapsed since `t0`.
+pub fn secs_since(t0: std::time::Instant) -> f64 {
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,179 @@
+//! Summary statistics: percentiles, histograms, latency summaries.
+//! Shared by the metrics pipeline and the bench harness.
+
+/// Percentile of a sample set (linear interpolation, p in [0, 100]).
+/// Sorts a copy; fine for the ≤1e6-sample uses in this crate.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Latency summary used by metrics and the bench printer.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets (for TPOT/TTFT
+/// distributions without retaining every sample).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i covers [lo * ratio^i, lo * ratio^(i+1))
+    lo: f64,
+    ratio: f64,
+    counts: Vec<u64>,
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl LogHistogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        let ratio = (hi / lo).powf(1.0 / buckets as f64);
+        LogHistogram {
+            lo,
+            ratio,
+            counts: vec![0; buckets + 2], // +under/overflow
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let idx = if x < self.lo {
+            0
+        } else {
+            let i = ((x / self.lo).ln() / self.ratio.ln()).floor() as isize + 1;
+            (i.max(0) as usize).min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                if i == 0 {
+                    return self.min;
+                }
+                return self.lo * self.ratio.powi(i as i32 - 1);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn log_histogram_quantiles() {
+        let mut h = LogHistogram::new(1e-6, 10.0, 64);
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0);
+        }
+        let q50 = h.quantile(0.5);
+        assert!(q50 > 0.3 && q50 < 0.7, "q50={q50}");
+        assert_eq!(h.n, 1000);
+    }
+}

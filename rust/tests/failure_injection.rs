@@ -1,0 +1,148 @@
+//! Failure injection: corrupted artifacts must produce errors, never
+//! UB/garbage. (These run without a real artifact tree.)
+
+use std::fs;
+use std::path::PathBuf;
+
+use quamba::config::Manifest;
+use quamba::runtime::Runtime;
+use quamba::tensor::qtz;
+
+fn scratch(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("quamba_fail_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(d.join("graphs")).unwrap();
+    fs::create_dir_all(d.join("weights")).unwrap();
+    d
+}
+
+fn write_manifest(dir: &PathBuf, body: &str) {
+    fs::write(dir.join("manifest.json"), body).unwrap();
+}
+
+const MANIFEST_ONE_GRAPH: &str = r#"{
+  "vocab_size": 256, "quick": true,
+  "graphs": {"g1": {"file": "graphs/g1.hlo.txt", "family": "mamba",
+     "tier": "t", "method": "fp16", "kind": "decode", "batch": 1, "seq": 1,
+     "weights": "wb"}},
+  "weights": {"wb": {"file": "weights/wb.qtz", "params": ["w"], "bytes": 4}},
+  "tiers": {"t": {"paper_name": "T", "d_model": 4, "n_layer": 1, "d_state": 2,
+     "d_conv": 2, "d_inner": 8, "dt_rank": 1, "vocab": 256, "n_params": 1}},
+  "data": {}
+}"#;
+
+#[test]
+fn missing_manifest_is_a_clean_error() {
+    let d = scratch("nomanifest");
+    let err = Runtime::new(&d).err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn truncated_manifest_is_a_clean_error() {
+    let d = scratch("truncmanifest");
+    write_manifest(&d, r#"{"graphs": {"x": "#);
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn missing_hlo_file_is_a_clean_error() {
+    let d = scratch("nohlo");
+    write_manifest(&d, MANIFEST_ONE_GRAPH);
+    qtz::save(
+        &d.join("weights/wb.qtz"),
+        &[("w".to_string(), quamba::tensor::Tensor::from_f32(&[1], &[1.0]))],
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&d).expect("runtime opens (lazy loading)");
+    let err = rt.load("g1").err().expect("must fail");
+    assert!(format!("{err:#}").contains("g1"));
+}
+
+#[test]
+fn garbage_hlo_text_is_a_clean_error() {
+    let d = scratch("badhlo");
+    write_manifest(&d, MANIFEST_ONE_GRAPH);
+    fs::write(d.join("graphs/g1.hlo.txt"), "this is not HLO").unwrap();
+    qtz::save(
+        &d.join("weights/wb.qtz"),
+        &[("w".to_string(), quamba::tensor::Tensor::from_f32(&[1], &[1.0]))],
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&d).unwrap();
+    assert!(rt.load("g1").is_err());
+}
+
+#[test]
+fn missing_weight_tensor_is_a_clean_error() {
+    let d = scratch("noweight");
+    write_manifest(&d, MANIFEST_ONE_GRAPH);
+    // valid-but-wrong qtz: contains `other`, not `w`
+    fs::write(d.join("graphs/g1.hlo.txt"), "HloModule m\nENTRY e { ROOT c = f32[] constant(0) }")
+        .unwrap();
+    qtz::save(
+        &d.join("weights/wb.qtz"),
+        &[("other".to_string(), quamba::tensor::Tensor::from_f32(&[1], &[1.0]))],
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&d).unwrap();
+    let err = rt.load("g1").err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing weight"), "{msg}");
+}
+
+#[test]
+fn corrupted_qtz_is_a_clean_error() {
+    let d = scratch("badqtz");
+    write_manifest(&d, MANIFEST_ONE_GRAPH);
+    fs::write(d.join("graphs/g1.hlo.txt"), "HloModule m\nENTRY e { ROOT c = f32[] constant(0) }")
+        .unwrap();
+    fs::write(d.join("weights/wb.qtz"), b"QTZ1\xff\xff\xff\xff").unwrap();
+    let mut rt = Runtime::new(&d).unwrap();
+    assert!(rt.load("g1").is_err());
+}
+
+#[test]
+fn qtz_truncated_payload_rejected() {
+    // header promises more bytes than exist
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"QTZ1");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&1u16.to_le_bytes());
+    bytes.push(b'w');
+    bytes.push(0); // dtype f32
+    bytes.push(1); // ndim 1
+    bytes.extend_from_slice(&100u32.to_le_bytes()); // 100 elements...
+    bytes.extend_from_slice(&[0u8; 8]); // ...but only 8 bytes
+    assert!(qtz::load_bytes(&bytes).is_err());
+}
+
+#[test]
+fn engine_requires_decode_graphs() {
+    use quamba::coordinator::engine::{Engine, EngineConfig};
+    let d = scratch("nodecode");
+    write_manifest(
+        &d,
+        r#"{"vocab_size": 256, "quick": true, "graphs": {},
+            "weights": {}, "tiers": {"t": {"paper_name": "T", "d_model": 4,
+            "n_layer": 1, "d_state": 2, "d_conv": 2, "d_inner": 8,
+            "dt_rank": 1, "vocab": 256, "n_params": 1}}, "data": {}}"#,
+    );
+    let rt = Runtime::new(&d).unwrap();
+    let err = Engine::new(rt, EngineConfig::new("t", "fp16")).err().expect("must fail");
+    assert!(format!("{err:#}").contains("no decode graphs"));
+}
+
+#[test]
+fn engine_rejects_unknown_tier() {
+    use quamba::coordinator::engine::{Engine, EngineConfig};
+    let d = scratch("notier");
+    write_manifest(
+        &d,
+        r#"{"vocab_size": 256, "quick": true, "graphs": {}, "weights": {},
+            "tiers": {}, "data": {}}"#,
+    );
+    let rt = Runtime::new(&d).unwrap();
+    assert!(Engine::new(rt, EngineConfig::new("ghost", "fp16")).is_err());
+}

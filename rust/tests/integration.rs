@@ -1,0 +1,310 @@
+//! Integration tests over the real artifact tree: HLO → PJRT → engine.
+//!
+//! These need `make artifacts` (or at least a `--quick` build). They
+//! look for $QUAMBA_ARTIFACTS, then ./artifacts, then the pytest quick
+//! tree; if none exists they SKIP (print + pass) so `cargo test` stays
+//! green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use quamba::coordinator::engine::{Engine, EngineConfig};
+use quamba::coordinator::request::{Request, SamplingParams};
+use quamba::data;
+use quamba::eval;
+use quamba::runtime::Runtime;
+use quamba::ssm::mamba::{MambaModel, MambaTier, QuantSites};
+use quamba::tensor::{DType, Tensor};
+
+fn artifacts() -> Option<PathBuf> {
+    let candidates = [
+        std::env::var("QUAMBA_ARTIFACTS").ok().map(PathBuf::from),
+        Some(PathBuf::from("artifacts")),
+        Some(PathBuf::from("/tmp/quamba_pytest_artifacts")),
+        Some(PathBuf::from("/tmp/artq")),
+    ];
+    candidates
+        .into_iter()
+        .flatten()
+        .find(|p| p.join("manifest.json").exists())
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("[skip] no artifacts tree — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn first_tier(rt: &Runtime) -> String {
+    rt.manifest()
+        .tiers
+        .keys()
+        .find(|t| *t != "jamba")
+        .cloned()
+        .expect("no tiers")
+}
+
+#[test]
+fn runtime_executes_prefill_and_shapes_match() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let t = rt.manifest().tiers[&tier].clone();
+    let g = rt
+        .manifest()
+        .find_graph(&tier, "fp16", "prefill", 1, None)
+        .expect("prefill graph")
+        .name
+        .clone();
+    let seq = rt.manifest().graphs[&g].seq;
+    let toks: Vec<i32> = (0..seq as i32).map(|i| (i % 200) + 4).collect();
+    let out = rt
+        .execute(
+            &g,
+            &[
+                Tensor::from_i32(&[1, seq], &toks),
+                Tensor::zeros(DType::F32, &[t.n_layer, 1, t.d_conv - 1, t.d_inner]),
+                Tensor::zeros(DType::F32, &[t.n_layer, 1, t.d_inner, t.d_state]),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].shape, vec![1, seq, t.vocab]);
+    assert_eq!(out[1].shape, vec![t.n_layer, 1, t.d_conv - 1, t.d_inner]);
+    assert_eq!(out[2].shape, vec![t.n_layer, 1, t.d_inner, t.d_state]);
+    assert!(out[0].to_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn hlo_fp_graph_matches_rust_reference_model() {
+    // The same weights through two entirely different stacks: the
+    // jax→HLO→PJRT graph and the pure-rust simulator. Logits must
+    // agree to fp tolerance — this validates BOTH implementations.
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let t = rt.manifest().tiers[&tier].clone();
+    let g = rt
+        .manifest()
+        .find_graph(&tier, "fp16", "prefill", 1, None)
+        .expect("graph")
+        .name
+        .clone();
+    let seq = rt.manifest().graphs[&g].seq.min(48);
+    let gseq = rt.manifest().graphs[&g].seq;
+    let stream = data::load_stream(&rt.manifest().data["pile_eval"]).unwrap();
+    let toks_u16: Vec<u16> = stream[..gseq].to_vec();
+    let toks: Vec<i32> = toks_u16.iter().map(|&x| x as i32).collect();
+    let out = rt
+        .execute(
+            &g,
+            &[
+                Tensor::from_i32(&[1, gseq], &toks),
+                Tensor::zeros(DType::F32, &[t.n_layer, 1, t.d_conv - 1, t.d_inner]),
+                Tensor::zeros(DType::F32, &[t.n_layer, 1, t.d_inner, t.d_state]),
+            ],
+        )
+        .expect("execute");
+    let hlo_logits = out[0].to_f32();
+
+    let q = rt.weight_qtz(&format!("{tier}_fp16")).expect("weights");
+    let model = MambaModel::from_qtz(
+        MambaTier {
+            name: t.name.clone(),
+            d_model: t.d_model,
+            n_layer: t.n_layer,
+            d_state: t.d_state,
+            d_conv: t.d_conv,
+            d_inner: t.d_inner,
+            dt_rank: t.dt_rank,
+            vocab: t.vocab,
+        },
+        &q,
+    )
+    .expect("model");
+    let ref_logits = model.forward(&toks_u16, &QuantSites::none(), None);
+    // compare a prefix of positions (tolerances accumulate over T)
+    let v = t.vocab;
+    let mut max_rel = 0.0f32;
+    for i in 0..seq * v {
+        let (a, b) = (hlo_logits[i], ref_logits[i]);
+        let rel = (a - b).abs() / (1.0 + a.abs().max(b.abs()));
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 2e-2, "HLO vs rust reference diverged: {max_rel}");
+}
+
+#[test]
+fn engine_generates_and_batches() {
+    let root = need_artifacts!();
+    let rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let methods = rt.manifest().methods_for_tier(&tier, "decode");
+    let method = if methods.iter().any(|m| m == "quamba") { "quamba" } else { &methods[0] };
+    let mut engine = Engine::new(rt, EngineConfig::new(&tier, method)).expect("engine");
+    engine.warmup().expect("warmup");
+    let stream = data::load_stream(&engine.manifest().data["pile_eval"]).unwrap();
+    for i in 0..5 {
+        engine.submit(Request {
+            id: i,
+            prompt: stream[i as usize * 10..i as usize * 10 + 12].to_vec(),
+            max_new_tokens: 6 + i as usize,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    let responses = engine.run_to_completion().expect("run");
+    assert_eq!(responses.len(), 5);
+    for r in &responses {
+        let want = 6 + r.id as usize;
+        assert_eq!(r.tokens.len(), want, "request {} length", r.id);
+        assert!(r.ttft_ms.is_finite() && r.ttft_ms > 0.0);
+        assert!(r.tokens.iter().all(|&t| (t as usize) < 256));
+    }
+    // deterministic greedy sampling: same prompt → same tokens
+    let m = engine.metrics.report();
+    assert!(m.contains("requests=5"));
+}
+
+#[test]
+fn engine_deterministic_greedy() {
+    let root = need_artifacts!();
+    let run = |root: &PathBuf| {
+        let rt = Runtime::new(root).expect("runtime");
+        let tier = first_tier(&rt);
+        let methods = rt.manifest().methods_for_tier(&tier, "decode");
+        let method = if methods.iter().any(|m| m == "fp16") { "fp16" } else { &methods[0] };
+        let mut engine = Engine::new(rt, EngineConfig::new(&tier, method)).expect("engine");
+        let stream = data::load_stream(&engine.manifest().data["pile_eval"]).unwrap();
+        engine.submit(Request {
+            id: 1,
+            prompt: stream[..16].to_vec(),
+            max_new_tokens: 8,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+        engine.run_to_completion().expect("run")[0].tokens.clone()
+    };
+    assert_eq!(run(&root), run(&root));
+}
+
+#[test]
+fn quantized_ppl_close_to_fp() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    if rt.manifest().find_graph(&tier, "quamba", "prefill", 4, None).is_none() {
+        eprintln!("[skip] no quamba eval graph");
+        return;
+    }
+    let stream = data::load_stream(&rt.manifest().data["pile_eval"]).unwrap();
+    let fp = eval::perplexity(&mut rt, &tier, "fp16", &stream, 4).expect("fp ppl");
+    let q = eval::perplexity(&mut rt, &tier, "quamba", &stream, 4).expect("q ppl");
+    assert!(fp.ppl.is_finite() && q.ppl.is_finite());
+    assert!(
+        q.ppl < fp.ppl * 1.5,
+        "quamba ppl {} vs fp {} — recipe should stay near FP",
+        q.ppl,
+        fp.ppl
+    );
+}
+
+#[test]
+fn task_harness_scores_all_six() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let tasks = data::load_tasks(&rt.manifest().data["tasks"]).unwrap();
+    assert_eq!(tasks.len(), 6);
+    let res = eval::run_tasks(&mut rt, &tier, "fp16", &tasks, 8).expect("tasks");
+    assert_eq!(res.len(), 6);
+    for (name, acc) in &res {
+        assert!((0.0..=1.0).contains(acc), "{name}: {acc}");
+    }
+}
+
+#[test]
+fn weight_bundle_size_reduction() {
+    let root = need_artifacts!();
+    let rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let fp = rt.model_bytes(&format!("{tier}_fp16"));
+    let q = rt.model_bytes(&format!("{tier}_quamba"));
+    if let (Some(fp), Some(q)) = (fp, q) {
+        let ratio = fp as f64 / q as f64;
+        assert!(ratio > 1.8, "size reduction {ratio:.2}x < paper's ~1.9x shape");
+    }
+}
+
+#[test]
+fn transformer_engine_serves_with_backpressure() {
+    let root = need_artifacts!();
+    let rt = Runtime::new(&root).expect("runtime");
+    let Some(tier) = rt.manifest().transformer_tiers.keys().next().cloned() else {
+        eprintln!("[skip] no transformer tier built");
+        return;
+    };
+    use quamba::coordinator::engine_tr::TransformerEngine;
+    let mut engine = TransformerEngine::new(rt, &tier, "fp16", usize::MAX).expect("tr engine");
+    let stream = data::load_stream(&engine.rt.manifest().data["pile_eval"]).unwrap();
+    for i in 0..2 {
+        engine.submit(Request {
+            id: i,
+            prompt: stream[i as usize * 16..i as usize * 16 + 12].to_vec(),
+            max_new_tokens: 4,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    let responses = engine.run_to_completion().expect("run");
+    assert_eq!(responses.len(), 2);
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 4);
+        assert!(r.tokens.iter().all(|&t| (t as usize) < 256));
+    }
+    // constant-vs-growing memory check against the mamba engine
+    assert!(engine.bytes_at(2048) > 10 * engine.bytes_at(128));
+}
+
+#[test]
+fn jamba_combos_scoreable() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    if !rt.manifest().tiers.contains_key("jamba") {
+        eprintln!("[skip] jamba tier not built");
+        return;
+    }
+    let tasks = data::load_tasks(&rt.manifest().data["tasks"]).unwrap();
+    let lambada: Vec<_> = tasks.into_iter().filter(|t| t.name == "lambada_synth").collect();
+    let fp = eval::run_tasks(&mut rt, "jamba", "fp_fp_fp", &lambada, 8).expect("fp combo");
+    assert!((0.0..=1.0).contains(&fp[0].1));
+}
+
+#[test]
+fn runtime_rejects_unknown_graph() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    assert!(rt.execute("no_such_graph", &[]).is_err());
+}
+
+#[test]
+fn runtime_compile_is_cached() {
+    let root = need_artifacts!();
+    let mut rt = Runtime::new(&root).expect("runtime");
+    let tier = first_tier(&rt);
+    let g = rt
+        .manifest()
+        .find_graph(&tier, "fp16", "decode", 1, None)
+        .expect("decode")
+        .name
+        .clone();
+    rt.load(&g).unwrap();
+    let c1 = rt.stats.compiles;
+    rt.load(&g).unwrap();
+    assert_eq!(rt.stats.compiles, c1, "second load must hit the cache");
+}

@@ -1,0 +1,393 @@
+//! Property-based tests (proptest is not in the offline vendor set —
+//! this file carries a micro property-harness: seeded generators, N
+//! cases, first-failure reporting with its seed for reproduction).
+
+use quamba::coordinator::batcher;
+use quamba::coordinator::state::SsmStatePool;
+use quamba::config::TierInfo;
+use quamba::quant;
+use quamba::quant::hadamard;
+use quamba::ssm::scan::{selective_scan, ScanParams};
+use quamba::tensor::{qtz, DType, Tensor};
+use quamba::util::json::{self, Json};
+use quamba::util::rng::Pcg32;
+
+/// Run `prop` over `n` seeded cases; panic with the failing seed.
+fn forall<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for seed in 0..n as u64 {
+        let mut rng = Pcg32::new(0xBEEF ^ seed);
+        let case = gen(&mut rng);
+        assert!(
+            prop(&case),
+            "property `{name}` failed at seed {seed}: {case:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batcher invariants (routing/batching state — the L3 contribution)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_plan_covers_and_fits() {
+    forall(
+        "plan covers all requests with valid buckets",
+        300,
+        |r| {
+            let n = 1 + r.below(40) as usize;
+            // random sorted bucket subset of {1,2,4,8,16}
+            let all = [1usize, 2, 4, 8, 16];
+            let mut buckets: Vec<usize> =
+                all.iter().filter(|_| r.f32() < 0.6).cloned().collect();
+            if buckets.is_empty() {
+                buckets.push(1);
+            }
+            (n, buckets)
+        },
+        |(n, buckets)| {
+            let plan = batcher::plan_rounds(*n, buckets);
+            let lanes: usize = plan.iter().sum();
+            let groups = batcher::assign(*n, &plan);
+            let covered: usize = groups.iter().map(|g| g.len()).sum();
+            lanes >= *n
+                && covered == *n
+                && plan.iter().all(|b| buckets.contains(b))
+                // waste bounded: padding < the largest bucket
+                && lanes - *n < *buckets.last().unwrap()
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_single_round_when_fits() {
+    forall(
+        "n ≤ max bucket ⇒ exactly one round",
+        100,
+        |r| 1 + r.below(8) as usize,
+        |n| batcher::plan_rounds(*n, &[1, 2, 4, 8]).len() == 1,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// state-pool invariants
+// ---------------------------------------------------------------------------
+
+fn tier(d_inner: usize, n_layer: usize) -> TierInfo {
+    TierInfo {
+        name: "t".into(),
+        paper_name: "T".into(),
+        d_model: d_inner / 2,
+        n_layer,
+        d_state: 4,
+        d_conv: 4,
+        d_inner,
+        dt_rank: 1,
+        vocab: 256,
+        n_params: 0,
+    }
+}
+
+#[test]
+fn prop_state_pool_alloc_release_sequences() {
+    forall(
+        "random alloc/release keeps pool consistent",
+        100,
+        |r| {
+            let ops: Vec<bool> = (0..60).map(|_| r.f32() < 0.6).collect();
+            ops
+        },
+        |ops| {
+            let t = tier(8, 2);
+            let mut pool = SsmStatePool::new(&t, 8);
+            let mut held: Vec<usize> = Vec::new();
+            for &alloc in ops {
+                if alloc {
+                    if let Some(s) = pool.alloc() {
+                        if held.contains(&s) {
+                            return false; // double-grant
+                        }
+                        held.push(s);
+                    } else if held.len() != 8 {
+                        return false; // refused while capacity free
+                    }
+                } else if let Some(s) = held.pop() {
+                    pool.release(s);
+                }
+                if pool.in_use() != held.len() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_state_gather_scatter_roundtrip() {
+    forall(
+        "gather∘scatter is identity on live slots",
+        60,
+        |r| {
+            let k = 1 + r.below(4) as usize;
+            let b = [1usize, 2, 4, 8][r.below(4) as usize].max(k);
+            let seed = r.next_u64();
+            (k, b, seed)
+        },
+        |&(k, b, seed)| {
+            let mut r = Pcg32::new(seed);
+            let t = tier(16, 2);
+            let mut pool = SsmStatePool::new(&t, 6);
+            let mut slots = Vec::new();
+            for _ in 0..k {
+                let s = pool.alloc().unwrap();
+                let mut slab = pool.get(s).clone();
+                for v in slab.conv.iter_mut() {
+                    *v = r.normal();
+                }
+                for v in slab.ssm.iter_mut() {
+                    *v = r.normal();
+                }
+                pool.write(s, slab);
+                slots.push(s);
+            }
+            let (conv, ssm) = pool.gather(&slots, b);
+            let mut p2 = SsmStatePool::new(&t, 6);
+            let d: Vec<usize> = slots.iter().map(|_| p2.alloc().unwrap()).collect();
+            p2.scatter(&d, &conv, &ssm);
+            slots
+                .iter()
+                .zip(&d)
+                .all(|(s, dd)| p2.get(*dd).conv == pool.get(*s).conv
+                    && p2.get(*dd).ssm == pool.get(*s).ssm)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// quantization properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fake_quant_idempotent_and_bounded() {
+    forall(
+        "fake-quant is idempotent; error ≤ s/2",
+        200,
+        |r| {
+            let n = 16 + r.below(256) as usize;
+            let scale_mag = 10f32.powf(r.range_f32(-3.0, 3.0));
+            let xs: Vec<f32> = (0..n).map(|_| r.normal() * scale_mag).collect();
+            xs
+        },
+        |xs| {
+            let s = quant::scale_sym(quant::amax(xs), 8);
+            let mut once = xs.clone();
+            quant::fake_quant_sym(&mut once, s, 8);
+            let mut twice = once.clone();
+            quant::fake_quant_sym(&mut twice, s, 8);
+            once == twice
+                && xs
+                    .iter()
+                    .zip(&once)
+                    .all(|(a, b)| (a - b).abs() <= s * 0.5 + s * 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_percentile_monotone_and_below_amax() {
+    forall(
+        "percentile_amax monotone in p, ≤ amax",
+        100,
+        |r| (0..500).map(|_| r.normal() * 3.0).collect::<Vec<f32>>(),
+        |xs| {
+            let a = quant::amax(xs);
+            let ps = [90.0, 99.0, 99.9, 100.0];
+            let vals: Vec<f32> = ps.iter().map(|&p| quant::percentile_amax(xs, p)).collect();
+            vals.windows(2).all(|w| w[0] <= w[1] + 1e-6) && vals[3] <= a + 1e-6
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Hadamard properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fwht_roundtrip_all_model_dims() {
+    forall(
+        "ifwht(fwht(x)) == x for every tier dim",
+        60,
+        |r| {
+            let dims = [64usize, 96, 128, 160, 192, 256, 320];
+            let n = dims[r.below(dims.len() as u32) as usize];
+            let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            xs
+        },
+        |xs| {
+            let y = hadamard::fwht(xs);
+            let back = hadamard::ifwht(&y);
+            xs.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-3)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// scan properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scan_chunked_equals_full() {
+    forall(
+        "scan composability (prefill→decode chain)",
+        40,
+        |r| {
+            let di = [2usize, 4, 8][r.below(3) as usize];
+            let n = [2usize, 4][r.below(2) as usize];
+            let t = 4 + r.below(20) as usize;
+            let cut = 1 + r.below(t as u32 - 1) as usize;
+            let a: Vec<f32> = (0..di * n).map(|_| -(r.f32() + 0.3)).collect();
+            let d: Vec<f32> = (0..di).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..t * di).map(|_| r.normal()).collect();
+            let dt: Vec<f32> = (0..t * di).map(|_| 0.01 + 0.3 * r.f32()).collect();
+            let b: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+            let c: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+            (di, n, t, cut, a, d, x, dt, b, c)
+        },
+        |(di, n, t, cut, a, d, x, dt, b, c)| {
+            let p = ScanParams { a, d, d_inner: *di, n_state: *n };
+            let mut hf = vec![0.0; di * n];
+            let yf = selective_scan(&p, x, dt, b, c, &mut hf);
+            let mut hc = vec![0.0; di * n];
+            let (xd, bd) = (cut * di, cut * n);
+            let mut yc = selective_scan(&p, &x[..xd], &dt[..xd], &b[..bd], &c[..bd], &mut hc);
+            yc.extend(selective_scan(&p, &x[xd..], &dt[xd..], &b[bd..], &c[bd..], &mut hc));
+            let _ = t;
+            yf.iter().zip(&yc).all(|(u, v)| (u - v).abs() < 1e-4)
+                && hf.iter().zip(&hc).all(|(u, v)| (u - v).abs() < 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_scan_homogeneous_in_x() {
+    forall(
+        "y(αx) = α y(x) given fixed (Δ,B,C)",
+        40,
+        |r| {
+            let alpha = r.range_f32(0.1, 5.0);
+            let x: Vec<f32> = (0..8 * 4).map(|_| r.normal()).collect();
+            let seed = r.next_u64();
+            (alpha, x, seed)
+        },
+        |(alpha, x, seed)| {
+            let mut r = Pcg32::new(*seed);
+            let (di, n, t) = (4usize, 4usize, 8usize);
+            let a: Vec<f32> = (0..di * n).map(|_| -(r.f32() + 0.3)).collect();
+            let d: Vec<f32> = (0..di).map(|_| r.normal()).collect();
+            let dt: Vec<f32> = (0..t * di).map(|_| 0.01 + 0.3 * r.f32()).collect();
+            let b: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+            let c: Vec<f32> = (0..t * n).map(|_| r.normal()).collect();
+            let p = ScanParams { a: &a, d: &d, d_inner: di, n_state: n };
+            let mut h1 = vec![0.0; di * n];
+            let y1 = selective_scan(&p, x, &dt, &b, &c, &mut h1);
+            let xs: Vec<f32> = x.iter().map(|v| v * alpha).collect();
+            let mut h2 = vec![0.0; di * n];
+            let y2 = selective_scan(&p, &xs, &dt, &b, &c, &mut h2);
+            y1.iter()
+                .zip(&y2)
+                .all(|(u, v)| (alpha * u - v).abs() < 1e-3 * (1.0 + v.abs()))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// container / JSON round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qtz_roundtrip_random_tensors() {
+    let dir = std::env::temp_dir().join("quamba_prop_qtz");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        "qtz save/load identity",
+        30,
+        |r| {
+            let k = 1 + r.below(5) as usize;
+            let mut entries = Vec::new();
+            for i in 0..k {
+                let dims: Vec<usize> = (0..1 + r.below(3)).map(|_| 1 + r.below(6) as usize).collect();
+                let n: usize = dims.iter().product();
+                let t = match r.below(3) {
+                    0 => Tensor::from_f32(&dims, &(0..n).map(|_| r.normal()).collect::<Vec<_>>()),
+                    1 => Tensor::from_i8(&dims, &(0..n).map(|_| (r.below(255) as i32 - 128) as i8).collect::<Vec<_>>()),
+                    _ => Tensor::from_u16(&dims, &(0..n).map(|_| r.below(65535) as u16).collect::<Vec<_>>()),
+                };
+                entries.push((format!("tensor.{i}"), t));
+            }
+            (entries, r.next_u64())
+        },
+        |(entries, tag)| {
+            let p = dir.join(format!("t{tag}.qtz"));
+            qtz::save(&p, entries).unwrap();
+            let f = qtz::load(&p).unwrap();
+            let _ = std::fs::remove_file(&p);
+            entries.iter().all(|(name, t)| f.get(name) == Some(t))
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_json(r: &mut Pcg32, depth: usize) -> Json {
+        match if depth > 2 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.f32() < 0.5),
+            2 => Json::Num((r.normal() * 100.0).round() as f64 / 4.0),
+            3 => Json::Str(format!("s{}-\"quote\\n{}", r.below(100), r.below(10))),
+            4 => Json::Arr((0..r.below(4)).map(|_| gen_json(r, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), gen_json(r, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        "json write∘parse identity",
+        200,
+        |r| gen_json(r, 0),
+        |v| json::parse(&json::write(v)).as_ref() == Ok(v),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tensor invariants used by the runtime bridge
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tensor_f32_bytes_roundtrip() {
+    forall(
+        "tensor to_f32 inverts from_f32",
+        100,
+        |r| (0..1 + r.below(64) as usize).map(|_| r.normal() * 1e3).collect::<Vec<f32>>(),
+        |v| Tensor::from_f32(&[v.len()], v).to_f32() == *v,
+    );
+}
+
+#[test]
+fn prop_zeros_are_zero() {
+    forall(
+        "Tensor::zeros yields all-zero views",
+        20,
+        |r| 1 + r.below(100) as usize,
+        |n| {
+            Tensor::zeros(DType::F32, &[*n]).to_f32().iter().all(|v| *v == 0.0)
+                && Tensor::zeros(DType::I8, &[*n]).to_i8().iter().all(|v| *v == 0)
+        },
+    );
+}
