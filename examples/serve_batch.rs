@@ -3,18 +3,65 @@
 //! bucketed decode batching, TTFT/TPOT/TTLT + throughput report,
 //! FP vs Quamba side by side.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8]
+//! Two backends share the identical front door:
+//!   * `--backend xla`     AOT-compiled graphs (`make artifacts` first)
+//!   * `--backend native`  the artifact-free pure-rust engine: an fp32
+//!                         reference model and its calibrated W8A8
+//!                         counterpart, synthesized on the spot — the
+//!                         "edge serving from a bare machine" story
+//! Default is `auto`: XLA when an artifact tree is present, else native.
+//!
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native]
 
 use anyhow::Result;
 use quamba::bench_support::Workload;
 use quamba::config::Manifest;
 use quamba::coordinator::server::ServerHandle;
-use quamba::coordinator::{EngineConfig, SamplingParams};
+use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
 use quamba::data;
+use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
 use quamba::util::cli::Args;
+use quamba::util::rng::Pcg32;
 
 fn main() -> Result<()> {
     let args = Args::from_env(&[]);
+    let n = args.get_usize("requests", 24);
+    let rate = args.get_f64("rate", 8.0);
+    let max_new = args.get_usize("max-new", 24);
+    let backend = args.get_or("backend", "auto").to_string();
+    let use_xla = match backend.as_str() {
+        "xla" => true,
+        "native" => false,
+        _ => Manifest::load(&Manifest::default_root()).is_ok(),
+    };
+    if use_xla {
+        serve_xla(&args, n, rate, max_new)
+    } else {
+        serve_native(&args, n, rate, max_new)
+    }
+}
+
+/// Feed the Poisson workload into a running server; returns
+/// (completed, wall seconds, metrics report).
+fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64, Option<String>) {
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for (i, prompt) in wl.prompts.iter().enumerate() {
+        let target = wl.arrival_s[i];
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
+    }
+    let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.metrics_report();
+    server.shutdown();
+    (done, wall, report)
+}
+
+fn serve_xla(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
     let root = Manifest::default_root();
     let mani = Manifest::load(&root).map_err(anyhow::Error::msg)?;
     // prefer the tier with wide decode buckets (m2p8 in the full build)
@@ -30,9 +77,6 @@ fn main() -> Result<()> {
         })
         .or_else(|| mani.tiers.keys().next().cloned())
         .expect("no artifacts");
-    let n = args.get_usize("requests", 24);
-    let rate = args.get_f64("rate", 8.0);
-    let max_new = args.get_usize("max-new", 24);
     let stream = data::load_stream(&mani.data["pile_eval"])?;
     let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
 
@@ -44,25 +88,59 @@ fn main() -> Result<()> {
         {
             continue;
         }
-        println!("\n=== {tier}/{method}: {n} requests, ~{rate}/s, {max_new} new tokens each ===");
-        let mut server = ServerHandle::spawn(root.clone(), EngineConfig::new(&tier, method))?;
-        let t0 = std::time::Instant::now();
-        let mut rxs = Vec::new();
-        for (i, prompt) in wl.prompts.iter().enumerate() {
-            let target = wl.arrival_s[i];
-            let now = t0.elapsed().as_secs_f64();
-            if target > now {
-                std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
-            }
-            rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
-        }
-        let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
-        let wall = t0.elapsed().as_secs_f64();
+        println!("\n=== xla {tier}/{method}: {n} requests, ~{rate}/s, {max_new} new tokens each ===");
+        let server = ServerHandle::spawn(root.clone(), EngineConfig::new(&tier, method))?;
+        let (done, wall, report) = drive(server, &wl, max_new);
         println!("completed {done}/{n} in {wall:.2}s");
-        if let Some(r) = server.metrics_report() {
+        if let Some(r) = report {
             println!("{r}");
         }
-        server.shutdown();
+    }
+    Ok(())
+}
+
+/// Artifact-free serving: synthesize a tier, calibrate a W8A8 model
+/// from the fp32 reference, and serve both through the same loop.
+fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
+    let seed = args.get_usize("seed", 7) as u64;
+    let tier = MambaTier {
+        name: "edge64".into(),
+        d_model: 64,
+        n_layer: 4,
+        d_state: 8,
+        d_conv: 4,
+        d_inner: 128,
+        dt_rank: 8,
+        vocab: 256,
+    };
+    let model = MambaModel::synthetic(tier.clone(), seed);
+    let mut rng = Pcg32::new(seed ^ 0x5EED);
+    let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    println!(
+        "native tier {}: d_model={} n_layer={} d_inner={} | W8A8 weights {:.1} KiB (int8)",
+        tier.name,
+        tier.d_model,
+        tier.n_layer,
+        tier.d_inner,
+        qmodel.weight_bytes_i8() as f64 / 1024.0
+    );
+    let stream: Vec<u16> = (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
+
+    let backends: Vec<(&str, Box<dyn StepModel + Send>)> =
+        vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
+    for (name, m) in backends {
+        println!(
+            "\n=== native {}/{name}: {n} requests, ~{rate}/s, {max_new} new tokens each ===",
+            tier.name
+        );
+        let server = ServerHandle::spawn_native(m, NativeEngineConfig::default())?;
+        let (done, wall, report) = drive(server, &wl, max_new);
+        println!("completed {done}/{n} in {wall:.2}s");
+        if let Some(r) = report {
+            println!("{r}");
+        }
     }
     Ok(())
 }

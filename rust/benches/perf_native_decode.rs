@@ -1,0 +1,106 @@
+//! §Perf — the native W8A8 batched decode engine vs the only
+//! previously-available rust path (per-token full-sequence fp32
+//! `forward`). Runs with zero artifacts: the model is synthesized and
+//! calibrated on the spot.
+//!
+//! Acceptance target (ISSUE 1): batched W8A8 decode steps at B=8 must
+//! be ≥2x faster than advancing the same 8 sequences by re-running the
+//! full-sequence fp32 forward per token.
+
+use quamba::bench_support::{bench_ms, f2, iters, ms, Table};
+use quamba::ssm::mamba::QuantSites;
+use quamba::ssm::{MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
+use quamba::util::rng::Pcg32;
+
+fn main() {
+    let tier = MambaTier {
+        name: "edge64".into(),
+        d_model: 64,
+        n_layer: 4,
+        d_state: 8,
+        d_conv: 4,
+        d_inner: 128,
+        dt_rank: 8,
+        vocab: 256,
+    };
+    let model = MambaModel::synthetic(tier.clone(), 7);
+    let mut rng = Pcg32::new(0x5EED);
+    let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+
+    let ctx = 32usize; // context each sequence has already consumed
+    let b = 8usize;
+    let prompts: Vec<Vec<u16>> = (0..b)
+        .map(|_| (0..ctx).map(|_| rng.below(tier.vocab as u32) as u16).collect())
+        .collect();
+
+    // batched states for the step paths (one B-lane state per model)
+    let pack = |m: &dyn StepModel| -> MambaState {
+        let mut packed = MambaState::new(&tier, b);
+        for (bi, p) in prompts.iter().enumerate() {
+            let mut st = MambaState::new(&tier, 1);
+            m.prefill(p, &mut st);
+            let (c, s) = st.into_raw();
+            // copy lane 0 of the single state into lane bi of the pack
+            let cpl = (tier.d_conv - 1) * tier.d_inner;
+            let spl = tier.d_inner * tier.d_state;
+            for li in 0..tier.n_layer {
+                packed.conv[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
+                    .copy_from_slice(&c[li * cpl..(li + 1) * cpl]);
+                packed.ssm[(li * b + bi) * spl..(li * b + bi + 1) * spl]
+                    .copy_from_slice(&s[li * spl..(li + 1) * spl]);
+            }
+        }
+        packed
+    };
+
+    let toks: Vec<u16> = (0..b).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+
+    // before: the pre-step() world — advance each sequence one token by
+    // re-running the fp32 full-sequence forward over its whole prefix
+    let sites = QuantSites::none();
+    let before = bench_ms(1, iters(8), || {
+        for p in &prompts {
+            let lg = model.forward(p, &sites, None);
+            std::hint::black_box(lg.len());
+        }
+    });
+
+    // after (fp32): one batched stateful step for all 8 lanes
+    let mut st_fp = pack(&model);
+    let fp_step = bench_ms(2, iters(40), || {
+        let lg = model.step(&toks, &mut st_fp);
+        std::hint::black_box(lg.len());
+    });
+
+    // after (W8A8): the quantized batched step — the deployment path
+    let mut st_q = pack(&qmodel);
+    let q_step = bench_ms(2, iters(40), || {
+        let lg = qmodel.step(&toks, &mut st_q);
+        std::hint::black_box(lg.len());
+    });
+
+    let mut t = Table::new(
+        &format!("§Perf — native decode at B={b}, ctx={ctx}, tier {} (ms/advance-all)", tier.name),
+        &["path", "ms", "speedup vs fp32 full-seq"],
+    );
+    t.row(vec!["fp32 full-seq forward ×8 (before)".into(), ms(before.mean), f2(1.0)]);
+    t.row(vec![
+        "fp32 batched step (this PR)".into(),
+        ms(fp_step.mean),
+        format!("{}x", f2(before.mean / fp_step.mean)),
+    ]);
+    t.row(vec![
+        "W8A8 batched step (this PR)".into(),
+        ms(q_step.mean),
+        format!("{}x", f2(before.mean / q_step.mean)),
+    ]);
+    t.print();
+    let speedup = before.mean / q_step.mean;
+    println!(
+        "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
+        if speedup >= 2.0 { "PASS" } else { "FAIL" },
+        speedup
+    );
+    println!("Recorded in EXPERIMENTS.md §Perf (native backend).");
+}

@@ -2,27 +2,58 @@
 //!
 //! Decode executables are compiled AOT for a fixed set of batch sizes
 //! (e.g. {1, 2, 4, 8}); each scheduler tick packs the active requests
-//! into rounds: every round runs the smallest bucket that fits its
-//! group, padding unused lanes (their outputs are discarded by the
-//! state scatter). This is the SSM analog of vLLM's continuous
-//! batching — with constant-size states there is no fragmentation
-//! problem, so the packing is pure arithmetic.
+//! into rounds drawn from those buckets, padding unused lanes (their
+//! outputs are discarded by the state scatter). The packing minimizes
+//! padded lanes over the whole tick. This is the SSM analog of vLLM's
+//! continuous batching — with constant-size states there is no
+//! fragmentation problem, so the packing is pure arithmetic.
 
 /// Plan one scheduler tick: split `n_active` requests into rounds.
-/// `buckets` must be sorted ascending. Returns bucket size per round.
+/// `buckets` must be sorted ascending. Returns bucket size per round,
+/// largest first.
+///
+/// The plan is the *minimum-padding* cover: among all multisets of
+/// buckets whose lane sum is ≥ `n_active`, pick the one with the
+/// fewest total lanes, breaking ties by fewest rounds (each round is a
+/// serial executable launch). The greedy "smallest bucket that fits
+/// the remainder" heuristic gets this wrong — e.g. n=5 with buckets
+/// {1,2,4,8} greedily packs one 8-round (37.5% padded lanes) when
+/// [4,1] covers with zero waste.
 pub fn plan_rounds(n_active: usize, buckets: &[usize]) -> Vec<usize> {
     assert!(!buckets.is_empty(), "no decode buckets available");
     debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]));
-    let max = *buckets.last().unwrap();
-    let mut rounds = Vec::new();
-    let mut left = n_active;
-    while left > 0 {
-        let take = left.min(max);
-        // smallest bucket that fits `take`
-        let b = *buckets.iter().find(|&&b| b >= take).unwrap_or(&max);
-        rounds.push(b);
-        left -= take;
+    if n_active == 0 {
+        return Vec::new();
     }
+    // DP over the number of still-uncovered requests: best[k] is the
+    // lexicographically minimal (lanes, rounds) covering k of them.
+    const UNSET: (usize, usize) = (usize::MAX, usize::MAX);
+    let mut best: Vec<(usize, usize)> = vec![UNSET; n_active + 1];
+    let mut choice: Vec<usize> = vec![0; n_active + 1];
+    best[0] = (0, 0);
+    for k in 1..=n_active {
+        for &b in buckets {
+            let prev = best[k.saturating_sub(b)];
+            if prev == UNSET {
+                continue;
+            }
+            let cand = (prev.0 + b, prev.1 + 1);
+            if cand < best[k] {
+                best[k] = cand;
+                choice[k] = b;
+            }
+        }
+    }
+    let mut rounds = Vec::with_capacity(best[n_active].1);
+    let mut k = n_active;
+    while k > 0 {
+        let b = choice[k];
+        rounds.push(b);
+        k = k.saturating_sub(b);
+    }
+    // largest rounds first: fuller rounds run earliest, so harvesting
+    // between rounds can only shrink later ones
+    rounds.sort_unstable_by(|a, b| b.cmp(a));
     rounds
 }
 
@@ -61,20 +92,78 @@ mod tests {
 
     #[test]
     fn padding_cases() {
-        assert_eq!(plan_rounds(3, &[1, 2, 4, 8]), vec![4]); // 1 padded lane
-        assert_eq!(plan_rounds(5, &[1, 2, 4, 8]), vec![8]); // 3 padded lanes
-        assert!((padding_waste(5, &[8]) - 0.375).abs() < 1e-12);
+        // minimum-padding splits: zero waste whenever the bucket set
+        // can compose the exact count
+        assert_eq!(plan_rounds(3, &[1, 2, 4, 8]), vec![2, 1]);
+        assert_eq!(plan_rounds(5, &[1, 2, 4, 8]), vec![4, 1]);
+        assert_eq!(plan_rounds(7, &[1, 2, 4, 8]), vec![4, 2, 1]);
+        assert!((padding_waste(5, &plan_rounds(5, &[1, 2, 4, 8])) - 0.0).abs() < 1e-12);
+        // when padding is unavoidable, it is minimal: n=3 over {2,8}
+        // wastes one lane ([2,2]), not five ([8])
+        assert_eq!(plan_rounds(3, &[2, 8]), vec![2, 2]);
+        // ties on lanes break toward fewer rounds
+        assert_eq!(plan_rounds(4, &[1, 2, 4, 8]), vec![4]);
+        assert_eq!(plan_rounds(8, &[1, 2, 4, 8]), vec![8]);
     }
 
     #[test]
     fn overflow_multiple_rounds() {
         assert_eq!(plan_rounds(17, &[1, 2, 4, 8]), vec![8, 8, 1]);
         assert_eq!(plan_rounds(10, &[1, 2, 4, 8]), vec![8, 2]);
+        assert_eq!(plan_rounds(21, &[1, 2, 4, 8]), vec![8, 8, 4, 1]);
     }
 
     #[test]
     fn only_b1_available() {
         assert_eq!(plan_rounds(3, &[1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn zero_active_empty_plan() {
+        assert_eq!(plan_rounds(0, &[1, 2, 4, 8]), Vec::<usize>::new());
+    }
+
+    /// The greedy heuristic the planner replaced (kept as the
+    /// property-test adversary).
+    fn plan_rounds_greedy(n_active: usize, buckets: &[usize]) -> Vec<usize> {
+        let max = *buckets.last().unwrap();
+        let mut rounds = Vec::new();
+        let mut left = n_active;
+        while left > 0 {
+            let take = left.min(max);
+            let b = *buckets.iter().find(|&&b| b >= take).unwrap_or(&max);
+            rounds.push(b);
+            left -= take;
+        }
+        rounds
+    }
+
+    #[test]
+    fn prop_never_wastes_more_than_greedy() {
+        // seeded sweep over (n, bucket subset): the DP plan covers all
+        // requests and never pads more lanes than the greedy plan
+        let mut r = crate::util::rng::Pcg32::new(0xBA7C4);
+        for _ in 0..500 {
+            let n = 1 + r.below(64) as usize;
+            let all = [1usize, 2, 3, 4, 8, 16];
+            let mut buckets: Vec<usize> = all.iter().filter(|_| r.f32() < 0.5).cloned().collect();
+            if buckets.is_empty() {
+                buckets.push(1 + r.below(8) as usize);
+            }
+            let plan = plan_rounds(n, &buckets);
+            let greedy = plan_rounds_greedy(n, &buckets);
+            let lanes: usize = plan.iter().sum();
+            let greedy_lanes: usize = greedy.iter().sum();
+            assert!(lanes >= n, "plan {plan:?} does not cover n={n}");
+            assert!(plan.iter().all(|b| buckets.contains(b)), "{plan:?} vs {buckets:?}");
+            assert!(
+                lanes <= greedy_lanes,
+                "n={n} buckets={buckets:?}: dp {plan:?} wastes more than greedy {greedy:?}"
+            );
+            // and assignment still covers exactly n requests
+            let covered: usize = assign(n, &plan).iter().map(|g| g.len()).sum();
+            assert_eq!(covered, n);
+        }
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //! * [`sampler`]  — greedy / temperature / top-k sampling
 //! * [`metrics`]  — TTFT / TPOT / TTLT histograms + queue gauges
 //! * [`engine`]   — the single-owner execution loop over [`crate::runtime`]
+//! * [`native`]   — the artifact-free backend: the same engine surface
+//!                  served from the pure-rust [`crate::ssm::StepModel`]s
+//!                  (fp32 reference or W8A8), no XLA artifacts needed
 //! * [`server`]   — a threaded front door (std::mpsc; tokio is not in
 //!                  the offline vendor set, and one executor thread is
 //!                  the right shape for one PJRT CPU device anyway)
@@ -20,10 +23,12 @@ pub mod batcher;
 pub mod engine;
 pub mod engine_tr;
 pub mod metrics;
+pub mod native;
 pub mod request;
 pub mod sampler;
 pub mod server;
 pub mod state;
 
 pub use engine::{Engine, EngineConfig};
+pub use native::{NativeEngine, NativeEngineConfig};
 pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};

@@ -1,0 +1,287 @@
+//! `NativeEngine`: the artifact-free serving backend. Same scheduler
+//! shape as [`super::engine::Engine`] — prefill-priority admission,
+//! bucketed continuous decode batching via [`super::batcher`], the
+//! constant-size [`SsmStatePool`] — but execution goes through a
+//! [`StepModel`] (fp32 reference or the W8A8
+//! [`crate::ssm::QuantizedMambaModel`]) instead of AOT XLA graphs.
+//! This is the "no-artifact edge serving" scenario: a coordinator that
+//! can come up on a bare machine with nothing but weights (or a
+//! synthetic tier) and still expose the identical
+//! `submit`/`step`/`run_to_completion`/`Metrics` surface.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{LiveRequest, Request, Response};
+use crate::coordinator::sampler::Sampler;
+use crate::coordinator::state::SsmStatePool;
+use crate::data::BOS;
+use crate::ssm::{MambaState, StepModel};
+
+#[derive(Debug, Clone)]
+pub struct NativeEngineConfig {
+    /// state-pool capacity (max concurrent requests)
+    pub capacity: usize,
+    /// admission limit per tick
+    pub max_prefills_per_tick: usize,
+    /// decode-round lane buckets (ascending). The native backend can
+    /// run any batch size, but bucketing keeps the scheduling identical
+    /// to the AOT deployment shape so the two backends are comparable.
+    pub decode_buckets: Vec<usize>,
+}
+
+impl Default for NativeEngineConfig {
+    fn default() -> Self {
+        NativeEngineConfig {
+            capacity: 32,
+            max_prefills_per_tick: 2,
+            decode_buckets: vec![1, 2, 4, 8],
+        }
+    }
+}
+
+pub struct NativeEngine {
+    pub cfg: NativeEngineConfig,
+    model: Box<dyn StepModel + Send>,
+    pool: SsmStatePool,
+    queue: VecDeque<Request>,
+    live: Vec<LiveRequest>,
+    done: Vec<Response>,
+    sampler: Sampler,
+    pub metrics: Metrics,
+    vocab: usize,
+}
+
+impl NativeEngine {
+    pub fn new(model: Box<dyn StepModel + Send>, cfg: NativeEngineConfig) -> NativeEngine {
+        assert!(!cfg.decode_buckets.is_empty(), "need at least one decode bucket");
+        let t = model.tier();
+        let pool = SsmStatePool::with_dims(t.n_layer, t.d_inner, t.d_conv, t.d_state, cfg.capacity);
+        let vocab = t.vocab;
+        NativeEngine {
+            pool,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: Vec::new(),
+            sampler: Sampler::new(0xC0FFEE),
+            metrics: Metrics::new(),
+            vocab,
+            model,
+            cfg,
+        }
+    }
+
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.cfg.decode_buckets
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn state_bytes_per_request(&self) -> usize {
+        self.pool.bytes_per_request()
+    }
+
+    /// Tokens generated so far (live requests + completed).
+    pub fn tokens_generated(&self) -> usize {
+        self.live.iter().map(|lr| lr.generated.len()).sum::<usize>()
+            + self.metrics.tokens_out as usize
+    }
+
+    /// Run one scheduler tick: admit + prefill a few queued requests,
+    /// then one decode round over all live requests. Returns finished
+    /// responses (also retained for `take_done`). Result-typed for
+    /// interface parity with [`super::engine::Engine::step`]; the
+    /// native path itself cannot fail.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        for _ in 0..self.cfg.max_prefills_per_tick {
+            if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            self.prefill(req);
+        }
+        if !self.live.is_empty() {
+            self.decode_tick();
+        }
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].done() {
+                let lr = self.live.swap_remove(i);
+                self.pool.release(lr.state_slot);
+                let resp = lr.into_response();
+                self.metrics.record_response(
+                    resp.ttft_ms,
+                    resp.tpot_ms,
+                    resp.ttlt_ms,
+                    resp.tokens.len(),
+                );
+                finished.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        self.done.extend(finished.iter().cloned());
+        Ok(finished)
+    }
+
+    /// Drive until everything queued + live has finished.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        while !self.queue.is_empty() || !self.live.is_empty() {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    pub fn take_done(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    fn prefill(&mut self, req: Request) {
+        let slot = self.pool.alloc().expect("state pool exhausted (checked above)");
+        // no graph-length padding: the native model ingests any T, so
+        // empty prompts just become a lone BOS
+        let prompt: Vec<u16> =
+            if req.prompt.is_empty() { vec![BOS] } else { req.prompt.clone() };
+        let mut lr = LiveRequest::new(req, slot);
+        let t0 = std::time::Instant::now();
+        let mut state = MambaState::new(self.model.tier(), 1);
+        let logits = self.model.prefill(&prompt, &mut state);
+        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        let (conv, ssm) = state.into_raw();
+        self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
+        let t = prompt.len();
+        let v = self.vocab;
+        let row = &logits[(t - 1) * v..t * v];
+        let tok = self.sampler.sample(row, v, &lr.req.params);
+        lr.generated.push(tok);
+        lr.prefill_done = Some(std::time::Instant::now());
+        lr.last_token = lr.prefill_done;
+        self.live.push(lr);
+    }
+
+    fn decode_tick(&mut self) {
+        let n = self.live.len();
+        let plan = batcher::plan_rounds(n, &self.cfg.decode_buckets);
+        let groups = batcher::assign(n, &plan);
+        for (gi, group) in groups.iter().enumerate() {
+            let b = plan[gi];
+            self.metrics.record_round(b, group.len());
+            self.decode_round(group, b);
+        }
+    }
+
+    fn decode_round(&mut self, group: &[usize], b: usize) {
+        let slots: Vec<usize> = group.iter().map(|&i| self.live[i].state_slot).collect();
+        let (conv, ssm) = self.pool.gather_raw(&slots, b);
+        let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
+        for (bi, &i) in group.iter().enumerate() {
+            toks[bi] = self.live[i].next_input_token();
+        }
+        let mut state = MambaState::from_raw(self.model.tier(), b, conv, ssm);
+        let t0 = std::time::Instant::now();
+        let logits = self.model.step(&toks, &mut state);
+        self.metrics.decode_step_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        let (conv_o, ssm_o) = state.into_raw();
+        // only live slots are scattered back; padded-lane outputs drop
+        self.pool.scatter_raw(&slots, b, &conv_o, &ssm_o);
+        let v = self.vocab;
+        for (bi, &i) in group.iter().enumerate() {
+            let row = &logits[bi * v..(bi + 1) * v];
+            let lr = &mut self.live[i];
+            let tok = self.sampler.sample(row, v, &lr.req.params);
+            lr.generated.push(tok);
+            let now = std::time::Instant::now();
+            if let Some(last) = lr.last_token {
+                lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+            }
+            lr.last_token = Some(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+    use crate::ssm::{MambaModel, MambaTier};
+
+    fn tier() -> MambaTier {
+        MambaTier {
+            name: "nat".into(),
+            d_model: 8,
+            n_layer: 2,
+            d_state: 4,
+            d_conv: 4,
+            d_inner: 16,
+            dt_rank: 2,
+            vocab: 16,
+        }
+    }
+
+    fn req(id: u64, prompt: Vec<u16>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        }
+    }
+
+    #[test]
+    fn serves_multi_request_workload() {
+        let model = MambaModel::synthetic(tier(), 13);
+        let mut eng = NativeEngine::new(Box::new(model), NativeEngineConfig::default());
+        for i in 0..10u64 {
+            let plen = 2 + (i as usize % 5);
+            eng.submit(req(i, (0..plen).map(|j| (j % 16) as u16).collect(), 5 + i as usize % 4));
+        }
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 10);
+        assert_eq!(eng.metrics.requests_done, 10);
+        for r in &done {
+            let want = 5 + r.id as usize % 4;
+            assert_eq!(r.tokens.len(), want, "request {} token count", r.id);
+        }
+        assert_eq!(eng.n_live(), 0);
+        assert_eq!(eng.n_queued(), 0);
+    }
+
+    #[test]
+    fn empty_prompt_served_as_bos() {
+        let model = MambaModel::synthetic(tier(), 13);
+        let mut eng = NativeEngine::new(Box::new(model), NativeEngineConfig::default());
+        eng.submit(req(1, vec![], 3));
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn capacity_backpressure_queues_excess() {
+        let model = MambaModel::synthetic(tier(), 13);
+        let cfg = NativeEngineConfig { capacity: 2, max_prefills_per_tick: 8, ..Default::default() };
+        let mut eng = NativeEngine::new(Box::new(model), cfg);
+        for i in 0..5u64 {
+            eng.submit(req(i, vec![1, 2, 3], 4));
+        }
+        eng.step().unwrap();
+        assert!(eng.n_live() <= 2);
+        assert!(eng.n_queued() >= 3);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5);
+    }
+}

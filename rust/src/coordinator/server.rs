@@ -5,6 +5,11 @@
 //! dedicated engine thread plus std::mpsc channels: clients submit
 //! requests with a response channel and block (or poll) on it. This is
 //! the same single-owner architecture a GPU-stream-bound executor uses.
+//!
+//! The loop is generic over [`EngineCore`], so the same front door
+//! drives the XLA-backed [`Engine`] and the artifact-free
+//! [`NativeEngine`] — `examples/serve_batch.rs` picks the backend with
+//! a flag.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -12,8 +17,58 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::native::{NativeEngine, NativeEngineConfig};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::runtime::Runtime;
+use crate::ssm::StepModel;
+
+/// What the serving loop needs from an execution engine. `Engine`
+/// (XLA) and `NativeEngine` (pure rust) both implement it; the boxed
+/// core never leaves the engine thread, so non-`Send` engines (the
+/// PJRT client) are fine.
+pub trait EngineCore {
+    fn submit(&mut self, req: Request);
+    fn step(&mut self) -> Result<Vec<Response>>;
+    fn n_queued(&self) -> usize;
+    fn n_live(&self) -> usize;
+    fn report(&self) -> String;
+}
+
+impl EngineCore for Engine {
+    fn submit(&mut self, req: Request) {
+        Engine::submit(self, req)
+    }
+    fn step(&mut self) -> Result<Vec<Response>> {
+        Engine::step(self)
+    }
+    fn n_queued(&self) -> usize {
+        Engine::n_queued(self)
+    }
+    fn n_live(&self) -> usize {
+        Engine::n_live(self)
+    }
+    fn report(&self) -> String {
+        self.metrics.report()
+    }
+}
+
+impl EngineCore for NativeEngine {
+    fn submit(&mut self, req: Request) {
+        NativeEngine::submit(self, req)
+    }
+    fn step(&mut self) -> Result<Vec<Response>> {
+        NativeEngine::step(self)
+    }
+    fn n_queued(&self) -> usize {
+        NativeEngine::n_queued(self)
+    }
+    fn n_live(&self) -> usize {
+        NativeEngine::n_live(self)
+    }
+    fn report(&self) -> String {
+        self.metrics.report()
+    }
+}
 
 enum Msg {
     Submit(Request, Sender<Response>),
@@ -28,32 +83,24 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Spawn the engine thread. The `Runtime` is constructed *inside*
-    /// the thread (PJRT client is not Send).
-    pub fn spawn(artifacts_root: std::path::PathBuf, cfg: EngineConfig) -> Result<ServerHandle> {
+    /// Spawn an engine thread around any [`EngineCore`] factory. The
+    /// factory runs *inside* the thread (the PJRT client is not Send).
+    pub fn spawn_core<F>(make: F) -> Result<ServerHandle>
+    where
+        F: FnOnce() -> Result<Box<dyn EngineCore>> + Send + 'static,
+    {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let join = std::thread::Builder::new()
             .name("quamba-engine".into())
             .spawn(move || {
-                let rt = match Runtime::new(&artifacts_root) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                let mut engine = match Engine::new(rt, cfg) {
+                let mut engine = match make() {
                     Ok(e) => e,
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return;
                     }
                 };
-                if let Err(e) = engine.warmup() {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return;
-                }
                 let _ = ready_tx.send(Ok(()));
                 let mut waiters: Vec<(RequestId, Sender<Response>)> = Vec::new();
                 loop {
@@ -77,7 +124,7 @@ impl ServerHandle {
                             engine.submit(req);
                         }
                         Some(Msg::Report(tx)) => {
-                            let _ = tx.send(engine.metrics.report());
+                            let _ = tx.send(engine.report());
                         }
                         Some(Msg::Shutdown) => break,
                         None => {}
@@ -108,6 +155,25 @@ impl ServerHandle {
             Err(_) => return Err(anyhow::anyhow!("engine thread died during startup")),
         }
         Ok(ServerHandle { tx, join: Some(join), next_id: 1 })
+    }
+
+    /// Spawn the XLA-backed engine thread (artifact tree required).
+    pub fn spawn(artifacts_root: std::path::PathBuf, cfg: EngineConfig) -> Result<ServerHandle> {
+        Self::spawn_core(move || {
+            let rt = Runtime::new(&artifacts_root)?;
+            let mut engine = Engine::new(rt, cfg)?;
+            engine.warmup()?;
+            Ok(Box::new(engine) as Box<dyn EngineCore>)
+        })
+    }
+
+    /// Spawn the artifact-free native engine thread around a
+    /// [`StepModel`] (fp32 reference or W8A8 quantized).
+    pub fn spawn_native(
+        model: Box<dyn StepModel + Send>,
+        cfg: NativeEngineConfig,
+    ) -> Result<ServerHandle> {
+        Self::spawn_core(move || Ok(Box::new(NativeEngine::new(model, cfg)) as Box<dyn EngineCore>))
     }
 
     /// Submit a prompt; returns a receiver for the final response.

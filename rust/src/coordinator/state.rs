@@ -30,11 +30,24 @@ pub struct SsmStatePool {
 
 impl SsmStatePool {
     pub fn new(tier: &TierInfo, capacity: usize) -> Self {
+        Self::with_dims(tier.n_layer, tier.d_inner, tier.d_conv, tier.d_state, capacity)
+    }
+
+    /// Dimension-level constructor — lets the native backend build a
+    /// pool straight from a [`crate::ssm::MambaTier`] without an
+    /// artifact-manifest `TierInfo`.
+    pub fn with_dims(
+        n_layer: usize,
+        d_inner: usize,
+        d_conv: usize,
+        d_state: usize,
+        capacity: usize,
+    ) -> Self {
         SsmStatePool {
-            n_layer: tier.n_layer,
-            d_inner: tier.d_inner,
-            conv_per_layer: (tier.d_conv - 1) * tier.d_inner,
-            ssm_per_layer: tier.d_inner * tier.d_state,
+            n_layer,
+            d_inner,
+            conv_per_layer: (d_conv - 1) * d_inner,
+            ssm_per_layer: d_inner * d_state,
             slots: (0..capacity).map(|_| None).collect(),
             free: (0..capacity).rev().collect(),
         }

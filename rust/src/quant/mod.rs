@@ -6,6 +6,7 @@
 //! integration tests).
 
 pub mod hadamard;
+pub mod qlinear;
 
 /// Largest representable magnitude at bit-width `n` (signed symmetric).
 pub fn qmax(nbits: u32) -> f32 {
@@ -49,7 +50,10 @@ pub fn amax(xs: &[f32]) -> f32 {
 }
 
 /// The paper's percentile max (§4.2): the p-th percentile of |x|,
-/// p in percent (99.999 keeps all but the top 0.001%).
+/// p in percent (99.999 keeps all but the top 0.001%). Linear
+/// interpolation between order statistics (numpy's default), found by
+/// selection rather than a full sort — this runs per-layer per-forward
+/// during calibration, so it is O(n) instead of O(n log n).
 pub fn percentile_amax(xs: &[f32], p: f64) -> f32 {
     if xs.is_empty() {
         return 0.0;
@@ -58,12 +62,17 @@ pub fn percentile_amax(xs: &[f32], p: f64) -> f32 {
         return amax(xs);
     }
     let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
     let frac = (rank - lo as f64) as f32;
-    v[lo] * (1.0 - frac) + v[hi] * frac
+    let (_, lo_v, upper) = v.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    let lo_v = *lo_v;
+    if frac == 0.0 || upper.is_empty() {
+        return lo_v;
+    }
+    // the (lo+1)-th order statistic is the minimum of the upper partition
+    let hi_v = upper.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+    lo_v * (1.0 - frac) + hi_v * frac
 }
 
 /// Asymmetric parameters from observed (min, max).
@@ -89,8 +98,17 @@ pub fn fake_quant_asym(xs: &mut [f32], s: f32, z: i32, nbits: u32) {
 /// value of an (exp_bits, man_bits) minifloat with IEEE-style bias,
 /// subnormals, and saturation to the max finite value.
 pub fn fake_quant_fp8_one(x: f32, exp_bits: i32, man_bits: i32) -> f32 {
-    if x == 0.0 || !x.is_finite() {
-        return if x.is_finite() { 0.0 } else { x.signum() * fp8_max(exp_bits, man_bits) };
+    if x.is_nan() {
+        // deterministic saturation: the int8 path maps NaN to code 0
+        // (`NaN as i32 == 0` after the clamp); mirror that here rather
+        // than letting NaN propagate through calibrated scales
+        return 0.0;
+    }
+    if x.is_infinite() {
+        return x.signum() * fp8_max(exp_bits, man_bits);
+    }
+    if x == 0.0 {
+        return 0.0;
     }
     let bias = (1 << (exp_bits - 1)) - 1;
     let e_min = 1 - bias; // smallest normal exponent
@@ -100,16 +118,31 @@ pub fn fake_quant_fp8_one(x: f32, exp_bits: i32, man_bits: i32) -> f32 {
     let e_clamped = e.max(e_min);
     // quantize the significand on a 2^man_bits grid at exponent e
     let scale = 2f32.powi(e_clamped - man_bits);
-    let q = (a / scale).round() * scale;
+    let mut q = (a / scale).round() * scale;
+    // rounding can carry the significand up to 2.0 (e.g. 1.99 → 16/8 at
+    // E4M3): renormalize onto the next exponent's (coarser) grid so the
+    // result is a representable mantissa, not an off-grid 2.0·2^e
+    if q >= 2f32.powi(e_clamped + 1) {
+        let scale2 = 2f32.powi(e_clamped + 1 - man_bits);
+        q = (a / scale2).round() * scale2;
+    }
     let max = fp8_max(exp_bits, man_bits);
     sign * q.min(max)
 }
 
+/// Largest finite value of the minifloat format. E4M3 follows the OCP
+/// convention (top exponent kept for normals, all-ones mantissa is the
+/// NaN code): max = 1.75·2^8 = 448. Everything else is IEEE-style (top
+/// exponent reserved for inf/NaN): E5M2 max = 1.75·2^15 = 57344.
 fn fp8_max(exp_bits: i32, man_bits: i32) -> f32 {
     let bias = (1 << (exp_bits - 1)) - 1;
-    // E4M3 convention: top exponent kept for normals (minus one NaN code)
-    let e_max = (1 << exp_bits) - 2 - bias + 1;
-    (2.0 - 2f32.powi(-man_bits)) * 2f32.powi(e_max - 1)
+    if (exp_bits, man_bits) == (4, 3) {
+        let e_max = (1 << exp_bits) - 2 - bias + 1;
+        (2.0 - 2.0 * 2f32.powi(-man_bits)) * 2f32.powi(e_max)
+    } else {
+        let e_max = (1 << exp_bits) - 2 - bias;
+        (2.0 - 2f32.powi(-man_bits)) * 2f32.powi(e_max)
+    }
 }
 
 /// In-place FP8 round trip with a per-tensor scale into the format's
@@ -205,6 +238,65 @@ mod tests {
             xs.iter().zip(ys).skip(1).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
         };
         assert!(err(&fp8) < err(&int8) / 10.0);
+    }
+
+    #[test]
+    fn fp8_nonfinite_saturates_deterministically() {
+        // NaN maps to 0 (the int8 path's `NaN as i32 == 0` semantics);
+        // infinities saturate to the signed finite max
+        assert_eq!(fake_quant_fp8_one(f32::NAN, 4, 3), 0.0);
+        assert_eq!(fake_quant_fp8_one(f32::NAN, 5, 2), 0.0);
+        assert_eq!(fake_quant_fp8_one(f32::INFINITY, 4, 3), 448.0);
+        assert_eq!(fake_quant_fp8_one(f32::NEG_INFINITY, 4, 3), -448.0);
+        assert_eq!(fake_quant_fp8_one(f32::INFINITY, 5, 2), 57344.0);
+    }
+
+    #[test]
+    fn fp8_renormalizes_significand_carry() {
+        // values just under a power of two round up across the exponent
+        // boundary; the result must sit on the next exponent's grid
+        assert_eq!(fake_quant_fp8_one(1.99, 4, 3), 2.0);
+        assert_eq!(fake_quant_fp8_one(-1.99, 4, 3), -2.0);
+        assert_eq!(fake_quant_fp8_one(1.99, 5, 2), 2.0);
+        assert_eq!(fake_quant_fp8_one(3.98, 4, 3), 4.0);
+        // and mid-grid values still round to the fine grid
+        assert_eq!(fake_quant_fp8_one(1.90, 4, 3), 1.875);
+    }
+
+    #[test]
+    fn fp8_standard_maxima() {
+        // OCP E4M3 max = 448, IEEE E5M2 max = 57344
+        assert_eq!(fp8_max(4, 3), 448.0);
+        assert_eq!(fp8_max(5, 2), 57344.0);
+        assert_eq!(fake_quant_fp8_one(448.0, 4, 3), 448.0);
+        assert_eq!(fake_quant_fp8_one(1.0e4, 4, 3), 448.0);
+        assert_eq!(fake_quant_fp8_one(57344.0, 5, 2), 57344.0);
+        assert_eq!(fake_quant_fp8_one(1.0e9, 5, 2), 57344.0);
+    }
+
+    /// Reference percentile (full sort + interpolation) the selection
+    /// implementation must match exactly.
+    fn percentile_amax_sorted(xs: &[f32], p: f64) -> f32 {
+        let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = (rank - lo as f64) as f32;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+
+    #[test]
+    fn percentile_selection_matches_sorted() {
+        let mut r = crate::util::rng::Pcg32::new(17);
+        for n in [1usize, 2, 3, 10, 100, 1000, 4097] {
+            let xs: Vec<f32> = (0..n).map(|_| r.normal() * 4.0).collect();
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 99.999, 100.0] {
+                let fast = percentile_amax(&xs, p);
+                let slow = if p >= 100.0 { amax(&xs) } else { percentile_amax_sorted(&xs, p) };
+                assert_eq!(fast, slow, "n={n} p={p}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! W8A8 linear execution: i8 × i8 → i32 accumulate, dequantized by
+//! `s_x · s_w` (+ f32 bias) — the rust-native mirror of
+//! `python/compile/kernels/matmul_i8.py` (the CUTLASS-INT8 stand-in on
+//! the deployment path). Unlike the fake-quant instrumentation in
+//! [`crate::quant`], this path really executes in the integer domain,
+//! so the native serving backend carries int8 weights end-to-end.
+
+use crate::quant;
+
+/// out (M×N) i32 = x_q (M×K) i8 · w_q (K×N) i8, i32 accumulation.
+pub fn matmul_i8(x_q: &[i8], w_q: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(w_q.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0);
+    for i in 0..m {
+        for p in 0..k {
+            let xv = x_q[i * k + p] as i32;
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &w_q[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j] as i32;
+            }
+        }
+    }
+}
+
+/// A linear layer with per-tensor symmetric int8 weights and a static
+/// input scale supplied per call (baked at calibration time, Eq. 2).
+pub struct QLinear {
+    pub k: usize,
+    pub n: usize,
+    pub w_q: Vec<i8>,
+    /// weight scale; offline folds (e.g. the Hadamard 1/d_inner) are
+    /// absorbed here, exactly like `wscales[...] / d_inner` in
+    /// `python/compile/quant/calibrate.py`
+    pub s_w: f32,
+    pub bias: Option<Vec<f32>>,
+}
+
+impl QLinear {
+    /// Quantize an fp32 (K×N) row-major weight with a per-tensor scale.
+    pub fn from_f32(w: &[f32], k: usize, n: usize, bias: Option<Vec<f32>>) -> QLinear {
+        assert_eq!(w.len(), k * n);
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), n);
+        }
+        let s_w = quant::scale_sym(quant::amax(w), 8);
+        QLinear { k, n, w_q: quant::quantize_sym(w, s_w, 8), s_w, bias }
+    }
+
+    /// Fold an extra factor into the weight scale (compute-invariant
+    /// offline transform, paper §3.3).
+    pub fn fold_scale(mut self, f: f32) -> QLinear {
+        self.s_w *= f;
+        self
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.w_q.len()
+    }
+
+    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`.
+    pub fn forward_q(&self, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), m * self.n);
+        let mut acc = vec![0i32; m * self.n];
+        matmul_i8(x_q, &self.w_q, m, self.k, self.n, &mut acc);
+        let s = s_x * self.s_w;
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a as f32 * s;
+        }
+        if let Some(b) = &self.bias {
+            for row in out.chunks_exact_mut(self.n) {
+                for (o, &bv) in row.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+        }
+    }
+
+    /// Quantize fp32 input rows at `s_x`, then run the int8 matmul.
+    /// Returns the i8 codes so callers can reuse them (e.g. the scan
+    /// consumes the same quantized x as `x_proj`, paper §4.3).
+    pub fn forward(&self, x: &[f32], s_x: f32, m: usize, out: &mut [f32]) -> Vec<i8> {
+        assert_eq!(x.len(), m * self.k);
+        let x_q = quant::quantize_sym(x, s_x, 8);
+        self.forward_q(&x_q, s_x, m, out);
+        x_q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn i8_matmul_matches_f32_on_grid() {
+        // inputs already on the int8 grid: integer and f32 paths agree
+        let mut r = Pcg32::new(3);
+        let (m, k, n) = (4usize, 8usize, 6usize);
+        let s_x = 0.02f32;
+        let s_w = 0.01f32;
+        let x_q: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let w_q: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let mut acc = vec![0i32; m * n];
+        matmul_i8(&x_q, &w_q, m, k, n, &mut acc);
+        for i in 0..m {
+            for j in 0..n {
+                let mut f = 0.0f64;
+                for p in 0..k {
+                    f += (x_q[i * k + p] as f64 * s_x as f64) * (w_q[p * n + j] as f64 * s_w as f64);
+                }
+                let got = acc[i * n + j] as f64 * (s_x as f64 * s_w as f64);
+                assert!((f - got).abs() < 1e-6, "({i},{j}): {f} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn qlinear_close_to_f32_linear() {
+        let mut r = Pcg32::new(9);
+        let (m, k, n) = (3usize, 32usize, 16usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
+        let bias: Vec<f32> = (0..n).map(|_| r.normal() * 0.1).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let ql = QLinear::from_f32(&w, k, n, Some(bias.clone()));
+        let s_x = crate::quant::scale_sym(crate::quant::amax(&x), 8);
+        let mut got = vec![0.0f32; m * n];
+        ql.forward(&x, s_x, m, &mut got);
+        // reference: f32 matmul + bias
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = bias[j];
+                for p in 0..k {
+                    acc += x[i * k + p] * w[p * n + j];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        // error budget: k accumulations of (s_x/2 · |w| + s_w/2 · |x|)
+        let tol = k as f32 * (s_x * 0.2 + ql.s_w * 3.0);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < tol, "{a} vs {b} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn fold_scale_scales_output() {
+        let w = vec![1.0f32, -1.0, 0.5, 0.25];
+        let ql = QLinear::from_f32(&w, 2, 2, None);
+        let folded = QLinear::from_f32(&w, 2, 2, None).fold_scale(0.5);
+        let x_q: Vec<i8> = vec![10, -20];
+        let (mut a, mut b) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        ql.forward_q(&x_q, 0.1, 1, &mut a);
+        folded.forward_q(&x_q, 0.1, 1, &mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u * 0.5 - v).abs() < 1e-6);
+        }
+    }
+}

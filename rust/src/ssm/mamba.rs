@@ -3,10 +3,14 @@
 //!
 //! Matches `python/compile/model.py::forward_fp` (including the
 //! outlier-injection gain diagonals shipped as `__gains.*` in the
-//! weight bundle). Single-sequence (B=1) — the analyses never batch.
+//! weight bundle). The full-sequence [`MambaModel::forward`] drives
+//! the analyses; the layer math lives in shared `pub(crate)` helpers
+//! so the stateful decode path ([`super::step`]) and the W8A8 native
+//! model ([`super::qmamba`]) execute the identical arithmetic.
 
 use crate::quant;
 use crate::tensor::qtz::QtzFile;
+use crate::util::rng::Pcg32;
 
 #[derive(Debug, Clone)]
 pub struct MambaTier {
@@ -71,31 +75,31 @@ pub struct LayerTaps {
 pub struct MambaModel {
     pub tier: MambaTier,
     // weights, all fp32 row-major
-    embedding: Vec<f32>,            // (V, d)
-    norm_f: Vec<f32>,               // (d,)
-    layers: Vec<Layer>,
-    g_x: Vec<f32>,                  // (L, di)
-    g_y: Vec<f32>,                  // (L, di)
+    pub(crate) embedding: Vec<f32>,            // (V, d)
+    pub(crate) norm_f: Vec<f32>,               // (d,)
+    pub(crate) layers: Vec<Layer>,
+    pub(crate) g_x: Vec<f32>,                  // (L, di)
+    pub(crate) g_y: Vec<f32>,                  // (L, di)
 }
 
-struct Layer {
-    norm: Vec<f32>,       // (d,)
-    in_proj: Vec<f32>,    // (d, 2di)
-    conv_w: Vec<f32>,     // (W, di)
-    conv_b: Vec<f32>,     // (di,)
-    x_proj: Vec<f32>,     // (di, r+2n)
-    dt_proj: Vec<f32>,    // (r, di)
-    dt_bias: Vec<f32>,    // (di,)
-    a: Vec<f32>,          // (di, n) = -exp(A_log)
-    d: Vec<f32>,          // (di,)
-    out_proj: Vec<f32>,   // (di, d)
+pub(crate) struct Layer {
+    pub(crate) norm: Vec<f32>,       // (d,)
+    pub(crate) in_proj: Vec<f32>,    // (d, 2di)
+    pub(crate) conv_w: Vec<f32>,     // (W, di)
+    pub(crate) conv_b: Vec<f32>,     // (di,)
+    pub(crate) x_proj: Vec<f32>,     // (di, r+2n)
+    pub(crate) dt_proj: Vec<f32>,    // (r, di)
+    pub(crate) dt_bias: Vec<f32>,    // (di,)
+    pub(crate) a: Vec<f32>,          // (di, n) = -exp(A_log)
+    pub(crate) d: Vec<f32>,          // (di,)
+    pub(crate) out_proj: Vec<f32>,   // (di, d)
 }
 
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-fn softplus(x: f32) -> f32 {
+pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
         x
     } else {
@@ -104,7 +108,7 @@ fn softplus(x: f32) -> f32 {
 }
 
 /// y (M×N) = x (M×K) @ w (K×N)
-fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+pub(crate) fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(out.len(), m * n);
@@ -124,12 +128,81 @@ fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     }
 }
 
-fn rmsnorm(x: &[f32], w: &[f32], d: usize, eps: f32, out: &mut [f32]) {
+pub(crate) fn rmsnorm(x: &[f32], w: &[f32], d: usize, eps: f32, out: &mut [f32]) {
     for (row_in, row_out) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let ms: f32 = row_in.iter().map(|v| v * v).sum::<f32>() / d as f32;
         let r = 1.0 / (ms + eps).sqrt();
         for j in 0..d {
             row_out[j] = row_in[j] * r * w[j];
+        }
+    }
+}
+
+/// Copy columns [lo, hi) of a (rows × row_w) matrix into a new buffer.
+pub(crate) fn take_cols(src: &[f32], rows: usize, row_w: usize, lo: usize, hi: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * row_w);
+    let w = hi - lo;
+    let mut out = Vec::with_capacity(rows * w);
+    for r in 0..rows {
+        out.extend_from_slice(&src[r * row_w + lo..r * row_w + hi]);
+    }
+    out
+}
+
+/// Causal depthwise conv + SiLU + per-channel gain over a (tl × di)
+/// time-major block — the one conv implementation shared by the
+/// full-sequence forward, the stateful prefill, and the decode step.
+///
+/// `hist` is the carried window of the last (W−1) conv *inputs*
+/// (oldest row first); `None` means zero history (a fresh sequence).
+/// When given, it is advanced in place to the last (W−1) inputs of
+/// [hist ; x], so chunked calls compose exactly with one full call.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn causal_conv_silu(
+    x: &[f32],
+    mut hist: Option<&mut [f32]>,
+    conv_w: &[f32],
+    conv_b: &[f32],
+    gx: &[f32],
+    tl: usize,
+    di: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), tl * di);
+    assert_eq!(out.len(), tl * di);
+    assert_eq!(conv_w.len(), w * di);
+    if let Some(h) = hist.as_deref() {
+        assert_eq!(h.len(), (w - 1) * di);
+    }
+    for ti in 0..tl {
+        for ch in 0..di {
+            let mut acc = conv_b[ch];
+            for j in 0..w {
+                let src = ti as isize - (w as isize - 1) + j as isize;
+                let v = if src >= 0 {
+                    x[src as usize * di + ch]
+                } else if let Some(h) = hist.as_deref() {
+                    h[(src + w as isize - 1) as usize * di + ch]
+                } else {
+                    continue;
+                };
+                acc += v * conv_w[j * di + ch];
+            }
+            out[ti * di + ch] = silu(acc) * gx[ch];
+        }
+    }
+    if let Some(h) = hist.as_deref_mut() {
+        // slide the window: new history = last (w−1) rows of [hist ; x]
+        let hw = w - 1;
+        for s in 0..hw {
+            let src_row = tl + s; // index into the (hw + tl)-row concat
+            if src_row < hw {
+                h.copy_within(src_row * di..(src_row + 1) * di, s * di);
+            } else {
+                let xr = src_row - hw;
+                h[s * di..(s + 1) * di].copy_from_slice(&x[xr * di..(xr + 1) * di]);
+            }
         }
     }
 }
@@ -186,6 +259,79 @@ impl MambaModel {
         })
     }
 
+    /// Deterministic synthetic weights for a tier — powers the
+    /// artifact-free ("edge") serving scenario, the native-decode
+    /// parity tests, and the native benches. Initialization follows
+    /// standard Mamba practice: unit norms, fan-in-scaled projections,
+    /// Δ-bias in softplus⁻¹([~0.02, ~0.3]), A in (−2, −0.5).
+    pub fn synthetic(tier: MambaTier, seed: u64) -> MambaModel {
+        fn nrm(r: &mut Pcg32, count: usize, scale: f32) -> Vec<f32> {
+            (0..count).map(|_| r.normal() * scale).collect()
+        }
+        let mut r = Pcg32::new(seed);
+        let (d, di, n, rk, w, v, l) = (
+            tier.d_model,
+            tier.d_inner,
+            tier.d_state,
+            tier.dt_rank,
+            tier.d_conv,
+            tier.vocab,
+            tier.n_layer,
+        );
+        let embedding = nrm(&mut r, v * d, 1.0);
+        let norm_f = vec![1.0f32; d];
+        let mut layers = Vec::with_capacity(l);
+        for _ in 0..l {
+            let norm = vec![1.0f32; d];
+            let in_proj = nrm(&mut r, d * 2 * di, 1.0 / (d as f32).sqrt());
+            let conv_w = nrm(&mut r, w * di, 0.5);
+            let conv_b = nrm(&mut r, di, 0.1);
+            let x_proj = nrm(&mut r, di * (rk + 2 * n), 1.0 / (di as f32).sqrt());
+            let dt_proj = nrm(&mut r, rk * di, 1.0 / (rk as f32).sqrt());
+            let dt_bias: Vec<f32> = (0..di).map(|_| r.range_f32(-4.0, -1.0)).collect();
+            let a: Vec<f32> = (0..di * n).map(|_| -(0.5 + 1.5 * r.f32())).collect();
+            let dvec = nrm(&mut r, di, 1.0);
+            let out_proj = nrm(&mut r, di * d, 1.0 / (di as f32).sqrt());
+            layers.push(Layer {
+                norm,
+                in_proj,
+                conv_w,
+                conv_b,
+                x_proj,
+                dt_proj,
+                dt_bias,
+                a,
+                d: dvec,
+                out_proj,
+            });
+        }
+        let ones = vec![1.0f32; l * di];
+        MambaModel { embedding, norm_f, layers, g_x: ones.clone(), g_y: ones, tier }
+    }
+
+    /// Final rmsnorm over `rows` residual rows.
+    pub(crate) fn final_hidden(&self, resid: &[f32], rows: usize) -> Vec<f32> {
+        let d = self.tier.d_model;
+        let mut fin = vec![0.0f32; rows * d];
+        rmsnorm(resid, &self.norm_f, d, 1e-5, &mut fin);
+        fin
+    }
+
+    /// Tied-embedding logits: fin (rows × d) @ embeddingᵀ → (rows × V).
+    pub(crate) fn tied_logits(&self, fin: &[f32], rows: usize) -> Vec<f32> {
+        let d = self.tier.d_model;
+        let v = self.tier.vocab;
+        let mut logits = vec![0.0f32; rows * v];
+        for ti in 0..rows {
+            let frow = &fin[ti * d..(ti + 1) * d];
+            for tok in 0..v {
+                let erow = &self.embedding[tok * d..(tok + 1) * d];
+                logits[ti * v + tok] = erow.iter().zip(frow).map(|(a, b)| a * b).sum();
+            }
+        }
+        logits
+    }
+
     /// Forward over a token sequence (B=1). Returns logits (T × V).
     /// `sites` selects fake-quantized tensors; `taps` (if given)
     /// collects per-layer activation stats.
@@ -210,29 +356,14 @@ impl MambaModel {
             rmsnorm(&resid, &layer.norm, d, 1e-5, &mut x_in);
             matmul(&x_in, &layer.in_proj, tl, d, 2 * di, &mut xz);
             // split x / z
-            let mut x: Vec<f32> = (0..tl)
-                .flat_map(|i| xz[i * 2 * di..i * 2 * di + di].to_vec())
-                .collect();
-            let z: Vec<f32> = (0..tl)
-                .flat_map(|i| xz[i * 2 * di + di..(i + 1) * 2 * di].to_vec())
-                .collect();
+            let mut x = take_cols(&xz, tl, 2 * di, 0, di);
+            let z = take_cols(&xz, tl, 2 * di, di, 2 * di);
             let conv_in_absmax = quant::amax(&x);
             maybe_quant(sites.conv_in && sites.layer_on(li), &mut x, sites.bits, 100.0);
             // causal depthwise conv + SiLU + x-gain
             let gx = &self.g_x[li * di..(li + 1) * di];
             let mut xs = vec![0.0f32; tl * di];
-            for ti in 0..tl {
-                for ch in 0..di {
-                    let mut acc = layer.conv_b[ch];
-                    for j in 0..w {
-                        let src = ti as isize - (w as isize - 1) + j as isize;
-                        if src >= 0 {
-                            acc += x[src as usize * di + ch] * layer.conv_w[j * di + ch];
-                        }
-                    }
-                    xs[ti * di + ch] = silu(acc) * gx[ch];
-                }
-            }
+            causal_conv_silu(&x, None, &layer.conv_w, &layer.conv_b, gx, tl, di, w, &mut xs);
             let x_ssm_absmax = quant::amax(&xs);
             let x_ssm_p99 = quant::percentile_amax(&xs, 99.0);
             if sites.layer_on(li) {
@@ -244,16 +375,9 @@ impl MambaModel {
             }
             // selection projections
             matmul(&xs, &layer.x_proj, tl, di, r + 2 * n, &mut bcdt);
-            let mut dt_low = vec![0.0f32; tl * r];
-            let mut bmat = vec![0.0f32; tl * n];
-            let mut cmat = vec![0.0f32; tl * n];
-            for ti in 0..tl {
-                dt_low[ti * r..(ti + 1) * r].copy_from_slice(&bcdt[ti * (r + 2 * n)..ti * (r + 2 * n) + r]);
-                bmat[ti * n..(ti + 1) * n]
-                    .copy_from_slice(&bcdt[ti * (r + 2 * n) + r..ti * (r + 2 * n) + r + n]);
-                cmat[ti * n..(ti + 1) * n]
-                    .copy_from_slice(&bcdt[ti * (r + 2 * n) + r + n..(ti + 1) * (r + 2 * n)]);
-            }
+            let mut dt_low = take_cols(&bcdt, tl, r + 2 * n, 0, r);
+            let mut bmat = take_cols(&bcdt, tl, r + 2 * n, r, r + n);
+            let mut cmat = take_cols(&bcdt, tl, r + 2 * n, r + n, r + 2 * n);
             maybe_quant(sites.dt && sites.layer_on(li), &mut dt_low, sites.bits, 100.0);
             maybe_quant(sites.b && sites.layer_on(li), &mut bmat, sites.bits, 100.0);
             maybe_quant(sites.c && sites.layer_on(li), &mut cmat, sites.bits, 100.0);
@@ -317,19 +441,8 @@ impl MambaModel {
                 });
             }
         }
-        let mut fin = vec![0.0f32; tl * d];
-        rmsnorm(&resid, &self.norm_f, d, 1e-5, &mut fin);
-        // logits = fin @ embeddingᵀ
-        let v = self.tier.vocab;
-        let mut logits = vec![0.0f32; tl * v];
-        for ti in 0..tl {
-            for tok in 0..v {
-                let erow = &self.embedding[tok * d..(tok + 1) * d];
-                let frow = &fin[ti * d..(ti + 1) * d];
-                logits[ti * v + tok] = erow.iter().zip(frow).map(|(a, b)| a * b).sum();
-            }
-        }
-        logits
+        let fin = self.final_hidden(&resid, tl);
+        self.tied_logits(&fin, tl)
     }
 }
 
@@ -363,5 +476,83 @@ mod tests {
         rmsnorm(&x, &w, 2, 0.0, &mut out);
         let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
         assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn take_cols_splits() {
+        // 2×4 matrix, take columns [1,3)
+        let m = vec![0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        assert_eq!(take_cols(&m, 2, 4, 1, 3), vec![1.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn conv_history_composes_with_full_block() {
+        // conv over [a;b] in one call == conv(a) carrying history into conv(b)
+        let mut r = crate::util::rng::Pcg32::new(5);
+        let (di, w, tl, cut) = (3usize, 4usize, 9usize, 4usize);
+        let x: Vec<f32> = (0..tl * di).map(|_| r.normal()).collect();
+        let conv_w: Vec<f32> = (0..w * di).map(|_| r.normal()).collect();
+        let conv_b: Vec<f32> = (0..di).map(|_| r.normal()).collect();
+        let gx = vec![1.0f32; di];
+        let mut full = vec![0.0f32; tl * di];
+        causal_conv_silu(&x, None, &conv_w, &conv_b, &gx, tl, di, w, &mut full);
+        let mut hist = vec![0.0f32; (w - 1) * di];
+        let mut p1 = vec![0.0f32; cut * di];
+        causal_conv_silu(&x[..cut * di], Some(&mut hist), &conv_w, &conv_b, &gx, cut, di, w, &mut p1);
+        let mut p2 = vec![0.0f32; (tl - cut) * di];
+        causal_conv_silu(&x[cut * di..], Some(&mut hist), &conv_w, &conv_b, &gx, tl - cut, di, w, &mut p2);
+        for (i, (u, v)) in full.iter().zip(p1.iter().chain(p2.iter())).enumerate() {
+            assert!((u - v).abs() < 1e-6, "t={} {u} vs {v}", i / di);
+        }
+        // final history = last (w-1) raw inputs
+        for s in 0..w - 1 {
+            let src = tl - (w - 1) + s;
+            for ch in 0..di {
+                assert_eq!(hist[s * di + ch], x[src * di + ch]);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_short_chunks_compose() {
+        // chunks shorter than the window (tl < W-1) must still compose
+        let mut r = crate::util::rng::Pcg32::new(8);
+        let (di, w, tl) = (2usize, 4usize, 6usize);
+        let x: Vec<f32> = (0..tl * di).map(|_| r.normal()).collect();
+        let conv_w: Vec<f32> = (0..w * di).map(|_| r.normal()).collect();
+        let conv_b = vec![0.1f32; di];
+        let gx = vec![1.0f32; di];
+        let mut full = vec![0.0f32; tl * di];
+        causal_conv_silu(&x, None, &conv_w, &conv_b, &gx, tl, di, w, &mut full);
+        let mut hist = vec![0.0f32; (w - 1) * di];
+        let mut got = Vec::new();
+        for ti in 0..tl {
+            let mut one = vec![0.0f32; di];
+            causal_conv_silu(&x[ti * di..(ti + 1) * di], Some(&mut hist), &conv_w, &conv_b, &gx, 1, di, w, &mut one);
+            got.extend(one);
+        }
+        for (u, v) in full.iter().zip(&got) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic() {
+        let tier = MambaTier {
+            name: "syn".into(),
+            d_model: 8,
+            n_layer: 2,
+            d_state: 4,
+            d_conv: 4,
+            d_inner: 16,
+            dt_rank: 2,
+            vocab: 16,
+        };
+        let a = MambaModel::synthetic(tier.clone(), 11);
+        let b = MambaModel::synthetic(tier, 11);
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.layers[1].out_proj, b.layers[1].out_proj);
+        // A must be negative (stable decay)
+        assert!(a.layers[0].a.iter().all(|v| *v < 0.0));
     }
 }

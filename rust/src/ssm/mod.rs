@@ -1,17 +1,29 @@
-//! Pure-rust selective-SSM substrate: the CPU reference simulator.
+//! Pure-rust selective-SSM substrate: the CPU reference simulator and
+//! the native (artifact-free) inference backend.
 //!
-//! The request path executes AOT-compiled HLO ([`crate::runtime`]);
-//! this module exists because the paper's analyses need a model we can
-//! instrument arbitrarily: per-tensor quantization-error propagation
-//! (Fig. 2/10), activation distributions (Fig. 3/8/12), the LTI error
-//! bound (Thm 4.1 / Fig. 5 via [`hippo`]), and property tests of scan
-//! invariants that would be awkward through PJRT. It also cross-checks
-//! the runtime's outputs bit-for-bit-ish (fp tolerance) in integration
-//! tests, loading the same `.qtz` weights.
+//! The request path can execute AOT-compiled HLO ([`crate::runtime`])
+//! or serve natively from this module. It exists because the paper's
+//! analyses need a model we can instrument arbitrarily: per-tensor
+//! quantization-error propagation (Fig. 2/10), activation
+//! distributions (Fig. 3/8/12), the LTI error bound (Thm 4.1 / Fig. 5
+//! via [`hippo`]), and property tests of scan invariants that would be
+//! awkward through PJRT. It also cross-checks the runtime's outputs
+//! bit-for-bit-ish (fp tolerance) in integration tests, loading the
+//! same `.qtz` weights.
+//!
+//! * [`mamba`]  — the fp32 reference model + shared layer math
+//! * [`step`]   — stateful decode: [`step::MambaState`] prefill/step
+//! * [`qmamba`] — the calibrated W8A8 model (real int8 execution)
+//! * [`scan`]   — fp32 and int8 selective scans
+//! * [`hippo`]  — LTI/HiPPO error-bound machinery
 
 pub mod hippo;
 pub mod mamba;
+pub mod qmamba;
 pub mod scan;
+pub mod step;
 
 pub use mamba::{MambaModel, MambaTier};
+pub use qmamba::{QuantConfig, QuantizedMambaModel};
 pub use scan::{selective_scan, selective_scan_q, ScanParams};
+pub use step::{CalibRecord, LayerCalib, MambaState, StepModel};

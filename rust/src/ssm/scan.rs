@@ -29,9 +29,13 @@ pub fn selective_scan(
 ) -> Vec<f32> {
     let (di, n) = (p.d_inner, p.n_state);
     let t_len = x.len() / di;
-    assert_eq!(x.len(), t_len * di);
-    assert_eq!(b.len(), t_len * n);
-    assert_eq!(h.len(), di * n);
+    assert_eq!(x.len(), t_len * di, "x length must be a multiple of d_inner");
+    assert_eq!(dt.len(), t_len * di, "dt must match x (T × d_inner)");
+    assert_eq!(b.len(), t_len * n, "B must be T × n_state");
+    assert_eq!(c.len(), t_len * n, "C must be T × n_state");
+    assert_eq!(p.a.len(), di * n, "A must be d_inner × n_state");
+    assert_eq!(p.d.len(), di, "D must be d_inner");
+    assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
     let mut y = vec![0.0f32; t_len * di];
     for t in 0..t_len {
         let xt = &x[t * di..(t + 1) * di];
@@ -76,6 +80,15 @@ pub fn selective_scan_q(
 ) -> Vec<f32> {
     let (di, n) = (d_inner, n_state);
     let t_len = x_q.len() / di;
+    // the same shape guards as `selective_scan`: malformed inputs must
+    // panic, not silently truncate the scan
+    assert_eq!(x_q.len(), t_len * di, "x_q length must be a multiple of d_inner");
+    assert_eq!(dt.len(), t_len * di, "dt must match x_q (T × d_inner)");
+    assert_eq!(b_q.len(), t_len * n, "B_q must be T × n_state");
+    assert_eq!(c_q.len(), t_len * n, "C_q must be T × n_state");
+    assert_eq!(a_q.len(), di * n, "A_q must be d_inner × n_state");
+    assert_eq!(d_q.len(), di, "D_q must be d_inner");
+    assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
     let mut y = vec![0.0f32; t_len * di];
     for t in 0..t_len {
         for ch in 0..di {
@@ -186,6 +199,49 @@ mod tests {
         for (u, v) in y_fp.iter().zip(&y_q) {
             assert!((u - v).abs() < 1e-4, "{u} vs {v}");
         }
+    }
+
+    fn q_args(t: usize) -> (Vec<i8>, Vec<f32>, Vec<i8>, Vec<i8>, Vec<i8>, Vec<i8>) {
+        // well-formed int8 inputs for a (di=4, n=4, T=t) scan
+        let (di, n) = (4usize, 4usize);
+        let x_q = vec![1i8; t * di];
+        let dt = vec![0.1f32; t * di];
+        let a_q = vec![-50i8; di * n];
+        let b_q = vec![2i8; t * n];
+        let c_q = vec![3i8; t * n];
+        let d_q = vec![1i8; di];
+        (x_q, dt, a_q, b_q, c_q, d_q)
+    }
+
+    #[test]
+    #[should_panic(expected = "B_q must be T × n_state")]
+    fn quantized_scan_rejects_short_b() {
+        let (x_q, dt, a_q, b_q, c_q, d_q) = q_args(6);
+        let mut h = vec![0.0; 16];
+        let _ = selective_scan_q(
+            4, 4, &x_q, 0.1, &dt, &a_q, 0.02, &b_q[..5 * 4], 0.1, &c_q, 0.1, &d_q, 0.5, &mut h,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "C_q must be T × n_state")]
+    fn quantized_scan_rejects_short_c() {
+        let (x_q, dt, a_q, b_q, c_q, d_q) = q_args(6);
+        let mut h = vec![0.0; 16];
+        let _ = selective_scan_q(
+            4, 4, &x_q, 0.1, &dt, &a_q, 0.02, &b_q, 0.1, &c_q[..3], 0.1, &d_q, 0.5, &mut h,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of d_inner")]
+    fn quantized_scan_rejects_ragged_x() {
+        let (x_q, dt, a_q, b_q, c_q, d_q) = q_args(6);
+        let mut h = vec![0.0; 16];
+        let _ = selective_scan_q(
+            4, 4, &x_q[..x_q.len() - 1], 0.1, &dt, &a_q, 0.02, &b_q, 0.1, &c_q, 0.1, &d_q, 0.5,
+            &mut h,
+        );
     }
 
     #[test]

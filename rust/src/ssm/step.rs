@@ -1,0 +1,388 @@
+//! Stateful decode for the native (artifact-free) serving backend:
+//! a batched per-request recurrent state ([`MambaState`]), the
+//! [`StepModel`] trait the coordinator serves from, and the fp32
+//! implementation for [`MambaModel`].
+//!
+//! The state layout is exactly the coordinator pool's raw batched
+//! layout — conv (L, B, W−1, d_inner) and ssm (L, B, d_inner, N), both
+//! flattened row-major — so `SsmStatePool::gather_raw` output can be
+//! stepped directly and scattered back without reshaping. The layer
+//! math is the shared `pub(crate)` helper set in [`super::mamba`] plus
+//! [`super::scan::selective_scan`] with T = 1, so a prefill followed
+//! by steps reproduces the full-sequence `forward` exactly (see
+//! `rust/tests/native_decode.rs`).
+
+use super::mamba::{
+    causal_conv_silu, matmul, rmsnorm, silu, softplus, take_cols, MambaModel, MambaTier,
+};
+use super::scan::{selective_scan, ScanParams};
+use crate::quant;
+
+/// Recurrent decode state for `b` sequences advancing in lockstep.
+pub struct MambaState {
+    pub b: usize,
+    n_layer: usize,
+    conv_per_layer: usize, // (W-1) * d_inner
+    ssm_per_layer: usize,  // d_inner * N
+    /// (L, B, W−1, d_inner) flattened: the last W−1 conv inputs per
+    /// layer per lane, oldest row first
+    pub conv: Vec<f32>,
+    /// (L, B, d_inner, N) flattened recurrent state
+    pub ssm: Vec<f32>,
+}
+
+impl MambaState {
+    pub fn new(tier: &MambaTier, b: usize) -> MambaState {
+        assert!(b > 0, "state needs at least one lane");
+        let cpl = (tier.d_conv - 1) * tier.d_inner;
+        let spl = tier.d_inner * tier.d_state;
+        MambaState {
+            b,
+            n_layer: tier.n_layer,
+            conv_per_layer: cpl,
+            ssm_per_layer: spl,
+            conv: vec![0.0; tier.n_layer * b * cpl],
+            ssm: vec![0.0; tier.n_layer * b * spl],
+        }
+    }
+
+    /// Wrap raw batched buffers (the `SsmStatePool::gather_raw` layout).
+    pub fn from_raw(tier: &MambaTier, b: usize, conv: Vec<f32>, ssm: Vec<f32>) -> MambaState {
+        let cpl = (tier.d_conv - 1) * tier.d_inner;
+        let spl = tier.d_inner * tier.d_state;
+        assert_eq!(conv.len(), tier.n_layer * b * cpl, "conv buffer shape mismatch");
+        assert_eq!(ssm.len(), tier.n_layer * b * spl, "ssm buffer shape mismatch");
+        MambaState { b, n_layer: tier.n_layer, conv_per_layer: cpl, ssm_per_layer: spl, conv, ssm }
+    }
+
+    /// Back to the raw buffers for `SsmStatePool::scatter_raw`.
+    pub fn into_raw(self) -> (Vec<f32>, Vec<f32>) {
+        (self.conv, self.ssm)
+    }
+
+    pub fn reset(&mut self) {
+        self.conv.fill(0.0);
+        self.ssm.fill(0.0);
+    }
+
+    /// Per-request state bytes (constant in context length).
+    pub fn bytes_per_lane(&self) -> usize {
+        4 * self.n_layer * (self.conv_per_layer + self.ssm_per_layer)
+    }
+
+    pub(crate) fn conv_lane(&mut self, li: usize, bi: usize) -> &mut [f32] {
+        let cpl = self.conv_per_layer;
+        let off = (li * self.b + bi) * cpl;
+        &mut self.conv[off..off + cpl]
+    }
+
+    pub(crate) fn ssm_lane(&mut self, li: usize, bi: usize) -> &mut [f32] {
+        let spl = self.ssm_per_layer;
+        let off = (li * self.b + bi) * spl;
+        &mut self.ssm[off..off + spl]
+    }
+}
+
+/// A model the native engine can serve: full-sequence prompt ingestion
+/// plus a batched single-token step. Implemented by the fp32
+/// [`MambaModel`] and the W8A8 [`super::qmamba::QuantizedMambaModel`].
+pub trait StepModel {
+    fn tier(&self) -> &MambaTier;
+
+    /// Consume a prompt into a fresh B=1 `state`. Returns (T × V)
+    /// logits (row t conditions on tokens[..=t]).
+    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32>;
+
+    /// Advance all `state.b` lanes by one token each (`tokens[bi]` is
+    /// lane bi's input). Returns (B × V) next-token logits.
+    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32>;
+}
+
+/// Per-layer activation ranges recorded by a calibration prefill —
+/// everything the W8A8 quantizer needs (paper §4.2 / §5.1).
+#[derive(Debug, Clone, Default)]
+pub struct LayerCalib {
+    /// |rmsnorm output| max — the in_proj input scale
+    pub x_in_amax: f32,
+    /// |conv input| max
+    pub conv_in_amax: f32,
+    /// raw SSM-input samples (percentile clip applied by the quantizer)
+    pub x_ssm_vals: Vec<f32>,
+    pub dt_low_amax: f32,
+    pub b_amax: f32,
+    pub c_amax: f32,
+    /// |H·gated| max — the rotated-space out_proj input scale (§3.3)
+    pub gated_h_amax: f32,
+}
+
+/// Whole-model calibration record.
+#[derive(Debug, Clone, Default)]
+pub struct CalibRecord {
+    pub layers: Vec<LayerCalib>,
+    /// |final rmsnorm output| max — the tied-head input scale
+    pub head_in_amax: f32,
+}
+
+impl MambaModel {
+    /// fp32 calibration pass: one prefill over `tokens` recording the
+    /// activation ranges for [`super::qmamba::QuantizedMambaModel`].
+    pub fn calibrate(&self, tokens: &[u16]) -> CalibRecord {
+        let mut rec = CalibRecord {
+            layers: vec![LayerCalib::default(); self.tier.n_layer],
+            head_in_amax: 0.0,
+        };
+        let mut state = MambaState::new(&self.tier, 1);
+        let _ = self.prefill_impl(tokens, &mut state, Some(&mut rec));
+        rec
+    }
+
+    /// Full-sequence prefill with carried state; optionally records
+    /// calibration statistics. Shared by `StepModel::prefill` and
+    /// [`Self::calibrate`].
+    fn prefill_impl(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        mut calib: Option<&mut CalibRecord>,
+    ) -> Vec<f32> {
+        assert_eq!(state.b, 1, "prefill is single-sequence; step() handles batched decode");
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        state.reset();
+        let t = &self.tier;
+        let (d, di, n, r, w, tl) =
+            (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv, tokens.len());
+        let mut resid = vec![0.0f32; tl * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            resid[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let mut x_in = vec![0.0f32; tl * d];
+        let mut xz = vec![0.0f32; tl * 2 * di];
+        let mut bcdt = vec![0.0f32; tl * (r + 2 * n)];
+        let mut out = vec![0.0f32; tl * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&resid, &layer.norm, d, 1e-5, &mut x_in);
+            matmul(&x_in, &layer.in_proj, tl, d, 2 * di, &mut xz);
+            let x = take_cols(&xz, tl, 2 * di, 0, di);
+            let z = take_cols(&xz, tl, 2 * di, di, 2 * di);
+            let gx = &self.g_x[li * di..(li + 1) * di];
+            let mut xs = vec![0.0f32; tl * di];
+            causal_conv_silu(
+                &x,
+                Some(state.conv_lane(li, 0)),
+                &layer.conv_w,
+                &layer.conv_b,
+                gx,
+                tl,
+                di,
+                w,
+                &mut xs,
+            );
+            matmul(&xs, &layer.x_proj, tl, di, r + 2 * n, &mut bcdt);
+            let dt_low = take_cols(&bcdt, tl, r + 2 * n, 0, r);
+            let bmat = take_cols(&bcdt, tl, r + 2 * n, r, r + n);
+            let cmat = take_cols(&bcdt, tl, r + 2 * n, r + n, r + 2 * n);
+            let mut dt = vec![0.0f32; tl * di];
+            matmul(&dt_low, &layer.dt_proj, tl, r, di, &mut dt);
+            for ti in 0..tl {
+                for ch in 0..di {
+                    dt[ti * di + ch] = softplus(dt[ti * di + ch] + layer.dt_bias[ch]);
+                }
+            }
+            let p = ScanParams { a: &layer.a, d: &layer.d, d_inner: di, n_state: n };
+            let y = selective_scan(&p, &xs, &dt, &bmat, &cmat, state.ssm_lane(li, 0));
+            let gy = &self.g_y[li * di..(li + 1) * di];
+            let mut gated = vec![0.0f32; tl * di];
+            for ti in 0..tl {
+                for ch in 0..di {
+                    gated[ti * di + ch] = y[ti * di + ch] * silu(z[ti * di + ch]) * gy[ch];
+                }
+            }
+            if let Some(rec) = calib.as_deref_mut() {
+                let lc = &mut rec.layers[li];
+                lc.x_in_amax = lc.x_in_amax.max(quant::amax(&x_in));
+                lc.conv_in_amax = lc.conv_in_amax.max(quant::amax(&x));
+                lc.x_ssm_vals.extend_from_slice(&xs);
+                lc.dt_low_amax = lc.dt_low_amax.max(quant::amax(&dt_low));
+                lc.b_amax = lc.b_amax.max(quant::amax(&bmat));
+                lc.c_amax = lc.c_amax.max(quant::amax(&cmat));
+                let mut gh = gated.clone();
+                crate::quant::hadamard::fwht_rows(&mut gh, di);
+                lc.gated_h_amax = lc.gated_h_amax.max(quant::amax(&gh));
+            }
+            matmul(&gated, &layer.out_proj, tl, di, d, &mut out);
+            for i in 0..resid.len() {
+                resid[i] += out[i];
+            }
+        }
+        let fin = self.final_hidden(&resid, tl);
+        if let Some(rec) = calib.as_deref_mut() {
+            rec.head_in_amax = rec.head_in_amax.max(quant::amax(&fin));
+        }
+        self.tied_logits(&fin, tl)
+    }
+}
+
+impl StepModel for MambaModel {
+    fn tier(&self) -> &MambaTier {
+        &self.tier
+    }
+
+    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+        self.prefill_impl(tokens, state, None)
+    }
+
+    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+        let t = &self.tier;
+        let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
+        let b = state.b;
+        assert_eq!(tokens.len(), b, "one input token per state lane");
+        let mut resid = vec![0.0f32; b * d];
+        for (bi, &tok) in tokens.iter().enumerate() {
+            resid[bi * d..(bi + 1) * d]
+                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let mut x_in = vec![0.0f32; b * d];
+        let mut xz = vec![0.0f32; b * 2 * di];
+        let mut bcdt = vec![0.0f32; b * (r + 2 * n)];
+        let mut out = vec![0.0f32; b * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&resid, &layer.norm, d, 1e-5, &mut x_in);
+            matmul(&x_in, &layer.in_proj, b, d, 2 * di, &mut xz);
+            let x = take_cols(&xz, b, 2 * di, 0, di);
+            let z = take_cols(&xz, b, 2 * di, di, 2 * di);
+            let gx = &self.g_x[li * di..(li + 1) * di];
+            let mut xs = vec![0.0f32; b * di];
+            for bi in 0..b {
+                causal_conv_silu(
+                    &x[bi * di..(bi + 1) * di],
+                    Some(state.conv_lane(li, bi)),
+                    &layer.conv_w,
+                    &layer.conv_b,
+                    gx,
+                    1,
+                    di,
+                    w,
+                    &mut xs[bi * di..(bi + 1) * di],
+                );
+            }
+            matmul(&xs, &layer.x_proj, b, di, r + 2 * n, &mut bcdt);
+            let dt_low = take_cols(&bcdt, b, r + 2 * n, 0, r);
+            let bmat = take_cols(&bcdt, b, r + 2 * n, r, r + n);
+            let cmat = take_cols(&bcdt, b, r + 2 * n, r + n, r + 2 * n);
+            let mut dt = vec![0.0f32; b * di];
+            matmul(&dt_low, &layer.dt_proj, b, r, di, &mut dt);
+            for bi in 0..b {
+                for ch in 0..di {
+                    dt[bi * di + ch] = softplus(dt[bi * di + ch] + layer.dt_bias[ch]);
+                }
+            }
+            let p = ScanParams { a: &layer.a, d: &layer.d, d_inner: di, n_state: n };
+            let gy = &self.g_y[li * di..(li + 1) * di];
+            let mut gated = vec![0.0f32; b * di];
+            for bi in 0..b {
+                let y = selective_scan(
+                    &p,
+                    &xs[bi * di..(bi + 1) * di],
+                    &dt[bi * di..(bi + 1) * di],
+                    &bmat[bi * n..(bi + 1) * n],
+                    &cmat[bi * n..(bi + 1) * n],
+                    state.ssm_lane(li, bi),
+                );
+                for ch in 0..di {
+                    gated[bi * di + ch] = y[ch] * silu(z[bi * di + ch]) * gy[ch];
+                }
+            }
+            matmul(&gated, &layer.out_proj, b, di, d, &mut out);
+            for i in 0..resid.len() {
+                resid[i] += out[i];
+            }
+        }
+        let fin = self.final_hidden(&resid, b);
+        self.tied_logits(&fin, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_tier() -> MambaTier {
+        MambaTier {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layer: 2,
+            d_state: 4,
+            d_conv: 4,
+            d_inner: 16,
+            dt_rank: 2,
+            vocab: 16,
+        }
+    }
+
+    #[test]
+    fn state_layout_roundtrips_raw() {
+        let tier = tiny_tier();
+        let mut st = MambaState::new(&tier, 3);
+        st.conv.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        st.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = -(i as f32));
+        let (c, s) = (st.conv.clone(), st.ssm.clone());
+        let st2 = MambaState::from_raw(&tier, 3, c, s);
+        let (c2, s2) = st2.into_raw();
+        assert_eq!(c2, st.conv);
+        assert_eq!(s2, st.ssm);
+    }
+
+    #[test]
+    fn batched_step_matches_individual_lanes() {
+        // stepping B lanes at once == stepping each alone (lane math is
+        // independent; batching only amortizes the weight traversal)
+        let tier = tiny_tier();
+        let model = MambaModel::synthetic(tier.clone(), 21);
+        let prompts: [&[u16]; 3] = [&[1, 2, 3], &[4, 5], &[6, 7, 8, 9]];
+        let mut singles = Vec::new();
+        for p in prompts {
+            let mut st = MambaState::new(&tier, 1);
+            model.prefill(p, &mut st);
+            singles.push(st);
+        }
+        // pack into one B=3 state
+        let mut packed = MambaState::new(&tier, 3);
+        for (bi, st) in singles.iter_mut().enumerate() {
+            for li in 0..tier.n_layer {
+                packed.conv_lane(li, bi).copy_from_slice(st.conv_lane(li, 0));
+                packed.ssm_lane(li, bi).copy_from_slice(st.ssm_lane(li, 0));
+            }
+        }
+        let toks = [3u16, 5, 9];
+        let batched = model.step(&toks, &mut packed);
+        let v = tier.vocab;
+        for (bi, st) in singles.iter_mut().enumerate() {
+            let alone = model.step(&toks[bi..bi + 1], st);
+            for (a, b) in alone.iter().zip(&batched[bi * v..(bi + 1) * v]) {
+                assert!((a - b).abs() < 1e-6, "lane {bi}: {a} vs {b}");
+            }
+            for li in 0..tier.n_layer {
+                let (pl, sl) = (packed.conv_lane(li, bi).to_vec(), st.conv_lane(li, 0).to_vec());
+                assert_eq!(pl, sl, "conv state diverged lane {bi} layer {li}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_records_every_site() {
+        let tier = tiny_tier();
+        let model = MambaModel::synthetic(tier.clone(), 4);
+        let tokens: Vec<u16> = (0..32u16).map(|i| i % tier.vocab as u16).collect();
+        let rec = model.calibrate(&tokens);
+        assert_eq!(rec.layers.len(), tier.n_layer);
+        assert!(rec.head_in_amax > 0.0);
+        for lc in &rec.layers {
+            assert!(lc.x_in_amax > 0.0);
+            assert!(lc.conv_in_amax > 0.0);
+            assert_eq!(lc.x_ssm_vals.len(), tokens.len() * tier.d_inner);
+            assert!(lc.b_amax > 0.0 && lc.c_amax > 0.0 && lc.dt_low_amax > 0.0);
+            assert!(lc.gated_h_amax > 0.0);
+        }
+    }
+}

@@ -64,12 +64,27 @@ fn prop_batcher_plan_covers_and_fits() {
 }
 
 #[test]
-fn prop_batcher_single_round_when_fits() {
+fn prop_batcher_exact_bucket_single_round() {
     forall(
-        "n ≤ max bucket ⇒ exactly one round",
+        "n equal to a bucket size ⇒ exactly that one round",
         100,
-        |r| 1 + r.below(8) as usize,
-        |n| batcher::plan_rounds(*n, &[1, 2, 4, 8]).len() == 1,
+        |r| [1usize, 2, 4, 8][r.below(4) as usize],
+        |n| batcher::plan_rounds(*n, &[1, 2, 4, 8]) == vec![*n],
+    );
+}
+
+#[test]
+fn prop_batcher_zero_waste_with_unit_bucket() {
+    // with a 1-bucket available every count is exactly composable, so
+    // the minimum-padding planner must never pad at all
+    forall(
+        "bucket set containing 1 ⇒ zero padded lanes",
+        200,
+        |r| 1 + r.below(40) as usize,
+        |n| {
+            let plan = batcher::plan_rounds(*n, &[1, 2, 4, 8]);
+            plan.iter().sum::<usize>() == *n
+        },
     );
 }
 
