@@ -11,7 +11,10 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4]
+//!
+//! `--threads N` (native backend) runs decode rounds on N scoped
+//! workers — token streams are bit-identical to `--threads 1`.
 
 use anyhow::Result;
 use quamba::bench_support::Workload;
@@ -128,14 +131,18 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
     let stream: Vec<u16> = (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
 
-    let backends: Vec<(&str, Box<dyn StepModel + Send>)> =
+    let threads = args.get_usize("threads", 1);
+    let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
     for (name, m) in backends {
         println!(
             "\n=== native {}/{name}: {n} requests, ~{rate}/s, {max_new} new tokens each ===",
             tier.name
         );
-        let server = ServerHandle::spawn_native(m, NativeEngineConfig::default())?;
+        let server = ServerHandle::spawn_native(
+            m,
+            NativeEngineConfig { threads, ..Default::default() },
+        )?;
         let (done, wall, report) = drive(server, &wl, max_new);
         println!("completed {done}/{n} in {wall:.2}s");
         if let Some(r) = report {

@@ -1,16 +1,35 @@
 //! §Perf — the native W8A8 batched decode engine vs the only
 //! previously-available rust path (per-token full-sequence fp32
-//! `forward`). Runs with zero artifacts: the model is synthesized and
+//! `forward`), plus kernel-level micro-benches for the PR-2 hot-path
+//! rework. Runs with zero artifacts: the model is synthesized and
 //! calibrated on the spot.
 //!
-//! Acceptance target (ISSUE 1): batched W8A8 decode steps at B=8 must
-//! be ≥2x faster than advancing the same 8 sequences by re-running the
-//! full-sequence fp32 forward per token.
+//! Acceptance targets:
+//! * (ISSUE 1) batched W8A8 decode steps at B=8 must be ≥2x faster
+//!   than advancing the same 8 sequences by re-running the
+//!   full-sequence fp32 forward per token;
+//! * (ISSUE 2) reports the blocked-vs-naive int8 GEMM speedup and the
+//!   batched-vs-stepwise quantized prefill speedup, and persists the
+//!   whole table to `BENCH_native_decode.json` (override the path with
+//!   `QUAMBA_BENCH_JSON`) so future PRs can track regressions
+//!   machine-readably.
 
 use quamba::bench_support::{bench_ms, f2, iters, ms, Table};
+use quamba::quant::qlinear::{matmul_i8, matmul_i8_blocked, PackedWeightI8};
 use quamba::ssm::mamba::QuantSites;
-use quamba::ssm::{MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
+use quamba::ssm::{
+    MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel, StepModel, StepScratch,
+};
+use quamba::util::json;
 use quamba::util::rng::Pcg32;
+
+/// One machine-readable bench entry (op, shape, ms, speedup).
+struct Entry {
+    op: &'static str,
+    shape: String,
+    ms: f64,
+    speedup: f64,
+}
 
 fn main() {
     let tier = MambaTier {
@@ -35,20 +54,25 @@ fn main() {
         .collect();
 
     // batched states for the step paths (one B-lane state per model)
+    let cpl = (tier.d_conv - 1) * tier.d_inner;
+    let spl = tier.d_inner * tier.d_state;
     let pack = |m: &dyn StepModel| -> MambaState {
-        let mut packed = MambaState::new(&tier, b);
+        let quantized = m.quantized_conv_state();
+        let mut packed = MambaState::new_for(&tier, b, quantized);
         for (bi, p) in prompts.iter().enumerate() {
-            let mut st = MambaState::new(&tier, 1);
+            let mut st = MambaState::new_for(&tier, 1, quantized);
             m.prefill(p, &mut st);
-            let (c, s) = st.into_raw();
             // copy lane 0 of the single state into lane bi of the pack
-            let cpl = (tier.d_conv - 1) * tier.d_inner;
-            let spl = tier.d_inner * tier.d_state;
             for li in 0..tier.n_layer {
-                packed.conv[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
-                    .copy_from_slice(&c[li * cpl..(li + 1) * cpl]);
+                if quantized {
+                    packed.conv_q[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
+                        .copy_from_slice(&st.conv_q[li * cpl..(li + 1) * cpl]);
+                } else {
+                    packed.conv[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
+                        .copy_from_slice(&st.conv[li * cpl..(li + 1) * cpl]);
+                }
                 packed.ssm[(li * b + bi) * spl..(li * b + bi + 1) * spl]
-                    .copy_from_slice(&s[li * spl..(li + 1) * spl]);
+                    .copy_from_slice(&st.ssm[li * spl..(li + 1) * spl]);
             }
         }
         packed
@@ -68,16 +92,19 @@ fn main() {
 
     // after (fp32): one batched stateful step for all 8 lanes
     let mut st_fp = pack(&model);
+    let mut scratch = StepScratch::new(1);
+    let mut logits = Vec::new();
     let fp_step = bench_ms(2, iters(40), || {
-        let lg = model.step(&toks, &mut st_fp);
-        std::hint::black_box(lg.len());
+        model.step_into(&toks, &mut st_fp, &mut scratch, &mut logits);
+        std::hint::black_box(logits.len());
     });
 
-    // after (W8A8): the quantized batched step — the deployment path
+    // after (W8A8): the quantized zero-alloc batched step — the
+    // deployment path
     let mut st_q = pack(&qmodel);
     let q_step = bench_ms(2, iters(40), || {
-        let lg = qmodel.step(&toks, &mut st_q);
-        std::hint::black_box(lg.len());
+        qmodel.step_into(&toks, &mut st_q, &mut scratch, &mut logits);
+        std::hint::black_box(logits.len());
     });
 
     let mut t = Table::new(
@@ -86,21 +113,149 @@ fn main() {
     );
     t.row(vec!["fp32 full-seq forward ×8 (before)".into(), ms(before.mean), f2(1.0)]);
     t.row(vec![
-        "fp32 batched step (this PR)".into(),
+        "fp32 batched step".into(),
         ms(fp_step.mean),
         format!("{}x", f2(before.mean / fp_step.mean)),
     ]);
     t.row(vec![
-        "W8A8 batched step (this PR)".into(),
+        "W8A8 batched step (zero-alloc, fused i8 conv)".into(),
         ms(q_step.mean),
         format!("{}x", f2(before.mean / q_step.mean)),
     ]);
     t.print();
+
+    // ---- kernel micro-bench: blocked vs naive int8 GEMM ----
+    // decode-ish (M=B) and prefill-ish (M=T) shapes of this tier's
+    // biggest projection (d_inner × 2·d_inner per layer step)
+    let mut kernel_rows: Vec<(String, f64, f64)> = Vec::new();
+    for (m, k, n) in [(b, tier.d_model, 2 * tier.d_inner), (64usize, tier.d_inner, 2 * tier.d_inner)]
+    {
+        let x_q: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let w_q: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let packed = PackedWeightI8::pack(&w_q, k, n);
+        let mut acc = vec![0i32; m * n];
+        let naive = bench_ms(3, iters(400), || {
+            matmul_i8(&x_q, &w_q, m, k, n, &mut acc);
+            std::hint::black_box(acc[0]);
+        });
+        let blocked = bench_ms(3, iters(400), || {
+            matmul_i8_blocked(&x_q, &packed, m, &mut acc);
+            std::hint::black_box(acc[0]);
+        });
+        kernel_rows.push((format!("{m}x{k}x{n}"), naive.mean, blocked.mean));
+    }
+    let mut kt = Table::new(
+        "§Perf — int8 GEMM kernel: naive oracle vs blocked packed (ms/call)",
+        &["shape (MxKxN)", "naive", "blocked", "speedup"],
+    );
+    for (shape, nv, bl) in &kernel_rows {
+        kt.row(vec![shape.clone(), ms(*nv), ms(*bl), format!("{}x", f2(nv / bl))]);
+    }
+    kt.print();
+
+    // ---- quantized prefill: stepwise oracle vs full-sequence ----
+    let pt = 64usize;
+    let ptoks: Vec<u16> = (0..pt).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let mut st_pf = MambaState::new_quantized(&tier, 1);
+    let stepwise = bench_ms(1, iters(10), || {
+        let lg = qmodel.prefill_stepwise(&ptoks, &mut st_pf);
+        std::hint::black_box(lg.len());
+    });
+    let mut pf_logits = Vec::new();
+    let batched = bench_ms(1, iters(10), || {
+        qmodel.prefill_into(&ptoks, &mut st_pf, &mut scratch, &mut pf_logits);
+        std::hint::black_box(pf_logits.len());
+    });
+    let mut pf = Table::new(
+        &format!("§Perf — W8A8 prefill over T={pt} (ms; bit-identical outputs)"),
+        &["path", "ms", "speedup"],
+    );
+    pf.row(vec!["stepwise (before)".into(), ms(stepwise.mean), f2(1.0)]);
+    pf.row(vec![
+        "full-sequence (T×K batched GEMMs)".into(),
+        ms(batched.mean),
+        format!("{}x", f2(stepwise.mean / batched.mean)),
+    ]);
+    pf.print();
+
     let speedup = before.mean / q_step.mean;
     println!(
         "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
         if speedup >= 2.0 { "PASS" } else { "FAIL" },
         speedup
     );
+    println!(
+        "kernel: blocked int8 GEMM {:.2}x vs naive (decode shape); prefill: full-seq {:.2}x vs stepwise",
+        kernel_rows[0].1 / kernel_rows[0].2,
+        stepwise.mean / batched.mean
+    );
+
+    // ---- machine-readable trajectory ----
+    let mut entries = vec![
+        Entry {
+            op: "decode_fp32_fullseq_before",
+            shape: format!("B={b} ctx={ctx} tier={}", tier.name),
+            ms: before.mean,
+            speedup: 1.0,
+        },
+        Entry {
+            op: "decode_step_fp32",
+            shape: format!("B={b} tier={}", tier.name),
+            ms: fp_step.mean,
+            speedup: before.mean / fp_step.mean,
+        },
+        Entry {
+            op: "decode_step_w8a8",
+            shape: format!("B={b} tier={}", tier.name),
+            ms: q_step.mean,
+            speedup: before.mean / q_step.mean,
+        },
+        Entry {
+            op: "prefill_w8a8_stepwise",
+            shape: format!("T={pt} tier={}", tier.name),
+            ms: stepwise.mean,
+            speedup: 1.0,
+        },
+        Entry {
+            op: "prefill_w8a8_fullseq",
+            shape: format!("T={pt} tier={}", tier.name),
+            ms: batched.mean,
+            speedup: stepwise.mean / batched.mean,
+        },
+    ];
+    for (shape, nv, bl) in &kernel_rows {
+        entries.push(Entry {
+            op: "gemm_i8_blocked",
+            shape: shape.clone(),
+            ms: *bl,
+            speedup: nv / bl,
+        });
+    }
+    let path = std::env::var("QUAMBA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_native_decode.json".to_string());
+    let doc = json::obj(vec![
+        ("bench", json::s("native_decode")),
+        ("tier", json::s(&tier.name)),
+        (
+            "entries",
+            json::arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("op", json::s(e.op)),
+                            ("shape", json::s(&e.shape)),
+                            ("ms", json::num(e.ms)),
+                            ("speedup", json::num(e.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write(&path, json::write(&doc) + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("[warn] could not write {path}: {e}"),
+    }
     println!("Recorded in EXPERIMENTS.md §Perf (native backend).");
 }

@@ -22,6 +22,11 @@ use crate::data::BOS;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
+/// Default sampler seed shared by every engine flavor; override via
+/// the `sampler_seed` config fields (determinism across engines is
+/// seed-keyed — see `rust/src/coordinator/native.rs` tests).
+pub const DEFAULT_SAMPLER_SEED: u64 = 0xC0FFEE;
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub tier: String,
@@ -30,6 +35,8 @@ pub struct EngineConfig {
     pub capacity: usize,
     /// admission limit per tick
     pub max_prefills_per_tick: usize,
+    /// seed for the token sampler RNG
+    pub sampler_seed: u64,
 }
 
 impl EngineConfig {
@@ -39,6 +46,7 @@ impl EngineConfig {
             method: method.to_string(),
             capacity: 32,
             max_prefills_per_tick: 2,
+            sampler_seed: DEFAULT_SAMPLER_SEED,
         }
     }
 }
@@ -96,7 +104,7 @@ impl Engine {
             queue: VecDeque::new(),
             live: Vec::new(),
             done: Vec::new(),
-            sampler: Sampler::new(0xC0FFEE),
+            sampler: Sampler::new(cfg.sampler_seed),
             metrics: Metrics::new(),
             decode_buckets: buckets,
             prefill_graph,
@@ -329,6 +337,6 @@ fn unpack3_lit(out: &[xla::Literal]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
 impl SsmStatePool {
     /// Build a slab directly from (L,1,...) prefill state tensors.
     pub fn slab_from_tensors(&self, conv: &Tensor, ssm: &Tensor) -> SsmSlab {
-        SsmSlab { conv: conv.to_f32(), ssm: ssm.to_f32() }
+        SsmSlab { conv: conv.to_f32(), conv_q: Vec::new(), ssm: ssm.to_f32() }
     }
 }

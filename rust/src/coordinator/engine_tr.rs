@@ -70,7 +70,7 @@ impl TransformerEngine {
             queue: VecDeque::new(),
             live: Vec::new(),
             done: Vec::new(),
-            sampler: Sampler::new(0xC0FFEE),
+            sampler: Sampler::new(super::engine::DEFAULT_SAMPLER_SEED),
             metrics: Metrics::new(),
             prefill_graph,
             prefill_len,
@@ -78,6 +78,13 @@ impl TransformerEngine {
             vocab,
             byte_budget,
         })
+    }
+
+    /// Re-seed the token sampler (this engine has no config struct;
+    /// the SSM engines take the seed via `EngineConfig` /
+    /// `NativeEngineConfig`). Call before serving for reproducibility.
+    pub fn set_sampler_seed(&mut self, seed: u64) {
+        self.sampler = Sampler::new(seed);
     }
 
     pub fn submit(&mut self, req: Request) {

@@ -8,18 +8,31 @@
 //! can come up on a bare machine with nothing but weights (or a
 //! synthetic tier) and still expose the identical
 //! `submit`/`step`/`run_to_completion`/`Metrics` surface.
+//!
+//! Hot-path properties (PR 2):
+//! * decode rounds execute out of per-round reusable
+//!   [`StepScratch`]es — no per-step allocation in the model after
+//!   warmup (W8A8 path; asserted in `rust/tests/zero_alloc.rs`);
+//! * quantized models get an i8 conv-window pool
+//!   ([`SsmStatePool::with_quantized_conv`], quarter the conv state
+//!   bytes) gathered/scattered via the `*_raw_q` pair;
+//! * `threads > 1` parallelizes decode across groups (one scoped
+//!   worker per round) or, for a single group, across lanes inside the
+//!   step. Tokens are **bit-identical** to `threads = 1`: lane math is
+//!   independent and sampling stays in deterministic group order.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::coordinator::batcher;
+use crate::coordinator::engine::DEFAULT_SAMPLER_SEED;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{LiveRequest, Request, Response};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::state::SsmStatePool;
 use crate::data::BOS;
-use crate::ssm::{MambaState, StepModel};
+use crate::ssm::{MambaState, StepModel, StepScratch};
 
 #[derive(Debug, Clone)]
 pub struct NativeEngineConfig {
@@ -31,6 +44,16 @@ pub struct NativeEngineConfig {
     /// run any batch size, but bucketing keeps the scheduling identical
     /// to the AOT deployment shape so the two backends are comparable.
     pub decode_buckets: Vec<usize>,
+    /// decode worker threads. 1 (default) is the fully sequential
+    /// path; >1 runs decode rounds on at most `threads` scoped workers
+    /// (and lane-splits a lone round) — output tokens are bit-identical
+    /// either way. Note: lane-splitting spawns scoped threads per
+    /// conv/scan section (2 per layer per step), so it only pays off
+    /// when per-lane work is large (big d_inner/d_state); the
+    /// round-parallel path amortizes spawns over a whole round.
+    pub threads: usize,
+    /// token sampler seed (determinism across engines is seed-keyed)
+    pub sampler_seed: u64,
 }
 
 impl Default for NativeEngineConfig {
@@ -39,13 +62,40 @@ impl Default for NativeEngineConfig {
             capacity: 32,
             max_prefills_per_tick: 2,
             decode_buckets: vec![1, 2, 4, 8],
+            threads: 1,
+            sampler_seed: DEFAULT_SAMPLER_SEED,
         }
     }
 }
 
+/// Reusable per-round workspace: the model scratch plus its logits
+/// output buffer. One per concurrent decode group, reused every tick.
+struct RoundScratch {
+    scratch: StepScratch,
+    logits: Vec<f32>,
+}
+
+impl RoundScratch {
+    fn new() -> RoundScratch {
+        RoundScratch { scratch: StepScratch::new(1), logits: Vec::new() }
+    }
+}
+
+/// One decode round's gathered inputs/state (built per tick).
+struct RoundIo {
+    slots: Vec<usize>,
+    b: usize,
+    toks: Vec<u16>,
+    state: MambaState,
+    /// model execution time for this round (recorded into
+    /// `Metrics::decode_step_ms`, one sample per round — same
+    /// semantics as the XLA engine)
+    step_ms: f64,
+}
+
 pub struct NativeEngine {
     pub cfg: NativeEngineConfig,
-    model: Box<dyn StepModel + Send>,
+    model: Box<dyn StepModel + Send + Sync>,
     pool: SsmStatePool,
     queue: VecDeque<Request>,
     live: Vec<LiveRequest>,
@@ -53,22 +103,28 @@ pub struct NativeEngine {
     sampler: Sampler,
     pub metrics: Metrics,
     vocab: usize,
+    scratches: Vec<RoundScratch>,
 }
 
 impl NativeEngine {
-    pub fn new(model: Box<dyn StepModel + Send>, cfg: NativeEngineConfig) -> NativeEngine {
+    pub fn new(model: Box<dyn StepModel + Send + Sync>, cfg: NativeEngineConfig) -> NativeEngine {
         assert!(!cfg.decode_buckets.is_empty(), "need at least one decode bucket");
         let t = model.tier();
-        let pool = SsmStatePool::with_dims(t.n_layer, t.d_inner, t.d_conv, t.d_state, cfg.capacity);
+        let mut pool =
+            SsmStatePool::with_dims(t.n_layer, t.d_inner, t.d_conv, t.d_state, cfg.capacity);
+        if model.quantized_conv_state() {
+            pool = pool.with_quantized_conv();
+        }
         let vocab = t.vocab;
         NativeEngine {
             pool,
             queue: VecDeque::new(),
             live: Vec::new(),
             done: Vec::new(),
-            sampler: Sampler::new(0xC0FFEE),
+            sampler: Sampler::new(cfg.sampler_seed),
             metrics: Metrics::new(),
             vocab,
+            scratches: vec![RoundScratch::new()],
             model,
             cfg,
         }
@@ -158,11 +214,23 @@ impl NativeEngine {
             if req.prompt.is_empty() { vec![BOS] } else { req.prompt.clone() };
         let mut lr = LiveRequest::new(req, slot);
         let t0 = std::time::Instant::now();
-        let mut state = MambaState::new(self.model.tier(), 1);
-        let logits = self.model.prefill(&prompt, &mut state);
+        let quantized = self.model.quantized_conv_state();
+        let mut state = MambaState::new_for(self.model.tier(), 1, quantized);
+        // prefill gets a throwaway scratch: its buffers are sized by
+        // the prompt length T, and parking them in the engine's round
+        // workspaces would pin O(T·vocab) heap for the whole session
+        // (decode only ever needs B rows)
+        let mut scratch = StepScratch::new(1);
+        let mut logits = Vec::new();
+        self.model.prefill_into(&prompt, &mut state, &mut scratch, &mut logits);
         self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
-        let (conv, ssm) = state.into_raw();
-        self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
+        if quantized {
+            let (conv_q, ssm) = state.into_raw_q();
+            self.pool.scatter_raw_q(&[slot], 1, &conv_q, &ssm);
+        } else {
+            let (conv, ssm) = state.into_raw();
+            self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
+        }
         let t = prompt.len();
         let v = self.vocab;
         let row = &logits[(t - 1) * v..t * v];
@@ -177,38 +245,94 @@ impl NativeEngine {
         let n = self.live.len();
         let plan = batcher::plan_rounds(n, &self.cfg.decode_buckets);
         let groups = batcher::assign(n, &plan);
+        let quantized = self.model.quantized_conv_state();
+        // gather phase: pack every group's lanes/tokens/state
+        let mut rounds: Vec<RoundIo> = Vec::with_capacity(groups.len());
         for (gi, group) in groups.iter().enumerate() {
             let b = plan[gi];
             self.metrics.record_round(b, group.len());
-            self.decode_round(group, b);
-        }
-    }
-
-    fn decode_round(&mut self, group: &[usize], b: usize) {
-        let slots: Vec<usize> = group.iter().map(|&i| self.live[i].state_slot).collect();
-        let (conv, ssm) = self.pool.gather_raw(&slots, b);
-        let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
-        for (bi, &i) in group.iter().enumerate() {
-            toks[bi] = self.live[i].next_input_token();
-        }
-        let mut state = MambaState::from_raw(self.model.tier(), b, conv, ssm);
-        let t0 = std::time::Instant::now();
-        let logits = self.model.step(&toks, &mut state);
-        self.metrics.decode_step_ms.record(t0.elapsed().as_secs_f64() * 1e3);
-        let (conv_o, ssm_o) = state.into_raw();
-        // only live slots are scattered back; padded-lane outputs drop
-        self.pool.scatter_raw(&slots, b, &conv_o, &ssm_o);
-        let v = self.vocab;
-        for (bi, &i) in group.iter().enumerate() {
-            let row = &logits[bi * v..(bi + 1) * v];
-            let lr = &mut self.live[i];
-            let tok = self.sampler.sample(row, v, &lr.req.params);
-            lr.generated.push(tok);
-            let now = std::time::Instant::now();
-            if let Some(last) = lr.last_token {
-                lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+            let slots: Vec<usize> = group.iter().map(|&i| self.live[i].state_slot).collect();
+            let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
+            for (bi, &i) in group.iter().enumerate() {
+                toks[bi] = self.live[i].next_input_token();
             }
-            lr.last_token = Some(now);
+            let state = if quantized {
+                let (conv_q, ssm) = self.pool.gather_raw_q(&slots, b);
+                MambaState::from_raw_q(self.model.tier(), b, conv_q, ssm)
+            } else {
+                let (conv, ssm) = self.pool.gather_raw(&slots, b);
+                MambaState::from_raw(self.model.tier(), b, conv, ssm)
+            };
+            rounds.push(RoundIo { slots, b, toks, state, step_ms: 0.0 });
+        }
+        while self.scratches.len() < rounds.len() {
+            self.scratches.push(RoundScratch::new());
+        }
+        // execute phase
+        let model = &*self.model;
+        let scratches = &mut self.scratches;
+        let threads = self.cfg.threads.max(1);
+        if threads > 1 && rounds.len() > 1 {
+            // group-level parallelism, capped at `threads` scoped
+            // workers: each worker runs a contiguous chunk of rounds
+            // sequentially (within-step threading off — the workers
+            // already cover the cores). Commit stays in group order
+            // below, so tokens match the sequential schedule exactly.
+            let per = rounds.len().div_ceil(threads);
+            std::thread::scope(|sc| {
+                for (rs, wss) in rounds.chunks_mut(per).zip(scratches.chunks_mut(per)) {
+                    sc.spawn(move || {
+                        for (r, ws) in rs.iter_mut().zip(wss.iter_mut()) {
+                            ws.scratch.threads = 1;
+                            let t0 = std::time::Instant::now();
+                            model.step_into(
+                                &r.toks,
+                                &mut r.state,
+                                &mut ws.scratch,
+                                &mut ws.logits,
+                            );
+                            r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        }
+                    });
+                }
+            });
+        } else {
+            for (r, ws) in rounds.iter_mut().zip(scratches.iter_mut()) {
+                ws.scratch.threads = threads;
+                let t0 = std::time::Instant::now();
+                model.step_into(&r.toks, &mut r.state, &mut ws.scratch, &mut ws.logits);
+                r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+            }
+        }
+        // one latency sample per round, in deterministic group order
+        // (same metric semantics as the XLA engine's decode_round)
+        for r in &rounds {
+            self.metrics.decode_step_ms.record(r.step_ms);
+        }
+        // commit phase (deterministic order): scatter states, sample
+        let v = self.vocab;
+        for (gi, r) in rounds.into_iter().enumerate() {
+            let RoundIo { slots, b, state, .. } = r;
+            // only live slots are scattered back; padded-lane outputs drop
+            if quantized {
+                let (conv_q, ssm) = state.into_raw_q();
+                self.pool.scatter_raw_q(&slots, b, &conv_q, &ssm);
+            } else {
+                let (conv, ssm) = state.into_raw();
+                self.pool.scatter_raw(&slots, b, &conv, &ssm);
+            }
+            let logits = &self.scratches[gi].logits;
+            for (bi, &i) in groups[gi].iter().enumerate() {
+                let row = &logits[bi * v..(bi + 1) * v];
+                let lr = &mut self.live[i];
+                let tok = self.sampler.sample(row, v, &lr.req.params);
+                lr.generated.push(tok);
+                let now = std::time::Instant::now();
+                if let Some(last) = lr.last_token {
+                    lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+                }
+                lr.last_token = Some(now);
+            }
         }
     }
 }
@@ -217,7 +341,7 @@ impl NativeEngine {
 mod tests {
     use super::*;
     use crate::coordinator::request::SamplingParams;
-    use crate::ssm::{MambaModel, MambaTier};
+    use crate::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel};
 
     fn tier() -> MambaTier {
         MambaTier {
@@ -238,6 +362,16 @@ mod tests {
             prompt,
             max_new_tokens: max_new,
             params: SamplingParams::default(),
+            stop_at_eos: false,
+        }
+    }
+
+    fn sampled_req(id: u64, prompt: Vec<u16>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            params: SamplingParams { temperature: 0.8, top_k: 8, seed: 0 },
             stop_at_eos: false,
         }
     }
@@ -283,5 +417,91 @@ mod tests {
         assert!(eng.n_queued() >= 3);
         let done = eng.run_to_completion().unwrap();
         assert_eq!(done.len(), 5);
+    }
+
+    fn run_workload(cfg: NativeEngineConfig, quantized: bool) -> Vec<(u64, Vec<u16>)> {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 13);
+        let mut eng = if quantized {
+            let qm = QuantizedMambaModel::from_model(
+                &model,
+                &(0..64u16).map(|i| i % t.vocab as u16).collect::<Vec<_>>(),
+                &QuantConfig::default(),
+            );
+            NativeEngine::new(Box::new(qm), cfg)
+        } else {
+            NativeEngine::new(Box::new(model), cfg)
+        };
+        for i in 0..9u64 {
+            let plen = 2 + (i as usize % 4);
+            eng.submit(sampled_req(
+                i,
+                (0..plen).map(|j| ((i as usize + j) % 16) as u16).collect(),
+                6 + i as usize % 3,
+            ));
+        }
+        let mut done: Vec<(u64, Vec<u16>)> = eng
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        done.sort_by_key(|(id, _)| *id);
+        done
+    }
+
+    #[test]
+    fn same_sampler_seed_same_tokens_across_engines() {
+        // satellite acceptance: two engines sharing a sampler seed
+        // reproduce each other token-for-token under temperature
+        // sampling; the seed is configuration, not a constant
+        let cfg = NativeEngineConfig { sampler_seed: 0xDECAF, ..Default::default() };
+        let a = run_workload(cfg.clone(), false);
+        let b = run_workload(cfg, false);
+        assert_eq!(a, b, "same seed must reproduce the token streams");
+        // and the seed must actually be wired through: a different seed
+        // has to change at least one sampled token (temperature 0.8,
+        // top-k 8, ~60 draws — coincidence would mean the config is
+        // being ignored, the exact bug this field fixes)
+        let c = run_workload(
+            NativeEngineConfig { sampler_seed: 0xB16_5EED, ..Default::default() },
+            false,
+        );
+        assert_ne!(a, c, "different sampler seeds produced identical streams — seed ignored?");
+    }
+
+    #[test]
+    fn threaded_decode_bit_identical_to_sequential() {
+        // ISSUE 2 acceptance: threads > 1 produces bit-identical
+        // tokens to threads = 1, fp32 and W8A8, incl. sampler state
+        for quantized in [false, true] {
+            let seq = run_workload(NativeEngineConfig::default(), quantized);
+            let par = run_workload(
+                NativeEngineConfig { threads: 4, ..Default::default() },
+                quantized,
+            );
+            assert_eq!(
+                seq, par,
+                "threaded decode diverged from sequential (quantized={quantized})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_pool_shrinks_state_bytes() {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 13);
+        let qm = QuantizedMambaModel::from_model(&model, &[1, 2, 3, 4], &QuantConfig::default());
+        let f_eng = NativeEngine::new(
+            Box::new(MambaModel::synthetic(t.clone(), 13)),
+            NativeEngineConfig::default(),
+        );
+        let q_eng = NativeEngine::new(Box::new(qm), NativeEngineConfig::default());
+        let cpl = t.n_layer * (t.d_conv - 1) * t.d_inner;
+        assert_eq!(
+            f_eng.state_bytes_per_request() - q_eng.state_bytes_per_request(),
+            3 * cpl,
+            "i8 conv window must save 3 bytes per entry"
+        );
     }
 }

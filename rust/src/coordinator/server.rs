@@ -168,9 +168,10 @@ impl ServerHandle {
     }
 
     /// Spawn the artifact-free native engine thread around a
-    /// [`StepModel`] (fp32 reference or W8A8 quantized).
+    /// [`StepModel`] (fp32 reference or W8A8 quantized). `Sync` lets
+    /// the engine share the model across its decode worker threads.
     pub fn spawn_native(
-        model: Box<dyn StepModel + Send>,
+        model: Box<dyn StepModel + Send + Sync>,
         cfg: NativeEngineConfig,
     ) -> Result<ServerHandle> {
         Self::spawn_core(move || Ok(Box::new(NativeEngine::new(model, cfg)) as Box<dyn EngineCore>))

@@ -3,18 +3,24 @@
 //! * [`SsmStatePool`]: each request owns a *constant-size* slab
 //!   (conv window + recurrent state), independent of how many tokens it
 //!   has consumed. Gather/scatter pack request slabs into the batched
-//!   (L, B, ...) tensors the decode graphs expect.
+//!   (L, B, ...) tensors the decode graphs expect. Pools serving a
+//!   quantized-conv model ([`Self::with_quantized_conv`]) store the
+//!   conv window as i8 codes — 1 byte/entry instead of 4.
 //! * [`KvCachePool`]: the Transformer comparator — each request's slab
 //!   grows with its context; a capacity watermark drives backpressure.
 
 use crate::config::{TierInfo, TransformerTierInfo};
 use crate::tensor::Tensor;
 
-/// Constant-size per-request SSM state slab.
+/// Constant-size per-request SSM state slab. Exactly one of `conv`
+/// (f32 values) / `conv_q` (i8 codes, quantized-conv pools) is
+/// populated; the other stays empty.
 #[derive(Clone)]
 pub struct SsmSlab {
-    /// (L, W-1, d_inner) flattened
+    /// (L, W-1, d_inner) flattened, f32 pools
     pub conv: Vec<f32>,
+    /// (L, W-1, d_inner) flattened i8 codes, quantized-conv pools
+    pub conv_q: Vec<i8>,
     /// (L, d_inner, N) flattened
     pub ssm: Vec<f32>,
 }
@@ -24,6 +30,8 @@ pub struct SsmStatePool {
     pub d_inner: usize,
     pub conv_per_layer: usize, // (W-1) * d_inner
     pub ssm_per_layer: usize,  // d_inner * N
+    /// conv windows held as i8 codes (W8A8 native serving)
+    pub quantized_conv: bool,
     slots: Vec<Option<SsmSlab>>,
     free: Vec<usize>,
 }
@@ -48,9 +56,19 @@ impl SsmStatePool {
             d_inner,
             conv_per_layer: (d_conv - 1) * d_inner,
             ssm_per_layer: d_inner * d_state,
+            quantized_conv: false,
             slots: (0..capacity).map(|_| None).collect(),
             free: (0..capacity).rev().collect(),
         }
+    }
+
+    /// Switch the pool to i8 conv-window slabs (quarter the conv
+    /// bytes); use with [`crate::ssm::StepModel::quantized_conv_state`]
+    /// models and the `*_raw_q` gather/scatter pair.
+    pub fn with_quantized_conv(mut self) -> Self {
+        assert_eq!(self.in_use(), 0, "cannot change slab dtype with live slots");
+        self.quantized_conv = true;
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -62,15 +80,23 @@ impl SsmStatePool {
     }
 
     /// Bytes a single request's state occupies — CONSTANT in context
-    /// length (the SSM selling point).
+    /// length (the SSM selling point). Quantized-conv pools spend one
+    /// byte per conv entry instead of four.
     pub fn bytes_per_request(&self) -> usize {
-        4 * self.n_layer * (self.conv_per_layer + self.ssm_per_layer)
+        let conv_bytes = if self.quantized_conv { 1 } else { 4 };
+        self.n_layer * (conv_bytes * self.conv_per_layer + 4 * self.ssm_per_layer)
     }
 
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free.pop()?;
+        let (conv, conv_q) = if self.quantized_conv {
+            (Vec::new(), vec![0i8; self.n_layer * self.conv_per_layer])
+        } else {
+            (vec![0.0; self.n_layer * self.conv_per_layer], Vec::new())
+        };
         self.slots[slot] = Some(SsmSlab {
-            conv: vec![0.0; self.n_layer * self.conv_per_layer],
+            conv,
+            conv_q,
             ssm: vec![0.0; self.n_layer * self.ssm_per_layer],
         });
         Some(slot)
@@ -83,7 +109,13 @@ impl SsmStatePool {
     }
 
     pub fn write(&mut self, slot: usize, slab: SsmSlab) {
-        assert_eq!(slab.conv.len(), self.n_layer * self.conv_per_layer);
+        if self.quantized_conv {
+            assert_eq!(slab.conv_q.len(), self.n_layer * self.conv_per_layer);
+            assert!(slab.conv.is_empty(), "quantized-conv pool got an f32 conv slab");
+        } else {
+            assert_eq!(slab.conv.len(), self.n_layer * self.conv_per_layer);
+            assert!(slab.conv_q.is_empty(), "f32 pool got a quantized conv slab");
+        }
         assert_eq!(slab.ssm.len(), self.n_layer * self.ssm_per_layer);
         self.slots[slot] = Some(slab);
     }
@@ -97,6 +129,7 @@ impl SsmStatePool {
     /// with zeros — those lanes' outputs are discarded by scatter).
     /// Raw form feeds `runtime::lit_from_f32` on the hot path.
     pub fn gather_raw(&self, slots: &[usize], b: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(!self.quantized_conv, "quantized-conv pool: use gather_raw_q");
         let (l, cpl, spl) = (self.n_layer, self.conv_per_layer, self.ssm_per_layer);
         let mut conv = vec![0.0f32; l * b * cpl];
         let mut ssm = vec![0.0f32; l * b * spl];
@@ -124,6 +157,7 @@ impl SsmStatePool {
 
     /// Scatter raw batched output states back into request slots.
     pub fn scatter_raw(&mut self, slots: &[usize], b: usize, cf: &[f32], sf: &[f32]) {
+        assert!(!self.quantized_conv, "quantized-conv pool: use scatter_raw_q");
         let l = self.n_layer;
         let cpl = self.conv_per_layer;
         let spl = self.ssm_per_layer;
@@ -132,11 +166,57 @@ impl SsmStatePool {
         for (bi, &slot) in slots.iter().enumerate() {
             let mut slab = SsmSlab {
                 conv: vec![0.0; l * cpl],
+                conv_q: Vec::new(),
                 ssm: vec![0.0; l * spl],
             };
             for li in 0..l {
                 slab.conv[li * cpl..(li + 1) * cpl]
                     .copy_from_slice(&cf[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]);
+                slab.ssm[li * spl..(li + 1) * spl]
+                    .copy_from_slice(&sf[(li * b + bi) * spl..(li * b + bi + 1) * spl]);
+            }
+            self.write(slot, slab);
+        }
+    }
+
+    /// Pack `slots` into raw batched (L, B, ...) buffers with the conv
+    /// window as i8 codes — the quantized-conv twin of
+    /// [`Self::gather_raw`], feeding `MambaState::from_raw_q`.
+    pub fn gather_raw_q(&self, slots: &[usize], b: usize) -> (Vec<i8>, Vec<f32>) {
+        assert!(self.quantized_conv, "f32 pool: use gather_raw");
+        let (l, cpl, spl) = (self.n_layer, self.conv_per_layer, self.ssm_per_layer);
+        let mut conv_q = vec![0i8; l * b * cpl];
+        let mut ssm = vec![0.0f32; l * b * spl];
+        for (bi, &slot) in slots.iter().enumerate() {
+            let slab = self.get(slot);
+            for li in 0..l {
+                conv_q[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]
+                    .copy_from_slice(&slab.conv_q[li * cpl..(li + 1) * cpl]);
+                ssm[(li * b + bi) * spl..(li * b + bi + 1) * spl]
+                    .copy_from_slice(&slab.ssm[li * spl..(li + 1) * spl]);
+            }
+        }
+        (conv_q, ssm)
+    }
+
+    /// Scatter i8-conv batched output states back into request slots —
+    /// the quantized-conv twin of [`Self::scatter_raw`].
+    pub fn scatter_raw_q(&mut self, slots: &[usize], b: usize, cq: &[i8], sf: &[f32]) {
+        assert!(self.quantized_conv, "f32 pool: use scatter_raw");
+        let l = self.n_layer;
+        let cpl = self.conv_per_layer;
+        let spl = self.ssm_per_layer;
+        debug_assert_eq!(cq.len(), l * b * cpl);
+        debug_assert_eq!(sf.len(), l * b * spl);
+        for (bi, &slot) in slots.iter().enumerate() {
+            let mut slab = SsmSlab {
+                conv: Vec::new(),
+                conv_q: vec![0i8; l * cpl],
+                ssm: vec![0.0; l * spl],
+            };
+            for li in 0..l {
+                slab.conv_q[li * cpl..(li + 1) * cpl]
+                    .copy_from_slice(&cq[(li * b + bi) * cpl..(li * b + bi + 1) * cpl]);
                 slab.ssm[li * spl..(li + 1) * spl]
                     .copy_from_slice(&sf[(li * b + bi) * spl..(li * b + bi + 1) * spl]);
             }
@@ -270,6 +350,30 @@ mod tests {
         assert_eq!(p2.get(d0).conv, slab.conv);
         assert_eq!(p2.get(d0).ssm, slab.ssm);
         assert!(p2.get(d1).conv.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn quantized_pool_roundtrip_and_bytes() {
+        let t = tier();
+        let mut p = SsmStatePool::new(&t, 4).with_quantized_conv();
+        let f32_pool = SsmStatePool::new(&t, 4);
+        // conv entries drop from 4 bytes to 1
+        let cpl_bytes = t.n_layer * (t.d_conv - 1) * t.d_inner;
+        assert_eq!(f32_pool.bytes_per_request() - p.bytes_per_request(), 3 * cpl_bytes);
+        let s0 = p.alloc().unwrap();
+        let s1 = p.alloc().unwrap();
+        let mut slab = p.get(s0).clone();
+        slab.conv_q.iter_mut().enumerate().for_each(|(i, v)| *v = (i % 100) as i8 - 50);
+        slab.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        p.write(s0, slab.clone());
+        let (cq, sf) = p.gather_raw_q(&[s0, s1], 3);
+        let mut p2 = SsmStatePool::new(&t, 4).with_quantized_conv();
+        let d0 = p2.alloc().unwrap();
+        let d1 = p2.alloc().unwrap();
+        p2.scatter_raw_q(&[d0, d1], 3, &cq, &sf);
+        assert_eq!(p2.get(d0).conv_q, slab.conv_q);
+        assert_eq!(p2.get(d0).ssm, slab.ssm);
+        assert!(p2.get(d1).conv_q.iter().all(|v| *v == 0));
     }
 
     #[test]

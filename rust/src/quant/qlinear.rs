@@ -4,10 +4,30 @@
 //! the deployment path). Unlike the fake-quant instrumentation in
 //! [`crate::quant`], this path really executes in the integer domain,
 //! so the native serving backend carries int8 weights end-to-end.
+//!
+//! Two kernels share the same integer semantics:
+//!
+//! * [`matmul_i8`] — the naive triple loop, kept as the *test oracle*;
+//! * [`matmul_i8_blocked`] — the hot-path kernel over a
+//!   [`PackedWeightI8`] column-blocked, K-major layout (packed once at
+//!   [`QLinear`] construction). All accumulation is exact i32, so the
+//!   two are **bit-identical** for every shape (property-tested in
+//!   `rust/tests/kernel_parity.rs`).
+//!
+//! The `*_into` methods take caller-owned scratch so the decode hot
+//! path performs no heap allocation per call (see
+//! [`crate::ssm::step::StepScratch`]).
 
 use crate::quant;
 
+/// Column-block width of the packed weight layout. 16 i32 accumulators
+/// fit comfortably in registers on x86-64/aarch64 and the i8 block rows
+/// are one cache line.
+pub const GEMM_NB: usize = 16;
+
 /// out (M×N) i32 = x_q (M×K) i8 · w_q (K×N) i8, i32 accumulation.
+/// Naive triple loop — retained as the bit-exactness oracle for
+/// [`matmul_i8_blocked`].
 pub fn matmul_i8(x_q: &[i8], w_q: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
     assert_eq!(x_q.len(), m * k);
     assert_eq!(w_q.len(), k * n);
@@ -28,12 +48,108 @@ pub fn matmul_i8(x_q: &[i8], w_q: &[i8], m: usize, k: usize, n: usize, out: &mut
     }
 }
 
+/// Int8 weight repacked for the blocked kernel: the (K×N) matrix is
+/// split into ⌈N/NB⌉ column blocks of width [`GEMM_NB`]; each block is
+/// stored K-major (`block[p·NB + jj] = w[p·N + jb·NB + jj]`), zero-
+/// padded in the tail block. A row of activations then streams each
+/// block with unit stride while NB running sums stay in registers.
+pub struct PackedWeightI8 {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<i8>,
+}
+
+impl PackedWeightI8 {
+    pub fn pack(w_q: &[i8], k: usize, n: usize) -> PackedWeightI8 {
+        assert_eq!(w_q.len(), k * n);
+        let nb = GEMM_NB;
+        let nblk = n.div_ceil(nb);
+        let mut data = vec![0i8; nblk * k * nb];
+        for jb in 0..nblk {
+            let jlo = jb * nb;
+            let jw = nb.min(n - jlo);
+            let base = jb * k * nb;
+            for p in 0..k {
+                data[base + p * nb..base + p * nb + jw]
+                    .copy_from_slice(&w_q[p * n + jlo..p * n + jlo + jw]);
+            }
+        }
+        PackedWeightI8 { k, n, data }
+    }
+
+    /// Packed bytes (≥ k·n due to tail-block padding).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Blocked int8 GEMM: out (M×N) i32 = x_q (M×K) i8 · packed (K×N) i8.
+///
+/// Loop order (block, row, K-tile): each K-major column block is
+/// streamed once per activation row with [`GEMM_NB`] i32 accumulators
+/// held in registers and the K loop unrolled ×4, so the inner loops
+/// vectorize and `out` is written exactly once per element (the naive
+/// kernel re-reads and re-writes each output row K times). Integer
+/// accumulation is exact, therefore bit-identical to [`matmul_i8`].
+pub fn matmul_i8_blocked(x_q: &[i8], w: &PackedWeightI8, m: usize, out: &mut [i32]) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let nb = GEMM_NB;
+    let nblk = n.div_ceil(nb);
+    for jb in 0..nblk {
+        let blk = &w.data[jb * k * nb..(jb + 1) * k * nb];
+        let jlo = jb * nb;
+        let jw = nb.min(n - jlo);
+        for i in 0..m {
+            let xrow = &x_q[i * k..(i + 1) * k];
+            let mut acc = [0i32; GEMM_NB];
+            let kt = k & !3; // K rounded down to a multiple of 4
+            let mut p = 0;
+            while p < kt {
+                let x0 = xrow[p] as i32;
+                let x1 = xrow[p + 1] as i32;
+                let x2 = xrow[p + 2] as i32;
+                let x3 = xrow[p + 3] as i32;
+                let w0 = &blk[p * nb..p * nb + nb];
+                let w1 = &blk[(p + 1) * nb..(p + 1) * nb + nb];
+                let w2 = &blk[(p + 2) * nb..(p + 2) * nb + nb];
+                let w3 = &blk[(p + 3) * nb..(p + 3) * nb + nb];
+                for jj in 0..nb {
+                    // i32 products of i8 values cannot overflow and
+                    // integer addition is associative, so any grouping
+                    // matches the oracle bit-for-bit
+                    acc[jj] += x0 * w0[jj] as i32
+                        + x1 * w1[jj] as i32
+                        + x2 * w2[jj] as i32
+                        + x3 * w3[jj] as i32;
+                }
+                p += 4;
+            }
+            while p < k {
+                let xv = xrow[p] as i32;
+                let wrow = &blk[p * nb..p * nb + nb];
+                for jj in 0..nb {
+                    acc[jj] += xv * wrow[jj] as i32;
+                }
+                p += 1;
+            }
+            out[i * n + jlo..i * n + jlo + jw].copy_from_slice(&acc[..jw]);
+        }
+    }
+}
+
 /// A linear layer with per-tensor symmetric int8 weights and a static
 /// input scale supplied per call (baked at calibration time, Eq. 2).
+/// The weight lives ONLY in the [`PackedWeightI8`] layout the hot
+/// path executes from (the row-major codes are transient at
+/// construction), so resident weight memory is exactly the int8
+/// matrix plus tail-block padding.
 pub struct QLinear {
     pub k: usize,
     pub n: usize,
-    pub w_q: Vec<i8>,
+    /// blocked K-major layout, packed once at construction
+    packed: PackedWeightI8,
     /// weight scale; offline folds (e.g. the Hadamard 1/d_inner) are
     /// absorbed here, exactly like `wscales[...] / d_inner` in
     /// `python/compile/quant/calibrate.py`
@@ -49,7 +165,9 @@ impl QLinear {
             assert_eq!(b.len(), n);
         }
         let s_w = quant::scale_sym(quant::amax(w), 8);
-        QLinear { k, n, w_q: quant::quantize_sym(w, s_w, 8), s_w, bias }
+        let w_q = quant::quantize_sym(w, s_w, 8);
+        let packed = PackedWeightI8::pack(&w_q, k, n);
+        QLinear { k, n, packed, s_w, bias }
     }
 
     /// Fold an extra factor into the weight scale (compute-invariant
@@ -59,17 +177,24 @@ impl QLinear {
         self
     }
 
+    /// Logical int8 weight bytes (k·n — what shipping the matrix
+    /// costs; excludes the packed layout's tail padding).
     pub fn weight_bytes(&self) -> usize {
-        self.w_q.len()
+        self.k * self.n
     }
 
-    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`.
-    pub fn forward_q(&self, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
+    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`, with
+    /// the i32 accumulator supplied by the caller (no allocation once
+    /// `acc` has warmed up to capacity).
+    pub fn forward_q_into(&self, x_q: &[i8], s_x: f32, m: usize, acc: &mut Vec<i32>, out: &mut [f32]) {
+        assert_eq!(x_q.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
-        let mut acc = vec![0i32; m * self.n];
-        matmul_i8(x_q, &self.w_q, m, self.k, self.n, &mut acc);
+        // grow-only resize: the blocked kernel overwrites every element
+        // (poison-tested), so zero-filling would be a wasted memset
+        acc.resize(m * self.n, 0);
+        matmul_i8_blocked(x_q, &self.packed, m, acc);
         let s = s_x * self.s_w;
-        for (o, &a) in out.iter_mut().zip(&acc) {
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
             *o = a as f32 * s;
         }
         if let Some(b) = &self.bias {
@@ -81,13 +206,36 @@ impl QLinear {
         }
     }
 
-    /// Quantize fp32 input rows at `s_x`, then run the int8 matmul.
-    /// Returns the i8 codes so callers can reuse them (e.g. the scan
-    /// consumes the same quantized x as `x_proj`, paper §4.3).
-    pub fn forward(&self, x: &[f32], s_x: f32, m: usize, out: &mut [f32]) -> Vec<i8> {
+    /// Quantize fp32 input rows at `s_x` into caller-owned `x_q`, then
+    /// run the blocked int8 matmul. Allocation-free after warmup; the
+    /// i8 codes stay in `x_q` for reuse (e.g. the scan consumes the
+    /// same quantized x as `x_proj`, paper §4.3).
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        s_x: f32,
+        m: usize,
+        x_q: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
         assert_eq!(x.len(), m * self.k);
-        let x_q = quant::quantize_sym(x, s_x, 8);
-        self.forward_q(&x_q, s_x, m, out);
+        quant::quantize_sym_into(x, s_x, 8, x_q);
+        self.forward_q_into(x_q, s_x, m, acc, out);
+    }
+
+    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`.
+    pub fn forward_q(&self, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
+        let mut acc = Vec::new();
+        self.forward_q_into(x_q, s_x, m, &mut acc, out);
+    }
+
+    /// Quantize fp32 input rows at `s_x`, then run the int8 matmul.
+    /// Returns the i8 codes so callers can reuse them.
+    pub fn forward(&self, x: &[f32], s_x: f32, m: usize, out: &mut [f32]) -> Vec<i8> {
+        let mut x_q = Vec::new();
+        let mut acc = Vec::new();
+        self.forward_into(x, s_x, m, &mut x_q, &mut acc, out);
         x_q
     }
 }
@@ -121,6 +269,24 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_naive_oracle() {
+        // bit-exact across shapes where K and N are NOT multiples of
+        // the block/unroll widths (the broader sweep lives in
+        // rust/tests/kernel_parity.rs)
+        let mut r = Pcg32::new(77);
+        for (m, k, n) in [(1usize, 7usize, 5usize), (3, 17, 33), (8, 64, 48), (2, 5, 16), (4, 1, 1)] {
+            let x_q: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let w_q: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let mut want = vec![0i32; m * n];
+            matmul_i8(&x_q, &w_q, m, k, n, &mut want);
+            let packed = PackedWeightI8::pack(&w_q, k, n);
+            let mut got = vec![0i32; m * n];
+            matmul_i8_blocked(&x_q, &packed, m, &mut got);
+            assert_eq!(want, got, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn qlinear_close_to_f32_linear() {
         let mut r = Pcg32::new(9);
         let (m, k, n) = (3usize, 32usize, 16usize);
@@ -147,6 +313,28 @@ mod tests {
         for (a, b) in want.iter().zip(&got) {
             assert!((a - b).abs() < tol, "{a} vs {b} (tol {tol})");
         }
+    }
+
+    #[test]
+    fn forward_into_reuses_scratch_capacity() {
+        let mut r = Pcg32::new(12);
+        let (m, k, n) = (2usize, 24usize, 20usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
+        let ql = QLinear::from_f32(&w, k, n, None);
+        let x: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let mut x_q = Vec::new();
+        let mut acc = Vec::new();
+        let mut out = vec![0.0f32; m * n];
+        ql.forward_into(&x, 0.05, m, &mut x_q, &mut acc, &mut out);
+        let (cq, ca) = (x_q.capacity(), acc.capacity());
+        let (pq, pa) = (x_q.as_ptr(), acc.as_ptr());
+        for _ in 0..5 {
+            ql.forward_into(&x, 0.05, m, &mut x_q, &mut acc, &mut out);
+        }
+        assert_eq!(x_q.capacity(), cq);
+        assert_eq!(acc.capacity(), ca);
+        assert_eq!(x_q.as_ptr(), pq, "x_q scratch reallocated");
+        assert_eq!(acc.as_ptr(), pa, "acc scratch reallocated");
     }
 
     #[test]

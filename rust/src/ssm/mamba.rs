@@ -149,6 +149,23 @@ pub(crate) fn take_cols(src: &[f32], rows: usize, row_w: usize, lo: usize, hi: u
     out
 }
 
+/// [`take_cols`] into a caller-owned slice (the zero-alloc hot path).
+pub(crate) fn take_cols_into(
+    src: &[f32],
+    rows: usize,
+    row_w: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), rows * row_w);
+    let w = hi - lo;
+    assert_eq!(out.len(), rows * w);
+    for r in 0..rows {
+        out[r * w..(r + 1) * w].copy_from_slice(&src[r * row_w + lo..r * row_w + hi]);
+    }
+}
+
 /// Causal depthwise conv + SiLU + per-channel gain over a (tl × di)
 /// time-major block — the one conv implementation shared by the
 /// full-sequence forward, the stateful prefill, and the decode step.
@@ -319,9 +336,18 @@ impl MambaModel {
 
     /// Tied-embedding logits: fin (rows × d) @ embeddingᵀ → (rows × V).
     pub(crate) fn tied_logits(&self, fin: &[f32], rows: usize) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.tied_logits_into(fin, rows, &mut logits);
+        logits
+    }
+
+    /// [`Self::tied_logits`] into a caller-owned buffer (cleared and
+    /// refilled; allocation-free once warmed up to capacity).
+    pub(crate) fn tied_logits_into(&self, fin: &[f32], rows: usize, logits: &mut Vec<f32>) {
         let d = self.tier.d_model;
         let v = self.tier.vocab;
-        let mut logits = vec![0.0f32; rows * v];
+        // grow-only resize: every element is assigned below
+        logits.resize(rows * v, 0.0);
         for ti in 0..rows {
             let frow = &fin[ti * d..(ti + 1) * d];
             for tok in 0..v {
@@ -329,7 +355,6 @@ impl MambaModel {
                 logits[ti * v + tok] = erow.iter().zip(frow).map(|(a, b)| a * b).sum();
             }
         }
-        logits
     }
 
     /// Forward over a token sequence (B=1). Returns logits (T × V).

@@ -24,6 +24,6 @@ pub mod scan;
 pub mod step;
 
 pub use mamba::{MambaModel, MambaTier};
-pub use qmamba::{QuantConfig, QuantizedMambaModel};
-pub use scan::{selective_scan, selective_scan_q, ScanParams};
-pub use step::{CalibRecord, LayerCalib, MambaState, StepModel};
+pub use qmamba::{fused_conv_silu_i8, QuantConfig, QuantizedMambaModel};
+pub use scan::{selective_scan, selective_scan_into, selective_scan_q, selective_scan_q_into, ScanParams};
+pub use step::{CalibRecord, LayerCalib, MambaState, StepModel, StepScratch, X_CALIB_SAMPLES};

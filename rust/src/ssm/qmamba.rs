@@ -1,24 +1,39 @@
 //! `QuantizedMambaModel`: a real W8A8 Mamba built from the fp32
 //! reference by calibration — int8 weights, static per-tensor
-//! activation scales, integer matmuls ([`crate::quant::qlinear`]) and
+//! activation scales, blocked integer matmuls
+//! ([`crate::quant::qlinear`]), a fused integer depthwise conv, and
 //! the int8 selective scan. This is the paper's deployment recipe
 //! (§3.3/§4.2/§4.3) executed natively in rust, mirroring
 //! `python/compile/model.py::forward_q`:
 //!
 //! * every projection (in/x/dt/out and the tied head) runs i8×i8→i32
-//!   with scales baked at calibration time (Eq. 2);
+//!   through the cache-blocked packed-weight kernel with scales baked
+//!   at calibration time (Eq. 2);
 //! * the SSM input x is clipped at a calibration percentile (§4.2);
 //! * out_proj executes in the Hadamard-rotated space: W_out is folded
 //!   offline to H·W_out (the 1/d_inner lands in its weight scale), so
 //!   the runtime only rotates the activation and quantizes (§3.3);
-//! * the conv uses int8 weights with f32 accumulation on exactly
-//!   representable dequantized values (the `_conv_live_q` semantics; a
-//!   fully fused integer conv kernel is a ROADMAP follow-on);
+//! * the depthwise conv is **fully fused integer**: the window lives
+//!   as i8 codes in the state ([`MambaState::new_quantized`]), the
+//!   accumulation is i32, and one folded `s_cin·s_w` dequant lands at
+//!   the end — completing the §4.3 end-to-end integer pipeline and
+//!   shrinking per-request conv state to 1 byte/entry;
 //! * the recurrence itself stays f32 ([`super::scan::selective_scan_q`]).
+//!
+//! `step_into` executes entirely out of the caller's [`StepScratch`]:
+//! **zero heap allocations** per call after warmup (asserted in
+//! `rust/tests/zero_alloc.rs`). Caveat: that guarantee holds for
+//! power-of-two `d_inner` (every current tier) — a Paley-base
+//! `d_inner` (12·2^k / 20·2^k) makes `fwht_rows` allocate its base
+//! matrix per call; caching it per layer is a ROADMAP item.
+//! `prefill_into` runs the whole prompt
+//! as (T×K) batched int8 GEMMs; static scales make it bit-identical
+//! to the stepwise path ([`QuantizedMambaModel::prefill_stepwise`],
+//! kept as the test oracle).
 
-use super::mamba::{rmsnorm, silu, softplus, take_cols, MambaModel, MambaTier};
-use super::scan::selective_scan_q;
-use super::step::{CalibRecord, MambaState, StepModel};
+use super::mamba::{rmsnorm, silu, softplus, take_cols_into, MambaModel, MambaTier};
+use super::scan::selective_scan_q_into;
+use super::step::{par_lane_chunks, rf32, CalibRecord, MambaState, StepModel, StepScratch};
 use crate::quant;
 use crate::quant::qlinear::QLinear;
 
@@ -39,10 +54,13 @@ struct QLayer {
     norm: Vec<f32>,
     in_proj: QLinear, // (d, 2di)
     s_xin: f32,
-    /// int8 conv weights, stored dequantized (exactly on-grid)
-    conv_w_deq: Vec<f32>, // (W, di)
+    /// int8 depthwise conv weights (W, di) — integer-domain execution
+    conv_w_q: Vec<i8>,
     conv_b: Vec<f32>,
+    /// conv input scale (window codes are at this scale)
     s_cin: f32,
+    /// folded dequant for the i32 conv accumulator: s_cin · s_convw
+    s_conv: f32,
     x_proj: QLinear, // (di, r+2n)
     s_x: f32,
     dt_proj: QLinear, // (r, di), bias folded in
@@ -66,6 +84,59 @@ pub struct QuantizedMambaModel {
     layers: Vec<QLayer>,
     g_x: Vec<f32>,
     g_y: Vec<f32>,
+}
+
+/// Fused integer depthwise causal conv + SiLU + per-channel gain over
+/// a (tl × di) time-major block of int8 *codes*: i8 window × i8
+/// weights, i32 accumulate, one folded `s = s_cin·s_w` dequant (+ f32
+/// bias) at the end. `hist` is the carried (W−1, di) window of input
+/// codes (oldest row first), advanced in place — chunked calls compose
+/// **bit-exactly** with one full call because the accumulator is
+/// integer. Parity with the dequantized-f32 conv is property-tested in
+/// `rust/tests/kernel_parity.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_conv_silu_i8(
+    x_q: &[i8],
+    hist: &mut [i8],
+    w_q: &[i8],
+    bias: &[f32],
+    gx: &[f32],
+    s: f32,
+    tl: usize,
+    di: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x_q.len(), tl * di);
+    assert_eq!(out.len(), tl * di);
+    assert_eq!(w_q.len(), w * di);
+    assert_eq!(hist.len(), (w - 1) * di);
+    for ti in 0..tl {
+        for ch in 0..di {
+            let mut acc = 0i32;
+            for j in 0..w {
+                let src = ti as isize - (w as isize - 1) + j as isize;
+                let v = if src >= 0 {
+                    x_q[src as usize * di + ch] as i32
+                } else {
+                    hist[(src + w as isize - 1) as usize * di + ch] as i32
+                };
+                acc += v * w_q[j * di + ch] as i32;
+            }
+            out[ti * di + ch] = silu(acc as f32 * s + bias[ch]) * gx[ch];
+        }
+    }
+    // slide the window: new history = last (w−1) rows of [hist ; x_q]
+    let hw = w - 1;
+    for row in 0..hw {
+        let src_row = tl + row; // index into the (hw + tl)-row concat
+        if src_row < hw {
+            hist.copy_within(src_row * di..(src_row + 1) * di, row * di);
+        } else {
+            let xr = src_row - hw;
+            hist[row * di..(row + 1) * di].copy_from_slice(&x_q[xr * di..(xr + 1) * di]);
+        }
+    }
 }
 
 impl QuantizedMambaModel {
@@ -100,7 +171,8 @@ impl QuantizedMambaModel {
                 }
             }
             let conv_sw = quant::scale_sym(quant::amax(&layer.conv_w), 8);
-            let conv_q = quant::quantize_sym(&layer.conv_w, conv_sw, 8);
+            let conv_w_q = quant::quantize_sym(&layer.conv_w, conv_sw, 8);
+            let s_cin = quant::scale_sym(lc.conv_in_amax, 8);
             let (a_sw, d_sw) = (
                 quant::scale_sym(quant::amax(&layer.a), 8),
                 quant::scale_sym(quant::amax(&layer.d), 8),
@@ -109,12 +181,13 @@ impl QuantizedMambaModel {
                 norm: layer.norm.clone(),
                 in_proj: QLinear::from_f32(&layer.in_proj, d, 2 * di, None),
                 s_xin: quant::scale_sym(lc.x_in_amax, 8),
-                conv_w_deq: quant::dequantize_sym(&conv_q, conv_sw),
+                conv_w_q,
                 conv_b: layer.conv_b.clone(),
-                s_cin: quant::scale_sym(lc.conv_in_amax, 8),
+                s_cin,
+                s_conv: s_cin * conv_sw,
                 x_proj: QLinear::from_f32(&layer.x_proj, di, r + 2 * n, None),
                 s_x: quant::scale_sym(
-                    quant::percentile_amax(&lc.x_ssm_vals, cfg.x_percentile),
+                    quant::percentile_amax(lc.x_ssm.values(), cfg.x_percentile),
                     8,
                 ),
                 dt_proj: QLinear::from_f32(&layer.dt_proj, r, di, Some(layer.dt_bias.clone())),
@@ -149,10 +222,9 @@ impl QuantizedMambaModel {
         }
     }
 
-    /// 8-bit weight count = bytes when shipped as int8 (conv/A/D are
-    /// held dequantized in RAM for the f32 recurrence but live exactly
-    /// on the int8 grid) — the Fig. 1(c)-style memory story for the
-    /// native backend.
+    /// 8-bit weight count = bytes when shipped as int8 (A/D are held
+    /// as codes; the conv executes straight from its i8 weights) — the
+    /// Fig. 1(c)-style memory story for the native backend.
     pub fn weight_bytes_i8(&self) -> usize {
         let per_layer: usize = self
             .layers
@@ -162,12 +234,33 @@ impl QuantizedMambaModel {
                     + l.x_proj.weight_bytes()
                     + l.dt_proj.weight_bytes()
                     + l.out_proj.weight_bytes()
-                    + l.conv_w_deq.len()
+                    + l.conv_w_q.len()
                     + l.a_q.len()
                     + l.d_q.len()
             })
             .sum();
         per_layer + self.head.weight_bytes()
+    }
+
+    /// The pre-PR-2 prefill: repeated single-token steps. Static
+    /// scales make the full-sequence [`StepModel::prefill_into`]
+    /// numerically identical; this stays as the bit-exactness oracle
+    /// (and the "before" side of the prefill speedup bench).
+    pub fn prefill_stepwise(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+        assert_eq!(state.b, 1, "prefill is single-sequence");
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        state.ensure_quantized_conv();
+        state.reset();
+        let v = self.tier.vocab;
+        let mut scratch = StepScratch::new(1);
+        let mut step_logits = Vec::new();
+        let mut logits = Vec::with_capacity(tokens.len() * v);
+        for &tok in tokens {
+            self.step_into(&[tok], state, &mut scratch, &mut step_logits);
+            logits.extend_from_slice(&step_logits);
+        }
+        debug_assert_eq!(logits.len(), tokens.len() * v);
+        logits
     }
 }
 
@@ -176,119 +269,313 @@ impl StepModel for QuantizedMambaModel {
         &self.tier
     }
 
-    /// Quantized prefill = repeated single-token steps: every scale is
-    /// static, so the stepwise path is numerically identical to a
-    /// full-sequence quantized forward, and the state composition is
-    /// exact by construction.
-    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
-        assert_eq!(state.b, 1, "prefill is single-sequence");
-        assert!(!tokens.is_empty(), "prefill needs at least one token");
-        state.reset();
-        let v = self.tier.vocab;
-        let mut logits = Vec::with_capacity(tokens.len() * v);
-        for &tok in tokens {
-            logits.extend(self.step(&[tok], state));
-        }
-        debug_assert_eq!(logits.len(), tokens.len() * v);
-        logits
+    fn quantized_conv_state(&self) -> bool {
+        true
     }
 
-    /// The W8A8 batched decode step — the native serving hot path.
-    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+    /// Full-sequence quantized prefill: the whole prompt runs as
+    /// (T×K) batched int8 GEMMs, one fused-conv sweep and one scan per
+    /// layer. Every scale is static, integer accumulation is exact,
+    /// and the f32 epilogues are per-element — so logits *and* final
+    /// state are bit-identical to [`Self::prefill_stepwise`]
+    /// (asserted in tests) at a fraction of the dispatch cost.
+    fn prefill_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
         let t = &self.tier;
         let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
-        let b = state.b;
-        assert_eq!(tokens.len(), b, "one input token per state lane");
-        let mut resid = vec![0.0f32; b * d];
-        for (bi, &tok) in tokens.iter().enumerate() {
-            resid[bi * d..(bi + 1) * d]
+        assert_eq!(state.b, 1, "prefill is single-sequence");
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        state.ensure_quantized_conv();
+        state.reset();
+        let tl = tokens.len();
+        scratch.prep(tl, t);
+        let StepScratch {
+            resid,
+            x_in,
+            xz,
+            x,
+            z,
+            act,
+            bcdt,
+            dt_low,
+            bmat,
+            cmat,
+            dt,
+            gated,
+            out,
+            fin,
+            q_xin,
+            q_conv,
+            q_x,
+            q_dt,
+            q_b,
+            q_c,
+            q_gh,
+            q_head,
+            acc,
+            ..
+        } = scratch;
+        for (i, &tok) in tokens.iter().enumerate() {
+            resid[i * d..(i + 1) * d]
                 .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
         }
-        let mut x_in = vec![0.0f32; b * d];
-        let mut xz = vec![0.0f32; b * 2 * di];
-        let mut bcdt = vec![0.0f32; b * (r + 2 * n)];
-        let mut out = vec![0.0f32; b * d];
-        let hw = w - 1;
         for (li, ql) in self.layers.iter().enumerate() {
-            // fused norm + requant into the int8 in_proj
-            rmsnorm(&resid, &ql.norm, d, 1e-5, &mut x_in);
-            ql.in_proj.forward(&x_in, ql.s_xin, b, &mut xz);
-            let x = take_cols(&xz, b, 2 * di, 0, di);
-            let z = take_cols(&xz, b, 2 * di, di, 2 * di);
-            // int8-semantics conv: requant the input, accumulate in f32
-            // over exactly-representable dequantized values
-            let x_deq = {
-                let q = quant::quantize_sym(&x, ql.s_cin, 8);
-                quant::dequantize_sym(&q, ql.s_cin)
-            };
+            rmsnorm(resid, &ql.norm, d, 1e-5, x_in);
+            ql.in_proj.forward_into(x_in, ql.s_xin, tl, q_xin, acc, xz);
+            take_cols_into(xz, tl, 2 * di, 0, di, x);
+            take_cols_into(xz, tl, 2 * di, di, 2 * di, z);
+            // requant the conv input to the static conv-in scale; the
+            // window codes carry the same scale
+            quant::quantize_sym_into(x, ql.s_cin, 8, q_conv);
             let gx = &self.g_x[li * di..(li + 1) * di];
-            let mut act = vec![0.0f32; b * di];
-            for bi in 0..b {
-                let hist = state.conv_lane(li, bi);
-                for ch in 0..di {
-                    let mut acc = ql.conv_b[ch];
-                    for j in 0..hw {
-                        acc += hist[j * di + ch] * ql.conv_w_deq[j * di + ch];
-                    }
-                    acc += x_deq[bi * di + ch] * ql.conv_w_deq[hw * di + ch];
-                    act[bi * di + ch] = silu(acc) * gx[ch];
-                }
-                // slide the window with the dequantized input (what the
-                // int8 conv would see next step)
-                if hw > 0 {
-                    hist.copy_within(di.., 0);
-                    hist[(hw - 1) * di..].copy_from_slice(&x_deq[bi * di..(bi + 1) * di]);
-                }
-            }
+            fused_conv_silu_i8(
+                q_conv,
+                state.conv_lane_q(li, 0),
+                &ql.conv_w_q,
+                &ql.conv_b,
+                gx,
+                ql.s_conv,
+                tl,
+                di,
+                w,
+                act,
+            );
             // percentile-clipped static x-scale; the scan reuses the codes
-            let x8s = quant::quantize_sym(&act, ql.s_x, 8);
-            ql.x_proj.forward_q(&x8s, ql.s_x, b, &mut bcdt);
-            let dt_low = take_cols(&bcdt, b, r + 2 * n, 0, r);
-            let bmat = take_cols(&bcdt, b, r + 2 * n, r, r + n);
-            let cmat = take_cols(&bcdt, b, r + 2 * n, r + n, r + 2 * n);
-            let mut dt = vec![0.0f32; b * di];
-            ql.dt_proj.forward(&dt_low, ql.s_dt, b, &mut dt);
+            quant::quantize_sym_into(act, ql.s_x, 8, q_x);
+            ql.x_proj.forward_q_into(q_x, ql.s_x, tl, acc, bcdt);
+            take_cols_into(bcdt, tl, r + 2 * n, 0, r, dt_low);
+            take_cols_into(bcdt, tl, r + 2 * n, r, r + n, bmat);
+            take_cols_into(bcdt, tl, r + 2 * n, r + n, r + 2 * n, cmat);
+            ql.dt_proj.forward_into(dt_low, ql.s_dt, tl, q_dt, acc, dt);
             for v in dt.iter_mut() {
                 *v = softplus(*v);
             }
-            let b8 = quant::quantize_sym(&bmat, ql.s_b, 8);
-            let c8 = quant::quantize_sym(&cmat, ql.s_c, 8);
+            quant::quantize_sym_into(bmat, ql.s_b, 8, q_b);
+            quant::quantize_sym_into(cmat, ql.s_c, 8, q_c);
             let gy = &self.g_y[li * di..(li + 1) * di];
-            let mut gated = vec![0.0f32; b * di];
-            for bi in 0..b {
-                let y = selective_scan_q(
-                    di,
-                    n,
-                    &x8s[bi * di..(bi + 1) * di],
-                    ql.s_x,
-                    &dt[bi * di..(bi + 1) * di],
-                    &ql.a_q,
-                    ql.s_a,
-                    &b8[bi * n..(bi + 1) * n],
-                    ql.s_b,
-                    &c8[bi * n..(bi + 1) * n],
-                    ql.s_c,
-                    &ql.d_q,
-                    ql.s_d,
-                    state.ssm_lane(li, bi),
-                );
+            selective_scan_q_into(
+                di,
+                n,
+                q_x,
+                ql.s_x,
+                dt,
+                &ql.a_q,
+                ql.s_a,
+                q_b,
+                ql.s_b,
+                q_c,
+                ql.s_c,
+                &ql.d_q,
+                ql.s_d,
+                state.ssm_lane(li, 0),
+                gated,
+            );
+            for ti in 0..tl {
                 for ch in 0..di {
-                    gated[bi * di + ch] = y[ch] * silu(z[bi * di + ch]) * gy[ch];
+                    gated[ti * di + ch] =
+                        gated[ti * di + ch] * silu(z[ti * di + ch]) * gy[ch];
                 }
             }
-            // out_proj in the rotated space: rotate, quantize, int8 matmul
-            // against the folded H·W_out (its scale carries the 1/di)
-            crate::quant::hadamard::fwht_rows(&mut gated, di);
-            ql.out_proj.forward(&gated, ql.s_gh, b, &mut out);
+            // out_proj in the rotated space: rotate, quantize, int8
+            // matmul against the folded H·W_out (scale carries 1/di)
+            crate::quant::hadamard::fwht_rows(gated, di);
+            ql.out_proj.forward_into(gated, ql.s_gh, tl, q_gh, acc, out);
             for i in 0..resid.len() {
                 resid[i] += out[i];
             }
         }
-        let mut fin = vec![0.0f32; b * d];
-        rmsnorm(&resid, &self.norm_f, d, 1e-5, &mut fin);
-        let mut logits = vec![0.0f32; b * self.tier.vocab];
-        self.head.forward(&fin, self.s_head_in, b, &mut logits);
-        logits
+        rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
+        rf32(logits, tl * self.tier.vocab);
+        self.head.forward_into(fin, self.s_head_in, tl, q_head, acc, logits);
+    }
+
+    /// The W8A8 batched decode step — the native serving hot path.
+    /// Executes entirely out of `scratch` (zero allocations after
+    /// warmup); `scratch.threads > 1` splits the per-lane conv and
+    /// scan across scoped threads, bit-identically.
+    fn step_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        let t = &self.tier;
+        let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
+        let b = state.b;
+        assert_eq!(tokens.len(), b, "one input token per state lane");
+        assert!(
+            state.is_quantized_conv(),
+            "W8A8 step needs an i8 conv-window state (MambaState::new_quantized / prefill first)"
+        );
+        scratch.prep(b, t);
+        let nt = scratch.threads.max(1).min(b);
+        let cpl = (w - 1) * di;
+        let spl = di * n;
+        let StepScratch {
+            resid,
+            x_in,
+            xz,
+            x,
+            z,
+            act,
+            bcdt,
+            dt_low,
+            bmat,
+            cmat,
+            dt,
+            gated,
+            out,
+            fin,
+            q_xin,
+            q_conv,
+            q_x,
+            q_dt,
+            q_b,
+            q_c,
+            q_gh,
+            q_head,
+            acc,
+            ..
+        } = scratch;
+        for (bi, &tok) in tokens.iter().enumerate() {
+            resid[bi * d..(bi + 1) * d]
+                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        for (li, ql) in self.layers.iter().enumerate() {
+            // fused norm + requant into the int8 in_proj
+            rmsnorm(resid, &ql.norm, d, 1e-5, x_in);
+            ql.in_proj.forward_into(x_in, ql.s_xin, b, q_xin, acc, xz);
+            take_cols_into(xz, b, 2 * di, 0, di, x);
+            take_cols_into(xz, b, 2 * di, di, 2 * di, z);
+            quant::quantize_sym_into(x, ql.s_cin, 8, q_conv);
+            let gx = &self.g_x[li * di..(li + 1) * di];
+            let layer_conv = state.conv_q_layer_mut(li);
+            if nt > 1 && cpl > 0 {
+                let xq_r: &[i8] = &q_conv[..];
+                let (w_q, bias, s_conv) = (&ql.conv_w_q, &ql.conv_b, ql.s_conv);
+                par_lane_chunks(nt, b, &mut act[..], di, layer_conv, cpl, |lane0, act_c, hist_c| {
+                    for (l, (a_l, h_l)) in
+                        act_c.chunks_mut(di).zip(hist_c.chunks_mut(cpl)).enumerate()
+                    {
+                        let bi = lane0 + l;
+                        fused_conv_silu_i8(
+                            &xq_r[bi * di..(bi + 1) * di],
+                            h_l,
+                            w_q,
+                            bias,
+                            gx,
+                            s_conv,
+                            1,
+                            di,
+                            w,
+                            a_l,
+                        );
+                    }
+                });
+            } else {
+                for bi in 0..b {
+                    fused_conv_silu_i8(
+                        &q_conv[bi * di..(bi + 1) * di],
+                        &mut layer_conv[bi * cpl..(bi + 1) * cpl],
+                        &ql.conv_w_q,
+                        &ql.conv_b,
+                        gx,
+                        ql.s_conv,
+                        1,
+                        di,
+                        w,
+                        &mut act[bi * di..(bi + 1) * di],
+                    );
+                }
+            }
+            // percentile-clipped static x-scale; the scan reuses the codes
+            quant::quantize_sym_into(act, ql.s_x, 8, q_x);
+            ql.x_proj.forward_q_into(q_x, ql.s_x, b, acc, bcdt);
+            take_cols_into(bcdt, b, r + 2 * n, 0, r, dt_low);
+            take_cols_into(bcdt, b, r + 2 * n, r, r + n, bmat);
+            take_cols_into(bcdt, b, r + 2 * n, r + n, r + 2 * n, cmat);
+            ql.dt_proj.forward_into(dt_low, ql.s_dt, b, q_dt, acc, dt);
+            for v in dt.iter_mut() {
+                *v = softplus(*v);
+            }
+            quant::quantize_sym_into(bmat, ql.s_b, 8, q_b);
+            quant::quantize_sym_into(cmat, ql.s_c, 8, q_c);
+            let gy = &self.g_y[li * di..(li + 1) * di];
+            let layer_ssm = state.ssm_layer_mut(li);
+            if nt > 1 {
+                let (xq_r, dt_r, bq_r, cq_r, z_r) =
+                    (&q_x[..], &dt[..], &q_b[..], &q_c[..], &z[..]);
+                let (a_q, d_q) = (&ql.a_q, &ql.d_q);
+                let (s_x, s_a, s_b, s_c, s_d) = (ql.s_x, ql.s_a, ql.s_b, ql.s_c, ql.s_d);
+                par_lane_chunks(nt, b, &mut gated[..], di, layer_ssm, spl, |lane0, gated_c, ssm_c| {
+                    for (l, (y, h)) in
+                        gated_c.chunks_mut(di).zip(ssm_c.chunks_mut(spl)).enumerate()
+                    {
+                        let bi = lane0 + l;
+                        selective_scan_q_into(
+                            di,
+                            n,
+                            &xq_r[bi * di..(bi + 1) * di],
+                            s_x,
+                            &dt_r[bi * di..(bi + 1) * di],
+                            a_q,
+                            s_a,
+                            &bq_r[bi * n..(bi + 1) * n],
+                            s_b,
+                            &cq_r[bi * n..(bi + 1) * n],
+                            s_c,
+                            d_q,
+                            s_d,
+                            h,
+                            y,
+                        );
+                        for ch in 0..di {
+                            y[ch] = y[ch] * silu(z_r[bi * di + ch]) * gy[ch];
+                        }
+                    }
+                });
+            } else {
+                for bi in 0..b {
+                    let y = &mut gated[bi * di..(bi + 1) * di];
+                    selective_scan_q_into(
+                        di,
+                        n,
+                        &q_x[bi * di..(bi + 1) * di],
+                        ql.s_x,
+                        &dt[bi * di..(bi + 1) * di],
+                        &ql.a_q,
+                        ql.s_a,
+                        &q_b[bi * n..(bi + 1) * n],
+                        ql.s_b,
+                        &q_c[bi * n..(bi + 1) * n],
+                        ql.s_c,
+                        &ql.d_q,
+                        ql.s_d,
+                        &mut layer_ssm[bi * spl..(bi + 1) * spl],
+                        y,
+                    );
+                    for ch in 0..di {
+                        y[ch] = y[ch] * silu(z[bi * di + ch]) * gy[ch];
+                    }
+                }
+            }
+            // out_proj in the rotated space: rotate, quantize, int8 matmul
+            // against the folded H·W_out (its scale carries the 1/di)
+            crate::quant::hadamard::fwht_rows(gated, di);
+            ql.out_proj.forward_into(gated, ql.s_gh, b, q_gh, acc, out);
+            for i in 0..resid.len() {
+                resid[i] += out[i];
+            }
+        }
+        rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
+        rf32(logits, b * self.tier.vocab);
+        self.head.forward_into(fin, self.s_head_in, b, q_head, acc, logits);
     }
 }
 
@@ -326,6 +613,48 @@ mod tests {
         // W8A8 with static scales: a few percent of the logit range
         assert!(err < 0.06 * amax, "W8A8 err {err} vs logit amax {amax}");
         assert!(err > 0.0, "suspiciously exact — quantization not applied?");
+    }
+
+    #[test]
+    fn batched_prefill_bit_identical_to_stepwise() {
+        // ISSUE 2 acceptance: the (T×K) full-sequence quantized prefill
+        // produces bit-identical logits AND state vs per-token stepping
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 7);
+        let mut r = crate::util::rng::Pcg32::new(0xFEED);
+        let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+        let prompt: Vec<u16> = (0..23).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let mut st_batched = MambaState::new_quantized(&t, 1);
+        let lg_batched = qm.prefill(&prompt, &mut st_batched);
+        let mut st_step = MambaState::new_quantized(&t, 1);
+        let lg_step = qm.prefill_stepwise(&prompt, &mut st_step);
+        assert_eq!(lg_batched.len(), lg_step.len());
+        for (i, (a, b)) in lg_batched.iter().zip(&lg_step).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "logit {i}: batched {a} != stepwise {b}"
+            );
+        }
+        assert_eq!(st_batched.conv_q, st_step.conv_q, "conv window codes diverged");
+        for (i, (a, b)) in st_batched.ssm.iter().zip(&st_step.ssm).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "ssm state {i}: {a} != {b}");
+        }
+    }
+
+    #[test]
+    fn prefill_upgrades_f32_state_to_quantized_conv() {
+        // serving code may hand the W8A8 model a plain MambaState::new
+        // state; prefill converts it to the i8 conv-window layout
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 3);
+        let qm = QuantizedMambaModel::from_model(&model, &[1, 2, 3, 4], &QuantConfig::default());
+        let mut st = MambaState::new(&t, 1);
+        assert!(!st.is_quantized_conv());
+        qm.prefill(&[5, 6, 7], &mut st);
+        assert!(st.is_quantized_conv());
+        assert!(st.conv.is_empty());
     }
 
     #[test]

@@ -27,6 +27,22 @@ pub fn selective_scan(
     c: &[f32],
     h: &mut [f32],
 ) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    selective_scan_into(p, x, dt, b, c, h, &mut y);
+    y
+}
+
+/// [`selective_scan`] writing y into a caller-owned (T × d_inner)
+/// slice — the zero-alloc decode hot path.
+pub fn selective_scan_into(
+    p: &ScanParams,
+    x: &[f32],
+    dt: &[f32],
+    b: &[f32],
+    c: &[f32],
+    h: &mut [f32],
+    y: &mut [f32],
+) {
     let (di, n) = (p.d_inner, p.n_state);
     let t_len = x.len() / di;
     assert_eq!(x.len(), t_len * di, "x length must be a multiple of d_inner");
@@ -36,7 +52,7 @@ pub fn selective_scan(
     assert_eq!(p.a.len(), di * n, "A must be d_inner × n_state");
     assert_eq!(p.d.len(), di, "D must be d_inner");
     assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
-    let mut y = vec![0.0f32; t_len * di];
+    assert_eq!(y.len(), t_len * di, "y must match x (T × d_inner)");
     for t in 0..t_len {
         let xt = &x[t * di..(t + 1) * di];
         let dtt = &dt[t * di..(t + 1) * di];
@@ -55,7 +71,6 @@ pub fn selective_scan(
             y[t * di + ch] = acc + p.d[ch] * xt[ch];
         }
     }
-    y
 }
 
 /// Quantized selective scan (paper §4.2): int8 activations (x, B, C)
@@ -78,6 +93,33 @@ pub fn selective_scan_q(
     s_d: f32,
     h: &mut [f32],
 ) -> Vec<f32> {
+    let mut y = vec![0.0f32; x_q.len()];
+    selective_scan_q_into(
+        d_inner, n_state, x_q, s_x, dt, a_q, s_a, b_q, s_b, c_q, s_c, d_q, s_d, h, &mut y,
+    );
+    y
+}
+
+/// [`selective_scan_q`] writing y into a caller-owned (T × d_inner)
+/// slice — the zero-alloc W8A8 decode hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn selective_scan_q_into(
+    d_inner: usize,
+    n_state: usize,
+    x_q: &[i8],
+    s_x: f32,
+    dt: &[f32],
+    a_q: &[i8],
+    s_a: f32,
+    b_q: &[i8],
+    s_b: f32,
+    c_q: &[i8],
+    s_c: f32,
+    d_q: &[i8],
+    s_d: f32,
+    h: &mut [f32],
+    y: &mut [f32],
+) {
     let (di, n) = (d_inner, n_state);
     let t_len = x_q.len() / di;
     // the same shape guards as `selective_scan`: malformed inputs must
@@ -89,7 +131,7 @@ pub fn selective_scan_q(
     assert_eq!(a_q.len(), di * n, "A_q must be d_inner × n_state");
     assert_eq!(d_q.len(), di, "D_q must be d_inner");
     assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
-    let mut y = vec![0.0f32; t_len * di];
+    assert_eq!(y.len(), t_len * di, "y must match x_q (T × d_inner)");
     for t in 0..t_len {
         for ch in 0..di {
             let x = x_q[t * di + ch] as f32 * s_x;
@@ -109,7 +151,6 @@ pub fn selective_scan_q(
             y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
         }
     }
-    y
 }
 
 #[cfg(test)]

@@ -1,38 +1,80 @@
 //! Stateful decode for the native (artifact-free) serving backend:
 //! a batched per-request recurrent state ([`MambaState`]), the
-//! [`StepModel`] trait the coordinator serves from, and the fp32
-//! implementation for [`MambaModel`].
+//! [`StepModel`] trait the coordinator serves from, the reusable
+//! [`StepScratch`] workspace that makes the decode hot path
+//! allocation-free, and the fp32 implementation for [`MambaModel`].
 //!
 //! The state layout is exactly the coordinator pool's raw batched
 //! layout — conv (L, B, W−1, d_inner) and ssm (L, B, d_inner, N), both
 //! flattened row-major — so `SsmStatePool::gather_raw` output can be
-//! stepped directly and scattered back without reshaping. The layer
-//! math is the shared `pub(crate)` helper set in [`super::mamba`] plus
-//! [`super::scan::selective_scan`] with T = 1, so a prefill followed
-//! by steps reproduces the full-sequence `forward` exactly (see
+//! stepped directly and scattered back without reshaping. Quantized
+//! models keep the conv window as **i8 codes** instead
+//! ([`MambaState::new_quantized`]; 1 byte/entry, the §4.3 integer
+//! pipeline), same layout, parallel `conv_q` buffer. The layer math is
+//! the shared `pub(crate)` helper set in [`super::mamba`] plus
+//! [`super::scan::selective_scan`], so a prefill followed by steps
+//! reproduces the full-sequence `forward` exactly (see
 //! `rust/tests/native_decode.rs`).
+//!
+//! ## Threading
+//!
+//! `StepScratch::threads > 1` splits the per-lane conv and scan loops
+//! of a batched step across `std::thread::scope` workers. Lane math is
+//! independent and every lane runs the identical instruction sequence,
+//! so threaded output is **bit-identical** to single-threaded
+//! (property-tested in `rust/tests/kernel_parity.rs`).
 
 use super::mamba::{
-    causal_conv_silu, matmul, rmsnorm, silu, softplus, take_cols, MambaModel, MambaTier,
+    causal_conv_silu, matmul, rmsnorm, silu, softplus, take_cols, take_cols_into, MambaModel,
+    MambaTier,
 };
-use super::scan::{selective_scan, ScanParams};
+use super::scan::{selective_scan, selective_scan_into, ScanParams};
 use crate::quant;
+use crate::quant::Reservoir;
+
+/// Per-layer cap on retained SSM-input calibration samples. Streams at
+/// or below the cap are kept exactly (bit-identical to unbounded
+/// collection — the parity-test calibrations fit); longer streams are
+/// reservoir-sampled deterministically.
+pub const X_CALIB_SAMPLES: usize = 8192;
 
 /// Recurrent decode state for `b` sequences advancing in lockstep.
+///
+/// The conv window lives in exactly one of two parallel buffers:
+/// `conv` (f32 values, the fp32 reference model) or `conv_q` (i8
+/// codes at the layer's static conv-input scale, the W8A8 model) —
+/// the other stays empty. Both use the (L, B, W−1, d_inner) layout.
 pub struct MambaState {
     pub b: usize,
     n_layer: usize,
     conv_per_layer: usize, // (W-1) * d_inner
     ssm_per_layer: usize,  // d_inner * N
+    /// which conv representation this state carries (the other buffer
+    /// stays empty)
+    quantized_conv: bool,
     /// (L, B, W−1, d_inner) flattened: the last W−1 conv inputs per
-    /// layer per lane, oldest row first
+    /// layer per lane, oldest row first (fp32 models)
     pub conv: Vec<f32>,
+    /// same layout as `conv`, but int8 *codes* (quantized models);
+    /// empty unless the state was built for a quantized-conv model
+    pub conv_q: Vec<i8>,
     /// (L, B, d_inner, N) flattened recurrent state
     pub ssm: Vec<f32>,
 }
 
 impl MambaState {
     pub fn new(tier: &MambaTier, b: usize) -> MambaState {
+        Self::new_for(tier, b, false)
+    }
+
+    /// A state whose conv window is int8 codes (W8A8 models): quarter
+    /// the conv bytes of the f32 layout.
+    pub fn new_quantized(tier: &MambaTier, b: usize) -> MambaState {
+        Self::new_for(tier, b, true)
+    }
+
+    /// Dispatch on [`StepModel::quantized_conv_state`].
+    pub fn new_for(tier: &MambaTier, b: usize, quantized_conv: bool) -> MambaState {
         assert!(b > 0, "state needs at least one lane");
         let cpl = (tier.d_conv - 1) * tier.d_inner;
         let spl = tier.d_inner * tier.d_state;
@@ -41,7 +83,9 @@ impl MambaState {
             n_layer: tier.n_layer,
             conv_per_layer: cpl,
             ssm_per_layer: spl,
-            conv: vec![0.0; tier.n_layer * b * cpl],
+            quantized_conv,
+            conv: if quantized_conv { Vec::new() } else { vec![0.0; tier.n_layer * b * cpl] },
+            conv_q: if quantized_conv { vec![0; tier.n_layer * b * cpl] } else { Vec::new() },
             ssm: vec![0.0; tier.n_layer * b * spl],
         }
     }
@@ -52,22 +96,77 @@ impl MambaState {
         let spl = tier.d_inner * tier.d_state;
         assert_eq!(conv.len(), tier.n_layer * b * cpl, "conv buffer shape mismatch");
         assert_eq!(ssm.len(), tier.n_layer * b * spl, "ssm buffer shape mismatch");
-        MambaState { b, n_layer: tier.n_layer, conv_per_layer: cpl, ssm_per_layer: spl, conv, ssm }
+        MambaState {
+            b,
+            n_layer: tier.n_layer,
+            conv_per_layer: cpl,
+            ssm_per_layer: spl,
+            quantized_conv: false,
+            conv,
+            conv_q: Vec::new(),
+            ssm,
+        }
+    }
+
+    /// Wrap raw batched buffers with an i8 conv window
+    /// (`SsmStatePool::gather_raw_q` layout).
+    pub fn from_raw_q(tier: &MambaTier, b: usize, conv_q: Vec<i8>, ssm: Vec<f32>) -> MambaState {
+        let cpl = (tier.d_conv - 1) * tier.d_inner;
+        let spl = tier.d_inner * tier.d_state;
+        assert_eq!(conv_q.len(), tier.n_layer * b * cpl, "conv_q buffer shape mismatch");
+        assert_eq!(ssm.len(), tier.n_layer * b * spl, "ssm buffer shape mismatch");
+        MambaState {
+            b,
+            n_layer: tier.n_layer,
+            conv_per_layer: cpl,
+            ssm_per_layer: spl,
+            quantized_conv: true,
+            conv: Vec::new(),
+            conv_q,
+            ssm,
+        }
     }
 
     /// Back to the raw buffers for `SsmStatePool::scatter_raw`.
     pub fn into_raw(self) -> (Vec<f32>, Vec<f32>) {
+        assert!(!self.quantized_conv, "state carries an i8 conv window: use into_raw_q");
         (self.conv, self.ssm)
+    }
+
+    /// Back to the raw buffers for `SsmStatePool::scatter_raw_q`.
+    pub fn into_raw_q(self) -> (Vec<i8>, Vec<f32>) {
+        assert!(self.quantized_conv, "state carries an f32 conv window: use into_raw");
+        (self.conv_q, self.ssm)
+    }
+
+    /// True when the conv window is stored as i8 codes.
+    pub fn is_quantized_conv(&self) -> bool {
+        self.quantized_conv
+    }
+
+    /// Switch this state to the i8 conv-window representation (used by
+    /// quantized prefill on a state built with [`Self::new`]); resets
+    /// nothing else.
+    pub(crate) fn ensure_quantized_conv(&mut self) {
+        if !self.quantized_conv {
+            self.quantized_conv = true;
+            self.conv_q = vec![0; self.n_layer * self.b * self.conv_per_layer];
+            self.conv = Vec::new();
+        }
     }
 
     pub fn reset(&mut self) {
         self.conv.fill(0.0);
+        self.conv_q.fill(0);
         self.ssm.fill(0.0);
     }
 
-    /// Per-request state bytes (constant in context length).
+    /// Per-request state bytes (constant in context length; the i8
+    /// conv window of quantized models is a quarter of the f32 one).
     pub fn bytes_per_lane(&self) -> usize {
-        4 * self.n_layer * (self.conv_per_layer + self.ssm_per_layer)
+        let conv_bytes =
+            if self.is_quantized_conv() { self.conv_per_layer } else { 4 * self.conv_per_layer };
+        self.n_layer * (conv_bytes + 4 * self.ssm_per_layer)
     }
 
     pub(crate) fn conv_lane(&mut self, li: usize, bi: usize) -> &mut [f32] {
@@ -76,43 +175,255 @@ impl MambaState {
         &mut self.conv[off..off + cpl]
     }
 
+    pub(crate) fn conv_lane_q(&mut self, li: usize, bi: usize) -> &mut [i8] {
+        let cpl = self.conv_per_layer;
+        let off = (li * self.b + bi) * cpl;
+        &mut self.conv_q[off..off + cpl]
+    }
+
+    /// All lanes of one layer's f32 conv window, contiguous (B × cpl).
+    pub(crate) fn conv_layer_mut(&mut self, li: usize) -> &mut [f32] {
+        let stride = self.b * self.conv_per_layer;
+        &mut self.conv[li * stride..(li + 1) * stride]
+    }
+
+    /// All lanes of one layer's i8 conv window, contiguous (B × cpl).
+    pub(crate) fn conv_q_layer_mut(&mut self, li: usize) -> &mut [i8] {
+        let stride = self.b * self.conv_per_layer;
+        &mut self.conv_q[li * stride..(li + 1) * stride]
+    }
+
     pub(crate) fn ssm_lane(&mut self, li: usize, bi: usize) -> &mut [f32] {
         let spl = self.ssm_per_layer;
         let off = (li * self.b + bi) * spl;
         &mut self.ssm[off..off + spl]
+    }
+
+    /// All lanes of one layer's recurrent state, contiguous (B × spl).
+    pub(crate) fn ssm_layer_mut(&mut self, li: usize) -> &mut [f32] {
+        let stride = self.b * self.ssm_per_layer;
+        &mut self.ssm[li * stride..(li + 1) * stride]
+    }
+}
+
+/// Resize a scratch buffer to exactly `n` elements WITHOUT clearing:
+/// every consumer fully overwrites its buffer before reading (matmul /
+/// rmsnorm / take_cols_into / conv / scan all write each element), so
+/// zero-filling the whole length each call would be a wasted memset on
+/// the hot path — only growth is zero-initialized.
+pub(crate) fn rf32(v: &mut Vec<f32>, n: usize) {
+    v.resize(n, 0.0);
+}
+
+/// Split `b` lanes into up to `nt` contiguous chunks across
+/// `std::thread::scope` workers. `a` / `bb` are two per-lane-strided
+/// mutable buffers (strides `sa`, `sb`, both > 0); `f` runs once per
+/// chunk with the chunk's first global lane index and the two matching
+/// sub-slices. Lane math is independent per lane, so any chunking is
+/// bit-identical to a sequential loop — this is the one place the
+/// batched-step conv/scan sections (fp32 and W8A8) get their
+/// parity-tested chunk arithmetic from.
+pub(crate) fn par_lane_chunks<T: Send, U: Send>(
+    nt: usize,
+    b: usize,
+    a: &mut [T],
+    sa: usize,
+    bb: &mut [U],
+    sb: usize,
+    f: impl Fn(usize, &mut [T], &mut [U]) + Sync,
+) {
+    debug_assert!(sa > 0 && sb > 0, "strides must be positive");
+    debug_assert_eq!(a.len(), b * sa);
+    debug_assert_eq!(bb.len(), b * sb);
+    let lanes_per = b.div_ceil(nt.max(1));
+    let fr = &f;
+    std::thread::scope(|sc| {
+        for (ci, (ac, bc)) in
+            a.chunks_mut(lanes_per * sa).zip(bb.chunks_mut(lanes_per * sb)).enumerate()
+        {
+            sc.spawn(move || fr(ci * lanes_per, ac, bc));
+        }
+    });
+}
+
+/// Reusable per-engine workspace for [`StepModel::step_into`] /
+/// [`StepModel::prefill_into`]: every intermediate buffer of a layer
+/// step lives here, so after one warmup call the hot path performs
+/// **zero heap allocations** (asserted by `rust/tests/zero_alloc.rs`).
+/// Buffers are sized by `rows = B` (batched decode) or `rows = T`
+/// (full-sequence quantized prefill) on each call; `clear + resize`
+/// never reallocates once capacity has peaked.
+pub struct StepScratch {
+    /// worker threads for the lane-parallel conv/scan sections of a
+    /// batched step (1 = sequential; >1 is bit-identical, see module
+    /// docs). Set from `NativeEngineConfig::threads` by the engine.
+    pub threads: usize,
+    pub(crate) resid: Vec<f32>,
+    pub(crate) x_in: Vec<f32>,
+    pub(crate) xz: Vec<f32>,
+    pub(crate) x: Vec<f32>,
+    pub(crate) z: Vec<f32>,
+    pub(crate) act: Vec<f32>,
+    pub(crate) bcdt: Vec<f32>,
+    pub(crate) dt_low: Vec<f32>,
+    pub(crate) bmat: Vec<f32>,
+    pub(crate) cmat: Vec<f32>,
+    pub(crate) dt: Vec<f32>,
+    pub(crate) gated: Vec<f32>,
+    pub(crate) out: Vec<f32>,
+    pub(crate) fin: Vec<f32>,
+    // int8 code buffers (the W8A8 path)
+    pub(crate) q_xin: Vec<i8>,
+    pub(crate) q_conv: Vec<i8>,
+    pub(crate) q_x: Vec<i8>,
+    pub(crate) q_dt: Vec<i8>,
+    pub(crate) q_b: Vec<i8>,
+    pub(crate) q_c: Vec<i8>,
+    pub(crate) q_gh: Vec<i8>,
+    pub(crate) q_head: Vec<i8>,
+    /// shared i32 accumulator for the blocked int8 GEMMs
+    pub(crate) acc: Vec<i32>,
+}
+
+impl StepScratch {
+    pub fn new(threads: usize) -> StepScratch {
+        StepScratch {
+            threads: threads.max(1),
+            resid: Vec::new(),
+            x_in: Vec::new(),
+            xz: Vec::new(),
+            x: Vec::new(),
+            z: Vec::new(),
+            act: Vec::new(),
+            bcdt: Vec::new(),
+            dt_low: Vec::new(),
+            bmat: Vec::new(),
+            cmat: Vec::new(),
+            dt: Vec::new(),
+            gated: Vec::new(),
+            out: Vec::new(),
+            fin: Vec::new(),
+            q_xin: Vec::new(),
+            q_conv: Vec::new(),
+            q_x: Vec::new(),
+            q_dt: Vec::new(),
+            q_b: Vec::new(),
+            q_c: Vec::new(),
+            q_gh: Vec::new(),
+            q_head: Vec::new(),
+            acc: Vec::new(),
+        }
+    }
+
+    /// Size the f32 buffers for `rows` rows of tier `t`.
+    pub(crate) fn prep(&mut self, rows: usize, t: &MambaTier) {
+        let (d, di, n, r) = (t.d_model, t.d_inner, t.d_state, t.dt_rank);
+        rf32(&mut self.resid, rows * d);
+        rf32(&mut self.x_in, rows * d);
+        rf32(&mut self.xz, rows * 2 * di);
+        rf32(&mut self.x, rows * di);
+        rf32(&mut self.z, rows * di);
+        rf32(&mut self.act, rows * di);
+        rf32(&mut self.bcdt, rows * (r + 2 * n));
+        rf32(&mut self.dt_low, rows * r);
+        rf32(&mut self.bmat, rows * n);
+        rf32(&mut self.cmat, rows * n);
+        rf32(&mut self.dt, rows * di);
+        rf32(&mut self.gated, rows * di);
+        rf32(&mut self.out, rows * d);
+        rf32(&mut self.fin, rows * d);
+    }
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        StepScratch::new(1)
     }
 }
 
 /// A model the native engine can serve: full-sequence prompt ingestion
 /// plus a batched single-token step. Implemented by the fp32
 /// [`MambaModel`] and the W8A8 [`super::qmamba::QuantizedMambaModel`].
+/// The `*_into` methods are the hot-path surface (caller-owned scratch
+/// and logits buffer); `prefill`/`step` are allocating conveniences.
 pub trait StepModel {
     fn tier(&self) -> &MambaTier;
 
-    /// Consume a prompt into a fresh B=1 `state`. Returns (T × V)
-    /// logits (row t conditions on tokens[..=t]).
-    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32>;
+    /// True when the model keeps its conv window as i8 codes — the
+    /// engine builds its state pool (and [`MambaState`]s) to match.
+    fn quantized_conv_state(&self) -> bool {
+        false
+    }
+
+    /// Consume a prompt into a fresh B=1 `state`. (T × V) logits land
+    /// in `logits` (row t conditions on tokens[..=t]).
+    fn prefill_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    );
 
     /// Advance all `state.b` lanes by one token each (`tokens[bi]` is
-    /// lane bi's input). Returns (B × V) next-token logits.
-    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32>;
+    /// lane bi's input); (B × V) next-token logits land in `logits`.
+    /// Allocation-free after warmup for the W8A8 model.
+    fn step_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    );
+
+    /// Allocating convenience wrapper over [`Self::prefill_into`].
+    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+        let mut scratch = StepScratch::new(1);
+        let mut logits = Vec::new();
+        self.prefill_into(tokens, state, &mut scratch, &mut logits);
+        logits
+    }
+
+    /// Allocating convenience wrapper over [`Self::step_into`].
+    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+        let mut scratch = StepScratch::new(1);
+        let mut logits = Vec::new();
+        self.step_into(tokens, state, &mut scratch, &mut logits);
+        logits
+    }
 }
 
 /// Per-layer activation ranges recorded by a calibration prefill —
 /// everything the W8A8 quantizer needs (paper §4.2 / §5.1).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct LayerCalib {
     /// |rmsnorm output| max — the in_proj input scale
     pub x_in_amax: f32,
     /// |conv input| max
     pub conv_in_amax: f32,
-    /// raw SSM-input samples (percentile clip applied by the quantizer)
-    pub x_ssm_vals: Vec<f32>,
+    /// bounded reservoir of SSM-input samples (percentile clip applied
+    /// by the quantizer); O([`X_CALIB_SAMPLES`]) memory however long
+    /// the calibration stream runs
+    pub x_ssm: Reservoir,
     pub dt_low_amax: f32,
     pub b_amax: f32,
     pub c_amax: f32,
     /// |H·gated| max — the rotated-space out_proj input scale (§3.3)
     pub gated_h_amax: f32,
+}
+
+impl Default for LayerCalib {
+    fn default() -> Self {
+        LayerCalib {
+            x_in_amax: 0.0,
+            conv_in_amax: 0.0,
+            x_ssm: Reservoir::new(X_CALIB_SAMPLES, 0xCA11B),
+            dt_low_amax: 0.0,
+            b_amax: 0.0,
+            c_amax: 0.0,
+            gated_h_amax: 0.0,
+        }
+    }
 }
 
 /// Whole-model calibration record.
@@ -126,9 +437,16 @@ pub struct CalibRecord {
 impl MambaModel {
     /// fp32 calibration pass: one prefill over `tokens` recording the
     /// activation ranges for [`super::qmamba::QuantizedMambaModel`].
+    /// SSM-input samples go into per-layer seeded reservoirs, so
+    /// calibration memory is bounded regardless of stream length.
     pub fn calibrate(&self, tokens: &[u16]) -> CalibRecord {
         let mut rec = CalibRecord {
-            layers: vec![LayerCalib::default(); self.tier.n_layer],
+            layers: (0..self.tier.n_layer)
+                .map(|li| LayerCalib {
+                    x_ssm: Reservoir::new(X_CALIB_SAMPLES, 0xCA11B ^ li as u64),
+                    ..Default::default()
+                })
+                .collect(),
             head_in_amax: 0.0,
         };
         let mut state = MambaState::new(&self.tier, 1);
@@ -147,6 +465,7 @@ impl MambaModel {
     ) -> Vec<f32> {
         assert_eq!(state.b, 1, "prefill is single-sequence; step() handles batched decode");
         assert!(!tokens.is_empty(), "prefill needs at least one token");
+        assert!(!state.is_quantized_conv(), "fp32 prefill needs an f32 conv state");
         state.reset();
         let t = &self.tier;
         let (d, di, n, r, w, tl) =
@@ -202,7 +521,7 @@ impl MambaModel {
                 let lc = &mut rec.layers[li];
                 lc.x_in_amax = lc.x_in_amax.max(quant::amax(&x_in));
                 lc.conv_in_amax = lc.conv_in_amax.max(quant::amax(&x));
-                lc.x_ssm_vals.extend_from_slice(&xs);
+                lc.x_ssm.extend_from_slice(&xs);
                 lc.dt_low_amax = lc.dt_low_amax.max(quant::amax(&dt_low));
                 lc.b_amax = lc.b_amax.max(quant::amax(&bmat));
                 lc.c_amax = lc.c_amax.max(quant::amax(&cmat));
@@ -228,50 +547,87 @@ impl StepModel for MambaModel {
         &self.tier
     }
 
-    fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
-        self.prefill_impl(tokens, state, None)
+    fn prefill_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        _scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        *logits = self.prefill_impl(tokens, state, None);
     }
 
-    fn step(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
+    fn step_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
         let t = &self.tier;
         let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
         let b = state.b;
         assert_eq!(tokens.len(), b, "one input token per state lane");
-        let mut resid = vec![0.0f32; b * d];
+        assert!(!state.is_quantized_conv(), "fp32 step needs an f32 conv state");
+        scratch.prep(b, t);
+        let nt = scratch.threads.max(1).min(b);
+        let cpl = (w - 1) * di;
+        let spl = di * n;
+        let StepScratch {
+            resid, x_in, xz, x, z, act, bcdt, dt_low, bmat, cmat, dt, gated, out, fin, ..
+        } = scratch;
         for (bi, &tok) in tokens.iter().enumerate() {
             resid[bi * d..(bi + 1) * d]
                 .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
         }
-        let mut x_in = vec![0.0f32; b * d];
-        let mut xz = vec![0.0f32; b * 2 * di];
-        let mut bcdt = vec![0.0f32; b * (r + 2 * n)];
-        let mut out = vec![0.0f32; b * d];
         for (li, layer) in self.layers.iter().enumerate() {
-            rmsnorm(&resid, &layer.norm, d, 1e-5, &mut x_in);
-            matmul(&x_in, &layer.in_proj, b, d, 2 * di, &mut xz);
-            let x = take_cols(&xz, b, 2 * di, 0, di);
-            let z = take_cols(&xz, b, 2 * di, di, 2 * di);
+            rmsnorm(resid, &layer.norm, d, 1e-5, x_in);
+            matmul(x_in, &layer.in_proj, b, d, 2 * di, xz);
+            take_cols_into(xz, b, 2 * di, 0, di, x);
+            take_cols_into(xz, b, 2 * di, di, 2 * di, z);
             let gx = &self.g_x[li * di..(li + 1) * di];
-            let mut xs = vec![0.0f32; b * di];
-            for bi in 0..b {
-                causal_conv_silu(
-                    &x[bi * di..(bi + 1) * di],
-                    Some(state.conv_lane(li, bi)),
-                    &layer.conv_w,
-                    &layer.conv_b,
-                    gx,
-                    1,
-                    di,
-                    w,
-                    &mut xs[bi * di..(bi + 1) * di],
-                );
+            let layer_conv = state.conv_layer_mut(li);
+            if nt > 1 && cpl > 0 {
+                let xr: &[f32] = &x[..];
+                let (conv_w, conv_b) = (&layer.conv_w, &layer.conv_b);
+                par_lane_chunks(nt, b, &mut act[..], di, layer_conv, cpl, |lane0, act_c, hist_c| {
+                    for (l, (a_l, h_l)) in
+                        act_c.chunks_mut(di).zip(hist_c.chunks_mut(cpl)).enumerate()
+                    {
+                        let bi = lane0 + l;
+                        causal_conv_silu(
+                            &xr[bi * di..(bi + 1) * di],
+                            Some(h_l),
+                            conv_w,
+                            conv_b,
+                            gx,
+                            1,
+                            di,
+                            w,
+                            a_l,
+                        );
+                    }
+                });
+            } else {
+                for bi in 0..b {
+                    causal_conv_silu(
+                        &x[bi * di..(bi + 1) * di],
+                        Some(&mut layer_conv[bi * cpl..(bi + 1) * cpl]),
+                        &layer.conv_w,
+                        &layer.conv_b,
+                        gx,
+                        1,
+                        di,
+                        w,
+                        &mut act[bi * di..(bi + 1) * di],
+                    );
+                }
             }
-            matmul(&xs, &layer.x_proj, b, di, r + 2 * n, &mut bcdt);
-            let dt_low = take_cols(&bcdt, b, r + 2 * n, 0, r);
-            let bmat = take_cols(&bcdt, b, r + 2 * n, r, r + n);
-            let cmat = take_cols(&bcdt, b, r + 2 * n, r + n, r + 2 * n);
-            let mut dt = vec![0.0f32; b * di];
-            matmul(&dt_low, &layer.dt_proj, b, r, di, &mut dt);
+            matmul(act, &layer.x_proj, b, di, r + 2 * n, bcdt);
+            take_cols_into(bcdt, b, r + 2 * n, 0, r, dt_low);
+            take_cols_into(bcdt, b, r + 2 * n, r, r + n, bmat);
+            take_cols_into(bcdt, b, r + 2 * n, r + n, r + 2 * n, cmat);
+            matmul(dt_low, &layer.dt_proj, b, r, di, dt);
             for bi in 0..b {
                 for ch in 0..di {
                     dt[bi * di + ch] = softplus(dt[bi * di + ch] + layer.dt_bias[ch]);
@@ -279,27 +635,54 @@ impl StepModel for MambaModel {
             }
             let p = ScanParams { a: &layer.a, d: &layer.d, d_inner: di, n_state: n };
             let gy = &self.g_y[li * di..(li + 1) * di];
-            let mut gated = vec![0.0f32; b * di];
-            for bi in 0..b {
-                let y = selective_scan(
-                    &p,
-                    &xs[bi * di..(bi + 1) * di],
-                    &dt[bi * di..(bi + 1) * di],
-                    &bmat[bi * n..(bi + 1) * n],
-                    &cmat[bi * n..(bi + 1) * n],
-                    state.ssm_lane(li, bi),
-                );
-                for ch in 0..di {
-                    gated[bi * di + ch] = y[ch] * silu(z[bi * di + ch]) * gy[ch];
+            let layer_ssm = state.ssm_layer_mut(li);
+            if nt > 1 {
+                let (xs_r, dt_r, b_r, c_r, z_r) =
+                    (&act[..], &dt[..], &bmat[..], &cmat[..], &z[..]);
+                let pp = &p;
+                par_lane_chunks(nt, b, &mut gated[..], di, layer_ssm, spl, |lane0, gated_c, ssm_c| {
+                    for (l, (y, h)) in
+                        gated_c.chunks_mut(di).zip(ssm_c.chunks_mut(spl)).enumerate()
+                    {
+                        let bi = lane0 + l;
+                        selective_scan_into(
+                            pp,
+                            &xs_r[bi * di..(bi + 1) * di],
+                            &dt_r[bi * di..(bi + 1) * di],
+                            &b_r[bi * n..(bi + 1) * n],
+                            &c_r[bi * n..(bi + 1) * n],
+                            h,
+                            y,
+                        );
+                        for ch in 0..di {
+                            y[ch] = y[ch] * silu(z_r[bi * di + ch]) * gy[ch];
+                        }
+                    }
+                });
+            } else {
+                for bi in 0..b {
+                    let y = &mut gated[bi * di..(bi + 1) * di];
+                    selective_scan_into(
+                        &p,
+                        &act[bi * di..(bi + 1) * di],
+                        &dt[bi * di..(bi + 1) * di],
+                        &bmat[bi * n..(bi + 1) * n],
+                        &cmat[bi * n..(bi + 1) * n],
+                        &mut layer_ssm[bi * spl..(bi + 1) * spl],
+                        y,
+                    );
+                    for ch in 0..di {
+                        y[ch] = y[ch] * silu(z[bi * di + ch]) * gy[ch];
+                    }
                 }
             }
-            matmul(&gated, &layer.out_proj, b, di, d, &mut out);
+            matmul(gated, &layer.out_proj, b, di, d, out);
             for i in 0..resid.len() {
                 resid[i] += out[i];
             }
         }
-        let fin = self.final_hidden(&resid, b);
-        self.tied_logits(&fin, b)
+        rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
+        self.tied_logits_into(fin, b, logits);
     }
 }
 
@@ -331,6 +714,30 @@ mod tests {
         let (c2, s2) = st2.into_raw();
         assert_eq!(c2, st.conv);
         assert_eq!(s2, st.ssm);
+    }
+
+    #[test]
+    fn quantized_state_layout_roundtrips_raw() {
+        let tier = tiny_tier();
+        let mut st = MambaState::new_quantized(&tier, 2);
+        assert!(st.conv.is_empty());
+        st.conv_q.iter_mut().enumerate().for_each(|(i, v)| *v = (i % 127) as i8);
+        st.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        let (cq, s) = (st.conv_q.clone(), st.ssm.clone());
+        let st2 = MambaState::from_raw_q(&tier, 2, cq, s);
+        assert!(st2.is_quantized_conv());
+        let (cq2, s2) = st2.into_raw_q();
+        assert_eq!(cq2, st.conv_q);
+        assert_eq!(s2, st.ssm);
+    }
+
+    #[test]
+    fn quantized_state_shrinks_conv_bytes() {
+        let tier = tiny_tier();
+        let f = MambaState::new(&tier, 1);
+        let q = MambaState::new_quantized(&tier, 1);
+        let cpl = (tier.d_conv - 1) * tier.d_inner;
+        assert_eq!(f.bytes_per_lane() - q.bytes_per_lane(), tier.n_layer * 3 * cpl);
     }
 
     #[test]
@@ -380,7 +787,9 @@ mod tests {
         for lc in &rec.layers {
             assert!(lc.x_in_amax > 0.0);
             assert!(lc.conv_in_amax > 0.0);
-            assert_eq!(lc.x_ssm_vals.len(), tokens.len() * tier.d_inner);
+            // under the reservoir cap the sample IS the full stream
+            assert_eq!(lc.x_ssm.seen(), (tokens.len() * tier.d_inner) as u64);
+            assert_eq!(lc.x_ssm.values().len(), tokens.len() * tier.d_inner);
             assert!(lc.b_amax > 0.0 && lc.c_amax > 0.0 && lc.dt_low_amax > 0.0);
             assert!(lc.gated_h_amax > 0.0);
         }

@@ -125,7 +125,7 @@ fn native_engine_serves_fp32_and_w8a8_without_artifacts() {
     let mut r = Pcg32::new(99);
     let calib: Vec<u16> = (0..256).map(|_| r.below(tier.vocab as u32) as u16).collect();
     let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
-    let models: Vec<Box<dyn StepModel + Send>> = vec![Box::new(model), Box::new(qmodel)];
+    let models: Vec<Box<dyn StepModel + Send + Sync>> = vec![Box::new(model), Box::new(qmodel)];
     for m in models {
         let mut eng = NativeEngine::new(m, NativeEngineConfig::default());
         for i in 0..12u64 {
