@@ -11,10 +11,13 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
+//! `--kernels scalar|avx2|neon` forces the int8 kernel dispatch (also
+//! settable process-wide via `QUAMBA_KERNELS`); tokens are
+//! bit-identical across backends, only latency moves.
 
 use anyhow::Result;
 use quamba::bench_support::Workload;
@@ -22,6 +25,7 @@ use quamba::config::Manifest;
 use quamba::coordinator::server::ServerHandle;
 use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
 use quamba::data;
+use quamba::quant::{KernelBackend, Kernels};
 use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
 use quamba::util::cli::Args;
 use quamba::util::rng::Pcg32;
@@ -132,6 +136,15 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
     let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
 
     let threads = args.get_usize("threads", 1);
+    let kernel_backend = args.get("kernels").filter(|v| *v != "auto").map(|v| {
+        KernelBackend::parse(v)
+            .unwrap_or_else(|| panic!("--kernels {v}: unknown backend (auto|scalar|avx2|neon)"))
+    });
+    let kers = match kernel_backend {
+        Some(b) => Kernels::for_backend(b),
+        None => Kernels::auto(),
+    };
+    println!("int8 kernel dispatch: {} (override with --kernels / QUAMBA_KERNELS)", kers.label());
     let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
     for (name, m) in backends {
@@ -141,7 +154,7 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         );
         let server = ServerHandle::spawn_native(
             m,
-            NativeEngineConfig { threads, ..Default::default() },
+            NativeEngineConfig { threads, kernel_backend, ..Default::default() },
         )?;
         let (done, wall, report) = drive(server, &wl, max_new);
         println!("completed {done}/{n} in {wall:.2}s");

@@ -19,7 +19,11 @@
 //! * `threads > 1` parallelizes decode across groups (one scoped
 //!   worker per round) or, for a single group, across lanes inside the
 //!   step. Tokens are **bit-identical** to `threads = 1`: lane math is
-//!   independent and sampling stays in deterministic group order.
+//!   independent and sampling stays in deterministic group order;
+//! * the int8 hot paths run on the [`Kernels`] SIMD dispatch
+//!   (`NativeEngineConfig::kernel_backend`, default auto-detected /
+//!   `QUAMBA_KERNELS`) — also bit-identical across backends, so
+//!   forcing `scalar` vs `avx2` only moves latency, never tokens.
 
 use std::collections::VecDeque;
 
@@ -32,6 +36,7 @@ use crate::coordinator::request::{LiveRequest, Request, Response};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::state::SsmStatePool;
 use crate::data::BOS;
+use crate::quant::{KernelBackend, Kernels};
 use crate::ssm::{MambaState, StepModel, StepScratch};
 
 #[derive(Debug, Clone)]
@@ -54,6 +59,13 @@ pub struct NativeEngineConfig {
     pub threads: usize,
     /// token sampler seed (determinism across engines is seed-keyed)
     pub sampler_seed: u64,
+    /// int8 kernel backend for the model hot paths. `None` (default)
+    /// auto-selects once per process (`QUAMBA_KERNELS` env override,
+    /// else runtime detection); `Some(b)` forces backend `b` for this
+    /// engine — panics at construction if the machine cannot run it.
+    /// Every backend yields **bit-identical** tokens (tested), so this
+    /// knob only changes wall-clock.
+    pub kernel_backend: Option<KernelBackend>,
 }
 
 impl Default for NativeEngineConfig {
@@ -64,6 +76,7 @@ impl Default for NativeEngineConfig {
             decode_buckets: vec![1, 2, 4, 8],
             threads: 1,
             sampler_seed: DEFAULT_SAMPLER_SEED,
+            kernel_backend: None,
         }
     }
 }
@@ -76,8 +89,8 @@ struct RoundScratch {
 }
 
 impl RoundScratch {
-    fn new() -> RoundScratch {
-        RoundScratch { scratch: StepScratch::new(1), logits: Vec::new() }
+    fn new(kernels: Kernels) -> RoundScratch {
+        RoundScratch { scratch: StepScratch::with_kernels(1, kernels), logits: Vec::new() }
     }
 }
 
@@ -104,11 +117,16 @@ pub struct NativeEngine {
     pub metrics: Metrics,
     vocab: usize,
     scratches: Vec<RoundScratch>,
+    kernels: Kernels,
 }
 
 impl NativeEngine {
     pub fn new(model: Box<dyn StepModel + Send + Sync>, cfg: NativeEngineConfig) -> NativeEngine {
         assert!(!cfg.decode_buckets.is_empty(), "need at least one decode bucket");
+        let kernels = match cfg.kernel_backend {
+            Some(b) => Kernels::for_backend(b),
+            None => Kernels::auto(),
+        };
         let t = model.tier();
         let mut pool =
             SsmStatePool::with_dims(t.n_layer, t.d_inner, t.d_conv, t.d_state, cfg.capacity);
@@ -124,7 +142,8 @@ impl NativeEngine {
             sampler: Sampler::new(cfg.sampler_seed),
             metrics: Metrics::new(),
             vocab,
-            scratches: vec![RoundScratch::new()],
+            scratches: vec![RoundScratch::new(kernels)],
+            kernels,
             model,
             cfg,
         }
@@ -132,6 +151,12 @@ impl NativeEngine {
 
     pub fn decode_buckets(&self) -> &[usize] {
         &self.cfg.decode_buckets
+    }
+
+    /// The int8 kernel dispatch this engine executes with (for logging
+    /// / bench labeling).
+    pub fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -220,7 +245,7 @@ impl NativeEngine {
         // the prompt length T, and parking them in the engine's round
         // workspaces would pin O(T·vocab) heap for the whole session
         // (decode only ever needs B rows)
-        let mut scratch = StepScratch::new(1);
+        let mut scratch = StepScratch::with_kernels(1, self.kernels);
         let mut logits = Vec::new();
         self.model.prefill_into(&prompt, &mut state, &mut scratch, &mut logits);
         self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
@@ -266,7 +291,7 @@ impl NativeEngine {
             rounds.push(RoundIo { slots, b, toks, state, step_ms: 0.0 });
         }
         while self.scratches.len() < rounds.len() {
-            self.scratches.push(RoundScratch::new());
+            self.scratches.push(RoundScratch::new(self.kernels));
         }
         // execute phase
         let model = &*self.model;
@@ -485,6 +510,29 @@ mod tests {
                 "threaded decode diverged from sequential (quantized={quantized})"
             );
         }
+    }
+
+    #[test]
+    fn forced_kernel_backend_serves_identical_tokens() {
+        // ISSUE 3 satellite acceptance: a forced scalar backend, every
+        // detected SIMD backend, and auto selection produce
+        // bit-identical token streams through the full engine
+        // (W8A8 prefill + batched decode + temperature sampling)
+        let scalar_cfg = NativeEngineConfig {
+            kernel_backend: Some(KernelBackend::Scalar),
+            ..Default::default()
+        };
+        let base = run_workload(scalar_cfg, true);
+        for backend in Kernels::available() {
+            let cfg = NativeEngineConfig {
+                kernel_backend: Some(backend),
+                ..Default::default()
+            };
+            let got = run_workload(cfg, true);
+            assert_eq!(base, got, "kernel backend {} changed served tokens", backend.label());
+        }
+        let auto = run_workload(NativeEngineConfig::default(), true);
+        assert_eq!(base, auto, "auto kernel selection diverged from forced scalar");
     }
 
     #[test]

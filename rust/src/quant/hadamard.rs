@@ -68,45 +68,100 @@ pub fn base_matrix(m: usize) -> Vec<Vec<f32>> {
     }
 }
 
+/// Largest Paley base the constructions produce (m ∈ {1, 12, 20}) —
+/// bounds [`FwhtPlan::apply_rows`]'s stack scratch.
+pub const MAX_BASE: usize = 20;
+
+/// A prepared transform for one size n = 2^p · m: the m×m base matrix
+/// is built **once** (flattened, row-major) so every
+/// [`FwhtPlan::apply_rows`] call is allocation-free — the per-block
+/// temp lives on the stack ([`MAX_BASE`] floats). This is what keeps
+/// the W8A8 decode step zero-alloc for Paley-base `d_inner`
+/// (12·2^k / 20·2^k tiers), not just powers of two; each
+/// `ssm::qmamba` layer caches one plan for its `d_inner`.
+#[derive(Debug, Clone)]
+pub struct FwhtPlan {
+    n: usize,
+    m: usize,
+    /// flattened m×m base (empty when m == 1)
+    base: Vec<f32>,
+}
+
+impl FwhtPlan {
+    /// Prepare the transform for size `n`. Panics if n has no
+    /// Hadamard construction (see [`decompose`]).
+    pub fn new(n: usize) -> FwhtPlan {
+        let (_, m) =
+            decompose(n).unwrap_or_else(|| panic!("no Hadamard factorization for n={n}"));
+        let base = if m > 1 {
+            let hm = base_matrix(m);
+            let mut flat = vec![0.0f32; m * m];
+            for (i, row) in hm.iter().enumerate() {
+                flat[i * m..(i + 1) * m].copy_from_slice(row);
+            }
+            flat
+        } else {
+            Vec::new()
+        };
+        FwhtPlan { n, m, base }
+    }
+
+    /// Transform size this plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// In-place FWHT over the last axis of a row-major (rows × n)
+    /// buffer: y = H_n x (unnormalized), **zero heap allocations**.
+    /// Bit-identical to [`fwht_rows`] (same base contraction order,
+    /// same butterfly schedule).
+    pub fn apply_rows(&self, x: &mut [f32]) {
+        let (n, m) = (self.n, self.m);
+        assert_eq!(x.len() % n, 0, "buffer must be rows × n");
+        let rows = x.len() / n;
+        // base m×m contraction first (on contiguous m-blocks)
+        if m > 1 {
+            let mut tmp = [0.0f32; MAX_BASE];
+            let tmp = &mut tmp[..m];
+            for r in 0..rows {
+                let row = &mut x[r * n..(r + 1) * n];
+                for blk in row.chunks_exact_mut(m) {
+                    for (i, t) in tmp.iter_mut().enumerate() {
+                        let hrow = &self.base[i * m..(i + 1) * m];
+                        *t = hrow.iter().zip(blk.iter()).map(|(h, b)| h * b).sum();
+                    }
+                    blk.copy_from_slice(tmp);
+                }
+            }
+        }
+        // 2^p butterfly stages over stride = h*m blocks
+        let mut h = m;
+        while h < n {
+            for r in 0..rows {
+                let row = &mut x[r * n..(r + 1) * n];
+                let mut start = 0;
+                while start < n {
+                    for i in start..start + h {
+                        let a = row[i];
+                        let b = row[i + h];
+                        row[i] = a + b;
+                        row[i + h] = a - b;
+                    }
+                    start += 2 * h;
+                }
+            }
+            h *= 2;
+        }
+    }
+}
+
 /// In-place FWHT over the last axis of a row-major (rows × n) buffer.
 /// Computes y = H_n x (unnormalized). Panics if n has no construction.
+/// Convenience wrapper that builds a [`FwhtPlan`] per call — hot paths
+/// (the W8A8 step) hold a plan instead so the base matrix is not
+/// rebuilt every invocation.
 pub fn fwht_rows(x: &mut [f32], n: usize) {
-    assert_eq!(x.len() % n, 0);
-    let (p, m) = decompose(n).unwrap_or_else(|| panic!("no Hadamard factorization for n={n}"));
-    let rows = x.len() / n;
-    // base m×m contraction first (on contiguous m-blocks)
-    if m > 1 {
-        let hm = base_matrix(m);
-        let mut tmp = vec![0.0f32; m];
-        for r in 0..rows {
-            let row = &mut x[r * n..(r + 1) * n];
-            for blk in row.chunks_exact_mut(m) {
-                for (i, t) in tmp.iter_mut().enumerate() {
-                    *t = (0..m).map(|j| hm[i][j] * blk[j]).sum();
-                }
-                blk.copy_from_slice(&tmp);
-            }
-        }
-    }
-    // 2^p butterfly stages over stride = h*m blocks
-    let mut h = m;
-    while h < n {
-        for r in 0..rows {
-            let row = &mut x[r * n..(r + 1) * n];
-            let mut start = 0;
-            while start < n {
-                for i in start..start + h {
-                    let a = row[i];
-                    let b = row[i + h];
-                    row[i] = a + b;
-                    row[i + h] = a - b;
-                }
-                start += 2 * h;
-            }
-        }
-        h *= 2;
-    }
-    let _ = p;
+    FwhtPlan::new(n).apply_rows(x);
 }
 
 /// Convenience: transform a single vector, returning a new Vec.
@@ -230,6 +285,27 @@ mod tests {
             err_rot * 4.0 < err_direct,
             "rotated err {err_rot} should be ≪ direct err {err_direct}"
         );
+    }
+
+    #[test]
+    fn plan_matches_per_call_transform_bit_exactly() {
+        // the cached-base plan must be indistinguishable from the
+        // build-per-call path, including multi-row buffers
+        let mut rng = Pcg32::new(21);
+        for n in [8usize, 48, 96, 128, 160, 192, 320] {
+            let plan = FwhtPlan::new(n);
+            assert_eq!(plan.n(), n);
+            for rows in [1usize, 3] {
+                let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+                let mut a = x.clone();
+                let mut b = x;
+                fwht_rows(&mut a, n);
+                plan.apply_rows(&mut b);
+                for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "n={n} rows={rows} i={i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,709 @@
+//! Explicit-SIMD int8 kernel suite with one-time runtime dispatch —
+//! the paper's "8-bit ... benefits from hardware acceleration" claim
+//! (§1, Table 1) made concrete on CPU: every int8 hot path executes
+//! `i8 × i8 → i16 → i32` widening multiply-adds through one [`Kernels`]
+//! dispatch struct instead of hoping the auto-vectorizer finds them.
+//!
+//! Backends ([`KernelBackend`]):
+//!
+//! * **`Scalar`** — portable Rust, structured for auto-vectorization
+//!   (the PR-2 blocked kernel). Always available; the other backends
+//!   are property-tested bit-identical to it (`tests/kernel_parity.rs`).
+//! * **`Avx2`** — x86-64 AVX2: the `pmaddwd`-style path. Weights are
+//!   sign-extended `i8 → i16` and interleaved in K-pairs so one
+//!   `_mm256_madd_epi16` performs 16 widening multiplies + 8 pairwise
+//!   i32 adds; a 4-row register tile reuses each extended weight block
+//!   across four activation rows (SSSE3 `maddubs` needs an unsigned
+//!   operand + correction term; `pmaddwd` on extended i16 is the same
+//!   throughput idea without the fixup).
+//! * **`Neon`** — aarch64: `vmull_s8` widening multiplies folded into
+//!   i32 accumulators with `vaddw_s16`.
+//!
+//! Selection happens **once** per process ([`Kernels::auto`], a
+//! `OnceLock`): `is_x86_feature_detected!("avx2")` /
+//! `cfg(target_arch = "aarch64")`, overridable with the
+//! `QUAMBA_KERNELS` env var (`auto` | `scalar` | `avx2` | `neon`) for
+//! testing and benchmarking. Forced construction for tests goes
+//! through [`Kernels::for_backend`]; [`Kernels::available`] lists every
+//! backend runnable on this machine so parity suites can sweep them.
+//!
+//! Exactness contract: all three primitives are **bit-identical**
+//! across backends —
+//!
+//! * [`Kernels::gemm_rows`] and [`Kernels::mac_i8`] are exact integer
+//!   arithmetic (an i8·i8 product fits i16, a K-sum of them fits i32),
+//!   so any accumulation grouping matches the naive oracle bit-for-bit;
+//! * [`Kernels::dequant_i8`] is element-wise (`q as f32 * s`, one IEEE
+//!   multiply per element), so vector lanes round exactly like the
+//!   scalar loop.
+//!
+//! That contract is what lets the W8A8 serving path switch backends
+//! without changing a single sampled token (asserted per backend in
+//! `tests/kernel_parity.rs` and the engine-level
+//! `forced_kernel_backend_serves_identical_tokens` test in
+//! [`crate::coordinator::native`]).
+
+use std::sync::OnceLock;
+
+/// Column-block width of the packed weight layout ([`crate::quant::qlinear::PackedWeightI8`]):
+/// 16 i8 weights = one 128-bit lane load; 16 i32 accumulators fit in
+/// two 256-bit registers (or four 128-bit ones).
+pub const GEMM_NB: usize = 16;
+
+/// Register-tile height of the blocked GEMM: rows of activations
+/// processed together so each widened weight block is reused `MR`
+/// times from registers.
+pub const GEMM_MR: usize = 4;
+
+/// One int8 execution backend. `Scalar` exists everywhere; the SIMD
+/// variants are constructible only where the hardware supports them
+/// (checked at runtime, see [`KernelBackend::is_available`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable Rust loops (auto-vectorized at whatever ISA the build
+    /// targets). The bit-exactness oracle for the SIMD paths.
+    Scalar,
+    /// x86-64 AVX2 widening multiply-add (`_mm256_madd_epi16`).
+    Avx2,
+    /// aarch64 NEON widening multiply-add (`vmull_s8` + `vaddw_s16`).
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+fn neon_available() -> bool {
+    // NEON is a mandatory feature of every aarch64 target rustc ships
+    cfg!(target_arch = "aarch64")
+}
+
+impl KernelBackend {
+    /// Stable lowercase name (the `QUAMBA_KERNELS` vocabulary).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`Self::label`] string (used by `QUAMBA_KERNELS` and the
+    /// serving CLI). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s {
+            "scalar" => Some(KernelBackend::Scalar),
+            "avx2" => Some(KernelBackend::Avx2),
+            "neon" => Some(KernelBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this backend execute on the current machine?
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            KernelBackend::Avx2 => avx2_available(),
+            KernelBackend::Neon => neon_available(),
+        }
+    }
+}
+
+/// The dispatch handle threaded through every int8 hot path: the
+/// blocked GEMM ([`Self::gemm_rows`]), the fused conv's element-wise
+/// MAC ([`Self::mac_i8`]), and the scan's code dequantization
+/// ([`Self::dequant_i8`]). `Copy` so it rides along in
+/// [`crate::ssm::StepScratch`] and closures without lifetime plumbing;
+/// dispatch is a single enum match per kernel call (amortized over a
+/// whole block/row of work).
+#[derive(Debug, Clone, Copy)]
+pub struct Kernels {
+    backend: KernelBackend,
+}
+
+impl Kernels {
+    /// The portable baseline (always works; the parity oracle).
+    pub fn scalar() -> Kernels {
+        Kernels { backend: KernelBackend::Scalar }
+    }
+
+    /// A specific backend, `None` if this machine cannot run it.
+    pub fn try_new(backend: KernelBackend) -> Option<Kernels> {
+        if backend.is_available() {
+            Some(Kernels { backend })
+        } else {
+            None
+        }
+    }
+
+    /// A specific backend; panics (with the available set) if the
+    /// machine cannot run it — forcing a path that would silently fall
+    /// back elsewhere would invalidate parity tests and benchmarks.
+    pub fn for_backend(backend: KernelBackend) -> Kernels {
+        Self::try_new(backend).unwrap_or_else(|| {
+            panic!(
+                "kernel backend '{}' not available on this machine (available: {})",
+                backend.label(),
+                Self::available().iter().map(|b| b.label()).collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Every backend runnable here, `Scalar` first (parity suites sweep
+    /// this list).
+    pub fn available() -> Vec<KernelBackend> {
+        [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon]
+            .into_iter()
+            .filter(|b| b.is_available())
+            .collect()
+    }
+
+    /// Best backend the hardware offers (no env override).
+    pub fn detect() -> Kernels {
+        if avx2_available() {
+            Kernels { backend: KernelBackend::Avx2 }
+        } else if neon_available() {
+            Kernels { backend: KernelBackend::Neon }
+        } else {
+            Kernels::scalar()
+        }
+    }
+
+    /// The process-wide selection, made exactly once: `QUAMBA_KERNELS`
+    /// (`auto`/`scalar`/`avx2`/`neon`) if set, else [`Self::detect`].
+    /// An unknown or unavailable forced value panics loudly rather than
+    /// benchmarking the wrong path.
+    pub fn auto() -> Kernels {
+        static SELECTED: OnceLock<Kernels> = OnceLock::new();
+        *SELECTED.get_or_init(|| match std::env::var("QUAMBA_KERNELS") {
+            Ok(v) if v.is_empty() || v == "auto" => Self::detect(),
+            Ok(v) => {
+                let b = KernelBackend::parse(&v).unwrap_or_else(|| {
+                    panic!("QUAMBA_KERNELS={v}: unknown backend (auto|scalar|avx2|neon)")
+                });
+                Self::for_backend(b)
+            }
+            Err(_) => Self::detect(),
+        })
+    }
+
+    pub fn backend(self) -> KernelBackend {
+        self.backend
+    }
+
+    /// Stable name of the selected backend (logging / bench JSON).
+    pub fn label(self) -> &'static str {
+        self.backend.label()
+    }
+
+    /// Blocked-GEMM register tile: `acc` (rows × [`GEMM_NB`], fully
+    /// overwritten) = `x` (rows × K, row stride `k`) · `blk` (K-major
+    /// [`GEMM_NB`]-wide weight block). `rows` ≤ [`GEMM_MR`]. All
+    /// accumulation is exact i32, so every backend is bit-identical to
+    /// the naive triple loop.
+    pub fn gemm_rows(self, x: &[i8], k: usize, rows: usize, blk: &[i8], acc: &mut [i32]) {
+        assert!(rows >= 1 && rows <= GEMM_MR, "rows {rows} outside 1..={GEMM_MR}");
+        assert!(x.len() >= rows * k, "x tile too short");
+        assert!(blk.len() >= k * GEMM_NB, "weight block too short");
+        assert!(acc.len() >= rows * GEMM_NB, "acc tile too short");
+        match self.backend {
+            KernelBackend::Scalar => scalar::gemm_rows(x, k, rows, blk, acc),
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Avx2 is only constructible when runtime
+                // detection succeeded (try_new/for_backend/detect).
+                unsafe {
+                    if rows == GEMM_MR {
+                        avx2::gemm_x4(x, k, blk, acc);
+                    } else {
+                        for r in 0..rows {
+                            avx2::gemm_x1(&x[r * k..], k, blk, &mut acc[r * GEMM_NB..]);
+                        }
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                unreachable!("AVX2 backend constructed on non-x86_64");
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: Neon is only constructible on aarch64, where
+                // NEON is a mandatory target feature.
+                unsafe {
+                    for r in 0..rows {
+                        neon::gemm_x1(&x[r * k..], k, blk, &mut acc[r * GEMM_NB..]);
+                    }
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                unreachable!("NEON backend constructed on non-aarch64");
+            }
+        }
+    }
+
+    /// Element-wise widening multiply-accumulate:
+    /// `acc[i] += a[i] as i32 * b[i] as i32` — the fused integer conv's
+    /// per-tap channel sweep. Exact integers, bit-identical everywhere.
+    pub fn mac_i8(self, a: &[i8], b: &[i8], acc: &mut [i32]) {
+        assert_eq!(a.len(), acc.len(), "mac_i8 operand length mismatch");
+        assert_eq!(b.len(), acc.len(), "mac_i8 operand length mismatch");
+        match self.backend {
+            KernelBackend::Scalar => scalar::mac_i8(a, b, acc),
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: see gemm_rows — backend implies detection.
+                unsafe {
+                    avx2::mac_i8(a, b, acc);
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                unreachable!("AVX2 backend constructed on non-x86_64");
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: see gemm_rows.
+                unsafe {
+                    neon::mac_i8(a, b, acc);
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                unreachable!("NEON backend constructed on non-aarch64");
+            }
+        }
+    }
+
+    /// Scaled dequantization: `out[i] = q[i] as f32 * s` — the int8
+    /// scan's per-step B/C row expansion. Per-element IEEE multiply,
+    /// so SIMD lanes round exactly like the scalar loop.
+    pub fn dequant_i8(self, q: &[i8], s: f32, out: &mut [f32]) {
+        assert_eq!(q.len(), out.len(), "dequant_i8 length mismatch");
+        match self.backend {
+            KernelBackend::Scalar => scalar::dequant_i8(q, s, out),
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: see gemm_rows — backend implies detection.
+                unsafe {
+                    avx2::dequant_i8(q, s, out);
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                unreachable!("AVX2 backend constructed on non-x86_64");
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: see gemm_rows.
+                unsafe {
+                    neon::dequant_i8(q, s, out);
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                unreachable!("NEON backend constructed on non-aarch64");
+            }
+        }
+    }
+}
+
+/// Portable baseline: plain loops shaped so the compiler's
+/// auto-vectorizer can work at the build's target ISA. This is the
+/// semantics oracle — integer ops are exact, so the SIMD modules must
+/// match it bit-for-bit.
+mod scalar {
+    use super::{GEMM_MR, GEMM_NB};
+
+    pub fn gemm_rows(x: &[i8], k: usize, rows: usize, blk: &[i8], acc: &mut [i32]) {
+        debug_assert!(rows <= GEMM_MR);
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let mut tile = [0i32; GEMM_NB];
+            // K unrolled ×4 (i32 products of i8 values are exact, so
+            // any grouping is bit-identical to the naive oracle)
+            let kt = k & !3;
+            let mut p = 0;
+            while p < kt {
+                let x0 = xrow[p] as i32;
+                let x1 = xrow[p + 1] as i32;
+                let x2 = xrow[p + 2] as i32;
+                let x3 = xrow[p + 3] as i32;
+                let w0 = &blk[p * GEMM_NB..p * GEMM_NB + GEMM_NB];
+                let w1 = &blk[(p + 1) * GEMM_NB..(p + 1) * GEMM_NB + GEMM_NB];
+                let w2 = &blk[(p + 2) * GEMM_NB..(p + 2) * GEMM_NB + GEMM_NB];
+                let w3 = &blk[(p + 3) * GEMM_NB..(p + 3) * GEMM_NB + GEMM_NB];
+                for jj in 0..GEMM_NB {
+                    tile[jj] += x0 * w0[jj] as i32
+                        + x1 * w1[jj] as i32
+                        + x2 * w2[jj] as i32
+                        + x3 * w3[jj] as i32;
+                }
+                p += 4;
+            }
+            while p < k {
+                let xv = xrow[p] as i32;
+                let wrow = &blk[p * GEMM_NB..p * GEMM_NB + GEMM_NB];
+                for jj in 0..GEMM_NB {
+                    tile[jj] += xv * wrow[jj] as i32;
+                }
+                p += 1;
+            }
+            acc[r * GEMM_NB..r * GEMM_NB + GEMM_NB].copy_from_slice(&tile);
+        }
+    }
+
+    pub fn mac_i8(a: &[i8], b: &[i8], acc: &mut [i32]) {
+        for ((av, bv), c) in a.iter().zip(b).zip(acc.iter_mut()) {
+            *c += *av as i32 * *bv as i32;
+        }
+    }
+
+    pub fn dequant_i8(q: &[i8], s: f32, out: &mut [f32]) {
+        for (o, &v) in out.iter_mut().zip(q) {
+            *o = v as f32 * s;
+        }
+    }
+}
+
+/// AVX2: weights are widened `i8 → i16` once per K-pair and reused
+/// across the whole register tile; `_mm256_madd_epi16` then does the
+/// widening multiply + pairwise i32 add in one instruction. Everything
+/// stays exact integer, so outputs are bit-identical to [`scalar`].
+#[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)] // explicit unsafe blocks for newer editions
+mod avx2 {
+    use super::GEMM_NB;
+    use core::arch::x86_64::*;
+
+    /// Two consecutive K activations packed as (lo: x0, hi: x1) i16s in
+    /// one i32 — the `b` operand of `pmaddwd`.
+    #[inline(always)]
+    fn pair(x0: i8, x1: i8) -> i32 {
+        ((x0 as i16 as u16 as u32) | ((x1 as i16 as u16 as u32) << 16)) as i32
+    }
+
+    /// One activation row × one K-major weight block → 16 i32 sums.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available, `x.len() >= k`,
+    /// `blk.len() >= k * 16`, `acc.len() >= 16`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_x1(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut acc_lo = _mm256_setzero_si256();
+            let mut acc_hi = _mm256_setzero_si256();
+            let kt = k & !1;
+            let mut p = 0;
+            while p < kt {
+                let w0 = _mm_loadu_si128(bp.add(p * GEMM_NB) as *const __m128i);
+                let w1 = _mm_loadu_si128(bp.add((p + 1) * GEMM_NB) as *const __m128i);
+                // interleave → (w_p[j], w_{p+1}[j]) i16 pairs per lane
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let xv = _mm256_set1_epi32(pair(x[p], x[p + 1]));
+                acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(wlo, xv));
+                acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(whi, xv));
+                p += 2;
+            }
+            if p < k {
+                // odd K tail: pair the last row with a zero row
+                let w0 = _mm_loadu_si128(bp.add(p * GEMM_NB) as *const __m128i);
+                let z = _mm_setzero_si128();
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, z));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, z));
+                let xv = _mm256_set1_epi32(pair(x[p], 0));
+                acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(wlo, xv));
+                acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(whi, xv));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, acc_lo);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(8) as *mut __m256i, acc_hi);
+        }
+    }
+
+    /// Four activation rows × one weight block: the widened weight
+    /// pair is loaded once and reused by all four rows' accumulators
+    /// (10 live ymm registers: 8 accumulators + 2 weights).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available, `x.len() >= 4 * k` (row
+    /// stride `k`), `blk.len() >= k * 16`, `acc.len() >= 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_x4(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut a0l = _mm256_setzero_si256();
+            let mut a0h = _mm256_setzero_si256();
+            let mut a1l = _mm256_setzero_si256();
+            let mut a1h = _mm256_setzero_si256();
+            let mut a2l = _mm256_setzero_si256();
+            let mut a2h = _mm256_setzero_si256();
+            let mut a3l = _mm256_setzero_si256();
+            let mut a3h = _mm256_setzero_si256();
+            let kt = k & !1;
+            let mut p = 0;
+            while p < kt {
+                let w0 = _mm_loadu_si128(bp.add(p * GEMM_NB) as *const __m128i);
+                let w1 = _mm_loadu_si128(bp.add((p + 1) * GEMM_NB) as *const __m128i);
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let x0 = _mm256_set1_epi32(pair(x[p], x[p + 1]));
+                a0l = _mm256_add_epi32(a0l, _mm256_madd_epi16(wlo, x0));
+                a0h = _mm256_add_epi32(a0h, _mm256_madd_epi16(whi, x0));
+                let x1 = _mm256_set1_epi32(pair(x[k + p], x[k + p + 1]));
+                a1l = _mm256_add_epi32(a1l, _mm256_madd_epi16(wlo, x1));
+                a1h = _mm256_add_epi32(a1h, _mm256_madd_epi16(whi, x1));
+                let x2 = _mm256_set1_epi32(pair(x[2 * k + p], x[2 * k + p + 1]));
+                a2l = _mm256_add_epi32(a2l, _mm256_madd_epi16(wlo, x2));
+                a2h = _mm256_add_epi32(a2h, _mm256_madd_epi16(whi, x2));
+                let x3 = _mm256_set1_epi32(pair(x[3 * k + p], x[3 * k + p + 1]));
+                a3l = _mm256_add_epi32(a3l, _mm256_madd_epi16(wlo, x3));
+                a3h = _mm256_add_epi32(a3h, _mm256_madd_epi16(whi, x3));
+                p += 2;
+            }
+            if p < k {
+                let w0 = _mm_loadu_si128(bp.add(p * GEMM_NB) as *const __m128i);
+                let z = _mm_setzero_si128();
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, z));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, z));
+                let x0 = _mm256_set1_epi32(pair(x[p], 0));
+                a0l = _mm256_add_epi32(a0l, _mm256_madd_epi16(wlo, x0));
+                a0h = _mm256_add_epi32(a0h, _mm256_madd_epi16(whi, x0));
+                let x1 = _mm256_set1_epi32(pair(x[k + p], 0));
+                a1l = _mm256_add_epi32(a1l, _mm256_madd_epi16(wlo, x1));
+                a1h = _mm256_add_epi32(a1h, _mm256_madd_epi16(whi, x1));
+                let x2 = _mm256_set1_epi32(pair(x[2 * k + p], 0));
+                a2l = _mm256_add_epi32(a2l, _mm256_madd_epi16(wlo, x2));
+                a2h = _mm256_add_epi32(a2h, _mm256_madd_epi16(whi, x2));
+                let x3 = _mm256_set1_epi32(pair(x[3 * k + p], 0));
+                a3l = _mm256_add_epi32(a3l, _mm256_madd_epi16(wlo, x3));
+                a3h = _mm256_add_epi32(a3h, _mm256_madd_epi16(whi, x3));
+            }
+            let ap = acc.as_mut_ptr();
+            _mm256_storeu_si256(ap as *mut __m256i, a0l);
+            _mm256_storeu_si256(ap.add(8) as *mut __m256i, a0h);
+            _mm256_storeu_si256(ap.add(16) as *mut __m256i, a1l);
+            _mm256_storeu_si256(ap.add(24) as *mut __m256i, a1h);
+            _mm256_storeu_si256(ap.add(32) as *mut __m256i, a2l);
+            _mm256_storeu_si256(ap.add(40) as *mut __m256i, a2h);
+            _mm256_storeu_si256(ap.add(48) as *mut __m256i, a3l);
+            _mm256_storeu_si256(ap.add(56) as *mut __m256i, a3h);
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2 is available and the three slices have
+    /// equal length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mac_i8(a: &[i8], b: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let n = acc.len();
+            let mut i = 0;
+            while i + 16 <= n {
+                let pa = a.as_ptr().add(i) as *const __m128i;
+                let pb = b.as_ptr().add(i) as *const __m128i;
+                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(pa));
+                let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(pb));
+                // |i8·i8| ≤ 16384 < 2^15, so the low-16 product is exact
+                let prod = _mm256_mullo_epi16(va, vb);
+                let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+                let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+                let p0 = acc.as_mut_ptr().add(i);
+                let p1 = p0.add(8);
+                _mm256_storeu_si256(
+                    p0 as *mut __m256i,
+                    _mm256_add_epi32(_mm256_loadu_si256(p0 as *const __m256i), lo),
+                );
+                _mm256_storeu_si256(
+                    p1 as *mut __m256i,
+                    _mm256_add_epi32(_mm256_loadu_si256(p1 as *const __m256i), hi),
+                );
+                i += 16;
+            }
+            while i < n {
+                acc[i] += a[i] as i32 * b[i] as i32;
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2 is available and `q.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_i8(q: &[i8], s: f32, out: &mut [f32]) {
+        unsafe {
+            let n = out.len();
+            let vs = _mm256_set1_ps(s);
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = _mm256_cvtepi8_epi32(_mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i));
+                let f = _mm256_mul_ps(_mm256_cvtepi32_ps(v), vs);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), f);
+                i += 8;
+            }
+            while i < n {
+                out[i] = q[i] as f32 * s;
+                i += 1;
+            }
+        }
+    }
+}
+
+/// aarch64 NEON: `vmull_s8` widens i8×i8 → i16 exactly (|product| ≤
+/// 16384), `vaddw_s16` folds into i32 accumulators. Bit-identical to
+/// [`scalar`] for the same reason as AVX2 — everything is exact
+/// integer arithmetic.
+#[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)] // explicit unsafe blocks for newer editions
+mod neon {
+    use super::GEMM_NB;
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller guarantees `x.len() >= k`, `blk.len() >= k * 16`,
+    /// `acc.len() >= 16` (NEON is mandatory on aarch64).
+    pub unsafe fn gemm_x1(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut a0 = vdupq_n_s32(0);
+            let mut a1 = vdupq_n_s32(0);
+            let mut a2 = vdupq_n_s32(0);
+            let mut a3 = vdupq_n_s32(0);
+            for p in 0..k {
+                let w = vld1q_s8(bp.add(p * GEMM_NB));
+                let xv = vdup_n_s8(x[p]);
+                let lo = vmull_s8(vget_low_s8(w), xv);
+                let hi = vmull_s8(vget_high_s8(w), xv);
+                a0 = vaddw_s16(a0, vget_low_s16(lo));
+                a1 = vaddw_s16(a1, vget_high_s16(lo));
+                a2 = vaddw_s16(a2, vget_low_s16(hi));
+                a3 = vaddw_s16(a3, vget_high_s16(hi));
+            }
+            let ap = acc.as_mut_ptr();
+            vst1q_s32(ap, a0);
+            vst1q_s32(ap.add(4), a1);
+            vst1q_s32(ap.add(8), a2);
+            vst1q_s32(ap.add(12), a3);
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees the three slices have equal length.
+    pub unsafe fn mac_i8(a: &[i8], b: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let n = acc.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let prod = vmull_s8(vld1_s8(a.as_ptr().add(i)), vld1_s8(b.as_ptr().add(i)));
+                let p0 = acc.as_mut_ptr().add(i);
+                let p1 = p0.add(4);
+                vst1q_s32(p0, vaddw_s16(vld1q_s32(p0), vget_low_s16(prod)));
+                vst1q_s32(p1, vaddw_s16(vld1q_s32(p1), vget_high_s16(prod)));
+                i += 8;
+            }
+            while i < n {
+                acc[i] += a[i] as i32 * b[i] as i32;
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees `q.len() == out.len()`.
+    pub unsafe fn dequant_i8(q: &[i8], s: f32, out: &mut [f32]) {
+        unsafe {
+            let n = out.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let w = vmovl_s8(vld1_s8(q.as_ptr().add(i)));
+                let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+                let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+                vst1q_f32(out.as_mut_ptr().add(i), vmulq_n_f32(lo, s));
+                vst1q_f32(out.as_mut_ptr().add(i + 4), vmulq_n_f32(hi, s));
+                i += 8;
+            }
+            while i < n {
+                out[i] = q[i] as f32 * s;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_i8(r: &mut Pcg32, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (r.below(256) as i32 - 128) as i8).collect()
+    }
+
+    #[test]
+    fn scalar_always_available_and_auto_resolves() {
+        assert!(KernelBackend::Scalar.is_available());
+        let avail = Kernels::available();
+        assert!(avail.contains(&KernelBackend::Scalar));
+        // auto must select something this machine can actually run
+        assert!(avail.contains(&Kernels::auto().backend()));
+        assert!(avail.contains(&Kernels::detect().backend()));
+    }
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon] {
+            assert_eq!(KernelBackend::parse(b.label()), Some(b));
+        }
+        assert_eq!(KernelBackend::parse("sse9"), None);
+    }
+
+    #[test]
+    fn gemm_rows_matches_reference_every_backend() {
+        // full-range i8 inputs (incl. -128·-128 edge products) across
+        // odd K and every tile height
+        let mut r = Pcg32::new(0x51D);
+        for backend in Kernels::available() {
+            let kers = Kernels::for_backend(backend);
+            for k in [0usize, 1, 2, 3, 7, 16, 33, 64, 129] {
+                for rows in 1..=GEMM_MR {
+                    let x = rand_i8(&mut r, rows * k.max(1));
+                    let blk = rand_i8(&mut r, k * GEMM_NB);
+                    let mut want = vec![0i32; rows * GEMM_NB];
+                    for (ri, w) in want.chunks_mut(GEMM_NB).enumerate() {
+                        for (p, wrow) in blk.chunks(GEMM_NB).enumerate() {
+                            let xv = x[ri * k + p] as i32;
+                            for (jj, wv) in wrow.iter().enumerate() {
+                                w[jj] += xv * *wv as i32;
+                            }
+                        }
+                    }
+                    let mut got = vec![7i32; rows * GEMM_NB]; // poison
+                    kers.gemm_rows(&x, k, rows, &blk, &mut got);
+                    assert_eq!(want, got, "{}: k={k} rows={rows}", backend.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mac_and_dequant_match_scalar_every_backend() {
+        let mut r = Pcg32::new(0xACC);
+        let scalar = Kernels::scalar();
+        for backend in Kernels::available() {
+            let kers = Kernels::for_backend(backend);
+            for n in [0usize, 1, 5, 8, 15, 16, 17, 64, 100] {
+                let a = rand_i8(&mut r, n);
+                let b = rand_i8(&mut r, n);
+                let mut want: Vec<i32> = (0..n as i32).collect();
+                let mut got = want.clone();
+                scalar.mac_i8(&a, &b, &mut want);
+                kers.mac_i8(&a, &b, &mut got);
+                assert_eq!(want, got, "mac {}: n={n}", backend.label());
+                let s = 0.037f32;
+                let mut fw = vec![0.0f32; n];
+                let mut fg = vec![1.0f32; n];
+                scalar.dequant_i8(&a, s, &mut fw);
+                kers.dequant_i8(&a, s, &mut fg);
+                for (x, y) in fw.iter().zip(&fg) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "dequant {}: n={n}", backend.label());
+                }
+            }
+        }
+    }
+}

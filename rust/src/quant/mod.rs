@@ -6,7 +6,10 @@
 //! integration tests).
 
 pub mod hadamard;
+pub mod kernels;
 pub mod qlinear;
+
+pub use kernels::{KernelBackend, Kernels};
 
 /// Largest representable magnitude at bit-width `n` (signed symmetric).
 pub fn qmax(nbits: u32) -> f32 {

@@ -10,20 +10,21 @@
 //! * [`matmul_i8`] — the naive triple loop, kept as the *test oracle*;
 //! * [`matmul_i8_blocked`] — the hot-path kernel over a
 //!   [`PackedWeightI8`] column-blocked, K-major layout (packed once at
-//!   [`QLinear`] construction). All accumulation is exact i32, so the
-//!   two are **bit-identical** for every shape (property-tested in
-//!   `rust/tests/kernel_parity.rs`).
+//!   [`QLinear`] construction), executed through the
+//!   [`Kernels`] dispatch layer ([`crate::quant::kernels`]): explicit
+//!   AVX2/NEON widening multiply-adds with a [`GEMM_MR`]-row register
+//!   tile, or the portable scalar fallback. All accumulation is exact
+//!   i32, so every backend is **bit-identical** to the oracle for
+//!   every shape (property-tested in `rust/tests/kernel_parity.rs`).
 //!
 //! The `*_into` methods take caller-owned scratch so the decode hot
 //! path performs no heap allocation per call (see
 //! [`crate::ssm::step::StepScratch`]).
 
 use crate::quant;
+use crate::quant::kernels::Kernels;
 
-/// Column-block width of the packed weight layout. 16 i32 accumulators
-/// fit comfortably in registers on x86-64/aarch64 and the i8 block rows
-/// are one cache line.
-pub const GEMM_NB: usize = 16;
+pub use crate::quant::kernels::{GEMM_MR, GEMM_NB};
 
 /// out (M×N) i32 = x_q (M×K) i8 · w_q (K×N) i8, i32 accumulation.
 /// Naive triple loop — retained as the bit-exactness oracle for
@@ -83,58 +84,48 @@ impl PackedWeightI8 {
     }
 }
 
-/// Blocked int8 GEMM: out (M×N) i32 = x_q (M×K) i8 · packed (K×N) i8.
-///
-/// Loop order (block, row, K-tile): each K-major column block is
-/// streamed once per activation row with [`GEMM_NB`] i32 accumulators
-/// held in registers and the K loop unrolled ×4, so the inner loops
-/// vectorize and `out` is written exactly once per element (the naive
-/// kernel re-reads and re-writes each output row K times). Integer
-/// accumulation is exact, therefore bit-identical to [`matmul_i8`].
+/// Blocked int8 GEMM: out (M×N) i32 = x_q (M×K) i8 · packed (K×N) i8,
+/// executed on the process-wide auto-selected backend
+/// ([`Kernels::auto`]). See [`matmul_i8_blocked_with`].
 pub fn matmul_i8_blocked(x_q: &[i8], w: &PackedWeightI8, m: usize, out: &mut [i32]) {
+    matmul_i8_blocked_with(Kernels::auto(), x_q, w, m, out)
+}
+
+/// Blocked int8 GEMM on an explicit kernel backend.
+///
+/// Loop order (block, row-tile, K): each K-major column block is
+/// streamed once per [`GEMM_MR`]-row activation tile with the
+/// rows × [`GEMM_NB`] i32 accumulators held in registers
+/// ([`Kernels::gemm_rows`]), so `out` is written exactly once per
+/// element (the naive kernel re-reads and re-writes each output row K
+/// times). Integer accumulation is exact, therefore every backend is
+/// bit-identical to [`matmul_i8`].
+pub fn matmul_i8_blocked_with(
+    kers: Kernels,
+    x_q: &[i8],
+    w: &PackedWeightI8,
+    m: usize,
+    out: &mut [i32],
+) {
     let (k, n) = (w.k, w.n);
     assert_eq!(x_q.len(), m * k);
     assert_eq!(out.len(), m * n);
     let nb = GEMM_NB;
     let nblk = n.div_ceil(nb);
+    let mut tile = [0i32; GEMM_MR * GEMM_NB];
     for jb in 0..nblk {
         let blk = &w.data[jb * k * nb..(jb + 1) * k * nb];
         let jlo = jb * nb;
         let jw = nb.min(n - jlo);
-        for i in 0..m {
-            let xrow = &x_q[i * k..(i + 1) * k];
-            let mut acc = [0i32; GEMM_NB];
-            let kt = k & !3; // K rounded down to a multiple of 4
-            let mut p = 0;
-            while p < kt {
-                let x0 = xrow[p] as i32;
-                let x1 = xrow[p + 1] as i32;
-                let x2 = xrow[p + 2] as i32;
-                let x3 = xrow[p + 3] as i32;
-                let w0 = &blk[p * nb..p * nb + nb];
-                let w1 = &blk[(p + 1) * nb..(p + 1) * nb + nb];
-                let w2 = &blk[(p + 2) * nb..(p + 2) * nb + nb];
-                let w3 = &blk[(p + 3) * nb..(p + 3) * nb + nb];
-                for jj in 0..nb {
-                    // i32 products of i8 values cannot overflow and
-                    // integer addition is associative, so any grouping
-                    // matches the oracle bit-for-bit
-                    acc[jj] += x0 * w0[jj] as i32
-                        + x1 * w1[jj] as i32
-                        + x2 * w2[jj] as i32
-                        + x3 * w3[jj] as i32;
-                }
-                p += 4;
+        let mut i = 0;
+        while i < m {
+            let rows = GEMM_MR.min(m - i);
+            kers.gemm_rows(&x_q[i * k..(i + rows) * k], k, rows, blk, &mut tile);
+            for r in 0..rows {
+                let orow = &mut out[(i + r) * n + jlo..(i + r) * n + jlo + jw];
+                orow.copy_from_slice(&tile[r * nb..r * nb + jw]);
             }
-            while p < k {
-                let xv = xrow[p] as i32;
-                let wrow = &blk[p * nb..p * nb + nb];
-                for jj in 0..nb {
-                    acc[jj] += xv * wrow[jj] as i32;
-                }
-                p += 1;
-            }
-            out[i * n + jlo..i * n + jlo + jw].copy_from_slice(&acc[..jw]);
+            i += rows;
         }
     }
 }
@@ -185,14 +176,24 @@ impl QLinear {
 
     /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`, with
     /// the i32 accumulator supplied by the caller (no allocation once
-    /// `acc` has warmed up to capacity).
-    pub fn forward_q_into(&self, x_q: &[i8], s_x: f32, m: usize, acc: &mut Vec<i32>, out: &mut [f32]) {
+    /// `acc` has warmed up to capacity). `kers` picks the GEMM backend
+    /// — the serving path passes its [`crate::ssm::StepScratch`]'s
+    /// handle; outputs are bit-identical across backends.
+    pub fn forward_q_into(
+        &self,
+        kers: Kernels,
+        x_q: &[i8],
+        s_x: f32,
+        m: usize,
+        acc: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
         assert_eq!(x_q.len(), m * self.k);
         assert_eq!(out.len(), m * self.n);
         // grow-only resize: the blocked kernel overwrites every element
         // (poison-tested), so zero-filling would be a wasted memset
         acc.resize(m * self.n, 0);
-        matmul_i8_blocked(x_q, &self.packed, m, acc);
+        matmul_i8_blocked_with(kers, x_q, &self.packed, m, acc);
         let s = s_x * self.s_w;
         for (o, &a) in out.iter_mut().zip(acc.iter()) {
             *o = a as f32 * s;
@@ -210,8 +211,10 @@ impl QLinear {
     /// run the blocked int8 matmul. Allocation-free after warmup; the
     /// i8 codes stay in `x_q` for reuse (e.g. the scan consumes the
     /// same quantized x as `x_proj`, paper §4.3).
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_into(
         &self,
+        kers: Kernels,
         x: &[f32],
         s_x: f32,
         m: usize,
@@ -221,21 +224,23 @@ impl QLinear {
     ) {
         assert_eq!(x.len(), m * self.k);
         quant::quantize_sym_into(x, s_x, 8, x_q);
-        self.forward_q_into(x_q, s_x, m, acc, out);
+        self.forward_q_into(kers, x_q, s_x, m, acc, out);
     }
 
-    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`.
+    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`
+    /// (auto-selected backend; allocating convenience).
     pub fn forward_q(&self, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
         let mut acc = Vec::new();
-        self.forward_q_into(x_q, s_x, m, &mut acc, out);
+        self.forward_q_into(Kernels::auto(), x_q, s_x, m, &mut acc, out);
     }
 
-    /// Quantize fp32 input rows at `s_x`, then run the int8 matmul.
-    /// Returns the i8 codes so callers can reuse them.
+    /// Quantize fp32 input rows at `s_x`, then run the int8 matmul
+    /// (auto-selected backend). Returns the i8 codes so callers can
+    /// reuse them.
     pub fn forward(&self, x: &[f32], s_x: f32, m: usize, out: &mut [f32]) -> Vec<i8> {
         let mut x_q = Vec::new();
         let mut acc = Vec::new();
-        self.forward_into(x, s_x, m, &mut x_q, &mut acc, out);
+        self.forward_into(Kernels::auto(), x, s_x, m, &mut x_q, &mut acc, out);
         x_q
     }
 }
@@ -271,10 +276,11 @@ mod tests {
     #[test]
     fn blocked_matches_naive_oracle() {
         // bit-exact across shapes where K and N are NOT multiples of
-        // the block/unroll widths (the broader sweep lives in
-        // rust/tests/kernel_parity.rs)
+        // the block/unroll widths, on EVERY available dispatch backend
+        // (the broader sweep lives in rust/tests/kernel_parity.rs)
         let mut r = Pcg32::new(77);
-        for (m, k, n) in [(1usize, 7usize, 5usize), (3, 17, 33), (8, 64, 48), (2, 5, 16), (4, 1, 1)] {
+        let shapes = [(1usize, 7usize, 5usize), (3, 17, 33), (8, 64, 48), (2, 5, 16), (4, 1, 1)];
+        for (m, k, n) in shapes {
             let x_q: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
             let w_q: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
             let mut want = vec![0i32; m * n];
@@ -282,7 +288,12 @@ mod tests {
             let packed = PackedWeightI8::pack(&w_q, k, n);
             let mut got = vec![0i32; m * n];
             matmul_i8_blocked(&x_q, &packed, m, &mut got);
-            assert_eq!(want, got, "shape ({m},{k},{n})");
+            assert_eq!(want, got, "auto backend, shape ({m},{k},{n})");
+            for backend in Kernels::available() {
+                got.fill(7); // poison: kernel must overwrite fully
+                matmul_i8_blocked_with(Kernels::for_backend(backend), &x_q, &packed, m, &mut got);
+                assert_eq!(want, got, "{} backend, shape ({m},{k},{n})", backend.label());
+            }
         }
     }
 
@@ -322,14 +333,15 @@ mod tests {
         let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
         let ql = QLinear::from_f32(&w, k, n, None);
         let x: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let kers = Kernels::auto();
         let mut x_q = Vec::new();
         let mut acc = Vec::new();
         let mut out = vec![0.0f32; m * n];
-        ql.forward_into(&x, 0.05, m, &mut x_q, &mut acc, &mut out);
+        ql.forward_into(kers, &x, 0.05, m, &mut x_q, &mut acc, &mut out);
         let (cq, ca) = (x_q.capacity(), acc.capacity());
         let (pq, pa) = (x_q.as_ptr(), acc.as_ptr());
         for _ in 0..5 {
-            ql.forward_into(&x, 0.05, m, &mut x_q, &mut acc, &mut out);
+            ql.forward_into(kers, &x, 0.05, m, &mut x_q, &mut acc, &mut out);
         }
         assert_eq!(x_q.capacity(), cq);
         assert_eq!(acc.capacity(), ca);

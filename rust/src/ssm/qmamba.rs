@@ -20,22 +20,30 @@
 //!   shrinking per-request conv state to 1 byte/entry;
 //! * the recurrence itself stays f32 ([`super::scan::selective_scan_q`]).
 //!
+//! All int8 arithmetic dispatches through the
+//! [`crate::quant::Kernels`] backend carried in the caller's
+//! [`StepScratch`] (`scratch.kernels`): the blocked GEMMs, the fused
+//! conv's widening MACs, and the scan's code dequantization run
+//! explicit AVX2/NEON or the scalar fallback — bit-identically, so a
+//! backend switch never changes a sampled token.
+//!
 //! `step_into` executes entirely out of the caller's [`StepScratch`]:
 //! **zero heap allocations** per call after warmup (asserted in
-//! `rust/tests/zero_alloc.rs`). Caveat: that guarantee holds for
-//! power-of-two `d_inner` (every current tier) — a Paley-base
-//! `d_inner` (12·2^k / 20·2^k) makes `fwht_rows` allocate its base
-//! matrix per call; caching it per layer is a ROADMAP item.
+//! `rust/tests/zero_alloc.rs`) — for power-of-two *and* Paley-base
+//! `d_inner` (12·2^k / 20·2^k), since each layer caches its
+//! [`FwhtPlan`] (base matrix built once at calibration).
 //! `prefill_into` runs the whole prompt
 //! as (T×K) batched int8 GEMMs; static scales make it bit-identical
 //! to the stepwise path ([`QuantizedMambaModel::prefill_stepwise`],
 //! kept as the test oracle).
 
 use super::mamba::{rmsnorm, silu, softplus, take_cols_into, MambaModel, MambaTier};
-use super::scan::selective_scan_q_into;
+use super::scan::selective_scan_q_into_with;
 use super::step::{par_lane_chunks, rf32, CalibRecord, MambaState, StepModel, StepScratch};
 use crate::quant;
+use crate::quant::hadamard::FwhtPlan;
 use crate::quant::qlinear::QLinear;
+use crate::quant::Kernels;
 
 /// Quantizer configuration (the paper's "quamba" method point).
 #[derive(Debug, Clone)]
@@ -73,6 +81,10 @@ struct QLayer {
     s_c: f32,
     out_proj: QLinear, // folded H·W_out (di, d); scale absorbs 1/di
     s_gh: f32,
+    /// cached H_{d_inner} transform: base matrix built once, so the
+    /// rotated out_proj stays allocation-free for Paley-base d_inner
+    /// (12·2^k / 20·2^k), not just powers of two
+    fwht: FwhtPlan,
 }
 
 pub struct QuantizedMambaModel {
@@ -86,16 +98,43 @@ pub struct QuantizedMambaModel {
     g_y: Vec<f32>,
 }
 
+/// Channel-chunk width of the fused conv's integer accumulator: each
+/// (chunk × tap) sweep runs through [`Kernels::mac_i8`] with the i32
+/// accumulator on the stack, so the conv is SIMD-dispatched *and*
+/// allocation-free for any `d_inner`.
+const CONV_CHUNK: usize = 128;
+
+/// Fused integer depthwise causal conv + SiLU + per-channel gain on
+/// the auto-selected kernel backend. See [`fused_conv_silu_i8_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_conv_silu_i8(
+    x_q: &[i8],
+    hist: &mut [i8],
+    w_q: &[i8],
+    bias: &[f32],
+    gx: &[f32],
+    s: f32,
+    tl: usize,
+    di: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    fused_conv_silu_i8_with(Kernels::auto(), x_q, hist, w_q, bias, gx, s, tl, di, w, out)
+}
+
 /// Fused integer depthwise causal conv + SiLU + per-channel gain over
 /// a (tl × di) time-major block of int8 *codes*: i8 window × i8
 /// weights, i32 accumulate, one folded `s = s_cin·s_w` dequant (+ f32
-/// bias) at the end. `hist` is the carried (W−1, di) window of input
-/// codes (oldest row first), advanced in place — chunked calls compose
-/// **bit-exactly** with one full call because the accumulator is
-/// integer. Parity with the dequantized-f32 conv is property-tested in
-/// `rust/tests/kernel_parity.rs`.
+/// bias) at the end. Each conv tap is an element-wise widening MAC
+/// across a channel chunk ([`Kernels::mac_i8`]) — exact integers, so
+/// every backend is bit-identical. `hist` is the carried (W−1, di)
+/// window of input codes (oldest row first), advanced in place —
+/// chunked calls compose **bit-exactly** with one full call because
+/// the accumulator is integer. Parity with the dequantized-f32 conv
+/// is property-tested in `rust/tests/kernel_parity.rs`.
 #[allow(clippy::too_many_arguments)]
-pub fn fused_conv_silu_i8(
+pub fn fused_conv_silu_i8_with(
+    kers: Kernels,
     x_q: &[i8],
     hist: &mut [i8],
     w_q: &[i8],
@@ -111,23 +150,33 @@ pub fn fused_conv_silu_i8(
     assert_eq!(out.len(), tl * di);
     assert_eq!(w_q.len(), w * di);
     assert_eq!(hist.len(), (w - 1) * di);
+    let hw = w - 1;
+    let mut acc = [0i32; CONV_CHUNK];
     for ti in 0..tl {
-        for ch in 0..di {
-            let mut acc = 0i32;
+        let mut c0 = 0;
+        while c0 < di {
+            let cl = CONV_CHUNK.min(di - c0);
+            let a = &mut acc[..cl];
+            a.fill(0);
             for j in 0..w {
-                let src = ti as isize - (w as isize - 1) + j as isize;
-                let v = if src >= 0 {
-                    x_q[src as usize * di + ch] as i32
+                let src = ti as isize - hw as isize + j as isize;
+                let row = if src >= 0 {
+                    let r0 = src as usize * di;
+                    &x_q[r0 + c0..r0 + c0 + cl]
                 } else {
-                    hist[(src + w as isize - 1) as usize * di + ch] as i32
+                    let r0 = (src + hw as isize) as usize * di;
+                    &hist[r0 + c0..r0 + c0 + cl]
                 };
-                acc += v * w_q[j * di + ch] as i32;
+                kers.mac_i8(row, &w_q[j * di + c0..j * di + c0 + cl], a);
             }
-            out[ti * di + ch] = silu(acc as f32 * s + bias[ch]) * gx[ch];
+            for (ci, &av) in a.iter().enumerate() {
+                let ch = c0 + ci;
+                out[ti * di + ch] = silu(av as f32 * s + bias[ch]) * gx[ch];
+            }
+            c0 += cl;
         }
     }
     // slide the window: new history = last (w−1) rows of [hist ; x_q]
-    let hw = w - 1;
     for row in 0..hw {
         let src_row = tl + row; // index into the (hw + tl)-row concat
         if src_row < hw {
@@ -154,6 +203,10 @@ impl QuantizedMambaModel {
         let (d, di, n, r) = (t.d_model, t.d_inner, t.d_state, t.dt_rank);
         assert_eq!(rec.layers.len(), t.n_layer, "calibration record layer count");
         let mut layers = Vec::with_capacity(t.n_layer);
+        // one prepared H_{d_inner} per model, cloned into each layer:
+        // the Paley base matrix (m ∈ {12, 20}) is built once here and
+        // never again on the hot path
+        let fwht = FwhtPlan::new(di);
         for (layer, lc) in model.layers.iter().zip(&rec.layers) {
             // fold H into out_proj: W' = H·W_out applied per column,
             // i.e. FWHT over the rows of W_outᵀ; 1/di goes into s_w
@@ -163,7 +216,7 @@ impl QuantizedMambaModel {
                     wt[col * di + row] = layer.out_proj[row * d + col];
                 }
             }
-            crate::quant::hadamard::fwht_rows(&mut wt, di);
+            fwht.apply_rows(&mut wt);
             let mut w_fold = vec![0.0f32; di * d];
             for col in 0..d {
                 for row in 0..di {
@@ -200,6 +253,7 @@ impl QuantizedMambaModel {
                 s_c: quant::scale_sym(lc.c_amax, 8),
                 out_proj: QLinear::from_f32(&w_fold, di, d, None).fold_scale(1.0 / di as f32),
                 s_gh: quant::scale_sym(lc.gated_h_amax, 8),
+                fwht: fwht.clone(),
             });
         }
         // tied head: quantize embeddingᵀ (d, V)
@@ -294,6 +348,7 @@ impl StepModel for QuantizedMambaModel {
         state.reset();
         let tl = tokens.len();
         scratch.prep(tl, t);
+        let kers = scratch.kernels;
         let StepScratch {
             resid,
             x_in,
@@ -326,14 +381,15 @@ impl StepModel for QuantizedMambaModel {
         }
         for (li, ql) in self.layers.iter().enumerate() {
             rmsnorm(resid, &ql.norm, d, 1e-5, x_in);
-            ql.in_proj.forward_into(x_in, ql.s_xin, tl, q_xin, acc, xz);
+            ql.in_proj.forward_into(kers, x_in, ql.s_xin, tl, q_xin, acc, xz);
             take_cols_into(xz, tl, 2 * di, 0, di, x);
             take_cols_into(xz, tl, 2 * di, di, 2 * di, z);
             // requant the conv input to the static conv-in scale; the
             // window codes carry the same scale
             quant::quantize_sym_into(x, ql.s_cin, 8, q_conv);
             let gx = &self.g_x[li * di..(li + 1) * di];
-            fused_conv_silu_i8(
+            fused_conv_silu_i8_with(
+                kers,
                 q_conv,
                 state.conv_lane_q(li, 0),
                 &ql.conv_w_q,
@@ -347,18 +403,19 @@ impl StepModel for QuantizedMambaModel {
             );
             // percentile-clipped static x-scale; the scan reuses the codes
             quant::quantize_sym_into(act, ql.s_x, 8, q_x);
-            ql.x_proj.forward_q_into(q_x, ql.s_x, tl, acc, bcdt);
+            ql.x_proj.forward_q_into(kers, q_x, ql.s_x, tl, acc, bcdt);
             take_cols_into(bcdt, tl, r + 2 * n, 0, r, dt_low);
             take_cols_into(bcdt, tl, r + 2 * n, r, r + n, bmat);
             take_cols_into(bcdt, tl, r + 2 * n, r + n, r + 2 * n, cmat);
-            ql.dt_proj.forward_into(dt_low, ql.s_dt, tl, q_dt, acc, dt);
+            ql.dt_proj.forward_into(kers, dt_low, ql.s_dt, tl, q_dt, acc, dt);
             for v in dt.iter_mut() {
                 *v = softplus(*v);
             }
             quant::quantize_sym_into(bmat, ql.s_b, 8, q_b);
             quant::quantize_sym_into(cmat, ql.s_c, 8, q_c);
             let gy = &self.g_y[li * di..(li + 1) * di];
-            selective_scan_q_into(
+            selective_scan_q_into_with(
+                kers,
                 di,
                 n,
                 q_x,
@@ -383,15 +440,15 @@ impl StepModel for QuantizedMambaModel {
             }
             // out_proj in the rotated space: rotate, quantize, int8
             // matmul against the folded H·W_out (scale carries 1/di)
-            crate::quant::hadamard::fwht_rows(gated, di);
-            ql.out_proj.forward_into(gated, ql.s_gh, tl, q_gh, acc, out);
+            ql.fwht.apply_rows(gated);
+            ql.out_proj.forward_into(kers, gated, ql.s_gh, tl, q_gh, acc, out);
             for i in 0..resid.len() {
                 resid[i] += out[i];
             }
         }
         rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
         rf32(logits, tl * self.tier.vocab);
-        self.head.forward_into(fin, self.s_head_in, tl, q_head, acc, logits);
+        self.head.forward_into(kers, fin, self.s_head_in, tl, q_head, acc, logits);
     }
 
     /// The W8A8 batched decode step — the native serving hot path.
@@ -415,6 +472,7 @@ impl StepModel for QuantizedMambaModel {
         );
         scratch.prep(b, t);
         let nt = scratch.threads.max(1).min(b);
+        let kers = scratch.kernels;
         let cpl = (w - 1) * di;
         let spl = di * n;
         let StepScratch {
@@ -450,7 +508,7 @@ impl StepModel for QuantizedMambaModel {
         for (li, ql) in self.layers.iter().enumerate() {
             // fused norm + requant into the int8 in_proj
             rmsnorm(resid, &ql.norm, d, 1e-5, x_in);
-            ql.in_proj.forward_into(x_in, ql.s_xin, b, q_xin, acc, xz);
+            ql.in_proj.forward_into(kers, x_in, ql.s_xin, b, q_xin, acc, xz);
             take_cols_into(xz, b, 2 * di, 0, di, x);
             take_cols_into(xz, b, 2 * di, di, 2 * di, z);
             quant::quantize_sym_into(x, ql.s_cin, 8, q_conv);
@@ -464,7 +522,8 @@ impl StepModel for QuantizedMambaModel {
                         act_c.chunks_mut(di).zip(hist_c.chunks_mut(cpl)).enumerate()
                     {
                         let bi = lane0 + l;
-                        fused_conv_silu_i8(
+                        fused_conv_silu_i8_with(
+                            kers,
                             &xq_r[bi * di..(bi + 1) * di],
                             h_l,
                             w_q,
@@ -480,7 +539,8 @@ impl StepModel for QuantizedMambaModel {
                 });
             } else {
                 for bi in 0..b {
-                    fused_conv_silu_i8(
+                    fused_conv_silu_i8_with(
+                        kers,
                         &q_conv[bi * di..(bi + 1) * di],
                         &mut layer_conv[bi * cpl..(bi + 1) * cpl],
                         &ql.conv_w_q,
@@ -496,11 +556,11 @@ impl StepModel for QuantizedMambaModel {
             }
             // percentile-clipped static x-scale; the scan reuses the codes
             quant::quantize_sym_into(act, ql.s_x, 8, q_x);
-            ql.x_proj.forward_q_into(q_x, ql.s_x, b, acc, bcdt);
+            ql.x_proj.forward_q_into(kers, q_x, ql.s_x, b, acc, bcdt);
             take_cols_into(bcdt, b, r + 2 * n, 0, r, dt_low);
             take_cols_into(bcdt, b, r + 2 * n, r, r + n, bmat);
             take_cols_into(bcdt, b, r + 2 * n, r + n, r + 2 * n, cmat);
-            ql.dt_proj.forward_into(dt_low, ql.s_dt, b, q_dt, acc, dt);
+            ql.dt_proj.forward_into(kers, dt_low, ql.s_dt, b, q_dt, acc, dt);
             for v in dt.iter_mut() {
                 *v = softplus(*v);
             }
@@ -518,7 +578,8 @@ impl StepModel for QuantizedMambaModel {
                         gated_c.chunks_mut(di).zip(ssm_c.chunks_mut(spl)).enumerate()
                     {
                         let bi = lane0 + l;
-                        selective_scan_q_into(
+                        selective_scan_q_into_with(
+                            kers,
                             di,
                             n,
                             &xq_r[bi * di..(bi + 1) * di],
@@ -543,7 +604,8 @@ impl StepModel for QuantizedMambaModel {
             } else {
                 for bi in 0..b {
                     let y = &mut gated[bi * di..(bi + 1) * di];
-                    selective_scan_q_into(
+                    selective_scan_q_into_with(
+                        kers,
                         di,
                         n,
                         &q_x[bi * di..(bi + 1) * di],
@@ -567,15 +629,15 @@ impl StepModel for QuantizedMambaModel {
             }
             // out_proj in the rotated space: rotate, quantize, int8 matmul
             // against the folded H·W_out (its scale carries the 1/di)
-            crate::quant::hadamard::fwht_rows(gated, di);
-            ql.out_proj.forward_into(gated, ql.s_gh, b, q_gh, acc, out);
+            ql.fwht.apply_rows(gated);
+            ql.out_proj.forward_into(kers, gated, ql.s_gh, b, q_gh, acc, out);
             for i in 0..resid.len() {
                 resid[i] += out[i];
             }
         }
         rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
         rf32(logits, b * self.tier.vocab);
-        self.head.forward_into(fin, self.s_head_in, b, q_head, acc, logits);
+        self.head.forward_into(kers, fin, self.s_head_in, b, q_head, acc, logits);
     }
 }
 

@@ -2,6 +2,16 @@
 //! quantized — semantics identical to the Pallas kernels
 //! (`python/compile/kernels/selective_scan.py`) and to
 //! `kernels/ref.py::selective_scan`.
+//!
+//! The quantized scan's per-step int8 work goes through the
+//! [`Kernels`] dispatch layer ([`selective_scan_q_into_with`]): each
+//! time-step's B/C code rows are dequantized **once** into stack
+//! buffers via [`Kernels::dequant_i8`] (SIMD lanes, exact per-element
+//! multiply) instead of `d_inner × n` times inside the channel loop.
+//! The f32 recurrence itself stays in fixed scalar order so every
+//! backend produces bit-identical states and outputs.
+
+use crate::quant::Kernels;
 
 /// Dimensions + parameters of one scan invocation (single sequence).
 /// Layout: time-major slices over `d_inner` channels and `n` states.
@@ -101,9 +111,61 @@ pub fn selective_scan_q(
 }
 
 /// [`selective_scan_q`] writing y into a caller-owned (T × d_inner)
-/// slice — the zero-alloc W8A8 decode hot path.
+/// slice on the auto-selected kernel backend — the zero-alloc W8A8
+/// decode hot path. See [`selective_scan_q_into_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn selective_scan_q_into(
+    d_inner: usize,
+    n_state: usize,
+    x_q: &[i8],
+    s_x: f32,
+    dt: &[f32],
+    a_q: &[i8],
+    s_a: f32,
+    b_q: &[i8],
+    s_b: f32,
+    c_q: &[i8],
+    s_c: f32,
+    d_q: &[i8],
+    s_d: f32,
+    h: &mut [f32],
+    y: &mut [f32],
+) {
+    selective_scan_q_into_with(
+        Kernels::auto(),
+        d_inner,
+        n_state,
+        x_q,
+        s_x,
+        dt,
+        a_q,
+        s_a,
+        b_q,
+        s_b,
+        c_q,
+        s_c,
+        d_q,
+        s_d,
+        h,
+        y,
+    )
+}
+
+/// Stack-buffer bound for the per-step dequantized B/C rows: states
+/// up to this size take the kernel-dispatched fast path (the paper's
+/// models use n = 16); larger n falls back to in-loop dequantization
+/// with identical numerics.
+pub const SCAN_N_MAX: usize = 128;
+
+/// [`selective_scan_q_into`] on an explicit kernel backend: per
+/// time-step, B_t and C_t are dequantized once through
+/// [`Kernels::dequant_i8`] (instead of per channel), then the f32
+/// recurrence runs in fixed scalar order — outputs and final state
+/// are **bit-identical** across backends and to the pre-dispatch
+/// implementation.
+#[allow(clippy::too_many_arguments)]
+pub fn selective_scan_q_into_with(
+    kers: Kernels,
     d_inner: usize,
     n_state: usize,
     x_q: &[i8],
@@ -132,23 +194,51 @@ pub fn selective_scan_q_into(
     assert_eq!(d_q.len(), di, "D_q must be d_inner");
     assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
     assert_eq!(y.len(), t_len * di, "y must match x_q (T × d_inner)");
-    for t in 0..t_len {
-        for ch in 0..di {
-            let x = x_q[t * di + ch] as f32 * s_x;
-            let dtv = dt[t * di + ch];
-            let dtx = dtv * x;
-            let hrow = &mut h[ch * n..(ch + 1) * n];
-            let arow = &a_q[ch * n..(ch + 1) * n];
-            let mut acc = 0.0f32;
-            for s in 0..n {
-                let a = arow[s] as f32 * s_a;
-                let bq = b_q[t * n + s] as f32 * s_b;
-                let cq = c_q[t * n + s] as f32 * s_c;
-                let da = (dtv * a).exp();
-                hrow[s] = da * hrow[s] + dtx * bq;
-                acc += hrow[s] * cq;
+    if n <= SCAN_N_MAX {
+        // fast path: per-step kernel dequant of the B/C code rows into
+        // stack buffers (zero heap traffic), shared by all di channels
+        let mut bf = [0.0f32; SCAN_N_MAX];
+        let mut cf = [0.0f32; SCAN_N_MAX];
+        for t in 0..t_len {
+            kers.dequant_i8(&b_q[t * n..(t + 1) * n], s_b, &mut bf[..n]);
+            kers.dequant_i8(&c_q[t * n..(t + 1) * n], s_c, &mut cf[..n]);
+            for ch in 0..di {
+                let x = x_q[t * di + ch] as f32 * s_x;
+                let dtv = dt[t * di + ch];
+                let dtx = dtv * x;
+                let hrow = &mut h[ch * n..(ch + 1) * n];
+                let arow = &a_q[ch * n..(ch + 1) * n];
+                let mut acc = 0.0f32;
+                for s in 0..n {
+                    let a = arow[s] as f32 * s_a;
+                    let da = (dtv * a).exp();
+                    hrow[s] = da * hrow[s] + dtx * bf[s];
+                    acc += hrow[s] * cf[s];
+                }
+                y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
             }
-            y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
+        }
+    } else {
+        // oversize-state fallback: dequantize inline (same values,
+        // same op order — bit-identical to the fast path)
+        for t in 0..t_len {
+            for ch in 0..di {
+                let x = x_q[t * di + ch] as f32 * s_x;
+                let dtv = dt[t * di + ch];
+                let dtx = dtv * x;
+                let hrow = &mut h[ch * n..(ch + 1) * n];
+                let arow = &a_q[ch * n..(ch + 1) * n];
+                let mut acc = 0.0f32;
+                for s in 0..n {
+                    let a = arow[s] as f32 * s_a;
+                    let bq = b_q[t * n + s] as f32 * s_b;
+                    let cq = c_q[t * n + s] as f32 * s_c;
+                    let da = (dtv * a).exp();
+                    hrow[s] = da * hrow[s] + dtx * bq;
+                    acc += hrow[s] * cq;
+                }
+                y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
+            }
         }
     }
 }
@@ -239,6 +329,40 @@ mod tests {
         let y_q = selective_scan_q(4, 4, &q(&x), s, &dt, &q(&a), s, &q(&b), s, &q(&c), s, &q(&d), s, &mut h2);
         for (u, v) in y_fp.iter().zip(&y_q) {
             assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn quantized_scan_bit_identical_across_backends_and_paths() {
+        // every dispatch backend, and the oversize-state fallback path,
+        // must produce bit-identical y and h
+        let mut r = Pcg32::new(0x5CA7);
+        for (di, n, t) in [(6usize, 4usize, 9usize), (3, 130, 4)] {
+            let x_q: Vec<i8> = (0..t * di).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let dt: Vec<f32> = (0..t * di).map(|_| 0.01 + 0.1 * r.f32()).collect();
+            let a_q: Vec<i8> = (0..di * n).map(|_| -(1 + r.below(100) as i32) as i8).collect();
+            let b_q: Vec<i8> = (0..t * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let c_q: Vec<i8> = (0..t * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let d_q: Vec<i8> = (0..di).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let run = |kers: Kernels| {
+                let mut h = vec![0.0f32; di * n];
+                let mut y = vec![0.0f32; t * di];
+                selective_scan_q_into_with(
+                    kers, di, n, &x_q, 0.04, &dt, &a_q, 0.02, &b_q, 0.03, &c_q, 0.05, &d_q,
+                    0.06, &mut h, &mut y,
+                );
+                (h, y)
+            };
+            let (h0, y0) = run(Kernels::scalar());
+            for backend in Kernels::available() {
+                let (h1, y1) = run(Kernels::for_backend(backend));
+                for (a, b) in h0.iter().zip(&h1) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} h (di={di},n={n})", backend.label());
+                }
+                for (a, b) in y0.iter().zip(&y1) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} y (di={di},n={n})", backend.label());
+                }
+            }
         }
     }
 

@@ -258,6 +258,11 @@ pub struct StepScratch {
     /// batched step (1 = sequential; >1 is bit-identical, see module
     /// docs). Set from `NativeEngineConfig::threads` by the engine.
     pub threads: usize,
+    /// int8 kernel backend for the GEMM/conv/scan hot paths
+    /// ([`crate::quant::Kernels`]): auto-detected by default,
+    /// forceable per scratch (engine config / parity tests). Every
+    /// backend is bit-identical, so this only changes wall-clock.
+    pub kernels: crate::quant::Kernels,
     pub(crate) resid: Vec<f32>,
     pub(crate) x_in: Vec<f32>,
     pub(crate) xz: Vec<f32>,
@@ -287,8 +292,15 @@ pub struct StepScratch {
 
 impl StepScratch {
     pub fn new(threads: usize) -> StepScratch {
+        Self::with_kernels(threads, crate::quant::Kernels::auto())
+    }
+
+    /// A scratch pinned to a specific kernel backend (testing /
+    /// benchmarking; [`Self::new`] auto-selects).
+    pub fn with_kernels(threads: usize, kernels: crate::quant::Kernels) -> StepScratch {
         StepScratch {
             threads: threads.max(1),
+            kernels,
             resid: Vec::new(),
             x_in: Vec::new(),
             xz: Vec::new(),

@@ -1,18 +1,23 @@
-//! PR-2 kernel parity property tests (tier-1):
+//! Kernel parity property tests (tier-1):
 //!
 //! * blocked int8 GEMM is **bit-exact** vs the naive `matmul_i8`
 //!   oracle across shapes where K and N are not multiples of the
-//!   block/unroll widths;
+//!   block/unroll widths — on **every** dispatch backend this machine
+//!   can run (scalar always; AVX2/NEON where detected);
 //! * the fused integer depthwise conv matches a dequantized f64
-//!   reference within a magnitude-scaled tolerance, and chunked calls
-//!   compose bit-exactly with one full call;
+//!   reference within a magnitude-scaled tolerance, chunked calls
+//!   compose bit-exactly with one full call, and every backend matches
+//!   the scalar one bit-for-bit;
 //! * threaded batched steps (fp32 and W8A8) are bit-identical to
-//!   single-threaded ones, logits and state.
+//!   single-threaded ones, logits and state;
+//! * W8A8 greedy decode produces the **same token stream** under every
+//!   forced kernel backend (ISSUE 3 satellite).
 
-use quamba::quant::qlinear::{matmul_i8, matmul_i8_blocked, PackedWeightI8};
+use quamba::quant::qlinear::{matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, PackedWeightI8};
+use quamba::quant::Kernels;
 use quamba::ssm::{
-    fused_conv_silu_i8, MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel,
-    StepModel, StepScratch,
+    fused_conv_silu_i8, fused_conv_silu_i8_with, MambaModel, MambaState, MambaTier, QuantConfig,
+    QuantizedMambaModel, StepModel, StepScratch,
 };
 use quamba::util::rng::Pcg32;
 
@@ -52,6 +57,18 @@ fn blocked_gemm_bit_exact_vs_naive_over_random_odd_shapes() {
         let mut got = vec![7i32; m * n]; // poison: kernel must overwrite fully
         matmul_i8_blocked(&x_q, &packed, m, &mut got);
         assert_eq!(want, got, "GEMM mismatch at shape ({m},{k},{n})");
+        // ISSUE 3 acceptance: every dispatch backend is bit-exact vs
+        // the naive oracle on the same odd shapes
+        for backend in Kernels::available() {
+            got.fill(7);
+            matmul_i8_blocked_with(Kernels::for_backend(backend), &x_q, &packed, m, &mut got);
+            assert_eq!(
+                want,
+                got,
+                "GEMM mismatch on backend {} at shape ({m},{k},{n})",
+                backend.label()
+            );
+        }
     }
 }
 
@@ -150,6 +167,45 @@ fn fused_i8_conv_chunks_compose_bit_exactly() {
     assert_eq!(hist_full, hist_step, "carried windows diverged");
 }
 
+#[test]
+fn fused_i8_conv_bit_identical_across_backends() {
+    // the SIMD MAC reorders nothing observable: integer accumulation
+    // is exact and the silu epilogue is per-element, so every backend
+    // must reproduce the scalar one to the bit (outputs AND the
+    // carried window codes)
+    let mut r = Pcg32::new(0xD15B);
+    for (di, w, tl) in [(4usize, 4usize, 9usize), (33, 3, 5), (130, 4, 3), (8, 2, 1)] {
+        let hw = w - 1;
+        let x_q = rand_i8(&mut r, tl * di);
+        let w_q = rand_i8(&mut r, w * di);
+        let hist0 = rand_i8(&mut r, hw * di);
+        let bias: Vec<f32> = (0..di).map(|_| r.normal() * 0.1).collect();
+        let gx: Vec<f32> = (0..di).map(|_| 0.5 + r.f32()).collect();
+        let s = 0.017f32;
+        let run = |kers: Kernels| {
+            let mut hist = hist0.clone();
+            let mut out = vec![0.0f32; tl * di];
+            fused_conv_silu_i8_with(
+                kers, &x_q, &mut hist, &w_q, &bias, &gx, s, tl, di, w, &mut out,
+            );
+            (hist, out)
+        };
+        let (h0, o0) = run(Kernels::scalar());
+        for backend in Kernels::available() {
+            let (h1, o1) = run(Kernels::for_backend(backend));
+            assert_eq!(h0, h1, "conv window codes diverged on {}", backend.label());
+            for (i, (a, b)) in o0.iter().zip(&o1).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "conv output diverged on {} (di={di},w={w}) at {i}",
+                    backend.label()
+                );
+            }
+        }
+    }
+}
+
 fn parity_tier() -> MambaTier {
     MambaTier {
         name: "parity".into(),
@@ -205,5 +261,59 @@ fn threaded_step_bit_identical_to_sequential() {
             assert_eq!(seq.2, par.2, "{name}: conv codes diverged at threads={threads}");
             assert_eq!(seq.3, par.3, "{name}: ssm state diverged at threads={threads}");
         }
+    }
+}
+
+/// Greedy W8A8 decode through `prefill_into`/`step_into` with a forced
+/// kernel backend; returns the token stream plus every logit's bits.
+fn greedy_with_kernels(
+    model: &QuantizedMambaModel,
+    prompt: &[u16],
+    steps: usize,
+    kers: Kernels,
+) -> (Vec<u16>, Vec<u32>) {
+    let tier = model.tier().clone();
+    let v = tier.vocab;
+    let mut st = MambaState::new_quantized(&tier, 1);
+    let mut scratch = StepScratch::with_kernels(1, kers);
+    let mut logits = Vec::new();
+    model.prefill_into(prompt, &mut st, &mut scratch, &mut logits);
+    let mut bits: Vec<u32> = logits.iter().map(|x| x.to_bits()).collect();
+    let argmax = |row: &[f32]| -> u16 {
+        let mut best = 0usize;
+        for (i, x) in row.iter().enumerate() {
+            if *x > row[best] {
+                best = i;
+            }
+        }
+        best as u16
+    };
+    let mut toks = vec![argmax(&logits[(prompt.len() - 1) * v..prompt.len() * v])];
+    for _ in 1..steps {
+        let t = [*toks.last().unwrap()];
+        model.step_into(&t, &mut st, &mut scratch, &mut logits);
+        bits.extend(logits.iter().map(|x| x.to_bits()));
+        toks.push(argmax(&logits[..v]));
+    }
+    (toks, bits)
+}
+
+#[test]
+fn w8a8_greedy_tokens_bit_identical_across_kernel_backends() {
+    // ISSUE 3 satellite acceptance: the W8A8 greedy-token parity run,
+    // repeated once per dispatch backend (forced scalar vs every
+    // detected SIMD path), must produce identical tokens AND identical
+    // logit bits — proving a backend switch can never move the model
+    let tier = parity_tier();
+    let model = MambaModel::synthetic(tier.clone(), 7);
+    let mut r = Pcg32::new(7 ^ 0x1234);
+    let calib: Vec<u16> = (0..256).map(|_| r.below(tier.vocab as u32) as u16).collect();
+    let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let prompt: Vec<u16> = (0..8).map(|_| r.below(tier.vocab as u32) as u16).collect();
+    let (toks0, bits0) = greedy_with_kernels(&qm, &prompt, 48, Kernels::scalar());
+    for backend in Kernels::available() {
+        let (toks, bits) = greedy_with_kernels(&qm, &prompt, 48, Kernels::for_backend(backend));
+        assert_eq!(toks0, toks, "greedy tokens diverged on backend {}", backend.label());
+        assert_eq!(bits0, bits, "logit bits diverged on backend {}", backend.label());
     }
 }

@@ -1,5 +1,8 @@
 //! ISSUE 2 acceptance: `QuantizedMambaModel::step_into` performs ZERO
-//! heap allocations per call once the [`StepScratch`] has warmed up.
+//! heap allocations per call once the [`StepScratch`] has warmed up —
+//! and (ISSUE 3) not just for power-of-two `d_inner`: the Paley-base
+//! 12·2^k tier is held to the same standard now that each layer caches
+//! its `FwhtPlan` (base matrix + stack temp instead of per-call Vecs).
 //!
 //! Measured with a counting `#[global_allocator]` wrapper around the
 //! system allocator. The counter is thread-local (const-initialized,
@@ -57,24 +60,34 @@ fn tier() -> MambaTier {
         n_layer: 2,
         d_state: 4,
         d_conv: 4,
-        // power of two: the in-place FWHT path. The zero-alloc
-        // guarantee is scoped to pow2 d_inner (all current tiers);
-        // Paley-base d_inner would allocate in fwht_rows (ROADMAP:
-        // cache the base matrix per layer, then widen this test)
+        // power of two: the butterfly-only FWHT path
         d_inner: 32,
         dt_rank: 4,
         vocab: 32,
     }
 }
 
-#[test]
-fn w8a8_step_is_allocation_free_after_warmup() {
-    let t = tier();
+fn paley_tier() -> MambaTier {
+    MambaTier {
+        name: "alloc12".into(),
+        d_model: 16,
+        n_layer: 2,
+        d_state: 4,
+        d_conv: 4,
+        // 48 = 12·2^2: the Paley-base FWHT path — the per-layer
+        // FwhtPlan (cached base matrix, stack temp) keeps it zero-alloc
+        d_inner: 48,
+        dt_rank: 4,
+        vocab: 32,
+    }
+}
+
+fn assert_w8a8_step_zero_alloc(t: &MambaTier) {
     let model = MambaModel::synthetic(t.clone(), 7);
     let calib: Vec<u16> = (0..256u16).map(|i| i % t.vocab as u16).collect();
     let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
     let b = 4usize;
-    let mut st = MambaState::new_quantized(&t, b);
+    let mut st = MambaState::new_quantized(t, b);
     let mut scratch = StepScratch::new(1);
     let mut logits = Vec::new();
     let toks: Vec<u16> = (0..b as u16).collect();
@@ -90,9 +103,23 @@ fn w8a8_step_is_allocation_free_after_warmup() {
     assert_eq!(
         after - before,
         0,
-        "W8A8 step_into heap-allocated {} time(s) across 16 post-warmup calls",
+        "tier {}: W8A8 step_into heap-allocated {} time(s) across 16 post-warmup calls",
+        t.name,
         after - before
     );
+}
+
+#[test]
+fn w8a8_step_is_allocation_free_after_warmup() {
+    assert_w8a8_step_zero_alloc(&tier());
+}
+
+#[test]
+fn w8a8_step_is_allocation_free_for_paley_base_d_inner() {
+    // ISSUE 3 satellite (ROADMAP item): the 12·2^k tier used to
+    // allocate its Hadamard base matrix + temp inside fwht_rows every
+    // step; the cached per-layer FwhtPlan removes that
+    assert_w8a8_step_zero_alloc(&paley_tier());
 }
 
 #[test]

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff a fresh BENCH_native_decode.json against
+the committed baseline and emit warnings for per-op regressions.
+
+Usage:
+    python3 tools/bench_diff.py BASELINE.json FRESH.json [--warn-pct 25]
+
+Entries are matched by (op, shape). A fresh entry whose `ms` is more
+than --warn-pct percent above the baseline produces a GitHub Actions
+`::warning::` annotation (the step itself stays green: shared-runner
+timing noise must not block merges — the annotations make the
+trajectory visible in the PR checks instead). Exit code is 0 unless a
+file is unreadable/malformed.
+
+The committed baseline starts out `"provisional": true` (this repo's
+build toolchain lives outside the container that authored it); the
+first CI run on real hardware prints a refresh instruction. To refresh:
+copy a trusted run's BENCH_native_decode.json over the baseline file.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    entries = {}
+    for e in doc.get("entries", []):
+        entries[(e["op"], e["shape"])] = e
+    return doc, entries
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    warn_pct = 25.0
+    if "--warn-pct" in argv:
+        warn_pct = float(argv[argv.index("--warn-pct") + 1])
+    try:
+        base_doc, base = load(argv[1])
+        _, fresh = load(argv[2])
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench_diff: cannot read inputs: {e}")
+        return 2
+
+    common = sorted(set(base) & set(fresh))
+    if base_doc.get("provisional") or not common:
+        print(
+            "bench_diff: baseline is provisional/empty — no gating this run.\n"
+            f"To arm the gate, refresh the baseline from a trusted run:\n"
+            f"    cp {argv[2]} {argv[1]}"
+        )
+        return 0
+
+    regressions = 0
+    print(f"{'op':<28} {'shape':<34} {'base ms':>10} {'fresh ms':>10} {'delta':>8}")
+    for key in common:
+        b, f = base[key]["ms"], fresh[key]["ms"]
+        delta = (f - b) / b * 100.0 if b > 0 else 0.0
+        flag = ""
+        if delta > warn_pct:
+            regressions += 1
+            flag = "  <-- REGRESSION"
+            print(
+                f"::warning title=perf regression::{key[0]} [{key[1]}] "
+                f"{b:.4f}ms -> {f:.4f}ms (+{delta:.1f}% > {warn_pct:.0f}%)"
+            )
+        print(f"{key[0]:<28} {key[1]:<34} {b:>10.4f} {f:>10.4f} {delta:>+7.1f}%{flag}")
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+    if only_base:
+        print(f"bench_diff: {len(only_base)} baseline op(s) missing from fresh run: {only_base}")
+    if only_fresh:
+        print(f"bench_diff: {len(only_fresh)} new op(s) not in baseline yet: {only_fresh}")
+    print(
+        f"bench_diff: {len(common)} ops compared, {regressions} regression(s) "
+        f"over the {warn_pct:.0f}% budget"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
