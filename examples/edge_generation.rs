@@ -47,7 +47,7 @@ fn main() -> Result<()> {
             id: 1,
             prompt: prompt.clone(),
             max_new_tokens: max_new,
-            params: SamplingParams { temperature: 0.7, top_k: 30, seed: 3 },
+            params: SamplingParams { temperature: 0.7, top_k: 30, seed: 3, ..Default::default() },
             stop_at_eos: false,
         });
         let t0 = std::time::Instant::now();

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
         let rx = server.submit(
             prompt.clone(),
             32,
-            SamplingParams { temperature: 0.8, top_k: 20, seed: 1 },
+            SamplingParams { temperature: 0.8, top_k: 20, seed: 1, ..Default::default() },
         );
         let resp = rx.recv()?;
         let bytes = mani

@@ -11,13 +11,20 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
 //! `--kernels scalar|avx2|neon` forces the int8 kernel dispatch (also
 //! settable process-wide via `QUAMBA_KERNELS`); tokens are
 //! bit-identical across backends, only latency moves.
+//! `--cache-mb M` (native backend, 0 = off) arms the prefix-sharing
+//! state cache with an M-megabyte snapshot budget and
+//! `--snapshot-stride N` interior cut points; `--shared-prefix L`
+//! prepends the same L-token system prompt to every request so the
+//! warm-TTFT effect is visible — the end-of-run report gains a
+//! `prefix-cache` line (hit rate, bytes, prefill tokens saved).
+//! Cached-path tokens are bit-identical to cache-off serving.
 
 use anyhow::Result;
 use quamba::bench_support::Workload;
@@ -49,7 +56,8 @@ fn main() -> Result<()> {
 }
 
 /// Feed the Poisson workload into a running server; returns
-/// (completed, wall seconds, metrics report).
+/// (completed, wall seconds, metrics report). With an armed prefix
+/// cache, appends a one-line hit/bytes summary from the engine thread.
 fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64, Option<String>) {
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -63,7 +71,20 @@ fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64
     }
     let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
     let wall = t0.elapsed().as_secs_f64();
-    let report = server.metrics_report();
+    let mut report = server.metrics_report();
+    if let Some(c) = server.cache_stats() {
+        let line = format!(
+            "cache summary: {:.0}% hit rate, {} prefill tokens saved, {}/{} bytes",
+            100.0 * c.hit_rate(),
+            c.prefill_tokens_saved,
+            c.bytes_in_use,
+            c.capacity_bytes
+        );
+        report = Some(match report {
+            Some(r) => format!("{r}\n{line}"),
+            None => line,
+        });
+    }
     server.shutdown();
     (done, wall, report)
 }
@@ -133,7 +154,19 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         qmodel.weight_bytes_i8() as f64 / 1024.0
     );
     let stream: Vec<u16> = (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
-    let wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
+    let mut wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
+    // shared system prompt: the prefix-cache demo workload — every
+    // request pays its prefill once, the rest hit the trie
+    let shared_prefix = args.get_usize("shared-prefix", 0);
+    if shared_prefix > 0 {
+        let prefix: Vec<u16> =
+            (0..shared_prefix).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+        for p in wl.prompts.iter_mut() {
+            let mut with = prefix.clone();
+            with.extend_from_slice(p);
+            *p = with;
+        }
+    }
 
     let threads = args.get_usize("threads", 1);
     let kernel_backend = args.get("kernels").filter(|v| *v != "auto").map(|v| {
@@ -145,6 +178,15 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         None => Kernels::auto(),
     };
     println!("int8 kernel dispatch: {} (override with --kernels / QUAMBA_KERNELS)", kers.label());
+    let cache_bytes = args.get_mb("cache-mb", 0.0);
+    let snapshot_stride = args.get_usize("snapshot-stride", 64);
+    if cache_bytes > 0 {
+        println!(
+            "prefix cache: {:.1} MB budget, snapshot stride {snapshot_stride} \
+             (tokens are bit-identical to --cache-mb 0)",
+            cache_bytes as f64 / 1e6
+        );
+    }
     let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
     for (name, m) in backends {
@@ -154,7 +196,13 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         );
         let server = ServerHandle::spawn_native(
             m,
-            NativeEngineConfig { threads, kernel_backend, ..Default::default() },
+            NativeEngineConfig {
+                threads,
+                kernel_backend,
+                cache_bytes,
+                snapshot_stride,
+                ..Default::default()
+            },
         )?;
         let (done, wall, report) = drive(server, &wl, max_new);
         println!("completed {done}/{n} in {wall:.2}s");

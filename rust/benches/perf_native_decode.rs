@@ -14,11 +14,16 @@
 //!   speedups (blocked GEMM on decode/prefill shapes, fused i8 conv,
 //!   W8A8 step) — acceptance: ≥1.5x on the blocked GEMM for at least
 //!   one decode-shaped op when a SIMD backend is available;
+//! * (ISSUE 4) warm-vs-cold TTFT through the prefix cache: two
+//!   requests share a 512-token prefix; the warm one must run ≥2x
+//!   fewer prefill token-steps (deterministic; wall-clock TTFT is
+//!   recorded alongside as `ttft_cold` / `ttft_warm`);
 //! * persists the whole table to `BENCH_native_decode.json` (override
 //!   the path with `QUAMBA_BENCH_JSON`) so CI can diff runs against
 //!   the committed baseline (`tools/bench_diff.py`).
 
 use quamba::bench_support::{bench_ms, f2, iters, ms, Table};
+use quamba::coordinator::{NativeEngine, NativeEngineConfig, Request, SamplingParams};
 use quamba::quant::qlinear::{
     matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, PackedWeightI8,
 };
@@ -285,6 +290,56 @@ fn main() {
     ]);
     pf.print();
 
+    // ---- prefix cache: warm vs cold TTFT over a shared 512-token prefix ----
+    // ISSUE 4: the first request (cold) prefills the whole prompt and
+    // leaves snapshots behind; the second (warm) shares the 512-token
+    // prefix, restores the cached state and prefills only its own
+    // suffix. Token-steps are the deterministic acceptance quantity;
+    // wall-clock TTFT rides along in the JSON.
+    let shared_len = 512usize;
+    let suffix_len = 16usize;
+    let shared: Vec<u16> =
+        (0..shared_len).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let mut mk_prompt = || -> Vec<u16> {
+        let mut p = shared.clone();
+        p.extend((0..suffix_len).map(|_| rng.below(tier.vocab as u32) as u16));
+        p
+    };
+    let cold_prompt = mk_prompt();
+    let warm_prompt = mk_prompt();
+    let q_cached = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let mut eng = NativeEngine::new(
+        Box::new(q_cached),
+        NativeEngineConfig { cache_bytes: 8 << 20, snapshot_stride: 128, ..Default::default() },
+    );
+    let mk_req = |id: u64, prompt: Vec<u16>| Request {
+        id,
+        prompt,
+        max_new_tokens: 1,
+        params: SamplingParams::default(),
+        stop_at_eos: false,
+    };
+    eng.submit(mk_req(1, cold_prompt.clone()));
+    let cold_resp = eng.run_to_completion().unwrap().remove(0);
+    eng.submit(mk_req(2, warm_prompt.clone()));
+    let warm_resp = eng.run_to_completion().unwrap().remove(0);
+    let cache_stats = eng.cache_stats().expect("cache is armed");
+    let (ttft_cold, ttft_warm) = (cold_resp.ttft_ms, warm_resp.ttft_ms);
+    let cold_steps = cold_prompt.len();
+    let warm_steps = warm_prompt.len() - cache_stats.prefill_tokens_saved as usize;
+    let step_ratio = cold_steps as f64 / warm_steps.max(1) as f64;
+    let mut ct = Table::new(
+        &format!(
+            "§Perf — prefix cache: warm vs cold TTFT (shared {shared_len}-token prefix, \
+             stride 128, hit rate {:.0}%)",
+            100.0 * cache_stats.hit_rate()
+        ),
+        &["path", "prefill token-steps", "TTFT ms"],
+    );
+    ct.row(vec!["cold (miss: full prompt)".into(), cold_steps.to_string(), ms(ttft_cold)]);
+    ct.row(vec!["warm (hit: suffix only)".into(), warm_steps.to_string(), ms(ttft_warm)]);
+    ct.print();
+
     let speedup = before.mean / q_step.mean;
     println!(
         "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
@@ -312,6 +367,14 @@ fn main() {
     } else {
         println!("acceptance (≥1.5x scalar→SIMD blocked GEMM): n/a — no SIMD backend on this machine");
     }
+    println!(
+        "acceptance (≥2x fewer prefill token-steps warm vs cold, shared {shared_len}-token prefix): {} \
+         ({:.1}x fewer: {cold_steps} vs {warm_steps} steps; {} tokens saved; wall-clock TTFT {:.2}x)",
+        if step_ratio >= 2.0 { "PASS" } else { "FAIL" },
+        step_ratio,
+        cache_stats.prefill_tokens_saved,
+        ttft_cold / ttft_warm.max(1e-9),
+    );
 
     // ---- machine-readable trajectory ----
     let mut entries = vec![
@@ -375,6 +438,21 @@ fn main() {
         shape: format!("B={b} tier={}", tier.name),
         ms: step_simd.mean,
         speedup: step_scalar.mean / step_simd.mean,
+    });
+    // warm/cold TTFT through the prefix cache. `speedup` on the warm
+    // entry is the deterministic token-step ratio (cold steps / warm
+    // steps), not a timing ratio — the acceptance quantity.
+    entries.push(Entry {
+        op: "ttft_cold",
+        shape: format!("T={} shared={shared_len} tier={}", cold_prompt.len(), tier.name),
+        ms: ttft_cold,
+        speedup: 1.0,
+    });
+    entries.push(Entry {
+        op: "ttft_warm",
+        shape: format!("T={} shared={shared_len} tier={}", warm_prompt.len(), tier.name),
+        ms: ttft_warm,
+        speedup: step_ratio,
     });
     let path = std::env::var("QUAMBA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_decode.json".to_string());

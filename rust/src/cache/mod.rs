@@ -1,0 +1,27 @@
+//! Prefix-sharing SSM state cache — warm-TTFT serving from O(1)
+//! prompt snapshots.
+//!
+//! The serving argument (paper §1): a selective SSM's prompt context
+//! is a **constant-size** recurrent state, so caching "everything this
+//! prompt did" costs the same bytes at any prompt length — prefix
+//! caching is uniquely cheap for SSMs. This module provides:
+//!
+//! * [`trie::TokenTrie`] — token-prefix trie with longest-prefix match
+//! * [`prefix::PrefixCache`] — the byte-budgeted, LRU-evicting
+//!   snapshot store both engines admit requests through
+//!
+//! Integration lives in `coordinator/native.rs` (true prefix reuse:
+//! restore + suffix-only prefill) and `coordinator/engine.rs` (the
+//! fixed-length XLA prefill can only replay exact whole-prompt hits);
+//! the per-request opt-out is `SamplingParams::no_cache`. Cached-path
+//! decode is **bit-identical** to cold-path decode — the cache may
+//! never change tokens, only TTFT (`rust/tests/prefix_cache.rs`).
+
+pub mod prefix;
+pub mod trie;
+
+pub use prefix::{
+    CacheHit, CacheStats, PrefixCache, PrefixCacheConfig, Snapshot, ENTRY_OVERHEAD_BYTES,
+    KEY_TOKEN_OVERHEAD_BYTES,
+};
+pub use trie::TokenTrie;

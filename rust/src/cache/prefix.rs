@@ -1,0 +1,500 @@
+//! The byte-budgeted, LRU-evicting prefix cache of SSM state
+//! snapshots.
+//!
+//! ## Why this is cheap for SSMs (paper §1 / §2)
+//!
+//! A selective-SSM layer's entire prompt context after prefill is one
+//! **constant-size** state: the `(d_inner × d_state)` f32 recurrent
+//! h-state plus a `(d_conv−1 × d_inner)` conv window (held as i8 codes
+//! for the W8A8 model). A full-prompt snapshot therefore costs the
+//! same bytes whether the shared prefix is 10 or 10,000 tokens —
+//! unlike a KV cache, whose snapshots grow O(T). Snapshot cost:
+//!
+//! ```text
+//! bytes = n_layer · (conv_bytes · (d_conv−1) · d_inner  +  4 · d_inner · d_state)
+//!         (+ 4 · vocab for end-of-prompt snapshots, which carry the
+//!          last logits row so an exact-prompt hit skips prefill
+//!          entirely)            conv_bytes = 1 (i8 codes) or 4 (f32)
+//! ```
+//!
+//! The byte budget additionally charges every entry a fixed overhead
+//! plus a per-key-token trie-path cost ([`ENTRY_OVERHEAD_BYTES`],
+//! [`KEY_TOKEN_OVERHEAD_BYTES`]), so `capacity_bytes` conservatively
+//! bounds real memory including the trie, not just the slabs.
+//!
+//! ## Replay guarantee
+//!
+//! The cache may never change tokens — only TTFT. That holds because
+//! (a) prefill is split-anywhere bit-exact: running a prompt in
+//! segments through `StepModel::prefill_resume_into` reproduces the
+//! one-shot logits and final state bit-for-bit (the same property that
+//! makes the stepwise prefill oracle exact), and (b) a snapshot keyed
+//! by a token prefix is the deterministic state of that prefix, so
+//! restoring it and prefilling only the suffix replays the cold
+//! computation exactly. Both are property-tested in
+//! `rust/tests/prefix_cache.rs`.
+
+use crate::coordinator::state::SsmSlab;
+
+use super::trie::TokenTrie;
+
+/// Linked-list sentinel for the LRU chain.
+const NIL: u32 = u32::MAX;
+
+/// Approximate per-entry bookkeeping bytes (LRU links + slab headers)
+/// charged against the budget on top of the payload.
+pub const ENTRY_OVERHEAD_BYTES: usize = 96;
+
+/// Per-key-token bytes charged for the trie path: each token of a
+/// cached key may create one arena node (parent/token/entry fields +
+/// child-map heap). Shared prefixes share nodes, so charging every
+/// entry for its full key length makes the budget a conservative
+/// *upper* bound on real trie memory — long-prompt keys cannot blow
+/// past `capacity_bytes` through unbudgeted path nodes.
+pub const KEY_TOKEN_OVERHEAD_BYTES: usize = 48;
+
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// total snapshot-byte budget; admission evicts LRU entries to fit
+    pub capacity_bytes: usize,
+    /// also snapshot every `stride` prompt tokens (nested-prefix
+    /// reuse); 0 = end-of-prompt snapshots only
+    pub snapshot_stride: usize,
+}
+
+/// One cached state: the constant-size slab, plus — for end-of-prompt
+/// snapshots — the prompt's last logits row, which lets an
+/// exact-prompt hit skip prefill (and the fixed-length XLA engine,
+/// which cannot replay a suffix, reuse whole prompts).
+pub struct Snapshot {
+    pub slab: SsmSlab,
+    pub logits_row: Option<Vec<f32>>,
+}
+
+impl Snapshot {
+    /// Budgeted payload bytes: slab + logits row +
+    /// [`ENTRY_OVERHEAD_BYTES`]. Admission additionally charges
+    /// [`KEY_TOKEN_OVERHEAD_BYTES`] per key token for the trie path.
+    pub fn bytes(&self) -> usize {
+        self.slab.bytes()
+            + self.logits_row.as_ref().map_or(0, |l| 4 * l.len())
+            + ENTRY_OVERHEAD_BYTES
+    }
+}
+
+/// A successful probe: the matched prefix length and owned clones of
+/// the cached payload (the caller feeds them straight into a
+/// `MambaState` / pool slot).
+pub struct CacheHit {
+    pub len: usize,
+    pub slab: SsmSlab,
+    /// present iff `len` covered the whole probed prompt
+    pub logits_row: Option<Vec<f32>>,
+}
+
+/// Counters the serving metrics mirror (`coordinator/metrics.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub evicted_bytes: u64,
+    /// prompt tokens NOT prefilled thanks to hits (the TTFT win)
+    pub prefill_tokens_saved: u64,
+    pub bytes_in_use: usize,
+    pub entries: usize,
+    pub capacity_bytes: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+}
+
+struct Entry {
+    /// trie node this entry is parked at
+    node: usize,
+    bytes: usize,
+    prev: u32,
+    next: u32,
+    slab: SsmSlab,
+    logits_row: Option<Vec<f32>>,
+}
+
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    trie: TokenTrie,
+    entries: Vec<Option<Entry>>,
+    free: Vec<u32>,
+    /// most-recently-used entry
+    head: u32,
+    /// least-recently-used entry (eviction victim)
+    tail: u32,
+    stats: CacheStats,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache {
+        assert!(cfg.capacity_bytes > 0, "a zero-byte cache cannot admit anything");
+        let stats = CacheStats { capacity_bytes: cfg.capacity_bytes, ..Default::default() };
+        PrefixCache {
+            cfg,
+            trie: TokenTrie::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            stats,
+        }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Longest usable cached prefix of `tokens`. A match shorter than
+    /// the prompt is always usable (the engine prefills the suffix); a
+    /// full-length match is usable only if the snapshot carries the
+    /// last logits row (nothing is left to prefill, so the first
+    /// sample must come from the cache). Hits are cloned out and
+    /// refresh recency; probes count toward hit/miss stats.
+    pub fn lookup(&mut self, tokens: &[u16]) -> Option<CacheHit> {
+        let mut best: Option<(usize, u32)> = None;
+        for (len, id) in self.trie.matches(tokens) {
+            let e = self.entries[id as usize].as_ref().expect("trie points at a live entry");
+            if len < tokens.len() || e.logits_row.is_some() {
+                best = Some((len, id)); // matches come shallow→deep
+            }
+        }
+        self.finish_probe(tokens.len(), best)
+    }
+
+    /// Whole-prompt probe: hit only when the full `tokens` sequence is
+    /// cached **with** its logits row. This is the only reuse the
+    /// fixed-length left-padded XLA prefill can replay bit-exactly —
+    /// a partial prefix would need a suffix-shaped graph.
+    pub fn lookup_exact(&mut self, tokens: &[u16]) -> Option<CacheHit> {
+        let mut best: Option<(usize, u32)> = None;
+        for (len, id) in self.trie.matches(tokens) {
+            let e = self.entries[id as usize].as_ref().expect("trie points at a live entry");
+            if len == tokens.len() && e.logits_row.is_some() {
+                best = Some((len, id));
+            }
+        }
+        self.finish_probe(tokens.len(), best)
+    }
+
+    fn finish_probe(&mut self, prompt_len: usize, best: Option<(usize, u32)>) -> Option<CacheHit> {
+        match best {
+            Some((len, id)) => {
+                self.stats.hits += 1;
+                self.stats.prefill_tokens_saved += len as u64;
+                self.touch(id);
+                let e = self.entries[id as usize].as_ref().unwrap();
+                // the logits row travels ONLY on whole-prompt hits: a
+                // partial match may land on some shorter prompt's
+                // end-of-prompt snapshot, whose row belongs to THAT
+                // prompt — surfacing it here would let a caller sample
+                // a stale row instead of prefilling the suffix
+                let logits_row =
+                    if len == prompt_len { e.logits_row.clone() } else { None };
+                Some(CacheHit { len, slab: e.slab.clone(), logits_row })
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Admit a snapshot keyed by `tokens`. If the key is already
+    /// cached, the existing entry is refreshed (and upgraded with the
+    /// logits row if the new snapshot carries one and it didn't) —
+    /// deterministic models make re-stored bytes identical, so there
+    /// is nothing to overwrite. Admission evicts LRU entries until the
+    /// budget fits; a snapshot larger than the whole budget is
+    /// rejected outright.
+    pub fn insert(&mut self, tokens: &[u16], snap: Snapshot) {
+        if tokens.is_empty() {
+            return;
+        }
+        if let Some(id) = self.trie.find(tokens).and_then(|n| self.trie.entry(n)) {
+            // refresh path: recency + optional logits upgrade
+            let e = self.entries[id as usize].as_mut().expect("trie points at a live entry");
+            if e.logits_row.is_none() {
+                if let Some(row) = snap.logits_row {
+                    let extra = 4 * row.len();
+                    e.logits_row = Some(row);
+                    e.bytes += extra;
+                    self.stats.bytes_in_use += extra;
+                }
+            }
+            self.touch(id);
+            // the upgrade may have pushed us over budget; never evict
+            // the entry we just refreshed (its node holds an entry, so
+            // eviction pruning can never detach it)
+            while self.stats.bytes_in_use > self.cfg.capacity_bytes && self.tail != id {
+                self.evict_lru();
+            }
+            // touch() made `id` the head, so `tail == id` means it is
+            // now the only entry; if it alone exceeds the budget, give
+            // the just-added row back rather than carrying a permanent
+            // budget violation (the slab fit when first admitted)
+            if self.stats.bytes_in_use > self.cfg.capacity_bytes {
+                let e = self.entries[id as usize].as_mut().unwrap();
+                if let Some(row) = e.logits_row.take() {
+                    let extra = 4 * row.len();
+                    e.bytes -= extra;
+                    self.stats.bytes_in_use -= extra;
+                }
+            }
+            return;
+        }
+        // budget charge = payload + per-entry overhead + a conservative
+        // per-key-token trie-path charge (see KEY_TOKEN_OVERHEAD_BYTES)
+        let bytes = snap.bytes() + tokens.len() * KEY_TOKEN_OVERHEAD_BYTES;
+        if bytes > self.cfg.capacity_bytes {
+            // un-admittable; nothing has been created yet
+            return;
+        }
+        // evict BEFORE creating the key's trie path: evicting an entry
+        // that shares this key's path would prune the just-created
+        // (still entry-less) node out of the trie, and the new entry
+        // would land on a detached, recycled node
+        while self.stats.bytes_in_use + bytes > self.cfg.capacity_bytes {
+            self.evict_lru();
+        }
+        let node = self.trie.insert_path(tokens);
+        debug_assert!(self.trie.entry(node).is_none(), "refresh branch must have caught this key");
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.entries.push(None);
+                (self.entries.len() - 1) as u32
+            }
+        };
+        self.entries[id as usize] = Some(Entry {
+            node,
+            bytes,
+            prev: NIL,
+            next: NIL,
+            slab: snap.slab,
+            logits_row: snap.logits_row,
+        });
+        self.trie.set_entry(node, id);
+        self.push_front(id);
+        self.stats.bytes_in_use += bytes;
+        self.stats.entries += 1;
+        self.stats.insertions += 1;
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self.tail;
+        assert_ne!(victim, NIL, "evict called on an empty cache");
+        self.detach(victim);
+        let e = self.entries[victim as usize].take().expect("LRU chain points at a live entry");
+        self.trie.remove_entry(e.node);
+        self.free.push(victim);
+        self.stats.bytes_in_use -= e.bytes;
+        self.stats.entries -= 1;
+        self.stats.evictions += 1;
+        self.stats.evicted_bytes += e.bytes as u64;
+    }
+
+    fn touch(&mut self, id: u32) {
+        if self.head == id {
+            return;
+        }
+        self.detach(id);
+        self.push_front(id);
+    }
+
+    fn detach(&mut self, id: u32) {
+        let (prev, next) = {
+            let e = self.entries[id as usize].as_ref().unwrap();
+            (e.prev, e.next)
+        };
+        if prev != NIL {
+            self.entries[prev as usize].as_mut().unwrap().next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.entries[next as usize].as_mut().unwrap().prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        let e = self.entries[id as usize].as_mut().unwrap();
+        e.prev = NIL;
+        e.next = NIL;
+    }
+
+    fn push_front(&mut self, id: u32) {
+        let old = self.head;
+        {
+            let e = self.entries[id as usize].as_mut().unwrap();
+            e.prev = NIL;
+            e.next = old;
+        }
+        if old != NIL {
+            self.entries[old as usize].as_mut().unwrap().prev = id;
+        } else {
+            self.tail = id;
+        }
+        self.head = id;
+    }
+
+    /// Live trie node count (tests: eviction must prune paths).
+    pub fn trie_nodes(&self) -> usize {
+        self.trie.node_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(n: usize, fill: f32) -> SsmSlab {
+        SsmSlab { conv: vec![fill; n], conv_q: Vec::new(), ssm: vec![-fill; n] }
+    }
+
+    fn snap(n: usize, fill: f32) -> Snapshot {
+        Snapshot { slab: slab(n, fill), logits_row: None }
+    }
+
+    #[test]
+    fn longest_prefix_match_and_full_match_rules() {
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: 1 << 20,
+            snapshot_stride: 0,
+        });
+        c.insert(&[1, 2, 3], snap(4, 1.0));
+        c.insert(&[1, 2, 3, 4, 5], snap(4, 2.0));
+        // partial: deepest snapshot wins
+        let h = c.lookup(&[1, 2, 3, 4, 5, 6]).expect("prefix hit");
+        assert_eq!(h.len, 5);
+        assert_eq!(h.slab.conv, vec![2.0; 4]);
+        assert!(h.logits_row.is_none());
+        // full-length without a logits row is unusable — the probe
+        // falls back to the shallower snapshot
+        assert_eq!(c.lookup(&[1, 2, 3, 4, 5]).map(|h| h.len), Some(3));
+        // … but becomes usable once upgraded with one
+        c.insert(
+            &[1, 2, 3, 4, 5],
+            Snapshot { slab: slab(4, 2.0), logits_row: Some(vec![9.0; 8]) },
+        );
+        let h = c.lookup(&[1, 2, 3, 4, 5]).expect("full hit after upgrade");
+        assert_eq!(h.len, 5);
+        assert_eq!(h.logits_row.as_deref(), Some(&[9.0f32; 8][..]));
+        // a PARTIAL hit landing on that same logits-bearing key must
+        // strip the row — it belongs to the shorter prompt, and the
+        // caller has a suffix left to prefill
+        let h = c.lookup(&[1, 2, 3, 4, 5, 6]).expect("partial hit");
+        assert_eq!(h.len, 5);
+        assert!(h.logits_row.is_none(), "stale logits row leaked through a partial hit");
+        // no shared prefix at all
+        assert!(c.lookup(&[7, 7, 7]).is_none());
+        let s = c.stats();
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.prefill_tokens_saved, (5 + 3 + 5 + 5) as u64);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        // single-token keys: one trie-path token charge per entry
+        let per = snap(8, 0.0).bytes() + KEY_TOKEN_OVERHEAD_BYTES;
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: 2 * per,
+            snapshot_stride: 0,
+        });
+        c.insert(&[1], snap(8, 1.0));
+        c.insert(&[2], snap(8, 2.0));
+        assert_eq!(c.stats().entries, 2);
+        // touch [1] so [2] becomes the LRU victim
+        assert!(c.lookup(&[1, 9]).is_some());
+        c.insert(&[3], snap(8, 3.0));
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.evicted_bytes, per as u64);
+        assert!(s.bytes_in_use <= s.capacity_bytes);
+        assert!(c.lookup(&[2, 9]).is_none(), "LRU entry [2] must be gone");
+        assert!(c.lookup(&[1, 9]).is_some());
+        assert!(c.lookup(&[3, 9]).is_some());
+        // eviction pruned [2]'s trie path
+        assert_eq!(c.trie_nodes(), 2);
+    }
+
+    #[test]
+    fn oversized_snapshot_rejected() {
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: 64,
+            snapshot_stride: 0,
+        });
+        c.insert(&[1, 2], snap(1024, 1.0));
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.stats().bytes_in_use, 0);
+        assert_eq!(c.trie_nodes(), 0, "rejected insert must not leak trie nodes");
+    }
+
+    #[test]
+    fn long_keys_charge_trie_path_bytes() {
+        // a prompt whose slab fits but whose key path would dominate
+        // memory must be rejected — the budget bounds the trie too
+        let key: Vec<u16> = (0..1000u16).collect();
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: snap(8, 0.0).bytes() + 100, // << 1000 token charges
+            snapshot_stride: 0,
+        });
+        c.insert(&key, snap(8, 1.0));
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.trie_nodes(), 0);
+    }
+
+    #[test]
+    fn logits_upgrade_cannot_wedge_budget_above_capacity() {
+        // entry admitted without a row; upgrading with a huge row on a
+        // budget that cannot absorb it must strip the row back rather
+        // than leave bytes_in_use permanently above capacity
+        let base = snap(8, 0.0).bytes() + 2 * KEY_TOKEN_OVERHEAD_BYTES;
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: base + 16,
+            snapshot_stride: 0,
+        });
+        c.insert(&[1, 2], snap(8, 1.0));
+        assert_eq!(c.stats().entries, 1);
+        c.insert(&[1, 2], Snapshot { slab: slab(8, 1.0), logits_row: Some(vec![0.0; 64]) });
+        let s = c.stats();
+        assert!(s.bytes_in_use <= s.capacity_bytes, "{s:?}");
+        assert_eq!(s.entries, 1, "the refreshed entry itself must survive");
+        // without a retained row, a full-length probe cannot hit …
+        assert!(c.lookup(&[1, 2]).is_none());
+        // … but the state is still there for longer prompts
+        assert_eq!(c.lookup(&[1, 2, 3]).map(|h| h.len), Some(2));
+    }
+
+    #[test]
+    fn exact_lookup_ignores_partial_matches() {
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            capacity_bytes: 1 << 20,
+            snapshot_stride: 0,
+        });
+        c.insert(&[1, 2], Snapshot { slab: slab(4, 1.0), logits_row: Some(vec![1.0]) });
+        assert!(c.lookup_exact(&[1, 2, 3]).is_none(), "prefix-only is not exact");
+        assert_eq!(c.lookup_exact(&[1, 2]).map(|h| h.len), Some(2));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+}

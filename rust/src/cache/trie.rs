@@ -1,0 +1,194 @@
+//! Token-prefix trie: maps token sequences to cache-entry ids with
+//! longest-prefix lookup.
+//!
+//! Nodes live in an arena (`Vec<Node>` + free list) with parent links,
+//! so removing an entry can prune the now-useless tail of its path in
+//! O(depth). Children are a `BTreeMap` — prompt branching factors are
+//! tiny next to snapshot bytes, and deterministic iteration keeps the
+//! whole cache replayable.
+
+use std::collections::BTreeMap;
+
+/// Sentinel for "no entry at this node".
+const NO_ENTRY: u32 = u32::MAX;
+
+struct Node {
+    parent: usize,
+    /// edge label from `parent` to this node (unused for the root)
+    token: u16,
+    children: BTreeMap<u16, usize>,
+    /// cache-entry id parked at this node, or [`NO_ENTRY`]
+    entry: u32,
+}
+
+impl Node {
+    fn new(parent: usize, token: u16) -> Node {
+        Node { parent, token, children: BTreeMap::new(), entry: NO_ENTRY }
+    }
+}
+
+pub struct TokenTrie {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// live nodes excluding the root
+    live: usize,
+}
+
+impl Default for TokenTrie {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TokenTrie {
+    pub fn new() -> TokenTrie {
+        TokenTrie { nodes: vec![Node::new(0, 0)], free: Vec::new(), live: 0 }
+    }
+
+    /// Live node count (root excluded) — eviction must prune paths, so
+    /// this cannot grow monotonically.
+    pub fn node_count(&self) -> usize {
+        self.live
+    }
+
+    /// Every `(prefix_len, entry_id)` stored along the path of
+    /// `tokens`, shallowest first. The last element is the
+    /// longest-prefix match.
+    pub fn matches(&self, tokens: &[u16]) -> Vec<(usize, u32)> {
+        let mut out = Vec::new();
+        let mut cur = 0usize;
+        for (i, &tok) in tokens.iter().enumerate() {
+            match self.nodes[cur].children.get(&tok) {
+                Some(&next) => {
+                    cur = next;
+                    if self.nodes[cur].entry != NO_ENTRY {
+                        out.push((i + 1, self.nodes[cur].entry));
+                    }
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Node id spelling exactly `tokens`, if that path already exists
+    /// (read-only twin of [`Self::insert_path`]).
+    pub fn find(&self, tokens: &[u16]) -> Option<usize> {
+        let mut cur = 0usize;
+        for &tok in tokens {
+            cur = *self.nodes[cur].children.get(&tok)?;
+        }
+        Some(cur)
+    }
+
+    /// Walk (creating as needed) the node spelling `tokens`; returns
+    /// its id. `tokens` must be non-empty — the root holds no entry.
+    pub fn insert_path(&mut self, tokens: &[u16]) -> usize {
+        assert!(!tokens.is_empty(), "cannot key a cache entry by the empty prefix");
+        let mut cur = 0usize;
+        for &tok in tokens {
+            cur = match self.nodes[cur].children.get(&tok) {
+                Some(&next) => next,
+                None => {
+                    let id = match self.free.pop() {
+                        Some(id) => {
+                            self.nodes[id] = Node::new(cur, tok);
+                            id
+                        }
+                        None => {
+                            self.nodes.push(Node::new(cur, tok));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.nodes[cur].children.insert(tok, id);
+                    self.live += 1;
+                    id
+                }
+            };
+        }
+        cur
+    }
+
+    /// Entry id at `node`, if any.
+    pub fn entry(&self, node: usize) -> Option<u32> {
+        let e = self.nodes[node].entry;
+        if e == NO_ENTRY {
+            None
+        } else {
+            Some(e)
+        }
+    }
+
+    pub fn set_entry(&mut self, node: usize, id: u32) {
+        debug_assert_ne!(id, NO_ENTRY);
+        self.nodes[node].entry = id;
+    }
+
+    /// Drop the entry at `node` and prune any ancestors left with no
+    /// entry and no children (the orphaned tail of this key's path).
+    pub fn remove_entry(&mut self, node: usize) {
+        self.nodes[node].entry = NO_ENTRY;
+        let mut cur = node;
+        while cur != 0
+            && self.nodes[cur].entry == NO_ENTRY
+            && self.nodes[cur].children.is_empty()
+        {
+            let parent = self.nodes[cur].parent;
+            let token = self.nodes[cur].token;
+            self.nodes[parent].children.remove(&token);
+            self.free.push(cur);
+            self.live -= 1;
+            cur = parent;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longest_prefix_and_nesting() {
+        let mut t = TokenTrie::new();
+        let a = t.insert_path(&[1, 2, 3]);
+        let b = t.insert_path(&[1, 2, 3, 4, 5]);
+        t.set_entry(a, 10);
+        t.set_entry(b, 11);
+        assert_eq!(t.matches(&[1, 2, 3, 4, 5, 6]), vec![(3, 10), (5, 11)]);
+        assert_eq!(t.matches(&[1, 2, 3, 9]), vec![(3, 10)]);
+        assert_eq!(t.matches(&[1, 2]), vec![]);
+        assert_eq!(t.matches(&[7, 7]), vec![]);
+        assert_eq!(t.node_count(), 5);
+    }
+
+    #[test]
+    fn shared_prefix_paths_share_nodes() {
+        let mut t = TokenTrie::new();
+        t.insert_path(&[5, 6, 7]);
+        t.insert_path(&[5, 6, 8]);
+        // 5,6 shared; 7 and 8 split
+        assert_eq!(t.node_count(), 4);
+        // re-inserting an existing path allocates nothing
+        t.insert_path(&[5, 6, 7]);
+        assert_eq!(t.node_count(), 4);
+    }
+
+    #[test]
+    fn remove_prunes_orphaned_tail_only() {
+        let mut t = TokenTrie::new();
+        let shallow = t.insert_path(&[1, 2]);
+        let deep = t.insert_path(&[1, 2, 3, 4]);
+        t.set_entry(shallow, 0);
+        t.set_entry(deep, 1);
+        t.remove_entry(deep);
+        // nodes 3,4 pruned; [1,2] survives (has an entry)
+        assert_eq!(t.node_count(), 2);
+        assert_eq!(t.matches(&[1, 2, 3, 4]), vec![(2, 0)]);
+        t.remove_entry(shallow);
+        assert_eq!(t.node_count(), 0);
+        // arena slots are reused
+        let n = t.insert_path(&[9]);
+        t.set_entry(n, 2);
+        assert_eq!(t.matches(&[9]), vec![(1, 2)]);
+    }
+}

@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::config::Manifest;
 use crate::coordinator::batcher;
 use crate::coordinator::metrics::Metrics;
@@ -37,6 +38,17 @@ pub struct EngineConfig {
     pub max_prefills_per_tick: usize,
     /// seed for the token sampler RNG
     pub sampler_seed: u64,
+    /// prefix-cache byte budget; 0 (default) disables it. The XLA
+    /// engine's prefill graphs are fixed-length and left-padded, so a
+    /// partial prefix cannot be replayed bit-exactly (the pad count
+    /// would differ) — this engine reuses **exact whole-prompt** hits
+    /// only: snapshot = end-of-prompt state + last logits row, hit =
+    /// restore + sample, no graph execution at all. The native engine
+    /// (`super::native`) does true longest-prefix reuse.
+    pub cache_bytes: usize,
+    /// accepted for config parity with [`super::native::NativeEngineConfig`];
+    /// ignored here (exact-only reuse has no interior cut points).
+    pub snapshot_stride: usize,
 }
 
 impl EngineConfig {
@@ -47,6 +59,8 @@ impl EngineConfig {
             capacity: 32,
             max_prefills_per_tick: 2,
             sampler_seed: DEFAULT_SAMPLER_SEED,
+            cache_bytes: 0,
+            snapshot_stride: 0,
         }
     }
 }
@@ -64,6 +78,8 @@ pub struct Engine {
     prefill_graph: String,
     prefill_len: usize,
     vocab: usize,
+    /// exact-prompt snapshot cache (`cfg.cache_bytes > 0`)
+    cache: Option<PrefixCache>,
 }
 
 impl Engine {
@@ -99,6 +115,12 @@ impl Engine {
         let prefill_len = pf.seq;
         let vocab = mani.vocab_size;
         let pool = SsmStatePool::new(&tier, cfg.capacity);
+        let cache = (cfg.cache_bytes > 0).then(|| {
+            PrefixCache::new(PrefixCacheConfig {
+                capacity_bytes: cfg.cache_bytes,
+                snapshot_stride: 0, // exact-only reuse: no cut points
+            })
+        });
         Ok(Engine {
             pool,
             queue: VecDeque::new(),
@@ -110,9 +132,15 @@ impl Engine {
             prefill_graph,
             prefill_len,
             vocab,
+            cache,
             rt,
             cfg,
         })
+    }
+
+    /// Prefix-cache counters; `None` when serving with the cache off.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -222,17 +250,46 @@ impl Engine {
             .alloc()
             .ok_or_else(|| anyhow!("state pool exhausted"))?;
         let t = self.prefill_len;
-        // left-pad with BOS; truncate to the last t tokens if longer
-        let prompt: Vec<u16> = if req.prompt.len() > t {
+        // the effective prompt (the last ≤ t tokens) is what the graph
+        // actually computes on — and therefore the cache key: requests
+        // with equal effective prompts share identical padded inputs
+        let effective: Vec<u16> = if req.prompt.len() > t {
             req.prompt[req.prompt.len() - t..].to_vec()
         } else {
-            let mut p = vec![BOS; t - req.prompt.len()];
-            p.extend_from_slice(&req.prompt);
-            p
+            req.prompt.clone()
         };
-        let toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
+        let use_cache =
+            self.cache.is_some() && !req.params.no_cache && !effective.is_empty();
         let mut lr = LiveRequest::new(req, slot);
         let t0 = std::time::Instant::now();
+        // exact whole-prompt hit: restore the end-of-prompt state and
+        // sample from the cached last logits row — no graph execution.
+        // (Partial prefixes are not replayable here: the fixed-length
+        // graph would left-pad the suffix with a different BOS count
+        // than the cold run saw, changing the state bit pattern.)
+        let hit =
+            if use_cache { self.cache.as_mut().unwrap().lookup_exact(&effective) } else { None };
+        if let Some(h) = hit {
+            // lookup_exact only returns logits-bearing whole-prompt
+            // entries; if that invariant ever drifts, fall through to
+            // a cold prefill instead of panicking the serving thread
+            if let Some(row) = h.logits_row {
+                self.pool.write(slot, h.slab);
+                self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+                let stats = self.cache.as_ref().unwrap().stats();
+                self.metrics.record_cache_stats(stats);
+                let tok = self.sampler.sample(&row, self.vocab, &lr.req.params);
+                lr.generated.push(tok);
+                lr.prefill_done = Some(std::time::Instant::now());
+                lr.last_token = lr.prefill_done;
+                self.live.push(lr);
+                return Ok(());
+            }
+        }
+        // left-pad with BOS to the graph length
+        let mut prompt = vec![BOS; t - effective.len()];
+        prompt.extend_from_slice(&effective);
+        let toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
         let (cs, ss) = self.state_shapes(1);
         let inputs = [
             crate::runtime::lit_from_i32(&[1, t], &toks)?,
@@ -249,6 +306,16 @@ impl Engine {
         // first token from the last position
         let v = self.vocab_dim(&out[0], t)?;
         let row = &logits[(t - 1) * v..t * v];
+        if use_cache {
+            let snap = Snapshot {
+                slab: self.pool.snapshot(slot),
+                logits_row: Some(row.to_vec()),
+            };
+            let c = self.cache.as_mut().unwrap();
+            c.insert(&effective, snap);
+            let stats = c.stats();
+            self.metrics.record_cache_stats(stats);
+        }
         let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
         lr.generated.push(tok);
         lr.prefill_done = Some(std::time::Instant::now());

@@ -1,8 +1,11 @@
 //! Serving metrics: TTFT / TPOT / TTLT histograms, throughput and
-//! queue gauges — the quantities behind paper Table 1 and Fig. 1(a/b).
+//! queue gauges — the quantities behind paper Table 1 and Fig. 1(a/b)
+//! — plus the prefix-cache counters (hits / misses / evicted bytes /
+//! prefill tokens saved) behind the warm-TTFT serving story.
 
 use std::time::Instant;
 
+use crate::cache::CacheStats;
 use crate::util::stats::{LogHistogram, Summary};
 
 pub struct Metrics {
@@ -19,6 +22,9 @@ pub struct Metrics {
     pub requests_done: u64,
     pub padded_lanes: u64,
     pub total_lanes: u64,
+    /// last-synced prefix-cache counters (None until an engine with an
+    /// active cache calls [`Self::record_cache_stats`])
+    pub cache: Option<CacheStats>,
     started: Instant,
 }
 
@@ -43,8 +49,20 @@ impl Metrics {
             requests_done: 0,
             padded_lanes: 0,
             total_lanes: 0,
+            cache: None,
             started: Instant::now(),
         }
+    }
+
+    /// Mirror the engine's prefix-cache counters (overwrite semantics:
+    /// the cache owns the authoritative monotonic counts).
+    pub fn record_cache_stats(&mut self, stats: CacheStats) {
+        self.cache = Some(stats);
+    }
+
+    /// Prompt tokens the prefix cache kept out of prefill so far.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.cache.map_or(0, |c| c.prefill_tokens_saved)
     }
 
     pub fn record_response(&mut self, ttft: f64, tpot: f64, ttlt: f64, n_tokens: usize) {
@@ -95,7 +113,7 @@ impl Metrics {
         let t = self.ttft_summary();
         let p = self.tpot_summary();
         let l = self.ttlt_summary();
-        format!(
+        let mut out = format!(
             "requests={} tokens={} throughput={:.1} tok/s padding={:.1}%\n\
              TTFT ms  mean={:.2} p50={:.2} p99={:.2}\n\
              TPOT ms  mean={:.3} p50={:.3} p99={:.3}\n\
@@ -107,7 +125,22 @@ impl Metrics {
             t.mean, t.p50, t.p99,
             p.mean, p.p50, p.p99,
             l.mean, l.p50, l.p99,
-        )
+        );
+        if let Some(c) = &self.cache {
+            out.push_str(&format!(
+                "\nprefix-cache  hits={} misses={} hit-rate={:.1}% entries={} \
+                 bytes={}/{} evicted={}B tokens-saved={}",
+                c.hits,
+                c.misses,
+                100.0 * c.hit_rate(),
+                c.entries,
+                c.bytes_in_use,
+                c.capacity_bytes,
+                c.evicted_bytes,
+                c.prefill_tokens_saved,
+            ));
+        }
+        out
     }
 }
 
@@ -126,6 +159,28 @@ mod tests {
         assert!((m.padding_fraction() - 3.0 / 8.0).abs() < 1e-12);
         let r = m.report();
         assert!(r.contains("requests=2"));
+        assert!(!r.contains("prefix-cache"), "no cache line until stats are synced");
         assert!((m.ttft_summary().mean - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_counters_surface_in_report() {
+        let mut m = Metrics::new();
+        m.record_cache_stats(CacheStats {
+            hits: 3,
+            misses: 1,
+            prefill_tokens_saved: 96,
+            evicted_bytes: 128,
+            bytes_in_use: 512,
+            entries: 2,
+            capacity_bytes: 1024,
+            ..Default::default()
+        });
+        assert_eq!(m.prefill_tokens_saved(), 96);
+        let r = m.report();
+        assert!(r.contains("prefix-cache"), "{r}");
+        assert!(r.contains("hits=3"), "{r}");
+        assert!(r.contains("hit-rate=75.0%"), "{r}");
+        assert!(r.contains("tokens-saved=96"), "{r}");
     }
 }

@@ -18,6 +18,12 @@
 //! * [`server`]   — a threaded front door (std::mpsc; tokio is not in
 //!                  the offline vendor set, and one executor thread is
 //!                  the right shape for one PJRT CPU device anyway)
+//!
+//! Both engines admit requests through the prefix-sharing snapshot
+//! cache ([`crate::cache`]) when `cache_bytes > 0`: constant-size SSM
+//! state makes whole-prompt snapshots O(1), so shared-prefix traffic
+//! prefills only suffixes (native) or skips prefill entirely on exact
+//! resubmission (both) — bit-identically to the cold path.
 
 pub mod batcher;
 pub mod engine;

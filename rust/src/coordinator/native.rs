@@ -23,18 +23,28 @@
 //! * the int8 hot paths run on the [`Kernels`] SIMD dispatch
 //!   (`NativeEngineConfig::kernel_backend`, default auto-detected /
 //!   `QUAMBA_KERNELS`) — also bit-identical across backends, so
-//!   forcing `scalar` vs `avx2` only moves latency, never tokens.
+//!   forcing `scalar` vs `avx2` only moves latency, never tokens;
+//! * `cache_bytes > 0` arms the prefix-sharing state cache (PR 4,
+//!   [`crate::cache::PrefixCache`]): admission probes the token trie,
+//!   a hit restores the cached constant-size slab and prefills only
+//!   the *suffix* tokens (a full-prompt hit skips prefill entirely via
+//!   the cached last logits row), and misses insert snapshots at
+//!   `snapshot_stride` cut points + end of prompt. Warm paths are
+//!   **bit-identical** to cold — the cache moves TTFT, never tokens
+//!   (`rust/tests/prefix_cache.rs`); `SamplingParams::no_cache` opts a
+//!   request out entirely.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
+use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::DEFAULT_SAMPLER_SEED;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{LiveRequest, Request, Response};
 use crate::coordinator::sampler::Sampler;
-use crate::coordinator::state::SsmStatePool;
+use crate::coordinator::state::{SsmSlab, SsmStatePool};
 use crate::data::BOS;
 use crate::quant::{KernelBackend, Kernels};
 use crate::ssm::{MambaState, StepModel, StepScratch};
@@ -66,6 +76,15 @@ pub struct NativeEngineConfig {
     /// Every backend yields **bit-identical** tokens (tested), so this
     /// knob only changes wall-clock.
     pub kernel_backend: Option<KernelBackend>,
+    /// prefix-cache byte budget; 0 (default) disables the cache. SSM
+    /// snapshots are constant-size, so this is simply
+    /// budget / (state bytes + overhead) cacheable prefixes, whatever
+    /// their token lengths.
+    pub cache_bytes: usize,
+    /// with the cache on, also snapshot every `snapshot_stride` prompt
+    /// tokens (nested-prefix reuse, e.g. a system prompt shared below
+    /// a longer template); 0 = end-of-prompt snapshots only.
+    pub snapshot_stride: usize,
 }
 
 impl Default for NativeEngineConfig {
@@ -77,6 +96,8 @@ impl Default for NativeEngineConfig {
             threads: 1,
             sampler_seed: DEFAULT_SAMPLER_SEED,
             kernel_backend: None,
+            cache_bytes: 0,
+            snapshot_stride: 0,
         }
     }
 }
@@ -106,6 +127,26 @@ struct RoundIo {
     step_ms: f64,
 }
 
+/// Clone a finished/ongoing B=1 prefill state as a pool-layout slab —
+/// the prefix-cache snapshot payload ((L, 1, …) flattens to exactly
+/// the pool's per-slot (L, …) layout).
+fn slab_of(state: &MambaState) -> SsmSlab {
+    debug_assert_eq!(state.b, 1, "snapshots are per-request (B=1) states");
+    SsmSlab { conv: state.conv.clone(), conv_q: state.conv_q.clone(), ssm: state.ssm.clone() }
+}
+
+/// Move a finished B=1 prefill state into a pool-layout slab (no copy).
+fn into_slab(state: MambaState) -> SsmSlab {
+    debug_assert_eq!(state.b, 1);
+    if state.is_quantized_conv() {
+        let (conv_q, ssm) = state.into_raw_q();
+        SsmSlab { conv: Vec::new(), conv_q, ssm }
+    } else {
+        let (conv, ssm) = state.into_raw();
+        SsmSlab { conv, conv_q: Vec::new(), ssm }
+    }
+}
+
 pub struct NativeEngine {
     pub cfg: NativeEngineConfig,
     model: Box<dyn StepModel + Send + Sync>,
@@ -118,6 +159,8 @@ pub struct NativeEngine {
     vocab: usize,
     scratches: Vec<RoundScratch>,
     kernels: Kernels,
+    /// prefix-sharing snapshot cache (`cfg.cache_bytes > 0`)
+    cache: Option<PrefixCache>,
 }
 
 impl NativeEngine {
@@ -134,6 +177,12 @@ impl NativeEngine {
             pool = pool.with_quantized_conv();
         }
         let vocab = t.vocab;
+        let cache = (cfg.cache_bytes > 0).then(|| {
+            PrefixCache::new(PrefixCacheConfig {
+                capacity_bytes: cfg.cache_bytes,
+                snapshot_stride: cfg.snapshot_stride,
+            })
+        });
         NativeEngine {
             pool,
             queue: VecDeque::new(),
@@ -144,9 +193,15 @@ impl NativeEngine {
             vocab,
             scratches: vec![RoundScratch::new(kernels)],
             kernels,
+            cache,
             model,
             cfg,
         }
+    }
+
+    /// Prefix-cache counters; `None` when serving with the cache off.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     pub fn decode_buckets(&self) -> &[usize] {
@@ -237,28 +292,82 @@ impl NativeEngine {
         // empty prompts just become a lone BOS
         let prompt: Vec<u16> =
             if req.prompt.is_empty() { vec![BOS] } else { req.prompt.clone() };
+        let use_cache = self.cache.is_some() && !req.params.no_cache;
         let mut lr = LiveRequest::new(req, slot);
         let t0 = std::time::Instant::now();
         let quantized = self.model.quantized_conv_state();
-        let mut state = MambaState::new_for(self.model.tier(), 1, quantized);
+        let tl = prompt.len();
+        // warm start: restore the longest cached prefix into a fresh
+        // B=1 state and prefill only the suffix; a full-prompt hit also
+        // carries the last logits row and skips prefill entirely. The
+        // restored slab is this model's deterministic state for that
+        // prefix, so the warm path replays the cold bits exactly.
+        let hit = if use_cache { self.cache.as_mut().unwrap().lookup(&prompt) } else { None };
+        let (mut state, consumed, cached_row) = match hit {
+            Some(h) => {
+                let st = if quantized {
+                    MambaState::from_raw_q(self.model.tier(), 1, h.slab.conv_q, h.slab.ssm)
+                } else {
+                    MambaState::from_raw(self.model.tier(), 1, h.slab.conv, h.slab.ssm)
+                };
+                (st, h.len, h.logits_row)
+            }
+            None => (MambaState::new_for(self.model.tier(), 1, quantized), 0, None),
+        };
         // prefill gets a throwaway scratch: its buffers are sized by
         // the prompt length T, and parking them in the engine's round
         // workspaces would pin O(T·vocab) heap for the whole session
         // (decode only ever needs B rows)
         let mut scratch = StepScratch::with_kernels(1, self.kernels);
         let mut logits = Vec::new();
-        self.model.prefill_into(&prompt, &mut state, &mut scratch, &mut logits);
-        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
-        if quantized {
-            let (conv_q, ssm) = state.into_raw_q();
-            self.pool.scatter_raw_q(&[slot], 1, &conv_q, &ssm);
-        } else {
-            let (conv, ssm) = state.into_raw();
-            self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
+        let mut last_rows = 0usize; // logits rows of the final segment
+        let stride = self.cache.as_ref().map_or(0, |c| c.config().snapshot_stride);
+        let mut start = consumed;
+        while start < tl {
+            // with the cache on, stop at global stride multiples so
+            // interior snapshots land on one aligned cut grid whatever
+            // prefix a request resumed from (segment composition is
+            // bit-exact, so cutting never changes bits)
+            let end = if use_cache && stride > 0 {
+                tl.min((start / stride + 1) * stride)
+            } else {
+                tl
+            };
+            self.model.prefill_resume_into(
+                &prompt[start..end],
+                &mut state,
+                &mut scratch,
+                &mut logits,
+            );
+            last_rows = end - start;
+            if use_cache && end < tl {
+                let snap = Snapshot { slab: slab_of(&state), logits_row: None };
+                self.cache.as_mut().unwrap().insert(&prompt[..end], snap);
+            }
+            start = end;
         }
-        let t = prompt.len();
+        if use_cache && last_rows > 0 {
+            // end-of-prompt snapshot keeps the last logits row, so an
+            // exact resubmission never runs the model at all
+            let v = self.vocab;
+            let row = logits[(last_rows - 1) * v..last_rows * v].to_vec();
+            let snap = Snapshot { slab: slab_of(&state), logits_row: Some(row) };
+            self.cache.as_mut().unwrap().insert(&prompt, snap);
+        }
+        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        if let Some(c) = &self.cache {
+            self.metrics.record_cache_stats(c.stats());
+        }
+        // end-of-prompt state into the request's slot: the slab is
+        // already owned, so it moves through the validated `write`
+        // (same stale-slot assertion as `restore`, no extra copy) —
+        // this replaces the old gather/scatter round-trip
+        self.pool.write(slot, into_slab(state));
         let v = self.vocab;
-        let row = &logits[(t - 1) * v..t * v];
+        let row: &[f32] = match &cached_row {
+            Some(r) => r.as_slice(),
+            None => &logits[(last_rows - 1) * v..last_rows * v],
+        };
         let tok = self.sampler.sample(row, v, &lr.req.params);
         lr.generated.push(tok);
         lr.prefill_done = Some(std::time::Instant::now());
@@ -396,7 +505,7 @@ mod tests {
             id,
             prompt,
             max_new_tokens: max_new,
-            params: SamplingParams { temperature: 0.8, top_k: 8, seed: 0 },
+            params: SamplingParams { temperature: 0.8, top_k: 8, ..Default::default() },
             stop_at_eos: false,
         }
     }

@@ -11,11 +11,16 @@ pub struct SamplingParams {
     /// 0 = full vocab
     pub top_k: usize,
     pub seed: u64,
+    /// opt this request out of the prefix cache: no probe on
+    /// admission, no snapshots inserted (privacy-sensitive prompts /
+    /// cache-pollution control). Tokens are identical either way — the
+    /// cache only moves TTFT — so this is purely a policy knob.
+    pub no_cache: bool,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0, no_cache: false }
     }
 }
 

@@ -51,7 +51,7 @@ mod tests {
     fn greedy_picks_max() {
         let mut s = Sampler::new(0);
         let logits = vec![0.0, 5.0, -1.0, 4.9];
-        let p = SamplingParams { temperature: 0.0, top_k: 0, seed: 0 };
+        let p = SamplingParams::default();
         assert_eq!(s.sample(&logits, 4, &p), 1);
     }
 
@@ -59,7 +59,7 @@ mod tests {
     fn top_k_restricts_support() {
         let mut s = Sampler::new(1);
         let logits = vec![10.0, 9.0, -50.0, -50.0];
-        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 0 };
+        let p = SamplingParams { temperature: 1.0, top_k: 2, ..Default::default() };
         for _ in 0..100 {
             let t = s.sample(&logits, 4, &p);
             assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
@@ -71,7 +71,7 @@ mod tests {
         // with a huge temperature, both candidates should appear
         let mut s = Sampler::new(2);
         let logits = vec![1.0, 0.9];
-        let p = SamplingParams { temperature: 50.0, top_k: 0, seed: 0 };
+        let p = SamplingParams { temperature: 50.0, ..Default::default() };
         let mut seen = [false; 2];
         for _ in 0..200 {
             seen[s.sample(&logits, 2, &p) as usize] = true;

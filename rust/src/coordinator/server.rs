@@ -16,6 +16,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::cache::CacheStats;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::native::{NativeEngine, NativeEngineConfig};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
@@ -32,6 +33,11 @@ pub trait EngineCore {
     fn n_queued(&self) -> usize;
     fn n_live(&self) -> usize;
     fn report(&self) -> String;
+    /// Prefix-cache counters; `None` when the engine serves without a
+    /// cache (the default for cores that never prefill, e.g. tests).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
 }
 
 impl EngineCore for Engine {
@@ -49,6 +55,9 @@ impl EngineCore for Engine {
     }
     fn report(&self) -> String {
         self.metrics.report()
+    }
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Engine::cache_stats(self)
     }
 }
 
@@ -68,11 +77,15 @@ impl EngineCore for NativeEngine {
     fn report(&self) -> String {
         self.metrics.report()
     }
+    fn cache_stats(&self) -> Option<CacheStats> {
+        NativeEngine::cache_stats(self)
+    }
 }
 
 enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
+    CacheStats(Sender<Option<CacheStats>>),
     Shutdown,
 }
 
@@ -125,6 +138,9 @@ impl ServerHandle {
                         }
                         Some(Msg::Report(tx)) => {
                             let _ = tx.send(engine.report());
+                        }
+                        Some(Msg::CacheStats(tx)) => {
+                            let _ = tx.send(engine.cache_stats());
                         }
                         Some(Msg::Shutdown) => break,
                         None => {}
@@ -202,6 +218,14 @@ impl ServerHandle {
         let (tx, rx) = channel();
         self.tx.send(Msg::Report(tx)).ok()?;
         rx.recv().ok()
+    }
+
+    /// Prefix-cache counters from the engine thread (`None` when the
+    /// engine runs without a cache).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::CacheStats(tx)).ok()?;
+        rx.recv().ok().flatten()
     }
 
     pub fn shutdown(mut self) {

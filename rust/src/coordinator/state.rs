@@ -25,6 +25,14 @@ pub struct SsmSlab {
     pub ssm: Vec<f32>,
 }
 
+impl SsmSlab {
+    /// Payload bytes of this slab — the quantity the prefix cache
+    /// budgets. Constant in context length (the SSM selling point).
+    pub fn bytes(&self) -> usize {
+        4 * self.conv.len() + self.conv_q.len() + 4 * self.ssm.len()
+    }
+}
+
 pub struct SsmStatePool {
     pub n_layer: usize,
     pub d_inner: usize,
@@ -109,6 +117,10 @@ impl SsmStatePool {
     }
 
     pub fn write(&mut self, slot: usize, slab: SsmSlab) {
+        assert!(
+            self.slots[slot].is_some(),
+            "write into unallocated slot {slot} (released or never alloc'd)"
+        );
         if self.quantized_conv {
             assert_eq!(slab.conv_q.len(), self.n_layer * self.conv_per_layer);
             assert!(slab.conv.is_empty(), "quantized-conv pool got an f32 conv slab");
@@ -122,6 +134,29 @@ impl SsmStatePool {
 
     pub fn get(&self, slot: usize) -> &SsmSlab {
         self.slots[slot].as_ref().expect("slot not allocated")
+    }
+
+    /// O(1)-in-context-length clone of a live slot's state — the
+    /// prefix-cache admission primitive. Panics on a released / stale
+    /// slot (a snapshot of freed state would cache garbage).
+    pub fn snapshot(&self, slot: usize) -> SsmSlab {
+        self.slots[slot]
+            .as_ref()
+            .unwrap_or_else(|| panic!("snapshot of unallocated slot {slot}"))
+            .clone()
+    }
+
+    /// Clone a (cached) slab into a live slot — the prefix-cache hit
+    /// primitive, replacing the gather/scatter round-trip. Validates
+    /// the slab against the pool's dtype + dims and panics on a
+    /// released / stale slot, so a double-released or recycled slot
+    /// cannot silently resurrect with cached state.
+    pub fn restore(&mut self, slot: usize, slab: &SsmSlab) {
+        assert!(
+            self.slots[slot].is_some(),
+            "restore into unallocated slot {slot} (released or never alloc'd)"
+        );
+        self.write(slot, slab.clone());
     }
 
     /// Pack `slots` into raw batched (L, B, ...) f32 buffers for a
@@ -374,6 +409,47 @@ mod tests {
         assert_eq!(p2.get(d0).conv_q, slab.conv_q);
         assert_eq!(p2.get(d0).ssm, slab.ssm);
         assert!(p2.get(d1).conv_q.iter().all(|v| *v == 0));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let t = tier();
+        let mut p = SsmStatePool::new(&t, 2);
+        let src = p.alloc().unwrap();
+        let dst = p.alloc().unwrap();
+        let mut slab = p.get(src).clone();
+        slab.conv.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32 + 0.5);
+        slab.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = -(i as f32));
+        p.write(src, slab);
+        let snap = p.snapshot(src);
+        assert_eq!(snap.bytes(), p.bytes_per_request());
+        p.restore(dst, &snap);
+        assert_eq!(p.get(dst).conv, p.get(src).conv);
+        assert_eq!(p.get(dst).ssm, p.get(src).ssm);
+        // restoring does not alias: mutating dst leaves src intact
+        let mut d = p.get(dst).clone();
+        d.conv[0] = 1e9;
+        p.write(dst, d);
+        assert_ne!(p.get(src).conv[0], 1e9);
+    }
+
+    #[test]
+    #[should_panic(expected = "unallocated slot")]
+    fn restore_into_released_slot_panics() {
+        let t = tier();
+        let mut p = SsmStatePool::new(&t, 2);
+        let a = p.alloc().unwrap();
+        let snap = p.snapshot(a);
+        p.release(a);
+        p.restore(a, &snap); // stale slot — must panic, not resurrect
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot of unallocated slot")]
+    fn snapshot_of_free_slot_panics() {
+        let t = tier();
+        let p = SsmStatePool::new(&t, 1);
+        let _ = p.snapshot(0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 pub mod attn;
 pub mod bench_support;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod data;

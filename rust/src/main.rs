@@ -7,22 +7,29 @@
 //!                      [--max-new 64] [--temperature 0.8] [--top-k 20]
 //!   quamba serve       [--tier m2p8] [--method quamba] [--requests 16]
 //!                      [--rate 4.0] [--max-new 32]
+//!                      [--backend auto|xla|native] [--weights x.qtz]
+//!                      [--cache-mb 8] [--snapshot-stride 64]
+//!                      [--threads N] [--kernels auto|scalar|avx2|neon]
 //!   quamba eval-ppl    [--tier m130] [--methods fp16,quamba] [--windows 16]
 //!   quamba eval-tasks  [--tier m130] [--methods fp16,quamba] [--examples 40]
 //!   quamba profile     [--tier m2p8] [--methods fp16,quamba] [--seqs 256,512]
 //!   quamba analyze     [--tier m2p8]   # activation distributions (Fig 8)
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
-use quamba::bench_support::{f2, ms, Table};
+use quamba::bench_support::{f2, ms, Table, Workload};
 use quamba::config::Manifest;
-use quamba::coordinator::{EngineConfig, SamplingParams};
 use quamba::coordinator::server::ServerHandle;
+use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
 use quamba::data;
 use quamba::eval;
+use quamba::quant::KernelBackend;
 use quamba::runtime::Runtime;
+use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
+use quamba::tensor::qtz;
 use quamba::util::cli::Args;
+use quamba::util::rng::Pcg32;
 
 fn artifacts_root(args: &Args) -> PathBuf {
     args.get("artifacts")
@@ -61,6 +68,9 @@ fn print_help() {
          \x20 generate     generate text from a corpus prompt\n\
          \x20 compare      side-by-side FP vs quantized generation (paper Fig. 9)\n\
          \x20 serve        threaded serving demo with Poisson arrivals\n\
+         \x20              (--backend native [--weights x.qtz] serves\n\
+         \x20              artifact-free with the prefix cache:\n\
+         \x20              --cache-mb / --snapshot-stride)\n\
          \x20 eval-ppl     perplexity on wiki-synth / pile-synth (Table 2)\n\
          \x20 eval-tasks   six zero-shot tasks (Table 3)\n\
          \x20 profile      TTFT/TPOT latency profile (Table 1)\n\
@@ -112,7 +122,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let rx = server.submit(
         prompt,
         max_new,
-        SamplingParams { temperature: temp, top_k, seed: 7 },
+        SamplingParams { temperature: temp, top_k, seed: 7, ..Default::default() },
     );
     let resp = rx.recv().map_err(|_| anyhow!("engine dropped the request"))?;
     println!("\n[{tier}/{method}] generated: {}", vocab.decode(&resp.tokens));
@@ -157,7 +167,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
             id: 1,
             prompt: prompt.clone(),
             max_new_tokens: 100_000,
-            params: SamplingParams { temperature: 0.8, top_k: 20, seed: 9 },
+            params: SamplingParams { temperature: 0.8, top_k: 20, seed: 9, ..Default::default() },
             stop_at_eos: false,
         });
         let t0 = std::time::Instant::now();
@@ -177,6 +187,19 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // backend dispatch: `native` serves artifact-free (from --weights
+    // x.qtz or a synthetic tier); `xla` needs the AOT artifact tree;
+    // `auto` picks xla when artifacts exist — unless --weights forces
+    // the native import path
+    let backend = args.get_or("backend", "auto");
+    let use_xla = match backend {
+        "xla" => true,
+        "native" => false,
+        _ => args.get("weights").is_none() && Manifest::load(&artifacts_root(args)).is_ok(),
+    };
+    if !use_xla {
+        return cmd_serve_native(args);
+    }
     let root = artifacts_root(args);
     let mani = Manifest::load(&root).map_err(|e| anyhow!(e))?;
     let tier = args.get_or("tier", "m2p8");
@@ -186,9 +209,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_new = args.get_usize("max-new", 32);
 
     let stream = data::load_stream(&mani.data["pile_eval"])?;
-    let wl = quamba::bench_support::Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
+    let wl = Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
 
-    let mut server = ServerHandle::spawn(root, EngineConfig::new(tier, method))?;
+    let mut cfg = EngineConfig::new(tier, method);
+    cfg.cache_bytes = args.get_mb("cache-mb", 0.0);
+    let mut server = ServerHandle::spawn(root, cfg)?;
     println!("serving {n} requests at ~{rate}/s on {tier}/{method} ...");
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -207,6 +232,100 @@ fn cmd_serve(args: &Args) -> Result<()> {
             done += 1;
         }
     }
+    println!("completed {done}/{n} in {:.2}s", t0.elapsed().as_secs_f64());
+    if let Some(r) = server.metrics_report() {
+        println!("\n{r}");
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// `quamba serve --backend native [--weights x.qtz]`: real checkpoints
+/// (or a synthetic tier) served artifact-free, with the prefix cache —
+/// the ROADMAP "weight import for the native backend" item. The tier
+/// is inferred from the bundle's tensor shapes; `--method quamba`
+/// (default) calibrates a W8A8 model on a deterministic synthetic
+/// stream, `--method fp32` serves the fp32 reference directly.
+fn cmd_serve_native(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 16);
+    let rate = args.get_f64("rate", 4.0);
+    let max_new = args.get_usize("max-new", 32);
+    let method = args.get_or("method", "quamba").to_string();
+    let seed = args.get_u64("seed", 7);
+
+    let model = match args.get("weights") {
+        Some(path) => {
+            let q = qtz::load(Path::new(path))?;
+            let tier = MambaTier::infer_from_qtz(
+                Path::new(path).file_stem().and_then(|s| s.to_str()).unwrap_or("imported"),
+                &q,
+            )
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+            println!(
+                "imported {path}: d_model={} n_layer={} d_inner={} d_state={} vocab={}",
+                tier.d_model, tier.n_layer, tier.d_inner, tier.d_state, tier.vocab
+            );
+            MambaModel::from_qtz(tier, &q).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => {
+            let tier = MambaTier {
+                name: "edge64".into(),
+                d_model: 64,
+                n_layer: 4,
+                d_state: 8,
+                d_conv: 4,
+                d_inner: 128,
+                dt_rank: 8,
+                vocab: 256,
+            };
+            println!("no --weights given: serving the synthetic {} tier", tier.name);
+            MambaModel::synthetic(tier, seed)
+        }
+    };
+    let tier = model.tier.clone();
+    let mut rng = Pcg32::new(seed ^ 0x5EED);
+    let boxed: Box<dyn StepModel + Send + Sync> = if method == "fp32" {
+        Box::new(model)
+    } else {
+        // calibration stream: deterministic synthetic tokens (swap in a
+        // real stream by concatenating your corpus here)
+        let calib: Vec<u16> =
+            (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+        Box::new(QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default()))
+    };
+    let cfg = NativeEngineConfig {
+        threads: args.get_usize("threads", 1),
+        kernel_backend: args
+            .get("kernels")
+            .filter(|v| *v != "auto")
+            .map(|v| KernelBackend::parse(v).ok_or_else(|| anyhow!("--kernels {v}: unknown backend")))
+            .transpose()?,
+        cache_bytes: args.get_mb("cache-mb", 8.0),
+        snapshot_stride: args.get_usize("snapshot-stride", 64),
+        ..Default::default()
+    };
+    println!(
+        "prefix cache: {} ({} MB budget, stride {})",
+        if cfg.cache_bytes > 0 { "on" } else { "off" },
+        cfg.cache_bytes as f64 / 1e6,
+        cfg.snapshot_stride
+    );
+    let stream: Vec<u16> =
+        (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let wl = Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
+    let mut server = ServerHandle::spawn_native(boxed, cfg)?;
+    println!("serving {n} requests at ~{rate}/s on {}/{method} (native) ...", tier.name);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for (i, prompt) in wl.prompts.iter().enumerate() {
+        let target = wl.arrival_s[i];
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
+    }
+    let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
     println!("completed {done}/{n} in {:.2}s", t0.elapsed().as_secs_f64());
     if let Some(r) = server.metrics_report() {
         println!("\n{r}");

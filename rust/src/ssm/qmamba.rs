@@ -316,24 +316,15 @@ impl QuantizedMambaModel {
         debug_assert_eq!(logits.len(), tokens.len() * v);
         logits
     }
-}
 
-impl StepModel for QuantizedMambaModel {
-    fn tier(&self) -> &MambaTier {
-        &self.tier
-    }
-
-    fn quantized_conv_state(&self) -> bool {
-        true
-    }
-
-    /// Full-sequence quantized prefill: the whole prompt runs as
-    /// (T×K) batched int8 GEMMs, one fused-conv sweep and one scan per
-    /// layer. Every scale is static, integer accumulation is exact,
-    /// and the f32 epilogues are per-element — so logits *and* final
-    /// state are bit-identical to [`Self::prefill_stepwise`]
-    /// (asserted in tests) at a fraction of the dispatch cost.
-    fn prefill_into(
+    /// One prefill segment over `tokens`, continuing from whatever
+    /// `state` already holds (no reset). Shared by
+    /// `StepModel::prefill_into` (fresh state) and
+    /// `StepModel::prefill_resume_into` (the prefix-cache warm path).
+    /// Static scales + exact integer accumulation + per-row f32
+    /// epilogues make segment composition bit-exact — the same
+    /// property that makes [`Self::prefill_stepwise`] an exact oracle.
+    fn prefill_segment(
         &self,
         tokens: &[u16],
         state: &mut MambaState,
@@ -344,8 +335,7 @@ impl StepModel for QuantizedMambaModel {
         let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
         assert_eq!(state.b, 1, "prefill is single-sequence");
         assert!(!tokens.is_empty(), "prefill needs at least one token");
-        state.ensure_quantized_conv();
-        state.reset();
+        debug_assert!(state.is_quantized_conv());
         let tl = tokens.len();
         scratch.prep(tl, t);
         let kers = scratch.kernels;
@@ -449,6 +439,53 @@ impl StepModel for QuantizedMambaModel {
         rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
         rf32(logits, tl * self.tier.vocab);
         self.head.forward_into(kers, fin, self.s_head_in, tl, q_head, acc, logits);
+    }
+}
+
+impl StepModel for QuantizedMambaModel {
+    fn tier(&self) -> &MambaTier {
+        &self.tier
+    }
+
+    fn quantized_conv_state(&self) -> bool {
+        true
+    }
+
+    /// Full-sequence quantized prefill: the whole prompt runs as
+    /// (T×K) batched int8 GEMMs, one fused-conv sweep and one scan per
+    /// layer. Every scale is static, integer accumulation is exact,
+    /// and the f32 epilogues are per-element — so logits *and* final
+    /// state are bit-identical to [`Self::prefill_stepwise`]
+    /// (asserted in tests) at a fraction of the dispatch cost.
+    fn prefill_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        state.ensure_quantized_conv();
+        state.reset();
+        self.prefill_segment(tokens, state, scratch, logits);
+    }
+
+    /// Warm-path prefill continuation: `state` already holds a prefix's
+    /// conv codes + h-state (e.g. restored from the prefix cache) and
+    /// `tokens` is the remaining suffix. Bit-exact composition with
+    /// `prefill_into` — both run the same segment body; static scales
+    /// plus exact integer accumulation make cutting invisible.
+    fn prefill_resume_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        assert!(
+            state.is_quantized_conv(),
+            "resume needs a quantized-conv state (produced by a prior W8A8 prefill)"
+        );
+        self.prefill_segment(tokens, state, scratch, logits);
     }
 
     /// The W8A8 batched decode step — the native serving hot path.

@@ -377,6 +377,25 @@ pub trait StepModel {
         logits: &mut Vec<f32>,
     );
 
+    /// Continue a prefill from an existing (non-fresh) B=1 `state`:
+    /// like [`Self::prefill_into`] but without the state reset —
+    /// `tokens` is the *suffix* of a prompt whose prefix already
+    /// produced `state`. Composition is **bit-exact**:
+    /// `prefill(p)` then `prefill_resume(s)` yields the same final
+    /// state as `prefill(p ++ s)`, and the emitted logits rows equal
+    /// the corresponding suffix rows of the one-shot run (per-row f32
+    /// ops plus the carried conv window / scan state replay the
+    /// identical instruction sequence — the same property that makes
+    /// the stepwise prefill oracle exact). This is the prefix-cache
+    /// warm path; property-tested in `rust/tests/prefix_cache.rs`.
+    fn prefill_resume_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    );
+
     /// Advance all `state.b` lanes by one token each (`tokens[bi]` is
     /// lane bi's input); (B × V) next-token logits land in `logits`.
     /// Allocation-free after warmup for the W8A8 model.
@@ -462,23 +481,28 @@ impl MambaModel {
             head_in_amax: 0.0,
         };
         let mut state = MambaState::new(&self.tier, 1);
-        let _ = self.prefill_impl(tokens, &mut state, Some(&mut rec));
+        let _ = self.prefill_impl(tokens, &mut state, Some(&mut rec), false);
         rec
     }
 
     /// Full-sequence prefill with carried state; optionally records
-    /// calibration statistics. Shared by `StepModel::prefill` and
+    /// calibration statistics. Shared by `StepModel::prefill`,
+    /// `StepModel::prefill_resume_into` (`resume = true` keeps the
+    /// incoming state — the prefix-cache warm path) and
     /// [`Self::calibrate`].
     fn prefill_impl(
         &self,
         tokens: &[u16],
         state: &mut MambaState,
         mut calib: Option<&mut CalibRecord>,
+        resume: bool,
     ) -> Vec<f32> {
         assert_eq!(state.b, 1, "prefill is single-sequence; step() handles batched decode");
         assert!(!tokens.is_empty(), "prefill needs at least one token");
         assert!(!state.is_quantized_conv(), "fp32 prefill needs an f32 conv state");
-        state.reset();
+        if !resume {
+            state.reset();
+        }
         let t = &self.tier;
         let (d, di, n, r, w, tl) =
             (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv, tokens.len());
@@ -566,7 +590,17 @@ impl StepModel for MambaModel {
         _scratch: &mut StepScratch,
         logits: &mut Vec<f32>,
     ) {
-        *logits = self.prefill_impl(tokens, state, None);
+        *logits = self.prefill_impl(tokens, state, None, false);
+    }
+
+    fn prefill_resume_into(
+        &self,
+        tokens: &[u16],
+        state: &mut MambaState,
+        _scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        *logits = self.prefill_impl(tokens, state, None, true);
     }
 
     fn step_into(

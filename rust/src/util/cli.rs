@@ -75,6 +75,13 @@ impl Args {
         self.get(key)
             .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
     }
+
+    /// Megabyte-denominated option returned in **bytes** (`--cache-mb
+    /// 8` → 8_000_000); fractional values work (`--cache-mb 0.5`).
+    /// Used for the prefix-cache budget flags.
+    pub fn get_mb(&self, key: &str, default_mb: f64) -> usize {
+        (self.get_f64(key, default_mb) * 1e6) as usize
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +109,13 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse(&v(&["x", "--last"]), &[]);
         assert!(a.has("last"));
+    }
+
+    #[test]
+    fn mb_option_converts_to_bytes() {
+        let a = Args::parse(&v(&["x", "--cache-mb", "0.5"]), &[]);
+        assert_eq!(a.get_mb("cache-mb", 8.0), 500_000);
+        assert_eq!(a.get_mb("other-mb", 8.0), 8_000_000);
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Prefix-sharing SSM state cache: the cache may never change tokens,
+//! only TTFT. These tests pin that contract:
+//!
+//! * **replay bit-parity** (model level): segmented
+//!   `prefill_resume_into` reproduces the one-shot `prefill_into`
+//!   logits AND final state bit-for-bit, for the fp32 reference and
+//!   the W8A8 model, under every available kernel backend — the
+//!   property that makes restore-and-prefill-the-suffix exact;
+//! * **engine equivalence** (property over seeds): greedy and
+//!   temperature-sampled token streams are identical with the cache
+//!   on and off across random shared-prefix workloads, both native
+//!   engines (fp32 and W8A8 `NativeEngine`), forced scalar and SIMD
+//!   backends, with hit/eviction/opt-out accounting checked along the
+//!   way.
+//!
+//! Trie longest-prefix match, LRU eviction under a byte budget and
+//! hit accounting also have unit tests in `src/cache/`. The XLA
+//! `Engine`'s exact-hit path shares that unit-tested `lookup_exact` /
+//! `restore` machinery but cannot be integration-tested here — it
+//! needs AOT artifacts (JAX) that no CI configuration of this repo
+//! can build; its hit path falls back to a cold prefill (rather than
+//! panicking) if the cache invariant ever drifts.
+
+use quamba::cache::CacheStats;
+use quamba::coordinator::{NativeEngine, NativeEngineConfig, Request, SamplingParams};
+use quamba::quant::{KernelBackend, Kernels};
+use quamba::ssm::{
+    MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel, StepModel, StepScratch,
+};
+use quamba::util::rng::Pcg32;
+
+fn tier() -> MambaTier {
+    MambaTier {
+        name: "cache".into(),
+        d_model: 16,
+        n_layer: 2,
+        d_state: 4,
+        d_conv: 4,
+        d_inner: 32,
+        dt_rank: 4,
+        vocab: 32,
+    }
+}
+
+fn fp32_model(seed: u64) -> MambaModel {
+    MambaModel::synthetic(tier(), seed)
+}
+
+fn w8a8_model(seed: u64) -> QuantizedMambaModel {
+    let t = tier();
+    let model = MambaModel::synthetic(t.clone(), seed);
+    let mut r = Pcg32::new(seed ^ 0x1234);
+    let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+    QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default())
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// One-shot prefill vs the same prompt run as resume segments split at
+/// `cuts`: logits rows and final state must be bit-identical.
+fn assert_segmented_prefill_bit_identical(
+    model: &dyn StepModel,
+    kers: Kernels,
+    prompt: &[u16],
+    cuts: &[usize],
+) {
+    let t = model.tier().clone();
+    let quantized = model.quantized_conv_state();
+    let mut scratch = StepScratch::with_kernels(1, kers);
+
+    let mut st_full = MambaState::new_for(&t, 1, quantized);
+    let mut full = Vec::new();
+    model.prefill_into(prompt, &mut st_full, &mut scratch, &mut full);
+
+    let mut st_seg = MambaState::new_for(&t, 1, quantized);
+    let mut seg = Vec::new();
+    let mut got: Vec<f32> = Vec::new();
+    let mut start = 0usize;
+    for &c in cuts.iter().chain(std::iter::once(&prompt.len())) {
+        assert!(c > start && c <= prompt.len(), "test bug: bad cut {c}");
+        model.prefill_resume_into(&prompt[start..c], &mut st_seg, &mut scratch, &mut seg);
+        got.extend_from_slice(&seg);
+        start = c;
+    }
+    assert_bits_eq(&full, &got, "segmented prefill logits");
+    assert_eq!(st_full.conv_q, st_seg.conv_q, "conv window codes diverged");
+    assert_bits_eq(&st_full.conv, &st_seg.conv, "f32 conv window");
+    assert_bits_eq(&st_full.ssm, &st_seg.ssm, "ssm state");
+}
+
+#[test]
+fn prop_segmented_resume_prefill_bit_identical() {
+    // the cache's core oracle, for both models and (for the int8
+    // paths) every kernel backend this machine can run
+    let fp = fp32_model(7);
+    let qm = w8a8_model(7);
+    let t = tier();
+    for seed in 0..20u64 {
+        let mut r = Pcg32::new(0xCAC4E ^ seed);
+        let tl = 8 + r.below(32) as usize;
+        let prompt: Vec<u16> = (0..tl).map(|_| r.below(t.vocab as u32) as u16).collect();
+        // random strictly-increasing interior cut set (possibly empty)
+        let mut cuts: Vec<usize> = (1..tl).filter(|_| r.f32() < 0.2).collect();
+        if cuts.is_empty() && tl > 2 {
+            cuts.push(1 + r.below(tl as u32 - 1) as usize);
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        assert_segmented_prefill_bit_identical(&fp, Kernels::scalar(), &prompt, &cuts);
+        for backend in Kernels::available() {
+            assert_segmented_prefill_bit_identical(
+                &qm,
+                Kernels::for_backend(backend),
+                &prompt,
+                &cuts,
+            );
+        }
+    }
+}
+
+/// Deterministic shared-prefix workload: 4 base prompts × 4 variants
+/// (base | base+a | base again | base+a+b) — by construction later
+/// variants find earlier end-of-prompt snapshots as proper prefixes
+/// (or exact matches), so a warmed cache must produce hits.
+fn shared_prefix_workload(seed: u64, temperature: f32) -> Vec<Request> {
+    let t = tier();
+    let v = t.vocab as u32;
+    let mut r = Pcg32::new(seed ^ 0xAB);
+    let bases: Vec<Vec<u16>> = (0..4)
+        .map(|_| {
+            let len = 4 + r.below(12) as usize;
+            (0..len).map(|_| r.below(v) as u16).collect()
+        })
+        .collect();
+    let exts: Vec<(Vec<u16>, Vec<u16>)> = (0..4)
+        .map(|_| {
+            let la = 1 + r.below(5) as usize;
+            let lb = 1 + r.below(5) as usize;
+            (
+                (0..la).map(|_| r.below(v) as u16).collect(),
+                (0..lb).map(|_| r.below(v) as u16).collect(),
+            )
+        })
+        .collect();
+    let mut reqs = Vec::new();
+    for i in 0..16u64 {
+        let bi = (i % 4) as usize;
+        let variant = (i / 4) as usize;
+        let mut prompt = bases[bi].clone();
+        if variant == 1 || variant == 3 {
+            prompt.extend_from_slice(&exts[bi].0);
+        }
+        if variant == 3 {
+            prompt.extend_from_slice(&exts[bi].1);
+        }
+        reqs.push(Request {
+            id: i,
+            prompt,
+            max_new_tokens: 3 + (i as usize) % 4,
+            params: SamplingParams {
+                temperature,
+                top_k: if temperature > 0.0 { 8 } else { 0 },
+                ..Default::default()
+            },
+            stop_at_eos: false,
+        });
+    }
+    reqs
+}
+
+fn run_workload(
+    cfg: NativeEngineConfig,
+    quantized: bool,
+    seed: u64,
+    temperature: f32,
+    no_cache: bool,
+) -> (Vec<(u64, Vec<u16>)>, Option<CacheStats>) {
+    let mut eng = if quantized {
+        NativeEngine::new(Box::new(w8a8_model(seed)), cfg)
+    } else {
+        NativeEngine::new(Box::new(fp32_model(seed)), cfg)
+    };
+    for mut req in shared_prefix_workload(seed, temperature) {
+        req.params.no_cache = no_cache;
+        eng.submit(req);
+    }
+    let mut done: Vec<(u64, Vec<u16>)> = eng
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    (done, eng.cache_stats())
+}
+
+#[test]
+fn prop_cache_on_off_tokens_identical_both_engines() {
+    // ISSUE 4 acceptance: greedy AND temperature-sampled streams are
+    // identical with the cache on/off, fp32 and W8A8, with and without
+    // interior stride snapshots — and the cache actually got exercised
+    for quantized in [false, true] {
+        for temperature in [0.0f32, 0.8] {
+            for seed in [3u64, 11, 42] {
+                let (cold, no_stats) =
+                    run_workload(NativeEngineConfig::default(), quantized, seed, temperature, false);
+                assert!(no_stats.is_none(), "cache off must report no stats");
+                for stride in [0usize, 3] {
+                    let cfg = NativeEngineConfig {
+                        cache_bytes: 1 << 20,
+                        snapshot_stride: stride,
+                        ..Default::default()
+                    };
+                    let (warm, stats) = run_workload(cfg, quantized, seed, temperature, false);
+                    assert_eq!(
+                        cold, warm,
+                        "cache changed tokens (quantized={quantized} temp={temperature} \
+                         seed={seed} stride={stride})"
+                    );
+                    let s = stats.expect("cache on must report stats");
+                    assert!(s.hits > 0, "workload must produce hits (stride={stride}): {s:?}");
+                    assert!(s.prefill_tokens_saved > 0, "{s:?}");
+                    assert!(s.bytes_in_use <= s.capacity_bytes, "{s:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_on_off_identical_under_forced_kernel_backends() {
+    // warm paths must stay bit-replayable under every SIMD dispatch
+    let base_cfg = NativeEngineConfig {
+        cache_bytes: 1 << 20,
+        snapshot_stride: 4,
+        kernel_backend: Some(KernelBackend::Scalar),
+        ..Default::default()
+    };
+    let (want, _) = run_workload(base_cfg, true, 5, 0.8, false);
+    for backend in Kernels::available() {
+        let cfg = NativeEngineConfig {
+            cache_bytes: 1 << 20,
+            snapshot_stride: 4,
+            kernel_backend: Some(backend),
+            ..Default::default()
+        };
+        let (got, stats) = run_workload(cfg, true, 5, 0.8, false);
+        assert_eq!(want, got, "cached serving diverged on backend {}", backend.label());
+        assert!(stats.unwrap().hits > 0);
+    }
+}
+
+#[test]
+fn exact_resubmission_skips_prefill_and_matches_greedy() {
+    let t = tier();
+    let cfg = NativeEngineConfig { cache_bytes: 1 << 20, ..Default::default() };
+    let mut eng = NativeEngine::new(Box::new(w8a8_model(9)), cfg);
+    let prompt: Vec<u16> = (0..24).map(|i| (i * 7 % t.vocab) as u16).collect();
+    let req = |id| Request {
+        id,
+        prompt: prompt.clone(),
+        max_new_tokens: 5,
+        params: SamplingParams::default(),
+        stop_at_eos: false,
+    };
+    eng.submit(req(1));
+    let first = eng.run_to_completion().unwrap();
+    let s1 = eng.cache_stats().unwrap();
+    assert!(s1.insertions >= 1);
+    assert_eq!(s1.hits, 0);
+    eng.submit(req(2));
+    let second = eng.run_to_completion().unwrap();
+    let s2 = eng.cache_stats().unwrap();
+    assert_eq!(s2.hits, 1, "resubmission must be a full-prompt hit");
+    assert_eq!(
+        s2.prefill_tokens_saved,
+        prompt.len() as u64,
+        "a full hit skips the whole prompt"
+    );
+    assert_eq!(first[0].tokens, second[0].tokens, "warm greedy tokens must match cold");
+}
+
+#[test]
+fn per_request_opt_out_bypasses_cache_without_changing_tokens() {
+    let (cold, _) = run_workload(NativeEngineConfig::default(), true, 13, 0.0, false);
+    let cfg = NativeEngineConfig {
+        cache_bytes: 1 << 20,
+        snapshot_stride: 3,
+        ..Default::default()
+    };
+    let (opted, stats) = run_workload(cfg, true, 13, 0.0, true);
+    assert_eq!(cold, opted, "no_cache requests must decode identically");
+    let s = stats.expect("engine still owns a (cold) cache");
+    assert_eq!((s.hits, s.misses, s.insertions), (0, 0, 0), "opt-out must not touch it: {s:?}");
+}
+
+#[test]
+fn tight_budget_evicts_but_serves_identically() {
+    // budget ≈ 2 quantized end-of-prompt snapshots (slab + logits row
+    // + entry overhead + the per-key-token trie charge at the
+    // workload's max prompt length of 25): eviction churn must not
+    // change tokens, and the budget must hold throughout
+    use quamba::cache::{ENTRY_OVERHEAD_BYTES, KEY_TOKEN_OVERHEAD_BYTES};
+    let t = tier();
+    let slab_bytes = t.n_layer * ((t.d_conv - 1) * t.d_inner + 4 * t.d_inner * t.d_state);
+    let per = slab_bytes + 4 * t.vocab + ENTRY_OVERHEAD_BYTES + 25 * KEY_TOKEN_OVERHEAD_BYTES;
+    let cfg = NativeEngineConfig {
+        cache_bytes: 2 * per,
+        snapshot_stride: 3,
+        ..Default::default()
+    };
+    let (cold, _) = run_workload(NativeEngineConfig::default(), true, 21, 0.0, false);
+    let (warm, stats) = run_workload(cfg, true, 21, 0.0, false);
+    assert_eq!(cold, warm, "eviction churn changed tokens");
+    let s = stats.unwrap();
+    assert!(s.evictions > 0, "budget for ~2 snapshots must evict: {s:?}");
+    assert!(s.evicted_bytes > 0 && s.bytes_in_use <= s.capacity_bytes, "{s:?}");
+}

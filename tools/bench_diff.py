@@ -27,6 +27,20 @@ def load(path):
         doc = json.load(f)
     entries = {}
     for e in doc.get("entries", []):
+        # tolerate newly-added or partial entries: a bench revision may
+        # introduce ops with extra fields, or placeholder rows without
+        # timings yet (e.g. a provisional baseline listing expected
+        # keys). Skip what can't be compared instead of erroring — the
+        # gate's job is trajectory, not schema enforcement.
+        if not isinstance(e, dict) or "op" not in e or "shape" not in e:
+            print(f"bench_diff: skipping malformed entry in {path}: {e!r}")
+            continue
+        if not isinstance(e.get("ms"), (int, float)):
+            # a provisional baseline lists expected keys without
+            # timings on purpose — stay quiet about those
+            if not doc.get("provisional"):
+                print(f"bench_diff: skipping {e['op']} [{e['shape']}] in {path}: no ms value")
+            continue
         entries[(e["op"], e["shape"])] = e
     return doc, entries
 
