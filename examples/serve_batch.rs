@@ -11,7 +11,7 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
@@ -25,9 +25,20 @@
 //! warm-TTFT effect is visible — the end-of-run report gains a
 //! `prefix-cache` line (hit rate, bytes, prefill tokens saved).
 //! Cached-path tokens are bit-identical to cache-off serving.
+//!
+//! `--prefill-chunk C` / `--max-tokens-per-tick B` drive the unified
+//! chunked-prefill scheduler (0 = unchunked / unlimited): long prompts
+//! advance C tokens per tick instead of stalling live decode lanes —
+//! again latency-only, tokens never move.
+//! `--burst N` (native backend) switches to the head-of-line-blocking
+//! scenario the chunking exists for: N long prompts
+//! (`--burst-prompt-len`, default 1024) arrive while short requests
+//! are mid-decode; the run reports each configuration's **max
+//! observed inter-token gap** for the already-decoding requests,
+//! chunked vs unchunked side by side.
 
 use anyhow::Result;
-use quamba::bench_support::Workload;
+use quamba::bench_support::{burst_itl_max, Workload};
 use quamba::config::Manifest;
 use quamba::coordinator::server::ServerHandle;
 use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
@@ -127,6 +138,69 @@ fn serve_xla(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
     Ok(())
 }
 
+/// `--burst N`: the scenario the unified chunked-prefill scheduler
+/// exists for, measured directly — same workload, chunked vs
+/// unchunked, reporting max inter-token gap of the live decode lanes.
+/// The harness is `bench_support::burst_itl_max`, the exact workload
+/// the CI trajectory key `burst_itl_max` tracks.
+fn serve_burst(args: &Args, tier: &MambaTier) -> Result<()> {
+    let seed = args.get_usize("seed", 7) as u64;
+    let burst_n = args.get_usize("burst", 2);
+    let burst_len = args.get_usize("burst-prompt-len", 1024);
+    let chunk = match args.get_usize("prefill-chunk", 64) {
+        // 0 means "unchunked", which is already the comparison's other
+        // arm — comparing unchunked against itself would be vacuous
+        0 => {
+            println!("--prefill-chunk 0 is the unchunked arm itself; comparing chunk=64 instead");
+            64
+        }
+        c => c,
+    };
+    let n_dec = args.get_usize("requests", 4).min(8);
+    let max_new = args.get_usize("max-new", 64);
+    // honor the same engine knobs the normal serving path takes — the
+    // comparison varies ONLY prefill_chunk
+    let base_cfg = NativeEngineConfig {
+        threads: args.get_usize("threads", 1),
+        kernel_backend: args.get("kernels").filter(|v| *v != "auto").map(|v| {
+            KernelBackend::parse(v)
+                .unwrap_or_else(|| panic!("--kernels {v}: unknown backend (auto|scalar|avx2|neon)"))
+        }),
+        cache_bytes: args.get_mb("cache-mb", 0.0),
+        snapshot_stride: args.get_usize("snapshot-stride", 64),
+        max_tokens_per_tick: args.get_usize("max-tokens-per-tick", 0),
+        ..Default::default()
+    };
+    println!(
+        "burst scenario: {n_dec} decoding requests, then {burst_n}×{burst_len}-token prompts \
+         arriving mid-decode (W8A8, tier {})",
+        tier.name
+    );
+    let mut gaps = Vec::new();
+    for (label, pc) in [(format!("prefill_chunk={chunk}"), chunk), ("unchunked".to_string(), 0)] {
+        // fresh identically-seeded model per run: both configurations
+        // serve the same weights and the same request stream
+        let model = MambaModel::synthetic(tier.clone(), seed);
+        let mut rng = Pcg32::new(seed ^ 0x5EED);
+        let calib: Vec<u16> =
+            (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+        let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+        let cfg = NativeEngineConfig { prefill_chunk: pc, ..base_cfg.clone() };
+        let gap =
+            burst_itl_max(Box::new(qmodel), cfg, n_dec, max_new, burst_n, burst_len, seed)?;
+        println!("  {label:<20} max inter-token gap = {gap:.3} ms");
+        gaps.push(gap);
+    }
+    println!(
+        "chunking {} head-of-line blocking ({:.3} ms vs {:.3} ms; tokens are identical \
+         in both runs — only latency moves)",
+        if gaps[0] < gaps[1] { "bounded" } else { "did NOT bound" },
+        gaps[0],
+        gaps[1]
+    );
+    Ok(())
+}
+
 /// Artifact-free serving: synthesize a tier, calibrate a W8A8 model
 /// from the fp32 reference, and serve both through the same loop.
 fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
@@ -141,6 +215,9 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         dt_rank: 8,
         vocab: 256,
     };
+    if args.get_usize("burst", 0) > 0 {
+        return serve_burst(args, &tier);
+    }
     let model = MambaModel::synthetic(tier.clone(), seed);
     let mut rng = Pcg32::new(seed ^ 0x5EED);
     let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
@@ -187,6 +264,12 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
             cache_bytes as f64 / 1e6
         );
     }
+    let prefill_chunk = args.get_usize("prefill-chunk", 64);
+    let max_tokens_per_tick = args.get_usize("max-tokens-per-tick", 0);
+    println!(
+        "scheduler: prefill_chunk={prefill_chunk} max_tokens_per_tick={max_tokens_per_tick} \
+         (0 = unchunked/unlimited; chunking moves latency, never tokens)"
+    );
     let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
     for (name, m) in backends {
@@ -201,6 +284,8 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
                 kernel_backend,
                 cache_bytes,
                 snapshot_stride,
+                prefill_chunk,
+                max_tokens_per_tick,
                 ..Default::default()
             },
         )?;

@@ -22,7 +22,7 @@
 //!   the path with `QUAMBA_BENCH_JSON`) so CI can diff runs against
 //!   the committed baseline (`tools/bench_diff.py`).
 
-use quamba::bench_support::{bench_ms, f2, iters, ms, Table};
+use quamba::bench_support::{bench_ms, burst_itl_max, f2, iters, ms, Table};
 use quamba::coordinator::{NativeEngine, NativeEngineConfig, Request, SamplingParams};
 use quamba::quant::qlinear::{
     matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, PackedWeightI8,
@@ -340,6 +340,74 @@ fn main() {
     ct.row(vec!["warm (hit: suffix only)".into(), warm_steps.to_string(), ms(ttft_warm)]);
     ct.print();
 
+    // ---- serving latency percentiles through the unified scheduler ----
+    // ISSUE 5 satellite: per-request TTFT and pooled inter-token gaps
+    // recorded by the engine metrics, exported as trajectory keys
+    // (ttft_p50 / itl_p95) so scheduler regressions show up in CI.
+    let q_serve = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let mut serve_eng = NativeEngine::new(
+        Box::new(q_serve),
+        NativeEngineConfig { prefill_chunk: 64, ..Default::default() },
+    );
+    let n_serve = 16usize;
+    for i in 0..n_serve as u64 {
+        let plen = 16 + (i as usize % 3) * 8;
+        let prompt: Vec<u16> =
+            (0..plen).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+        serve_eng.submit(Request {
+            id: i,
+            prompt,
+            max_new_tokens: 8,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    serve_eng.run_to_completion().unwrap();
+    let ttft_sum = serve_eng.metrics.ttft_summary();
+    let itl_sum = serve_eng.metrics.itl_summary();
+
+    // ---- burst: long prompts landing mid-decode, chunked vs not ----
+    // ISSUE 5 acceptance: with prefill_chunk=64 the max inter-token
+    // gap of already-decoding requests must be strictly lower than
+    // with unchunked prefill (both run the identical workload and
+    // produce identical tokens — the scheduler only moves latency).
+    // The harness is the shared `bench_support::burst_itl_max`, so
+    // `serve_batch --burst` demos the exact workload CI tracks.
+    let (burst_n, burst_len, chunk) = (2usize, 512usize, 64usize);
+    let mk_qm = || QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let gap_chunked = burst_itl_max(
+        Box::new(mk_qm()),
+        NativeEngineConfig { prefill_chunk: chunk, ..Default::default() },
+        4,
+        48,
+        burst_n,
+        burst_len,
+        0xB5A7,
+    )
+    .unwrap();
+    let gap_unchunked = burst_itl_max(
+        Box::new(mk_qm()),
+        NativeEngineConfig::default(),
+        4,
+        48,
+        burst_n,
+        burst_len,
+        0xB5A7,
+    )
+    .unwrap();
+    let mut bt = Table::new(
+        &format!(
+            "§Perf — unified scheduler: serving latency (n={n_serve}) + \
+             {burst_n}×{burst_len}-token burst ITL"
+        ),
+        &["quantity", "ms"],
+    );
+    bt.row(vec!["TTFT p50 (chunk=64)".into(), ms(ttft_sum.p50)]);
+    bt.row(vec!["ITL p95 (chunk=64)".into(), ms(itl_sum.p95)]);
+    bt.row(vec![format!("burst max ITL gap, chunk={chunk}"), ms(gap_chunked)]);
+    bt.row(vec!["burst max ITL gap, unchunked".into(), ms(gap_unchunked)]);
+    bt.print();
+
     let speedup = before.mean / q_step.mean;
     println!(
         "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
@@ -374,6 +442,14 @@ fn main() {
         step_ratio,
         cache_stats.prefill_tokens_saved,
         ttft_cold / ttft_warm.max(1e-9),
+    );
+    println!(
+        "acceptance (chunked prefill bounds decode ITL under a {burst_n}x{burst_len}-token burst): {} \
+         (max gap {:.3} ms at chunk={chunk} vs {:.3} ms unchunked, {:.1}x lower)",
+        if gap_chunked < gap_unchunked { "PASS" } else { "FAIL" },
+        gap_chunked,
+        gap_unchunked,
+        gap_unchunked / gap_chunked.max(1e-9),
     );
 
     // ---- machine-readable trajectory ----
@@ -453,6 +529,34 @@ fn main() {
         shape: format!("T={} shared={shared_len} tier={}", warm_prompt.len(), tier.name),
         ms: ttft_warm,
         speedup: step_ratio,
+    });
+    // unified-scheduler serving keys (ISSUE 5): TTFT p50 and pooled
+    // ITL p95 of a small served workload, plus the burst max-gap pair.
+    // `speedup` on the chunked burst entry is the unchunked/chunked
+    // gap ratio — the quantity the chunking win is measured by.
+    entries.push(Entry {
+        op: "ttft_p50",
+        shape: format!("serve n={n_serve} chunk=64 tier={}", tier.name),
+        ms: ttft_sum.p50,
+        speedup: 1.0,
+    });
+    entries.push(Entry {
+        op: "itl_p95",
+        shape: format!("serve n={n_serve} chunk=64 tier={}", tier.name),
+        ms: itl_sum.p95,
+        speedup: 1.0,
+    });
+    entries.push(Entry {
+        op: "burst_itl_max",
+        shape: format!("chunk={chunk} burst={burst_n}x{burst_len} tier={}", tier.name),
+        ms: gap_chunked,
+        speedup: gap_unchunked / gap_chunked.max(1e-9),
+    });
+    entries.push(Entry {
+        op: "burst_itl_max",
+        shape: format!("chunk=inf burst={burst_n}x{burst_len} tier={}", tier.name),
+        ms: gap_unchunked,
+        speedup: 1.0,
     });
     let path = std::env::var("QUAMBA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_decode.json".to_string());

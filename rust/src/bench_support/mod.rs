@@ -165,6 +165,68 @@ pub fn f2(x: f64) -> String {
     }
 }
 
+/// The chunked-prefill head-of-line-blocking scenario, shared by
+/// `benches/perf_native_decode.rs` and `examples/serve_batch.rs
+/// --burst` so the CI trajectory key (`burst_itl_max`) and the CLI
+/// demo measure the identical workload: `n_dec` short-prompt requests
+/// decode `max_new` tokens each; at tick 8, `burst_n` prompts of
+/// `burst_len` tokens land at once. Returns the max inter-token gap
+/// (ms) observed by the *initially-decoding* requests — the quantity
+/// `NativeEngineConfig::prefill_chunk` bounds (the engine guarantees
+/// tokens are identical at any chunk size; only this gap moves).
+pub fn burst_itl_max(
+    model: Box<dyn crate::ssm::StepModel + Send + Sync>,
+    cfg: crate::coordinator::NativeEngineConfig,
+    n_dec: usize,
+    max_new: usize,
+    burst_n: usize,
+    burst_len: usize,
+    seed: u64,
+) -> anyhow::Result<f64> {
+    use crate::coordinator::{NativeEngine, Request, SamplingParams};
+    // burst requests live above this id so the gap fold can filter
+    // down to the initially-decoding lanes
+    const BURST_ID_BASE: u64 = 1_000_000;
+    let vocab = model.tier().vocab as u32;
+    let mut eng = NativeEngine::new(model, cfg);
+    let mut r = Pcg32::new(seed);
+    let mut mk = |r: &mut Pcg32, len: usize| -> Vec<u16> {
+        (0..len).map(|_| r.below(vocab) as u16).collect()
+    };
+    for i in 0..n_dec as u64 {
+        eng.submit(Request {
+            id: i,
+            prompt: mk(&mut r, 8),
+            max_new_tokens: max_new,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    let mut done = Vec::new();
+    let mut tick = 0usize;
+    while eng.n_live() + eng.n_queued() > 0 {
+        if tick == 8 {
+            // the burst: long prompts arriving mid-decode
+            for j in 0..burst_n as u64 {
+                eng.submit(Request {
+                    id: BURST_ID_BASE + j,
+                    prompt: mk(&mut r, burst_len),
+                    max_new_tokens: 4,
+                    params: SamplingParams::default(),
+                    stop_at_eos: false,
+                });
+            }
+        }
+        done.extend(eng.step()?);
+        tick += 1;
+    }
+    Ok(done
+        .iter()
+        .filter(|resp| resp.id < BURST_ID_BASE)
+        .map(|resp| resp.itl_max_ms())
+        .fold(f64::NAN, f64::max))
+}
+
 /// Poisson-arrival request workload generator (serving benches).
 pub struct Workload {
     pub prompts: Vec<Vec<u16>>,

@@ -1,4 +1,5 @@
-//! Bucketed continuous batching for the decode loop.
+//! Bucketed continuous batching for the decode loop, plus the unified
+//! mixed decode+prefill tick planner.
 //!
 //! Decode executables are compiled AOT for a fixed set of batch sizes
 //! (e.g. {1, 2, 4, 8}); each scheduler tick packs the active requests
@@ -7,6 +8,16 @@
 //! padded lanes over the whole tick. This is the SSM analog of vLLM's
 //! continuous batching — with constant-size states there is no
 //! fragmentation problem, so the packing is pure arithmetic.
+//!
+//! [`plan_tick`] generalizes the per-tick plan to **mixed** work: all
+//! decode lanes (one token each — inter-token latency is the
+//! protected quantity) plus prefill *chunks* (up to `prefill_chunk`
+//! tokens per in-flight prompt) under one `max_tokens_per_tick`
+//! budget, so a long prompt advances incrementally across ticks
+//! instead of freezing every live lane while it prefills — the
+//! standard chunked-prefill/continuous-batching shape, uniquely cheap
+//! for SSMs because the recurrent state lets a prefill pause at any
+//! token boundary for free.
 
 /// Plan one scheduler tick: split `n_active` requests into rounds.
 /// `buckets` must be sorted ascending. Returns bucket size per round,
@@ -64,6 +75,81 @@ pub fn padding_waste(n_active: usize, plan: &[usize]) -> f64 {
         return 0.0;
     }
     (lanes - n_active) as f64 / lanes as f64
+}
+
+/// One prefilling request's share of a tick: advance the request at
+/// `idx` (position in the planner's `prefill_remaining` input, i.e.
+/// admission order) by `tokens` prompt tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkAssignment {
+    pub idx: usize,
+    pub tokens: usize,
+}
+
+/// One scheduler tick's mixed work plan: the decode rounds (bucket
+/// sizes, from [`plan_rounds`]) plus the prefill chunks that fit the
+/// remaining token budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TickPlan {
+    pub decode_rounds: Vec<usize>,
+    pub chunks: Vec<ChunkAssignment>,
+}
+
+impl TickPlan {
+    /// Total prompt tokens this plan prefills.
+    pub fn prefill_tokens(&self) -> usize {
+        self.chunks.iter().map(|c| c.tokens).sum()
+    }
+}
+
+/// Plan one unified tick over `n_decode` decoding lanes and the
+/// in-flight prefills with `prefill_remaining[i]` prompt tokens left
+/// (admission order — FIFO gets budget first).
+///
+/// Budget semantics (`0` = unlimited for both knobs):
+/// * every decode lane is always scheduled (1 token each) — decode is
+///   the latency-critical work and there are at most `capacity` lanes;
+/// * prefill chunks share what is left of `max_tokens_per_tick` after
+///   decode, each request taking
+///   `min(prefill_chunk, remaining, budget_left)` in FIFO order;
+/// * **minimum-progress guarantee**: if decode alone consumes the
+///   whole budget while prefills are pending, the oldest prefill still
+///   gets exactly 1 token — a saturated decode pool can stretch a
+///   prefill, never livelock it.
+///
+/// Invariant (tested below): when `max_tokens_per_tick > 0`,
+/// `plan.prefill_tokens() <= max(max_tokens_per_tick - n_decode, 1)`,
+/// with the `1` arm only under the minimum-progress guarantee.
+pub fn plan_tick(
+    n_decode: usize,
+    prefill_remaining: &[usize],
+    buckets: &[usize],
+    prefill_chunk: usize,
+    max_tokens_per_tick: usize,
+) -> TickPlan {
+    let decode_rounds = plan_rounds(n_decode, buckets);
+    let cap = if prefill_chunk == 0 { usize::MAX } else { prefill_chunk };
+    let mut budget = if max_tokens_per_tick == 0 {
+        usize::MAX
+    } else {
+        max_tokens_per_tick.saturating_sub(n_decode)
+    };
+    if budget == 0 && prefill_remaining.iter().any(|&r| r > 0) {
+        budget = 1;
+    }
+    let mut chunks = Vec::new();
+    for (idx, &remaining) in prefill_remaining.iter().enumerate() {
+        if budget == 0 {
+            break;
+        }
+        if remaining == 0 {
+            continue; // defensive: a drained prefill has nothing to schedule
+        }
+        let tokens = remaining.min(cap).min(budget);
+        chunks.push(ChunkAssignment { idx, tokens });
+        budget -= tokens;
+    }
+    TickPlan { decode_rounds, chunks }
 }
 
 /// Assign request indices to rounds following a plan.
@@ -174,6 +260,137 @@ mod tests {
         assert_eq!(all, (0..10).collect::<Vec<_>>());
         for (g, &b) in groups.iter().zip(&plan) {
             assert!(g.len() <= b);
+        }
+    }
+
+    // ---- degenerate inputs (ISSUE 5 satellite) ----
+
+    #[test]
+    #[should_panic(expected = "no decode buckets")]
+    fn plan_rounds_rejects_empty_bucket_list() {
+        let _ = plan_rounds(3, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no decode buckets")]
+    fn plan_tick_rejects_empty_bucket_list() {
+        let _ = plan_tick(1, &[4], &[], 0, 0);
+    }
+
+    #[test]
+    fn buckets_larger_than_active_count_pad_minimally() {
+        // every bucket exceeds n: one smallest-bucket round, padded
+        assert_eq!(plan_rounds(3, &[8, 16]), vec![8]);
+        assert_eq!(plan_rounds(1, &[4]), vec![4]);
+        let groups = assign(3, &plan_rounds(3, &[8, 16]));
+        assert_eq!(groups, vec![(0..3).collect::<Vec<_>>()]);
+        // a lone oversized round keeps all real lanes in round 0
+        let groups = assign(1, &plan_rounds(1, &[4]));
+        assert_eq!(groups, vec![vec![0]]);
+    }
+
+    #[test]
+    fn assign_tolerates_overcovering_plan() {
+        // a plan whose lane sum exceeds n must park the excess as
+        // padding, not panic or invent indices
+        let groups = assign(5, &[4, 4]);
+        assert_eq!(groups[0], vec![0, 1, 2, 3]);
+        assert_eq!(groups[1], vec![4]);
+    }
+
+    // ---- mixed-plan planner ----
+
+    #[test]
+    fn plan_tick_unlimited_gives_full_chunks() {
+        let p = plan_tick(3, &[100, 5, 40], &[1, 2, 4, 8], 16, 0);
+        assert_eq!(plan_rounds(3, &[1, 2, 4, 8]), p.decode_rounds);
+        assert_eq!(
+            p.chunks,
+            vec![
+                ChunkAssignment { idx: 0, tokens: 16 },
+                ChunkAssignment { idx: 1, tokens: 5 },
+                ChunkAssignment { idx: 2, tokens: 16 },
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_tick_unchunked_takes_whole_prompts() {
+        let p = plan_tick(0, &[100, 5], &[1, 2], 0, 0);
+        assert!(p.decode_rounds.is_empty());
+        assert_eq!(p.prefill_tokens(), 105);
+    }
+
+    #[test]
+    fn plan_tick_budget_is_fifo_and_tight() {
+        // budget 20, 4 decode lanes → 16 tokens for prefill, oldest first
+        let p = plan_tick(4, &[10, 10, 10], &[1, 2, 4, 8], 8, 20);
+        assert_eq!(
+            p.chunks,
+            vec![
+                ChunkAssignment { idx: 0, tokens: 8 },
+                ChunkAssignment { idx: 1, tokens: 8 },
+            ]
+        );
+        assert_eq!(p.prefill_tokens(), 16);
+    }
+
+    #[test]
+    fn plan_tick_minimum_progress_under_decode_saturation() {
+        // decode alone fills the budget: the oldest prefill still gets
+        // exactly one token (no livelock), nothing else runs
+        let p = plan_tick(8, &[500, 500], &[1, 2, 4, 8], 64, 8);
+        assert_eq!(p.chunks, vec![ChunkAssignment { idx: 0, tokens: 1 }]);
+        // ...but an idle prefill queue adds nothing
+        let p = plan_tick(8, &[], &[1, 2, 4, 8], 64, 8);
+        assert!(p.chunks.is_empty());
+        let p = plan_tick(8, &[0, 0], &[1, 2, 4, 8], 64, 8);
+        assert!(p.chunks.is_empty(), "drained prefills must not trigger the guarantee");
+    }
+
+    #[test]
+    fn prop_plan_tick_token_budget_invariant() {
+        // seeded sweep: the mixed plan never over-schedules — prefill
+        // tokens fit max(budget − n_decode, 1), chunks respect the
+        // per-request cap and remaining counts, FIFO order, ≤ 1 chunk
+        // per request — and always makes progress when work exists
+        let mut r = crate::util::rng::Pcg32::new(0x71C4);
+        for _ in 0..1000 {
+            let n_decode = r.below(12) as usize;
+            let n_pf = r.below(6) as usize;
+            let remaining: Vec<usize> = (0..n_pf).map(|_| 1 + r.below(300) as usize).collect();
+            let chunk = if r.f32() < 0.3 { 0 } else { 1 + r.below(64) as usize };
+            let budget = if r.f32() < 0.3 { 0 } else { 1 + r.below(40) as usize };
+            let p = plan_tick(n_decode, &remaining, &[1, 2, 4, 8], chunk, budget);
+            // decode side: covers every decoding lane
+            let lanes: usize = p.decode_rounds.iter().sum();
+            assert!(lanes >= n_decode);
+            // chunk-shape invariants
+            let mut last_idx = None;
+            for c in &p.chunks {
+                assert!(c.tokens > 0);
+                assert!(c.tokens <= remaining[c.idx]);
+                if chunk > 0 {
+                    assert!(c.tokens <= chunk);
+                }
+                if let Some(prev) = last_idx {
+                    assert!(c.idx > prev, "chunks must be FIFO and at most one per request");
+                }
+                last_idx = Some(c.idx);
+            }
+            // budget invariant
+            if budget > 0 {
+                let allowance = budget.saturating_sub(n_decode).max(1);
+                assert!(
+                    p.prefill_tokens() <= allowance,
+                    "n_decode={n_decode} budget={budget} chunk={chunk} \
+                     remaining={remaining:?} plan={p:?}"
+                );
+            }
+            // liveness: pending prefill always advances
+            if !remaining.is_empty() {
+                assert!(p.prefill_tokens() >= 1, "prefill starved: {p:?}");
+            }
         }
     }
 }

@@ -16,7 +16,7 @@ use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::config::Manifest;
 use crate::coordinator::batcher;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{LiveRequest, Request, Response};
+use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::state::{SsmSlab, SsmStatePool};
 use crate::data::BOS;
@@ -222,6 +222,7 @@ impl Engine {
                     resp.tpot_ms,
                     resp.ttlt_ms,
                     resp.tokens.len(),
+                    &resp.itl_ms,
                 );
                 finished.push(resp);
             } else {
@@ -260,7 +261,12 @@ impl Engine {
         };
         let use_cache =
             self.cache.is_some() && !req.params.no_cache && !effective.is_empty();
-        let mut lr = LiveRequest::new(req, slot);
+        // this engine prefills whole prompts inline (fixed-length AOT
+        // graphs cannot pause mid-prompt), so the request enters the
+        // decode phase within this call; its per-request RNG stream is
+        // seeded but unused — the XLA scheduler never reorders sampling
+        // for a fixed workload, so the shared sampler stays exact here
+        let mut lr = LiveRequest::new(req, slot, self.cfg.sampler_seed);
         let t0 = std::time::Instant::now();
         // exact whole-prompt hit: restore the end-of-prompt state and
         // sample from the cached last logits row — no graph execution.
@@ -280,6 +286,7 @@ impl Engine {
                 self.metrics.record_cache_stats(stats);
                 let tok = self.sampler.sample(&row, self.vocab, &lr.req.params);
                 lr.generated.push(tok);
+                lr.phase = Phase::Decoding;
                 lr.prefill_done = Some(std::time::Instant::now());
                 lr.last_token = lr.prefill_done;
                 self.live.push(lr);
@@ -318,6 +325,7 @@ impl Engine {
         }
         let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
         lr.generated.push(tok);
+        lr.phase = Phase::Decoding;
         lr.prefill_done = Some(std::time::Instant::now());
         lr.last_token = lr.prefill_done;
         self.live.push(lr);

@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::TransformerTierInfo;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{LiveRequest, Request, Response};
+use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
 use crate::coordinator::sampler::Sampler;
 use crate::data::BOS;
 use crate::runtime::{lit_from_f32, lit_from_i32, lit_to_f32, Runtime};
@@ -137,7 +137,7 @@ impl TransformerEngine {
                 let (lr, _, _, _) = self.live.swap_remove(i);
                 let resp = lr.into_response();
                 self.metrics.record_response(resp.ttft_ms, resp.tpot_ms, resp.ttlt_ms,
-                                             resp.tokens.len());
+                                             resp.tokens.len(), &resp.itl_ms);
                 finished.push(resp);
             } else {
                 i += 1;
@@ -164,7 +164,9 @@ impl TransformerEngine {
             p
         };
         let toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
-        let mut lr = LiveRequest::new(req, usize::MAX);
+        // per-request RNG stream unused here (this engine keeps its
+        // shared sampler; `set_sampler_seed` predates the config route)
+        let mut lr = LiveRequest::new(req, usize::MAX, super::engine::DEFAULT_SAMPLER_SEED);
         let n = self.cache_elems();
         let sh = self.cache_shape();
         let t0 = std::time::Instant::now();
@@ -184,6 +186,7 @@ impl TransformerEngine {
         let row = &logits[(t - 1) * vdim..t * vdim];
         let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
         lr.generated.push(tok);
+        lr.phase = Phase::Decoding;
         lr.prefill_done = Some(std::time::Instant::now());
         lr.last_token = lr.prefill_done;
         self.live.push((lr, k, v, t));

@@ -6,7 +6,18 @@
 use std::time::Instant;
 
 use crate::cache::CacheStats;
+use crate::util::rng::Pcg32;
 use crate::util::stats::{LogHistogram, Summary};
+
+/// Retained inter-token-gap samples for the exact `itl_summary`. ITL
+/// records one sample per generated *token* (unlike the per-request
+/// ttft/tpot/ttlt vecs), so an unbounded buffer would grow ~8
+/// bytes/token for the life of a serving process; above the cap the
+/// buffer switches to deterministic reservoir sampling (Algorithm R,
+/// seeded) — exact below the cap (every test/bench workload is), an
+/// unbiased sample above it. The `itl_ms` histogram keeps the full
+/// stream either way.
+pub const ITL_SAMPLE_CAP: usize = 65_536;
 
 pub struct Metrics {
     pub ttft_ms: LogHistogram,
@@ -14,10 +25,20 @@ pub struct Metrics {
     pub ttlt_ms: LogHistogram,
     pub decode_step_ms: LogHistogram,
     pub prefill_ms: LogHistogram,
-    /// raw samples for exact summaries in reports
+    /// per-token inter-token gaps across all finished requests — the
+    /// tail of this distribution (p95/max) is what chunked prefill
+    /// bounds under bursty long-prompt arrivals
+    pub itl_ms: LogHistogram,
+    /// raw samples for exact summaries in reports (per-request counts
+    /// — bounded by workload size)
     ttft_raw: Vec<f64>,
     tpot_raw: Vec<f64>,
     ttlt_raw: Vec<f64>,
+    /// per-token gap samples, reservoir-capped at [`ITL_SAMPLE_CAP`]
+    itl_raw: Vec<f64>,
+    /// gaps observed so far (reservoir denominator)
+    itl_seen: u64,
+    itl_rng: Pcg32,
     pub tokens_out: u64,
     pub requests_done: u64,
     pub padded_lanes: u64,
@@ -42,9 +63,13 @@ impl Metrics {
             ttlt_ms: LogHistogram::new(0.01, 600_000.0, 64),
             decode_step_ms: LogHistogram::new(0.01, 10_000.0, 64),
             prefill_ms: LogHistogram::new(0.01, 60_000.0, 64),
+            itl_ms: LogHistogram::new(0.01, 60_000.0, 64),
             ttft_raw: Vec::new(),
             tpot_raw: Vec::new(),
             ttlt_raw: Vec::new(),
+            itl_raw: Vec::new(),
+            itl_seen: 0,
+            itl_rng: Pcg32::new(0x17A7),
             tokens_out: 0,
             requests_done: 0,
             padded_lanes: 0,
@@ -65,7 +90,17 @@ impl Metrics {
         self.cache.map_or(0, |c| c.prefill_tokens_saved)
     }
 
-    pub fn record_response(&mut self, ttft: f64, tpot: f64, ttlt: f64, n_tokens: usize) {
+    /// `itl` is the request's per-token inter-token gaps
+    /// (`Response::itl_ms`) — recorded individually so the summary can
+    /// report true tail percentiles, not just the per-request mean.
+    pub fn record_response(
+        &mut self,
+        ttft: f64,
+        tpot: f64,
+        ttlt: f64,
+        n_tokens: usize,
+        itl: &[f64],
+    ) {
         if ttft.is_finite() {
             self.ttft_ms.record(ttft);
             self.ttft_raw.push(ttft);
@@ -77,6 +112,21 @@ impl Metrics {
         if ttlt.is_finite() {
             self.ttlt_ms.record(ttlt);
             self.ttlt_raw.push(ttlt);
+        }
+        for &gap in itl {
+            if gap.is_finite() {
+                self.itl_ms.record(gap);
+                self.itl_seen += 1;
+                if self.itl_raw.len() < ITL_SAMPLE_CAP {
+                    self.itl_raw.push(gap);
+                } else {
+                    // Algorithm R: keep each seen gap with prob cap/seen
+                    let j = (self.itl_rng.next_u64() % self.itl_seen) as usize;
+                    if j < ITL_SAMPLE_CAP {
+                        self.itl_raw[j] = gap;
+                    }
+                }
+            }
         }
         self.tokens_out += n_tokens as u64;
         self.requests_done += 1;
@@ -108,22 +158,33 @@ impl Metrics {
     pub fn ttlt_summary(&self) -> Summary {
         Summary::of(&self.ttlt_raw)
     }
+    /// Summary over the pooled inter-token gaps — exact while at most
+    /// [`ITL_SAMPLE_CAP`] gaps have been recorded, a seeded reservoir
+    /// sample beyond that (the `itl_ms` histogram always covers the
+    /// full stream). p95/max are the chunked-prefill acceptance
+    /// quantities.
+    pub fn itl_summary(&self) -> Summary {
+        Summary::of(&self.itl_raw)
+    }
 
     pub fn report(&self) -> String {
         let t = self.ttft_summary();
         let p = self.tpot_summary();
         let l = self.ttlt_summary();
+        let i = self.itl_summary();
         let mut out = format!(
             "requests={} tokens={} throughput={:.1} tok/s padding={:.1}%\n\
-             TTFT ms  mean={:.2} p50={:.2} p99={:.2}\n\
+             TTFT ms  mean={:.2} p50={:.2} p95={:.2} p99={:.2}\n\
              TPOT ms  mean={:.3} p50={:.3} p99={:.3}\n\
+             ITL  ms  mean={:.3} p50={:.3} p95={:.3} max={:.3}\n\
              TTLT ms  mean={:.1} p50={:.1} p99={:.1}",
             self.requests_done,
             self.tokens_out,
             self.throughput_tok_s(),
             100.0 * self.padding_fraction(),
-            t.mean, t.p50, t.p99,
+            t.mean, t.p50, t.p95, t.p99,
             p.mean, p.p50, p.p99,
+            i.mean, i.p50, i.p95, i.max,
             l.mean, l.p50, l.p99,
         );
         if let Some(c) = &self.cache {
@@ -151,16 +212,42 @@ mod tests {
     #[test]
     fn record_and_report() {
         let mut m = Metrics::new();
-        m.record_response(10.0, 1.0, 50.0, 40);
-        m.record_response(20.0, 2.0, 80.0, 30);
+        m.record_response(10.0, 1.0, 50.0, 40, &[1.0, 1.0]);
+        m.record_response(20.0, 2.0, 80.0, 30, &[2.0, 9.0]);
         m.record_round(8, 5);
         assert_eq!(m.requests_done, 2);
         assert_eq!(m.tokens_out, 70);
         assert!((m.padding_fraction() - 3.0 / 8.0).abs() < 1e-12);
         let r = m.report();
         assert!(r.contains("requests=2"));
+        assert!(r.contains("ITL"), "report must surface inter-token latency: {r}");
         assert!(!r.contains("prefix-cache"), "no cache line until stats are synced");
         assert!((m.ttft_summary().mean - 15.0).abs() < 1e-9);
+        let i = m.itl_summary();
+        assert_eq!(i.n, 4);
+        assert_eq!(i.max, 9.0, "pooled ITL must keep the per-token tail");
+        assert_eq!(m.itl_ms.n, 4);
+    }
+
+    #[test]
+    fn itl_nan_gaps_are_skipped() {
+        let mut m = Metrics::new();
+        m.record_response(1.0, f64::NAN, 2.0, 1, &[f64::NAN]);
+        assert_eq!(m.itl_summary().n, 0);
+        assert_eq!(m.requests_done, 1);
+    }
+
+    #[test]
+    fn itl_raw_buffer_is_bounded() {
+        // the retained sample set must stop growing at the cap while
+        // the histogram keeps counting the full stream
+        let mut m = Metrics::new();
+        let gaps = vec![1.0f64; 4096];
+        for _ in 0..((2 * ITL_SAMPLE_CAP) / gaps.len()) {
+            m.record_response(1.0, 1.0, 1.0, gaps.len(), &gaps);
+        }
+        assert_eq!(m.itl_summary().n, ITL_SAMPLE_CAP);
+        assert_eq!(m.itl_ms.n, 2 * ITL_SAMPLE_CAP as u64);
     }
 
     #[test]

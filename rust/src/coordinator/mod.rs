@@ -8,13 +8,21 @@
 //! * [`state`]    — the SSM state manager (constant bytes/request) and
 //!                  the KV-cache pool (linear bytes/request) — the two
 //!                  memory models behind paper Figure 1(c)
-//! * [`batcher`]  — bucketed continuous batching for the decode loop
-//! * [`sampler`]  — greedy / temperature / top-k sampling
-//! * [`metrics`]  — TTFT / TPOT / TTLT histograms + queue gauges
+//! * [`batcher`]  — bucketed continuous batching for the decode loop +
+//!                  the unified mixed decode/prefill tick planner
+//!                  (`plan_tick`: token budget, prefill chunks)
+//! * [`sampler`]  — greedy / temperature / top-k sampling (per-request
+//!                  RNG streams on the native path)
+//! * [`metrics`]  — TTFT / TPOT / ITL / TTLT histograms + queue gauges
 //! * [`engine`]   — the single-owner execution loop over [`crate::runtime`]
+//!                  (two-phase: fixed-length AOT prefill graphs cannot
+//!                  pause mid-prompt)
 //! * [`native`]   — the artifact-free backend: the same engine surface
 //!                  served from the pure-rust [`crate::ssm::StepModel`]s
-//!                  (fp32 reference or W8A8), no XLA artifacts needed
+//!                  (fp32 reference or W8A8) through ONE step-loop that
+//!                  interleaves (B, T) chunked prefill with decode —
+//!                  long prompts advance incrementally instead of
+//!                  stalling live lanes
 //! * [`server`]   — a threaded front door (std::mpsc; tokio is not in
 //!                  the offline vendor set, and one executor thread is
 //!                  the right shape for one PJRT CPU device anyway)
@@ -37,4 +45,4 @@ pub mod state;
 
 pub use engine::{Engine, EngineConfig};
 pub use native::{NativeEngine, NativeEngineConfig};
-pub use request::{FinishReason, Request, RequestId, Response, SamplingParams};
+pub use request::{FinishReason, Phase, Request, RequestId, Response, SamplingParams};

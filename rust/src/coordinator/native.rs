@@ -1,38 +1,57 @@
-//! `NativeEngine`: the artifact-free serving backend. Same scheduler
-//! shape as [`super::engine::Engine`] — prefill-priority admission,
-//! bucketed continuous decode batching via [`super::batcher`], the
-//! constant-size [`SsmStatePool`] — but execution goes through a
-//! [`StepModel`] (fp32 reference or the W8A8
-//! [`crate::ssm::QuantizedMambaModel`]) instead of AOT XLA graphs.
-//! This is the "no-artifact edge serving" scenario: a coordinator that
-//! can come up on a bare machine with nothing but weights (or a
-//! synthetic tier) and still expose the identical
-//! `submit`/`step`/`run_to_completion`/`Metrics` surface.
+//! `NativeEngine`: the artifact-free serving backend, driven by a
+//! **unified chunked-prefill scheduler**.
 //!
-//! Hot-path properties (PR 2):
+//! Where the XLA [`super::engine::Engine`] must run two-phase ticks
+//! (inline whole-prompt prefill at admission, then bucketed decode
+//! rounds — its AOT graphs cannot pause mid-prompt), this engine runs
+//! ONE step-loop: every tick assembles a single mixed work plan
+//! ([`batcher::plan_tick`]) under a token budget
+//! (`max_tokens_per_tick`) that packs
+//!
+//! * all decode lanes (1 token each — inter-token latency is the
+//!   protected quantity), batched into minimum-padding bucket rounds
+//!   exactly as before, and
+//! * prefill **chunks**: every in-flight prompt advances by up to
+//!   `prefill_chunk` tokens, all scheduled prompts together as one
+//!   (B, T) batched execution ([`StepModel::prefill_batch_into`] —
+//!   ragged chunks padded to the chunk grid, projections as one
+//!   B·T_max-row int8 GEMM, conv/scan per lane over carried state).
+//!
+//! A 2k-token prompt therefore no longer freezes every live lane for
+//! a whole prompt's worth of compute: it advances `prefill_chunk`
+//! tokens per tick while decode keeps ticking (paper §1 / Table 1:
+//! bounded generation latency under request-intensive load). SSMs are
+//! uniquely suited to this — the recurrent state is constant-size, so
+//! a prefill pauses at any token boundary for free, and chunking is
+//! **bit-exact** (`rust/tests/chunked_prefill.rs`).
+//!
+//! Cold, warm (prefix-cache hit) and resumed prefills all flow
+//! through the same chunk queue: admission probes the trie, restores
+//! the longest cached prefix into the request's pool slot and enqueues
+//! the *suffix* as an ordinary partially-consumed prompt
+//! ([`Phase::Prefilling`]); a full-prompt hit samples from the cached
+//! logits row and joins decode with zero model execution. Chunk ends
+//! snap to the `snapshot_stride` grid, so chunked prefills emit the
+//! identical nested-prefix snapshots the old whole-prompt path did.
+//!
+//! Hot-path properties (PR 2–5):
 //! * decode rounds execute out of per-round reusable
 //!   [`StepScratch`]es — no per-step allocation in the model after
-//!   warmup (W8A8 path; asserted in `rust/tests/zero_alloc.rs`);
+//!   warmup (asserted in `rust/tests/zero_alloc.rs`, which also holds
+//!   the chunked (B, T) prefill body to the zero-alloc standard);
 //! * quantized models get an i8 conv-window pool
 //!   ([`SsmStatePool::with_quantized_conv`], quarter the conv state
-//!   bytes) gathered/scattered via the `*_raw_q` pair;
-//! * `threads > 1` parallelizes decode across groups (one scoped
-//!   worker per round) or, for a single group, across lanes inside the
-//!   step. Tokens are **bit-identical** to `threads = 1`: lane math is
-//!   independent and sampling stays in deterministic group order;
+//!   bytes);
+//! * `threads > 1` parallelizes decode across groups (or lanes of a
+//!   lone group) — **bit-identical** to `threads = 1`;
 //! * the int8 hot paths run on the [`Kernels`] SIMD dispatch
-//!   (`NativeEngineConfig::kernel_backend`, default auto-detected /
-//!   `QUAMBA_KERNELS`) — also bit-identical across backends, so
-//!   forcing `scalar` vs `avx2` only moves latency, never tokens;
-//! * `cache_bytes > 0` arms the prefix-sharing state cache (PR 4,
-//!   [`crate::cache::PrefixCache`]): admission probes the token trie,
-//!   a hit restores the cached constant-size slab and prefills only
-//!   the *suffix* tokens (a full-prompt hit skips prefill entirely via
-//!   the cached last logits row), and misses insert snapshots at
-//!   `snapshot_stride` cut points + end of prompt. Warm paths are
-//!   **bit-identical** to cold — the cache moves TTFT, never tokens
-//!   (`rust/tests/prefix_cache.rs`); `SamplingParams::no_cache` opts a
-//!   request out entirely.
+//!   (`NativeEngineConfig::kernel_backend`) — bit-identical across
+//!   backends;
+//! * every request samples from its **own** RNG stream
+//!   ([`LiveRequest::rng`]): chunk size, token budget, cache hits and
+//!   thread count can move *when* a request's tokens are produced,
+//!   never *which* tokens — the scheduler is latency policy, not
+//!   sampling policy.
 
 use std::collections::VecDeque;
 
@@ -42,9 +61,9 @@ use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::DEFAULT_SAMPLER_SEED;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{LiveRequest, Request, Response};
-use crate::coordinator::sampler::Sampler;
-use crate::coordinator::state::{SsmSlab, SsmStatePool};
+use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
+use crate::coordinator::sampler;
+use crate::coordinator::state::SsmStatePool;
 use crate::data::BOS;
 use crate::quant::{KernelBackend, Kernels};
 use crate::ssm::{MambaState, StepModel, StepScratch};
@@ -53,7 +72,9 @@ use crate::ssm::{MambaState, StepModel, StepScratch};
 pub struct NativeEngineConfig {
     /// state-pool capacity (max concurrent requests)
     pub capacity: usize,
-    /// admission limit per tick
+    /// admissions per tick into the chunk queue (backpressure on the
+    /// scheduler's bookkeeping; prompt *work* is paced by
+    /// `prefill_chunk` / `max_tokens_per_tick`, not by this)
     pub max_prefills_per_tick: usize,
     /// decode-round lane buckets (ascending). The native backend can
     /// run any batch size, but bucketing keeps the scheduling identical
@@ -62,19 +83,17 @@ pub struct NativeEngineConfig {
     /// decode worker threads. 1 (default) is the fully sequential
     /// path; >1 runs decode rounds on at most `threads` scoped workers
     /// (and lane-splits a lone round) — output tokens are bit-identical
-    /// either way. Note: lane-splitting spawns scoped threads per
-    /// conv/scan section (2 per layer per step), so it only pays off
-    /// when per-lane work is large (big d_inner/d_state); the
-    /// round-parallel path amortizes spawns over a whole round.
+    /// either way.
     pub threads: usize,
-    /// token sampler seed (determinism across engines is seed-keyed)
+    /// engine-level sampler seed; each request derives its own RNG
+    /// stream from (this, request id, `SamplingParams::seed`), so
+    /// scheduling order never perturbs sampling
     pub sampler_seed: u64,
     /// int8 kernel backend for the model hot paths. `None` (default)
     /// auto-selects once per process (`QUAMBA_KERNELS` env override,
     /// else runtime detection); `Some(b)` forces backend `b` for this
     /// engine — panics at construction if the machine cannot run it.
-    /// Every backend yields **bit-identical** tokens (tested), so this
-    /// knob only changes wall-clock.
+    /// Every backend yields **bit-identical** tokens (tested).
     pub kernel_backend: Option<KernelBackend>,
     /// prefix-cache byte budget; 0 (default) disables the cache. SSM
     /// snapshots are constant-size, so this is simply
@@ -82,9 +101,21 @@ pub struct NativeEngineConfig {
     /// their token lengths.
     pub cache_bytes: usize,
     /// with the cache on, also snapshot every `snapshot_stride` prompt
-    /// tokens (nested-prefix reuse, e.g. a system prompt shared below
-    /// a longer template); 0 = end-of-prompt snapshots only.
+    /// tokens (nested-prefix reuse); 0 = end-of-prompt snapshots only.
+    /// Chunk boundaries snap to this grid so chunked prefills emit the
+    /// same snapshot keys as whole-prompt prefills.
     pub snapshot_stride: usize,
+    /// max prompt tokens one in-flight prefill advances per tick;
+    /// 0 (default) = unchunked (a prompt completes in the tick it is
+    /// scheduled). Small values bound the inter-token latency decode
+    /// lanes observe while long prompts stream in — chunking moves
+    /// latency, **never tokens** (`rust/tests/chunked_prefill.rs`).
+    pub prefill_chunk: usize,
+    /// per-tick token budget across decode lanes (1 each) + prefill
+    /// chunks; 0 (default) = unlimited. When decode alone saturates
+    /// the budget, the oldest prefill still advances 1 token/tick
+    /// (see [`batcher::plan_tick`]).
+    pub max_tokens_per_tick: usize,
 }
 
 impl Default for NativeEngineConfig {
@@ -98,6 +129,8 @@ impl Default for NativeEngineConfig {
             kernel_backend: None,
             cache_bytes: 0,
             snapshot_stride: 0,
+            prefill_chunk: 0,
+            max_tokens_per_tick: 0,
         }
     }
 }
@@ -118,7 +151,6 @@ impl RoundScratch {
 /// One decode round's gathered inputs/state (built per tick).
 struct RoundIo {
     slots: Vec<usize>,
-    b: usize,
     toks: Vec<u16>,
     state: MambaState,
     /// model execution time for this round (recorded into
@@ -127,24 +159,13 @@ struct RoundIo {
     step_ms: f64,
 }
 
-/// Clone a finished/ongoing B=1 prefill state as a pool-layout slab —
-/// the prefix-cache snapshot payload ((L, 1, …) flattens to exactly
-/// the pool's per-slot (L, …) layout).
-fn slab_of(state: &MambaState) -> SsmSlab {
-    debug_assert_eq!(state.b, 1, "snapshots are per-request (B=1) states");
-    SsmSlab { conv: state.conv.clone(), conv_q: state.conv_q.clone(), ssm: state.ssm.clone() }
-}
-
-/// Move a finished B=1 prefill state into a pool-layout slab (no copy).
-fn into_slab(state: MambaState) -> SsmSlab {
-    debug_assert_eq!(state.b, 1);
-    if state.is_quantized_conv() {
-        let (conv_q, ssm) = state.into_raw_q();
-        SsmSlab { conv: Vec::new(), conv_q, ssm }
-    } else {
-        let (conv, ssm) = state.into_raw();
-        SsmSlab { conv, conv_q: Vec::new(), ssm }
-    }
+/// One prefilling lane's allotment for this tick: advance
+/// `live[live_i]` from `next` up to `target` (both prompt-token
+/// indices), possibly across several stride-aligned sub-rounds.
+struct LanePlan {
+    live_i: usize,
+    next: usize,
+    target: usize,
 }
 
 pub struct NativeEngine {
@@ -154,13 +175,16 @@ pub struct NativeEngine {
     queue: VecDeque<Request>,
     live: Vec<LiveRequest>,
     done: Vec<Response>,
-    sampler: Sampler,
     pub metrics: Metrics,
     vocab: usize,
     scratches: Vec<RoundScratch>,
     kernels: Kernels,
     /// prefix-sharing snapshot cache (`cfg.cache_bytes > 0`)
     cache: Option<PrefixCache>,
+    /// monotonic admission counter — the chunk queue's FIFO key
+    /// (`LiveRequest::admitted_seq`); the live vec itself is reordered
+    /// by harvest's `swap_remove`
+    next_admission_seq: u64,
 }
 
 impl NativeEngine {
@@ -188,12 +212,12 @@ impl NativeEngine {
             queue: VecDeque::new(),
             live: Vec::new(),
             done: Vec::new(),
-            sampler: Sampler::new(cfg.sampler_seed),
             metrics: Metrics::new(),
             vocab,
             scratches: vec![RoundScratch::new(kernels)],
             kernels,
             cache,
+            next_admission_seq: 0,
             model,
             cfg,
         }
@@ -226,6 +250,11 @@ impl NativeEngine {
         self.live.len()
     }
 
+    /// Live requests still consuming their prompt (the chunk queue).
+    pub fn n_prefilling(&self) -> usize {
+        self.live.iter().filter(|lr| lr.prefill_remaining() > 0).count()
+    }
+
     pub fn state_bytes_per_request(&self) -> usize {
         self.pool.bytes_per_request()
     }
@@ -236,21 +265,52 @@ impl NativeEngine {
             + self.metrics.tokens_out as usize
     }
 
-    /// Run one scheduler tick: admit + prefill a few queued requests,
-    /// then one decode round over all live requests. Returns finished
-    /// responses (also retained for `take_done`). Result-typed for
-    /// interface parity with [`super::engine::Engine::step`]; the
-    /// native path itself cannot fail.
+    /// Run one unified scheduler tick:
+    /// 1. **admission** — pop queued requests into the live set (pool
+    ///    capacity gates), probing the prefix cache: hits restore the
+    ///    cached slab and enqueue only the suffix; full-prompt hits
+    ///    join decode immediately;
+    /// 2. **plan** — one mixed decode+prefill plan under the token
+    ///    budget ([`batcher::plan_tick`]);
+    /// 3. **decode rounds** — every decoding lane advances 1 token
+    ///    (bucketed, minimum padding, optionally threaded);
+    /// 4. **prefill chunk batch** — all scheduled prompts advance up
+    ///    to `prefill_chunk` tokens as one (B, T) batched execution;
+    ///    prompts that finish sample their first token and flip to
+    ///    [`Phase::Decoding`];
+    /// 5. **harvest** — finished requests become [`Response`]s.
+    ///
+    /// Returns finished responses (also retained for `take_done`).
+    /// Result-typed for interface parity with
+    /// [`super::engine::Engine::step`]; the native path cannot fail.
     pub fn step(&mut self) -> Result<Vec<Response>> {
-        for _ in 0..self.cfg.max_prefills_per_tick {
-            if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
-                break;
-            }
-            let req = self.queue.pop_front().unwrap();
-            self.prefill(req);
+        self.admit();
+        let dec_idx: Vec<usize> = (0..self.live.len())
+            .filter(|&i| self.live[i].phase == Phase::Decoding)
+            .collect();
+        let mut pf_idx: Vec<usize> = (0..self.live.len())
+            .filter(|&i| matches!(self.live[i].phase, Phase::Prefilling { .. }))
+            .collect();
+        // true FIFO over admissions: harvest's swap_remove scrambles
+        // live-vec order, so the budget (and the minimum-progress
+        // guarantee) must key on admission order, not position
+        pf_idx.sort_by_key(|&i| self.live[i].admitted_seq);
+        let remaining: Vec<usize> =
+            pf_idx.iter().map(|&i| self.live[i].prefill_remaining()).collect();
+        let plan = batcher::plan_tick(
+            dec_idx.len(),
+            &remaining,
+            &self.cfg.decode_buckets,
+            self.cfg.prefill_chunk,
+            self.cfg.max_tokens_per_tick,
+        );
+        // decode first: the latency-critical lanes never wait behind
+        // this tick's prefill work
+        if !dec_idx.is_empty() {
+            self.decode_tick(&dec_idx, &plan.decode_rounds);
         }
-        if !self.live.is_empty() {
-            self.decode_tick();
+        if !plan.chunks.is_empty() {
+            self.prefill_tick(&pf_idx, &plan.chunks);
         }
         let mut finished = Vec::new();
         let mut i = 0;
@@ -264,6 +324,7 @@ impl NativeEngine {
                     resp.tpot_ms,
                     resp.ttlt_ms,
                     resp.tokens.len(),
+                    &resp.itl_ms,
                 );
                 finished.push(resp);
             } else {
@@ -286,135 +347,92 @@ impl NativeEngine {
         std::mem::take(&mut self.done)
     }
 
-    fn prefill(&mut self, req: Request) {
-        let slot = self.pool.alloc().expect("state pool exhausted (checked above)");
-        // no graph-length padding: the native model ingests any T, so
-        // empty prompts just become a lone BOS
-        let prompt: Vec<u16> =
-            if req.prompt.is_empty() { vec![BOS] } else { req.prompt.clone() };
-        let use_cache = self.cache.is_some() && !req.params.no_cache;
-        let mut lr = LiveRequest::new(req, slot);
-        let t0 = std::time::Instant::now();
-        let quantized = self.model.quantized_conv_state();
-        let tl = prompt.len();
-        // warm start: restore the longest cached prefix into a fresh
-        // B=1 state and prefill only the suffix; a full-prompt hit also
-        // carries the last logits row and skips prefill entirely. The
-        // restored slab is this model's deterministic state for that
-        // prefix, so the warm path replays the cold bits exactly.
-        let hit = if use_cache { self.cache.as_mut().unwrap().lookup(&prompt) } else { None };
-        let (mut state, consumed, cached_row) = match hit {
-            Some(h) => {
-                let st = if quantized {
-                    MambaState::from_raw_q(self.model.tier(), 1, h.slab.conv_q, h.slab.ssm)
-                } else {
-                    MambaState::from_raw(self.model.tier(), 1, h.slab.conv, h.slab.ssm)
-                };
-                (st, h.len, h.logits_row)
+    /// Admission: allocate a pool slot, probe the prefix cache, and
+    /// enqueue whatever prompt suffix is left as chunked-prefill work.
+    /// No model execution happens here — that is the point: a burst of
+    /// long prompts costs this tick only a trie probe and a slab
+    /// restore per request, and their *compute* is paced by the
+    /// planner across the following ticks.
+    fn admit(&mut self) {
+        for _ in 0..self.cfg.max_prefills_per_tick {
+            if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
+                break;
             }
-            None => (MambaState::new_for(self.model.tier(), 1, quantized), 0, None),
-        };
-        // prefill gets a throwaway scratch: its buffers are sized by
-        // the prompt length T, and parking them in the engine's round
-        // workspaces would pin O(T·vocab) heap for the whole session
-        // (decode only ever needs B rows)
-        let mut scratch = StepScratch::with_kernels(1, self.kernels);
-        let mut logits = Vec::new();
-        let mut last_rows = 0usize; // logits rows of the final segment
-        let stride = self.cache.as_ref().map_or(0, |c| c.config().snapshot_stride);
-        let mut start = consumed;
-        while start < tl {
-            // with the cache on, stop at global stride multiples so
-            // interior snapshots land on one aligned cut grid whatever
-            // prefix a request resumed from (segment composition is
-            // bit-exact, so cutting never changes bits)
-            let end = if use_cache && stride > 0 {
-                tl.min((start / stride + 1) * stride)
-            } else {
-                tl
-            };
-            self.model.prefill_resume_into(
-                &prompt[start..end],
-                &mut state,
-                &mut scratch,
-                &mut logits,
-            );
-            last_rows = end - start;
-            if use_cache && end < tl {
-                let snap = Snapshot { slab: slab_of(&state), logits_row: None };
-                self.cache.as_mut().unwrap().insert(&prompt[..end], snap);
+            let req = self.queue.pop_front().unwrap();
+            let slot = self.pool.alloc().expect("state pool exhausted (checked above)");
+            let use_cache = self.cache.is_some() && !req.params.no_cache;
+            let mut lr = LiveRequest::new(req, slot, self.cfg.sampler_seed);
+            lr.admitted_seq = self.next_admission_seq;
+            self.next_admission_seq += 1;
+            let hit =
+                if use_cache { self.cache.as_mut().unwrap().lookup(&lr.prompt) } else { None };
+            if let Some(h) = hit {
+                if let Some(row) = h.logits_row {
+                    // full-prompt hit: restore the end-of-prompt state
+                    // and sample from the cached row — zero model
+                    // execution, straight into the decode phase
+                    self.pool.write(slot, h.slab);
+                    let tok = sampler::sample_row(&mut lr.rng, &row, self.vocab, &lr.req.params);
+                    lr.generated.push(tok);
+                    lr.phase = Phase::Decoding;
+                    lr.prefill_done = Some(std::time::Instant::now());
+                    lr.last_token = lr.prefill_done;
+                } else if h.len < lr.prompt.len() {
+                    // partial hit: the restored prefix is this model's
+                    // deterministic state for those tokens, so the
+                    // suffix enters the chunk queue like any cold
+                    // prompt admitted mid-prefill — one scheduler path
+                    self.pool.write(slot, h.slab);
+                    lr.phase = Phase::Prefilling { next: h.len };
+                }
+                // else: a full-length hit without a logits row should
+                // be unreachable (lookup filters those); fall through
+                // to a cold prefill over the freshly-zeroed slab
+                // rather than panicking the serving loop
             }
-            start = end;
+            self.live.push(lr);
         }
-        if use_cache && last_rows > 0 {
-            // end-of-prompt snapshot keeps the last logits row, so an
-            // exact resubmission never runs the model at all
-            let v = self.vocab;
-            let row = logits[(last_rows - 1) * v..last_rows * v].to_vec();
-            let snap = Snapshot { slab: slab_of(&state), logits_row: Some(row) };
-            self.cache.as_mut().unwrap().insert(&prompt, snap);
-        }
-        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        // one stats sync per tick — the counters are cumulative, so
+        // only the post-admission snapshot matters
         if let Some(c) = &self.cache {
             self.metrics.record_cache_stats(c.stats());
         }
-        // end-of-prompt state into the request's slot: the slab is
-        // already owned, so it moves through the validated `write`
-        // (same stale-slot assertion as `restore`, no extra copy) —
-        // this replaces the old gather/scatter round-trip
-        self.pool.write(slot, into_slab(state));
-        let v = self.vocab;
-        let row: &[f32] = match &cached_row {
-            Some(r) => r.as_slice(),
-            None => &logits[(last_rows - 1) * v..last_rows * v],
-        };
-        let tok = self.sampler.sample(row, v, &lr.req.params);
-        lr.generated.push(tok);
-        lr.prefill_done = Some(std::time::Instant::now());
-        lr.last_token = lr.prefill_done;
-        self.live.push(lr);
     }
 
-    fn decode_tick(&mut self) {
-        let n = self.live.len();
-        let plan = batcher::plan_rounds(n, &self.cfg.decode_buckets);
-        let groups = batcher::assign(n, &plan);
-        let quantized = self.model.quantized_conv_state();
+    /// One decode pass over the decoding lanes `dec` (indices into
+    /// `self.live`), following the plan's bucket rounds.
+    fn decode_tick(&mut self, dec: &[usize], rounds: &[usize]) {
+        let groups = batcher::assign(dec.len(), rounds);
         // gather phase: pack every group's lanes/tokens/state
-        let mut rounds: Vec<RoundIo> = Vec::with_capacity(groups.len());
+        let mut io: Vec<RoundIo> = Vec::with_capacity(groups.len());
         for (gi, group) in groups.iter().enumerate() {
-            let b = plan[gi];
+            let b = rounds[gi];
             self.metrics.record_round(b, group.len());
-            let slots: Vec<usize> = group.iter().map(|&i| self.live[i].state_slot).collect();
+            let slots: Vec<usize> =
+                group.iter().map(|&p| self.live[dec[p]].state_slot).collect();
             let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
-            for (bi, &i) in group.iter().enumerate() {
-                toks[bi] = self.live[i].next_input_token();
+            for (bi, &p) in group.iter().enumerate() {
+                toks[bi] = self.live[dec[p]].next_input_token();
             }
-            let state = if quantized {
-                let (conv_q, ssm) = self.pool.gather_raw_q(&slots, b);
-                MambaState::from_raw_q(self.model.tier(), b, conv_q, ssm)
-            } else {
-                let (conv, ssm) = self.pool.gather_raw(&slots, b);
-                MambaState::from_raw(self.model.tier(), b, conv, ssm)
-            };
-            rounds.push(RoundIo { slots, b, toks, state, step_ms: 0.0 });
+            let state = self.pool.gather_state(self.model.tier(), &slots, b);
+            io.push(RoundIo { slots, toks, state, step_ms: 0.0 });
         }
-        while self.scratches.len() < rounds.len() {
+        while self.scratches.len() < io.len() {
             self.scratches.push(RoundScratch::new(self.kernels));
         }
         // execute phase
         let model = &*self.model;
         let scratches = &mut self.scratches;
         let threads = self.cfg.threads.max(1);
-        if threads > 1 && rounds.len() > 1 {
+        if threads > 1 && io.len() > 1 {
             // group-level parallelism, capped at `threads` scoped
             // workers: each worker runs a contiguous chunk of rounds
             // sequentially (within-step threading off — the workers
             // already cover the cores). Commit stays in group order
             // below, so tokens match the sequential schedule exactly.
-            let per = rounds.len().div_ceil(threads);
+            let per = io.len().div_ceil(threads);
             std::thread::scope(|sc| {
-                for (rs, wss) in rounds.chunks_mut(per).zip(scratches.chunks_mut(per)) {
+                for (rs, wss) in io.chunks_mut(per).zip(scratches.chunks_mut(per)) {
                     sc.spawn(move || {
                         for (r, ws) in rs.iter_mut().zip(wss.iter_mut()) {
                             ws.scratch.threads = 1;
@@ -431,7 +449,7 @@ impl NativeEngine {
                 }
             });
         } else {
-            for (r, ws) in rounds.iter_mut().zip(scratches.iter_mut()) {
+            for (r, ws) in io.iter_mut().zip(scratches.iter_mut()) {
                 ws.scratch.threads = threads;
                 let t0 = std::time::Instant::now();
                 model.step_into(&r.toks, &mut r.state, &mut ws.scratch, &mut ws.logits);
@@ -440,26 +458,20 @@ impl NativeEngine {
         }
         // one latency sample per round, in deterministic group order
         // (same metric semantics as the XLA engine's decode_round)
-        for r in &rounds {
+        for r in &io {
             self.metrics.decode_step_ms.record(r.step_ms);
         }
         // commit phase (deterministic order): scatter states, sample
         let v = self.vocab;
-        for (gi, r) in rounds.into_iter().enumerate() {
-            let RoundIo { slots, b, state, .. } = r;
+        for (gi, r) in io.into_iter().enumerate() {
+            let RoundIo { slots, state, .. } = r;
             // only live slots are scattered back; padded-lane outputs drop
-            if quantized {
-                let (conv_q, ssm) = state.into_raw_q();
-                self.pool.scatter_raw_q(&slots, b, &conv_q, &ssm);
-            } else {
-                let (conv, ssm) = state.into_raw();
-                self.pool.scatter_raw(&slots, b, &conv, &ssm);
-            }
+            self.pool.scatter_state(&slots, state);
             let logits = &self.scratches[gi].logits;
-            for (bi, &i) in groups[gi].iter().enumerate() {
+            for (bi, &p) in groups[gi].iter().enumerate() {
                 let row = &logits[bi * v..(bi + 1) * v];
-                let lr = &mut self.live[i];
-                let tok = self.sampler.sample(row, v, &lr.req.params);
+                let lr = &mut self.live[dec[p]];
+                let tok = sampler::sample_row(&mut lr.rng, row, v, &lr.req.params);
                 lr.generated.push(tok);
                 let now = std::time::Instant::now();
                 if let Some(last) = lr.last_token {
@@ -467,6 +479,130 @@ impl NativeEngine {
                 }
                 lr.last_token = Some(now);
             }
+        }
+    }
+
+    /// The tick's (B, T) batched prefill work over the scheduled
+    /// chunks (`pf` maps planner positions to `self.live` indices).
+    /// Every lane consumes its WHOLE allotment (`ca.tokens`, capped at
+    /// prompt end) this tick — the planner's token budget is spent
+    /// exactly, and `prefill_chunk = 0` keeps its "prompt completes in
+    /// the tick it is scheduled" meaning with the cache on. The stride
+    /// grid shapes *sub-rounds*, not the amount of work: each
+    /// sub-round advances all unfinished lanes to their next global
+    /// stride cut (or target / prompt end) as one batched execution,
+    /// inserting interior/end-of-prompt snapshots at exactly the keys
+    /// the old inline whole-prompt path used. With the cache off (or
+    /// `snapshot_stride = 0`) this collapses to a single sub-round.
+    fn prefill_tick(&mut self, pf: &[usize], chunks: &[batcher::ChunkAssignment]) {
+        let stride = self.cache.as_ref().map_or(0, |c| c.config().snapshot_stride);
+        let mut lanes: Vec<LanePlan> = Vec::with_capacity(chunks.len());
+        for ca in chunks {
+            let live_i = pf[ca.idx];
+            let lr = &self.live[live_i];
+            let next = match lr.phase {
+                Phase::Prefilling { next } => next,
+                Phase::Decoding => unreachable!("planner only schedules prefilling requests"),
+            };
+            let target = lr.prompt.len().min(next + ca.tokens);
+            debug_assert!(target > next, "planner scheduled an empty chunk");
+            lanes.push(LanePlan { live_i, next, target });
+        }
+        // the chunk batch gets a throwaway scratch: its buffers are
+        // sized by B·T_chunk rows, and parking them in the engine's
+        // round workspaces would pin O(B·T·vocab) heap for the whole
+        // session (decode only ever needs B rows). The model itself is
+        // allocation-free inside the call (tests/zero_alloc.rs).
+        let mut scratch = StepScratch::with_kernels(1, self.kernels);
+        let mut logits: Vec<f32> = Vec::new();
+        let v = self.vocab;
+        while lanes.iter().any(|l| l.next < l.target) {
+            // this sub-round's spans: (index into `lanes`, start, end),
+            // ends snapped to the global stride grid so interior
+            // snapshots land on one aligned cut set whatever chunk
+            // size or resume point a request came in with (cutting
+            // never changes bits, only snapshot placement)
+            let mut round: Vec<(usize, usize, usize)> = Vec::new();
+            for (i, l) in lanes.iter().enumerate() {
+                if l.next >= l.target {
+                    continue;
+                }
+                let mut end = l.target;
+                if stride > 0 && !self.live[l.live_i].req.params.no_cache {
+                    end = end.min((l.next / stride + 1) * stride);
+                }
+                round.push((i, l.next, end));
+            }
+            let b = round.len();
+            let slots: Vec<usize> = round
+                .iter()
+                .map(|&(i, _, _)| self.live[lanes[i].live_i].state_slot)
+                .collect();
+            let mut state = self.pool.gather_state(self.model.tier(), &slots, b);
+            let t_max = round.iter().map(|&(_, s, e)| e - s).max().unwrap();
+            {
+                let live = &self.live;
+                let chunk_slices: Vec<&[u16]> = round
+                    .iter()
+                    .map(|&(i, s, e)| &live[lanes[i].live_i].prompt[s..e])
+                    .collect();
+                let t0 = std::time::Instant::now();
+                self.model.prefill_batch_into(
+                    &chunk_slices,
+                    &mut state,
+                    &mut scratch,
+                    &mut logits,
+                );
+                // prefill_ms samples per batched sub-round (the unit
+                // the scheduler actually executes), like decode_step_ms
+                self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            self.pool.scatter_state(&slots, state);
+            for (bi, &(i, start, end)) in round.iter().enumerate() {
+                let tl = end - start;
+                let live_i = lanes[i].live_i;
+                let finished = end == self.live[live_i].prompt.len();
+                let lane_cache =
+                    self.cache.is_some() && !self.live[live_i].req.params.no_cache;
+                if lane_cache {
+                    if !finished && stride > 0 && end % stride == 0 {
+                        // interior stride snapshot (nested-prefix reuse)
+                        let snap = Snapshot {
+                            slab: self.pool.snapshot(self.live[live_i].state_slot),
+                            logits_row: None,
+                        };
+                        let key = &self.live[live_i].prompt[..end];
+                        self.cache.as_mut().unwrap().insert(key, snap);
+                    }
+                    if finished {
+                        // end-of-prompt snapshot keeps the last logits
+                        // row, so an exact resubmission never runs the
+                        // model
+                        let row =
+                            logits[(bi * t_max + tl - 1) * v..(bi * t_max + tl) * v].to_vec();
+                        let snap = Snapshot {
+                            slab: self.pool.snapshot(self.live[live_i].state_slot),
+                            logits_row: Some(row),
+                        };
+                        self.cache.as_mut().unwrap().insert(&self.live[live_i].prompt, snap);
+                    }
+                }
+                let lr = &mut self.live[live_i];
+                if finished {
+                    let row = &logits[(bi * t_max + tl - 1) * v..(bi * t_max + tl) * v];
+                    let tok = sampler::sample_row(&mut lr.rng, row, v, &lr.req.params);
+                    lr.generated.push(tok);
+                    lr.phase = Phase::Decoding;
+                    lr.prefill_done = Some(std::time::Instant::now());
+                    lr.last_token = lr.prefill_done;
+                } else {
+                    lr.phase = Phase::Prefilling { next: end };
+                }
+                lanes[i].next = end;
+            }
+        }
+        if let Some(c) = &self.cache {
+            self.metrics.record_cache_stats(c.stats());
         }
     }
 }
@@ -551,6 +687,56 @@ mod tests {
         assert!(eng.n_queued() >= 3);
         let done = eng.run_to_completion().unwrap();
         assert_eq!(done.len(), 5);
+    }
+
+    #[test]
+    fn chunked_prefill_advances_across_ticks() {
+        // a 20-token prompt with prefill_chunk=4 consumes its prompt
+        // over ceil(20/4)=5 ticks, then decodes; the first token shows
+        // up only once the whole prompt is in
+        let model = MambaModel::synthetic(tier(), 13);
+        let cfg = NativeEngineConfig { prefill_chunk: 4, ..Default::default() };
+        let mut eng = NativeEngine::new(Box::new(model), cfg);
+        eng.submit(req(1, (0..20).map(|j| (j % 16) as u16).collect(), 3));
+        for tick in 0..4 {
+            eng.step().unwrap();
+            assert_eq!(eng.n_prefilling(), 1, "tick {tick}: prompt must still be in flight");
+            assert_eq!(eng.tokens_generated(), 0, "tick {tick}: no token before prompt done");
+        }
+        eng.step().unwrap(); // 5th chunk finishes the prompt → first token
+        assert_eq!(eng.n_prefilling(), 0);
+        assert_eq!(eng.tokens_generated(), 1);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn token_budget_paces_prefill_behind_decode() {
+        // budget 6 with 4 decode lanes leaves 2 prefill tokens/tick:
+        // a 10-token prompt admitted mid-decode needs 5 ticks of chunks
+        let model = MambaModel::synthetic(tier(), 13);
+        let cfg = NativeEngineConfig { max_tokens_per_tick: 6, ..Default::default() };
+        let mut eng = NativeEngine::new(Box::new(model), cfg);
+        for i in 0..4u64 {
+            eng.submit(req(i, vec![1, 2], 32));
+        }
+        // two admission ticks (max_prefills_per_tick=2) get all 4 decoding
+        eng.step().unwrap();
+        eng.step().unwrap();
+        assert_eq!(eng.n_prefilling(), 0);
+        eng.submit(req(9, (0..10).map(|j| (j % 16) as u16).collect(), 2));
+        let mut ticks_in_flight = 0;
+        while eng.n_live() > 4 || eng.n_queued() > 0 {
+            eng.step().unwrap();
+            if eng.n_prefilling() > 0 {
+                ticks_in_flight += 1;
+            }
+        }
+        assert!(
+            ticks_in_flight >= 4,
+            "10-token prompt at 2 tokens/tick must stay in flight ≥ 4 ticks \
+             (got {ticks_in_flight})"
+        );
     }
 
     fn run_workload(cfg: NativeEngineConfig, quantized: bool) -> Vec<(u64, Vec<u16>)> {

@@ -1,6 +1,20 @@
 //! Request / response types and per-request lifecycle bookkeeping.
+//!
+//! Since the unified chunked-prefill scheduler (ISSUE 5), a live
+//! request moves through an explicit [`Phase`]: admitted requests
+//! start `Prefilling { next }` (the scheduler advances their prompt in
+//! chunks across ticks) and switch to `Decoding` once the first token
+//! is sampled. Each request also owns its **own** sampler RNG stream
+//! ([`LiveRequest::rng`], seeded from the engine sampler seed, the
+//! request id and `SamplingParams::seed`): temperature draws depend
+//! only on how many tokens *this* request has sampled, never on how
+//! the scheduler interleaved it with other requests — the property
+//! that keeps chunked, warm (cache-hit) and cold paths token-identical
+//! under sampling, not just greedy decode.
 
 use std::time::Instant;
+
+use crate::util::rng::Pcg32;
 
 pub type RequestId = u64;
 
@@ -51,29 +65,89 @@ pub struct Response {
     pub tpot_ms: f64,
     /// time to last token (prefill + decode)
     pub ttlt_ms: f64,
+    /// per-token inter-token gaps (decode phase, ms) — the raw samples
+    /// behind the ITL percentiles; [`Self::itl_max_ms`] is the burst
+    /// head-of-line-blocking quantity (a long prefill stalling decode
+    /// shows up here, not in the mean)
+    pub itl_ms: Vec<f64>,
+}
+
+impl Response {
+    /// Worst inter-token gap this request observed (NaN when the
+    /// request produced fewer than two tokens).
+    pub fn itl_max_ms(&self) -> f64 {
+        self.itl_ms.iter().copied().fold(f64::NAN, f64::max)
+    }
+}
+
+/// Where a live request sits in the unified scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// The prompt is still being consumed: `next` is the index of the
+    /// first prompt token not yet prefilled (cache-restored prefixes
+    /// start with `next > 0`). The scheduler advances it by one chunk
+    /// per tick until `next == prompt.len()`.
+    Prefilling { next: usize },
+    /// First token sampled; the request joins the decode rounds.
+    Decoding,
 }
 
 /// Engine-internal per-request state.
 pub struct LiveRequest {
     pub req: Request,
+    /// the prompt as the engine actually runs it (empty prompts are
+    /// normalized to a lone BOS); chunked prefill indexes into this
+    pub prompt: Vec<u16>,
+    pub phase: Phase,
+    /// engine-assigned admission order (monotonic). The live vec gets
+    /// reordered by `swap_remove` at harvest, so FIFO policies (the
+    /// chunk queue's budget order) must sort by this, not by position.
+    pub admitted_seq: u64,
     pub generated: Vec<u16>,
     pub state_slot: usize,
+    /// this request's private sampler stream — scheduling order cannot
+    /// perturb it (see module docs)
+    pub rng: Pcg32,
     pub submitted: Instant,
     pub prefill_done: Option<Instant>,
     pub last_token: Option<Instant>,
     pub decode_ms: Vec<f64>,
 }
 
+/// Derive a per-request sampler stream seed. Splitmix-style mixing so
+/// nearby request ids land far apart, while staying a pure function of
+/// (engine seed, request id, per-request seed) — reruns of the same
+/// workload reproduce the same streams.
+fn stream_seed(sampler_seed: u64, id: RequestId, param_seed: u64) -> u64 {
+    let mut z = sampler_seed
+        .wrapping_add(id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(param_seed.rotate_left(31));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 impl LiveRequest {
-    pub fn new(req: Request, state_slot: usize) -> Self {
+    /// `sampler_seed` is the engine-level seed
+    /// (`NativeEngineConfig::sampler_seed` / `EngineConfig::sampler_seed`);
+    /// the request's private RNG stream is derived from it together
+    /// with the request id and `SamplingParams::seed`.
+    pub fn new(req: Request, state_slot: usize, sampler_seed: u64) -> Self {
+        let rng = Pcg32::new(stream_seed(sampler_seed, req.id, req.params.seed));
+        let prompt =
+            if req.prompt.is_empty() { vec![crate::data::BOS] } else { req.prompt.clone() };
         LiveRequest {
-            req,
+            prompt,
+            phase: Phase::Prefilling { next: 0 },
+            admitted_seq: 0,
             generated: Vec::new(),
             state_slot,
+            rng,
             submitted: Instant::now(),
             prefill_done: None,
             last_token: None,
             decode_ms: Vec::new(),
+            req,
         }
     }
 
@@ -81,12 +155,21 @@ impl LiveRequest {
         *self
             .generated
             .last()
-            .unwrap_or_else(|| self.req.prompt.last().expect("empty prompt"))
+            .unwrap_or_else(|| self.prompt.last().expect("empty prompt"))
+    }
+
+    /// Prompt tokens not yet consumed by prefill.
+    pub fn prefill_remaining(&self) -> usize {
+        match self.phase {
+            Phase::Prefilling { next } => self.prompt.len() - next,
+            Phase::Decoding => 0,
+        }
     }
 
     pub fn done(&self) -> bool {
-        self.generated.len() >= self.req.max_new_tokens
-            || (self.req.stop_at_eos && self.generated.last() == Some(&crate::data::EOS))
+        self.phase == Phase::Decoding
+            && (self.generated.len() >= self.req.max_new_tokens
+                || (self.req.stop_at_eos && self.generated.last() == Some(&crate::data::EOS)))
     }
 
     pub fn finish_reason(&self) -> FinishReason {
@@ -116,6 +199,7 @@ impl LiveRequest {
             ttft_ms: ttft,
             tpot_ms: tpot,
             ttlt_ms: (now - self.submitted).as_secs_f64() * 1e3,
+            itl_ms: self.decode_ms,
         }
     }
 }
@@ -136,7 +220,12 @@ mod tests {
 
     #[test]
     fn lifecycle_done_by_length() {
-        let mut lr = LiveRequest::new(req(2), 0);
+        let mut lr = LiveRequest::new(req(2), 0, 0);
+        assert_eq!(lr.phase, Phase::Prefilling { next: 0 });
+        assert_eq!(lr.prefill_remaining(), 3);
+        // an in-flight prefill is never "done", whatever the counters say
+        assert!(!lr.done());
+        lr.phase = Phase::Decoding;
         assert!(!lr.done());
         assert_eq!(lr.next_input_token(), 9);
         lr.generated.push(7);
@@ -145,13 +234,54 @@ mod tests {
         lr.generated.push(8);
         assert!(lr.done());
         assert_eq!(lr.finish_reason(), FinishReason::Length);
+        assert_eq!(lr.prefill_remaining(), 0);
     }
 
     #[test]
     fn lifecycle_done_by_eos() {
-        let mut lr = LiveRequest::new(req(10), 0);
+        let mut lr = LiveRequest::new(req(10), 0, 0);
+        lr.phase = Phase::Decoding;
         lr.generated.push(crate::data::EOS);
         assert!(lr.done());
         assert_eq!(lr.finish_reason(), FinishReason::Eos);
+    }
+
+    #[test]
+    fn empty_prompt_normalized_to_bos() {
+        let r = Request { prompt: vec![], ..req(1) };
+        let lr = LiveRequest::new(r, 0, 0);
+        assert_eq!(lr.prompt, vec![crate::data::BOS]);
+        assert_eq!(lr.next_input_token(), crate::data::BOS);
+    }
+
+    #[test]
+    fn rng_streams_are_keyed_by_seed_and_id() {
+        // same (engine seed, id, params.seed) → same stream; changing
+        // any key moves it — the per-request determinism contract
+        let draw = |sampler_seed: u64, id: u64, pseed: u64| {
+            let params = SamplingParams { seed: pseed, ..Default::default() };
+            let r = Request { id, params, ..req(1) };
+            let mut lr = LiveRequest::new(r, 0, sampler_seed);
+            (0..4).map(|_| lr.rng.next_u32()).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(1, 2, 3), draw(1, 2, 3));
+        assert_ne!(draw(1, 2, 3), draw(9, 2, 3), "engine seed must move the stream");
+        assert_ne!(draw(1, 2, 3), draw(1, 7, 3), "request id must move the stream");
+        assert_ne!(draw(1, 2, 3), draw(1, 2, 8), "params seed must move the stream");
+    }
+
+    #[test]
+    fn response_itl_max() {
+        let mut lr = LiveRequest::new(req(3), 0, 0);
+        lr.phase = Phase::Decoding;
+        lr.generated.extend([3, 4, 5]);
+        lr.decode_ms.extend([1.0, 5.0, 2.0]);
+        let resp = lr.into_response();
+        assert_eq!(resp.itl_ms, vec![1.0, 5.0, 2.0]);
+        assert_eq!(resp.itl_max_ms(), 5.0);
+        let mut lr2 = LiveRequest::new(req(1), 0, 0);
+        lr2.phase = Phase::Decoding;
+        lr2.generated.push(3);
+        assert!(lr2.into_response().itl_max_ms().is_nan());
     }
 }

@@ -1,7 +1,38 @@
 //! Token sampling: greedy / temperature / top-k over a logits row.
+//!
+//! Two consumption styles share [`sample_row`]:
+//! * [`Sampler`] — one engine-owned RNG stream (the Transformer
+//!   baseline and the XLA engine, whose scheduling never reorders
+//!   sampling relative to a fixed workload);
+//! * a **per-request** `Pcg32` carried in
+//!   [`crate::coordinator::request::LiveRequest::rng`] (the native
+//!   engine): draws depend only on how many tokens that request has
+//!   sampled, so chunked prefill / cache hits / scheduler interleaving
+//!   can never change a sampled token.
 
 use crate::coordinator::request::SamplingParams;
 use crate::util::rng::Pcg32;
+
+/// Sample a token from one logits row (`vocab` live entries) using the
+/// caller's RNG stream.
+pub fn sample_row(rng: &mut Pcg32, logits: &[f32], vocab: usize, p: &SamplingParams) -> u16 {
+    let row = &logits[..vocab.min(logits.len())];
+    if p.temperature <= 0.0 {
+        return argmax(row) as u16;
+    }
+    // temperature softmax over (optionally top-k) candidates
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    if p.top_k > 0 && p.top_k < row.len() {
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.truncate(p.top_k);
+    }
+    let m = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((row[i] - m) / p.temperature).exp())
+        .collect();
+    idx[rng.weighted(&weights)] as u16
+}
 
 pub struct Sampler {
     rng: Pcg32,
@@ -14,22 +45,7 @@ impl Sampler {
 
     /// Sample a token from one logits row (`vocab` live entries).
     pub fn sample(&mut self, logits: &[f32], vocab: usize, p: &SamplingParams) -> u16 {
-        let row = &logits[..vocab.min(logits.len())];
-        if p.temperature <= 0.0 {
-            return argmax(row) as u16;
-        }
-        // temperature softmax over (optionally top-k) candidates
-        let mut idx: Vec<usize> = (0..row.len()).collect();
-        if p.top_k > 0 && p.top_k < row.len() {
-            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
-            idx.truncate(p.top_k);
-        }
-        let m = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
-        let weights: Vec<f32> = idx
-            .iter()
-            .map(|&i| ((row[i] - m) / p.temperature).exp())
-            .collect();
-        idx[self.rng.weighted(&weights)] as u16
+        sample_row(&mut self.rng, logits, vocab, p)
     }
 }
 

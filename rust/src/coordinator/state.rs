@@ -10,6 +10,7 @@
 //!   grows with its context; a capacity watermark drives backpressure.
 
 use crate::config::{TierInfo, TransformerTierInfo};
+use crate::ssm::{MambaState, MambaTier};
 use crate::tensor::Tensor;
 
 /// Constant-size per-request SSM state slab. Exactly one of `conv`
@@ -264,6 +265,36 @@ impl SsmStatePool {
         let b = conv.shape[1];
         self.scatter_raw(slots, b, &conv.to_f32(), &ssm.to_f32());
     }
+
+    /// Pack `slots` into a batched [`MambaState`] of `b` lanes
+    /// (missing lanes zero-padded; their outputs are dropped by
+    /// [`Self::scatter_state`]) — the gather side of one decode round
+    /// or one (B, T) prefill-chunk batch of the unified scheduler.
+    /// Dispatches on the pool's conv dtype so callers stop hand-rolling
+    /// the `gather_raw{,_q}` → `MambaState::from_raw{,_q}` dance.
+    pub fn gather_state(&self, tier: &MambaTier, slots: &[usize], b: usize) -> MambaState {
+        if self.quantized_conv {
+            let (conv_q, ssm) = self.gather_raw_q(slots, b);
+            MambaState::from_raw_q(tier, b, conv_q, ssm)
+        } else {
+            let (conv, ssm) = self.gather_raw(slots, b);
+            MambaState::from_raw(tier, b, conv, ssm)
+        }
+    }
+
+    /// Scatter a batched [`MambaState`] back into request slots — the
+    /// inverse of [`Self::gather_state`] (consumes the state; padded
+    /// lanes beyond `slots.len()` are discarded).
+    pub fn scatter_state(&mut self, slots: &[usize], state: MambaState) {
+        let b = state.b;
+        if state.is_quantized_conv() {
+            let (conv_q, ssm) = state.into_raw_q();
+            self.scatter_raw_q(slots, b, &conv_q, &ssm);
+        } else {
+            let (conv, ssm) = state.into_raw();
+            self.scatter_raw(slots, b, &conv, &ssm);
+        }
+    }
 }
 
 /// KV-cache pool for the Transformer baseline: bytes grow linearly
@@ -409,6 +440,45 @@ mod tests {
         assert_eq!(p2.get(d0).conv_q, slab.conv_q);
         assert_eq!(p2.get(d0).ssm, slab.ssm);
         assert!(p2.get(d1).conv_q.iter().all(|v| *v == 0));
+    }
+
+    #[test]
+    fn gather_scatter_state_roundtrip_both_dtypes() {
+        let t = tier();
+        let mt = MambaTier {
+            name: t.name.clone(),
+            d_model: t.d_model,
+            n_layer: t.n_layer,
+            d_state: t.d_state,
+            d_conv: t.d_conv,
+            d_inner: t.d_inner,
+            dt_rank: t.dt_rank,
+            vocab: t.vocab,
+        };
+        // f32 pool
+        let mut p = SsmStatePool::new(&t, 4);
+        let s0 = p.alloc().unwrap();
+        let s1 = p.alloc().unwrap();
+        let mut slab = p.get(s0).clone();
+        slab.conv.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32 + 0.25);
+        slab.ssm.iter_mut().enumerate().for_each(|(i, v)| *v = -(i as f32));
+        p.write(s0, slab.clone());
+        let st = p.gather_state(&mt, &[s0, s1], 3);
+        assert_eq!(st.b, 3);
+        assert!(!st.is_quantized_conv());
+        p.scatter_state(&[s1, s0], st); // swap on the way back
+        assert_eq!(p.get(s1).conv, slab.conv);
+        assert_eq!(p.get(s1).ssm, slab.ssm);
+        // quantized-conv pool
+        let mut q = SsmStatePool::new(&t, 4).with_quantized_conv();
+        let q0 = q.alloc().unwrap();
+        let mut qs = q.get(q0).clone();
+        qs.conv_q.iter_mut().enumerate().for_each(|(i, v)| *v = (i % 90) as i8 - 45);
+        q.write(q0, qs.clone());
+        let st = q.gather_state(&mt, &[q0], 2);
+        assert!(st.is_quantized_conv());
+        q.scatter_state(&[q0], st);
+        assert_eq!(q.get(q0).conv_q, qs.conv_q);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //!   quamba serve       [--tier m2p8] [--method quamba] [--requests 16]
 //!                      [--rate 4.0] [--max-new 32]
 //!                      [--backend auto|xla|native] [--weights x.qtz]
+//!                      [--calib-file tokens.txt]
 //!                      [--cache-mb 8] [--snapshot-stride 64]
+//!                      [--prefill-chunk 64] [--max-tokens-per-tick 0]
 //!                      [--threads N] [--kernels auto|scalar|avx2|neon]
 //!   quamba eval-ppl    [--tier m130] [--methods fp16,quamba] [--windows 16]
 //!   quamba eval-tasks  [--tier m130] [--methods fp16,quamba] [--examples 40]
@@ -69,8 +71,12 @@ fn print_help() {
          \x20 compare      side-by-side FP vs quantized generation (paper Fig. 9)\n\
          \x20 serve        threaded serving demo with Poisson arrivals\n\
          \x20              (--backend native [--weights x.qtz] serves\n\
-         \x20              artifact-free with the prefix cache:\n\
-         \x20              --cache-mb / --snapshot-stride)\n\
+         \x20              artifact-free with the prefix cache and the\n\
+         \x20              unified chunked-prefill scheduler:\n\
+         \x20              --cache-mb / --snapshot-stride /\n\
+         \x20              --prefill-chunk / --max-tokens-per-tick;\n\
+         \x20              --calib-file feeds a real W8A8 calibration\n\
+         \x20              token stream instead of synthetic tokens)\n\
          \x20 eval-ppl     perplexity on wiki-synth / pile-synth (Table 2)\n\
          \x20 eval-tasks   six zero-shot tasks (Table 3)\n\
          \x20 profile      TTFT/TPOT latency profile (Table 1)\n\
@@ -240,12 +246,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--calib-file` token stream: decimal u16 token ids
+/// separated by any whitespace (spaces/newlines). Ids must be < vocab
+/// — calibrating on out-of-range ids would index past the embedding
+/// table. This closes the ROADMAP "real calibration stream" leftover:
+/// `CalibRecord::calibrate` consumes the user's corpus instead of the
+/// deterministic synthetic tokens.
+fn load_calib_tokens(path: &Path, vocab: usize) -> Result<Vec<u16>> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut toks = Vec::new();
+    for (i, w) in text.split_whitespace().enumerate() {
+        let t: u16 = w
+            .parse()
+            .map_err(|_| anyhow!("{}: token #{i} ({w:?}) is not a u16 token id", path.display()))?;
+        if (t as usize) >= vocab {
+            return Err(anyhow!(
+                "{}: token #{i} = {t} out of range for vocab {vocab}",
+                path.display()
+            ));
+        }
+        toks.push(t);
+    }
+    if toks.is_empty() {
+        return Err(anyhow!("{}: empty calibration stream", path.display()));
+    }
+    Ok(toks)
+}
+
 /// `quamba serve --backend native [--weights x.qtz]`: real checkpoints
-/// (or a synthetic tier) served artifact-free, with the prefix cache —
-/// the ROADMAP "weight import for the native backend" item. The tier
-/// is inferred from the bundle's tensor shapes; `--method quamba`
-/// (default) calibrates a W8A8 model on a deterministic synthetic
-/// stream, `--method fp32` serves the fp32 reference directly.
+/// (or a synthetic tier) served artifact-free, with the prefix cache
+/// and the unified chunked-prefill scheduler — the ROADMAP "weight
+/// import for the native backend" item. The tier is inferred from the
+/// bundle's tensor shapes; `--method quamba` (default) calibrates a
+/// W8A8 model on `--calib-file` (falling back to a deterministic
+/// synthetic stream), `--method fp32` serves the fp32 reference
+/// directly.
 fn cmd_serve_native(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 16);
     let rate = args.get_f64("rate", 4.0);
@@ -287,10 +323,22 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     let boxed: Box<dyn StepModel + Send + Sync> = if method == "fp32" {
         Box::new(model)
     } else {
-        // calibration stream: deterministic synthetic tokens (swap in a
-        // real stream by concatenating your corpus here)
-        let calib: Vec<u16> =
-            (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+        // calibration stream: a real token stream via --calib-file, or
+        // deterministic synthetic tokens as the artifact-free fallback
+        let calib: Vec<u16> = match args.get("calib-file") {
+            Some(path) => {
+                let toks = load_calib_tokens(Path::new(path), tier.vocab)?;
+                println!("calibration stream: {} tokens from {path}", toks.len());
+                toks
+            }
+            None => {
+                println!(
+                    "calibration stream: 512 synthetic tokens \
+                     (pass --calib-file FILE for a real corpus)"
+                );
+                (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect()
+            }
+        };
         Box::new(QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default()))
     };
     let cfg = NativeEngineConfig {
@@ -302,13 +350,22 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
             .transpose()?,
         cache_bytes: args.get_mb("cache-mb", 8.0),
         snapshot_stride: args.get_usize("snapshot-stride", 64),
+        // serving entry points default to chunked prefill: long
+        // prompts advance 64 tokens/tick so live lanes keep bounded
+        // inter-token latency (tokens are identical at any chunk size;
+        // --prefill-chunk 0 restores whole-prompt-per-tick behavior)
+        prefill_chunk: args.get_usize("prefill-chunk", 64),
+        max_tokens_per_tick: args.get_usize("max-tokens-per-tick", 0),
         ..Default::default()
     };
     println!(
-        "prefix cache: {} ({} MB budget, stride {})",
+        "prefix cache: {} ({} MB budget, stride {}) | scheduler: prefill_chunk={} \
+         max_tokens_per_tick={}",
         if cfg.cache_bytes > 0 { "on" } else { "off" },
         cfg.cache_bytes as f64 / 1e6,
-        cfg.snapshot_stride
+        cfg.snapshot_stride,
+        cfg.prefill_chunk,
+        cfg.max_tokens_per_tick,
     );
     let stream: Vec<u16> =
         (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();

@@ -33,13 +33,19 @@
 //! `d_inner` (12·2^k / 20·2^k), since each layer caches its
 //! [`FwhtPlan`] (base matrix built once at calibration).
 //! `prefill_into` runs the whole prompt
-//! as (T×K) batched int8 GEMMs; static scales make it bit-identical
-//! to the stepwise path ([`QuantizedMambaModel::prefill_stepwise`],
-//! kept as the test oracle).
+//! as (T×K) batched int8 GEMMs; `prefill_batch_into` (the unified
+//! chunked-prefill scheduler's workhorse) generalizes that to
+//! (B·T_max×K) GEMMs over several in-flight prompts at once, each
+//! lane's conv window / scan state advancing independently. Static
+//! scales make every variant bit-identical to the stepwise path
+//! ([`QuantizedMambaModel::prefill_stepwise`], kept as the test
+//! oracle) — chunking and batching move latency, never bits.
 
 use super::mamba::{rmsnorm, silu, softplus, take_cols_into, MambaModel, MambaTier};
 use super::scan::selective_scan_q_into_with;
-use super::step::{par_lane_chunks, rf32, CalibRecord, MambaState, StepModel, StepScratch};
+use super::step::{
+    par_lane_chunks, rf32, zero_pad_rows, CalibRecord, MambaState, StepModel, StepScratch,
+};
 use crate::quant;
 use crate::quant::hadamard::FwhtPlan;
 use crate::quant::qlinear::QLinear;
@@ -317,27 +323,35 @@ impl QuantizedMambaModel {
         logits
     }
 
-    /// One prefill segment over `tokens`, continuing from whatever
-    /// `state` already holds (no reset). Shared by
-    /// `StepModel::prefill_into` (fresh state) and
-    /// `StepModel::prefill_resume_into` (the prefix-cache warm path).
-    /// Static scales + exact integer accumulation + per-row f32
-    /// epilogues make segment composition bit-exact — the same
+    /// The shared (B, T) prefill body: advance `state.b` independent
+    /// in-flight prompts by one chunk each, lane-major ragged rows
+    /// padded to `t_max` (pad rows are zeroed before each GEMM so
+    /// every buffer stays deterministic; their outputs are discarded).
+    /// With B = 1 this **is** the old single-sequence prefill segment
+    /// — `prefill_into` / `prefill_resume_into` route through here, so
+    /// the batched and per-request paths cannot drift. Static scales +
+    /// exact integer accumulation + per-row f32 epilogues make both
+    /// chunk composition *and* lane batching bit-exact — the same
     /// property that makes [`Self::prefill_stepwise`] an exact oracle.
-    fn prefill_segment(
+    fn prefill_batch_impl(
         &self,
-        tokens: &[u16],
+        chunks: &[&[u16]],
         state: &mut MambaState,
         scratch: &mut StepScratch,
         logits: &mut Vec<f32>,
     ) {
         let t = &self.tier;
         let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
-        assert_eq!(state.b, 1, "prefill is single-sequence");
-        assert!(!tokens.is_empty(), "prefill needs at least one token");
-        debug_assert!(state.is_quantized_conv());
-        let tl = tokens.len();
-        scratch.prep(tl, t);
+        let b = state.b;
+        assert_eq!(chunks.len(), b, "one chunk per state lane");
+        assert!(chunks.iter().all(|c| !c.is_empty()), "prefill chunks must be non-empty");
+        assert!(
+            state.is_quantized_conv(),
+            "W8A8 prefill needs an i8 conv-window state"
+        );
+        let t_max = chunks.iter().map(|c| c.len()).max().unwrap();
+        let rows = b * t_max;
+        scratch.prep(rows, t);
         let kers = scratch.kernels;
         let StepScratch {
             resid,
@@ -365,80 +379,100 @@ impl QuantizedMambaModel {
             acc,
             ..
         } = scratch;
-        for (i, &tok) in tokens.iter().enumerate() {
-            resid[i * d..(i + 1) * d]
-                .copy_from_slice(&self.embedding[tok as usize * d..(tok as usize + 1) * d]);
+        for (bi, chunk) in chunks.iter().enumerate() {
+            for ti in 0..t_max {
+                let tok = if ti < chunk.len() {
+                    chunk[ti] as usize
+                } else {
+                    crate::data::BOS as usize
+                };
+                resid[(bi * t_max + ti) * d..(bi * t_max + ti + 1) * d]
+                    .copy_from_slice(&self.embedding[tok * d..(tok + 1) * d]);
+            }
         }
         for (li, ql) in self.layers.iter().enumerate() {
             rmsnorm(resid, &ql.norm, d, 1e-5, x_in);
-            ql.in_proj.forward_into(kers, x_in, ql.s_xin, tl, q_xin, acc, xz);
-            take_cols_into(xz, tl, 2 * di, 0, di, x);
-            take_cols_into(xz, tl, 2 * di, di, 2 * di, z);
+            ql.in_proj.forward_into(kers, x_in, ql.s_xin, rows, q_xin, acc, xz);
+            take_cols_into(xz, rows, 2 * di, 0, di, x);
+            take_cols_into(xz, rows, 2 * di, di, 2 * di, z);
             // requant the conv input to the static conv-in scale; the
             // window codes carry the same scale
             quant::quantize_sym_into(x, ql.s_cin, 8, q_conv);
             let gx = &self.g_x[li * di..(li + 1) * di];
-            fused_conv_silu_i8_with(
-                kers,
-                q_conv,
-                state.conv_lane_q(li, 0),
-                &ql.conv_w_q,
-                &ql.conv_b,
-                gx,
-                ql.s_conv,
-                tl,
-                di,
-                w,
-                act,
-            );
+            // conv + scan are the sequential-per-lane sections: each
+            // lane sweeps its own real rows with its own carried window
+            for (bi, chunk) in chunks.iter().enumerate() {
+                let tl = chunk.len();
+                let off = bi * t_max * di;
+                fused_conv_silu_i8_with(
+                    kers,
+                    &q_conv[off..off + tl * di],
+                    state.conv_lane_q(li, bi),
+                    &ql.conv_w_q,
+                    &ql.conv_b,
+                    gx,
+                    ql.s_conv,
+                    tl,
+                    di,
+                    w,
+                    &mut act[off..off + tl * di],
+                );
+            }
+            zero_pad_rows(act, chunks, t_max, di);
             // percentile-clipped static x-scale; the scan reuses the codes
             quant::quantize_sym_into(act, ql.s_x, 8, q_x);
-            ql.x_proj.forward_q_into(kers, q_x, ql.s_x, tl, acc, bcdt);
-            take_cols_into(bcdt, tl, r + 2 * n, 0, r, dt_low);
-            take_cols_into(bcdt, tl, r + 2 * n, r, r + n, bmat);
-            take_cols_into(bcdt, tl, r + 2 * n, r + n, r + 2 * n, cmat);
-            ql.dt_proj.forward_into(kers, dt_low, ql.s_dt, tl, q_dt, acc, dt);
+            ql.x_proj.forward_q_into(kers, q_x, ql.s_x, rows, acc, bcdt);
+            take_cols_into(bcdt, rows, r + 2 * n, 0, r, dt_low);
+            take_cols_into(bcdt, rows, r + 2 * n, r, r + n, bmat);
+            take_cols_into(bcdt, rows, r + 2 * n, r + n, r + 2 * n, cmat);
+            ql.dt_proj.forward_into(kers, dt_low, ql.s_dt, rows, q_dt, acc, dt);
             for v in dt.iter_mut() {
                 *v = softplus(*v);
             }
             quant::quantize_sym_into(bmat, ql.s_b, 8, q_b);
             quant::quantize_sym_into(cmat, ql.s_c, 8, q_c);
             let gy = &self.g_y[li * di..(li + 1) * di];
-            selective_scan_q_into_with(
-                kers,
-                di,
-                n,
-                q_x,
-                ql.s_x,
-                dt,
-                &ql.a_q,
-                ql.s_a,
-                q_b,
-                ql.s_b,
-                q_c,
-                ql.s_c,
-                &ql.d_q,
-                ql.s_d,
-                state.ssm_lane(li, 0),
-                gated,
-            );
-            for ti in 0..tl {
-                for ch in 0..di {
-                    gated[ti * di + ch] =
-                        gated[ti * di + ch] * silu(z[ti * di + ch]) * gy[ch];
+            for (bi, chunk) in chunks.iter().enumerate() {
+                let tl = chunk.len();
+                let off = bi * t_max * di;
+                let boff = bi * t_max * n;
+                selective_scan_q_into_with(
+                    kers,
+                    di,
+                    n,
+                    &q_x[off..off + tl * di],
+                    ql.s_x,
+                    &dt[off..off + tl * di],
+                    &ql.a_q,
+                    ql.s_a,
+                    &q_b[boff..boff + tl * n],
+                    ql.s_b,
+                    &q_c[boff..boff + tl * n],
+                    ql.s_c,
+                    &ql.d_q,
+                    ql.s_d,
+                    state.ssm_lane(li, bi),
+                    &mut gated[off..off + tl * di],
+                );
+                for (ti, row) in gated[off..off + tl * di].chunks_exact_mut(di).enumerate() {
+                    let zrow = &z[off + ti * di..off + (ti + 1) * di];
+                    for ch in 0..di {
+                        row[ch] = row[ch] * silu(zrow[ch]) * gy[ch];
+                    }
                 }
             }
+            zero_pad_rows(gated, chunks, t_max, di);
             // out_proj in the rotated space: rotate, quantize, int8
             // matmul against the folded H·W_out (scale carries 1/di)
             ql.fwht.apply_rows(gated);
-            ql.out_proj.forward_into(kers, gated, ql.s_gh, tl, q_gh, acc, out);
+            ql.out_proj.forward_into(kers, gated, ql.s_gh, rows, q_gh, acc, out);
             for i in 0..resid.len() {
                 resid[i] += out[i];
             }
         }
         rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
-        rf32(logits, tl * self.tier.vocab);
-        self.head.forward_into(kers, fin, self.s_head_in, tl, q_head, acc, logits);
+        rf32(logits, rows * self.tier.vocab);
+        self.head.forward_into(kers, fin, self.s_head_in, rows, q_head, acc, logits);
     }
 }
 
@@ -464,9 +498,10 @@ impl StepModel for QuantizedMambaModel {
         scratch: &mut StepScratch,
         logits: &mut Vec<f32>,
     ) {
+        assert_eq!(state.b, 1, "prefill is single-sequence; prefill_batch_into handles B > 1");
         state.ensure_quantized_conv();
         state.reset();
-        self.prefill_segment(tokens, state, scratch, logits);
+        self.prefill_batch_impl(&[tokens], state, scratch, logits);
     }
 
     /// Warm-path prefill continuation: `state` already holds a prefix's
@@ -481,11 +516,27 @@ impl StepModel for QuantizedMambaModel {
         scratch: &mut StepScratch,
         logits: &mut Vec<f32>,
     ) {
+        assert_eq!(state.b, 1, "resume is single-sequence; prefill_batch_into handles B > 1");
         assert!(
             state.is_quantized_conv(),
             "resume needs a quantized-conv state (produced by a prior W8A8 prefill)"
         );
-        self.prefill_segment(tokens, state, scratch, logits);
+        self.prefill_batch_impl(&[tokens], state, scratch, logits);
+    }
+
+    /// The unified scheduler's (B, T) batched chunk prefill: every
+    /// projection runs as one (B·T_max × K) blocked int8 GEMM across
+    /// all lanes, the conv/scan sweep each lane's carried state over
+    /// its real rows. Bit-identical per lane to the per-request
+    /// `prefill_into` oracle (see [`Self::prefill_batch_impl`]).
+    fn prefill_batch_into(
+        &self,
+        chunks: &[&[u16]],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        self.prefill_batch_impl(chunks, state, scratch, logits);
     }
 
     /// The W8A8 batched decode step — the native serving hot path.

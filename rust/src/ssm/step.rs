@@ -206,6 +206,21 @@ impl MambaState {
     }
 }
 
+/// Zero the pad rows of a lane-major (B × t_max × width) batched
+/// prefill buffer: lane bi's rows at t ≥ |chunks[bi]| are padding.
+/// Shared by both `prefill_batch_into` impls — zeroed pads keep every
+/// downstream row-local op deterministic (stale scratch values could
+/// otherwise produce NaN/Inf in rows that are discarded anyway, which
+/// would make reruns non-reproducible at the buffer level).
+pub(crate) fn zero_pad_rows(buf: &mut [f32], chunks: &[&[u16]], t_max: usize, width: usize) {
+    for (bi, c) in chunks.iter().enumerate() {
+        let tl = c.len();
+        if tl < t_max {
+            buf[(bi * t_max + tl) * width..(bi + 1) * t_max * width].fill(0.0);
+        }
+    }
+}
+
 /// Resize a scratch buffer to exactly `n` elements WITHOUT clearing:
 /// every consumer fully overwrites its buffer before reading (matmul /
 /// rmsnorm / take_cols_into / conv / scan all write each element), so
@@ -407,6 +422,33 @@ pub trait StepModel {
         logits: &mut Vec<f32>,
     );
 
+    /// Advance `state.b` **independent in-flight prefills** by one
+    /// chunk each — the unified scheduler's (B, T) batched prefill.
+    /// `chunks[bi]` is lane bi's next (non-empty) slice of prompt
+    /// tokens; the lane's carried conv window / scan state advances in
+    /// place, exactly as a per-lane [`Self::prefill_resume_into`]
+    /// would. Ragged chunks are padded to `t_max = max_i |chunks[i]|`
+    /// on a lane-major grid: `logits` comes back as
+    /// (B × t_max × V) with lane bi's row t at `(bi·t_max + t)·V`;
+    /// rows at t ≥ |chunks[bi]| are deterministic filler (a BOS pad
+    /// row pushed through the row-local ops) and must be ignored.
+    ///
+    /// **Bit-parity contract** (property-tested in
+    /// `rust/tests/chunked_prefill.rs`): every op in the prefill body
+    /// is either per-row (rmsnorm, projections, gates, head) or
+    /// sequential-per-lane with carried state (conv window, scan h),
+    /// so batching lanes together — whatever the padding — replays
+    /// each lane's per-request `prefill_into`/`prefill_resume_into`
+    /// instruction sequence exactly: valid logits rows and final
+    /// states are bit-identical to the B=1 oracle.
+    fn prefill_batch_into(
+        &self,
+        chunks: &[&[u16]],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    );
+
     /// Allocating convenience wrapper over [`Self::prefill_into`].
     fn prefill(&self, tokens: &[u16], state: &mut MambaState) -> Vec<f32> {
         let mut scratch = StepScratch::new(1);
@@ -601,6 +643,106 @@ impl StepModel for MambaModel {
         logits: &mut Vec<f32>,
     ) {
         *logits = self.prefill_impl(tokens, state, None, true);
+    }
+
+    /// (B, T) batched multi-prompt prefill, fp32. Row-parallel ops run
+    /// over the whole lane-major grid out of the scratch (zero-alloc
+    /// after warmup, like `step_into`); the conv window and scan state
+    /// advance per lane over that lane's real rows only — so each
+    /// lane's valid logits rows and final state are **bit-identical**
+    /// to running `prefill_resume_into` on it alone (see trait docs).
+    fn prefill_batch_into(
+        &self,
+        chunks: &[&[u16]],
+        state: &mut MambaState,
+        scratch: &mut StepScratch,
+        logits: &mut Vec<f32>,
+    ) {
+        let t = &self.tier;
+        let (d, di, n, r, w) = (t.d_model, t.d_inner, t.d_state, t.dt_rank, t.d_conv);
+        let b = state.b;
+        assert_eq!(chunks.len(), b, "one chunk per state lane");
+        assert!(chunks.iter().all(|c| !c.is_empty()), "prefill chunks must be non-empty");
+        assert!(!state.is_quantized_conv(), "fp32 prefill needs an f32 conv state");
+        let t_max = chunks.iter().map(|c| c.len()).max().unwrap();
+        let rows = b * t_max;
+        scratch.prep(rows, t);
+        let StepScratch {
+            resid, x_in, xz, x, z, act, bcdt, dt_low, bmat, cmat, dt, gated, out, fin, ..
+        } = scratch;
+        for (bi, chunk) in chunks.iter().enumerate() {
+            for ti in 0..t_max {
+                let tok = if ti < chunk.len() {
+                    chunk[ti] as usize
+                } else {
+                    crate::data::BOS as usize
+                };
+                resid[(bi * t_max + ti) * d..(bi * t_max + ti + 1) * d]
+                    .copy_from_slice(&self.embedding[tok * d..(tok + 1) * d]);
+            }
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(resid, &layer.norm, d, 1e-5, x_in);
+            matmul(x_in, &layer.in_proj, rows, d, 2 * di, xz);
+            take_cols_into(xz, rows, 2 * di, 0, di, x);
+            take_cols_into(xz, rows, 2 * di, di, 2 * di, z);
+            let gx = &self.g_x[li * di..(li + 1) * di];
+            for (bi, chunk) in chunks.iter().enumerate() {
+                let tl = chunk.len();
+                let off = bi * t_max * di;
+                causal_conv_silu(
+                    &x[off..off + tl * di],
+                    Some(state.conv_lane(li, bi)),
+                    &layer.conv_w,
+                    &layer.conv_b,
+                    gx,
+                    tl,
+                    di,
+                    w,
+                    &mut act[off..off + tl * di],
+                );
+            }
+            zero_pad_rows(act, chunks, t_max, di);
+            matmul(act, &layer.x_proj, rows, di, r + 2 * n, bcdt);
+            take_cols_into(bcdt, rows, r + 2 * n, 0, r, dt_low);
+            take_cols_into(bcdt, rows, r + 2 * n, r, r + n, bmat);
+            take_cols_into(bcdt, rows, r + 2 * n, r + n, r + 2 * n, cmat);
+            matmul(dt_low, &layer.dt_proj, rows, r, di, dt);
+            for row in 0..rows {
+                for ch in 0..di {
+                    dt[row * di + ch] = softplus(dt[row * di + ch] + layer.dt_bias[ch]);
+                }
+            }
+            let p = ScanParams { a: &layer.a, d: &layer.d, d_inner: di, n_state: n };
+            let gy = &self.g_y[li * di..(li + 1) * di];
+            for (bi, chunk) in chunks.iter().enumerate() {
+                let tl = chunk.len();
+                let off = bi * t_max * di;
+                let boff = bi * t_max * n;
+                selective_scan_into(
+                    &p,
+                    &act[off..off + tl * di],
+                    &dt[off..off + tl * di],
+                    &bmat[boff..boff + tl * n],
+                    &cmat[boff..boff + tl * n],
+                    state.ssm_lane(li, bi),
+                    &mut gated[off..off + tl * di],
+                );
+                for (ti, row) in gated[off..off + tl * di].chunks_exact_mut(di).enumerate() {
+                    let zrow = &z[off + ti * di..off + (ti + 1) * di];
+                    for ch in 0..di {
+                        row[ch] = row[ch] * silu(zrow[ch]) * gy[ch];
+                    }
+                }
+            }
+            zero_pad_rows(gated, chunks, t_max, di);
+            matmul(gated, &layer.out_proj, rows, di, d, out);
+            for i in 0..resid.len() {
+                resid[i] += out[i];
+            }
+        }
+        rmsnorm(resid, &self.norm_f, d, 1e-5, fin);
+        self.tied_logits_into(fin, rows, logits);
     }
 
     fn step_into(

@@ -50,6 +50,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -68,6 +69,7 @@ impl Summary {
             min: v[0],
             p50: percentile_sorted(&v, 50.0),
             p90: percentile_sorted(&v, 90.0),
+            p95: percentile_sorted(&v, 95.0),
             p99: percentile_sorted(&v, 99.0),
             max: *v.last().unwrap(),
         }
@@ -164,6 +166,8 @@ mod tests {
         assert_eq!(s.n, 100);
         assert!((s.mean - 50.5).abs() < 1e-9);
         assert!((s.p50 - 50.5).abs() < 1.0);
+        assert!((s.p95 - 95.0).abs() < 1.0, "p95={}", s.p95);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! ISSUE 5 acceptance: the unified chunked-prefill scheduler may move
+//! *latency*, never *tokens*.
+//!
+//! Two layers of evidence:
+//!
+//! * **model level** — `StepModel::prefill_batch_into` over a ragged
+//!   (B, T) batch is bit-identical, lane by lane, to running each
+//!   lane's chunk through the per-request `prefill_resume_into`
+//!   oracle (valid logits rows AND final state), for the fp32
+//!   reference and the W8A8 model under every available kernel
+//!   backend — including lanes mid-prompt (carried conv window / scan
+//!   state) and maximally ragged pads;
+//! * **engine level** — the served token streams are identical across
+//!   `prefill_chunk ∈ {1, 3, 16, ∞}`, `threads ∈ {1, 3}`, cache
+//!   on/off, forced scalar + every detected SIMD backend, and tight
+//!   `max_tokens_per_tick` budgets, for greedy AND temperature
+//!   sampling (per-request RNG streams make scheduling order
+//!   unobservable).
+
+use quamba::coordinator::{NativeEngine, NativeEngineConfig, Request, SamplingParams};
+use quamba::quant::{KernelBackend, Kernels};
+use quamba::ssm::{
+    MambaModel, MambaState, MambaTier, QuantConfig, QuantizedMambaModel, StepModel, StepScratch,
+};
+use quamba::util::rng::Pcg32;
+
+fn tier() -> MambaTier {
+    MambaTier {
+        name: "chunk".into(),
+        d_model: 16,
+        n_layer: 2,
+        d_state: 4,
+        d_conv: 4,
+        d_inner: 32,
+        dt_rank: 4,
+        vocab: 32,
+    }
+}
+
+fn fp32_model(seed: u64) -> MambaModel {
+    MambaModel::synthetic(tier(), seed)
+}
+
+fn w8a8_model(seed: u64) -> QuantizedMambaModel {
+    let t = tier();
+    let model = MambaModel::synthetic(t.clone(), seed);
+    let mut r = Pcg32::new(seed ^ 0xC0DE);
+    let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+    QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default())
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Drive `lanes` independent prompts through `prefill_batch_into` in
+/// ragged rounds (each lane advances by its own per-round chunk
+/// length) and bit-compare every lane against the per-request
+/// `prefill_into`/`prefill_resume_into` oracle.
+fn assert_batched_prefill_matches_oracle(model: &dyn StepModel, kers: Kernels, seed: u64) {
+    let t = model.tier().clone();
+    let quantized = model.quantized_conv_state();
+    let v = t.vocab;
+    let mut r = Pcg32::new(seed);
+    let b = 2 + r.below(3) as usize; // 2..=4 lanes
+    let prompts: Vec<Vec<u16>> = (0..b)
+        .map(|_| {
+            let len = 6 + r.below(28) as usize;
+            (0..len).map(|_| r.below(v as u32) as u16).collect()
+        })
+        .collect();
+
+    // oracle: per-request one-shot prefill
+    let mut scratch = StepScratch::with_kernels(1, kers);
+    let mut oracle_states = Vec::new();
+    let mut oracle_logits: Vec<Vec<f32>> = Vec::new();
+    for p in &prompts {
+        let mut st = MambaState::new_for(&t, 1, quantized);
+        let mut lg = Vec::new();
+        model.prefill_into(p, &mut st, &mut scratch, &mut lg);
+        oracle_states.push(st);
+        oracle_logits.push(lg);
+    }
+
+    // batched: advance all lanes in ragged rounds until every prompt
+    // is consumed; collect each lane's valid logits rows
+    let mut state = MambaState::new_for(&t, b, quantized);
+    let mut next = vec![0usize; b];
+    let mut got_logits: Vec<Vec<f32>> = vec![Vec::new(); b];
+    let mut batch_scratch = StepScratch::with_kernels(1, kers);
+    let mut logits = Vec::new();
+    while (0..b).any(|bi| next[bi] < prompts[bi].len()) {
+        // random per-lane chunk lengths; lanes already done sit out
+        let mut lanes: Vec<usize> = Vec::new();
+        let mut chunks: Vec<&[u16]> = Vec::new();
+        for bi in 0..b {
+            let rem = prompts[bi].len() - next[bi];
+            if rem == 0 || (lanes.len() > 1 && r.f32() < 0.25) {
+                continue; // exercise partial participation too
+            }
+            let take = 1 + (r.below(7) as usize).min(rem - 1);
+            lanes.push(bi);
+            chunks.push(&prompts[bi][next[bi]..next[bi] + take]);
+        }
+        if lanes.is_empty() {
+            continue;
+        }
+        // pack the participating lanes' states into a fresh sub-state
+        // (lane-major copy, mirrors the engine's pool gather)
+        let nb = lanes.len();
+        let mut sub = MambaState::new_for(&t, nb, quantized);
+        for (si, &bi) in lanes.iter().enumerate() {
+            copy_lane(&t, &mut sub, si, &state, bi, quantized);
+        }
+        model.prefill_batch_into(&chunks, &mut sub, &mut batch_scratch, &mut logits);
+        let t_max = chunks.iter().map(|c| c.len()).max().unwrap();
+        for (si, &bi) in lanes.iter().enumerate() {
+            let tl = chunks[si].len();
+            got_logits[bi]
+                .extend_from_slice(&logits[si * t_max * v..(si * t_max + tl) * v]);
+            next[bi] += tl;
+            copy_lane(&t, &mut state, bi, &sub, si, quantized);
+        }
+    }
+
+    for bi in 0..b {
+        assert_bits_eq(
+            &oracle_logits[bi],
+            &got_logits[bi],
+            &format!("lane {bi} logits (seed {seed})"),
+        );
+        // final state equality, lane by lane
+        let mut single = MambaState::new_for(&t, 1, quantized);
+        copy_lane(&t, &mut single, 0, &state, bi, quantized);
+        assert_eq!(oracle_states[bi].conv_q, single.conv_q, "lane {bi} conv codes");
+        assert_bits_eq(&oracle_states[bi].conv, &single.conv, &format!("lane {bi} conv"));
+        assert_bits_eq(&oracle_states[bi].ssm, &single.ssm, &format!("lane {bi} ssm"));
+    }
+}
+
+/// Copy one lane's per-layer state from `src[sbi]` into `dst[dbi]`
+/// (layout helper for the pack/unpack the engine's pool does).
+fn copy_lane(
+    t: &MambaTier,
+    dst: &mut MambaState,
+    dbi: usize,
+    src: &MambaState,
+    sbi: usize,
+    quantized: bool,
+) {
+    let cpl = (t.d_conv - 1) * t.d_inner;
+    let spl = t.d_inner * t.d_state;
+    let (db, sb) = (dst.b, src.b);
+    for li in 0..t.n_layer {
+        if quantized {
+            dst.conv_q[(li * db + dbi) * cpl..(li * db + dbi + 1) * cpl]
+                .copy_from_slice(&src.conv_q[(li * sb + sbi) * cpl..(li * sb + sbi + 1) * cpl]);
+        } else {
+            dst.conv[(li * db + dbi) * cpl..(li * db + dbi + 1) * cpl]
+                .copy_from_slice(&src.conv[(li * sb + sbi) * cpl..(li * sb + sbi + 1) * cpl]);
+        }
+        dst.ssm[(li * db + dbi) * spl..(li * db + dbi + 1) * spl]
+            .copy_from_slice(&src.ssm[(li * sb + sbi) * spl..(li * sb + sbi + 1) * spl]);
+    }
+}
+
+#[test]
+fn prop_batched_prefill_bit_identical_to_per_request_oracle() {
+    let fp = fp32_model(7);
+    let qm = w8a8_model(7);
+    for seed in 0..12u64 {
+        assert_batched_prefill_matches_oracle(&fp, Kernels::scalar(), 0xBA7C4 ^ seed);
+        for backend in Kernels::available() {
+            assert_batched_prefill_matches_oracle(
+                &qm,
+                Kernels::for_backend(backend),
+                0xBA7C4 ^ seed,
+            );
+        }
+    }
+}
+
+#[test]
+fn single_lane_batch_is_exactly_the_resume_path() {
+    // B=1 prefill_batch_into must equal prefill_resume_into bit for
+    // bit (the W8A8 impl routes both through one body; the fp32 impl
+    // is a separate scratch-based path — hold it to the same bits)
+    let t = tier();
+    for quantized in [false, true] {
+        let fp = fp32_model(3);
+        let qm = w8a8_model(3);
+        let model: &dyn StepModel = if quantized { &qm } else { &fp };
+        let mut r = Pcg32::new(0x51);
+        let prompt: Vec<u16> = (0..24).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let mut scratch = StepScratch::new(1);
+        let mut st_a = MambaState::new_for(&t, 1, quantized);
+        let mut lg_a = Vec::new();
+        model.prefill_into(&prompt[..10], &mut st_a, &mut scratch, &mut lg_a);
+        model.prefill_resume_into(&prompt[10..], &mut st_a, &mut scratch, &mut lg_a);
+        let mut st_b = MambaState::new_for(&t, 1, quantized);
+        let mut lg_b = Vec::new();
+        model.prefill_into(&prompt[..10], &mut st_b, &mut scratch, &mut lg_b);
+        model.prefill_batch_into(&[&prompt[10..]], &mut st_b, &mut scratch, &mut lg_b);
+        assert_bits_eq(&lg_a, &lg_b, "resume vs single-lane batch logits");
+        assert_eq!(st_a.conv_q, st_b.conv_q);
+        assert_bits_eq(&st_a.conv, &st_b.conv, "conv");
+        assert_bits_eq(&st_a.ssm, &st_b.ssm, "ssm");
+    }
+}
+
+/// Mixed serving workload with long prompts (so chunking actually
+/// spans many ticks), shared prefixes (so the cache hits), greedy and
+/// temperature requests side by side.
+fn workload(seed: u64) -> Vec<Request> {
+    let t = tier();
+    let v = t.vocab as u32;
+    let mut r = Pcg32::new(seed ^ 0xF00);
+    let shared: Vec<u16> = (0..9).map(|_| r.below(v) as u16).collect();
+    let mut reqs = Vec::new();
+    for i in 0..12u64 {
+        let len = match i % 3 {
+            0 => 3 + r.below(5) as usize,        // short
+            1 => 20 + r.below(20) as usize,      // long (chunking bites)
+            _ => 40 + r.below(9) as usize,       // longer
+        };
+        let mut prompt = if i % 4 == 0 { shared.clone() } else { Vec::new() };
+        while prompt.len() < len {
+            prompt.push(r.below(v) as u16);
+        }
+        let temperature = if i % 2 == 0 { 0.0 } else { 0.8 };
+        reqs.push(Request {
+            id: i,
+            prompt,
+            max_new_tokens: 3 + (i as usize) % 5,
+            params: SamplingParams {
+                temperature,
+                top_k: if temperature > 0.0 { 8 } else { 0 },
+                seed: i ^ 0x5,
+                ..Default::default()
+            },
+            stop_at_eos: false,
+        });
+    }
+    reqs
+}
+
+fn run(cfg: NativeEngineConfig, quantized: bool, seed: u64) -> Vec<(u64, Vec<u16>)> {
+    let mut eng = if quantized {
+        NativeEngine::new(Box::new(w8a8_model(seed)), cfg)
+    } else {
+        NativeEngine::new(Box::new(fp32_model(seed)), cfg)
+    };
+    for req in workload(seed) {
+        eng.submit(req);
+    }
+    let mut done: Vec<(u64, Vec<u16>)> = eng
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    done
+}
+
+#[test]
+fn prop_chunk_size_never_changes_tokens() {
+    // THE tentpole acceptance sweep: chunk ∈ {∞, 1, 3, 16} ×
+    // threads {1, 3} × cache off/on(stride 3) must serve identical
+    // token streams (greedy AND temperature requests), fp32 and W8A8
+    for quantized in [false, true] {
+        for seed in [2u64, 19] {
+            let baseline = run(NativeEngineConfig::default(), quantized, seed);
+            for chunk in [0usize, 1, 3, 16] {
+                for threads in [1usize, 3] {
+                    for cache_bytes in [0usize, 1 << 20] {
+                        let cfg = NativeEngineConfig {
+                            prefill_chunk: chunk,
+                            threads,
+                            cache_bytes,
+                            snapshot_stride: if cache_bytes > 0 { 3 } else { 0 },
+                            ..Default::default()
+                        };
+                        let got = run(cfg, quantized, seed);
+                        assert_eq!(
+                            baseline, got,
+                            "tokens moved (quantized={quantized} seed={seed} chunk={chunk} \
+                             threads={threads} cache={cache_bytes})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_kernel_backends_identical_under_chunking() {
+    let want = run(
+        NativeEngineConfig {
+            prefill_chunk: 5,
+            cache_bytes: 1 << 20,
+            snapshot_stride: 4,
+            kernel_backend: Some(KernelBackend::Scalar),
+            ..Default::default()
+        },
+        true,
+        11,
+    );
+    for backend in Kernels::available() {
+        let got = run(
+            NativeEngineConfig {
+                prefill_chunk: 5,
+                cache_bytes: 1 << 20,
+                snapshot_stride: 4,
+                kernel_backend: Some(backend),
+                ..Default::default()
+            },
+            true,
+            11,
+        );
+        assert_eq!(want, got, "backend {} changed chunked tokens", backend.label());
+    }
+}
+
+#[test]
+fn token_budget_never_changes_tokens() {
+    // tight budgets reorder work across ticks (incl. the
+    // minimum-progress 1-token path) but must not touch the streams
+    let baseline = run(NativeEngineConfig::default(), true, 23);
+    for budget in [4usize, 9, 64] {
+        let cfg = NativeEngineConfig {
+            prefill_chunk: 16,
+            max_tokens_per_tick: budget,
+            ..Default::default()
+        };
+        assert_eq!(baseline, run(cfg, true, 23), "budget {budget} changed tokens");
+    }
+}
+
+#[test]
+fn chunked_cache_still_hits_and_saves_prefill() {
+    // chunk ends snap to the stride grid, so a chunked engine must
+    // produce the same nested-prefix snapshot reuse the whole-prompt
+    // path did: resubmitting the workload yields full-prompt hits
+    let cfg = NativeEngineConfig {
+        prefill_chunk: 4,
+        cache_bytes: 1 << 20,
+        snapshot_stride: 3,
+        ..Default::default()
+    };
+    let mut eng = NativeEngine::new(Box::new(w8a8_model(31)), cfg);
+    for req in workload(31) {
+        eng.submit(req);
+    }
+    eng.run_to_completion().unwrap();
+    let warmup = eng.cache_stats().unwrap();
+    assert!(warmup.insertions > 0, "{warmup:?}");
+    for mut req in workload(31) {
+        req.id += 100;
+        eng.submit(req);
+    }
+    eng.run_to_completion().unwrap();
+    let s = eng.cache_stats().unwrap();
+    assert!(
+        s.hits >= warmup.hits + 12,
+        "every resubmitted prompt must hit (12 requests): {s:?}"
+    );
+    assert!(s.prefill_tokens_saved > warmup.prefill_tokens_saved, "{s:?}");
+}

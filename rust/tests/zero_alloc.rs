@@ -123,6 +123,42 @@ fn w8a8_step_is_allocation_free_for_paley_base_d_inner() {
 }
 
 #[test]
+fn w8a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
+    // ISSUE 5 acceptance: the unified scheduler's (B, T) batched chunk
+    // prefill executes out of the caller's scratch — once buffers have
+    // peaked at B·T_max rows, advancing in-flight prompts chunk by
+    // chunk costs zero heap allocations (ragged pads included)
+    let t = tier();
+    let model = MambaModel::synthetic(t.clone(), 7);
+    let calib: Vec<u16> = (0..256u16).map(|i| i % t.vocab as u16).collect();
+    let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let b = 3usize;
+    let mut st = MambaState::new_quantized(&t, b);
+    let mut scratch = StepScratch::new(1);
+    let mut logits = Vec::new();
+    // ragged chunk shapes held fixed across rounds (the scheduler pads
+    // lanes to the chunk grid)
+    let c0: Vec<u16> = (0..7u16).map(|i| i % t.vocab as u16).collect();
+    let c1: Vec<u16> = (0..4u16).collect();
+    let c2: Vec<u16> = (0..7u16).rev().collect();
+    let chunks: Vec<&[u16]> = vec![&c0, &c1, &c2];
+    for _ in 0..3 {
+        qm.prefill_batch_into(&chunks, &mut st, &mut scratch, &mut logits);
+    }
+    let before = allocs_on_this_thread();
+    for _ in 0..8 {
+        qm.prefill_batch_into(&chunks, &mut st, &mut scratch, &mut logits);
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "chunked (B,T) prefill heap-allocated {} time(s) across 8 post-warmup rounds",
+        after - before
+    );
+}
+
+#[test]
 fn fp32_step_is_allocation_free_after_warmup() {
     // the fp32 reference shares the scratch design; hold it to the
     // same standard so regressions can't hide behind the quantized test
