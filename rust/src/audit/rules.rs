@@ -1,0 +1,603 @@
+//! Line-level source rules: unsafe confinement, `// SAFETY:` and
+//! `#[target_feature]` discipline inside the kernels module, the
+//! crate lint table, kernel-guard presence, and cast hygiene.
+//!
+//! The scanner strips strings and line comments per line
+//! ([`code_portion`]), tracks `mod avx2` / `mod neon` / `mod tests`
+//! context, and treats everything after the first `#[cfg(test)]` as
+//! test region (the crate's convention keeps unit tests at the bottom
+//! of each file). It is deliberately std-only — no `syn` in the
+//! offline vendor set — and every rule has a seeded-violation fixture
+//! in `tests/audit.rs` proving it actually fires.
+
+use super::Finding;
+
+/// Strip the line-comment suffix and the *contents* of string
+/// literals from one source line, so token scans don't trip on text
+/// inside strings, docs, or comments. Quote characters themselves are
+/// kept (emptied), escapes are honored; char literals are not tracked
+/// (the tree has no `'"'`-style literals, and a false string-open
+/// would only make the scanner stricter on that one line).
+pub fn code_portion(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut chars = line.chars().peekable();
+    let mut in_str = false;
+    let mut escaped = false;
+    while let Some(c) = chars.next() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+                out.push('"');
+            }
+            continue;
+        }
+        if c == '"' {
+            in_str = true;
+            out.push('"');
+            continue;
+        }
+        if c == '/' && chars.peek() == Some(&'/') {
+            break; // line comment (also covers /// and //!)
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Does `code` contain `tok` as a whole word (neighbors are not
+/// `[A-Za-z0-9_]`)? Keeps `unsafe_code` / `unused_unsafe` attribute
+/// payloads from matching the `unsafe` keyword.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        let end = at + tok.len();
+        let pre_ok = at == 0 || !is_word(bytes[at - 1]);
+        let post_ok = end >= bytes.len() || !is_word(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_attr(trimmed: &str) -> bool {
+    trimmed.starts_with("#[") || trimmed.starts_with("#![")
+}
+
+fn is_comment(trimmed: &str) -> bool {
+    trimmed.starts_with("//")
+}
+
+/// The one file allowed to contain `unsafe`.
+pub const KERNELS_FILE: &str = "quant/kernels.rs";
+
+/// Scan one `src/` file: unsafe confinement everywhere, plus the
+/// SAFETY/target_feature discipline inside the kernels module and
+/// cast hygiene in `quant/` + `ssm/`.
+pub fn scan_source_file(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if rel == KERNELS_FILE {
+        out.extend(scan_kernels(rel, text));
+    } else {
+        out.extend(scan_unsafe_free(rel, text));
+        if (rel.starts_with("quant/") || rel.starts_with("ssm/")) && rel.ends_with(".rs") {
+            out.extend(scan_casts(rel, text));
+        }
+    }
+    out
+}
+
+/// Outside the kernels module, any `unsafe` token in non-test code is
+/// a confinement violation (the crate also carries
+/// `#![deny(unsafe_code)]`, but that attribute is itself editable —
+/// the auditor is the second, independent witness). The scan stops at
+/// the first `#[cfg(test)]`: a per-line scanner cannot see that a
+/// continuation line of a multi-line string fixture is still inside a
+/// string, and test regions stay covered by the compile-time lint.
+pub fn scan_unsafe_free(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = code_portion(line);
+        if has_token(&code, "unsafe") && !is_attr(code.trim()) {
+            out.push(Finding {
+                rule: "unsafe-confinement",
+                file: rel.to_string(),
+                line: i + 1,
+                message: format!("`unsafe` outside {KERNELS_FILE}: {}", line.trim()),
+            });
+        }
+    }
+    out
+}
+
+/// Inside `quant/kernels.rs`: every unsafe *block* needs a
+/// `// SAFETY:` comment in the contiguous comment/attribute run above
+/// it; every `unsafe fn` needs a `# Safety` doc section; every fn in
+/// an arch module (`mod avx2` / `mod neon`) needs a
+/// `#[target_feature(enable = "...")]` naming that module's feature;
+/// and a `target_feature` attribute may not name a different feature
+/// than its module (nor appear outside one).
+pub fn scan_kernels(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
+    // arch-module context: which target feature this region's
+    // intrinsics require (None = dispatch/scalar code). Stops at the
+    // first #[cfg(test)] like scan_unsafe_free, and for the same
+    // reason (per-line scans can't track multi-line string fixtures).
+    let mut arch: Option<&'static str> = None;
+    for (i, raw) in lines.iter().enumerate() {
+        if raw.trim().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = code_portion(raw);
+        let trimmed = code.trim();
+        if has_token(&code, "mod") {
+            arch = if has_token(&code, "avx2") {
+                Some("avx2")
+            } else if has_token(&code, "neon") {
+                Some("neon")
+            } else {
+                None // mod scalar / mod tests / anything else
+            };
+        }
+        // target_feature attribute consistency (detect on the
+        // comment-stripped code so prose mentioning the attribute
+        // doesn't count; extract the feature name from the raw line
+        // because it lives in a string literal)
+        if code.contains("#[target_feature") {
+            match (feature_of(raw), arch) {
+                (Some(feat), Some(want)) if feat != want => out.push(Finding {
+                    rule: "target-feature",
+                    file: rel.to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "#[target_feature(enable = \"{feat}\")] inside the {want} module"
+                    ),
+                }),
+                (_, None) => out.push(Finding {
+                    rule: "target-feature",
+                    file: rel.to_string(),
+                    line: i + 1,
+                    message: "#[target_feature] outside an arch module".into(),
+                }),
+                _ => {}
+            }
+        }
+        if !has_token(&code, "unsafe") || is_attr(trimmed) {
+            continue;
+        }
+        if has_token(&code, "fn") {
+            // `unsafe fn` declaration: needs a `# Safety` doc section,
+            // and — inside an arch module — a matching target_feature
+            let head = preceding_run(&lines, i);
+            if !head.iter().any(|l| l.contains("# Safety")) {
+                out.push(Finding {
+                    rule: "safety-comment",
+                    file: rel.to_string(),
+                    line: i + 1,
+                    message: format!("unsafe fn without a `# Safety` doc: {}", raw.trim()),
+                });
+            }
+            if let Some(want) = arch {
+                let feat = head.iter().find_map(|l| feature_of(l));
+                if feat.as_deref() != Some(want) {
+                    out.push(Finding {
+                        rule: "target-feature",
+                        file: rel.to_string(),
+                        line: i + 1,
+                        message: format!(
+                            "fn in the {want} module lacks #[target_feature(enable = \"{want}\")]: {}",
+                            raw.trim()
+                        ),
+                    });
+                }
+            }
+        } else {
+            // unsafe block: the contiguous comment/attribute run above
+            // must contain a `// SAFETY:` justification
+            let head = preceding_run(&lines, i);
+            let documented = head
+                .iter()
+                .any(|l| is_comment(l.trim()) && l.contains("SAFETY:"));
+            if !documented {
+                out.push(Finding {
+                    rule: "safety-comment",
+                    file: rel.to_string(),
+                    line: i + 1,
+                    message: format!("unsafe block without a `// SAFETY:` comment: {}", raw.trim()),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The contiguous run of comment / doc / attribute / blank lines
+/// directly above line `i` (nearest first), capped for sanity.
+fn preceding_run<'a>(lines: &[&'a str], i: usize) -> Vec<&'a str> {
+    let mut head = Vec::new();
+    let mut j = i;
+    while j > 0 && head.len() < 24 {
+        j -= 1;
+        let t = lines[j].trim();
+        if t.is_empty() || is_comment(t) || is_attr(t) {
+            head.push(lines[j]);
+        } else {
+            break;
+        }
+    }
+    head
+}
+
+/// Extract `X` from `#[target_feature(enable = "X")]` (raw line — the
+/// feature name lives in a string literal).
+fn feature_of(raw: &str) -> Option<String> {
+    let idx = raw.find("enable")?;
+    let rest = &raw[idx..];
+    let q0 = rest.find('"')?;
+    let rest = &rest[q0 + 1..];
+    let q1 = rest.find('"')?;
+    Some(rest[..q1].to_string())
+}
+
+/// Cast hygiene for non-test `quant/` + `ssm/` code (kernels.rs is
+/// exempt — it *is* the sanctioned implementation layer): no bare
+/// ` as i8`/` as u8`/` as i16` narrowing and no bare `as f32 *`
+/// dequant idiom. Sanctioned escapes: the documented helpers in
+/// `quant::{code_to_i8, dq_i8, dq_i32}`, or an `// audit:allow(cast)`
+/// marker on the line (or the line above) with a written rationale.
+pub fn scan_casts(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut prev_raw = "";
+    for (i, raw) in text.lines().enumerate() {
+        let trimmed = raw.trim();
+        // test region: unit tests sit at the bottom of each file
+        if trimmed.starts_with("#[cfg(test)]") {
+            break;
+        }
+        let allowed = raw.contains("audit:allow(cast)") || prev_raw.contains("audit:allow(cast)");
+        prev_raw = raw;
+        if allowed {
+            continue;
+        }
+        let code = code_portion(raw);
+        for pat in [" as i8", " as u8", " as i16"] {
+            // token-boundary check on the type name (` as i8x` is not a cast to i8)
+            let mut start = 0;
+            while let Some(pos) = code[start..].find(pat) {
+                let at = start + pos;
+                let end = at + pat.len();
+                if end >= code.len() || !is_word(code.as_bytes()[end]) {
+                    out.push(Finding {
+                        rule: "bare-cast",
+                        file: rel.to_string(),
+                        line: i + 1,
+                        message: format!(
+                            "bare `{}` narrowing — use quant::code_to_i8 (or mark audit:allow(cast)): {}",
+                            pat.trim(),
+                            trimmed
+                        ),
+                    });
+                    break;
+                }
+                start = at + 1;
+            }
+        }
+        if code.contains(" as f32 *") {
+            out.push(Finding {
+                rule: "bare-cast",
+                file: rel.to_string(),
+                line: i + 1,
+                message: format!(
+                    "bare `as f32 *` dequant — use quant::dq_i8 / quant::dq_i32 \
+                     (or mark audit:allow(cast)): {trimmed}"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `lib.rs` must keep the unsafe-hygiene core of the lint table: the
+/// crate-wide `deny(unsafe_code)` (the kernels module holds the single
+/// allow), `deny(unsafe_op_in_unsafe_fn)`, and the clippy
+/// undocumented-unsafe-blocks warning that backs the SAFETY rule.
+pub fn check_lint_table(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for required in [
+        "#![deny(unsafe_code)]",
+        "#![deny(unsafe_op_in_unsafe_fn)]",
+        "#![warn(clippy::undocumented_unsafe_blocks)]",
+    ] {
+        if !text.lines().any(|l| l.trim() == required) {
+            out.push(Finding {
+                rule: "lint-table",
+                file: rel.to_string(),
+                line: 0,
+                message: format!("crate lint table is missing `{required}`"),
+            });
+        }
+    }
+    out
+}
+
+/// `quant/mod.rs` must carry the single sanctioned
+/// `#[allow(unsafe_code)]`, attached to the `kernels` module.
+pub fn check_kernels_allow(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().starts_with("pub mod kernels") {
+            let head = preceding_run(&lines, i);
+            if head.iter().any(|l| l.trim() == "#[allow(unsafe_code)]") {
+                return Vec::new();
+            }
+            return vec![Finding {
+                rule: "lint-table",
+                file: rel.to_string(),
+                line: i + 1,
+                message: "`pub mod kernels` lacks its `#[allow(unsafe_code)]`".into(),
+            }];
+        }
+    }
+    vec![Finding {
+        rule: "lint-table",
+        file: rel.to_string(),
+        line: 0,
+        message: "no `pub mod kernels` declaration found".into(),
+    }]
+}
+
+/// `quant/kernels.rs` must define the headroom constants and the
+/// compile-time proof, and the constants must still encode
+/// ⌊(2³¹−1)/2¹⁴⌋ (checked against the live values this auditor was
+/// compiled with).
+pub fn check_const_proof(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for required in ["pub const MAX_ABS_PROD_I8", "pub const MAX_SAFE_K", "const _: () = assert!"] {
+        if !text.contains(required) {
+            out.push(Finding {
+                rule: "const-proof",
+                file: rel.to_string(),
+                line: 0,
+                message: format!("kernels module is missing `{required}`"),
+            });
+        }
+    }
+    // live cross-check: the constant this binary was compiled with must
+    // equal the independently re-derived bound
+    let derived = (i32::MAX as i64 / (1i64 << 14)) as usize;
+    if crate::quant::MAX_SAFE_K != derived {
+        out.push(Finding {
+            rule: "const-proof",
+            file: rel.to_string(),
+            line: 0,
+            message: format!(
+                "MAX_SAFE_K = {} but ⌊i32::MAX / 2¹⁴⌋ = {derived}",
+                crate::quant::MAX_SAFE_K
+            ),
+        });
+    }
+    out
+}
+
+/// Which files carry a mandatory `debug_assert!(.. MAX_SAFE_K ..)`
+/// runtime guard, and in which entry point.
+pub fn guarded_entry_point(rel: &str) -> Option<&'static str> {
+    match rel {
+        "quant/qlinear.rs" => Some("matmul_i8_blocked_with"),
+        "ssm/qmamba.rs" => Some("fused_conv_silu_i8_with"),
+        "ssm/scan.rs" => Some("selective_scan_q_into_with"),
+        _ => None,
+    }
+}
+
+/// The named entry point must contain a `debug_assert!` mentioning
+/// `MAX_SAFE_K` (the overflow guard the overflow-edge tests exercise).
+pub fn check_guard_present(rel: &str, text: &str, fn_name: &str) -> Vec<Finding> {
+    let Some(start) = text.find(&format!("fn {fn_name}")) else {
+        return vec![Finding {
+            rule: "accumulator-bound",
+            file: rel.to_string(),
+            line: 0,
+            message: format!("guarded entry point `{fn_name}` not found"),
+        }];
+    };
+    let body = body_after(text, start);
+    if body.contains("debug_assert!") && body.contains("MAX_SAFE_K") {
+        Vec::new()
+    } else {
+        vec![Finding {
+            rule: "accumulator-bound",
+            file: rel.to_string(),
+            line: 0,
+            message: format!("`{fn_name}` lacks its `debug_assert!(.. MAX_SAFE_K ..)` guard"),
+        }]
+    }
+}
+
+/// The brace-balanced body starting at the first `{` at/after `start`
+/// (string/comment-stripped brace counting).
+pub fn body_after(text: &str, start: usize) -> String {
+    let mut depth = 0usize;
+    let mut started = false;
+    let mut body = String::new();
+    for line in text[start..].lines() {
+        let code = code_portion(line);
+        body.push_str(line);
+        body.push('\n');
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+        }
+        if started && depth == 0 {
+            break;
+        }
+    }
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_portion_strips_comments_and_strings() {
+        assert_eq!(code_portion("let x = 1; // unsafe { }"), "let x = 1; ");
+        assert_eq!(code_portion(r#"panic!("unsafe outside")"#), r#"panic!("")"#);
+        assert_eq!(code_portion(r#"let s = "a\"unsafe\"b";"#), r#"let s = "";"#);
+        assert_eq!(code_portion("/// docs mention unsafe"), "");
+    }
+
+    #[test]
+    fn has_token_respects_word_boundaries() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("#[allow(unused_unsafe)]", "unsafe"));
+        assert!(!has_token("#![deny(unsafe_code)]", "unsafe"));
+        assert!(has_token("pub unsafe fn f()", "unsafe"));
+    }
+
+    #[test]
+    fn unsafe_free_rule_fires_and_clears() {
+        let bad = "fn f() {\n    unsafe { do_evil() }\n}\n";
+        let fs = scan_unsafe_free("ssm/scan.rs", bad);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "unsafe-confinement");
+        assert_eq!(fs[0].line, 2);
+        let good = "fn f() {\n    // unsafe only in comments\n    let s = \"unsafe\";\n}\n";
+        assert!(scan_unsafe_free("ssm/scan.rs", good).is_empty());
+    }
+
+    #[test]
+    fn kernels_rule_accepts_documented_block() {
+        let src = "mod avx2 {\n\
+                   \x20   /// # Safety\n\
+                   \x20   /// caller checks\n\
+                   \x20   #[target_feature(enable = \"avx2\")]\n\
+                   \x20   pub unsafe fn f() {\n\
+                   \x20       // SAFETY: contract above\n\
+                   \x20       unsafe { g() }\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(scan_kernels(KERNELS_FILE, src).is_empty());
+    }
+
+    #[test]
+    fn kernels_rule_flags_missing_safety_comment() {
+        let src = "mod neon {\n\
+                   \x20   /// # Safety\n\
+                   \x20   /// caller checks\n\
+                   \x20   #[target_feature(enable = \"neon\")]\n\
+                   \x20   pub unsafe fn f() {\n\
+                   \x20       unsafe { g() }\n\
+                   \x20   }\n\
+                   }\n";
+        let fs = scan_kernels(KERNELS_FILE, src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "safety-comment");
+        assert_eq!(fs[0].line, 6);
+    }
+
+    #[test]
+    fn kernels_rule_flags_wrong_target_feature() {
+        let src = "mod avx2 {\n\
+                   \x20   /// # Safety\n\
+                   \x20   /// caller checks\n\
+                   \x20   #[target_feature(enable = \"sse2\")]\n\
+                   \x20   pub unsafe fn f() {\n\
+                   \x20       // SAFETY: contract above\n\
+                   \x20       unsafe { g() }\n\
+                   \x20   }\n\
+                   }\n";
+        let fs = scan_kernels(KERNELS_FILE, src);
+        assert!(fs.iter().any(|f| f.rule == "target-feature"), "{fs:?}");
+    }
+
+    #[test]
+    fn kernels_rule_flags_missing_target_feature() {
+        let src = "mod neon {\n\
+                   \x20   /// # Safety\n\
+                   \x20   /// caller checks\n\
+                   \x20   pub unsafe fn f() {\n\
+                   \x20       // SAFETY: contract above\n\
+                   \x20       unsafe { g() }\n\
+                   \x20   }\n\
+                   }\n";
+        let fs = scan_kernels(KERNELS_FILE, src);
+        assert!(fs.iter().any(|f| f.rule == "target-feature"), "{fs:?}");
+    }
+
+    #[test]
+    fn unsafe_free_rule_stops_at_test_region() {
+        // a multi-line string fixture inside a test module would look
+        // like bare `unsafe` to a per-line scanner — the rule must not
+        // read past #[cfg(test)] (the compile-time deny covers tests)
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   const FIXTURE: &str = \"line one\n\
+                   \x20       unsafe { g() }\n\
+                   \x20   \";\n\
+                   }\n";
+        assert!(scan_unsafe_free("ssm/scan.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cast_rule_fires_on_bare_narrowing_and_dequant() {
+        let bad = "fn f(v: i32, s: f32) -> f32 {\n\
+                   \x20   let c = v as i8;\n\
+                   \x20   c as f32 * s\n\
+                   }\n";
+        let fs = scan_casts("quant/mod.rs", bad);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(fs.iter().all(|f| f.rule == "bare-cast"));
+    }
+
+    #[test]
+    fn cast_rule_honors_allow_marker_and_test_region() {
+        let ok = "fn f(v: i32) -> i8 {\n\
+                  \x20   v as i8 // audit:allow(cast) — range-checked\n\
+                  }\n\
+                  #[cfg(test)]\n\
+                  mod tests {\n\
+                  \x20   fn g(v: i32) -> i8 { v as i8 }\n\
+                  }\n";
+        assert!(scan_casts("quant/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn guard_check_reads_only_the_named_body() {
+        let src = "pub fn matmul_i8_blocked_with(k: usize) {\n\
+                   \x20   debug_assert!(k <= MAX_SAFE_K);\n\
+                   }\n\
+                   pub fn other() {}\n";
+        assert!(check_guard_present("quant/qlinear.rs", src, "matmul_i8_blocked_with").is_empty());
+        let missing = "pub fn matmul_i8_blocked_with(k: usize) {\n}\n\
+                       // MAX_SAFE_K mentioned elsewhere, debug_assert! too — but\n\
+                       // outside the body, so it must NOT satisfy the rule\n\
+                       pub fn other() { debug_assert!(true); let _ = MAX_SAFE_K; }\n";
+        assert_eq!(
+            check_guard_present("quant/qlinear.rs", missing, "matmul_i8_blocked_with").len(),
+            1
+        );
+    }
+}

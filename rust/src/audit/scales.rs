@@ -1,0 +1,276 @@
+//! Scale-propagation audit over `ssm/qmamba.rs`: every activation
+//! scale baked at calibration must flow through the execution paths
+//! exactly as it was folded.
+//!
+//! The ground truth is the source itself, so the audit is structural:
+//!
+//! 1. **field inventory** — every `s_*` field of `QLayer` and
+//!    `QuantizedMambaModel` (the static per-tensor scales of the
+//!    paper's W8A8 recipe) is discovered from the struct bodies, not
+//!    hard-coded, so adding a scale automatically extends the audit.
+//! 2. **produced exactly once** — each scale is bound exactly once in
+//!    the `from_calibration` constructor body (field init `name:` or
+//!    shorthand `name,`). A second binding site is how a stale/
+//!    conflicting scale sneaks in.
+//! 3. **consumed by both execution bodies** — each scale is read
+//!    (`.name`) in `prefill_batch_impl` *and* `step_into`; the two
+//!    paths must stay numerically identical (the prefill/decode
+//!    bit-exactness contract), and a scale consumed by one but not the
+//!    other is exactly how they'd diverge.
+//! 4. **fold consistency** — the algebraic folds carry their written
+//!    form: `s_conv = s_cin * conv_sw` (conv dequant folds the weight
+//!    scale), the out_proj `fold_scale(1.0 / di ..)` (the Hadamard
+//!    H·W_out fold absorbs 1/di into the weight scale), and
+//!    `fwht.apply_rows` precedes `out_proj.forward_into` in both
+//!    bodies (quantization happens in the rotated space — the entire
+//!    point of the Hadamard transform).
+
+use super::rules::{body_after, code_portion, has_token};
+use super::Finding;
+
+/// Audit `ssm/qmamba.rs` (`text`); returns findings plus the number of
+/// scale fields traced.
+pub fn audit_scales(rel: &str, text: &str) -> (Vec<Finding>, usize) {
+    let mut out = Vec::new();
+    let whole = |message: String, rule: &'static str| Finding {
+        rule,
+        file: rel.to_string(),
+        line: 0,
+        message,
+    };
+
+    // 1. field inventory from the struct bodies
+    let mut fields = Vec::new();
+    for strukt in ["QLayer", "QuantizedMambaModel"] {
+        match text.find(&format!("struct {strukt}")) {
+            Some(at) => fields.extend(scale_fields(&body_after(text, at))),
+            None => out.push(whole(format!("struct {strukt} not found"), "scale-flow")),
+        }
+    }
+    if fields.is_empty() {
+        out.push(whole("no s_* scale fields discovered".into(), "scale-flow"));
+        return (out, 0);
+    }
+
+    let Some(ctor_at) = text.find("fn from_calibration") else {
+        out.push(whole("fn from_calibration not found".into(), "scale-flow"));
+        return (out, fields.len());
+    };
+    let ctor = body_after(text, ctor_at);
+
+    let mut exec_bodies = Vec::new();
+    for exec in ["prefill_batch_impl", "step_into"] {
+        match text.find(&format!("fn {exec}")) {
+            Some(at) => exec_bodies.push((exec, body_after(text, at))),
+            None => out.push(whole(format!("fn {exec} not found"), "scale-flow")),
+        }
+    }
+
+    for name in &fields {
+        // 2. produced exactly once in from_calibration
+        let produced = ctor
+            .lines()
+            .map(|l| {
+                let t = code_portion(l);
+                let t = t.trim();
+                usize::from(t.starts_with(&format!("{name}:")) || t == format!("{name},"))
+            })
+            .sum::<usize>();
+        if produced != 1 {
+            out.push(whole(
+                format!("scale `{name}` initialized {produced} times in from_calibration (want exactly 1)"),
+                "scale-flow",
+            ));
+        }
+        // 3. consumed by both execution bodies
+        for (exec, body) in &exec_bodies {
+            if !consumes(body, name) {
+                out.push(whole(
+                    format!(
+                        "scale `{name}` is never read (`.{name}`) in `{exec}` — the \
+                         prefill/decode paths would diverge from the calibrated fold"
+                    ),
+                    "scale-flow",
+                ));
+            }
+        }
+    }
+
+    // 4. fold consistency
+    let conv_fold = ctor.lines().any(|l| {
+        let c = code_portion(l);
+        c.contains("s_conv:") && has_token(&c, "s_cin") && c.contains('*')
+    });
+    if fields.iter().any(|f| f == "s_conv") && !conv_fold {
+        out.push(whole(
+            "`s_conv` is not folded from `s_cin * <conv weight scale>` in from_calibration".into(),
+            "scale-flow",
+        ));
+    }
+    let out_fold = ctor
+        .lines()
+        .any(|l| l.contains("out_proj:") && l.contains("fold_scale(1.0 / di"));
+    if !out_fold {
+        out.push(whole(
+            "out_proj is not built with `fold_scale(1.0 / di ..)` — the Hadamard \
+             H·W_out fold must absorb 1/di into the weight scale"
+                .into(),
+            "scale-flow",
+        ));
+    }
+    for (exec, body) in &exec_bodies {
+        let rot = body.find("fwht.apply_rows");
+        let proj = body.find("out_proj.forward_into");
+        match (rot, proj) {
+            (Some(r), Some(p)) if r < p => {}
+            _ => out.push(whole(
+                format!(
+                    "`{exec}` must rotate (`fwht.apply_rows`) before projecting \
+                     (`out_proj.forward_into`) — out_proj scales live in the rotated space"
+                ),
+                "scale-flow",
+            )),
+        }
+    }
+
+    (out, fields.len())
+}
+
+/// `s_*`-named fields declared in a struct body (one per line,
+/// `name: Type,` — rustfmt layout).
+fn scale_fields(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in body.lines() {
+        let code = code_portion(line);
+        let t = code.trim().trim_start_matches("pub ").trim_start_matches("pub(crate) ");
+        if let Some(colon) = t.find(':') {
+            let name = t[..colon].trim();
+            if name.starts_with("s_")
+                && name.bytes().all(|b| b.is_ascii_lowercase() || b == b'_' || b.is_ascii_digit())
+            {
+                out.push(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Is `.name` read anywhere in `body` (word boundary after the name,
+/// so `.s_x` doesn't match `.s_xin`)?
+fn consumes(body: &str, name: &str) -> bool {
+    let pat = format!(".{name}");
+    let bytes = body.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = body[start..].find(&pat) {
+        let end = start + pos + pat.len();
+        if end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_') {
+            return true;
+        }
+        start = start + pos + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // a minimal qmamba-shaped source the rules can chew on; built by
+    // concatenation so the audit of *this* file's own source doesn't
+    // see struct/fn tokens inside the fixture
+    fn fixture() -> String {
+        [
+            "struct QLayer {",
+            "    s_xin: f32,",
+            "    s_cin: f32,",
+            "    s_conv: f32,",
+            "    other: usize,",
+            "}",
+            "struct QuantizedMambaModel {",
+            "    s_head_in: f32,",
+            "}",
+            "impl QuantizedMambaModel {",
+            "    fn from_calibration() -> Self {",
+            "        let s_cin = scale(1.0);",
+            "        layers.push(QLayer {",
+            "            s_xin: scale(2.0),",
+            "            s_cin,",
+            "            s_conv: s_cin * conv_sw,",
+            "            out_proj: QLinear::from_f32(&w, di, d, None).fold_scale(1.0 / di as f32),",
+            "        });",
+            "        Self {",
+            "            s_head_in: scale(3.0),",
+            "        }",
+            "    }",
+            "    fn prefill_batch_impl(&self) {",
+            "        use_scale(ql.s_xin, ql.s_cin, ql.s_conv, self.s_head_in);",
+            "        ql.fwht.apply_rows(gated);",
+            "        ql.out_proj.forward_into(kers, gated);",
+            "    }",
+            "    fn step_into(&self) {",
+            "        use_scale(ql.s_xin, ql.s_cin, ql.s_conv, self.s_head_in);",
+            "        ql.fwht.apply_rows(gated);",
+            "        ql.out_proj.forward_into(kers, gated);",
+            "    }",
+            "}",
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn clean_fixture_passes_and_counts_scales() {
+        let (fs, n) = audit_scales("ssm/qmamba.rs", &fixture());
+        assert!(fs.is_empty(), "{fs:?}");
+        assert_eq!(n, 4); // s_xin, s_cin, s_conv, s_head_in
+    }
+
+    #[test]
+    fn unconsumed_scale_is_flagged_per_exec_body() {
+        let src = fixture().replace(
+            "use_scale(ql.s_xin, ql.s_cin, ql.s_conv, self.s_head_in);\n        ql.fwht.apply_rows(gated);\n        ql.out_proj.forward_into(kers, gated);\n    }\n    fn step_into",
+            "use_scale(ql.s_cin, ql.s_conv, self.s_head_in);\n        ql.fwht.apply_rows(gated);\n        ql.out_proj.forward_into(kers, gated);\n    }\n    fn step_into",
+        );
+        assert_ne!(src, fixture(), "replacement must hit prefill_batch_impl");
+        let (fs, _) = audit_scales("ssm/qmamba.rs", &src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("s_xin") && fs[0].message.contains("prefill_batch_impl"));
+    }
+
+    #[test]
+    fn double_production_is_flagged() {
+        let src = fixture().replace(
+            "            s_xin: scale(2.0),",
+            "            s_xin: scale(2.0),\n            s_xin: scale(9.0),",
+        );
+        let (fs, _) = audit_scales("ssm/qmamba.rs", &src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("initialized 2 times"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn broken_conv_fold_is_flagged() {
+        let src = fixture().replace("s_conv: s_cin * conv_sw,", "s_conv: scale(4.0),");
+        let (fs, _) = audit_scales("ssm/qmamba.rs", &src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("s_conv"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn rotate_after_project_is_flagged() {
+        let src = fixture().replace(
+            "    fn step_into(&self) {\n        use_scale(ql.s_xin, ql.s_cin, ql.s_conv, self.s_head_in);\n        ql.fwht.apply_rows(gated);\n        ql.out_proj.forward_into(kers, gated);",
+            "    fn step_into(&self) {\n        use_scale(ql.s_xin, ql.s_cin, ql.s_conv, self.s_head_in);\n        ql.out_proj.forward_into(kers, gated);\n        ql.fwht.apply_rows(gated);",
+        );
+        assert_ne!(src, fixture());
+        let (fs, _) = audit_scales("ssm/qmamba.rs", &src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("step_into"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn prefix_scales_do_not_shadow_each_other() {
+        // `.s_x` must not be satisfied by `.s_xin`
+        assert!(consumes("a.s_xin; b.s_x;", "s_x"));
+        assert!(!consumes("a.s_xin;", "s_x"));
+    }
+}

@@ -1,0 +1,261 @@
+//! Accumulator-overflow shape audit: every `MambaTier { .. }` literal
+//! in the tree and every gemm/conv shape string in the committed bench
+//! baseline must keep its K-role dimensions within
+//! [`crate::quant::MAX_SAFE_K`] — the compile-time-proven bound on how
+//! many |i8·i8| ≤ 2¹⁴ products one i32 accumulator can absorb.
+//!
+//! Which dimension plays K where (mirrors the `debug_assert!` guards
+//! in the kernel entry points):
+//!
+//! | dim       | K role                                             |
+//! |-----------|----------------------------------------------------|
+//! | `d_model` | K of the in_proj GEMM and the tied-head GEMM       |
+//! | `d_inner` | K of the x_proj GEMM and the folded out_proj GEMM  |
+//! | `dt_rank` | K of the dt_proj GEMM                              |
+//! | `d_conv`  | tap count of the fused integer conv                |
+//! | `d_state` | n_state of the quantized scan (future-proof guard) |
+//!
+//! The runtime `debug_assert!` guards only fire on shapes a test
+//! actually runs; this pass covers every shape the tree *mentions* —
+//! src, tests, benches, and the bench baseline JSON — so an
+//! out-of-bound tier can't land even in not-yet-executed code.
+
+use super::Finding;
+use crate::quant::MAX_SAFE_K;
+use crate::util::json;
+
+/// One `MambaTier { .. }` struct literal with its integer-literal
+/// dimension fields. Fields bound to expressions (e.g. `d_model: d`)
+/// are not recorded — the literal is still counted, and the expression
+/// value is covered at runtime by the kernel guards.
+#[derive(Debug, Clone)]
+pub struct TierShape {
+    pub file: String,
+    /// 1-based line of the `MambaTier {` opener
+    pub line: usize,
+    /// (field, value) pairs parsed from integer literals
+    pub dims: Vec<(String, usize)>,
+}
+
+const DIM_FIELDS: [&str; 7] =
+    ["d_model", "n_layer", "d_state", "d_conv", "d_inner", "dt_rank", "vocab"];
+
+/// K role played by each audited dimension (None = not a K-role dim).
+fn k_role(field: &str) -> Option<&'static str> {
+    match field {
+        "d_model" => Some("K of the in_proj / tied-head GEMMs"),
+        "d_inner" => Some("K of the x_proj / folded out_proj GEMMs"),
+        "dt_rank" => Some("K of the dt_proj GEMM"),
+        "d_conv" => Some("tap count of the fused integer conv"),
+        "d_state" => Some("n_state of the quantized scan"),
+        _ => None,
+    }
+}
+
+/// Collect every `MambaTier { .. }` literal in `text` (line-level
+/// brace tracking on comment/string-stripped code; tier literals in
+/// this tree are one-field-per-line, which the repo's rustfmt layout
+/// guarantees).
+pub fn collect_tier_literals(rel: &str, text: &str) -> Vec<TierShape> {
+    let mut out = Vec::new();
+    let mut cur: Option<(TierShape, i64)> = None; // (literal, open depth)
+    for (i, raw) in text.lines().enumerate() {
+        let code = super::rules::code_portion(raw);
+        if let Some((tier, depth)) = cur.as_mut() {
+            let trimmed = code.trim();
+            if let Some(colon) = trimmed.find(':') {
+                let name = trimmed[..colon].trim();
+                if DIM_FIELDS.contains(&name) {
+                    let val = trimmed[colon + 1..].trim().trim_end_matches(',').trim();
+                    if let Ok(v) = val.replace('_', "").parse::<usize>() {
+                        tier.dims.push((name.to_string(), v));
+                    }
+                }
+            }
+            *depth += brace_delta(&code);
+            if *depth <= 0 {
+                out.push(cur.take().unwrap().0);
+            }
+            continue;
+        }
+        if super::rules::has_token(&code, "MambaTier") {
+            if let Some(pos) = code.find('{') {
+                let delta = brace_delta(&code[pos..]);
+                let tier = TierShape { file: rel.to_string(), line: i + 1, dims: Vec::new() };
+                if delta <= 0 {
+                    out.push(tier); // single-line literal (no dims parsed)
+                } else {
+                    cur = Some((tier, delta));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// Check one tier literal's K-role dims against the proven bound.
+pub fn check_tier(t: &TierShape) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (field, value) in &t.dims {
+        if let Some(role) = k_role(field) {
+            if *value > MAX_SAFE_K {
+                out.push(Finding {
+                    rule: "k-bound",
+                    file: t.file.clone(),
+                    line: t.line,
+                    message: format!(
+                        "MambaTier.{field} = {value} exceeds MAX_SAFE_K = {MAX_SAFE_K} \
+                         ({role}): a worst-case i8·i8 reduction of this length \
+                         overflows the i32 accumulator"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Audit the committed bench baseline: every `gemm_*` entry's K (the
+/// middle of its `MxKxN` shape token) and every `conv_*` entry's `w=`
+/// tap count must stay within the proven bound — a baseline row past
+/// it would "measure" a kernel that silently wraps.
+pub fn audit_bench_json(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => {
+            return vec![Finding {
+                rule: "bench-shape",
+                file: rel.to_string(),
+                line: 0,
+                message: format!("baseline does not parse as JSON: {e}"),
+            }];
+        }
+    };
+    let Some(entries) = doc.get("entries").as_arr() else {
+        return vec![Finding {
+            rule: "bench-shape",
+            file: rel.to_string(),
+            line: 0,
+            message: "baseline has no `entries` array".into(),
+        }];
+    };
+    for (i, e) in entries.iter().enumerate() {
+        let op = e.get("op").as_str().unwrap_or("");
+        let shape = e.get("shape").as_str().unwrap_or("");
+        let bad = |message: String| Finding {
+            rule: "bench-shape",
+            file: rel.to_string(),
+            line: 0,
+            message: format!("entries[{i}] ({op} \"{shape}\"): {message}"),
+        };
+        if op.starts_with("gemm_") {
+            // shape token is "MxKxN" (an optional " (label)" suffix follows)
+            let tok = shape.split_whitespace().next().unwrap_or("");
+            let dims: Vec<usize> =
+                tok.split('x').filter_map(|p| p.parse::<usize>().ok()).collect();
+            if dims.len() != 3 {
+                out.push(bad("gemm shape is not MxKxN".into()));
+            } else if dims[1] > MAX_SAFE_K {
+                out.push(bad(format!("gemm K = {} exceeds MAX_SAFE_K = {MAX_SAFE_K}", dims[1])));
+            }
+        } else if op.starts_with("conv_") {
+            let w = shape
+                .split_whitespace()
+                .find_map(|t| t.strip_prefix("w=").and_then(|v| v.parse::<usize>().ok()));
+            match w {
+                None => out.push(bad("conv shape has no parseable `w=` tap count".into())),
+                Some(w) if w > MAX_SAFE_K => {
+                    out.push(bad(format!("conv w = {w} exceeds MAX_SAFE_K = {MAX_SAFE_K}")));
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TIER: &str = "fn tier() -> MambaTier {\n\
+                        \x20   MambaTier {\n\
+                        \x20       name: \"tiny\".into(),\n\
+                        \x20       d_model: 16,\n\
+                        \x20       n_layer: 2,\n\
+                        \x20       d_state: 4,\n\
+                        \x20       d_conv: 3,\n\
+                        \x20       d_inner: 32,\n\
+                        \x20       dt_rank: 2,\n\
+                        \x20       vocab: 256,\n\
+                        \x20   }\n\
+                        }\n";
+
+    #[test]
+    fn collects_and_passes_in_bound_tier() {
+        let tiers = collect_tier_literals("tests/x.rs", TIER);
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].line, 2);
+        assert_eq!(tiers[0].dims.len(), 7);
+        assert!(check_tier(&tiers[0]).is_empty());
+    }
+
+    #[test]
+    fn flags_out_of_bound_d_model() {
+        let src = TIER.replace("d_model: 16,", "d_model: 200_000,");
+        let tiers = collect_tier_literals("tests/x.rs", &src);
+        let fs = check_tier(&tiers[0]);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "k-bound");
+        assert!(fs[0].message.contains("d_model = 200000"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn expression_dims_are_skipped_not_flagged() {
+        let src = TIER.replace("d_model: 16,", "d_model: d,");
+        let tiers = collect_tier_literals("tests/x.rs", &src);
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].dims.len(), 6);
+        assert!(check_tier(&tiers[0]).is_empty());
+    }
+
+    #[test]
+    fn bench_json_k_bound_fires() {
+        let good = r#"{"entries": [
+            {"op": "gemm_i8_blocked_simd", "shape": "8x64x256 (in_proj decode)"},
+            {"op": "conv_i8_fused_simd", "shape": "B=8 di=128 w=4"},
+            {"op": "ttft_p50", "shape": "serve n=16 chunk=64"}
+        ]}"#;
+        assert!(audit_bench_json("b.json", good).is_empty());
+        let bad = r#"{"entries": [
+            {"op": "gemm_i8_blocked", "shape": "8x200000x256"},
+            {"op": "conv_i8_fused_simd", "shape": "B=8 di=128 w=140000"}
+        ]}"#;
+        let fs = audit_bench_json("b.json", bad);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(fs.iter().all(|f| f.rule == "bench-shape"));
+    }
+
+    #[test]
+    fn bench_json_malformed_shapes_are_findings() {
+        let src = r#"{"entries": [
+            {"op": "gemm_i8_blocked", "shape": "wat"},
+            {"op": "conv_i8_fused_simd", "shape": "B=8 di=128"}
+        ]}"#;
+        assert_eq!(audit_bench_json("b.json", src).len(), 2);
+        assert_eq!(audit_bench_json("b.json", "not json").len(), 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! `quamba-audit` — the quantization-soundness static analysis pass.
+//!
+//! Checks the project invariants rustc can't (see [`quamba::audit`]):
+//! unsafe confinement to the SIMD kernel module, `// SAFETY:` /
+//! `#[target_feature]` discipline, accumulator-overflow K bounds on
+//! every `MambaTier` literal and bench-baseline shape, scale
+//! produce/consume/fold consistency, and cast hygiene.
+//!
+//! ```text
+//! cargo run --release --bin quamba_audit            # audit this tree
+//! cargo run --release --bin quamba_audit -- --root some/checkout
+//! ```
+//!
+//! Exit status: 0 = clean, 1 = findings (printed one per line as
+//! `file:line: [rule] message`), 2 = usage/environment error. CI runs
+//! this as a required job (`audit` in .github/workflows/ci.yml).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use quamba::audit;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("quamba-audit: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!(
+                    "quamba-audit: quantization-soundness static analysis\n\
+                     usage: quamba_audit [--root PATH]\n\
+                     PATH may be the repo root, the crate dir, or src/ itself;\n\
+                     default: the first of ., .., $CARGO_MANIFEST_DIR that holds a crate."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("quamba-audit: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.or_else(default_root);
+    let Some(root) = root else {
+        eprintln!("quamba-audit: no crate source root found (run from the repo or pass --root)");
+        return ExitCode::from(2);
+    };
+
+    match audit::audit_repo(&root) {
+        Err(e) => {
+            eprintln!("quamba-audit: {e}");
+            ExitCode::from(2)
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            println!(
+                "quamba-audit: {} file(s), {} tier literal(s), {} scale(s) checked — {}",
+                report.files_scanned,
+                report.tiers_checked,
+                report.scales_checked,
+                if report.ok() {
+                    "clean".to_string()
+                } else {
+                    format!("{} finding(s)", report.findings.len())
+                }
+            );
+            if report.ok() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+    }
+}
+
+/// First of `.`, `..`, `$CARGO_MANIFEST_DIR` that resolves to a crate
+/// source root — covers `cargo run` from the crate dir, from the repo
+/// root, and direct binary invocation from CI.
+fn default_root() -> Option<PathBuf> {
+    let mut cands = vec![PathBuf::from("."), PathBuf::from("..")];
+    if let Ok(md) = std::env::var("CARGO_MANIFEST_DIR") {
+        cands.push(PathBuf::from(md));
+    }
+    cands.into_iter().find(|c| audit::find_src_root(c).is_some())
+}

@@ -55,6 +55,32 @@ pub const GEMM_NB: usize = 16;
 /// times from registers.
 pub const GEMM_MR: usize = 4;
 
+/// Largest magnitude of a single i8·i8 product:
+/// `(-128) · (-128) = 2¹⁴ = 16384`. Every kernel in this module folds
+/// such products into an `i32` accumulator, so this constant is the
+/// per-term headroom bound of the whole int8 suite.
+pub const MAX_ABS_PROD_I8: i64 = 1 << 14;
+
+/// Largest dot-product length K for which a worst-case i8·i8 sum is
+/// guaranteed to fit an `i32` accumulator:
+/// `K · 2¹⁴ ≤ i32::MAX  ⇔  K ≤ ⌊(2³¹ − 1) / 2¹⁴⌋ = 2¹⁷ − 1 = 131071`.
+///
+/// Checked three ways: the const assertions below prove the bound at
+/// compile time, `debug_assert!` guards in `matmul_i8_blocked`,
+/// `fused_conv_silu_i8`, and `selective_scan_q_into` enforce it on
+/// every runtime shape, and `quamba_audit` cross-checks every
+/// `MambaTier` literal and bench shape in the tree against it.
+pub const MAX_SAFE_K: usize = (i32::MAX as i64 / MAX_ABS_PROD_I8) as usize;
+
+// Compile-time overflow proof: K = MAX_SAFE_K worth of worst-case
+// products fits i32; K = MAX_SAFE_K + 1 does not. If either inequality
+// breaks (e.g. someone widens the quantizer grid past 8 bits without
+// re-deriving the bound), the build fails here instead of wrapping an
+// accumulator at runtime.
+const _: () = assert!(MAX_SAFE_K as i64 * MAX_ABS_PROD_I8 <= i32::MAX as i64);
+const _: () = assert!((MAX_SAFE_K as i64 + 1) * MAX_ABS_PROD_I8 > i32::MAX as i64);
+const _: () = assert!(MAX_SAFE_K == (1 << 17) - 1);
+
 /// One int8 execution backend. `Scalar` exists everywhere; the SIMD
 /// variants are constructible only where the hardware supports them
 /// (checked at runtime, see [`KernelBackend::is_available`]).
@@ -385,6 +411,9 @@ mod avx2 {
     /// `blk.len() >= k * 16`, `acc.len() >= 16`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_x1(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled and the slice
+        // bounds hold; all pointer loads/stores below stay inside the
+        // caller-guaranteed `k * GEMM_NB` / `GEMM_NB` extents.
         unsafe {
             let bp = blk.as_ptr();
             let mut acc_lo = _mm256_setzero_si256();
@@ -426,6 +455,10 @@ mod avx2 {
     /// stride `k`), `blk.len() >= k * 16`, `acc.len() >= 64`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_x4(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled, the four rows
+        // are stride-`k` within `x`, and every pointer access stays
+        // inside the caller-guaranteed `k * GEMM_NB` / `4 * GEMM_NB`
+        // extents.
         unsafe {
             let bp = blk.as_ptr();
             let mut a0l = _mm256_setzero_si256();
@@ -492,6 +525,9 @@ mod avx2 {
     /// equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn mac_i8(a: &[i8], b: &[i8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled and all three
+        // slices share `acc.len()`; the vector loop touches `i..i+16`
+        // only while `i + 16 <= n`.
         unsafe {
             let n = acc.len();
             let mut i = 0;
@@ -527,6 +563,9 @@ mod avx2 {
     /// Caller guarantees AVX2 is available and `q.len() == out.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dequant_i8(q: &[i8], s: f32, out: &mut [f32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled and
+        // `q.len() == out.len()`; the vector loop touches `i..i+8`
+        // only while `i + 8 <= n`.
         unsafe {
             let n = out.len();
             let vs = _mm256_set1_ps(s);
@@ -556,9 +595,14 @@ mod neon {
     use core::arch::aarch64::*;
 
     /// # Safety
-    /// Caller guarantees `x.len() >= k`, `blk.len() >= k * 16`,
-    /// `acc.len() >= 16` (NEON is mandatory on aarch64).
+    /// Caller guarantees NEON is available (mandatory on aarch64, but
+    /// declared explicitly so the dispatch contract matches AVX2) and
+    /// `x.len() >= k`, `blk.len() >= k * 16`, `acc.len() >= 16`.
+    #[target_feature(enable = "neon")]
     pub unsafe fn gemm_x1(x: &[i8], k: usize, blk: &[i8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, NEON is enabled and every
+        // pointer access stays inside the caller-guaranteed
+        // `k * GEMM_NB` / 16 extents.
         unsafe {
             let bp = blk.as_ptr();
             let mut a0 = vdupq_n_s32(0);
@@ -584,8 +628,13 @@ mod neon {
     }
 
     /// # Safety
-    /// Caller guarantees the three slices have equal length.
+    /// Caller guarantees NEON is available and the three slices have
+    /// equal length.
+    #[target_feature(enable = "neon")]
     pub unsafe fn mac_i8(a: &[i8], b: &[i8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, NEON is enabled and all three
+        // slices share `acc.len()`; the vector loop touches `i..i+8`
+        // only while `i + 8 <= n`.
         unsafe {
             let n = acc.len();
             let mut i = 0;
@@ -605,8 +654,12 @@ mod neon {
     }
 
     /// # Safety
-    /// Caller guarantees `q.len() == out.len()`.
+    /// Caller guarantees NEON is available and `q.len() == out.len()`.
+    #[target_feature(enable = "neon")]
     pub unsafe fn dequant_i8(q: &[i8], s: f32, out: &mut [f32]) {
+        // SAFETY: per the fn contract, NEON is enabled and
+        // `q.len() == out.len()`; the vector loop touches `i..i+8`
+        // only while `i + 8 <= n`.
         unsafe {
             let n = out.len();
             let mut i = 0;
@@ -643,6 +696,16 @@ mod tests {
         // auto must select something this machine can actually run
         assert!(avail.contains(&Kernels::auto().backend()));
         assert!(avail.contains(&Kernels::detect().backend()));
+    }
+
+    #[test]
+    fn k_bound_is_tight() {
+        // the proven accumulator bound, spelled out in decimal so the
+        // margin to i32::MAX (= 2_147_483_647) is visible: one more
+        // worst-case product (16384) would not fit.
+        assert_eq!(MAX_SAFE_K, 131071);
+        assert_eq!(MAX_SAFE_K as i64 * MAX_ABS_PROD_I8, 2_147_467_264);
+        assert!(MAX_SAFE_K as i64 * MAX_ABS_PROD_I8 + MAX_ABS_PROD_I8 > i32::MAX as i64);
     }
 
     #[test]

@@ -6,10 +6,47 @@
 //! integration tests).
 
 pub mod hadamard;
+// The one sanctioned home for `unsafe` in this crate: the explicit
+// SIMD backends. `quamba_audit` (and `tests/audit.rs`) enforce that
+// this allow — and the crate-level `#![deny(unsafe_code)]` it opts out
+// of — stay exactly here.
+#[allow(unsafe_code)]
 pub mod kernels;
 pub mod qlinear;
 
-pub use kernels::{KernelBackend, Kernels};
+pub use kernels::{KernelBackend, Kernels, MAX_ABS_PROD_I8, MAX_SAFE_K};
+
+/// Narrow a quantizer code to its i8 storage type. [`quantize_one`]
+/// clamps to `[qmin, qmax] ⊆ [-128, 127]` for every nbits ≤ 8, so the
+/// conversion is lossless by construction; the `debug_assert!` checks
+/// that contract instead of letting a bare `as` truncate silently.
+#[inline(always)]
+pub fn code_to_i8(code: i32) -> i8 {
+    debug_assert!(
+        (i8::MIN as i32..=i8::MAX as i32).contains(&code),
+        "quantizer code {code} outside i8 — nbits > 8 reached an i8 storage path"
+    );
+    code as i8 // audit:allow(cast) — range proven by the assert above
+}
+
+/// Dequantize one i8 code: exact `i8 → f32` widening (every i8 is
+/// representable) followed by a single IEEE multiply — the same op
+/// sequence as the SIMD `dequant_i8` lanes, so scalar call sites stay
+/// bit-identical to the kernels.
+#[inline(always)]
+pub fn dq_i8(code: i8, s: f32) -> f32 {
+    f32::from(code) * s
+}
+
+/// Dequantize an i32 accumulator (or wide quantizer code) at scale `s`.
+/// The `i32 → f32` conversion is exact for |v| ≤ 2²⁴ and correctly
+/// rounded (≤ 0.5 ulp) beyond; [`MAX_SAFE_K`] bounds every accumulator
+/// below 2³¹, so the conversion is always well-defined. This is the
+/// documented home of the one deliberate i32→f32 `as` in quant/ssm.
+#[inline(always)]
+pub fn dq_i32(v: i32, s: f32) -> f32 {
+    v as f32 * s // audit:allow(cast) — rounding contract documented above
+}
 
 /// Largest representable magnitude at bit-width `n` (signed symmetric).
 pub fn qmax(nbits: u32) -> f32 {
@@ -33,7 +70,7 @@ pub fn quantize_one(x: f32, s: f32, nbits: u32) -> i32 {
 /// Quantize a slice; returns i8 codes (nbits ≤ 8).
 pub fn quantize_sym(xs: &[f32], s: f32, nbits: u32) -> Vec<i8> {
     debug_assert!(nbits <= 8);
-    xs.iter().map(|&x| quantize_one(x, s, nbits) as i8).collect()
+    xs.iter().map(|&x| code_to_i8(quantize_one(x, s, nbits))).collect()
 }
 
 /// Quantize a slice into a caller-owned buffer (cleared + refilled).
@@ -42,17 +79,17 @@ pub fn quantize_sym(xs: &[f32], s: f32, nbits: u32) -> Vec<i8> {
 pub fn quantize_sym_into(xs: &[f32], s: f32, nbits: u32, out: &mut Vec<i8>) {
     debug_assert!(nbits <= 8);
     out.clear();
-    out.extend(xs.iter().map(|&x| quantize_one(x, s, nbits) as i8));
+    out.extend(xs.iter().map(|&x| code_to_i8(quantize_one(x, s, nbits))));
 }
 
 pub fn dequantize_sym(q: &[i8], s: f32) -> Vec<f32> {
-    q.iter().map(|&v| v as f32 * s).collect()
+    q.iter().map(|&v| dq_i8(v, s)).collect()
 }
 
 /// Fake-quant round trip (quantize-dequantize) in place.
 pub fn fake_quant_sym(xs: &mut [f32], s: f32, nbits: u32) {
     for x in xs.iter_mut() {
-        *x = quantize_one(*x, s, nbits) as f32 * s;
+        *x = dq_i32(quantize_one(*x, s, nbits), s);
     }
 }
 
@@ -223,7 +260,7 @@ pub fn fake_quant_fp8(xs: &mut [f32], exp_bits: i32, man_bits: i32) {
 pub fn mse_of_quant(xs: &[f32], s: f32, nbits: u32) -> f64 {
     let mut acc = 0.0f64;
     for &x in xs {
-        let xq = quantize_one(x, s, nbits) as f32 * s;
+        let xq = dq_i32(quantize_one(x, s, nbits), s);
         let d = (x - xq) as f64;
         acc += d * d;
     }

@@ -110,6 +110,15 @@ pub fn matmul_i8_blocked_with(
     let (k, n) = (w.k, w.n);
     assert_eq!(x_q.len(), m * k);
     assert_eq!(out.len(), m * n);
+    // accumulator-overflow guard: a length-K dot product of worst-case
+    // i8 values sums K · 2¹⁴; beyond MAX_SAFE_K it can wrap the i32
+    // accumulator silently (see the const proof in quant::kernels)
+    debug_assert!(
+        k <= quant::MAX_SAFE_K,
+        "GEMM K = {k} exceeds MAX_SAFE_K = {}: a worst-case i8·i8 dot product \
+         of this length overflows the i32 accumulator",
+        quant::MAX_SAFE_K
+    );
     let nb = GEMM_NB;
     let nblk = n.div_ceil(nb);
     let mut tile = [0i32; GEMM_MR * GEMM_NB];
@@ -196,7 +205,7 @@ impl QLinear {
         matmul_i8_blocked_with(kers, x_q, &self.packed, m, acc);
         let s = s_x * self.s_w;
         for (o, &a) in out.iter_mut().zip(acc.iter()) {
-            *o = a as f32 * s;
+            *o = quant::dq_i32(a, s);
         }
         if let Some(b) = &self.bias {
             for row in out.chunks_exact_mut(self.n) {
@@ -295,6 +304,39 @@ mod tests {
                 assert_eq!(want, got, "{} backend, shape ({m},{k},{n})", backend.label());
             }
         }
+    }
+
+    #[test]
+    fn gemm_exact_at_proven_k_bound() {
+        // worst-case dot product at K = MAX_SAFE_K: every term is
+        // (-128)·(-128) = 2¹⁴, so the i32 accumulator lands at
+        // 131071 · 16384 = 2_147_467_264, a hair under i32::MAX — the
+        // exact sum the const proof in quant::kernels promises fits.
+        let k = quant::MAX_SAFE_K;
+        let x_q = vec![-128i8; k];
+        let w_q = vec![-128i8; k]; // K×1 matrix
+        let packed = PackedWeightI8::pack(&w_q, k, 1);
+        let want = (k as i64 * quant::MAX_ABS_PROD_I8) as i32;
+        assert_eq!(want, 2_147_467_264);
+        for backend in Kernels::available() {
+            let mut out = vec![0i32; 1];
+            matmul_i8_blocked_with(Kernels::for_backend(backend), &x_q, &packed, 1, &mut out);
+            assert_eq!(out[0], want, "{} backend wrapped at the K bound", backend.label());
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "MAX_SAFE_K")]
+    fn gemm_rejects_k_one_past_bound() {
+        // one past the proven bound must trip the debug guard before
+        // the kernel gets a chance to wrap silently
+        let k = quant::MAX_SAFE_K + 1;
+        let x_q = vec![-128i8; k];
+        let w_q = vec![-128i8; k];
+        let packed = PackedWeightI8::pack(&w_q, k, 1);
+        let mut out = vec![0i32; 1];
+        matmul_i8_blocked_with(Kernels::scalar(), &x_q, &packed, 1, &mut out);
     }
 
     #[test]

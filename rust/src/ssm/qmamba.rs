@@ -156,6 +156,15 @@ pub fn fused_conv_silu_i8_with(
     assert_eq!(out.len(), tl * di);
     assert_eq!(w_q.len(), w * di);
     assert_eq!(hist.len(), (w - 1) * di);
+    // accumulator-overflow guard: each output element sums one i8·i8
+    // product per tap into the same i32 lane, so the tap count plays
+    // the GEMM's K role (see the const proof in quant::kernels)
+    debug_assert!(
+        w <= quant::MAX_SAFE_K,
+        "conv taps w = {w} exceed MAX_SAFE_K = {}: a worst-case per-channel \
+         tap sum overflows the i32 accumulator",
+        quant::MAX_SAFE_K
+    );
     let hw = w - 1;
     let mut acc = [0i32; CONV_CHUNK];
     for ti in 0..tl {
@@ -177,7 +186,7 @@ pub fn fused_conv_silu_i8_with(
             }
             for (ci, &av) in a.iter().enumerate() {
                 let ch = c0 + ci;
-                out[ti * di + ch] = silu(av as f32 * s + bias[ch]) * gx[ch];
+                out[ti * di + ch] = silu(quant::dq_i32(av, s) + bias[ch]) * gx[ch];
             }
             c0 += cl;
         }
@@ -842,6 +851,48 @@ mod tests {
         for (a, b) in want.iter().zip(&got) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn fused_conv_exact_at_tap_bound() {
+        // worst-case tap sum at w = MAX_SAFE_K: every product is 2¹⁴,
+        // so the i32 accumulator lands exactly at 131071 · 16384 —
+        // check via the dequantized output (s chosen so the value maps
+        // back to the accumulator exactly at f32 precision ~2^31·2^-31)
+        let w = quant::MAX_SAFE_K;
+        let di = 1usize;
+        let x_q = vec![-128i8; di]; // tl = 1
+        let mut hist = vec![-128i8; (w - 1) * di];
+        let w_q = vec![-128i8; w * di];
+        let bias = vec![0.0f32];
+        let gx = vec![1.0f32];
+        // s = 2^-31 keeps silu's argument ~1.0 (well away from any
+        // saturation) while remaining a power of two: the dequant of
+        // the exact accumulator is then itself exact in f32
+        let s = (2.0f32).powi(-31);
+        let mut out = vec![0.0f32; di];
+        fused_conv_silu_i8_with(
+            Kernels::scalar(), &x_q, &mut hist, &w_q, &bias, &gx, s, 1, di, w, &mut out,
+        );
+        let acc = (w as i64) * quant::MAX_ABS_PROD_I8; // 2_147_467_264
+        let want = silu(acc as f32 * s);
+        assert_eq!(out[0].to_bits(), want.to_bits());
+        assert!(out[0] > 0.7, "accumulator wrapped: silu output {}", out[0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "MAX_SAFE_K")]
+    fn fused_conv_rejects_taps_past_bound() {
+        let w = quant::MAX_SAFE_K + 1;
+        let di = 1usize;
+        let x_q = vec![-128i8; di];
+        let mut hist = vec![-128i8; (w - 1) * di];
+        let w_q = vec![-128i8; w * di];
+        let mut out = vec![0.0f32; di];
+        fused_conv_silu_i8_with(
+            Kernels::scalar(), &x_q, &mut hist, &w_q, &[0.0], &[1.0], 0.01, 1, di, w, &mut out,
+        );
     }
 
     #[test]

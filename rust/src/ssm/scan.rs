@@ -11,7 +11,7 @@
 //! The f32 recurrence itself stays in fixed scalar order so every
 //! backend produces bit-identical states and outputs.
 
-use crate::quant::Kernels;
+use crate::quant::{dq_i8, Kernels};
 
 /// Dimensions + parameters of one scan invocation (single sequence).
 /// Layout: time-major slices over `d_inner` channels and `n` states.
@@ -194,6 +194,17 @@ pub fn selective_scan_q_into_with(
     assert_eq!(d_q.len(), di, "D_q must be d_inner");
     assert_eq!(h.len(), di * n, "h must be d_inner × n_state");
     assert_eq!(y.len(), t_len * di, "y must match x_q (T × d_inner)");
+    // Accumulator-headroom guard: today's recurrence is f32 (no i32
+    // accumulator to wrap), but the planned low-bit integer scan will
+    // fold one i8·i8 product per state into i32 — hold n_state to the
+    // same proven bound as the GEMM/conv K dims now, so every int8
+    // kernel entry point shares one shape contract (quamba_audit
+    // cross-checks MambaTier/bench shapes against the same constant).
+    debug_assert!(
+        n <= crate::quant::MAX_SAFE_K,
+        "n_state = {n} exceeds MAX_SAFE_K = {}",
+        crate::quant::MAX_SAFE_K
+    );
     if n <= SCAN_N_MAX {
         // fast path: per-step kernel dequant of the B/C code rows into
         // stack buffers (zero heap traffic), shared by all di channels
@@ -203,19 +214,19 @@ pub fn selective_scan_q_into_with(
             kers.dequant_i8(&b_q[t * n..(t + 1) * n], s_b, &mut bf[..n]);
             kers.dequant_i8(&c_q[t * n..(t + 1) * n], s_c, &mut cf[..n]);
             for ch in 0..di {
-                let x = x_q[t * di + ch] as f32 * s_x;
+                let x = dq_i8(x_q[t * di + ch], s_x);
                 let dtv = dt[t * di + ch];
                 let dtx = dtv * x;
                 let hrow = &mut h[ch * n..(ch + 1) * n];
                 let arow = &a_q[ch * n..(ch + 1) * n];
                 let mut acc = 0.0f32;
                 for s in 0..n {
-                    let a = arow[s] as f32 * s_a;
+                    let a = dq_i8(arow[s], s_a);
                     let da = (dtv * a).exp();
                     hrow[s] = da * hrow[s] + dtx * bf[s];
                     acc += hrow[s] * cf[s];
                 }
-                y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
+                y[t * di + ch] = acc + dq_i8(d_q[ch], s_d) * x;
             }
         }
     } else {
@@ -223,21 +234,21 @@ pub fn selective_scan_q_into_with(
         // same op order — bit-identical to the fast path)
         for t in 0..t_len {
             for ch in 0..di {
-                let x = x_q[t * di + ch] as f32 * s_x;
+                let x = dq_i8(x_q[t * di + ch], s_x);
                 let dtv = dt[t * di + ch];
                 let dtx = dtv * x;
                 let hrow = &mut h[ch * n..(ch + 1) * n];
                 let arow = &a_q[ch * n..(ch + 1) * n];
                 let mut acc = 0.0f32;
                 for s in 0..n {
-                    let a = arow[s] as f32 * s_a;
-                    let bq = b_q[t * n + s] as f32 * s_b;
-                    let cq = c_q[t * n + s] as f32 * s_c;
+                    let a = dq_i8(arow[s], s_a);
+                    let bq = dq_i8(b_q[t * n + s], s_b);
+                    let cq = dq_i8(c_q[t * n + s], s_c);
                     let da = (dtv * a).exp();
                     hrow[s] = da * hrow[s] + dtx * bq;
                     acc += hrow[s] * cq;
                 }
-                y[t * di + ch] = acc + (d_q[ch] as f32 * s_d) * x;
+                y[t * di + ch] = acc + dq_i8(d_q[ch], s_d) * x;
             }
         }
     }
@@ -406,6 +417,29 @@ mod tests {
         let _ = selective_scan_q(
             4, 4, &x_q[..x_q.len() - 1], 0.1, &dt, &a_q, 0.02, &b_q, 0.1, &c_q, 0.1, &d_q, 0.5,
             &mut h,
+        );
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "MAX_SAFE_K")]
+    fn quantized_scan_rejects_n_state_past_bound() {
+        // the shared int8 shape contract: n_state past the proven
+        // accumulator bound trips the debug guard (see the guard's
+        // rationale in selective_scan_q_into_with)
+        let n = crate::quant::MAX_SAFE_K + 1;
+        let (di, t) = (1usize, 1usize);
+        let x_q = vec![1i8; t * di];
+        let dt = vec![0.1f32; t * di];
+        let a_q = vec![-50i8; di * n];
+        let b_q = vec![2i8; t * n];
+        let c_q = vec![3i8; t * n];
+        let d_q = vec![1i8; di];
+        let mut h = vec![0.0f32; di * n];
+        let mut y = vec![0.0f32; t * di];
+        selective_scan_q_into_with(
+            Kernels::scalar(), di, n, &x_q, 0.1, &dt, &a_q, 0.02, &b_q, 0.1, &c_q, 0.1, &d_q,
+            0.5, &mut h, &mut y,
         );
     }
 

@@ -1,0 +1,255 @@
+//! A loom-style exhaustive interleaving explorer for the threaded
+//! serving core (std-only — the offline vendor set has no `loom`).
+//!
+//! A [`Model`] describes a small concurrent algorithm as N logical
+//! threads, each a fixed sequence of *atomic* steps over one shared
+//! [`Model::State`]. [`explore`] then runs **every** schedule: at each
+//! point it branches on all enabled threads (cloning the state), so an
+//! invariant that can be broken by *some* interleaving of the modeled
+//! steps is broken deterministically, with the offending schedule in
+//! the panic message — no stress loops, no flaky 1-in-10⁶ repros.
+//!
+//! This checks the *algorithm* (orderings, gating, exactly-once
+//! effects), not the memory model: steps here are sequentially
+//! consistent, so it complements — never replaces — the TSan job in
+//! CI, which watches the real `std::thread` code for data races the
+//! model abstracts away. `tests/loom_model.rs` models the lane-split
+//! decode path, the EngineCore submit→admit→decode→harvest handoff,
+//! and prefix-cache snapshot consistency, each alongside a
+//! deliberately broken variant proving the explorer catches the bug
+//! class.
+
+/// A concurrent algorithm modeled as fixed per-thread step sequences
+/// over a cloneable shared state.
+pub trait Model {
+    /// Shared state; cloned at every branch point of the exploration.
+    type State: Clone;
+
+    /// Initial shared state.
+    fn init(&self) -> Self::State;
+
+    /// Number of atomic steps each logical thread executes.
+    fn thread_steps(&self) -> Vec<usize>;
+
+    /// May thread `t` execute its `step`-th step now? Gating on the
+    /// state models blocking (a worker waiting on a channel recv is
+    /// "not enabled" until the message is there).
+    fn enabled(&self, _st: &Self::State, _t: usize, _step: usize) -> bool {
+        true
+    }
+
+    /// Execute thread `t`'s `step`-th step. Must be deterministic.
+    fn step(&self, st: &mut Self::State, t: usize, step: usize);
+
+    /// Invariant checked after every step of every schedule.
+    fn check_step(&self, _st: &Self::State) {}
+
+    /// Invariant checked when every thread has run to completion.
+    fn check_final(&self, st: &Self::State);
+
+    /// Called when no thread is enabled but some still have steps
+    /// left. Return `true` if this quiescence is legitimate (e.g. an
+    /// engine with spare ticks and an empty mailbox); the explorer
+    /// then treats the schedule as complete and calls nothing further.
+    /// Default `false` = this is a deadlock, panic with the schedule.
+    fn quiescent_ok(&self, _st: &Self::State, _done: &[usize]) -> bool {
+        false
+    }
+}
+
+/// Exploration statistics returned by [`explore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Explored {
+    /// Complete schedules executed (including legitimate quiescences).
+    pub executions: u64,
+    /// Total steps executed across all schedules.
+    pub steps: u64,
+}
+
+/// Hard budget on total executed steps — an exhaustive explorer on an
+/// oversized model should fail loudly, not hang CI.
+const STEP_BUDGET: u64 = 5_000_000;
+
+/// Exhaustively run every interleaving of `m`'s threads. Panics (with
+/// the schedule, as a list of thread ids in execution order) on a
+/// deadlock, on budget exhaustion, or whenever a `check_*` panics.
+pub fn explore<M: Model>(m: &M) -> Explored {
+    let steps = m.thread_steps();
+    let mut stats = Explored { executions: 0, steps: 0 };
+    let mut sched: Vec<usize> = Vec::new();
+    dfs(m, m.init(), &steps, &mut vec![0; steps.len()], &mut sched, &mut stats);
+    stats
+}
+
+fn dfs<M: Model>(
+    m: &M,
+    st: M::State,
+    steps: &[usize],
+    done: &mut Vec<usize>,
+    sched: &mut Vec<usize>,
+    stats: &mut Explored,
+) {
+    let mut ran_any = false;
+    for t in 0..steps.len() {
+        if done[t] >= steps[t] || !m.enabled(&st, t, done[t]) {
+            continue;
+        }
+        ran_any = true;
+        stats.steps += 1;
+        assert!(
+            stats.steps <= STEP_BUDGET,
+            "interleaving model exceeds the {STEP_BUDGET}-step exploration budget \
+             (schedule prefix: {sched:?}) — shrink the model"
+        );
+        let mut next = st.clone();
+        m.step(&mut next, t, done[t]);
+        m.check_step(&next);
+        done[t] += 1;
+        sched.push(t);
+        dfs(m, next, steps, done, sched, stats);
+        sched.pop();
+        done[t] -= 1;
+    }
+    if ran_any {
+        return;
+    }
+    if done.iter().zip(steps).all(|(d, s)| d >= s) {
+        m.check_final(&st);
+        stats.executions += 1;
+    } else if m.quiescent_ok(&st, done) {
+        stats.executions += 1;
+    } else {
+        panic!(
+            "deadlock: no thread enabled with steps remaining \
+             (progress {done:?} of {steps:?}, schedule {sched:?})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Two threads, two independent atomic increments each.
+    struct Independent;
+    impl Model for Independent {
+        type State = [u32; 2];
+        fn init(&self) -> Self::State {
+            [0, 0]
+        }
+        fn thread_steps(&self) -> Vec<usize> {
+            vec![2, 2]
+        }
+        fn step(&self, st: &mut Self::State, t: usize, _step: usize) {
+            st[t] += 1;
+        }
+        fn check_final(&self, st: &Self::State) {
+            assert_eq!(*st, [2, 2]);
+        }
+    }
+
+    #[test]
+    fn counts_all_interleavings() {
+        // 2 threads × 2 steps: C(4,2) = 6 distinct schedules
+        let ex = explore(&Independent);
+        assert_eq!(ex.executions, 6);
+        assert!(ex.steps > 6);
+    }
+
+    /// Classic torn read-modify-write: each thread loads the shared
+    /// counter into a register step, then stores register+1.
+    struct RacyCounter;
+    #[derive(Clone, Default)]
+    struct RacyState {
+        shared: u32,
+        reg: [u32; 2],
+    }
+    impl Model for RacyCounter {
+        type State = RacyState;
+        fn init(&self) -> Self::State {
+            RacyState::default()
+        }
+        fn thread_steps(&self) -> Vec<usize> {
+            vec![2, 2]
+        }
+        fn step(&self, st: &mut Self::State, t: usize, step: usize) {
+            match step {
+                0 => st.reg[t] = st.shared,
+                _ => st.shared = st.reg[t] + 1,
+            }
+        }
+        fn check_final(&self, st: &Self::State) {
+            assert_eq!(st.shared, 2, "lost update");
+        }
+    }
+
+    #[test]
+    fn catches_lost_update_deterministically() {
+        let err = catch_unwind(AssertUnwindSafe(|| explore(&RacyCounter)))
+            .expect_err("the unsynchronized counter must lose an update in some schedule");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lost update"), "unexpected panic: {msg}");
+    }
+
+    /// Thread 1's only step is gated on thread 0 finishing; thread 0's
+    /// second step is gated on thread 1 finishing — a circular wait.
+    struct Circular;
+    impl Model for Circular {
+        type State = [usize; 2]; // steps completed per thread
+        fn init(&self) -> Self::State {
+            [0, 0]
+        }
+        fn thread_steps(&self) -> Vec<usize> {
+            vec![2, 1]
+        }
+        fn enabled(&self, st: &Self::State, t: usize, step: usize) -> bool {
+            match (t, step) {
+                (0, 1) => st[1] == 1, // t0's 2nd step needs t1 done
+                (1, 0) => st[0] == 2, // t1's step needs t0 done
+                _ => true,
+            }
+        }
+        fn step(&self, st: &mut Self::State, t: usize, _step: usize) {
+            st[t] += 1;
+        }
+        fn check_final(&self, _st: &Self::State) {}
+    }
+
+    #[test]
+    fn reports_deadlock_with_schedule() {
+        let err = catch_unwind(AssertUnwindSafe(|| explore(&Circular)))
+            .expect_err("circular wait must deadlock");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected panic: {msg}");
+        assert!(msg.contains("schedule"), "schedule trace missing: {msg}");
+    }
+
+    /// Same circular model, but the model declares the stuck point a
+    /// legitimate quiescence — explore() then completes normally.
+    struct CircularQuiesce;
+    impl Model for CircularQuiesce {
+        type State = [usize; 2];
+        fn init(&self) -> Self::State {
+            [0, 0]
+        }
+        fn thread_steps(&self) -> Vec<usize> {
+            vec![2, 1]
+        }
+        fn enabled(&self, st: &Self::State, t: usize, step: usize) -> bool {
+            Circular.enabled(st, t, step)
+        }
+        fn step(&self, st: &mut Self::State, t: usize, _step: usize) {
+            st[t] += 1;
+        }
+        fn check_final(&self, _st: &Self::State) {}
+        fn quiescent_ok(&self, _st: &Self::State, done: &[usize]) -> bool {
+            done == [1, 0] // only the known benign stuck point
+        }
+    }
+
+    #[test]
+    fn quiescence_hook_accepts_benign_stalls() {
+        assert_eq!(explore(&CircularQuiesce).executions, 1);
+    }
+}

@@ -3,6 +3,7 @@
 //! is deliberately small, fully tested, and used across the crate.
 
 pub mod cli;
+pub mod interleave;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,318 @@
+//! Exhaustive interleaving models of the threaded serving core
+//! (driven by `quamba::util::interleave` — see its module docs for
+//! what this does and does not prove; the CI TSan job covers the
+//! memory-model side on the real `std::thread` code).
+//!
+//! Three models, each paired with a deliberately broken variant that
+//! the explorer must catch — proving the model actually constrains
+//! the property, not just happens to pass:
+//!
+//! * **A — lane-split decode** (`ssm/qmamba.rs::par_lane_chunks`):
+//!   workers sweep disjoint lane chunks, the main thread commits only
+//!   after all workers finish; result must be bit-identical to the
+//!   sequential sweep and each lane written exactly once. Broken
+//!   variant: overlapping chunk bounds.
+//! * **B — engine mailbox** (`coordinator/engine.rs`): clients submit,
+//!   the engine tick runs admit → decode → harvest; every submitted id
+//!   is harvested exactly once, whatever the submit/tick interleaving.
+//!   Broken variant: harvest runs before decode inside a tick, so a
+//!   late admit is never decoded.
+//! * **C — snapshot consistency** (`coordinator/state.rs::snapshot`):
+//!   a decode step writes its conv window and ssm state as two
+//!   sub-steps; snapshots are only legal on the even boundary. Broken
+//!   variant: snapshot enabled mid-step captures a torn state.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use quamba::util::interleave::{explore, Model};
+
+fn panic_msg(err: Box<dyn std::any::Any + Send>) -> String {
+    err.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+// ==== model A: lane-split decode ====================================
+
+const LANES: usize = 4;
+
+/// The per-lane "decode" the workers and the sequential reference both
+/// apply — any injective-enough function works; the check is
+/// bit-identity, not numerics.
+fn lane_decode(lane: usize, v: i32) -> i32 {
+    v * 31 + lane as i32 + 1
+}
+
+#[derive(Clone)]
+struct LaneState {
+    lanes: [i32; LANES],
+    writes: [u32; LANES],
+    worker_done: [bool; 2],
+    committed: bool,
+}
+
+/// Two workers over chunk bounds + a main commit thread gated on both.
+struct LaneSplit {
+    /// half-open chunk [start, end) per worker
+    chunks: [(usize, usize); 2],
+}
+
+impl Model for LaneSplit {
+    type State = LaneState;
+
+    fn init(&self) -> LaneState {
+        LaneState {
+            lanes: [10, 20, 30, 40],
+            writes: [0; LANES],
+            worker_done: [false; 2],
+            committed: false,
+        }
+    }
+
+    /// threads 0,1 = workers (one step: sweep own chunk); thread 2 =
+    /// main (one step: commit)
+    fn thread_steps(&self) -> Vec<usize> {
+        vec![1, 1, 1]
+    }
+
+    fn enabled(&self, st: &LaneState, t: usize, _step: usize) -> bool {
+        // main blocks on the scoped-join: both workers done
+        t < 2 || (st.worker_done[0] && st.worker_done[1])
+    }
+
+    fn step(&self, st: &mut LaneState, t: usize, _step: usize) {
+        if t < 2 {
+            let (lo, hi) = self.chunks[t];
+            for lane in lo..hi {
+                st.lanes[lane] = lane_decode(lane, st.lanes[lane]);
+                st.writes[lane] += 1;
+            }
+            st.worker_done[t] = true;
+        } else {
+            st.committed = true;
+        }
+    }
+
+    fn check_final(&self, st: &LaneState) {
+        assert!(st.committed);
+        // bit-identity to the sequential sweep
+        let mut want = [10, 20, 30, 40];
+        for (lane, w) in want.iter_mut().enumerate() {
+            *w = lane_decode(lane, *w);
+        }
+        assert_eq!(st.lanes, want, "lane-split result differs from sequential sweep");
+        assert_eq!(st.writes, [1; LANES], "each lane must be written exactly once");
+    }
+}
+
+#[test]
+fn lane_split_decode_is_bit_identical_under_all_schedules() {
+    let ex = explore(&LaneSplit { chunks: [(0, 2), (2, 4)] });
+    // workers in either order, commit always last: 2 schedules
+    assert_eq!(ex.executions, 2);
+}
+
+#[test]
+fn overlapping_lane_chunks_are_caught() {
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        explore(&LaneSplit { chunks: [(0, 3), (1, 4)] })
+    }))
+    .expect_err("overlapping chunks double-write lanes 1..3");
+    let msg = panic_msg(err);
+    assert!(msg.contains("exactly once") || msg.contains("sequential sweep"), "got: {msg}");
+}
+
+// ==== model B: engine mailbox =======================================
+
+const CLIENTS: usize = 2;
+
+#[derive(Clone, Default)]
+struct EngineState {
+    queue: Vec<usize>,   // submitted, not yet admitted
+    active: Vec<usize>,  // admitted, not yet decoded
+    outputs: Vec<usize>, // decoded, not yet harvested
+    harvested: Vec<usize>,
+}
+
+/// Clients are one-step submitters; the engine runs `ticks` ticks.
+/// `harvest_before_decode` seeds the broken variant.
+struct Mailbox {
+    ticks: usize,
+    harvest_before_decode: bool,
+}
+
+impl Mailbox {
+    fn all_harvested(st: &EngineState) -> bool {
+        st.harvested.len() == CLIENTS && st.queue.is_empty() && st.active.is_empty() && st.outputs.is_empty()
+    }
+}
+
+impl Model for Mailbox {
+    type State = EngineState;
+
+    fn init(&self) -> EngineState {
+        EngineState::default()
+    }
+
+    /// threads 0..CLIENTS = clients (one submit each); last = engine
+    fn thread_steps(&self) -> Vec<usize> {
+        let mut v = vec![1; CLIENTS];
+        v.push(self.ticks);
+        v
+    }
+
+    fn enabled(&self, st: &EngineState, t: usize, _step: usize) -> bool {
+        // the engine's recv blocks until work is pending — this gate
+        // is what makes "tick before any submit" unschedulable, like
+        // the real channel recv
+        t < CLIENTS
+            || !(st.queue.is_empty() && st.active.is_empty() && st.outputs.is_empty())
+    }
+
+    fn step(&self, st: &mut EngineState, t: usize, _step: usize) {
+        if t < CLIENTS {
+            st.queue.push(t);
+            return;
+        }
+        if self.harvest_before_decode {
+            // BROKEN: harvest precedes decode, so work admitted this
+            // tick reaches `outputs` only on a *later* tick — the last
+            // tick strands it there
+            st.harvested.append(&mut st.outputs);
+            st.active.append(&mut st.queue);
+            st.outputs.append(&mut st.active);
+        } else {
+            // admit → decode → harvest, the real engine's tick order
+            st.active.append(&mut st.queue);
+            st.outputs.append(&mut st.active);
+            st.harvested.append(&mut st.outputs);
+        }
+    }
+
+    fn check_step(&self, st: &EngineState) {
+        let mut seen = [false; CLIENTS];
+        for &id in &st.harvested {
+            assert!(!seen[id], "request {id} harvested twice");
+            seen[id] = true;
+        }
+    }
+
+    fn check_final(&self, st: &EngineState) {
+        assert!(Self::all_harvested(st), "request stranded: {:?}", st.harvested);
+    }
+
+    fn quiescent_ok(&self, st: &EngineState, done: &[usize]) -> bool {
+        // engine with spare ticks and an empty mailbox is legitimate
+        // quiescence — but only once every submit has been harvested
+        let clients_done = done[..CLIENTS].iter().all(|&d| d == 1);
+        if !clients_done {
+            return false;
+        }
+        assert!(
+            Self::all_harvested(st),
+            "engine went quiescent with work stranded: harvested {:?}, queue {:?}, \
+             active {:?}, outputs {:?}",
+            st.harvested,
+            st.queue,
+            st.active,
+            st.outputs
+        );
+        true
+    }
+}
+
+#[test]
+fn every_submit_is_harvested_exactly_once() {
+    let ex = explore(&Mailbox { ticks: CLIENTS, harvest_before_decode: false });
+    assert!(ex.executions > 1, "gating collapsed the schedule space");
+}
+
+#[test]
+fn harvest_before_decode_strands_requests() {
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        explore(&Mailbox { ticks: CLIENTS, harvest_before_decode: true })
+    }))
+    .expect_err("mis-ordered tick must strand a request in some schedule");
+    let msg = panic_msg(err);
+    assert!(msg.contains("stranded") || msg.contains("deadlock"), "got: {msg}");
+}
+
+// ==== model C: snapshot consistency =================================
+
+#[derive(Clone, Default)]
+struct SnapState {
+    conv: u32, // conv-window writes completed
+    ssm: u32,  // ssm-state writes completed
+    snapshots: Vec<(u32, u32)>,
+}
+
+/// One decode thread advancing `tokens` tokens, each as two sub-steps
+/// (write conv window, then ssm state); one snapshot thread taking
+/// `snaps` snapshots. `allow_torn` seeds the broken variant where the
+/// snapshot does not wait for the token boundary.
+struct Snapshotter {
+    tokens: usize,
+    snaps: usize,
+    allow_torn: bool,
+}
+
+impl Model for Snapshotter {
+    type State = SnapState;
+
+    fn init(&self) -> SnapState {
+        SnapState::default()
+    }
+
+    /// thread 0 = decode (2 sub-steps per token); thread 1 = snapshots
+    fn thread_steps(&self) -> Vec<usize> {
+        vec![2 * self.tokens, self.snaps]
+    }
+
+    fn enabled(&self, st: &SnapState, t: usize, _step: usize) -> bool {
+        // the real pool snapshots only between step_into calls — model
+        // that as "conv and ssm counts agree"; the broken variant
+        // drops the gate
+        t == 0 || self.allow_torn || st.conv == st.ssm
+    }
+
+    fn step(&self, st: &mut SnapState, t: usize, step: usize) {
+        if t == 0 {
+            if step % 2 == 0 {
+                st.conv += 1;
+            } else {
+                st.ssm += 1;
+            }
+        } else {
+            st.snapshots.push((st.conv, st.ssm));
+        }
+    }
+
+    fn check_step(&self, st: &SnapState) {
+        for &(c, s) in &st.snapshots {
+            assert_eq!(c, s, "torn snapshot: conv window at token {c}, ssm state at {s}");
+        }
+    }
+
+    fn check_final(&self, st: &SnapState) {
+        assert_eq!(st.conv, self.tokens as u32);
+        assert_eq!(st.ssm, self.tokens as u32);
+        assert_eq!(st.snapshots.len(), self.snaps);
+    }
+}
+
+#[test]
+fn snapshots_on_token_boundaries_are_never_torn() {
+    let ex = explore(&Snapshotter { tokens: 2, snaps: 2, allow_torn: false });
+    assert!(ex.executions > 1);
+}
+
+#[test]
+fn unguarded_snapshot_captures_torn_state() {
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        explore(&Snapshotter { tokens: 2, snaps: 1, allow_torn: true })
+    }))
+    .expect_err("an ungated snapshot must land mid-token in some schedule");
+    let msg = panic_msg(err);
+    assert!(msg.contains("torn snapshot"), "got: {msg}");
+}
