@@ -11,7 +11,7 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
@@ -36,12 +36,22 @@
 //! are mid-decode; the run reports each configuration's **max
 //! observed inter-token gap** for the already-decoding requests,
 //! chunked vs unchunked side by side.
+//!
+//! `--fault-rate P` (native backend, with `--fault-seed S`, default 1)
+//! arms the deterministic fault-injection plan from
+//! `coordinator/faults.rs`: seeded decode/prefill panics, admission
+//! alloc failures, snapshot corruption and tick latency at rate P.
+//! Faulted requests fail alone with typed reasons; the end-of-run
+//! report (also under `--burst`) gains a `failures` line with the
+//! rejected/deadline/cancelled/failed counters and the shed rate —
+//! the live demo of `docs/ARCHITECTURE.md` §7.
 
 use anyhow::Result;
-use quamba::bench_support::{burst_itl_max, Workload};
+use quamba::bench_support::{burst_itl_max_report, Workload};
 use quamba::config::Manifest;
+use quamba::coordinator::faults::silence_injected_panics;
 use quamba::coordinator::server::ServerHandle;
-use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
+use quamba::coordinator::{EngineConfig, FaultPlan, NativeEngineConfig, SamplingParams};
 use quamba::data;
 use quamba::quant::{KernelBackend, Kernels};
 use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
@@ -80,7 +90,12 @@ fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64
         }
         rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
     }
-    let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    // count clean finishes only — shed/cancelled/failed requests are
+    // still answered (typed), and show up on the report's failures line
+    let done = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.finish.is_ok()).unwrap_or(false))
+        .count();
     let wall = t0.elapsed().as_secs_f64();
     let mut report = server.metrics_report();
     if let Some(c) = server.cache_stats() {
@@ -138,6 +153,25 @@ fn serve_xla(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
     Ok(())
 }
 
+/// `--fault-rate P` / `--fault-seed S` → a seeded [`FaultPlan`]
+/// (disabled at rate 0, the default). Arming it also installs the
+/// panic-hook filter so injected panics don't spray backtraces over
+/// the serving report — they surface as typed `Failed` responses and
+/// the report's `failures` line instead.
+fn fault_plan(args: &Args) -> FaultPlan {
+    let rate = args.get_f64("fault-rate", 0.0);
+    if rate <= 0.0 {
+        return FaultPlan::none();
+    }
+    let seed = args.get_usize("fault-seed", 1) as u64;
+    silence_injected_panics();
+    println!(
+        "fault injection: seed {seed}, rate {rate:.3} \
+         (deterministic per (site, request, step); failures are typed, survivors bit-identical)"
+    );
+    FaultPlan::seeded(seed, rate)
+}
+
 /// `--burst N`: the scenario the unified chunked-prefill scheduler
 /// exists for, measured directly — same workload, chunked vs
 /// unchunked, reporting max inter-token gap of the live decode lanes.
@@ -169,8 +203,10 @@ fn serve_burst(args: &Args, tier: &MambaTier) -> Result<()> {
         cache_bytes: args.get_mb("cache-mb", 0.0),
         snapshot_stride: args.get_usize("snapshot-stride", 64),
         max_tokens_per_tick: args.get_usize("max-tokens-per-tick", 0),
+        faults: fault_plan(args),
         ..Default::default()
     };
+    let faults_on = base_cfg.faults.enabled();
     println!(
         "burst scenario: {n_dec} decoding requests, then {burst_n}×{burst_len}-token prompts \
          arriving mid-decode (W8A8, tier {})",
@@ -186,9 +222,15 @@ fn serve_burst(args: &Args, tier: &MambaTier) -> Result<()> {
             (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
         let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
         let cfg = NativeEngineConfig { prefill_chunk: pc, ..base_cfg.clone() };
-        let gap =
-            burst_itl_max(Box::new(qmodel), cfg, n_dec, max_new, burst_n, burst_len, seed)?;
+        let (gap, report) =
+            burst_itl_max_report(Box::new(qmodel), cfg, n_dec, max_new, burst_n, burst_len, seed)?;
         println!("  {label:<20} max inter-token gap = {gap:.3} ms");
+        if faults_on {
+            // the failure counters + shed rate for this arm
+            for line in report.lines() {
+                println!("    {line}");
+            }
+        }
         gaps.push(gap);
     }
     println!(
@@ -270,6 +312,7 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
         "scheduler: prefill_chunk={prefill_chunk} max_tokens_per_tick={max_tokens_per_tick} \
          (0 = unchunked/unlimited; chunking moves latency, never tokens)"
     );
+    let faults = fault_plan(args);
     let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
     for (name, m) in backends {
@@ -286,6 +329,7 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
                 snapshot_stride,
                 prefill_chunk,
                 max_tokens_per_tick,
+                faults: faults.clone(),
                 ..Default::default()
             },
         )?;

@@ -34,6 +34,13 @@
 //!   kernels module; the sanctioned conversions are
 //!   `quant::{code_to_i8, dq_i8, dq_i32}` and sites marked
 //!   `// audit:allow(cast)` with a written rationale.
+//! * **failure-model discipline** ([`rules::scan_native_engine`]) —
+//!   the native serving engine (`coordinator/native.rs`) carries no
+//!   `.unwrap()` / `.expect()` in non-test code (failures must become
+//!   typed responses, not aborts), and `live.swap_remove` /
+//!   `pool.release` stay confined to `fn finish_live`, the single
+//!   documented slot-reclaim point every retirement path funnels
+//!   through (ISSUE 7).
 //!
 //! The scanner is a deliberate line-level pass (the offline vendor set
 //! has no `syn`): strings and comments are stripped per line, module
@@ -150,6 +157,9 @@ pub fn audit_repo(root: &Path) -> Result<Report, String> {
         }
         if let Some(fn_name) = rules::guarded_entry_point(&rel) {
             report.findings.extend(rules::check_guard_present(&rel, &text, fn_name));
+        }
+        if rel == rules::NATIVE_FILE {
+            report.findings.extend(rules::scan_native_engine(&rel, &text));
         }
         if rel == "ssm/qmamba.rs" {
             let (fs, n) = scales::audit_scales(&rel, &text);

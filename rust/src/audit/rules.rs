@@ -429,6 +429,92 @@ pub fn check_guard_present(rel: &str, text: &str, fn_name: &str) -> Vec<Finding>
     }
 }
 
+/// The native serving engine file the failure-model rules apply to.
+pub const NATIVE_FILE: &str = "coordinator/native.rs";
+
+/// ISSUE 7 failure-model rules for `coordinator/native.rs` (non-test
+/// code only — the scan stops at the first `#[cfg(test)]`, same
+/// convention as [`scan_unsafe_free`]):
+///
+/// * `engine-no-unwrap` — no `.unwrap(` / `.expect(` tokens: every
+///   admission / step / harvest path must degrade to a typed
+///   [`FinishReason`](crate::coordinator::request::FinishReason)
+///   response, never a process abort. (`unreachable!` with a written
+///   argument and `debug_assert!` remain acceptable.)
+/// * `slot-reclaim` — `live.swap_remove(` and `pool.release(` are
+///   confined to the body of `fn finish_live`, THE documented reclaim
+///   point, so every early-return and error path in the engine
+///   provably retires live requests — releasing exactly their own
+///   pool slot — through one place. A file without `fn finish_live`
+///   at all is a whole-file violation.
+pub fn scan_native_engine(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // anchor on the *definition* line (comment/string-stripped), not any
+    // raw occurrence — doc comments legitimately name `fn finish_live`
+    let mut reclaim_span = None;
+    let mut offset = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        match raw.find("fn finish_live") {
+            Some(col) if code_portion(raw).contains("fn finish_live") => {
+                let first = i + 1;
+                let body = body_after(text, offset + col);
+                reclaim_span = Some((first, first + body.matches('\n').count()));
+                break;
+            }
+            _ => {}
+        }
+        offset += raw.len() + 1;
+    }
+    if reclaim_span.is_none() {
+        out.push(Finding {
+            rule: "slot-reclaim",
+            file: rel.to_string(),
+            line: 0,
+            message: "`fn finish_live` (the documented slot-reclaim point) not found".to_string(),
+        });
+    }
+    for (i, raw) in text.lines().enumerate() {
+        let line = i + 1;
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = code_portion(raw);
+        for tok in [".unwrap(", ".expect("] {
+            if code.contains(tok) {
+                out.push(Finding {
+                    rule: "engine-no-unwrap",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{tok}..)` in engine code — return a typed failure instead \
+                         (FinishReason::Failed / Result), panics here bypass slot reclaim"
+                    ),
+                });
+            }
+        }
+        for tok in ["live.swap_remove(", "pool.release("] {
+            if code.contains(tok) {
+                let confined = match reclaim_span {
+                    Some((lo, hi)) => line >= lo && line <= hi,
+                    None => false,
+                };
+                if !confined {
+                    out.push(Finding {
+                        rule: "slot-reclaim",
+                        file: rel.to_string(),
+                        line,
+                        message: format!(
+                            "`{tok}..)` outside `fn finish_live` — all slot reclamation \
+                             must funnel through the single documented reclaim point"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 /// The brace-balanced body starting at the first `{` at/after `start`
 /// (string/comment-stripped brace counting).
 pub fn body_after(text: &str, start: usize) -> String {

@@ -183,6 +183,22 @@ pub fn burst_itl_max(
     burst_len: usize,
     seed: u64,
 ) -> anyhow::Result<f64> {
+    burst_itl_max_report(model, cfg, n_dec, max_new, burst_n, burst_len, seed).map(|(gap, _)| gap)
+}
+
+/// [`burst_itl_max`] plus the engine's end-of-run metrics report —
+/// under `--fault-seed`/`--fault-rate` (serve_batch) the report's
+/// `failures` line shows rejected/deadline/cancelled/failed counts and
+/// the shed rate for the burst run.
+pub fn burst_itl_max_report(
+    model: Box<dyn crate::ssm::StepModel + Send + Sync>,
+    cfg: crate::coordinator::NativeEngineConfig,
+    n_dec: usize,
+    max_new: usize,
+    burst_n: usize,
+    burst_len: usize,
+    seed: u64,
+) -> anyhow::Result<(f64, String)> {
     use crate::coordinator::{NativeEngine, Request, SamplingParams};
     // burst requests live above this id so the gap fold can filter
     // down to the initially-decoding lanes
@@ -220,11 +236,12 @@ pub fn burst_itl_max(
         done.extend(eng.step()?);
         tick += 1;
     }
-    Ok(done
+    let gap = done
         .iter()
         .filter(|resp| resp.id < BURST_ID_BASE)
         .map(|resp| resp.itl_max_ms())
-        .fold(f64::NAN, f64::max))
+        .fold(f64::NAN, f64::max);
+    Ok((gap, eng.metrics.report()))
 }
 
 /// Poisson-arrival request workload generator (serving benches).

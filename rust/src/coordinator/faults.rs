@@ -1,0 +1,320 @@
+//! Deterministic fault injection and the injectable engine clock.
+//!
+//! The failure model (ISSUE 7) is only trustworthy if its error paths
+//! are *exercised*, and they are only testable if the faults that
+//! trigger them are **deterministic**: a [`FaultPlan`] decides
+//! hit-or-miss as a pure hash of `(plan seed, site, request id, step)`
+//! — no shared RNG stream whose consumption order would couple fault
+//! placement to scheduler interleaving. That statelessness is
+//! load-bearing: when the engine retries a panicked round without the
+//! victim, every surviving lane re-rolls the *same* keys and gets the
+//! same answers, so a seeded chaos run is replayable tick-for-tick.
+//!
+//! The default plan ([`FaultPlan::none`]) injects nothing and is
+//! zero-cost on the hot path: every probability is 0.0 and the
+//! targeted list is empty, so each hook is a couple of float compares.
+//!
+//! [`Clock`] is the companion knob: deadlines are checked at tick
+//! boundaries against `Clock::Wall` (real time) or `Clock::Manual`
+//! (tick count × a fixed ms-per-tick), the latter making deadline
+//! expiry — and therefore whole chaos schedules — bit-reproducible.
+
+use std::any::Any;
+
+/// Engine time source for deadline checks. `Wall` anchors at engine
+/// construction; `Manual` is deterministic — `now = tick ×
+/// ms_per_tick + injected latency` — so deadline schedules in the
+/// chaos suite replay identically on every run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Clock {
+    Wall,
+    Manual { ms_per_tick: f64 },
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::Wall
+    }
+}
+
+/// Where in the tick anatomy a fault fires (see
+/// `docs/ARCHITECTURE.md` §7 for the mapping onto the scheduler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// panic inside a decode round, keyed by (request, tokens sampled)
+    Decode,
+    /// panic inside a prefill sub-round, keyed by (request, prompt pos)
+    Prefill,
+    /// admission-time state-pool allocation failure for a request
+    Alloc,
+    /// corrupt the snapshot slab before a prefix-cache insert
+    Snapshot,
+}
+
+/// One explicit injection: fire at exactly this (site, request, step)
+/// key, independent of the seeded rates. The chaos suite uses these
+/// for the "fails exactly one request" demonstrations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TargetedFault {
+    pub site: FaultSite,
+    pub req_id: u64,
+    pub step: u64,
+}
+
+/// Panic payload for injected faults: [`FaultPlan::check`] throws it
+/// via `panic_any` inside the engine's `catch_unwind` regions, and the
+/// catcher downcasts it to attribute the failure to exactly one
+/// request. A payload that is *not* an `InjectedFault` is a genuine
+/// model bug, and the catcher conservatively fails the whole round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub req_id: u64,
+    pub site: FaultSite,
+}
+
+/// A seeded, stateless schedule of injected failures.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// per-(request, step) probability of a decode-round panic
+    pub decode_panic: f64,
+    /// per-(request, chunk-start) probability of a prefill panic
+    pub prefill_panic: f64,
+    /// per-request probability that admission's slot allocation fails
+    pub alloc_fail: f64,
+    /// per-insert probability of corrupting the snapshot slab (the
+    /// engine's validation must catch it and drop the insert)
+    pub snapshot_corrupt: f64,
+    /// per-tick probability of `tick_latency_ms` of injected latency
+    pub tick_latency_p: f64,
+    /// injected latency magnitude (advances `Clock::Manual` time;
+    /// sleeps under `Clock::Wall`)
+    pub tick_latency_ms: f64,
+    /// explicit one-shot injections, checked before the seeded rates
+    pub targeted: Vec<TargetedFault>,
+}
+
+/// Splitmix-style stateless mixer: the decision for one key never
+/// depends on which other keys were rolled, or in what order.
+fn mix(seed: u64, kind: u64, a: u64, b: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(kind.rotate_left(16).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+        .wrapping_add(a.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(b.rotate_left(32).wrapping_mul(0xA076_1D64_78BD_642F));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform [0,1) from the top 53 bits of a mixed hash.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// No faults — the production default. All hooks short-circuit.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A uniform chaos schedule: every site fires with probability
+    /// `rate`, latency spikes of 3 ms at the same rate.
+    pub fn seeded(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            decode_panic: rate,
+            prefill_panic: rate,
+            alloc_fail: rate,
+            snapshot_corrupt: rate,
+            tick_latency_p: rate,
+            tick_latency_ms: 3.0,
+            targeted: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.decode_panic > 0.0
+            || self.prefill_panic > 0.0
+            || self.alloc_fail > 0.0
+            || self.snapshot_corrupt > 0.0
+            || self.tick_latency_p > 0.0
+            || !self.targeted.is_empty()
+    }
+
+    fn site_kind(site: FaultSite) -> u64 {
+        match site {
+            FaultSite::Decode => 1,
+            FaultSite::Prefill => 2,
+            FaultSite::Alloc => 3,
+            FaultSite::Snapshot => 4,
+        }
+    }
+
+    /// Pure decision: does the plan inject a fault at this key?
+    pub fn should_fail(&self, site: FaultSite, req_id: u64, step: u64) -> bool {
+        if self.targeted.iter().any(|t| t.site == site && t.req_id == req_id && t.step == step) {
+            return true;
+        }
+        let p = match site {
+            FaultSite::Decode => self.decode_panic,
+            FaultSite::Prefill => self.prefill_panic,
+            FaultSite::Alloc => self.alloc_fail,
+            FaultSite::Snapshot => self.snapshot_corrupt,
+        };
+        p > 0.0 && unit(mix(self.seed, Self::site_kind(site), req_id, step)) < p
+    }
+
+    /// Panic (with an attributable [`InjectedFault`] payload) when the
+    /// plan injects at this key. Called inside the engine's
+    /// `catch_unwind` regions only.
+    pub fn check(&self, site: FaultSite, req_id: u64, step: u64) {
+        if self.should_fail(site, req_id, step) {
+            std::panic::panic_any(InjectedFault { req_id, site });
+        }
+    }
+
+    /// Injected latency for this tick (0.0 = none this tick).
+    pub fn injected_latency_ms(&self, tick: u64) -> f64 {
+        if self.tick_latency_p > 0.0 && unit(mix(self.seed, 0xFA, tick, 0)) < self.tick_latency_p
+        {
+            self.tick_latency_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Human-readable panic payload: downcasts the standard `&str` /
+/// `String` payloads and [`InjectedFault`].
+pub fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(f) = p.downcast_ref::<InjectedFault>() {
+        return format!("injected fault: {:?} for request {}", f.site, f.req_id);
+    }
+    if let Some(s) = p.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    if let Some(s) = p.downcast_ref::<String>() {
+        return s.clone();
+    }
+    "panic with non-string payload".to_string()
+}
+
+/// Install a panic hook that swallows [`InjectedFault`] payloads (the
+/// chaos suite would otherwise spray hundreds of expected backtraces
+/// onto stderr) while delegating every genuine panic to the previous
+/// hook. Idempotent; safe to call from every chaos test.
+pub fn silence_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedFault>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_stateless() {
+        let p = FaultPlan::seeded(42, 0.2);
+        let a: Vec<bool> =
+            (0..64).map(|s| p.should_fail(FaultSite::Decode, 7, s)).collect();
+        // same plan, same keys, interleaved with unrelated rolls →
+        // identical decisions (statelessness is what makes retried
+        // rounds replayable)
+        let q = FaultPlan::seeded(42, 0.2);
+        let b: Vec<bool> = (0..64)
+            .map(|s| {
+                let _ = q.should_fail(FaultSite::Prefill, 99, s * 3);
+                q.should_fail(FaultSite::Decode, 7, s)
+            })
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_rate_never_fires_full_rate_always_fires() {
+        let none = FaultPlan::none();
+        let all = FaultPlan::seeded(1, 1.0);
+        for s in 0..256 {
+            assert!(!none.should_fail(FaultSite::Decode, s, s));
+            assert!(all.should_fail(FaultSite::Alloc, s, s));
+        }
+        assert!(!none.enabled());
+        assert!(all.enabled());
+        assert_eq!(none.injected_latency_ms(5), 0.0);
+        assert_eq!(all.injected_latency_ms(5), 3.0);
+    }
+
+    #[test]
+    fn seeded_rate_is_roughly_honored() {
+        let p = FaultPlan::seeded(3, 0.1);
+        let hits = (0..4000)
+            .filter(|&k| p.should_fail(FaultSite::Decode, k % 17, k / 17))
+            .count();
+        assert!(
+            (200..800).contains(&hits),
+            "rate 0.1 over 4000 keys fired {hits} times — mixer is biased"
+        );
+    }
+
+    #[test]
+    fn different_seeds_move_the_schedule() {
+        let a = FaultPlan::seeded(1, 0.1);
+        let b = FaultPlan::seeded(2, 0.1);
+        let da: Vec<bool> =
+            (0..512).map(|k| a.should_fail(FaultSite::Decode, k, 0)).collect();
+        let db: Vec<bool> =
+            (0..512).map(|k| b.should_fail(FaultSite::Decode, k, 0)).collect();
+        assert_ne!(da, db, "seed must move the fault schedule");
+    }
+
+    #[test]
+    fn targeted_fault_fires_exactly_at_its_key() {
+        let p = FaultPlan {
+            targeted: vec![TargetedFault { site: FaultSite::Decode, req_id: 3, step: 2 }],
+            ..FaultPlan::none()
+        };
+        assert!(p.enabled());
+        assert!(p.should_fail(FaultSite::Decode, 3, 2));
+        assert!(!p.should_fail(FaultSite::Decode, 3, 1));
+        assert!(!p.should_fail(FaultSite::Decode, 2, 2));
+        assert!(!p.should_fail(FaultSite::Prefill, 3, 2));
+    }
+
+    #[test]
+    fn check_panics_with_attributable_payload() {
+        let p = FaultPlan {
+            targeted: vec![TargetedFault { site: FaultSite::Prefill, req_id: 9, step: 0 }],
+            ..FaultPlan::none()
+        };
+        silence_injected_panics();
+        let err = std::panic::catch_unwind(|| p.check(FaultSite::Prefill, 9, 0))
+            .expect_err("targeted fault must panic");
+        let f = err.downcast_ref::<InjectedFault>().expect("payload must be InjectedFault");
+        assert_eq!(f.req_id, 9);
+        assert_eq!(f.site, FaultSite::Prefill);
+        assert!(panic_message(&*err).contains("request 9"));
+    }
+
+    #[test]
+    fn panic_message_downcasts_standard_payloads() {
+        let s: Box<dyn Any + Send> = Box::new("plain str");
+        assert_eq!(panic_message(&*s), "plain str");
+        let o: Box<dyn Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(&*o), "owned");
+        let x: Box<dyn Any + Send> = Box::new(17u32);
+        assert_eq!(panic_message(&*x), "panic with non-string payload");
+    }
+
+    #[test]
+    fn clock_default_is_wall() {
+        assert_eq!(Clock::default(), Clock::Wall);
+    }
+}

@@ -6,6 +6,7 @@
 use std::time::Instant;
 
 use crate::cache::CacheStats;
+use crate::coordinator::request::FinishReason;
 use crate::util::rng::Pcg32;
 use crate::util::stats::{LogHistogram, Summary};
 
@@ -41,6 +42,17 @@ pub struct Metrics {
     itl_rng: Pcg32,
     pub tokens_out: u64,
     pub requests_done: u64,
+    /// failure-model outcome counters (ISSUE 7): every submitted
+    /// request ends in exactly one of `requests_done` (natural finish)
+    /// or these — the chaos suite asserts that conservation
+    pub rejected: u64,
+    pub deadline_missed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    /// prefix-cache snapshot inserts dropped by validation (corrupt
+    /// slab) or a panicking cache — degradation the operator should
+    /// see, even though tokens are unaffected
+    pub snapshot_drops: u64,
     pub padded_lanes: u64,
     pub total_lanes: u64,
     /// last-synced prefix-cache counters (None until an engine with an
@@ -72,6 +84,11 @@ impl Metrics {
             itl_rng: Pcg32::new(0x17A7),
             tokens_out: 0,
             requests_done: 0,
+            rejected: 0,
+            deadline_missed: 0,
+            cancelled: 0,
+            failed: 0,
+            snapshot_drops: 0,
             padded_lanes: 0,
             total_lanes: 0,
             cache: None,
@@ -132,6 +149,34 @@ impl Metrics {
         self.requests_done += 1;
     }
 
+    /// Count a failure-model outcome. Natural finishes (`Length` /
+    /// `Eos`) go through [`Self::record_response`] instead; routing
+    /// one through here would double-book the request.
+    pub fn record_failure(&mut self, finish: FinishReason) {
+        match finish {
+            FinishReason::Rejected => self.rejected += 1,
+            FinishReason::DeadlineExceeded => self.deadline_missed += 1,
+            FinishReason::Cancelled => self.cancelled += 1,
+            _ => self.failed += 1,
+        }
+    }
+
+    /// Total requests that reached *any* terminal outcome.
+    pub fn total_outcomes(&self) -> u64 {
+        self.requests_done + self.rejected + self.deadline_missed + self.cancelled + self.failed
+    }
+
+    /// Fraction of outcomes shed by overload policy (admission
+    /// rejection + deadline expiry) — the load-shedding gauge.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.total_outcomes();
+        if total == 0 {
+            0.0
+        } else {
+            (self.rejected + self.deadline_missed) as f64 / total as f64
+        }
+    }
+
     pub fn record_round(&mut self, bucket: usize, live: usize) {
         self.total_lanes += bucket as u64;
         self.padded_lanes += (bucket - live) as u64;
@@ -187,6 +232,21 @@ impl Metrics {
             i.mean, i.p50, i.p95, i.max,
             l.mean, l.p50, l.p99,
         );
+        let fail_total = self.rejected + self.deadline_missed + self.cancelled + self.failed;
+        if fail_total + self.snapshot_drops > 0 {
+            // only when the failure model actually fired — steady-state
+            // reports stay unchanged
+            out.push_str(&format!(
+                "\nfailures rejected={} deadline={} cancelled={} failed={} \
+                 snapshot-drops={} shed-rate={:.1}%",
+                self.rejected,
+                self.deadline_missed,
+                self.cancelled,
+                self.failed,
+                self.snapshot_drops,
+                100.0 * self.shed_rate(),
+            ));
+        }
         if let Some(c) = &self.cache {
             out.push_str(&format!(
                 "\nprefix-cache  hits={} misses={} hit-rate={:.1}% entries={} \
@@ -248,6 +308,31 @@ mod tests {
         }
         assert_eq!(m.itl_summary().n, ITL_SAMPLE_CAP);
         assert_eq!(m.itl_ms.n, 2 * ITL_SAMPLE_CAP as u64);
+    }
+
+    #[test]
+    fn failure_counters_and_shed_rate() {
+        let mut m = Metrics::new();
+        // no failures → no failures line, shed rate 0
+        m.record_response(10.0, 1.0, 50.0, 4, &[1.0]);
+        assert!(!m.report().contains("failures"), "{}", m.report());
+        assert_eq!(m.shed_rate(), 0.0);
+        m.record_failure(FinishReason::Rejected);
+        m.record_failure(FinishReason::Rejected);
+        m.record_failure(FinishReason::DeadlineExceeded);
+        m.record_failure(FinishReason::Cancelled);
+        m.record_failure(FinishReason::Failed);
+        m.snapshot_drops += 1;
+        assert_eq!(m.total_outcomes(), 6);
+        // shed = (2 rejected + 1 deadline) / 6 outcomes
+        assert!((m.shed_rate() - 0.5).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("rejected=2"), "{r}");
+        assert!(r.contains("deadline=1"), "{r}");
+        assert!(r.contains("cancelled=1"), "{r}");
+        assert!(r.contains("failed=1"), "{r}");
+        assert!(r.contains("snapshot-drops=1"), "{r}");
+        assert!(r.contains("shed-rate=50.0%"), "{r}");
     }
 
     #[test]

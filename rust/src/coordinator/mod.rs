@@ -26,6 +26,10 @@
 //! * [`server`]   — a threaded front door (std::mpsc; tokio is not in
 //!                  the offline vendor set, and one executor thread is
 //!                  the right shape for one PJRT CPU device anyway)
+//! * [`faults`]   — deterministic fault injection for the chaos suite:
+//!                  seeded, stateless per-(site, request, step) panic /
+//!                  alloc-failure / snapshot-corruption / latency
+//!                  decisions behind a zero-cost disabled default
 //!
 //! Both engines admit requests through the prefix-sharing snapshot
 //! cache ([`crate::cache`]) when `cache_bytes > 0`: constant-size SSM
@@ -36,6 +40,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod engine_tr;
+pub mod faults;
 pub mod metrics;
 pub mod native;
 pub mod request;
@@ -44,5 +49,6 @@ pub mod server;
 pub mod state;
 
 pub use engine::{Engine, EngineConfig};
+pub use faults::{Clock, FaultPlan, FaultSite, TargetedFault};
 pub use native::{NativeEngine, NativeEngineConfig};
 pub use request::{FinishReason, Phase, Request, RequestId, Response, SamplingParams};

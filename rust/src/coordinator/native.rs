@@ -52,16 +52,47 @@
 //!   thread count can move *when* a request's tokens are produced,
 //!   never *which* tokens — the scheduler is latency policy, not
 //!   sampling policy.
+//!
+//! # Failure model (ISSUE 7)
+//!
+//! The engine degrades, it does not die (`docs/ARCHITECTURE.md` §7):
+//!
+//! * **admission control** — `max_queue` bounds the submit queue;
+//!   overflow is rejected immediately with a typed
+//!   [`FinishReason::Rejected`] response ([`Self::try_submit`]);
+//! * **deadlines** — TTFT / total-latency deadlines are swept at tick
+//!   boundaries against the injectable [`Clock`], so expiry is
+//!   deterministic under `Clock::Manual`;
+//! * **cancellation** — [`Self::cancel`] retires a queued or live
+//!   request, keeping its partial tokens;
+//! * **panic isolation** — decode rounds, prefill sub-rounds and
+//!   snapshot inserts run inside `catch_unwind`. The model only ever
+//!   executes against a *copy* of the pool state
+//!   ([`SsmStatePool::gather_state`]) and writes back only after a
+//!   clean run, so a panicked round leaves the pool pristine: the
+//!   victim fails alone ([`FinishReason::Failed`]) and the survivors
+//!   re-execute **bit-identically** to a run where the victim was
+//!   never admitted (same invariant shape as cache-moves-TTFT-never-
+//!   tokens);
+//! * **one reclaim point** — every request leaves the live set through
+//!   [`Self::finish_live`], which releases exactly its pool slot;
+//!   `quamba-audit`'s `slot-reclaim` rule machine-checks that
+//!   confinement, and the chaos suite (`rust/tests/chaos.rs`) fuzzes
+//!   seeded [`FaultPlan`] schedules asserting slot/request
+//!   conservation after every tick.
 
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use anyhow::Result;
 
 use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::DEFAULT_SAMPLER_SEED;
+use crate::coordinator::faults::{panic_message, Clock, FaultPlan, FaultSite, InjectedFault};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
+use crate::coordinator::request::{FinishReason, LiveRequest, Phase, Request, RequestId, Response};
 use crate::coordinator::sampler;
 use crate::coordinator::state::SsmStatePool;
 use crate::data::BOS;
@@ -116,6 +147,20 @@ pub struct NativeEngineConfig {
     /// the budget, the oldest prefill still advances 1 token/tick
     /// (see [`batcher::plan_tick`]).
     pub max_tokens_per_tick: usize,
+    /// admission control: submissions beyond this many queued requests
+    /// are rejected immediately with [`FinishReason::Rejected`]
+    /// — overload degrades to fast typed rejections instead of
+    /// unbounded queue growth. 0 (default) = unbounded.
+    pub max_queue: usize,
+    /// total-latency deadline applied to requests that don't set
+    /// `SamplingParams::deadline_ms`; 0.0 (default) = none.
+    pub default_deadline_ms: f64,
+    /// time source for the deadline sweeps — `Clock::Wall` in
+    /// production, `Clock::Manual` for deterministic tests
+    pub clock: Clock,
+    /// deterministic fault injection ([`FaultPlan::none`] default:
+    /// zero faults, near-zero hot-path cost)
+    pub faults: FaultPlan,
 }
 
 impl Default for NativeEngineConfig {
@@ -131,6 +176,10 @@ impl Default for NativeEngineConfig {
             snapshot_stride: 0,
             prefill_chunk: 0,
             max_tokens_per_tick: 0,
+            max_queue: 0,
+            default_deadline_ms: 0.0,
+            clock: Clock::Wall,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -150,6 +199,8 @@ impl RoundScratch {
 
 /// One decode round's gathered inputs/state (built per tick).
 struct RoundIo {
+    /// live-vec indices of this round's real lanes (padding excluded)
+    lanes: Vec<usize>,
     slots: Vec<usize>,
     toks: Vec<u16>,
     state: MambaState,
@@ -157,6 +208,9 @@ struct RoundIo {
     /// `Metrics::decode_step_ms`, one sample per round — same
     /// semantics as the XLA engine)
     step_ms: f64,
+    /// panic payload captured by the round's `catch_unwind` (injected
+    /// fault or genuine model bug); resolved in the commit phase
+    panic: Option<Box<dyn Any + Send>>,
 }
 
 /// One prefilling lane's allotment for this tick: advance
@@ -168,23 +222,77 @@ struct LanePlan {
     target: usize,
 }
 
+/// A not-yet-admitted request plus its submission time on the engine
+/// clock (deadline sweeps measure queue age from this).
+struct QueuedRequest {
+    req: Request,
+    submit_ms: f64,
+}
+
+/// Per-request deadline, falling back to the engine default (0 = none).
+fn effective_deadline(param: Option<f64>, default_ms: f64) -> Option<f64> {
+    param.or((default_ms > 0.0).then_some(default_ms))
+}
+
+/// Execute one gathered decode round against the model inside the
+/// panic boundary. Fault hooks run inside the same boundary, so
+/// injected panics and genuine model panics take the identical
+/// isolation path. On panic the payload lands in `r.panic` and —
+/// critically — the pool is untouched: the model only saw `r.state`,
+/// a *copy* ([`SsmStatePool::gather_state`]), so a retry without the
+/// victim re-executes the survivors bit-identically.
+fn run_round(
+    model: &(dyn StepModel + Send + Sync),
+    faults: &FaultPlan,
+    live: &[LiveRequest],
+    threads: usize,
+    r: &mut RoundIo,
+    ws: &mut RoundScratch,
+) {
+    ws.scratch.threads = threads;
+    let t0 = std::time::Instant::now();
+    let lanes = &r.lanes;
+    let toks = &r.toks;
+    let state = &mut r.state;
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        for &li in lanes {
+            let lr = &live[li];
+            faults.check(FaultSite::Decode, lr.req.id, lr.generated.len() as u64);
+        }
+        model.step_into(toks, state, &mut ws.scratch, &mut ws.logits);
+    }));
+    r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Err(p) = res {
+        r.panic = Some(p);
+    }
+}
+
 pub struct NativeEngine {
     pub cfg: NativeEngineConfig,
     model: Box<dyn StepModel + Send + Sync>,
     pool: SsmStatePool,
-    queue: VecDeque<Request>,
+    queue: VecDeque<QueuedRequest>,
     live: Vec<LiveRequest>,
     done: Vec<Response>,
     pub metrics: Metrics,
     vocab: usize,
     scratches: Vec<RoundScratch>,
     kernels: Kernels,
-    /// prefix-sharing snapshot cache (`cfg.cache_bytes > 0`)
+    /// prefix-sharing snapshot cache (`cfg.cache_bytes > 0`); dropped
+    /// at runtime if an insert panics (degrade to cold serving)
     cache: Option<PrefixCache>,
     /// monotonic admission counter — the chunk queue's FIFO key
     /// (`LiveRequest::admitted_seq`); the live vec itself is reordered
     /// by harvest's `swap_remove`
     next_admission_seq: u64,
+    /// tick counter — the `Clock::Manual` time base and the fault
+    /// plan's latency key
+    tick: u64,
+    /// injected latency accumulated under `Clock::Manual` (wall-clock
+    /// engines sleep instead)
+    manual_extra_ms: f64,
+    /// wall anchor for `Clock::Wall` deadline sweeps
+    started: std::time::Instant,
 }
 
 impl NativeEngine {
@@ -218,6 +326,9 @@ impl NativeEngine {
             kernels,
             cache,
             next_admission_seq: 0,
+            tick: 0,
+            manual_extra_ms: 0.0,
+            started: std::time::Instant::now(),
             model,
             cfg,
         }
@@ -238,8 +349,67 @@ impl NativeEngine {
         self.kernels
     }
 
+    /// Engine-clock reading for deadline bookkeeping (ms since engine
+    /// start under `Clock::Wall`; tick count × ms-per-tick plus
+    /// injected latency under `Clock::Manual`).
+    fn now_ms(&self) -> f64 {
+        match self.cfg.clock {
+            Clock::Wall => self.started.elapsed().as_secs_f64() * 1e3,
+            Clock::Manual { ms_per_tick } => self.tick as f64 * ms_per_tick + self.manual_extra_ms,
+        }
+    }
+
+    /// Admission control: reject immediately when the bounded submit
+    /// queue is full, so overload degrades to fast typed rejections
+    /// instead of unbounded memory growth. `None` = accepted into the
+    /// queue; `Some(resp)` = rejected (the response is also retained
+    /// for `take_done`, mirroring harvested responses).
+    pub fn try_submit(&mut self, req: Request) -> Option<Response> {
+        if self.cfg.max_queue > 0 && self.queue.len() >= self.cfg.max_queue {
+            self.metrics.record_failure(FinishReason::Rejected);
+            let resp = Response::terminal(
+                req.id,
+                FinishReason::Rejected,
+                format!(
+                    "submit queue full ({} queued, max_queue={})",
+                    self.queue.len(),
+                    self.cfg.max_queue
+                ),
+            );
+            self.done.push(resp.clone());
+            return Some(resp);
+        }
+        let submit_ms = self.now_ms();
+        self.queue.push_back(QueuedRequest { req, submit_ms });
+        None
+    }
+
+    /// Fire-and-forget submit (kept for callers that don't observe
+    /// rejections; the typed response still lands in `take_done`).
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        let _ = self.try_submit(req);
+    }
+
+    /// Cancel a queued or live request: frees its state-pool slot and
+    /// returns a [`FinishReason::Cancelled`] response carrying
+    /// whatever tokens were already generated. `None` = unknown id
+    /// (already finished or never submitted) — cancelling a completed
+    /// request is a no-op, the cancel-vs-harvest race modeled in
+    /// `rust/tests/loom_model.rs`.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        if let Some(pos) = self.queue.iter().position(|q| q.req.id == id) {
+            let q = self.queue.remove(pos)?;
+            self.metrics.record_failure(FinishReason::Cancelled);
+            let resp =
+                Response::terminal(q.req.id, FinishReason::Cancelled, "cancelled while queued");
+            self.done.push(resp.clone());
+            return Some(resp);
+        }
+        let i = self.live.iter().position(|lr| lr.req.id == id)?;
+        self.live[i].fault = Some((FinishReason::Cancelled, "cancelled by client".to_string()));
+        let resp = self.finish_live(i);
+        self.done.push(resp.clone());
+        Some(resp)
     }
 
     pub fn n_queued(&self) -> usize {
@@ -265,7 +435,47 @@ impl NativeEngine {
             + self.metrics.tokens_out as usize
     }
 
+    pub fn pool_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn live_ids(&self) -> Vec<RequestId> {
+        self.live.iter().map(|lr| lr.req.id).collect()
+    }
+
+    pub fn queued_ids(&self) -> Vec<RequestId> {
+        self.queue.iter().map(|q| q.req.id).collect()
+    }
+
+    /// Chaos-suite invariant: pool free-list accounting is intact,
+    /// every live request owns exactly one slot, and no two live
+    /// requests share one.
+    pub fn check_slot_conservation(&self) -> Result<(), String> {
+        self.pool.check_conservation()?;
+        if self.pool.in_use() != self.live.len() {
+            return Err(format!(
+                "{} slots in use for {} live requests (leak or double-book)",
+                self.pool.in_use(),
+                self.live.len()
+            ));
+        }
+        let mut slots: Vec<usize> = self.live.iter().map(|lr| lr.state_slot).collect();
+        slots.sort_unstable();
+        slots.dedup();
+        if slots.len() != self.live.len() {
+            return Err("duplicate state_slot among live requests".to_string());
+        }
+        Ok(())
+    }
+
     /// Run one unified scheduler tick:
+    /// 0. **clock & faults** — advance the tick counter, apply any
+    ///    injected latency, sweep TTFT/total deadlines (queued
+    ///    requests shed without ever taking a slot);
     /// 1. **admission** — pop queued requests into the live set (pool
     ///    capacity gates), probing the prefix cache: hits restore the
     ///    cached slab and enqueue only the suffix; full-prompt hits
@@ -273,23 +483,39 @@ impl NativeEngine {
     /// 2. **plan** — one mixed decode+prefill plan under the token
     ///    budget ([`batcher::plan_tick`]);
     /// 3. **decode rounds** — every decoding lane advances 1 token
-    ///    (bucketed, minimum padding, optionally threaded);
+    ///    (bucketed, minimum padding, optionally threaded), inside the
+    ///    panic boundary;
     /// 4. **prefill chunk batch** — all scheduled prompts advance up
     ///    to `prefill_chunk` tokens as one (B, T) batched execution;
     ///    prompts that finish sample their first token and flip to
     ///    [`Phase::Decoding`];
-    /// 5. **harvest** — finished requests become [`Response`]s.
+    /// 5. **harvest** — finished and fault-retired requests become
+    ///    [`Response`]s via [`Self::finish_live`].
     ///
     /// Returns finished responses (also retained for `take_done`).
     /// Result-typed for interface parity with
     /// [`super::engine::Engine::step`]; the native path cannot fail.
     pub fn step(&mut self) -> Result<Vec<Response>> {
-        self.admit();
+        self.tick += 1;
+        let lat = self.cfg.faults.injected_latency_ms(self.tick);
+        if lat > 0.0 {
+            match self.cfg.clock {
+                // deterministic runs: latency advances the manual clock
+                Clock::Manual { .. } => self.manual_extra_ms += lat,
+                Clock::Wall => std::thread::sleep(std::time::Duration::from_secs_f64(lat / 1e3)),
+            }
+        }
+        let mut finished = Vec::new();
+        self.sweep_deadlines(&mut finished);
+        self.admit(&mut finished);
         let dec_idx: Vec<usize> = (0..self.live.len())
-            .filter(|&i| self.live[i].phase == Phase::Decoding)
+            .filter(|&i| self.live[i].phase == Phase::Decoding && self.live[i].fault.is_none())
             .collect();
         let mut pf_idx: Vec<usize> = (0..self.live.len())
-            .filter(|&i| matches!(self.live[i].phase, Phase::Prefilling { .. }))
+            .filter(|&i| {
+                matches!(self.live[i].phase, Phase::Prefilling { .. })
+                    && self.live[i].fault.is_none()
+            })
             .collect();
         // true FIFO over admissions: harvest's swap_remove scrambles
         // live-vec order, so the budget (and the minimum-progress
@@ -312,21 +538,13 @@ impl NativeEngine {
         if !plan.chunks.is_empty() {
             self.prefill_tick(&pf_idx, &plan.chunks);
         }
-        let mut finished = Vec::new();
+        // harvest: natural completions + this tick's fault verdicts
+        // (cancellations landed mid-tick, deadline expiry, isolated
+        // panics) — all through the single reclaim point
         let mut i = 0;
         while i < self.live.len() {
-            if self.live[i].done() {
-                let lr = self.live.swap_remove(i);
-                self.pool.release(lr.state_slot);
-                let resp = lr.into_response();
-                self.metrics.record_response(
-                    resp.ttft_ms,
-                    resp.tpot_ms,
-                    resp.ttlt_ms,
-                    resp.tokens.len(),
-                    &resp.itl_ms,
-                );
-                finished.push(resp);
+            if self.live[i].done() || self.live[i].fault.is_some() {
+                finished.push(self.finish_live(i));
             } else {
                 i += 1;
             }
@@ -347,25 +565,122 @@ impl NativeEngine {
         std::mem::take(&mut self.done)
     }
 
+    /// THE slot-reclaim point: every path that retires a live request
+    /// — natural completion, cancellation, deadline expiry, panic
+    /// isolation — funnels through here, so the invariant "a request
+    /// leaves the live set exactly once, releasing exactly its own
+    /// pool slot" lives in one documented place. Machine-checked:
+    /// `quamba-audit`'s `slot-reclaim` rule confines `live.swap_remove`
+    /// and `pool.release` in this file to this function.
+    fn finish_live(&mut self, i: usize) -> Response {
+        let lr = self.live.swap_remove(i);
+        self.pool.release(lr.state_slot);
+        let resp = lr.into_response();
+        if resp.finish.is_ok() {
+            self.metrics.record_response(
+                resp.ttft_ms,
+                resp.tpot_ms,
+                resp.ttlt_ms,
+                resp.tokens.len(),
+                &resp.itl_ms,
+            );
+        } else {
+            self.metrics.record_failure(resp.finish);
+        }
+        resp
+    }
+
+    /// Tick-boundary deadline sweep (deterministic under
+    /// `Clock::Manual`): queued requests past their total deadline are
+    /// shed without ever taking a slot; live requests past their TTFT
+    /// deadline (no token yet) or total deadline retire with
+    /// [`FinishReason::DeadlineExceeded`], keeping the tokens
+    /// generated so far.
+    fn sweep_deadlines(&mut self, out: &mut Vec<Response>) {
+        let now = self.now_ms();
+        let default_ms = self.cfg.default_deadline_ms;
+        let mut qi = 0;
+        while qi < self.queue.len() {
+            let q = &self.queue[qi];
+            let expired = effective_deadline(q.req.params.deadline_ms, default_ms)
+                .is_some_and(|d| now - q.submit_ms > d);
+            if !expired {
+                qi += 1;
+                continue;
+            }
+            let Some(q) = self.queue.remove(qi) else { break };
+            self.metrics.record_failure(FinishReason::DeadlineExceeded);
+            out.push(Response::terminal(
+                q.req.id,
+                FinishReason::DeadlineExceeded,
+                format!(
+                    "deadline expired after {:.1} ms queued (never admitted)",
+                    now - q.submit_ms
+                ),
+            ));
+        }
+        let mut i = 0;
+        while i < self.live.len() {
+            let lr = &self.live[i];
+            let age = now - lr.submitted_ms;
+            let missed_total = effective_deadline(lr.req.params.deadline_ms, default_ms)
+                .is_some_and(|d| age > d);
+            let missed_ttft = lr.generated.is_empty()
+                && lr.req.params.ttft_deadline_ms.is_some_and(|d| age > d);
+            if missed_total || missed_ttft {
+                let what = if missed_total { "total-latency" } else { "TTFT" };
+                self.live[i].fault = Some((
+                    FinishReason::DeadlineExceeded,
+                    format!("{what} deadline expired after {age:.1} ms"),
+                ));
+                out.push(self.finish_live(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Admission: allocate a pool slot, probe the prefix cache, and
     /// enqueue whatever prompt suffix is left as chunked-prefill work.
     /// No model execution happens here — that is the point: a burst of
     /// long prompts costs this tick only a trie probe and a slab
     /// restore per request, and their *compute* is paced by the
     /// planner across the following ticks.
-    fn admit(&mut self) {
+    fn admit(&mut self, out: &mut Vec<Response>) {
         for _ in 0..self.cfg.max_prefills_per_tick {
             if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
                 break;
             }
-            let req = self.queue.pop_front().unwrap();
-            let slot = self.pool.alloc().expect("state pool exhausted (checked above)");
-            let use_cache = self.cache.is_some() && !req.params.no_cache;
+            let Some(QueuedRequest { req, submit_ms }) = self.queue.pop_front() else {
+                break;
+            };
+            if self.cfg.faults.should_fail(FaultSite::Alloc, req.id, 0) {
+                // injected allocation failure: the request fails alone,
+                // before it ever holds a slot
+                self.metrics.record_failure(FinishReason::Failed);
+                out.push(Response::terminal(
+                    req.id,
+                    FinishReason::Failed,
+                    format!("injected fault: Alloc for request {}", req.id),
+                ));
+                continue;
+            }
+            let Some(slot) = self.pool.alloc() else {
+                // defensive: the loop head just checked capacity, so an
+                // empty free list means broken accounting. Never panic
+                // the serving loop — requeue and let the chaos suite's
+                // conservation audit name the bug.
+                self.queue.push_front(QueuedRequest { req, submit_ms });
+                break;
+            };
             let mut lr = LiveRequest::new(req, slot, self.cfg.sampler_seed);
+            lr.submitted_ms = submit_ms;
             lr.admitted_seq = self.next_admission_seq;
             self.next_admission_seq += 1;
-            let hit =
-                if use_cache { self.cache.as_mut().unwrap().lookup(&lr.prompt) } else { None };
+            let hit = match self.cache.as_mut() {
+                Some(c) if !lr.req.params.no_cache => c.lookup(&lr.prompt),
+                _ => None,
+            };
             if let Some(h) = hit {
                 if let Some(row) = h.logits_row {
                     // full-prompt hit: restore the end-of-prompt state
@@ -399,6 +714,17 @@ impl NativeEngine {
         }
     }
 
+    /// Pack `lanes` (live-vec indices) into a `b`-wide gathered round.
+    fn gather_round(&self, lanes: &[usize], b: usize) -> RoundIo {
+        let slots: Vec<usize> = lanes.iter().map(|&li| self.live[li].state_slot).collect();
+        let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
+        for (bi, &li) in lanes.iter().enumerate() {
+            toks[bi] = self.live[li].next_input_token();
+        }
+        let state = self.pool.gather_state(self.model.tier(), &slots, b);
+        RoundIo { lanes: lanes.to_vec(), slots, toks, state, step_ms: 0.0, panic: None }
+    }
+
     /// One decode pass over the decoding lanes `dec` (indices into
     /// `self.live`), following the plan's bucket rounds.
     fn decode_tick(&mut self, dec: &[usize], rounds: &[usize]) {
@@ -408,20 +734,16 @@ impl NativeEngine {
         for (gi, group) in groups.iter().enumerate() {
             let b = rounds[gi];
             self.metrics.record_round(b, group.len());
-            let slots: Vec<usize> =
-                group.iter().map(|&p| self.live[dec[p]].state_slot).collect();
-            let mut toks = vec![BOS; b]; // padded lanes run a throwaway BOS
-            for (bi, &p) in group.iter().enumerate() {
-                toks[bi] = self.live[dec[p]].next_input_token();
-            }
-            let state = self.pool.gather_state(self.model.tier(), &slots, b);
-            io.push(RoundIo { slots, toks, state, step_ms: 0.0 });
+            let lanes: Vec<usize> = group.iter().map(|&p| dec[p]).collect();
+            io.push(self.gather_round(&lanes, b));
         }
         while self.scratches.len() < io.len() {
             self.scratches.push(RoundScratch::new(self.kernels));
         }
         // execute phase
         let model = &*self.model;
+        let faults = &self.cfg.faults;
+        let live = &self.live;
         let scratches = &mut self.scratches;
         let threads = self.cfg.threads.max(1);
         if threads > 1 && io.len() > 1 {
@@ -430,30 +752,21 @@ impl NativeEngine {
             // sequentially (within-step threading off — the workers
             // already cover the cores). Commit stays in group order
             // below, so tokens match the sequential schedule exactly.
+            // Panics are caught *inside* each worker (run_round), so a
+            // poisoned round never tears down the scope.
             let per = io.len().div_ceil(threads);
             std::thread::scope(|sc| {
                 for (rs, wss) in io.chunks_mut(per).zip(scratches.chunks_mut(per)) {
                     sc.spawn(move || {
                         for (r, ws) in rs.iter_mut().zip(wss.iter_mut()) {
-                            ws.scratch.threads = 1;
-                            let t0 = std::time::Instant::now();
-                            model.step_into(
-                                &r.toks,
-                                &mut r.state,
-                                &mut ws.scratch,
-                                &mut ws.logits,
-                            );
-                            r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+                            run_round(model, faults, live, 1, r, ws);
                         }
                     });
                 }
             });
         } else {
             for (r, ws) in io.iter_mut().zip(scratches.iter_mut()) {
-                ws.scratch.threads = threads;
-                let t0 = std::time::Instant::now();
-                model.step_into(&r.toks, &mut r.state, &mut ws.scratch, &mut ws.logits);
-                r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+                run_round(model, faults, live, threads, r, ws);
             }
         }
         // one latency sample per round, in deterministic group order
@@ -461,16 +774,55 @@ impl NativeEngine {
         for r in &io {
             self.metrics.decode_step_ms.record(r.step_ms);
         }
-        // commit phase (deterministic order): scatter states, sample
+        // commit phase (deterministic order): resolve panics, scatter
+        // states, sample
         let v = self.vocab;
-        for (gi, r) in io.into_iter().enumerate() {
-            let RoundIo { slots, state, .. } = r;
+        for (gi, mut r) in io.into_iter().enumerate() {
+            // panic isolation: retire the victim the payload names (or
+            // the whole round if unattributable), then re-run the
+            // survivors from their pristine pool state. Bit-parity
+            // holds because scatter only ever follows a clean run and
+            // batch composition never changes tokens.
+            while let Some(p) = r.panic.take() {
+                let msg = panic_message(&*p);
+                let injected = p.downcast_ref::<InjectedFault>().map(|f| f.req_id);
+                let mut survivors = Vec::with_capacity(r.lanes.len());
+                for &li in &r.lanes {
+                    let is_victim = match injected {
+                        Some(id) => self.live[li].req.id == id,
+                        None => true,
+                    };
+                    if is_victim {
+                        self.live[li].fault = Some((FinishReason::Failed, msg.clone()));
+                    } else {
+                        survivors.push(li);
+                    }
+                }
+                if survivors.is_empty() {
+                    r.lanes.clear();
+                    break;
+                }
+                let b = survivors.len();
+                r = self.gather_round(&survivors, b);
+                run_round(
+                    &*self.model,
+                    &self.cfg.faults,
+                    &self.live,
+                    1,
+                    &mut r,
+                    &mut self.scratches[gi],
+                );
+            }
+            if r.lanes.is_empty() {
+                continue;
+            }
+            let RoundIo { lanes, slots, state, .. } = r;
             // only live slots are scattered back; padded-lane outputs drop
             self.pool.scatter_state(&slots, state);
             let logits = &self.scratches[gi].logits;
-            for (bi, &p) in groups[gi].iter().enumerate() {
+            for (bi, &li) in lanes.iter().enumerate() {
                 let row = &logits[bi * v..(bi + 1) * v];
-                let lr = &mut self.live[dec[p]];
+                let lr = &mut self.live[li];
                 let tok = sampler::sample_row(&mut lr.rng, row, v, &lr.req.params);
                 lr.generated.push(tok);
                 let now = std::time::Instant::now();
@@ -479,6 +831,45 @@ impl NativeEngine {
                 }
                 lr.last_token = Some(now);
             }
+        }
+    }
+
+    /// Snapshot-insert with validation and isolation: the slab copy is
+    /// sanity-checked before insert (fault injection corrupts it here;
+    /// a non-finite h-state would poison every future warm hit), a
+    /// rejected snapshot is simply dropped — the cache only ever moves
+    /// TTFT, never tokens, so dropping an insert is always safe — and
+    /// a panic inside the cache retires the *cache*, not the process.
+    fn insert_snapshot(&mut self, live_i: usize, end: usize, logits_row: Option<Vec<f32>>) {
+        if self.cache.is_none() {
+            return;
+        }
+        let req_id = self.live[live_i].req.id;
+        let mut slab = self.pool.snapshot(self.live[live_i].state_slot);
+        if self.cfg.faults.should_fail(FaultSite::Snapshot, req_id, end as u64) {
+            // deterministic corruption; the validation below must
+            // catch it and drop the insert (token-neutral)
+            if let Some(x) = slab.ssm.first_mut() {
+                *x = f32::NAN;
+            }
+        }
+        let finite = slab.ssm.iter().all(|x| x.is_finite())
+            && slab.conv.iter().all(|x| x.is_finite());
+        if !finite {
+            self.metrics.snapshot_drops += 1;
+            return;
+        }
+        let key = &self.live[live_i].prompt[..end];
+        let snap = Snapshot { slab, logits_row };
+        let res = {
+            let Some(cache) = self.cache.as_mut() else { return };
+            catch_unwind(AssertUnwindSafe(|| cache.insert(key, snap)))
+        };
+        if res.is_err() {
+            // a panicking cache is poisoned mid-mutation: drop it and
+            // keep serving cold — degradation, not process death
+            self.cache = None;
+            self.metrics.snapshot_drops += 1;
         }
     }
 
@@ -534,28 +925,56 @@ impl NativeEngine {
                 round.push((i, l.next, end));
             }
             let b = round.len();
+            let Some(t_max) = round.iter().map(|&(_, s, e)| e - s).max() else {
+                break;
+            };
             let slots: Vec<usize> = round
                 .iter()
                 .map(|&(i, _, _)| self.live[lanes[i].live_i].state_slot)
                 .collect();
             let mut state = self.pool.gather_state(self.model.tier(), &slots, b);
-            let t_max = round.iter().map(|&(_, s, e)| e - s).max().unwrap();
-            {
+            let exec = {
                 let live = &self.live;
+                let faults = &self.cfg.faults;
+                let model = &*self.model;
                 let chunk_slices: Vec<&[u16]> = round
                     .iter()
                     .map(|&(i, s, e)| &live[lanes[i].live_i].prompt[s..e])
                     .collect();
                 let t0 = std::time::Instant::now();
-                self.model.prefill_batch_into(
-                    &chunk_slices,
-                    &mut state,
-                    &mut scratch,
-                    &mut logits,
-                );
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    for &(i, s, _) in &round {
+                        let lr = &live[lanes[i].live_i];
+                        faults.check(FaultSite::Prefill, lr.req.id, s as u64);
+                    }
+                    model.prefill_batch_into(&chunk_slices, &mut state, &mut scratch, &mut logits);
+                }));
                 // prefill_ms samples per batched sub-round (the unit
                 // the scheduler actually executes), like decode_step_ms
                 self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+                res
+            };
+            if let Err(p) = exec {
+                // panic isolation: mark the victim (or, when the
+                // payload is unattributable, every lane in this
+                // sub-round) and drop it from the chunk loop. The pool
+                // is untouched — the model only saw the gathered copy —
+                // so the next sub-round re-executes the survivors
+                // bit-identically.
+                let msg = panic_message(&*p);
+                let injected = p.downcast_ref::<InjectedFault>().map(|f| f.req_id);
+                for &(i, _, _) in &round {
+                    let li = lanes[i].live_i;
+                    let is_victim = match injected {
+                        Some(id) => self.live[li].req.id == id,
+                        None => true,
+                    };
+                    if is_victim {
+                        self.live[li].fault = Some((FinishReason::Failed, msg.clone()));
+                        lanes[i].target = lanes[i].next;
+                    }
+                }
+                continue;
             }
             self.pool.scatter_state(&slots, state);
             for (bi, &(i, start, end)) in round.iter().enumerate() {
@@ -567,12 +986,7 @@ impl NativeEngine {
                 if lane_cache {
                     if !finished && stride > 0 && end % stride == 0 {
                         // interior stride snapshot (nested-prefix reuse)
-                        let snap = Snapshot {
-                            slab: self.pool.snapshot(self.live[live_i].state_slot),
-                            logits_row: None,
-                        };
-                        let key = &self.live[live_i].prompt[..end];
-                        self.cache.as_mut().unwrap().insert(key, snap);
+                        self.insert_snapshot(live_i, end, None);
                     }
                     if finished {
                         // end-of-prompt snapshot keeps the last logits
@@ -580,11 +994,7 @@ impl NativeEngine {
                         // model
                         let row =
                             logits[(bi * t_max + tl - 1) * v..(bi * t_max + tl) * v].to_vec();
-                        let snap = Snapshot {
-                            slab: self.pool.snapshot(self.live[live_i].state_slot),
-                            logits_row: Some(row),
-                        };
-                        self.cache.as_mut().unwrap().insert(&self.live[live_i].prompt, snap);
+                        self.insert_snapshot(live_i, end, Some(row));
                     }
                 }
                 let lr = &mut self.live[live_i];
@@ -606,7 +1016,6 @@ impl NativeEngine {
         }
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -846,5 +1255,255 @@ mod tests {
             3 * cpl,
             "i8 conv window must save 3 bytes per entry"
         );
+    }
+
+    // ----- failure model (ISSUE 7) -----
+
+    use crate::coordinator::faults::{
+        silence_injected_panics, Clock, FaultPlan, FaultSite, TargetedFault,
+    };
+
+    fn fresh_engine(cfg: NativeEngineConfig) -> NativeEngine {
+        NativeEngine::new(Box::new(MambaModel::synthetic(tier(), 13)), cfg)
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_typed_response() {
+        let cfg = NativeEngineConfig { capacity: 1, max_queue: 2, ..Default::default() };
+        let mut eng = fresh_engine(cfg);
+        let mut rejected = 0;
+        for i in 0..5u64 {
+            if let Some(resp) = eng.try_submit(sampled_req(i, vec![1, 2], 3)) {
+                assert_eq!(resp.finish, FinishReason::Rejected);
+                assert!(resp.tokens.is_empty());
+                assert!(
+                    resp.error.as_deref().unwrap_or("").contains("queue full"),
+                    "{:?}",
+                    resp.error
+                );
+                rejected += 1;
+            }
+        }
+        assert_eq!(rejected, 3, "queue of 2 must shed 3 of 5 upfront submissions");
+        assert_eq!(eng.metrics.rejected, 3);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5, "every submission reaches a terminal outcome");
+        assert_eq!(done.iter().filter(|r| r.finish.is_ok()).count(), 2);
+        assert!(eng.metrics.shed_rate() > 0.5);
+        eng.check_slot_conservation().unwrap();
+    }
+
+    #[test]
+    fn cancel_mid_flight_frees_slot_and_keeps_tokens() {
+        let mut eng = fresh_engine(NativeEngineConfig::default());
+        eng.submit(sampled_req(1, vec![1, 2, 3], 32));
+        eng.step().unwrap(); // admit + prefill + first token
+        eng.step().unwrap(); // one decode token
+        assert_eq!(eng.n_live(), 1);
+        let resp = eng.cancel(1).expect("live request must be cancellable");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.tokens.len(), 2, "partial tokens survive cancellation");
+        assert_eq!(eng.n_live(), 0);
+        assert_eq!(eng.pool_in_use(), 0, "cancel must release the slot");
+        assert_eq!(eng.metrics.cancelled, 1);
+        assert!(eng.cancel(1).is_none(), "double cancel is a no-op");
+        assert!(eng.cancel(99).is_none(), "unknown id is a no-op");
+        // queued cancellation: never admitted, empty tokens
+        let cfg = NativeEngineConfig { max_prefills_per_tick: 0, ..Default::default() };
+        let mut eng2 = fresh_engine(cfg);
+        eng2.submit(sampled_req(7, vec![1], 4));
+        let resp2 = eng2.cancel(7).expect("queued request must be cancellable");
+        assert_eq!(resp2.finish, FinishReason::Cancelled);
+        assert!(resp2.tokens.is_empty());
+        assert_eq!(eng2.n_queued(), 0);
+    }
+
+    #[test]
+    fn deadline_exceeded_deterministically_on_manual_clock() {
+        let run = || {
+            let cfg = NativeEngineConfig {
+                clock: Clock::Manual { ms_per_tick: 1.0 },
+                ..Default::default()
+            };
+            let mut eng = fresh_engine(cfg);
+            let mut r = sampled_req(1, vec![1, 2], 100);
+            r.params.deadline_ms = Some(3.0);
+            eng.submit(r);
+            let done = eng.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1);
+            done.into_iter().next().unwrap()
+        };
+        let a = run();
+        assert_eq!(a.finish, FinishReason::DeadlineExceeded);
+        assert!(!a.tokens.is_empty(), "tokens generated before expiry are kept");
+        assert!(a.tokens.len() < 100);
+        let b = run();
+        assert_eq!(a.tokens, b.tokens, "manual-clock deadline runs must be bit-reproducible");
+        assert_eq!(a.error, b.error);
+    }
+
+    #[test]
+    fn ttft_deadline_sheds_slow_prefill_with_zero_tokens() {
+        let cfg = NativeEngineConfig {
+            clock: Clock::Manual { ms_per_tick: 1.0 },
+            prefill_chunk: 1,
+            ..Default::default()
+        };
+        let mut eng = fresh_engine(cfg);
+        let mut r = sampled_req(1, (0..12).map(|j| (j % 16) as u16).collect(), 4);
+        r.params.ttft_deadline_ms = Some(4.0);
+        eng.submit(r);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+        assert!(done[0].tokens.is_empty(), "12-token prompt at 1 tok/tick cannot beat TTFT 4ms");
+        assert!(done[0].error.as_deref().unwrap_or("").contains("TTFT"));
+        eng.check_slot_conservation().unwrap();
+    }
+
+    #[test]
+    fn default_deadline_applies_to_unmarked_requests() {
+        let cfg = NativeEngineConfig {
+            clock: Clock::Manual { ms_per_tick: 1.0 },
+            default_deadline_ms: 2.0,
+            ..Default::default()
+        };
+        let mut eng = fresh_engine(cfg);
+        eng.submit(sampled_req(1, vec![1], 100));
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(eng.metrics.deadline_missed, 1);
+    }
+
+    #[test]
+    fn injected_decode_panic_fails_exactly_one_request() {
+        silence_injected_panics();
+        // clean run first: the survivor-parity oracle
+        let clean: Vec<(u64, Vec<u16>)> = {
+            let mut eng = fresh_engine(NativeEngineConfig::default());
+            for i in 1..=3u64 {
+                eng.submit(sampled_req(i, vec![1, 2, 3], 4));
+            }
+            let mut d: Vec<(u64, Vec<u16>)> =
+                eng.run_to_completion().unwrap().into_iter().map(|r| (r.id, r.tokens)).collect();
+            d.sort_by_key(|(id, _)| *id);
+            d
+        };
+        let cfg = NativeEngineConfig {
+            faults: FaultPlan {
+                targeted: vec![TargetedFault { site: FaultSite::Decode, req_id: 2, step: 2 }],
+                ..FaultPlan::none()
+            },
+            ..Default::default()
+        };
+        let mut eng = fresh_engine(cfg);
+        for i in 1..=3u64 {
+            eng.submit(sampled_req(i, vec![1, 2, 3], 4));
+        }
+        let mut done = eng.run_to_completion().unwrap();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 3);
+        let victim = &done[1];
+        assert_eq!(victim.id, 2);
+        assert_eq!(victim.finish, FinishReason::Failed, "exactly the targeted request fails");
+        assert_eq!(victim.tokens.len(), 2, "tokens before the injected step survive");
+        assert!(victim.error.as_deref().unwrap_or("").contains("injected"), "{:?}", victim.error);
+        for (resp, (cid, ctoks)) in [&done[0], &done[2]].iter().zip([&clean[0], &clean[2]]) {
+            assert_eq!(resp.id, *cid);
+            assert!(resp.finish.is_ok());
+            assert_eq!(
+                &resp.tokens, ctoks,
+                "survivor {} must be bit-identical to the fault-free run",
+                resp.id
+            );
+        }
+        assert_eq!(eng.metrics.failed, 1);
+        eng.check_slot_conservation().unwrap();
+        // the engine keeps serving after the isolated panic
+        eng.submit(sampled_req(9, vec![4, 5], 3));
+        let after = eng.run_to_completion().unwrap();
+        assert_eq!(after.len(), 1);
+        assert!(after[0].finish.is_ok());
+        assert_eq!(after[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn injected_prefill_panic_fails_alone() {
+        silence_injected_panics();
+        let clean = {
+            let mut eng = fresh_engine(NativeEngineConfig::default());
+            eng.submit(sampled_req(2, vec![5, 6], 3));
+            eng.run_to_completion().unwrap().remove(0).tokens
+        };
+        let cfg = NativeEngineConfig {
+            faults: FaultPlan {
+                targeted: vec![TargetedFault { site: FaultSite::Prefill, req_id: 1, step: 0 }],
+                ..FaultPlan::none()
+            },
+            ..Default::default()
+        };
+        let mut eng = fresh_engine(cfg);
+        eng.submit(sampled_req(1, vec![1, 2, 3, 4], 3));
+        eng.submit(sampled_req(2, vec![5, 6], 3));
+        let mut done = eng.run_to_completion().unwrap();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done[0].finish, FinishReason::Failed);
+        assert!(done[0].tokens.is_empty(), "panic at prompt start → no tokens");
+        assert!(done[1].finish.is_ok());
+        assert_eq!(done[1].tokens, clean, "co-scheduled prefill lane unaffected");
+        eng.check_slot_conservation().unwrap();
+    }
+
+    #[test]
+    fn injected_alloc_failure_fails_request_alone() {
+        let cfg = NativeEngineConfig {
+            faults: FaultPlan {
+                targeted: vec![TargetedFault { site: FaultSite::Alloc, req_id: 2, step: 0 }],
+                ..FaultPlan::none()
+            },
+            ..Default::default()
+        };
+        let mut eng = fresh_engine(cfg);
+        for i in 1..=3u64 {
+            eng.submit(sampled_req(i, vec![1, 2], 3));
+        }
+        let mut done = eng.run_to_completion().unwrap();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done[1].finish, FinishReason::Failed);
+        assert!(done[1].error.as_deref().unwrap_or("").contains("Alloc"));
+        assert!(done[0].finish.is_ok() && done[2].finish.is_ok());
+        assert_eq!(eng.pool_in_use(), 0);
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_dropped_tokens_unchanged() {
+        let base = NativeEngineConfig {
+            cache_bytes: 64 << 10,
+            snapshot_stride: 4,
+            prefill_chunk: 3,
+            ..Default::default()
+        };
+        let clean = run_workload(base.clone(), false);
+        let cfg = NativeEngineConfig {
+            faults: FaultPlan { snapshot_corrupt: 1.0, ..FaultPlan::none() },
+            ..base
+        };
+        let t = tier();
+        let mut eng = fresh_engine(cfg);
+        for i in 0..9u64 {
+            let plen = 2 + (i as usize % 4);
+            eng.submit(sampled_req(
+                i,
+                (0..plen).map(|j| ((i as usize + j) % t.vocab) as u16).collect(),
+                6 + i as usize % 3,
+            ));
+        }
+        let mut got: Vec<(u64, Vec<u16>)> =
+            eng.run_to_completion().unwrap().into_iter().map(|r| (r.id, r.tokens)).collect();
+        got.sort_by_key(|(id, _)| *id);
+        assert_eq!(got, clean, "dropping every snapshot insert must not move tokens");
+        assert!(eng.metrics.snapshot_drops > 0, "validation must have fired");
+        let stats = eng.cache_stats().expect("cache still attached");
+        assert_eq!(stats.entries, 0, "no corrupt snapshot may enter the cache");
     }
 }

@@ -30,11 +30,29 @@ pub struct SamplingParams {
     /// cache-pollution control). Tokens are identical either way — the
     /// cache only moves TTFT — so this is purely a policy knob.
     pub no_cache: bool,
+    /// time-to-first-token deadline: if no token has been produced
+    /// this many ms after submission, the request finishes
+    /// [`FinishReason::DeadlineExceeded`] at the next tick boundary
+    /// (checked against the engine's injectable clock). `None` = no
+    /// TTFT deadline.
+    pub ttft_deadline_ms: Option<f64>,
+    /// total-latency deadline (submission → last token). On expiry the
+    /// request keeps whatever tokens it already generated and finishes
+    /// [`FinishReason::DeadlineExceeded`]. `None` falls back to the
+    /// engine's `default_deadline_ms` (0 = unbounded).
+    pub deadline_ms: Option<f64>,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { temperature: 0.0, top_k: 0, seed: 0, no_cache: false }
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            no_cache: false,
+            ttft_deadline_ms: None,
+            deadline_ms: None,
+        }
     }
 }
 
@@ -52,7 +70,26 @@ pub struct Request {
 pub enum FinishReason {
     Length,
     Eos,
+    /// cancelled by the client (mid-queue or mid-flight); the response
+    /// keeps the tokens generated so far
     Cancelled,
+    /// shed at admission: the bounded submit queue was full
+    /// (`NativeEngineConfig::max_queue`)
+    Rejected,
+    /// TTFT or total-latency deadline expired at a tick boundary
+    DeadlineExceeded,
+    /// the request's own execution panicked (isolated via
+    /// `catch_unwind`; `Response::error` carries the panic payload) or
+    /// its admission-time allocation failed
+    Failed,
+}
+
+impl FinishReason {
+    /// Natural completion (the request produced its full answer).
+    /// Everything else is a failure-model outcome.
+    pub fn is_ok(self) -> bool {
+        matches!(self, FinishReason::Length | FinishReason::Eos)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -70,6 +107,10 @@ pub struct Response {
     /// head-of-line-blocking quantity (a long prefill stalling decode
     /// shows up here, not in the mean)
     pub itl_ms: Vec<f64>,
+    /// failure detail for non-`is_ok` finishes: the panic payload for
+    /// `Failed`, a human-readable cause for `Rejected` /
+    /// `DeadlineExceeded` / `Cancelled`. `None` on natural completion.
+    pub error: Option<String>,
 }
 
 impl Response {
@@ -77,6 +118,23 @@ impl Response {
     /// request produced fewer than two tokens).
     pub fn itl_max_ms(&self) -> f64 {
         self.itl_ms.iter().copied().fold(f64::NAN, f64::max)
+    }
+
+    /// A terminal failure response for a request that never entered
+    /// (or never re-enters) the live set: rejected at admission, shed
+    /// from the queue, cancelled before its first tick, or failed
+    /// allocation. No tokens, no latency samples.
+    pub fn terminal(id: RequestId, finish: FinishReason, error: impl Into<String>) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            finish,
+            ttft_ms: f64::NAN,
+            tpot_ms: f64::NAN,
+            ttlt_ms: f64::NAN,
+            itl_ms: Vec::new(),
+            error: Some(error.into()),
+        }
     }
 }
 
@@ -109,6 +167,16 @@ pub struct LiveRequest {
     /// perturb it (see module docs)
     pub rng: Pcg32,
     pub submitted: Instant,
+    /// submission time on the engine's injectable clock
+    /// ([`crate::coordinator::faults::Clock`]); deadline sweeps compare
+    /// against this, never against `submitted` (wall time), so
+    /// `Clock::Manual` runs are deterministic
+    pub submitted_ms: f64,
+    /// failure-model verdict set by the engine (cancellation, deadline
+    /// expiry, isolated panic). A set verdict overrides the natural
+    /// finish reason in [`Self::into_response`] and marks the request
+    /// for harvest this tick.
+    pub fault: Option<(FinishReason, String)>,
     pub prefill_done: Option<Instant>,
     pub last_token: Option<Instant>,
     pub decode_ms: Vec<f64>,
@@ -144,6 +212,8 @@ impl LiveRequest {
             state_slot,
             rng,
             submitted: Instant::now(),
+            submitted_ms: 0.0,
+            fault: None,
             prefill_done: None,
             last_token: None,
             decode_ms: Vec::new(),
@@ -191,7 +261,14 @@ impl LiveRequest {
         } else {
             self.decode_ms.iter().sum::<f64>() / self.decode_ms.len() as f64
         };
-        let finish = self.finish_reason();
+        // an engine-set fault verdict (cancel / deadline / isolated
+        // panic) overrides the natural finish reason; the partial
+        // token stream is kept either way
+        let natural = self.finish_reason();
+        let (finish, error) = match self.fault {
+            Some((f, e)) => (f, Some(e)),
+            None => (natural, None),
+        };
         Response {
             id: self.req.id,
             tokens: self.generated,
@@ -200,6 +277,7 @@ impl LiveRequest {
             tpot_ms: tpot,
             ttlt_ms: (now - self.submitted).as_secs_f64() * 1e3,
             itl_ms: self.decode_ms,
+            error,
         }
     }
 }
@@ -283,5 +361,31 @@ mod tests {
         lr2.phase = Phase::Decoding;
         lr2.generated.push(3);
         assert!(lr2.into_response().itl_max_ms().is_nan());
+    }
+
+    #[test]
+    fn fault_verdict_overrides_natural_finish() {
+        // a cancelled request keeps its partial tokens but reports the
+        // engine's verdict, not Length/Eos
+        let mut lr = LiveRequest::new(req(3), 0, 0);
+        lr.phase = Phase::Decoding;
+        lr.generated.extend([3, 4]);
+        lr.fault = Some((FinishReason::Cancelled, "cancelled by client".into()));
+        let resp = lr.into_response();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.tokens, vec![3, 4]);
+        assert_eq!(resp.error.as_deref(), Some("cancelled by client"));
+        assert!(!resp.finish.is_ok());
+        assert!(FinishReason::Length.is_ok() && FinishReason::Eos.is_ok());
+    }
+
+    #[test]
+    fn terminal_response_is_empty_and_typed() {
+        let resp = Response::terminal(7, FinishReason::Rejected, "queue full");
+        assert_eq!(resp.id, 7);
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert_eq!(resp.error.as_deref(), Some("queue full"));
+        assert!(resp.ttft_ms.is_nan() && resp.ttlt_ms.is_nan());
     }
 }

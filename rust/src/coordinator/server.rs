@@ -38,6 +38,19 @@ pub trait EngineCore {
     fn cache_stats(&self) -> Option<CacheStats> {
         None
     }
+    /// Admission-controlled submit: `Some(resp)` is an immediate typed
+    /// rejection (bounded queue full) the server relays to the waiter
+    /// without a tick. Cores without admission control accept
+    /// unconditionally.
+    fn try_submit(&mut self, req: Request) -> Option<Response> {
+        self.submit(req);
+        None
+    }
+    /// Cancel a queued or live request; `None` when unknown (already
+    /// finished, or the core doesn't support cancellation).
+    fn cancel(&mut self, _id: RequestId) -> Option<Response> {
+        None
+    }
 }
 
 impl EngineCore for Engine {
@@ -80,10 +93,17 @@ impl EngineCore for NativeEngine {
     fn cache_stats(&self) -> Option<CacheStats> {
         NativeEngine::cache_stats(self)
     }
+    fn try_submit(&mut self, req: Request) -> Option<Response> {
+        NativeEngine::try_submit(self, req)
+    }
+    fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        NativeEngine::cancel(self, id)
+    }
 }
 
 enum Msg {
     Submit(Request, Sender<Response>),
+    Cancel(RequestId),
     Report(Sender<String>),
     CacheStats(Sender<Option<CacheStats>>),
     Shutdown,
@@ -133,8 +153,26 @@ impl ServerHandle {
                     };
                     match msg {
                         Some(Msg::Submit(req, resp_tx)) => {
-                            waiters.push((req.id, resp_tx));
-                            engine.submit(req);
+                            let id = req.id;
+                            // A rejected submit must answer synchronously:
+                            // an idle engine may never step again, so a
+                            // parked waiter would hang forever.
+                            match engine.try_submit(req) {
+                                Some(reject) => {
+                                    let _ = resp_tx.send(reject);
+                                }
+                                None => waiters.push((id, resp_tx)),
+                            }
+                        }
+                        Some(Msg::Cancel(id)) => {
+                            if let Some(resp) = engine.cancel(id) {
+                                if let Some(pos) =
+                                    waiters.iter().position(|(wid, _)| *wid == resp.id)
+                                {
+                                    let (_, tx) = waiters.swap_remove(pos);
+                                    let _ = tx.send(resp);
+                                }
+                            }
                         }
                         Some(Msg::Report(tx)) => {
                             let _ = tx.send(engine.report());
@@ -200,6 +238,17 @@ impl ServerHandle {
         max_new: usize,
         params: SamplingParams,
     ) -> Receiver<Response> {
+        self.submit_with_id(prompt, max_new, params).1
+    }
+
+    /// Like [`submit`](Self::submit) but also returns the assigned
+    /// request id, so the caller can [`cancel`](Self::cancel) it later.
+    pub fn submit_with_id(
+        &mut self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        params: SamplingParams,
+    ) -> (RequestId, Receiver<Response>) {
         let id = self.next_id;
         self.next_id += 1;
         let (tx, rx) = channel();
@@ -211,7 +260,15 @@ impl ServerHandle {
             stop_at_eos: false,
         };
         let _ = self.tx.send(Msg::Submit(req, tx));
-        rx
+        (id, rx)
+    }
+
+    /// Request cancellation of a queued or live request. Best-effort:
+    /// if the request already finished (or the backend doesn't support
+    /// cancellation) this is a no-op; otherwise the waiter receives a
+    /// `Cancelled` response with any tokens generated so far.
+    pub fn cancel(&self, id: RequestId) {
+        let _ = self.tx.send(Msg::Cancel(id));
     }
 
     pub fn metrics_report(&self) -> Option<String> {

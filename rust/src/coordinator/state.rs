@@ -117,6 +117,36 @@ impl SsmStatePool {
         self.free.push(slot);
     }
 
+    /// Slot-leak audit (ISSUE 7): every slot is either occupied or on
+    /// the free list, exactly once. `in_use()` is *derived* from the
+    /// free-list length, so a leak shows up here as an occupied slot
+    /// the free list also claims (or a vacant one it doesn't) — the
+    /// chaos suite calls this after every engine tick.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let occupied = self.slots.iter().filter(|s| s.is_some()).count();
+        if occupied + self.free.len() != self.slots.len() {
+            return Err(format!(
+                "slot conservation broken: {occupied} occupied + {} free != {} capacity",
+                self.free.len(),
+                self.slots.len()
+            ));
+        }
+        let mut on_free_list = vec![false; self.slots.len()];
+        for &f in &self.free {
+            if f >= self.slots.len() {
+                return Err(format!("free list holds out-of-range slot {f}"));
+            }
+            if self.slots[f].is_some() {
+                return Err(format!("slot {f} is on the free list but occupied"));
+            }
+            if on_free_list[f] {
+                return Err(format!("slot {f} appears twice on the free list"));
+            }
+            on_free_list[f] = true;
+        }
+        Ok(())
+    }
+
     pub fn write(&mut self, slot: usize, slab: SsmSlab) {
         assert!(
             self.slots[slot].is_some(),
@@ -392,6 +422,34 @@ mod tests {
         let b2 = p.alloc().unwrap();
         assert_eq!(b2, b);
         let _ = (a, c);
+    }
+
+    #[test]
+    fn conservation_holds_across_alloc_release_churn() {
+        // the audit the chaos suite runs every tick: occupied + free
+        // always partitions the slot set, whatever the churn pattern
+        let mut p = SsmStatePool::new(&tier(), 4);
+        p.check_conservation().unwrap();
+        let mut held: Vec<usize> = Vec::new();
+        for round in 0..50u64 {
+            // deterministic mixed pattern: alloc on most rounds,
+            // release the oldest on every third
+            if round % 3 == 2 {
+                if !held.is_empty() {
+                    p.release(held.remove(0));
+                }
+            } else if let Some(s) = p.alloc() {
+                held.push(s);
+            }
+            p.check_conservation()
+                .unwrap_or_else(|e| panic!("round {round}: {e}"));
+            assert_eq!(p.in_use(), held.len());
+        }
+        for s in held {
+            p.release(s);
+            p.check_conservation().unwrap();
+        }
+        assert_eq!(p.in_use(), 0);
     }
 
     #[test]

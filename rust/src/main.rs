@@ -75,6 +75,10 @@ fn print_help() {
          \x20              unified chunked-prefill scheduler:\n\
          \x20              --cache-mb / --snapshot-stride /\n\
          \x20              --prefill-chunk / --max-tokens-per-tick;\n\
+         \x20              --max-queue bounds admission (overflow is\n\
+         \x20              shed with typed Rejected responses) and\n\
+         \x20              --default-deadline-ms applies a total-latency\n\
+         \x20              deadline to every request (0 = off, both);\n\
          \x20              --calib-file feeds a real W8A8 calibration\n\
          \x20              token stream instead of synthetic tokens)\n\
          \x20 eval-ppl     perplexity on wiki-synth / pile-synth (Table 2)\n\
@@ -356,6 +360,11 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
         // --prefill-chunk 0 restores whole-prompt-per-tick behavior)
         prefill_chunk: args.get_usize("prefill-chunk", 64),
         max_tokens_per_tick: args.get_usize("max-tokens-per-tick", 0),
+        // failure model (docs/ARCHITECTURE.md §7): bounded admission
+        // queue (0 = unbounded) and an engine-wide total-latency
+        // deadline (0 = none) for requests that don't set their own
+        max_queue: args.get_usize("max-queue", 0),
+        default_deadline_ms: args.get_f64("default-deadline-ms", 0.0),
         ..Default::default()
     };
     println!(
@@ -367,6 +376,13 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
         cfg.prefill_chunk,
         cfg.max_tokens_per_tick,
     );
+    if cfg.max_queue > 0 || cfg.default_deadline_ms > 0.0 {
+        println!(
+            "admission control: max_queue={} default_deadline_ms={} \
+             (overload sheds typed Rejected/DeadlineExceeded responses)",
+            cfg.max_queue, cfg.default_deadline_ms,
+        );
+    }
     let stream: Vec<u16> =
         (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let wl = Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
@@ -382,7 +398,12 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
         }
         rxs.push(server.submit(prompt.clone(), max_new, SamplingParams::default()));
     }
-    let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    // clean finishes only — shed/deadline-exceeded requests still get
+    // typed responses and land on the report's failures line
+    let done = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.finish.is_ok()).unwrap_or(false))
+        .count();
     println!("completed {done}/{n} in {:.2}s", t0.elapsed().as_secs_f64());
     if let Some(r) = server.metrics_report() {
         println!("\n{r}");

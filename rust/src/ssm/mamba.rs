@@ -287,39 +287,62 @@ fn maybe_quant(site_on: bool, xs: &mut [f32], bits: u32, pctl: f64) {
 
 impl MambaModel {
     /// Load the fp16-method weight bundle for a tier.
+    ///
+    /// Every tensor is shape-checked against the tier's dimensions and
+    /// scanned for non-finite values before it reaches the kernels — a
+    /// truncated or corrupted `.qtz` fails here with a typed message
+    /// naming the tensor, not later as a silent slice panic or a NaN
+    /// stream mid-decode (ISSUE 7 failure model).
     pub fn from_qtz(tier: MambaTier, q: &QtzFile) -> Result<MambaModel, String> {
-        let f32s = |name: &str| -> Result<Vec<f32>, String> {
-            q.get(name)
-                .map(|t| t.to_f32())
-                .ok_or_else(|| format!("missing tensor {name}"))
+        let f32s = |name: &str, want: usize| -> Result<Vec<f32>, String> {
+            let t = q.get(name).ok_or_else(|| format!("missing tensor {name}"))?;
+            let xs = t.to_f32();
+            if xs.len() != want {
+                return Err(format!(
+                    "tensor {name}: {} values, expected {want} for tier dims",
+                    xs.len()
+                ));
+            }
+            if let Some(i) = xs.iter().position(|v| !v.is_finite()) {
+                return Err(format!("tensor {name}: non-finite value at index {i}"));
+            }
+            Ok(xs)
         };
+        let (d, di, n, rk, w, v) =
+            (tier.d_model, tier.d_inner, tier.d_state, tier.dt_rank, tier.d_conv, tier.vocab);
         let mut layers = Vec::with_capacity(tier.n_layer);
         for i in 0..tier.n_layer {
             let p = format!("layers.{i}.");
             layers.push(Layer {
-                norm: f32s(&format!("{p}norm.weight"))?,
-                in_proj: f32s(&format!("{p}in_proj.weight"))?,
-                conv_w: f32s(&format!("{p}conv1d.weight"))?,
-                conv_b: f32s(&format!("{p}conv1d.bias"))?,
-                x_proj: f32s(&format!("{p}x_proj.weight"))?,
-                dt_proj: f32s(&format!("{p}dt_proj.weight"))?,
-                dt_bias: f32s(&format!("{p}dt_proj.bias"))?,
-                a: f32s(&format!("{p}A_log"))?
+                norm: f32s(&format!("{p}norm.weight"), d)?,
+                in_proj: f32s(&format!("{p}in_proj.weight"), d * 2 * di)?,
+                conv_w: f32s(&format!("{p}conv1d.weight"), w * di)?,
+                conv_b: f32s(&format!("{p}conv1d.bias"), di)?,
+                x_proj: f32s(&format!("{p}x_proj.weight"), di * (rk + 2 * n))?,
+                dt_proj: f32s(&format!("{p}dt_proj.weight"), rk * di)?,
+                dt_bias: f32s(&format!("{p}dt_proj.bias"), di)?,
+                a: f32s(&format!("{p}A_log"), di * n)?
                     .iter()
                     .map(|v| -v.exp())
                     .collect(),
-                d: f32s(&format!("{p}D"))?,
-                out_proj: f32s(&format!("{p}out_proj.weight"))?,
+                d: f32s(&format!("{p}D"), di)?,
+                out_proj: f32s(&format!("{p}out_proj.weight"), di * d)?,
             });
         }
-        let di = tier.d_inner;
-        let ones = vec![1.0f32; tier.n_layer * di];
+        let gains = |name: &str| -> Result<Vec<f32>, String> {
+            // Optional calibration gains: absent → identity; present
+            // with the wrong shape → a hard error (half-written file).
+            match q.get(name) {
+                None => Ok(vec![1.0f32; tier.n_layer * di]),
+                Some(_) => f32s(name, tier.n_layer * di),
+            }
+        };
         Ok(MambaModel {
-            embedding: f32s("embedding.weight")?,
-            norm_f: f32s("norm_f.weight")?,
+            embedding: f32s("embedding.weight", v * d)?,
+            norm_f: f32s("norm_f.weight", d)?,
             layers,
-            g_x: f32s("__gains.g_x").unwrap_or_else(|_| ones.clone()),
-            g_y: f32s("__gains.g_y").unwrap_or(ones),
+            g_x: gains("__gains.g_x")?,
+            g_y: gains("__gains.g_y")?,
             tier,
         })
     }
@@ -634,6 +657,73 @@ mod tests {
         // a bundle missing the embedding must error, not panic
         let empty = QtzFile { names: vec![], tensors: BTreeMap::new() };
         assert!(MambaTier::infer_from_qtz("x", &empty).is_err());
+    }
+
+    #[test]
+    fn from_qtz_validates_shapes_and_finiteness() {
+        use crate::tensor::{qtz::QtzFile, Tensor};
+        use std::collections::BTreeMap;
+        let tier = MambaTier {
+            name: "tiny".into(),
+            d_model: 8,
+            n_layer: 2,
+            d_state: 4,
+            d_conv: 4,
+            d_inner: 16,
+            dt_rank: 2,
+            vocab: 16,
+        };
+        let build = |mutate: &dyn Fn(&mut BTreeMap<String, Tensor>)| -> QtzFile {
+            let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+            let mut put = |name: String, shape: &[usize]| {
+                let n: usize = shape.iter().product();
+                tensors.insert(name, Tensor::from_f32(shape, &vec![0.25; n]));
+            };
+            put("embedding.weight".into(), &[16, 8]);
+            put("norm_f.weight".into(), &[8]);
+            for li in 0..2 {
+                put(format!("layers.{li}.norm.weight"), &[8]);
+                put(format!("layers.{li}.in_proj.weight"), &[32, 8]);
+                put(format!("layers.{li}.conv1d.weight"), &[4, 16]);
+                put(format!("layers.{li}.conv1d.bias"), &[16]);
+                put(format!("layers.{li}.x_proj.weight"), &[10, 16]);
+                put(format!("layers.{li}.dt_proj.weight"), &[2, 16]);
+                put(format!("layers.{li}.dt_proj.bias"), &[16]);
+                put(format!("layers.{li}.A_log"), &[16, 4]);
+                put(format!("layers.{li}.D"), &[16]);
+                put(format!("layers.{li}.out_proj.weight"), &[16, 8]);
+            }
+            mutate(&mut tensors);
+            QtzFile { names: tensors.keys().cloned().collect(), tensors }
+        };
+
+        // a complete bundle loads, with absent gains defaulting to ones
+        let ok = MambaModel::from_qtz(tier.clone(), &build(&|_| {})).unwrap();
+        assert!(ok.g_x.iter().all(|v| *v == 1.0));
+
+        // truncated tensor → typed error naming the tensor, not a panic
+        let short = build(&|t| {
+            t.insert("layers.1.D".into(), Tensor::from_f32(&[3], &[0.1, 0.2, 0.3]));
+        });
+        let err = MambaModel::from_qtz(tier.clone(), &short).unwrap_err();
+        assert!(err.contains("layers.1.D") && err.contains("expected 16"), "{err}");
+
+        // non-finite weight → typed error with the offending index
+        let nan = build(&|t| {
+            let mut xs = vec![0.25f32; 16];
+            xs[7] = f32::NAN;
+            t.insert("layers.0.conv1d.bias".into(), Tensor::from_f32(&[16], &xs));
+        });
+        let err = MambaModel::from_qtz(tier.clone(), &nan).unwrap_err();
+        assert!(err.contains("layers.0.conv1d.bias") && err.contains("non-finite"), "{err}");
+
+        // present-but-wrong-shape gains are a hard error (half-written
+        // file), unlike absent gains which fall back to identity
+        let bad_gains = build(&|t| {
+            t.insert("__gains.g_x".into(), Tensor::from_f32(&[4], &[1.0; 4]));
+        });
+        let err = MambaModel::from_qtz(tier, &bad_gains).unwrap_err();
+        assert!(err.contains("__gains.g_x"), "{err}");
     }
 
     #[test]

@@ -99,6 +99,43 @@ fn fixture_bare_cast_fails() {
     assert_eq!(casts, 2, "both the `as i8` and the `as f32 *` must flag: {fs:?}");
 }
 
+#[test]
+fn fixture_native_leaky_release_fails() {
+    let txt = include_str!("fixtures/audit/native_leaky_release.rs.txt");
+    let fs = rules::scan_native_engine(rules::NATIVE_FILE, txt);
+    assert!(
+        fs.iter().any(|f| f.rule == "engine-no-unwrap"),
+        "admission-path .expect() not flagged: {fs:?}"
+    );
+    assert!(
+        fs.iter().any(|f| f.rule == "slot-reclaim" && f.line > 0),
+        "release outside finish_live not flagged: {fs:?}"
+    );
+    // exactly the two step() sites fire — the confined swap_remove +
+    // release inside finish_live itself must stay clean
+    assert_eq!(
+        fs.iter().filter(|f| f.rule == "slot-reclaim").count(),
+        2,
+        "confined reclaim inside finish_live wrongly flagged: {fs:?}"
+    );
+}
+
+#[test]
+fn native_engine_without_reclaim_point_is_whole_file_violation() {
+    let fs = rules::scan_native_engine(
+        rules::NATIVE_FILE,
+        "pub fn harvest(pool: &mut Pool) {\n    pool.release(0);\n}\n",
+    );
+    assert!(
+        fs.iter().any(|f| f.rule == "slot-reclaim" && f.line == 0),
+        "missing finish_live not reported as whole-file finding: {fs:?}"
+    );
+    assert!(
+        fs.iter().any(|f| f.rule == "slot-reclaim" && f.line == 2),
+        "stray release not flagged when finish_live is absent: {fs:?}"
+    );
+}
+
 // ---- seeded violations, end-to-end ---------------------------------
 
 /// Synthesize a minimal crate tree under CARGO_TARGET_TMPDIR with one
@@ -111,6 +148,7 @@ fn audit_planted(case: &str, rel: &str, fixture: &str) -> audit::Report {
     let _ = std::fs::remove_dir_all(&root);
     std::fs::create_dir_all(src.join("ssm")).expect("mk ssm");
     std::fs::create_dir_all(src.join("quant")).expect("mk quant");
+    std::fs::create_dir_all(src.join("coordinator")).expect("mk coordinator");
     std::fs::write(
         src.join("lib.rs"),
         "#![deny(unsafe_code)]\n\
@@ -145,6 +183,18 @@ fn planted_bad_tier_fails_end_to_end() {
     );
     assert!(!report.ok(), "planted 200k-wide tier came back clean");
     assert!(report.findings.iter().any(|f| f.rule == "k-bound"));
+}
+
+#[test]
+fn planted_leaky_native_engine_fails_end_to_end() {
+    let report = audit_planted(
+        "native",
+        "coordinator/native.rs",
+        include_str!("fixtures/audit/native_leaky_release.rs.txt"),
+    );
+    assert!(!report.ok(), "planted leaky engine came back clean");
+    assert!(report.findings.iter().any(|f| f.rule == "engine-no-unwrap"));
+    assert!(report.findings.iter().any(|f| f.rule == "slot-reclaim"));
 }
 
 #[test]

@@ -21,6 +21,16 @@
 //!   a decode step writes its conv window and ssm state as two
 //!   sub-steps; snapshots are only legal on the even boundary. Broken
 //!   variant: snapshot enabled mid-step captures a torn state.
+//! * **D — cancel vs harvest** (`coordinator/server.rs::Msg::Cancel` +
+//!   `native.rs::cancel`): a client cancel races the engine's own
+//!   admit → decode → harvest progression through the mailbox. The
+//!   waiter must receive exactly one response, and the state-pool slot
+//!   must be released exactly as many times as it was allocated,
+//!   whenever the cancel lands — before admission, mid-flight, or
+//!   after the natural finish (where it must degrade to a no-op, the
+//!   `cancel` returns-`None` path). Broken variant: a phase-blind
+//!   cancel that always frees + responds, double-answering a finished
+//!   request and freeing a slot that was never allocated.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -315,4 +325,145 @@ fn unguarded_snapshot_captures_torn_state() {
     .expect_err("an ungated snapshot must land mid-token in some schedule");
     let msg = panic_msg(err);
     assert!(msg.contains("torn snapshot"), "got: {msg}");
+}
+
+// ==== model D: cancel vs harvest ====================================
+
+/// Request lifecycle phases as the engine sees them.
+const QUEUED: u8 = 0;
+const LIVE: u8 = 1;
+const RETIRED: u8 = 2; // harvested naturally or cancelled
+
+#[derive(Clone, Default)]
+struct CancelState {
+    phase: u8,
+    /// slot currently held by the request
+    slot_held: bool,
+    allocated: u32,
+    released: u32,
+    /// responses delivered to the waiter (harvest or cancel)
+    responses: u32,
+    cancel_pending: bool,
+}
+
+/// One client thread sends one cancel at an arbitrary point; the
+/// engine drains the mailbox then advances the request one lifecycle
+/// stage per tick (admit, then decode+harvest). `blind` seeds the
+/// broken variant: a cancel handler that skips the phase check.
+struct CancelRace {
+    ticks: usize,
+    blind: bool,
+}
+
+impl Model for CancelRace {
+    type State = CancelState;
+
+    fn init(&self) -> CancelState {
+        CancelState::default()
+    }
+
+    /// thread 0 = client (one cancel); thread 1 = engine ticks
+    fn thread_steps(&self) -> Vec<usize> {
+        vec![1, self.ticks]
+    }
+
+    fn enabled(&self, st: &CancelState, t: usize, _step: usize) -> bool {
+        // the engine's recv blocks when there is neither work nor mail
+        t == 0 || st.phase != RETIRED || st.cancel_pending
+    }
+
+    fn step(&self, st: &mut CancelState, t: usize, _step: usize) {
+        if t == 0 {
+            st.cancel_pending = true;
+            return;
+        }
+        // tick: mailbox first (mirrors the server loop), then progress
+        if st.cancel_pending {
+            st.cancel_pending = false;
+            if self.blind {
+                // BROKEN: phase-blind — frees and answers regardless
+                // of whether the request was ever admitted or already
+                // finished
+                st.slot_held = false;
+                st.released += 1;
+                st.responses += 1;
+                st.phase = RETIRED;
+            } else {
+                match st.phase {
+                    QUEUED => {
+                        // cancelled while queued: no slot to release
+                        st.phase = RETIRED;
+                        st.responses += 1;
+                    }
+                    LIVE => {
+                        // the finish_live path: release + respond
+                        st.slot_held = false;
+                        st.released += 1;
+                        st.phase = RETIRED;
+                        st.responses += 1;
+                    }
+                    _ => {} // already finished: cancel is a no-op (None)
+                }
+            }
+            return;
+        }
+        match st.phase {
+            QUEUED => {
+                st.phase = LIVE;
+                st.slot_held = true;
+                st.allocated += 1;
+            }
+            LIVE => {
+                // natural finish through finish_live
+                st.slot_held = false;
+                st.released += 1;
+                st.phase = RETIRED;
+                st.responses += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn check_step(&self, st: &CancelState) {
+        assert!(st.responses <= 1, "waiter answered twice");
+        assert!(st.released <= st.allocated, "released a slot that was never allocated");
+        assert!(!(st.slot_held && st.phase == RETIRED), "retired request still holds its slot");
+    }
+
+    fn check_final(&self, st: &CancelState) {
+        assert_eq!(st.phase, RETIRED);
+        assert_eq!(st.responses, 1, "waiter must get exactly one response");
+        assert!(!st.slot_held, "slot leaked");
+        assert_eq!(st.released, st.allocated, "alloc/release imbalance");
+    }
+
+    fn quiescent_ok(&self, st: &CancelState, done: &[usize]) -> bool {
+        // spare engine ticks once the request retired and the mailbox
+        // drained are legitimate (the real loop blocks in recv) — but
+        // only with the full final invariant already satisfied
+        if done[0] != 1 {
+            return false;
+        }
+        self.check_final(st);
+        true
+    }
+}
+
+#[test]
+fn cancel_vs_harvest_delivers_exactly_one_response_in_all_schedules() {
+    // 3 ticks cover: cancel-before-admit, cancel-mid-flight, and
+    // cancel-after-finish (the no-op race from native.rs::cancel)
+    let ex = explore(&CancelRace { ticks: 3, blind: false });
+    assert!(ex.executions > 1, "gating collapsed the schedule space");
+}
+
+#[test]
+fn phase_blind_cancel_double_frees_or_double_answers() {
+    let err = catch_unwind(AssertUnwindSafe(|| explore(&CancelRace { ticks: 3, blind: true })))
+        .expect_err("a blind cancel must double-answer or double-free in some schedule");
+    let msg = panic_msg(err);
+    assert!(
+        msg.contains("answered twice") || msg.contains("never allocated"),
+        "got: {msg}"
+    );
 }

@@ -143,6 +143,45 @@ fn prop_state_pool_alloc_release_sequences() {
 }
 
 #[test]
+fn prop_state_pool_conservation_holds_under_churn() {
+    // the chaos suite calls `check_conservation()` after every engine
+    // tick (ARCHITECTURE §7.4); this property pins the checker itself:
+    // any interleaving of grants and releases keeps
+    // free + in_use == capacity with a duplicate-free free list.
+    forall(
+        "check_conservation holds after every alloc/release",
+        150,
+        |r| {
+            let cap = 1 + r.below(8) as usize;
+            let ops: Vec<u32> = (0..48).map(|_| r.next_u32()).collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let t = tier(8, 2);
+            let mut pool = SsmStatePool::new(&t, *cap);
+            let mut held: Vec<usize> = Vec::new();
+            for &op in ops {
+                if op % 2 == 0 {
+                    if let Some(s) = pool.alloc() {
+                        held.push(s);
+                    }
+                } else if !held.is_empty() {
+                    let i = (op / 2) as usize % held.len();
+                    pool.release(held.swap_remove(i));
+                }
+                if pool.check_conservation().is_err() || pool.in_use() != held.len() {
+                    return false;
+                }
+            }
+            for s in held.drain(..) {
+                pool.release(s);
+            }
+            pool.check_conservation().is_ok() && pool.in_use() == 0
+        },
+    );
+}
+
+#[test]
 fn prop_state_gather_scatter_roundtrip() {
     forall(
         "gather∘scatter is identity on live slots",
