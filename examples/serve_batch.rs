@@ -11,13 +11,17 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--bits 8] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
 //! `--kernels scalar|avx2|neon` forces the int8 kernel dispatch (also
 //! settable process-wide via `QUAMBA_KERNELS`); tokens are
 //! bit-identical across backends, only latency moves.
+//! `--bits 4` (native backend) serves the packed-nibble W4A8 tier
+//! instead of W8A8: half the GEMM weight bytes, per-group scales,
+//! activations still int8 — the quantized arm's label becomes
+//! `quamba-w4a8`.
 //! `--cache-mb M` (native backend, 0 = off) arms the prefix-sharing
 //! state cache with an M-megabyte snapshot budget and
 //! `--snapshot-stride N` interior cut points; `--shared-prefix L`
@@ -153,6 +157,17 @@ fn serve_xla(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
     Ok(())
 }
 
+/// `--bits 8|4` → the projection/head weight width for the quantized
+/// arm (8 = W8A8 per-tensor int8, 4 = W4A8 packed nibble with
+/// per-group scales; activations stay int8 either way).
+fn weight_bits(args: &Args) -> u8 {
+    match args.get_usize("bits", 8) {
+        8 => 8,
+        4 => 4,
+        b => panic!("--bits {b}: supported weight widths are 8 (W8A8) and 4 (W4A8)"),
+    }
+}
+
 /// `--fault-rate P` / `--fault-seed S` → a seeded [`FaultPlan`]
 /// (disabled at rate 0, the default). Arming it also installs the
 /// panic-hook filter so injected panics don't spray backtraces over
@@ -207,9 +222,10 @@ fn serve_burst(args: &Args, tier: &MambaTier) -> Result<()> {
         ..Default::default()
     };
     let faults_on = base_cfg.faults.enabled();
+    let bits = weight_bits(args);
     println!(
         "burst scenario: {n_dec} decoding requests, then {burst_n}×{burst_len}-token prompts \
-         arriving mid-decode (W8A8, tier {})",
+         arriving mid-decode (W{bits}A8, tier {})",
         tier.name
     );
     let mut gaps = Vec::new();
@@ -220,8 +236,10 @@ fn serve_burst(args: &Args, tier: &MambaTier) -> Result<()> {
         let mut rng = Pcg32::new(seed ^ 0x5EED);
         let calib: Vec<u16> =
             (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
-        let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
-        let cfg = NativeEngineConfig { prefill_chunk: pc, ..base_cfg.clone() };
+        let qcfg = QuantConfig { weight_bits: bits, ..QuantConfig::default() };
+        let qmodel = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
+        let cfg =
+            NativeEngineConfig { prefill_chunk: pc, weight_bits: bits, ..base_cfg.clone() };
         let (gap, report) =
             burst_itl_max_report(Box::new(qmodel), cfg, n_dec, max_new, burst_n, burst_len, seed)?;
         println!("  {label:<20} max inter-token gap = {gap:.3} ms");
@@ -260,17 +278,23 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
     if args.get_usize("burst", 0) > 0 {
         return serve_burst(args, &tier);
     }
+    let bits = weight_bits(args);
     let model = MambaModel::synthetic(tier.clone(), seed);
     let mut rng = Pcg32::new(seed ^ 0x5EED);
     let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
-    let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let qcfg = QuantConfig { weight_bits: bits, ..QuantConfig::default() };
+    let qmodel = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
+    let qname = if bits == 4 { "quamba-w4a8" } else { "quamba-w8a8" };
     println!(
-        "native tier {}: d_model={} n_layer={} d_inner={} | W8A8 weights {:.1} KiB (int8)",
+        "native tier {}: d_model={} n_layer={} d_inner={} | W{bits}A8 weights {:.1} KiB \
+         ({:.1} KiB in GEMMs{})",
         tier.name,
         tier.d_model,
         tier.n_layer,
         tier.d_inner,
-        qmodel.weight_bytes_i8() as f64 / 1024.0
+        qmodel.weight_bytes_i8() as f64 / 1024.0,
+        qmodel.gemm_weight_bytes() as f64 / 1024.0,
+        if bits == 4 { ", packed nibble + per-group scales" } else { ", int8" },
     );
     let stream: Vec<u16> = (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let mut wl = Workload::poisson(&stream, n, rate, 8, 40, max_new, 7);
@@ -313,9 +337,9 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
          (0 = unchunked/unlimited; chunking moves latency, never tokens)"
     );
     let faults = fault_plan(args);
-    let backends: Vec<(&str, Box<dyn StepModel + Send + Sync>)> =
-        vec![("fp32", Box::new(model)), ("quamba-w8a8", Box::new(qmodel))];
-    for (name, m) in backends {
+    let backends: Vec<(&str, u8, Box<dyn StepModel + Send + Sync>)> =
+        vec![("fp32", 32, Box::new(model)), (qname, bits, Box::new(qmodel))];
+    for (name, wb, m) in backends {
         println!(
             "\n=== native {}/{name}: {n} requests, ~{rate}/s, {max_new} new tokens each ===",
             tier.name
@@ -330,6 +354,7 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
                 prefill_chunk,
                 max_tokens_per_tick,
                 faults: faults.clone(),
+                weight_bits: wb,
                 ..Default::default()
             },
         )?;

@@ -18,6 +18,11 @@
 //!   requests share a 512-token prefix; the warm one must run ≥2x
 //!   fewer prefill token-steps (deterministic; wall-clock TTFT is
 //!   recorded alongside as `ttft_cold` / `ttft_warm`);
+//! * (ISSUE 8) the W4A8 packed-nibble tier: `gemm_w4a8` micro-bench
+//!   (naive grouped oracle vs blocked nibble path), `decode_step_w4a8`
+//!   and `tok_per_s_w4a8`/`tok_per_s_w8a8` — acceptance: W4A8 decode
+//!   tokens/s ≥ W8A8, and the nibble tier stores EXACTLY half the
+//!   W8A8 GEMM weight bytes (hard `assert_eq!`, not a report line);
 //! * persists the whole table to `BENCH_native_decode.json` (override
 //!   the path with `QUAMBA_BENCH_JSON`) so CI can diff runs against
 //!   the committed baseline (`tools/bench_diff.py`).
@@ -25,7 +30,8 @@
 use quamba::bench_support::{bench_ms, burst_itl_max, f2, iters, ms, Table};
 use quamba::coordinator::{NativeEngine, NativeEngineConfig, Request, SamplingParams};
 use quamba::quant::qlinear::{
-    matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, PackedWeightI8,
+    matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, matmul_w4a8_ref, matmul_w4a8_with,
+    PackedWeightI4, PackedWeightI8, I4_GROUP_K,
 };
 use quamba::quant::Kernels;
 use quamba::ssm::mamba::QuantSites;
@@ -59,6 +65,20 @@ fn main() {
     let mut rng = Pcg32::new(0x5EED);
     let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let qmodel = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    // ISSUE 8: same weights and calibration at the packed-nibble tier
+    let q4model = QuantizedMambaModel::from_model(
+        &model,
+        &calib,
+        &QuantConfig { weight_bits: 4, ..QuantConfig::default() },
+    );
+    // the tier's GEMM dims are all even, so the nibble tier stores
+    // EXACTLY half the W8A8 weight bytes — asserted, not just reported
+    let (w8_bytes, w4_bytes) = (qmodel.gemm_weight_bytes(), q4model.gemm_weight_bytes());
+    assert_eq!(
+        2 * w4_bytes,
+        w8_bytes,
+        "W4A8 must store exactly half the W8A8 GEMM weight bytes"
+    );
 
     let ctx = 32usize; // context each sequence has already consumed
     let b = 8usize;
@@ -120,6 +140,13 @@ fn main() {
         std::hint::black_box(logits.len());
     });
 
+    // W4A8: the packed-nibble tier on the identical step path
+    let mut st_q4 = pack(&q4model);
+    let q4_step = bench_ms(2, iters(40), || {
+        q4model.step_into(&toks, &mut st_q4, &mut scratch, &mut logits);
+        std::hint::black_box(logits.len());
+    });
+
     let mut t = Table::new(
         &format!("§Perf — native decode at B={b}, ctx={ctx}, tier {} (ms/advance-all)", tier.name),
         &["path", "ms", "speedup vs fp32 full-seq"],
@@ -134,6 +161,11 @@ fn main() {
         "W8A8 batched step (zero-alloc, fused i8 conv)".into(),
         ms(q_step.mean),
         format!("{}x", f2(before.mean / q_step.mean)),
+    ]);
+    t.row(vec![
+        format!("W4A8 batched step (packed nibble, {}B weights vs {}B)", w4_bytes, w8_bytes),
+        ms(q4_step.mean),
+        format!("{}x", f2(before.mean / q4_step.mean)),
     ]);
     t.print();
 
@@ -165,6 +197,39 @@ fn main() {
         kt.row(vec![shape.clone(), ms(*nv), ms(*bl), format!("{}x", f2(nv / bl))]);
     }
     kt.print();
+
+    // ---- kernel micro-bench: W4A8 packed-nibble GEMM, same shapes ----
+    // naive per-group oracle vs the blocked i4 fast path (bit-identical
+    // outputs; half the weight bytes of the int8 rows above)
+    let mut w4_rows: Vec<(String, f64, f64)> = Vec::new();
+    for (m, k, n) in [(b, tier.d_model, 2 * tier.d_inner), (64usize, tier.d_inner, 2 * tier.d_inner)]
+    {
+        let x_q: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let w_q4: Vec<i8> = (0..k * n).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+        let packed4 = PackedWeightI4::pack(&w_q4, k, n);
+        let group_k = I4_GROUP_K;
+        let n_groups = k.div_ceil(group_k);
+        let g_scales: Vec<f32> = (0..n_groups * n).map(|_| 0.01 + rng.f32() * 0.01).collect();
+        let s_x = 0.02f32;
+        let mut fout = vec![0.0f32; m * n];
+        let naive4 = bench_ms(3, iters(400), || {
+            matmul_w4a8_ref(&x_q, &w_q4, &g_scales, group_k, s_x, m, k, n, &mut fout);
+            std::hint::black_box(fout[0]);
+        });
+        let blocked4 = bench_ms(3, iters(400), || {
+            matmul_w4a8_with(Kernels::auto(), &x_q, &packed4, &g_scales, group_k, s_x, m, &mut fout);
+            std::hint::black_box(fout[0]);
+        });
+        w4_rows.push((format!("{m}x{k}x{n}"), naive4.mean, blocked4.mean));
+    }
+    let mut w4t = Table::new(
+        "§Perf — W4A8 GEMM kernel: naive grouped oracle vs blocked nibble (ms/call)",
+        &["shape (MxKxN)", "naive", "blocked", "speedup"],
+    );
+    for (shape, nv, bl) in &w4_rows {
+        w4t.row(vec![shape.clone(), ms(*nv), ms(*bl), format!("{}x", f2(nv / bl))]);
+    }
+    w4t.print();
 
     // ---- kernel micro-bench: forced scalar vs SIMD dispatch ----
     // ISSUE 3: the explicit-SIMD layer must beat the forced-scalar
@@ -414,6 +479,18 @@ fn main() {
         if speedup >= 2.0 { "PASS" } else { "FAIL" },
         speedup
     );
+    // ISSUE 8: the nibble tier must not pay for its density — decode
+    // throughput at least matches W8A8 on the standard bench tier
+    let tok_s_w8 = b as f64 * 1000.0 / q_step.mean;
+    let tok_s_w4 = b as f64 * 1000.0 / q4_step.mean;
+    println!(
+        "acceptance (W4A8 decode tokens/s ≥ W8A8 at B={b}, tier {}): {} \
+         ({:.0} vs {:.0} tok/s; weight bytes {w4_bytes} vs {w8_bytes}, exactly half)",
+        tier.name,
+        if tok_s_w4 >= tok_s_w8 { "PASS" } else { "FAIL" },
+        tok_s_w4,
+        tok_s_w8,
+    );
     println!(
         "kernel: blocked int8 GEMM {:.2}x vs naive (decode shape); prefill: full-seq {:.2}x vs stepwise",
         kernel_rows[0].1 / kernel_rows[0].2,
@@ -473,6 +550,26 @@ fn main() {
             speedup: before.mean / q_step.mean,
         },
         Entry {
+            op: "decode_step_w4a8",
+            shape: format!("B={b} tier={}", tier.name),
+            ms: q4_step.mean,
+            speedup: before.mean / q4_step.mean,
+        },
+        // per-token decode latency; `speedup` carries the tokens/s
+        // reading (the W4A8-vs-W8A8 acceptance quantity)
+        Entry {
+            op: "tok_per_s_w8a8",
+            shape: format!("B={b} tier={}", tier.name),
+            ms: q_step.mean / b as f64,
+            speedup: tok_s_w8,
+        },
+        Entry {
+            op: "tok_per_s_w4a8",
+            shape: format!("B={b} tier={}", tier.name),
+            ms: q4_step.mean / b as f64,
+            speedup: tok_s_w4,
+        },
+        Entry {
             op: "prefill_w8a8_stepwise",
             shape: format!("T={pt} tier={}", tier.name),
             ms: stepwise.mean,
@@ -488,6 +585,16 @@ fn main() {
     for (shape, nv, bl) in &kernel_rows {
         entries.push(Entry {
             op: "gemm_i8_blocked",
+            shape: shape.clone(),
+            ms: *bl,
+            speedup: nv / bl,
+        });
+    }
+    // W4A8 nibble GEMM rows: audited against MAX_SAFE_K_I4 (the op
+    // name contains "w4a8", which selects the i4 bound in quamba_audit)
+    for (shape, nv, bl) in &w4_rows {
+        entries.push(Entry {
+            op: "gemm_w4a8",
             shape: shape.clone(),
             ms: *bl,
             speedup: nv / bl,

@@ -21,8 +21,10 @@
 //! * **accumulator-overflow proofs** ([`shapes`]) — every `MambaTier`
 //!   literal in src/tests/benches and every gemm/conv shape in the
 //!   committed bench baseline keeps its K-role dims within the proven
-//!   bound; the runtime `debug_assert!` guards exist in the three int8
-//!   kernel entry points.
+//!   bound for its tier (|i8·i8| ≤ 2¹⁴ ⇒ `MAX_SAFE_K`; the packed
+//!   W4A8 GEMM's |i4·i8| ≤ 2¹⁰ ⇒ the 16× looser `MAX_SAFE_K_I4`);
+//!   the runtime `debug_assert!` guards exist in the int8 + int4
+//!   kernel entry points, each naming its own bound constant.
 //! * **scale-propagation audit** ([`scales`]) — each `QLayer` /
 //!   `QuantizedMambaModel` scale field is produced exactly once in
 //!   `from_calibration`, consumed by both execution bodies
@@ -155,8 +157,8 @@ pub fn audit_repo(root: &Path) -> Result<Report, String> {
         if rel == "quant/kernels.rs" {
             report.findings.extend(rules::check_const_proof(&rel, &text));
         }
-        if let Some(fn_name) = rules::guarded_entry_point(&rel) {
-            report.findings.extend(rules::check_guard_present(&rel, &text, fn_name));
+        for (fn_name, bound) in rules::guarded_entry_points(&rel) {
+            report.findings.extend(rules::check_guard_present(&rel, &text, fn_name, bound));
         }
         if rel == rules::NATIVE_FILE {
             report.findings.extend(rules::scan_native_engine(&rel, &text));

@@ -362,12 +362,19 @@ pub fn check_kernels_allow(rel: &str, text: &str) -> Vec<Finding> {
 }
 
 /// `quant/kernels.rs` must define the headroom constants and the
-/// compile-time proof, and the constants must still encode
-/// ⌊(2³¹−1)/2¹⁴⌋ (checked against the live values this auditor was
-/// compiled with).
+/// compile-time proofs for BOTH accumulator tiers — the i8×i8 bound
+/// ⌊(2³¹−1)/2¹⁴⌋ and the looser i4×i8 bound ⌊(2³¹−1)/2¹⁰⌋ — and the
+/// constants must still encode those quotients (checked against the
+/// live values this auditor was compiled with).
 pub fn check_const_proof(rel: &str, text: &str) -> Vec<Finding> {
     let mut out = Vec::new();
-    for required in ["pub const MAX_ABS_PROD_I8", "pub const MAX_SAFE_K", "const _: () = assert!"] {
+    for required in [
+        "pub const MAX_ABS_PROD_I8",
+        "pub const MAX_SAFE_K",
+        "pub const MAX_ABS_PROD_I4I8",
+        "pub const MAX_SAFE_K_I4",
+        "const _: () = assert!",
+    ] {
         if !text.contains(required) {
             out.push(Finding {
                 rule: "const-proof",
@@ -377,8 +384,8 @@ pub fn check_const_proof(rel: &str, text: &str) -> Vec<Finding> {
             });
         }
     }
-    // live cross-check: the constant this binary was compiled with must
-    // equal the independently re-derived bound
+    // live cross-check: the constants this binary was compiled with
+    // must equal the independently re-derived bounds
     let derived = (i32::MAX as i64 / (1i64 << 14)) as usize;
     if crate::quant::MAX_SAFE_K != derived {
         out.push(Finding {
@@ -391,23 +398,41 @@ pub fn check_const_proof(rel: &str, text: &str) -> Vec<Finding> {
             ),
         });
     }
+    let derived_i4 = (i32::MAX as i64 / (1i64 << 10)) as usize;
+    if crate::quant::MAX_SAFE_K_I4 != derived_i4 {
+        out.push(Finding {
+            rule: "const-proof",
+            file: rel.to_string(),
+            line: 0,
+            message: format!(
+                "MAX_SAFE_K_I4 = {} but ⌊i32::MAX / 2¹⁰⌋ = {derived_i4}",
+                crate::quant::MAX_SAFE_K_I4
+            ),
+        });
+    }
     out
 }
 
-/// Which files carry a mandatory `debug_assert!(.. MAX_SAFE_K ..)`
-/// runtime guard, and in which entry point.
-pub fn guarded_entry_point(rel: &str) -> Option<&'static str> {
+/// Which files carry mandatory `debug_assert!(.. bound ..)` runtime
+/// guards: (entry point, required bound constant) pairs. The W4A8 GEMM
+/// enjoys the looser |i4·i8| ≤ 2¹⁰ product bound, so its guard names
+/// `MAX_SAFE_K_I4`; everything i8×i8 stays on `MAX_SAFE_K`.
+pub fn guarded_entry_points(rel: &str) -> &'static [(&'static str, &'static str)] {
     match rel {
-        "quant/qlinear.rs" => Some("matmul_i8_blocked_with"),
-        "ssm/qmamba.rs" => Some("fused_conv_silu_i8_with"),
-        "ssm/scan.rs" => Some("selective_scan_q_into_with"),
-        _ => None,
+        "quant/qlinear.rs" => {
+            &[("matmul_i8_blocked_with", "MAX_SAFE_K"), ("matmul_w4a8_with", "MAX_SAFE_K_I4")]
+        }
+        "ssm/qmamba.rs" => &[("fused_conv_silu_i8_with", "MAX_SAFE_K")],
+        "ssm/scan.rs" => &[("selective_scan_q_into_with", "MAX_SAFE_K")],
+        _ => &[],
     }
 }
 
-/// The named entry point must contain a `debug_assert!` mentioning
-/// `MAX_SAFE_K` (the overflow guard the overflow-edge tests exercise).
-pub fn check_guard_present(rel: &str, text: &str, fn_name: &str) -> Vec<Finding> {
+/// The named entry point must contain a `debug_assert!` mentioning the
+/// required bound constant as a whole token (so a `MAX_SAFE_K_I4`
+/// guard cannot satisfy a `MAX_SAFE_K` requirement or vice versa) —
+/// the overflow guard the overflow-edge tests exercise.
+pub fn check_guard_present(rel: &str, text: &str, fn_name: &str, bound: &str) -> Vec<Finding> {
     let Some(start) = text.find(&format!("fn {fn_name}")) else {
         return vec![Finding {
             rule: "accumulator-bound",
@@ -417,14 +442,14 @@ pub fn check_guard_present(rel: &str, text: &str, fn_name: &str) -> Vec<Finding>
         }];
     };
     let body = body_after(text, start);
-    if body.contains("debug_assert!") && body.contains("MAX_SAFE_K") {
+    if body.contains("debug_assert!") && has_token(&body, bound) {
         Vec::new()
     } else {
         vec![Finding {
             rule: "accumulator-bound",
             file: rel.to_string(),
             line: 0,
-            message: format!("`{fn_name}` lacks its `debug_assert!(.. MAX_SAFE_K ..)` guard"),
+            message: format!("`{fn_name}` lacks its `debug_assert!(.. {bound} ..)` guard"),
         }]
     }
 }
@@ -676,14 +701,42 @@ mod tests {
                    \x20   debug_assert!(k <= MAX_SAFE_K);\n\
                    }\n\
                    pub fn other() {}\n";
-        assert!(check_guard_present("quant/qlinear.rs", src, "matmul_i8_blocked_with").is_empty());
+        assert!(check_guard_present("quant/qlinear.rs", src, "matmul_i8_blocked_with", "MAX_SAFE_K")
+            .is_empty());
         let missing = "pub fn matmul_i8_blocked_with(k: usize) {\n}\n\
                        // MAX_SAFE_K mentioned elsewhere, debug_assert! too — but\n\
                        // outside the body, so it must NOT satisfy the rule\n\
                        pub fn other() { debug_assert!(true); let _ = MAX_SAFE_K; }\n";
         assert_eq!(
-            check_guard_present("quant/qlinear.rs", missing, "matmul_i8_blocked_with").len(),
+            check_guard_present("quant/qlinear.rs", missing, "matmul_i8_blocked_with", "MAX_SAFE_K")
+                .len(),
             1
         );
+    }
+
+    #[test]
+    fn guard_check_distinguishes_the_two_bound_constants() {
+        // an i8-bound guard must NOT satisfy the i4 requirement (the
+        // whole-token match is what makes the tiers non-interchangeable)
+        let i8_guard = "pub fn matmul_w4a8_with(k: usize) {\n\
+                        \x20   debug_assert!(k <= MAX_SAFE_K);\n\
+                        }\n";
+        let fs = check_guard_present("quant/qlinear.rs", i8_guard, "matmul_w4a8_with", "MAX_SAFE_K_I4");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("MAX_SAFE_K_I4"), "{}", fs[0].message);
+        // ...and the i4-bound guard must not satisfy the i8 requirement
+        let i4_guard = "pub fn matmul_i8_blocked_with(k: usize) {\n\
+                        \x20   debug_assert!(k <= MAX_SAFE_K_I4);\n\
+                        }\n";
+        assert_eq!(
+            check_guard_present("quant/qlinear.rs", i4_guard, "matmul_i8_blocked_with", "MAX_SAFE_K")
+                .len(),
+            1
+        );
+        let i4_ok = "pub fn matmul_w4a8_with(k: usize) {\n\
+                     \x20   debug_assert!(k <= quant::MAX_SAFE_K_I4);\n\
+                     }\n";
+        assert!(check_guard_present("quant/qlinear.rs", i4_ok, "matmul_w4a8_with", "MAX_SAFE_K_I4")
+            .is_empty());
     }
 }

@@ -2,7 +2,9 @@
 //! in the tree and every gemm/conv shape string in the committed bench
 //! baseline must keep its K-role dimensions within
 //! [`crate::quant::MAX_SAFE_K`] — the compile-time-proven bound on how
-//! many |i8·i8| ≤ 2¹⁴ products one i32 accumulator can absorb.
+//! many |i8·i8| ≤ 2¹⁴ products one i32 accumulator can absorb. Bench
+//! rows for the packed W4A8 tier (op name contains `w4a8`) get the 16×
+//! looser [`crate::quant::MAX_SAFE_K_I4`] instead: |i4·i8| ≤ 2¹⁰.
 //!
 //! Which dimension plays K where (mirrors the `debug_assert!` guards
 //! in the kernel entry points):
@@ -21,7 +23,7 @@
 //! out-of-bound tier can't land even in not-yet-executed code.
 
 use super::Finding;
-use crate::quant::MAX_SAFE_K;
+use crate::quant::{MAX_SAFE_K, MAX_SAFE_K_I4};
 use crate::util::json;
 
 /// One `MambaTier { .. }` struct literal with its integer-literal
@@ -127,10 +129,23 @@ pub fn check_tier(t: &TierShape) -> Vec<Finding> {
     out
 }
 
+/// The proven K bound for one bench op: W4A8 GEMM rows (`"w4a8"` in
+/// the op name) absorb |i4·i8| ≤ 2¹⁰ products, so they get the 16×
+/// looser [`MAX_SAFE_K_I4`]; every other gemm/conv row is i8×i8 and
+/// stays on [`MAX_SAFE_K`].
+fn k_bound_for(op: &str) -> (usize, &'static str) {
+    if op.contains("w4a8") {
+        (MAX_SAFE_K_I4, "MAX_SAFE_K_I4")
+    } else {
+        (MAX_SAFE_K, "MAX_SAFE_K")
+    }
+}
+
 /// Audit the committed bench baseline: every `gemm_*` entry's K (the
 /// middle of its `MxKxN` shape token) and every `conv_*` entry's `w=`
-/// tap count must stay within the proven bound — a baseline row past
-/// it would "measure" a kernel that silently wraps.
+/// tap count must stay within the proven bound for its tier (see
+/// [`k_bound_for`]) — a baseline row past it would "measure" a kernel
+/// that silently wraps.
 pub fn audit_bench_json(rel: &str, text: &str) -> Vec<Finding> {
     let mut out = Vec::new();
     let doc = match json::parse(text) {
@@ -161,6 +176,7 @@ pub fn audit_bench_json(rel: &str, text: &str) -> Vec<Finding> {
             line: 0,
             message: format!("entries[{i}] ({op} \"{shape}\"): {message}"),
         };
+        let (k_max, k_max_name) = k_bound_for(op);
         if op.starts_with("gemm_") {
             // shape token is "MxKxN" (an optional " (label)" suffix follows)
             let tok = shape.split_whitespace().next().unwrap_or("");
@@ -168,8 +184,8 @@ pub fn audit_bench_json(rel: &str, text: &str) -> Vec<Finding> {
                 tok.split('x').filter_map(|p| p.parse::<usize>().ok()).collect();
             if dims.len() != 3 {
                 out.push(bad("gemm shape is not MxKxN".into()));
-            } else if dims[1] > MAX_SAFE_K {
-                out.push(bad(format!("gemm K = {} exceeds MAX_SAFE_K = {MAX_SAFE_K}", dims[1])));
+            } else if dims[1] > k_max {
+                out.push(bad(format!("gemm K = {} exceeds {k_max_name} = {k_max}", dims[1])));
             }
         } else if op.starts_with("conv_") {
             let w = shape
@@ -177,8 +193,8 @@ pub fn audit_bench_json(rel: &str, text: &str) -> Vec<Finding> {
                 .find_map(|t| t.strip_prefix("w=").and_then(|v| v.parse::<usize>().ok()));
             match w {
                 None => out.push(bad("conv shape has no parseable `w=` tap count".into())),
-                Some(w) if w > MAX_SAFE_K => {
-                    out.push(bad(format!("conv w = {w} exceeds MAX_SAFE_K = {MAX_SAFE_K}")));
+                Some(w) if w > k_max => {
+                    out.push(bad(format!("conv w = {w} exceeds {k_max_name} = {k_max}")));
                 }
                 _ => {}
             }
@@ -247,6 +263,33 @@ mod tests {
         let fs = audit_bench_json("b.json", bad);
         assert_eq!(fs.len(), 2, "{fs:?}");
         assert!(fs.iter().all(|f| f.rule == "bench-shape"));
+    }
+
+    #[test]
+    fn bench_json_selects_the_bound_per_tier() {
+        // a K between the two bounds: fatal for an i8×i8 row, fine for
+        // a w4a8 row (|i4·i8| ≤ 2¹⁰ gives 16× the headroom)
+        let mid_k = (MAX_SAFE_K + MAX_SAFE_K_I4) / 2;
+        let src = format!(
+            r#"{{"entries": [
+                {{"op": "gemm_w4a8", "shape": "8x{mid_k}x256"}},
+                {{"op": "gemm_i8_blocked", "shape": "8x{mid_k}x256"}},
+                {{"op": "gemm_w4a8_simd", "shape": "8x{over}x256"}}
+            ]}}"#,
+            over = MAX_SAFE_K_I4 + 1
+        );
+        let fs = audit_bench_json("b.json", &src);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(
+            fs.iter().any(|f| f.message.contains("entries[1]")
+                && f.message.contains("MAX_SAFE_K =")),
+            "mid-K i8 row must flag against MAX_SAFE_K: {fs:?}"
+        );
+        assert!(
+            fs.iter().any(|f| f.message.contains("entries[2]")
+                && f.message.contains("MAX_SAFE_K_I4 =")),
+            "past-bound w4a8 row must flag against MAX_SAFE_K_I4: {fs:?}"
+        );
     }
 
     #[test]

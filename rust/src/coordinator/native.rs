@@ -161,6 +161,12 @@ pub struct NativeEngineConfig {
     /// deterministic fault injection ([`FaultPlan::none`] default:
     /// zero faults, near-zero hot-path cost)
     pub faults: FaultPlan,
+    /// weight width of the model this engine serves (8 = W8A8, 4 =
+    /// W4A8 packed nibble). Advisory/reporting metadata: the engine
+    /// receives a pre-built [`StepModel`], so the width is decided at
+    /// model construction (`QuantConfig::weight_bits`) — this field
+    /// records it for telemetry and `quamba serve --bits` plumbing.
+    pub weight_bits: u8,
 }
 
 impl Default for NativeEngineConfig {
@@ -180,6 +186,7 @@ impl Default for NativeEngineConfig {
             default_deadline_ms: 0.0,
             clock: Clock::Wall,
             faults: FaultPlan::none(),
+            weight_bits: 8,
         }
     }
 }

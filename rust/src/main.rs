@@ -12,6 +12,7 @@
 //!                      [--cache-mb 8] [--snapshot-stride 64]
 //!                      [--prefill-chunk 64] [--max-tokens-per-tick 0]
 //!                      [--threads N] [--kernels auto|scalar|avx2|neon]
+//!                      [--bits 8|4]
 //!   quamba eval-ppl    [--tier m130] [--methods fp16,quamba] [--windows 16]
 //!   quamba eval-tasks  [--tier m130] [--methods fp16,quamba] [--examples 40]
 //!   quamba profile     [--tier m2p8] [--methods fp16,quamba] [--seqs 256,512]
@@ -80,7 +81,9 @@ fn print_help() {
          \x20              --default-deadline-ms applies a total-latency\n\
          \x20              deadline to every request (0 = off, both);\n\
          \x20              --calib-file feeds a real W8A8 calibration\n\
-         \x20              token stream instead of synthetic tokens)\n\
+         \x20              token stream instead of synthetic tokens;\n\
+         \x20              --bits 4 serves the packed-nibble W4A8 tier\n\
+         \x20              — half the weight bytes, per-group scales)\n\
          \x20 eval-ppl     perplexity on wiki-synth / pile-synth (Table 2)\n\
          \x20 eval-tasks   six zero-shot tasks (Table 3)\n\
          \x20 profile      TTFT/TPOT latency profile (Table 1)\n\
@@ -292,6 +295,10 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     let max_new = args.get_usize("max-new", 32);
     let method = args.get_or("method", "quamba").to_string();
     let seed = args.get_u64("seed", 7);
+    let bits = args.get_usize("bits", 8);
+    if bits != 8 && bits != 4 {
+        return Err(anyhow!("--bits {bits}: supported weight widths are 8 (W8A8) and 4 (W4A8)"));
+    }
 
     let model = match args.get("weights") {
         Some(path) => {
@@ -343,9 +350,17 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
                 (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect()
             }
         };
-        Box::new(QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default()))
+        let qcfg = QuantConfig { weight_bits: bits as u8, ..QuantConfig::default() };
+        let qm = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
+        println!(
+            "quantized tier: W{bits}A8 ({} KiB GEMM weights{})",
+            qm.gemm_weight_bytes() as f64 / 1024.0,
+            if bits == 4 { ", packed nibble + per-group scales" } else { "" },
+        );
+        Box::new(qm)
     };
     let cfg = NativeEngineConfig {
+        weight_bits: if method == "fp32" { 32 } else { bits as u8 },
         threads: args.get_usize("threads", 1),
         kernel_backend: args
             .get("kernels")

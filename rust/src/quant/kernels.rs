@@ -81,6 +81,32 @@ const _: () = assert!(MAX_SAFE_K as i64 * MAX_ABS_PROD_I8 <= i32::MAX as i64);
 const _: () = assert!((MAX_SAFE_K as i64 + 1) * MAX_ABS_PROD_I8 > i32::MAX as i64);
 const _: () = assert!(MAX_SAFE_K == (1 << 17) - 1);
 
+/// Largest magnitude of a single i4·i8 product (the W4A8 tier:
+/// packed-nibble weights in −8..=7 against int8 activations):
+/// `(-8) · (-128) = 2¹⁰ = 1024` — 16× smaller per term than the
+/// i8·i8 worst case, so the same i32 accumulator admits a 16× longer
+/// dot product before it can wrap.
+pub const MAX_ABS_PROD_I4I8: i64 = 1 << 10;
+
+/// Largest dot-product length K for which a worst-case i4·i8 sum is
+/// guaranteed to fit an `i32` accumulator:
+/// `K · 2¹⁰ ≤ i32::MAX  ⇔  K ≤ ⌊(2³¹ − 1) / 2¹⁰⌋ = 2²¹ − 1 = 2097151`.
+///
+/// The looser bound matters because the W4A8 GEMM
+/// ([`crate::quant::qlinear::matmul_w4a8_with`]) accumulates one
+/// K-*group* per integer tile, but the guard is stated against the
+/// full K so the proof holds even if grouping is ever widened to the
+/// whole axis. `quamba_audit` checks W4A8 bench shapes against this
+/// bound (and i8 shapes against the tighter [`MAX_SAFE_K`]).
+pub const MAX_SAFE_K_I4: usize = (i32::MAX as i64 / MAX_ABS_PROD_I4I8) as usize;
+
+// Compile-time overflow proof for the i4×i8 tier, mirroring the i8
+// proof above: the bound fits, one more worst-case product does not,
+// and the derived value is pinned in closed form.
+const _: () = assert!(MAX_SAFE_K_I4 as i64 * MAX_ABS_PROD_I4I8 <= i32::MAX as i64);
+const _: () = assert!((MAX_SAFE_K_I4 as i64 + 1) * MAX_ABS_PROD_I4I8 > i32::MAX as i64);
+const _: () = assert!(MAX_SAFE_K_I4 == (1 << 21) - 1);
+
 /// One int8 execution backend. `Scalar` exists everywhere; the SIMD
 /// variants are constructible only where the hardware supports them
 /// (checked at runtime, see [`KernelBackend::is_available`]).
@@ -271,6 +297,65 @@ impl Kernels {
         }
     }
 
+    /// Blocked W4A8 GEMM register tile over one K-*group*: `acc`
+    /// (rows × [`GEMM_NB`], fully overwritten) = `x` (rows of `kg`
+    /// activations at row stride `stride`) · `blk` (a packed-nibble
+    /// K-major block, two i4 codes per byte: low nibble = even K row,
+    /// high nibble = odd K row, sign4-decoded `(nib ^ 8) − 8`).
+    ///
+    /// `blk` must start at an even K row of the packed layout (the
+    /// group offset in bytes is `(g·G/2)·NB` — per-group packing keeps
+    /// groups even-sized so nibble pairs never straddle a group).
+    /// All accumulation is exact i32 (|i4·i8| ≤ 2¹⁰, see
+    /// [`MAX_SAFE_K_I4`]), so every backend is bit-identical to the
+    /// naive decode-then-multiply loop.
+    pub fn gemm_rows_i4(
+        self,
+        x: &[i8],
+        kg: usize,
+        stride: usize,
+        rows: usize,
+        blk: &[u8],
+        acc: &mut [i32],
+    ) {
+        assert!(rows >= 1 && rows <= GEMM_MR, "rows {rows} outside 1..={GEMM_MR}");
+        assert!(stride >= kg, "row stride {stride} shorter than group width {kg}");
+        assert!(x.len() >= (rows - 1) * stride + kg, "x tile too short");
+        assert!(blk.len() >= kg.div_ceil(2) * GEMM_NB, "nibble block too short");
+        assert!(acc.len() >= rows * GEMM_NB, "acc tile too short");
+        match self.backend {
+            KernelBackend::Scalar => scalar::gemm_rows_i4(x, kg, stride, rows, blk, acc),
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Avx2 is only constructible when runtime
+                // detection succeeded (try_new/for_backend/detect).
+                unsafe {
+                    if rows == GEMM_MR {
+                        avx2::gemm_i4_x4(x, kg, stride, blk, acc);
+                    } else {
+                        for r in 0..rows {
+                            avx2::gemm_i4_x1(&x[r * stride..], kg, blk, &mut acc[r * GEMM_NB..]);
+                        }
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                unreachable!("AVX2 backend constructed on non-x86_64");
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: Neon is only constructible on aarch64, where
+                // NEON is a mandatory target feature.
+                unsafe {
+                    for r in 0..rows {
+                        neon::gemm_i4_x1(&x[r * stride..], kg, blk, &mut acc[r * GEMM_NB..]);
+                    }
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                unreachable!("NEON backend constructed on non-aarch64");
+            }
+        }
+    }
+
     /// Element-wise widening multiply-accumulate:
     /// `acc[i] += a[i] as i32 * b[i] as i32` — the fused integer conv's
     /// per-tap channel sweep. Exact integers, bit-identical everywhere.
@@ -369,6 +454,42 @@ mod scalar {
                     tile[jj] += xv * wrow[jj] as i32;
                 }
                 p += 1;
+            }
+            acc[r * GEMM_NB..r * GEMM_NB + GEMM_NB].copy_from_slice(&tile);
+        }
+    }
+
+    /// Sign-4 decode of a nibble: 0..=15 → −8..=7 via `(n ^ 8) − 8`.
+    #[inline(always)]
+    fn sign4(nib: u8) -> i32 {
+        ((nib & 0x0F) as i32 ^ 8) - 8
+    }
+
+    pub fn gemm_rows_i4(x: &[i8], kg: usize, stride: usize, rows: usize, blk: &[u8], acc: &mut [i32]) {
+        debug_assert!(rows <= GEMM_MR);
+        for r in 0..rows {
+            let xrow = &x[r * stride..r * stride + kg];
+            let mut tile = [0i32; GEMM_NB];
+            // one byte row = two K rows (low nibble first)
+            let kpb = kg / 2;
+            for pb in 0..kpb {
+                let x0 = xrow[2 * pb] as i32;
+                let x1 = xrow[2 * pb + 1] as i32;
+                let brow = &blk[pb * GEMM_NB..pb * GEMM_NB + GEMM_NB];
+                for jj in 0..GEMM_NB {
+                    let b = brow[jj];
+                    tile[jj] += x0 * sign4(b) + x1 * sign4(b >> 4);
+                }
+            }
+            if kg & 1 == 1 {
+                // odd group tail: the byte's high nibble is pack-time
+                // zero padding; multiply it by 0 anyway so the op
+                // sequence matches the SIMD odd-tail path exactly
+                let x0 = xrow[kg - 1] as i32;
+                let brow = &blk[kpb * GEMM_NB..kpb * GEMM_NB + GEMM_NB];
+                for jj in 0..GEMM_NB {
+                    tile[jj] += x0 * sign4(brow[jj]);
+                }
             }
             acc[r * GEMM_NB..r * GEMM_NB + GEMM_NB].copy_from_slice(&tile);
         }
@@ -520,6 +641,142 @@ mod avx2 {
         }
     }
 
+    /// Decode a 16-byte packed-nibble row into its two i8 weight rows
+    /// ((even K, odd K)): mask / shift out each nibble, then the sign4
+    /// fix `(n ^ 8) − 8` applied lane-wise.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn nib_rows(b: __m128i) -> (__m128i, __m128i) {
+        // SAFETY: pure register arithmetic; AVX2 enabled per contract.
+        unsafe {
+            let m = _mm_set1_epi8(0x0F);
+            let eight = _mm_set1_epi8(8);
+            let lo = _mm_and_si128(b, m);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), m);
+            (
+                _mm_sub_epi8(_mm_xor_si128(lo, eight), eight),
+                _mm_sub_epi8(_mm_xor_si128(hi, eight), eight),
+            )
+        }
+    }
+
+    /// One activation row × one packed-nibble K-group block → 16 i32
+    /// sums. One 128-bit load yields TWO K rows (the nibble payoff:
+    /// half the weight traffic of the i8 kernel), which are exactly the
+    /// K-pair `pmaddwd` wants.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available, `x.len() >= kg`,
+    /// `blk.len() >= ceil(kg/2) * 16`, `acc.len() >= 16`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_i4_x1(x: &[i8], kg: usize, blk: &[u8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled and every
+        // pointer access stays inside the caller-guaranteed
+        // `ceil(kg/2) * GEMM_NB` / GEMM_NB extents.
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut acc_lo = _mm256_setzero_si256();
+            let mut acc_hi = _mm256_setzero_si256();
+            let kpb = kg / 2;
+            for pb in 0..kpb {
+                let (w0, w1) = nib_rows(_mm_loadu_si128(bp.add(pb * GEMM_NB) as *const __m128i));
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let xv = _mm256_set1_epi32(pair(x[2 * pb], x[2 * pb + 1]));
+                acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(wlo, xv));
+                acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(whi, xv));
+            }
+            if kg & 1 == 1 {
+                // odd tail: the high nibble is pack-time zero padding
+                // and the second activation is forced to 0 — exact
+                // either way
+                let (w0, w1) = nib_rows(_mm_loadu_si128(bp.add(kpb * GEMM_NB) as *const __m128i));
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let xv = _mm256_set1_epi32(pair(x[kg - 1], 0));
+                acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(wlo, xv));
+                acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(whi, xv));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, acc_lo);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(8) as *mut __m256i, acc_hi);
+        }
+    }
+
+    /// Four activation rows × one packed-nibble block: each decoded
+    /// nibble pair is widened once and reused by all four rows'
+    /// accumulators — the W4A8 decode-path workhorse.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available, `x.len() >= 3 * stride +
+    /// kg` (row stride `stride >= kg`), `blk.len() >= ceil(kg/2) * 16`,
+    /// `acc.len() >= 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_i4_x4(x: &[i8], kg: usize, stride: usize, blk: &[u8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, AVX2 is enabled, the four rows
+        // are stride-`stride` within `x`, and every pointer access
+        // stays inside the caller-guaranteed extents.
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut a0l = _mm256_setzero_si256();
+            let mut a0h = _mm256_setzero_si256();
+            let mut a1l = _mm256_setzero_si256();
+            let mut a1h = _mm256_setzero_si256();
+            let mut a2l = _mm256_setzero_si256();
+            let mut a2h = _mm256_setzero_si256();
+            let mut a3l = _mm256_setzero_si256();
+            let mut a3h = _mm256_setzero_si256();
+            let kpb = kg / 2;
+            for pb in 0..kpb {
+                let (w0, w1) = nib_rows(_mm_loadu_si128(bp.add(pb * GEMM_NB) as *const __m128i));
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let p = 2 * pb;
+                let x0 = _mm256_set1_epi32(pair(x[p], x[p + 1]));
+                a0l = _mm256_add_epi32(a0l, _mm256_madd_epi16(wlo, x0));
+                a0h = _mm256_add_epi32(a0h, _mm256_madd_epi16(whi, x0));
+                let x1 = _mm256_set1_epi32(pair(x[stride + p], x[stride + p + 1]));
+                a1l = _mm256_add_epi32(a1l, _mm256_madd_epi16(wlo, x1));
+                a1h = _mm256_add_epi32(a1h, _mm256_madd_epi16(whi, x1));
+                let x2 = _mm256_set1_epi32(pair(x[2 * stride + p], x[2 * stride + p + 1]));
+                a2l = _mm256_add_epi32(a2l, _mm256_madd_epi16(wlo, x2));
+                a2h = _mm256_add_epi32(a2h, _mm256_madd_epi16(whi, x2));
+                let x3 = _mm256_set1_epi32(pair(x[3 * stride + p], x[3 * stride + p + 1]));
+                a3l = _mm256_add_epi32(a3l, _mm256_madd_epi16(wlo, x3));
+                a3h = _mm256_add_epi32(a3h, _mm256_madd_epi16(whi, x3));
+            }
+            if kg & 1 == 1 {
+                let (w0, w1) = nib_rows(_mm_loadu_si128(bp.add(kpb * GEMM_NB) as *const __m128i));
+                let wlo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(w0, w1));
+                let whi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(w0, w1));
+                let p = kg - 1;
+                let x0 = _mm256_set1_epi32(pair(x[p], 0));
+                a0l = _mm256_add_epi32(a0l, _mm256_madd_epi16(wlo, x0));
+                a0h = _mm256_add_epi32(a0h, _mm256_madd_epi16(whi, x0));
+                let x1 = _mm256_set1_epi32(pair(x[stride + p], 0));
+                a1l = _mm256_add_epi32(a1l, _mm256_madd_epi16(wlo, x1));
+                a1h = _mm256_add_epi32(a1h, _mm256_madd_epi16(whi, x1));
+                let x2 = _mm256_set1_epi32(pair(x[2 * stride + p], 0));
+                a2l = _mm256_add_epi32(a2l, _mm256_madd_epi16(wlo, x2));
+                a2h = _mm256_add_epi32(a2h, _mm256_madd_epi16(whi, x2));
+                let x3 = _mm256_set1_epi32(pair(x[3 * stride + p], 0));
+                a3l = _mm256_add_epi32(a3l, _mm256_madd_epi16(wlo, x3));
+                a3h = _mm256_add_epi32(a3h, _mm256_madd_epi16(whi, x3));
+            }
+            let ap = acc.as_mut_ptr();
+            _mm256_storeu_si256(ap as *mut __m256i, a0l);
+            _mm256_storeu_si256(ap.add(8) as *mut __m256i, a0h);
+            _mm256_storeu_si256(ap.add(16) as *mut __m256i, a1l);
+            _mm256_storeu_si256(ap.add(24) as *mut __m256i, a1h);
+            _mm256_storeu_si256(ap.add(32) as *mut __m256i, a2l);
+            _mm256_storeu_si256(ap.add(40) as *mut __m256i, a2h);
+            _mm256_storeu_si256(ap.add(48) as *mut __m256i, a3l);
+            _mm256_storeu_si256(ap.add(56) as *mut __m256i, a3h);
+        }
+    }
+
     /// # Safety
     /// Caller guarantees AVX2 is available and the three slices have
     /// equal length.
@@ -614,6 +871,86 @@ mod neon {
                 let xv = vdup_n_s8(x[p]);
                 let lo = vmull_s8(vget_low_s8(w), xv);
                 let hi = vmull_s8(vget_high_s8(w), xv);
+                a0 = vaddw_s16(a0, vget_low_s16(lo));
+                a1 = vaddw_s16(a1, vget_high_s16(lo));
+                a2 = vaddw_s16(a2, vget_low_s16(hi));
+                a3 = vaddw_s16(a3, vget_high_s16(hi));
+            }
+            let ap = acc.as_mut_ptr();
+            vst1q_s32(ap, a0);
+            vst1q_s32(ap.add(4), a1);
+            vst1q_s32(ap.add(8), a2);
+            vst1q_s32(ap.add(12), a3);
+        }
+    }
+
+    /// Decode a 16-byte packed-nibble row into its two i8 weight rows
+    /// (even K, odd K): mask / shift out each nibble, then the sign4
+    /// fix `(n ^ 8) − 8` applied lane-wise.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON is available.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn nib_rows(b: uint8x16_t) -> (int8x16_t, int8x16_t) {
+        // SAFETY: pure register arithmetic; NEON enabled per contract.
+        unsafe {
+            let m = vdupq_n_u8(0x0F);
+            let eight = vdupq_n_s8(8);
+            let lo = vreinterpretq_s8_u8(vandq_u8(b, m));
+            let hi = vreinterpretq_s8_u8(vandq_u8(vshrq_n_u8::<4>(b), m));
+            (
+                vsubq_s8(veorq_s8(lo, eight), eight),
+                vsubq_s8(veorq_s8(hi, eight), eight),
+            )
+        }
+    }
+
+    /// One activation row × one packed-nibble K-group block → 16 i32
+    /// sums. One 128-bit load yields TWO K rows (half the weight
+    /// traffic of the i8 kernel); each decoded row goes through the
+    /// same exact `vmull_s8`/`vaddw_s16` ladder as [`gemm_x1`], so the
+    /// result is bit-identical to [`super::scalar::gemm_rows_i4`].
+    ///
+    /// # Safety
+    /// Caller guarantees NEON is available, `x.len() >= kg`,
+    /// `blk.len() >= ceil(kg/2) * 16`, `acc.len() >= 16`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_i4_x1(x: &[i8], kg: usize, blk: &[u8], acc: &mut [i32]) {
+        // SAFETY: per the fn contract, NEON is enabled and every
+        // pointer access stays inside the caller-guaranteed
+        // `ceil(kg/2) * GEMM_NB` / 16 extents.
+        unsafe {
+            let bp = blk.as_ptr();
+            let mut a0 = vdupq_n_s32(0);
+            let mut a1 = vdupq_n_s32(0);
+            let mut a2 = vdupq_n_s32(0);
+            let mut a3 = vdupq_n_s32(0);
+            let kpb = kg / 2;
+            for pb in 0..kpb {
+                let (w0, w1) = nib_rows(vld1q_u8(bp.add(pb * GEMM_NB)));
+                let xv0 = vdup_n_s8(x[2 * pb]);
+                let lo = vmull_s8(vget_low_s8(w0), xv0);
+                let hi = vmull_s8(vget_high_s8(w0), xv0);
+                a0 = vaddw_s16(a0, vget_low_s16(lo));
+                a1 = vaddw_s16(a1, vget_high_s16(lo));
+                a2 = vaddw_s16(a2, vget_low_s16(hi));
+                a3 = vaddw_s16(a3, vget_high_s16(hi));
+                let xv1 = vdup_n_s8(x[2 * pb + 1]);
+                let lo = vmull_s8(vget_low_s8(w1), xv1);
+                let hi = vmull_s8(vget_high_s8(w1), xv1);
+                a0 = vaddw_s16(a0, vget_low_s16(lo));
+                a1 = vaddw_s16(a1, vget_high_s16(lo));
+                a2 = vaddw_s16(a2, vget_low_s16(hi));
+                a3 = vaddw_s16(a3, vget_high_s16(hi));
+            }
+            if kg & 1 == 1 {
+                // odd tail: the byte's high nibble is pack-time zero
+                // padding — only the low-nibble K row is live
+                let (w0, _) = nib_rows(vld1q_u8(bp.add(kpb * GEMM_NB)));
+                let xv0 = vdup_n_s8(x[kg - 1]);
+                let lo = vmull_s8(vget_low_s8(w0), xv0);
+                let hi = vmull_s8(vget_high_s8(w0), xv0);
                 a0 = vaddw_s16(a0, vget_low_s16(lo));
                 a1 = vaddw_s16(a1, vget_high_s16(lo));
                 a2 = vaddw_s16(a2, vget_low_s16(hi));
@@ -739,6 +1076,71 @@ mod tests {
                     let mut got = vec![7i32; rows * GEMM_NB]; // poison
                     kers.gemm_rows(&x, k, rows, &blk, &mut got);
                     assert_eq!(want, got, "{}: k={k} rows={rows}", backend.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i4_k_bound_is_tight() {
+        // the i4×i8 accumulator bound in decimal: 2²¹ − 1 worst-case
+        // 2¹⁰ products still fit an i32, one more would not.
+        assert_eq!(MAX_SAFE_K_I4, 2_097_151);
+        assert_eq!(MAX_SAFE_K_I4 as i64 * MAX_ABS_PROD_I4I8, 2_147_482_624);
+        assert!(MAX_SAFE_K_I4 as i64 * MAX_ABS_PROD_I4I8 + MAX_ABS_PROD_I4I8 > i32::MAX as i64);
+        // 16× looser than the i8 tier, exactly
+        assert_eq!(MAX_SAFE_K_I4 + 1, 16 * (MAX_SAFE_K + 1));
+    }
+
+    /// Nibble-decode reference: the dispatch contract in one loop.
+    fn ref_i4(x: &[i8], kg: usize, stride: usize, rows: usize, blk: &[u8]) -> Vec<i32> {
+        let sign4 = |n: u8| ((n & 0x0F) as i32 ^ 8) - 8;
+        let mut want = vec![0i32; rows * GEMM_NB];
+        for (ri, w) in want.chunks_mut(GEMM_NB).enumerate() {
+            for p in 0..kg {
+                let byte_row = &blk[(p / 2) * GEMM_NB..(p / 2) * GEMM_NB + GEMM_NB];
+                let xv = x[ri * stride + p] as i32;
+                for (jj, b) in byte_row.iter().enumerate() {
+                    let code = if p & 1 == 0 { sign4(*b) } else { sign4(*b >> 4) };
+                    w[jj] += xv * code;
+                }
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn gemm_rows_i4_matches_reference_every_backend() {
+        // full-range i8 activations against every nibble byte value,
+        // across odd group widths (pack-padding tail), strides wider
+        // than the group, and every tile height
+        let mut r = Pcg32::new(0x1D4);
+        for backend in Kernels::available() {
+            let kers = Kernels::for_backend(backend);
+            for kg in [0usize, 1, 2, 3, 7, 16, 33, 64, 129] {
+                for rows in 1..=GEMM_MR {
+                    for extra in [0usize, 5] {
+                        let stride = kg + extra;
+                        let x = rand_i8(&mut r, ((rows - 1) * stride + kg).max(1));
+                        let mut blk: Vec<u8> =
+                            (0..kg.div_ceil(2) * GEMM_NB).map(|_| r.below(256) as u8).collect();
+                        if kg & 1 == 1 {
+                            // pack-time contract: odd-K tail bytes carry
+                            // zero high nibbles
+                            for b in &mut blk[(kg / 2) * GEMM_NB..] {
+                                *b &= 0x0F;
+                            }
+                        }
+                        let want = ref_i4(&x, kg, stride, rows, &blk);
+                        let mut got = vec![7i32; rows * GEMM_NB]; // poison
+                        kers.gemm_rows_i4(&x, kg, stride, rows, &blk, &mut got);
+                        assert_eq!(
+                            want,
+                            got,
+                            "{}: kg={kg} rows={rows} stride={stride}",
+                            backend.label()
+                        );
+                    }
                 }
             }
         }

@@ -14,7 +14,9 @@ pub mod hadamard;
 pub mod kernels;
 pub mod qlinear;
 
-pub use kernels::{KernelBackend, Kernels, MAX_ABS_PROD_I8, MAX_SAFE_K};
+pub use kernels::{
+    KernelBackend, Kernels, MAX_ABS_PROD_I4I8, MAX_ABS_PROD_I8, MAX_SAFE_K, MAX_SAFE_K_I4,
+};
 
 /// Narrow a quantizer code to its i8 storage type. [`quantize_one`]
 /// clamps to `[qmin, qmax] ⊆ [-128, 127]` for every nbits ≤ 8, so the
@@ -27,6 +29,27 @@ pub fn code_to_i8(code: i32) -> i8 {
         "quantizer code {code} outside i8 — nbits > 8 reached an i8 storage path"
     );
     code as i8 // audit:allow(cast) — range proven by the assert above
+}
+
+/// Pack two i4 codes (each in `−8..=7`) into one byte: low nibble =
+/// `lo` (the even K row), high nibble = `hi` (the odd K row). The
+/// storage dual of [`sign4`]; odd-K tails pass `hi = 0`, which decodes
+/// back to 0.
+#[inline(always)]
+pub fn pack_nibble_pair(lo: i32, hi: i32) -> u8 {
+    debug_assert!(
+        (-8..=7).contains(&lo) && (-8..=7).contains(&hi),
+        "i4 code pair ({lo}, {hi}) outside −8..=7 — a wider quantizer reached the nibble packer"
+    );
+    ((lo & 0x0F) | ((hi & 0x0F) << 4)) as u8 // audit:allow(cast) — both nibbles masked to 4 bits above
+}
+
+/// Sign-4 decode of one nibble: `0..=15 → −8..=7` via `(n ^ 8) − 8`,
+/// the exact inverse of [`pack_nibble_pair`] per nibble and the same
+/// lane-wise op sequence the i4 GEMM kernels use.
+#[inline(always)]
+pub fn sign4(nib: u8) -> i8 {
+    code_to_i8((i32::from(nib & 0x0F) ^ 8) - 8)
 }
 
 /// Dequantize one i8 code: exact `i8 → f32` widening (every i8 is
@@ -444,5 +467,18 @@ mod tests {
         let s8 = scale_sym(amax(&xs), 8);
         let s4 = scale_sym(amax(&xs), 4);
         assert!(mse_of_quant(&xs, s4, 4) > 10.0 * mse_of_quant(&xs, s8, 8));
+    }
+
+    #[test]
+    fn nibble_pack_roundtrips_every_code_pair() {
+        for lo in -8..=7i32 {
+            for hi in -8..=7i32 {
+                let b = pack_nibble_pair(lo, hi);
+                assert_eq!(sign4(b) as i32, lo, "low nibble of ({lo}, {hi})");
+                assert_eq!(sign4(b >> 4) as i32, hi, "high nibble of ({lo}, {hi})");
+            }
+        }
+        // the odd-K pad convention: a zero high nibble decodes to 0
+        assert_eq!(sign4(pack_nibble_pair(-8, 0) >> 4), 0);
     }
 }

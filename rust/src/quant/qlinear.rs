@@ -20,6 +20,17 @@
 //! The `*_into` methods take caller-owned scratch so the decode hot
 //! path performs no heap allocation per call (see
 //! [`crate::ssm::step::StepScratch`]).
+//!
+//! A second weight tier halves the bytes again: [`PackedWeightI4`] /
+//! [`QLinearI4`] store two i4 codes per byte in the same column-blocked
+//! K-major layout, with per-group scales along K ([`I4_GROUP_K`]) to
+//! hold accuracy at 4 bits (Q-S5 / QS4D recipe). Activations stay int8
+//! (§4.2 percentile clipping is tuned for 8-bit activations); only the
+//! weight side narrows. [`matmul_w4a8`] executes group-by-group with
+//! exact i32 accumulation per group (|i4·i8| ≤ 2¹⁰, see
+//! [`crate::quant::MAX_SAFE_K_I4`]) and a fixed per-element f32
+//! epilogue order, so every backend is bit-identical to the retained
+//! naive oracle [`matmul_w4a8_ref`].
 
 use crate::quant;
 use crate::quant::kernels::Kernels;
@@ -139,6 +150,208 @@ pub fn matmul_i8_blocked_with(
     }
 }
 
+/// Default K-group size for per-group i4 weight scales: long enough to
+/// amortize the f32 epilogue per group, short enough that one outlier
+/// row cannot flatten a whole column's resolution (QS4D uses the same
+/// order of magnitude).
+pub const I4_GROUP_K: usize = 128;
+
+/// Int4 weight repacked for the blocked kernel: same ⌈N/NB⌉ column
+/// blocks as [`PackedWeightI8`], but each block stores **byte rows** of
+/// K-row *pairs* — `data[jb·kp·NB + pb·NB + jj]` holds K rows `2·pb`
+/// (low nibble) and `2·pb + 1` (high nibble) of column `jb·NB + jj`,
+/// where `kp = ⌈K/2⌉`. Odd-K tails pack a zero high nibble, which
+/// sign4-decodes to 0, so the kernels never need a scalar remainder
+/// for the K axis. Codes are sign4 (`−8..=7`); decode is
+/// [`quant::sign4`].
+pub struct PackedWeightI4 {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<u8>,
+}
+
+impl PackedWeightI4 {
+    /// Pack row-major i4 codes (stored in i8, each in `−8..=7`).
+    pub fn pack(w_q4: &[i8], k: usize, n: usize) -> PackedWeightI4 {
+        assert_eq!(w_q4.len(), k * n);
+        let nb = GEMM_NB;
+        let nblk = n.div_ceil(nb);
+        let kp = k.div_ceil(2);
+        let mut data = vec![0u8; nblk * kp * nb];
+        for jb in 0..nblk {
+            let jlo = jb * nb;
+            let jw = nb.min(n - jlo);
+            let base = jb * kp * nb;
+            for pb in 0..kp {
+                for jj in 0..jw {
+                    let lo = i32::from(w_q4[2 * pb * n + jlo + jj]);
+                    let hi = if 2 * pb + 1 < k {
+                        i32::from(w_q4[(2 * pb + 1) * n + jlo + jj])
+                    } else {
+                        0 // odd-K pad: decodes to 0
+                    };
+                    data[base + pb * nb + jj] = quant::pack_nibble_pair(lo, hi);
+                }
+            }
+        }
+        PackedWeightI4 { k, n, data }
+    }
+
+    /// Unpack one code (row `p`, column `j`) — the test/oracle
+    /// accessor; the hot path never goes through this.
+    pub fn code(&self, p: usize, j: usize) -> i8 {
+        assert!(p < self.k && j < self.n);
+        let nb = GEMM_NB;
+        let kp = self.k.div_ceil(2);
+        let byte = self.data[(j / nb) * kp * nb + (p / 2) * nb + (j % nb)];
+        if p & 1 == 0 {
+            quant::sign4(byte)
+        } else {
+            quant::sign4(byte >> 4)
+        }
+    }
+
+    /// Packed bytes (≥ ⌈k/2⌉·n due to tail-block padding) — exactly
+    /// half the [`PackedWeightI8`] footprint for even K.
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Naive W4A8 oracle: out (M×N) f32 = x_q (M×K) i8 · w_q4 (K×N) i4,
+/// dequantized per K-group — for group `g` covering rows
+/// `[g·group_k, min(K, (g+1)·group_k))`, the group's exact i32 dot
+/// product is scaled by `s_x · scales[g·N + j]` and f32-accumulated in
+/// ascending group order. [`matmul_w4a8`] commits to the *same*
+/// per-element IEEE op sequence, so the two are bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_w4a8_ref(
+    x_q: &[i8],
+    w_q4: &[i8],
+    scales: &[f32],
+    group_k: usize,
+    s_x: f32,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(w_q4.len(), k * n);
+    let n_groups = k.div_ceil(group_k);
+    assert_eq!(scales.len(), n_groups * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut f = 0.0f32;
+            for g in 0..n_groups {
+                let k0 = g * group_k;
+                let k1 = k.min(k0 + group_k);
+                let mut acc = 0i32;
+                for p in k0..k1 {
+                    acc += i32::from(x_q[i * k + p]) * i32::from(w_q4[p * n + j]);
+                }
+                f += quant::dq_i32(acc, s_x * scales[g * n + j]);
+            }
+            out[i * n + j] = f;
+        }
+    }
+}
+
+/// Blocked W4A8 GEMM on the process-wide auto-selected backend. See
+/// [`matmul_w4a8_with`].
+pub fn matmul_w4a8(
+    x_q: &[i8],
+    w: &PackedWeightI4,
+    scales: &[f32],
+    group_k: usize,
+    s_x: f32,
+    m: usize,
+    out: &mut [f32],
+) {
+    matmul_w4a8_with(Kernels::auto(), x_q, w, scales, group_k, s_x, m, out)
+}
+
+/// Blocked W4A8 GEMM on an explicit kernel backend: out (M×N) f32 =
+/// x_q (M×K) i8 · packed (K×N) i4, per-group dequant.
+///
+/// Loop order (block, row-tile, group): each K-group of a column block
+/// is reduced to exact i32 sums in registers ([`Kernels::gemm_rows_i4`])
+/// and immediately folded into an f32 tile at that group's scale, in
+/// ascending group order — element-for-element the op sequence of
+/// [`matmul_w4a8_ref`], so every backend is bit-identical to the
+/// oracle. `group_k` must be even (≥ 2) so groups start on whole bytes
+/// of the nibble layout; only the final group may be odd-length (K
+/// odd), which the kernels handle via the zero-padded high nibble.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_w4a8_with(
+    kers: Kernels,
+    x_q: &[i8],
+    w: &PackedWeightI4,
+    scales: &[f32],
+    group_k: usize,
+    s_x: f32,
+    m: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x_q.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    assert!(group_k >= 2 && group_k & 1 == 0, "i4 group_k {group_k} must be even (whole bytes)");
+    let n_groups = k.div_ceil(group_k);
+    assert_eq!(scales.len(), n_groups * n);
+    // accumulator-overflow guard, stated against the FULL K even though
+    // accumulation is per group (≤ group_k ≤ k terms), so the proof
+    // stays valid if grouping is ever widened to the whole axis: a
+    // worst-case i4·i8 dot product sums K · 2¹⁰ (see the const proof in
+    // quant::kernels)
+    debug_assert!(
+        k <= quant::MAX_SAFE_K_I4,
+        "GEMM K = {k} exceeds MAX_SAFE_K_I4 = {}: a worst-case i4·i8 dot product \
+         of this length overflows the i32 accumulator",
+        quant::MAX_SAFE_K_I4
+    );
+    let nb = GEMM_NB;
+    let nblk = n.div_ceil(nb);
+    let kp = k.div_ceil(2);
+    let mut tile = [0i32; GEMM_MR * GEMM_NB];
+    let mut ftile = [0.0f32; GEMM_MR * GEMM_NB];
+    for jb in 0..nblk {
+        let blk = &w.data[jb * kp * nb..(jb + 1) * kp * nb];
+        let jlo = jb * nb;
+        let jw = nb.min(n - jlo);
+        let mut i = 0;
+        while i < m {
+            let rows = GEMM_MR.min(m - i);
+            ftile[..rows * nb].fill(0.0);
+            for g in 0..n_groups {
+                let k0 = g * group_k;
+                let kg = k.min(k0 + group_k) - k0;
+                // group_k is even, so k0/2 lands on a whole byte row
+                kers.gemm_rows_i4(
+                    &x_q[i * k + k0..],
+                    kg,
+                    k,
+                    rows,
+                    &blk[(k0 / 2) * nb..],
+                    &mut tile,
+                );
+                for r in 0..rows {
+                    for jj in 0..jw {
+                        ftile[r * nb + jj] +=
+                            quant::dq_i32(tile[r * nb + jj], s_x * scales[g * n + jlo + jj]);
+                    }
+                }
+            }
+            for r in 0..rows {
+                out[(i + r) * n + jlo..(i + r) * n + jlo + jw]
+                    .copy_from_slice(&ftile[r * nb..r * nb + jw]);
+            }
+            i += rows;
+        }
+    }
+}
+
 /// A linear layer with per-tensor symmetric int8 weights and a static
 /// input scale supplied per call (baked at calibration time, Eq. 2).
 /// The weight lives ONLY in the [`PackedWeightI8`] layout the hot
@@ -250,6 +463,133 @@ impl QLinear {
         let mut x_q = Vec::new();
         let mut acc = Vec::new();
         self.forward_into(Kernels::auto(), x, s_x, m, &mut x_q, &mut acc, out);
+        x_q
+    }
+}
+
+/// The W4A8 sibling of [`QLinear`]: packed-nibble symmetric i4 weights
+/// with **per-group** scales along K (one `f32` per (group, column)
+/// pair), activations still int8 at a static per-tensor scale. Resident
+/// weight memory is half the int8 tier; the scale table adds
+/// `⌈K/group_k⌉·N` f32s (≈ 3% at `group_k = 128`).
+pub struct QLinearI4 {
+    pub k: usize,
+    pub n: usize,
+    /// blocked K-major nibble layout, packed once at construction
+    packed: PackedWeightI4,
+    /// `scales[g·n + j]` dequantizes K-group `g` of column `j`; offline
+    /// folds (e.g. the Hadamard 1/d_inner) multiply into every entry
+    scales: Vec<f32>,
+    /// K-group length; even so groups start on whole nibble bytes
+    pub group_k: usize,
+    pub bias: Option<Vec<f32>>,
+}
+
+impl QLinearI4 {
+    /// Quantize an fp32 (K×N) row-major weight at the default group
+    /// size [`I4_GROUP_K`].
+    pub fn from_f32(w: &[f32], k: usize, n: usize, bias: Option<Vec<f32>>) -> QLinearI4 {
+        QLinearI4::from_f32_grouped(w, k, n, bias, I4_GROUP_K)
+    }
+
+    /// Quantize with an explicit K-group size (`group_k` even, ≥ 2):
+    /// each (group, column) gets its own symmetric 4-bit scale from the
+    /// group's amax, so one heavy row only costs resolution within its
+    /// own group.
+    pub fn from_f32_grouped(
+        w: &[f32],
+        k: usize,
+        n: usize,
+        bias: Option<Vec<f32>>,
+        group_k: usize,
+    ) -> QLinearI4 {
+        assert_eq!(w.len(), k * n);
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), n);
+        }
+        assert!(group_k >= 2 && group_k & 1 == 0, "i4 group_k {group_k} must be even");
+        let n_groups = k.div_ceil(group_k);
+        let mut scales = vec![0.0f32; n_groups * n];
+        let mut w_q4 = vec![0i8; k * n];
+        for g in 0..n_groups {
+            let k0 = g * group_k;
+            let k1 = k.min(k0 + group_k);
+            for j in 0..n {
+                let mut amax = 0.0f32;
+                for p in k0..k1 {
+                    amax = amax.max(w[p * n + j].abs());
+                }
+                let s = quant::scale_sym(amax, 4);
+                scales[g * n + j] = s;
+                for p in k0..k1 {
+                    w_q4[p * n + j] = quant::code_to_i8(quant::quantize_one(w[p * n + j], s, 4));
+                }
+            }
+        }
+        let packed = PackedWeightI4::pack(&w_q4, k, n);
+        QLinearI4 { k, n, packed, scales, group_k, bias }
+    }
+
+    /// Fold an extra factor into every group scale (compute-invariant
+    /// offline transform, paper §3.3) — the i4 analogue of
+    /// [`QLinear::fold_scale`].
+    pub fn fold_scale(mut self, f: f32) -> QLinearI4 {
+        for s in &mut self.scales {
+            *s *= f;
+        }
+        self
+    }
+
+    /// Logical packed weight bytes (⌈k·n/2⌉ — two codes per byte;
+    /// excludes the layout's tail padding and the f32 scale table).
+    pub fn weight_bytes(&self) -> usize {
+        (self.k * self.n).div_ceil(2)
+    }
+
+    /// x_q (M×K) i8 at static scale `s_x` → f32 (M×N) into `out`.
+    /// Allocation-free: the group accumulators live in stack tiles
+    /// inside [`matmul_w4a8_with`], so no i32 scratch vector is needed
+    /// (the structural difference from [`QLinear::forward_q_into`]).
+    pub fn forward_q_into(&self, kers: Kernels, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
+        assert_eq!(x_q.len(), m * self.k);
+        assert_eq!(out.len(), m * self.n);
+        matmul_w4a8_with(kers, x_q, &self.packed, &self.scales, self.group_k, s_x, m, out);
+        if let Some(b) = &self.bias {
+            for row in out.chunks_exact_mut(self.n) {
+                for (o, &bv) in row.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+        }
+    }
+
+    /// Quantize fp32 input rows at `s_x` into caller-owned `x_q` (int8
+    /// — activations stay 8-bit in W4A8), then run the blocked nibble
+    /// matmul. Allocation-free after warmup.
+    pub fn forward_into(
+        &self,
+        kers: Kernels,
+        x: &[f32],
+        s_x: f32,
+        m: usize,
+        x_q: &mut Vec<i8>,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), m * self.k);
+        quant::quantize_sym_into(x, s_x, 8, x_q);
+        self.forward_q_into(kers, x_q, s_x, m, out);
+    }
+
+    /// Allocating convenience (auto-selected backend).
+    pub fn forward_q(&self, x_q: &[i8], s_x: f32, m: usize, out: &mut [f32]) {
+        self.forward_q_into(Kernels::auto(), x_q, s_x, m, out);
+    }
+
+    /// Quantize then multiply (auto-selected backend); returns the i8
+    /// codes so callers can reuse them.
+    pub fn forward(&self, x: &[f32], s_x: f32, m: usize, out: &mut [f32]) -> Vec<i8> {
+        let mut x_q = Vec::new();
+        self.forward_into(Kernels::auto(), x, s_x, m, &mut x_q, out);
         x_q
     }
 }
@@ -403,5 +743,202 @@ mod tests {
         for (u, v) in a.iter().zip(&b) {
             assert!((u * 0.5 - v).abs() < 1e-6);
         }
+    }
+
+    fn rand_i4(r: &mut Pcg32, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (r.below(16) as i32 - 8) as i8).collect()
+    }
+
+    #[test]
+    fn packed_i4_roundtrips_on_awkward_shapes() {
+        // odd K (pad nibble), K not a multiple of any group, N off the
+        // block width — every code must come back exactly
+        let mut r = Pcg32::new(0x44);
+        for (k, n) in [(1usize, 1usize), (5, 3), (7, 16), (8, 17), (129, 33), (2, 48)] {
+            let w_q4 = rand_i4(&mut r, k * n);
+            let packed = PackedWeightI4::pack(&w_q4, k, n);
+            for p in 0..k {
+                for j in 0..n {
+                    assert_eq!(packed.code(p, j), w_q4[p * n + j], "({k},{n}) code ({p},{j})");
+                }
+            }
+            assert_eq!(packed.packed_bytes(), n.div_ceil(GEMM_NB) * GEMM_NB * k.div_ceil(2));
+        }
+    }
+
+    #[test]
+    fn w4a8_blocked_bit_identical_to_naive_oracle() {
+        // sweep shapes where K is odd / not a multiple of the group and
+        // N straddles block boundaries, on EVERY available backend
+        let mut r = Pcg32::new(0x4A8);
+        let cases = [
+            // (m, k, n, group_k)
+            (1usize, 7usize, 5usize, 4usize),
+            (3, 17, 33, 8),
+            (8, 64, 48, 16),
+            (2, 5, 16, 128), // single short group
+            (4, 1, 1, 2),
+            (5, 130, 20, 64), // last group length 2
+            (4, 129, 16, 64), // last group odd
+        ];
+        for (m, k, n, group_k) in cases {
+            let x_q: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let w_q4 = rand_i4(&mut r, k * n);
+            let n_groups = k.div_ceil(group_k);
+            let scales: Vec<f32> =
+                (0..n_groups * n).map(|_| 0.003 + 0.001 * r.below(32) as f32).collect();
+            let s_x = 0.021f32;
+            let mut want = vec![0.0f32; m * n];
+            matmul_w4a8_ref(&x_q, &w_q4, &scales, group_k, s_x, m, k, n, &mut want);
+            let packed = PackedWeightI4::pack(&w_q4, k, n);
+            for backend in Kernels::available() {
+                let mut got = vec![7.0f32; m * n]; // poison
+                matmul_w4a8_with(
+                    Kernels::for_backend(backend),
+                    &x_q,
+                    &packed,
+                    &scales,
+                    group_k,
+                    s_x,
+                    m,
+                    &mut got,
+                );
+                for (jj, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} backend, shape ({m},{k},{n}) g{group_k} elem {jj}: {a} vs {b}",
+                        backend.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w4a8_exact_at_proven_i4_k_bound() {
+        // worst-case dot product at K = MAX_SAFE_K_I4: every term is
+        // (-8)·(-128) = 2¹⁰, so the i32 accumulator lands at
+        // 2097151 · 1024 = 2_147_482_624, a hair under i32::MAX. K is
+        // odd here, so this also exercises the pad-nibble tail at the
+        // extreme. One group spanning all of K makes the accumulation
+        // truly length-K.
+        let k = quant::MAX_SAFE_K_I4;
+        let group_k = k + 1; // even; single group of length k
+        let x_q = vec![-128i8; k];
+        let w_q4 = vec![-8i8; k]; // K×1 matrix
+        let packed = PackedWeightI4::pack(&w_q4, k, 1);
+        let want = (k as i64 * quant::MAX_ABS_PROD_I4I8) as f32;
+        for backend in Kernels::available() {
+            let mut out = vec![0.0f32; 1];
+            matmul_w4a8_with(
+                Kernels::for_backend(backend),
+                &x_q,
+                &packed,
+                &[1.0],
+                group_k,
+                1.0,
+                1,
+                &mut out,
+            );
+            assert_eq!(
+                out[0].to_bits(),
+                want.to_bits(),
+                "{} backend wrapped at the i4 K bound",
+                backend.label()
+            );
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "MAX_SAFE_K_I4")]
+    fn w4a8_rejects_k_one_past_bound() {
+        let k = quant::MAX_SAFE_K_I4 + 1;
+        let x_q = vec![-128i8; k];
+        let w_q4 = vec![-8i8; k];
+        let packed = PackedWeightI4::pack(&w_q4, k, 1);
+        let mut out = vec![0.0f32; 1];
+        matmul_w4a8_with(Kernels::scalar(), &x_q, &packed, &[1.0], k, 1.0, 1, &mut out);
+    }
+
+    #[test]
+    fn qlinear_i4_close_to_f32_linear() {
+        // per-group scales must hold 4-bit error to the coarse-grid
+        // budget even with a bias and a non-trivial group count
+        let mut r = Pcg32::new(0x14);
+        let (m, k, n) = (3usize, 64usize, 16usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
+        let bias: Vec<f32> = (0..n).map(|_| r.normal() * 0.1).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let ql = QLinearI4::from_f32_grouped(&w, k, n, Some(bias.clone()), 16);
+        let s_x = crate::quant::scale_sym(crate::quant::amax(&x), 8);
+        let mut got = vec![0.0f32; m * n];
+        ql.forward(&x, s_x, m, &mut got);
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = bias[j];
+                for p in 0..k {
+                    acc += x[i * k + p] * w[p * n + j];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        // error budget: k accumulations of (s_x/2 · |w| + s4/2 · |x|)
+        // with the 4-bit weight step ≈ amax/7 per group
+        let tol = k as f32 * (s_x * 0.2 + (0.8 / 7.0) * 3.0);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < tol, "{a} vs {b} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn qlinear_i4_halves_weight_bytes() {
+        let mut r = Pcg32::new(0x48);
+        let (k, n) = (64usize, 48usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
+        let q8 = QLinear::from_f32(&w, k, n, None);
+        let q4 = QLinearI4::from_f32(&w, k, n, None);
+        assert_eq!(2 * q4.weight_bytes(), q8.weight_bytes());
+        // odd k·n rounds the half byte up
+        let w_odd: Vec<f32> = (0..3 * 3).map(|_| r.normal()).collect();
+        assert_eq!(QLinearI4::from_f32(&w_odd, 3, 3, None).weight_bytes(), 5);
+    }
+
+    #[test]
+    fn i4_fold_scale_scales_output() {
+        let mut r = Pcg32::new(0x4F);
+        let (k, n) = (8usize, 4usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+        let ql = QLinearI4::from_f32_grouped(&w, k, n, None, 4);
+        let folded = QLinearI4::from_f32_grouped(&w, k, n, None, 4).fold_scale(0.5);
+        let x_q: Vec<i8> = (0..k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let (mut a, mut b) = (vec![0.0f32; n], vec![0.0f32; n]);
+        ql.forward_q(&x_q, 0.1, 1, &mut a);
+        folded.forward_q(&x_q, 0.1, 1, &mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u * 0.5 - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn i4_forward_into_reuses_scratch_capacity() {
+        let mut r = Pcg32::new(0x4C);
+        let (m, k, n) = (2usize, 24usize, 20usize);
+        let w: Vec<f32> = (0..k * n).map(|_| r.normal() * 0.2).collect();
+        let ql = QLinearI4::from_f32_grouped(&w, k, n, None, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let kers = Kernels::auto();
+        let mut x_q = Vec::new();
+        let mut out = vec![0.0f32; m * n];
+        ql.forward_into(kers, &x, 0.05, m, &mut x_q, &mut out);
+        let cq = x_q.capacity();
+        let pq = x_q.as_ptr();
+        for _ in 0..5 {
+            ql.forward_into(kers, &x, 0.05, m, &mut x_q, &mut out);
+        }
+        assert_eq!(x_q.capacity(), cq);
+        assert_eq!(x_q.as_ptr(), pq, "x_q scratch reallocated");
     }
 }

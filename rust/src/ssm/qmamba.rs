@@ -48,7 +48,7 @@ use super::step::{
 };
 use crate::quant;
 use crate::quant::hadamard::FwhtPlan;
-use crate::quant::qlinear::QLinear;
+use crate::quant::qlinear::{QLinear, QLinearI4};
 use crate::quant::Kernels;
 
 /// Quantizer configuration (the paper's "quamba" method point).
@@ -56,17 +56,92 @@ use crate::quant::Kernels;
 pub struct QuantConfig {
     /// percentile clip for the SSM-input scale (§4.2; 100 = abs-max)
     pub x_percentile: f64,
+    /// projection/head weight width: 8 (per-tensor int8, the paper's
+    /// W8A8 recipe) or 4 (packed-nibble W4A8 with per-group scales —
+    /// activations stay int8 either way, §4.2's clipping is tuned for
+    /// 8-bit activation grids)
+    pub weight_bits: u8,
 }
 
 impl Default for QuantConfig {
     fn default() -> Self {
-        QuantConfig { x_percentile: 99.999 }
+        QuantConfig { x_percentile: 99.999, weight_bits: 8 }
+    }
+}
+
+/// A projection at the configured weight width: per-tensor int8
+/// ([`QLinear`]) or packed-nibble int4 with per-group scales
+/// ([`QLinearI4`]). Both arms expose the same `forward*_into` shape —
+/// quantized-i8 activations in, f32 out, caller-owned scratch — so the
+/// step/prefill bodies are width-agnostic; the i4 arm simply never
+/// touches the i32 `acc` vector (its group accumulators are stack
+/// tiles).
+enum QProj {
+    I8(QLinear),
+    I4(QLinearI4),
+}
+
+impl QProj {
+    fn from_f32(w: &[f32], k: usize, n: usize, bias: Option<Vec<f32>>, bits: u8) -> QProj {
+        match bits {
+            8 => QProj::I8(QLinear::from_f32(w, k, n, bias)),
+            4 => QProj::I4(QLinearI4::from_f32(w, k, n, bias)),
+            _ => panic!("unsupported weight_bits {bits}: native tiers are 8 (int8) or 4 (nibble)"),
+        }
+    }
+
+    fn fold_scale(self, f: f32) -> QProj {
+        match self {
+            QProj::I8(q) => QProj::I8(q.fold_scale(f)),
+            QProj::I4(q) => QProj::I4(q.fold_scale(f)),
+        }
+    }
+
+    /// Logical packed weight bytes at the configured width (k·n for
+    /// int8, ⌈k·n/2⌉ for the nibble tier; scale tables excluded).
+    fn weight_bytes(&self) -> usize {
+        match self {
+            QProj::I8(q) => q.weight_bytes(),
+            QProj::I4(q) => q.weight_bytes(),
+        }
+    }
+
+    fn forward_q_into(
+        &self,
+        kers: Kernels,
+        x_q: &[i8],
+        s_x: f32,
+        m: usize,
+        acc: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
+        match self {
+            QProj::I8(q) => q.forward_q_into(kers, x_q, s_x, m, acc, out),
+            QProj::I4(q) => q.forward_q_into(kers, x_q, s_x, m, out),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_into(
+        &self,
+        kers: Kernels,
+        x: &[f32],
+        s_x: f32,
+        m: usize,
+        x_q: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
+        match self {
+            QProj::I8(q) => q.forward_into(kers, x, s_x, m, x_q, acc, out),
+            QProj::I4(q) => q.forward_into(kers, x, s_x, m, x_q, out),
+        }
     }
 }
 
 struct QLayer {
     norm: Vec<f32>,
-    in_proj: QLinear, // (d, 2di)
+    in_proj: QProj, // (d, 2di)
     s_xin: f32,
     /// int8 depthwise conv weights (W, di) — integer-domain execution
     conv_w_q: Vec<i8>,
@@ -75,9 +150,9 @@ struct QLayer {
     s_cin: f32,
     /// folded dequant for the i32 conv accumulator: s_cin · s_convw
     s_conv: f32,
-    x_proj: QLinear, // (di, r+2n)
+    x_proj: QProj, // (di, r+2n)
     s_x: f32,
-    dt_proj: QLinear, // (r, di), bias folded in
+    dt_proj: QProj, // (r, di), bias folded in
     s_dt: f32,
     a_q: Vec<i8>,
     s_a: f32,
@@ -85,7 +160,7 @@ struct QLayer {
     s_d: f32,
     s_b: f32,
     s_c: f32,
-    out_proj: QLinear, // folded H·W_out (di, d); scale absorbs 1/di
+    out_proj: QProj, // folded H·W_out (di, d); scale absorbs 1/di
     s_gh: f32,
     /// cached H_{d_inner} transform: base matrix built once, so the
     /// rotated out_proj stays allocation-free for Paley-base d_inner
@@ -95,9 +170,11 @@ struct QLayer {
 
 pub struct QuantizedMambaModel {
     pub tier: MambaTier,
+    /// projection/head weight width this model was built at (8 or 4)
+    pub weight_bits: u8,
     embedding: Vec<f32>, // f32 rows for the residual spine
     norm_f: Vec<f32>,
-    head: QLinear, // tied head: embeddingᵀ quantized (d, V)
+    head: QProj, // tied head: embeddingᵀ quantized (d, V)
     s_head_in: f32,
     layers: Vec<QLayer>,
     g_x: Vec<f32>,
@@ -217,6 +294,7 @@ impl QuantizedMambaModel {
         let t = model.tier.clone();
         let (d, di, n, r) = (t.d_model, t.d_inner, t.d_state, t.dt_rank);
         assert_eq!(rec.layers.len(), t.n_layer, "calibration record layer count");
+        let bits = cfg.weight_bits;
         let mut layers = Vec::with_capacity(t.n_layer);
         // one prepared H_{d_inner} per model, cloned into each layer:
         // the Paley base matrix (m ∈ {12, 20}) is built once here and
@@ -247,18 +325,18 @@ impl QuantizedMambaModel {
             );
             layers.push(QLayer {
                 norm: layer.norm.clone(),
-                in_proj: QLinear::from_f32(&layer.in_proj, d, 2 * di, None),
+                in_proj: QProj::from_f32(&layer.in_proj, d, 2 * di, None, bits),
                 s_xin: quant::scale_sym(lc.x_in_amax, 8),
                 conv_w_q,
                 conv_b: layer.conv_b.clone(),
                 s_cin,
                 s_conv: s_cin * conv_sw,
-                x_proj: QLinear::from_f32(&layer.x_proj, di, r + 2 * n, None),
+                x_proj: QProj::from_f32(&layer.x_proj, di, r + 2 * n, None, bits),
                 s_x: quant::scale_sym(
                     quant::percentile_amax(lc.x_ssm.values(), cfg.x_percentile),
                     8,
                 ),
-                dt_proj: QLinear::from_f32(&layer.dt_proj, r, di, Some(layer.dt_bias.clone())),
+                dt_proj: QProj::from_f32(&layer.dt_proj, r, di, Some(layer.dt_bias.clone()), bits),
                 s_dt: quant::scale_sym(lc.dt_low_amax, 8),
                 a_q: quant::quantize_sym(&layer.a, a_sw, 8),
                 s_a: a_sw,
@@ -266,7 +344,7 @@ impl QuantizedMambaModel {
                 s_d: d_sw,
                 s_b: quant::scale_sym(lc.b_amax, 8),
                 s_c: quant::scale_sym(lc.c_amax, 8),
-                out_proj: QLinear::from_f32(&w_fold, di, d, None).fold_scale(1.0 / di as f32),
+                out_proj: QProj::from_f32(&w_fold, di, d, None, bits).fold_scale(1.0 / di as f32),
                 s_gh: quant::scale_sym(lc.gated_h_amax, 8),
                 fwht: fwht.clone(),
             });
@@ -282,17 +360,19 @@ impl QuantizedMambaModel {
         QuantizedMambaModel {
             embedding: model.embedding.clone(),
             norm_f: model.norm_f.clone(),
-            head: QLinear::from_f32(&head_w, d, v, None),
+            head: QProj::from_f32(&head_w, d, v, None, bits),
             s_head_in: quant::scale_sym(rec.head_in_amax, 8),
             layers,
             g_x: model.g_x.clone(),
             g_y: model.g_y.clone(),
             tier: t,
+            weight_bits: bits,
         }
     }
 
-    /// 8-bit weight count = bytes when shipped as int8 (A/D are held
-    /// as codes; the conv executes straight from its i8 weights) — the
+    /// Weight bytes at the configured width: GEMM weights at
+    /// `weight_bits` (int8, or ⌈k·n/2⌉ packed nibbles) plus the int8
+    /// conv/A/D codes (those stay 8-bit at every tier) — the
     /// Fig. 1(c)-style memory story for the native backend.
     pub fn weight_bytes_i8(&self) -> usize {
         let per_layer: usize = self
@@ -306,6 +386,24 @@ impl QuantizedMambaModel {
                     + l.conv_w_q.len()
                     + l.a_q.len()
                     + l.d_q.len()
+            })
+            .sum();
+        per_layer + self.head.weight_bytes()
+    }
+
+    /// Packed bytes of the GEMM weights alone (projections + head,
+    /// excluding the always-int8 conv/A/D codes): the quantity the
+    /// `--bits 4` tier halves exactly, asserted in
+    /// `benches/perf_native_decode.rs`.
+    pub fn gemm_weight_bytes(&self) -> usize {
+        let per_layer: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.in_proj.weight_bytes()
+                    + l.x_proj.weight_bytes()
+                    + l.dt_proj.weight_bytes()
+                    + l.out_proj.weight_bytes()
             })
             .sum();
         per_layer + self.head.weight_bytes()
@@ -893,6 +991,78 @@ mod tests {
         fused_conv_silu_i8_with(
             Kernels::scalar(), &x_q, &mut hist, &w_q, &[0.0], &[1.0], 0.01, 1, di, w, &mut out,
         );
+    }
+
+    fn w4_cfg() -> QuantConfig {
+        QuantConfig { weight_bits: 4, ..QuantConfig::default() }
+    }
+
+    #[test]
+    fn w4a8_logits_close_to_fp32() {
+        // the nibble tier trades precision for bytes; per-group scales
+        // must keep the logits within a (looser) budget of fp32
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 7);
+        let mut r = crate::util::rng::Pcg32::new(0xCAFE);
+        let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let qm = QuantizedMambaModel::from_model(&model, &calib, &w4_cfg());
+        assert_eq!(qm.weight_bits, 4);
+        let prompt: Vec<u16> = (0..12).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let lf = model.forward(&prompt, &crate::ssm::mamba::QuantSites::none(), None);
+        let mut st = MambaState::new(&t, 1);
+        let lq = qm.prefill(&prompt, &mut st);
+        assert_eq!(lf.len(), lq.len());
+        let amax = lf.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let err = lf.iter().zip(&lq).fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(err < 0.25 * amax, "W4A8 err {err} vs logit amax {amax}");
+        assert!(err > 0.0, "suspiciously exact — quantization not applied?");
+    }
+
+    #[test]
+    fn w4a8_batched_prefill_bit_identical_to_stepwise() {
+        // the bit-exactness contract holds at 4-bit weights too: exact
+        // per-group i32 accumulation + fixed f32 epilogue order
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 7);
+        let mut r = crate::util::rng::Pcg32::new(0xFEED);
+        let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let qm = QuantizedMambaModel::from_model(&model, &calib, &w4_cfg());
+        let prompt: Vec<u16> = (0..23).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let mut st_batched = MambaState::new_quantized(&t, 1);
+        let lg_batched = qm.prefill(&prompt, &mut st_batched);
+        let mut st_step = MambaState::new_quantized(&t, 1);
+        let lg_step = qm.prefill_stepwise(&prompt, &mut st_step);
+        assert_eq!(lg_batched.len(), lg_step.len());
+        for (i, (a, b)) in lg_batched.iter().zip(&lg_step).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: batched {a} != stepwise {b}");
+        }
+        assert_eq!(st_batched.conv_q, st_step.conv_q, "conv window codes diverged");
+        for (i, (a, b)) in st_batched.ssm.iter().zip(&st_step.ssm).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "ssm state {i}: {a} != {b}");
+        }
+    }
+
+    #[test]
+    fn w4a8_halves_gemm_weight_bytes() {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 1);
+        let calib: Vec<u16> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let q8 = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+        let q4 = QuantizedMambaModel::from_model(&model, &calib, &w4_cfg());
+        assert_eq!(q8.weight_bits, 8);
+        assert_eq!(2 * q4.gemm_weight_bytes(), q8.gemm_weight_bytes());
+        // conv/A/D codes stay int8, so total bytes shrink by less than 2×
+        assert!(q4.weight_bytes_i8() < q8.weight_bytes_i8());
+        assert!(2 * q4.weight_bytes_i8() > q8.weight_bytes_i8());
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported weight_bits")]
+    fn rejects_unsupported_weight_bits() {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 1);
+        let cfg = QuantConfig { weight_bits: 2, ..QuantConfig::default() };
+        let _ = QuantizedMambaModel::from_model(&model, &[1, 2, 3], &cfg);
     }
 
     #[test]

@@ -100,6 +100,40 @@ fn fixture_bare_cast_fails() {
 }
 
 #[test]
+fn fixture_w4a8_guard_with_wrong_bound_fails() {
+    // ISSUE 8: the qlinear guard map now carries (fn, bound) pairs —
+    // a w4a8 entry point guarded with the i8 bound must flag, while
+    // the correctly guarded i8 entry point in the same file stays clean
+    let txt = include_str!("fixtures/audit/w4a8_wrong_bound.rs.txt");
+    let entries = rules::guarded_entry_points("quant/qlinear.rs");
+    assert_eq!(entries.len(), 2, "qlinear carries both tier entry points");
+    for (fn_name, bound) in entries {
+        let fs = rules::check_guard_present("quant/qlinear.rs", txt, fn_name, bound);
+        if *fn_name == "matmul_w4a8_with" {
+            assert_eq!(fs.len(), 1, "wrong-bound w4a8 guard not flagged: {fs:?}");
+            assert_eq!(fs[0].rule, "accumulator-bound");
+            assert!(fs[0].message.contains("MAX_SAFE_K_I4"), "{}", fs[0].message);
+        } else {
+            assert!(fs.is_empty(), "i8 path wrongly flagged: {fs:?}");
+        }
+    }
+}
+
+#[test]
+fn missing_i4_const_proof_fails() {
+    // a kernels module that only proves the i8 tier must flag both
+    // missing i4 constants
+    let txt = "pub const MAX_ABS_PROD_I8: i64 = 1 << 14;\n\
+               pub const MAX_SAFE_K: usize = 131071;\n\
+               const _: () = assert!(true);\n";
+    let fs = rules::check_const_proof("quant/kernels.rs", txt);
+    assert_eq!(fs.len(), 2, "{fs:?}");
+    assert!(fs.iter().all(|f| f.rule == "const-proof"));
+    assert!(fs.iter().any(|f| f.message.contains("MAX_ABS_PROD_I4I8")), "{fs:?}");
+    assert!(fs.iter().any(|f| f.message.contains("MAX_SAFE_K_I4")), "{fs:?}");
+}
+
+#[test]
 fn fixture_native_leaky_release_fails() {
     let txt = include_str!("fixtures/audit/native_leaky_release.rs.txt");
     let fs = rules::scan_native_engine(rules::NATIVE_FILE, txt);
@@ -195,6 +229,24 @@ fn planted_leaky_native_engine_fails_end_to_end() {
     assert!(!report.ok(), "planted leaky engine came back clean");
     assert!(report.findings.iter().any(|f| f.rule == "engine-no-unwrap"));
     assert!(report.findings.iter().any(|f| f.rule == "slot-reclaim"));
+}
+
+#[test]
+fn planted_w4a8_wrong_bound_fails_end_to_end() {
+    let report = audit_planted(
+        "w4a8_guard",
+        "quant/qlinear.rs",
+        include_str!("fixtures/audit/w4a8_wrong_bound.rs.txt"),
+    );
+    assert!(!report.ok(), "planted wrong-bound w4a8 guard came back clean");
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.rule == "accumulator-bound" && f.message.contains("MAX_SAFE_K_I4")),
+        "{:?}",
+        report.findings
+    );
 }
 
 #[test]

@@ -7,8 +7,8 @@
 //!   (B, T) batch is bit-identical, lane by lane, to running each
 //!   lane's chunk through the per-request `prefill_resume_into`
 //!   oracle (valid logits rows AND final state), for the fp32
-//!   reference and the W8A8 model under every available kernel
-//!   backend — including lanes mid-prompt (carried conv window / scan
+//!   reference and the W8A8 + W4A8 models under every available
+//!   kernel backend — including lanes mid-prompt (carried conv window / scan
 //!   state) and maximally ragged pads;
 //! * **engine level** — the served token streams are identical across
 //!   `prefill_chunk ∈ {1, 3, 16, ∞}`, `threads ∈ {1, 3}`, cache
@@ -47,6 +47,17 @@ fn w8a8_model(seed: u64) -> QuantizedMambaModel {
     let mut r = Pcg32::new(seed ^ 0xC0DE);
     let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
     QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default())
+}
+
+/// Same weights/calibration as [`w8a8_model`], served at 4-bit
+/// packed-nibble weights (ISSUE 8 sweep twin).
+fn w4a8_model(seed: u64) -> QuantizedMambaModel {
+    let t = tier();
+    let model = MambaModel::synthetic(t.clone(), seed);
+    let mut r = Pcg32::new(seed ^ 0xC0DE);
+    let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+    let cfg = QuantConfig { weight_bits: 4, ..QuantConfig::default() };
+    QuantizedMambaModel::from_model(&model, &calib, &cfg)
 }
 
 fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
@@ -171,11 +182,17 @@ fn copy_lane(
 fn prop_batched_prefill_bit_identical_to_per_request_oracle() {
     let fp = fp32_model(7);
     let qm = w8a8_model(7);
+    let q4 = w4a8_model(7);
     for seed in 0..12u64 {
         assert_batched_prefill_matches_oracle(&fp, Kernels::scalar(), 0xBA7C4 ^ seed);
         for backend in Kernels::available() {
             assert_batched_prefill_matches_oracle(
                 &qm,
+                Kernels::for_backend(backend),
+                0xBA7C4 ^ seed,
+            );
+            assert_batched_prefill_matches_oracle(
+                &q4,
                 Kernels::for_backend(backend),
                 0xBA7C4 ^ seed,
             );
@@ -266,6 +283,21 @@ fn run(cfg: NativeEngineConfig, quantized: bool, seed: u64) -> Vec<(u64, Vec<u16
     done
 }
 
+fn run_w4(cfg: NativeEngineConfig, seed: u64) -> Vec<(u64, Vec<u16>)> {
+    let mut eng = NativeEngine::new(Box::new(w4a8_model(seed)), cfg);
+    for req in workload(seed) {
+        eng.submit(req);
+    }
+    let mut done: Vec<(u64, Vec<u16>)> = eng
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    done
+}
+
 #[test]
 fn prop_chunk_size_never_changes_tokens() {
     // THE tentpole acceptance sweep: chunk ∈ {∞, 1, 3, 16} ×
@@ -323,6 +355,53 @@ fn forced_kernel_backends_identical_under_chunking() {
             11,
         );
         assert_eq!(want, got, "backend {} changed chunked tokens", backend.label());
+    }
+}
+
+#[test]
+fn w4a8_chunk_threads_cache_never_change_tokens() {
+    // ISSUE 8 satellite: the W4A8 tier gets the same engine-level
+    // guarantee as W8A8 — chunk ∈ {∞, 1, 3, 16} × threads {1, 3} ×
+    // cache off/on(stride 3) serve identical greedy AND temperature
+    // token streams (workload() mixes both).
+    for seed in [2u64, 19] {
+        let baseline = run_w4(NativeEngineConfig::default(), seed);
+        for chunk in [0usize, 1, 3, 16] {
+            for threads in [1usize, 3] {
+                for cache_bytes in [0usize, 1 << 20] {
+                    let cfg = NativeEngineConfig {
+                        prefill_chunk: chunk,
+                        threads,
+                        cache_bytes,
+                        snapshot_stride: if cache_bytes > 0 { 3 } else { 0 },
+                        ..Default::default()
+                    };
+                    let got = run_w4(cfg, seed);
+                    assert_eq!(
+                        baseline, got,
+                        "W4A8 tokens moved (seed={seed} chunk={chunk} \
+                         threads={threads} cache={cache_bytes})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn w4a8_forced_kernel_backends_identical_under_chunking() {
+    let base = NativeEngineConfig {
+        prefill_chunk: 5,
+        cache_bytes: 1 << 20,
+        snapshot_stride: 4,
+        kernel_backend: Some(KernelBackend::Scalar),
+        ..Default::default()
+    };
+    let want = run_w4(base.clone(), 11);
+    for backend in Kernels::available() {
+        let cfg = NativeEngineConfig { kernel_backend: Some(backend), ..base.clone() };
+        let got = run_w4(cfg, 11);
+        assert_eq!(want, got, "W4A8 backend {} changed chunked tokens", backend.label());
     }
 }
 

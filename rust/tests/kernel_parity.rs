@@ -11,9 +11,17 @@
 //! * threaded batched steps (fp32 and W8A8) are bit-identical to
 //!   single-threaded ones, logits and state;
 //! * W8A8 greedy decode produces the **same token stream** under every
-//!   forced kernel backend (ISSUE 3 satellite).
+//!   forced kernel backend (ISSUE 3 satellite);
+//! * the W4A8 packed-nibble tier (ISSUE 8): `PackedWeightI4` roundtrip
+//!   over random i4 codes (odd K, K off the group grid), per-group
+//!   dequant **bit-parity** of the blocked i4 GEMM vs the retained
+//!   naive oracle on every backend, and W4A8 greedy/threaded decode
+//!   bit-identical across backends and thread counts.
 
-use quamba::quant::qlinear::{matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, PackedWeightI8};
+use quamba::quant::qlinear::{
+    matmul_i8, matmul_i8_blocked, matmul_i8_blocked_with, matmul_w4a8_ref, matmul_w4a8_with,
+    PackedWeightI4, PackedWeightI8,
+};
 use quamba::quant::Kernels;
 use quamba::ssm::{
     fused_conv_silu_i8, fused_conv_silu_i8_with, MambaModel, MambaState, MambaTier, QuantConfig,
@@ -296,6 +304,135 @@ fn greedy_with_kernels(
         toks.push(argmax(&logits[..v]));
     }
     (toks, bits)
+}
+
+fn rand_i4(r: &mut Pcg32, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (r.below(16) as i32 - 8) as i8).collect()
+}
+
+#[test]
+fn packed_i4_roundtrip_over_random_codes_and_odd_shapes() {
+    // ISSUE 8 satellite: pack → unpack is the identity for every i4
+    // code, including odd K (pad nibble in the last byte row) and K
+    // not a multiple of the group size; plus fixed shapes hitting the
+    // block-tail and single-element corners
+    let mut r = Pcg32::new(0x1D40);
+    let mut cases: Vec<(usize, usize)> =
+        vec![(1, 1), (5, 3), (7, 16), (127, 17), (129, 33), (128, 16), (2, 1)];
+    for _ in 0..30 {
+        cases.push((1 + r.below(200) as usize, 1 + r.below(40) as usize));
+    }
+    for (k, n) in cases {
+        let w_q4 = rand_i4(&mut r, k * n);
+        let packed = PackedWeightI4::pack(&w_q4, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(
+                    packed.code(p, j),
+                    w_q4[p * n + j],
+                    "roundtrip mismatch at ({p},{j}) of shape ({k},{n})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn w4a8_gemm_bit_exact_vs_naive_oracle_every_backend() {
+    // ISSUE 8 satellite: per-group dequant bit-parity of the blocked
+    // i4 GEMM vs the naive decode-then-multiply oracle, swept across
+    // every available backend with K odd / off the group grid and N
+    // off the block grid
+    let mut r = Pcg32::new(0x4A8B);
+    let mut cases: Vec<(usize, usize, usize, usize)> = vec![
+        (1, 1, 1, 2),
+        (1, 3, 17, 2),
+        (3, 5, 15, 4),
+        (7, 19, 31, 8),
+        (8, 16, 16, 16),
+        (5, 129, 47, 64),   // last group odd
+        (4, 130, 20, 64),   // last group length 2
+        (2, 127, 13, 128),  // single odd short group
+        (6, 256, 24, 128),  // exact group multiples
+    ];
+    for _ in 0..30 {
+        cases.push((
+            1 + r.below(9) as usize,
+            1 + r.below(150) as usize,
+            1 + r.below(40) as usize,
+            2 * (1 + r.below(32) as usize), // even group in [2, 64]
+        ));
+    }
+    for (m, k, n, group_k) in cases {
+        let x_q = rand_i8(&mut r, m * k);
+        let w_q4 = rand_i4(&mut r, k * n);
+        let n_groups = k.div_ceil(group_k);
+        let scales: Vec<f32> =
+            (0..n_groups * n).map(|_| 0.002 + 0.001 * r.below(64) as f32).collect();
+        let s_x = 0.017f32;
+        let mut want = vec![0.0f32; m * n];
+        matmul_w4a8_ref(&x_q, &w_q4, &scales, group_k, s_x, m, k, n, &mut want);
+        let packed = PackedWeightI4::pack(&w_q4, k, n);
+        for backend in Kernels::available() {
+            let mut got = vec![7.0f32; m * n]; // poison
+            matmul_w4a8_with(
+                Kernels::for_backend(backend),
+                &x_q,
+                &packed,
+                &scales,
+                group_k,
+                s_x,
+                m,
+                &mut got,
+            );
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "W4A8 mismatch on {} at shape ({m},{k},{n}) g{group_k} elem {i}: {a} vs {b}",
+                    backend.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn w4a8_threaded_step_bit_identical_to_sequential() {
+    // the W4A8 twin of the threads sweep: scratch.threads > 1 moves
+    // wall-clock only, at 4-bit weights too
+    let tier = parity_tier();
+    let fp = MambaModel::synthetic(tier.clone(), 7);
+    let calib: Vec<u16> = (0..96u16).map(|i| i % tier.vocab as u16).collect();
+    let cfg = QuantConfig { weight_bits: 4, ..QuantConfig::default() };
+    let qm = QuantizedMambaModel::from_model(&fp, &calib, &cfg);
+    let seq = run_steps(&qm, 5, 1, 4);
+    for threads in [2usize, 3, 8] {
+        let par = run_steps(&qm, 5, threads, 4);
+        assert_eq!(seq.0, par.0, "w4a8: logits diverged at threads={threads}");
+        assert_eq!(seq.2, par.2, "w4a8: conv codes diverged at threads={threads}");
+        assert_eq!(seq.3, par.3, "w4a8: ssm state diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn w4a8_greedy_tokens_bit_identical_across_kernel_backends() {
+    // the W4A8 twin of the backend-parity run: the nibble GEMM's exact
+    // per-group accumulation + fixed f32 epilogue order means a
+    // backend switch can never move a 4-bit-weight model either
+    let tier = parity_tier();
+    let model = MambaModel::synthetic(tier.clone(), 7);
+    let mut r = Pcg32::new(7 ^ 0x1234);
+    let calib: Vec<u16> = (0..256).map(|_| r.below(tier.vocab as u32) as u16).collect();
+    let cfg = QuantConfig { weight_bits: 4, ..QuantConfig::default() };
+    let qm = QuantizedMambaModel::from_model(&model, &calib, &cfg);
+    let prompt: Vec<u16> = (0..8).map(|_| r.below(tier.vocab as u32) as u16).collect();
+    let (toks0, bits0) = greedy_with_kernels(&qm, &prompt, 48, Kernels::scalar());
+    for backend in Kernels::available() {
+        let (toks, bits) = greedy_with_kernels(&qm, &prompt, 48, Kernels::for_backend(backend));
+        assert_eq!(toks0, toks, "W4A8 greedy tokens diverged on backend {}", backend.label());
+        assert_eq!(bits0, bits, "W4A8 logit bits diverged on backend {}", backend.label());
+    }
 }
 
 #[test]

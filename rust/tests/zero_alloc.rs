@@ -3,6 +3,9 @@
 //! and (ISSUE 3) not just for power-of-two `d_inner`: the Paley-base
 //! 12·2^k tier is held to the same standard now that each layer caches
 //! its `FwhtPlan` (base matrix + stack temp instead of per-call Vecs).
+//! ISSUE 8 widens the contract to the W4A8 packed-nibble tier: its
+//! grouped GEMM accumulates into stack tiles, so 4-bit step AND
+//! chunked batched prefill are held to the same zero-alloc standard.
 //!
 //! Measured with a counting `#[global_allocator]` wrapper around the
 //! system allocator. The counter is thread-local (const-initialized,
@@ -82,10 +85,15 @@ fn paley_tier() -> MambaTier {
     }
 }
 
-fn assert_w8a8_step_zero_alloc(t: &MambaTier) {
+fn quantized_model(t: &MambaTier, weight_bits: u8) -> QuantizedMambaModel {
     let model = MambaModel::synthetic(t.clone(), 7);
     let calib: Vec<u16> = (0..256u16).map(|i| i % t.vocab as u16).collect();
-    let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let cfg = QuantConfig { weight_bits, ..QuantConfig::default() };
+    QuantizedMambaModel::from_model(&model, &calib, &cfg)
+}
+
+fn assert_quantized_step_zero_alloc(t: &MambaTier, weight_bits: u8) {
+    let qm = quantized_model(t, weight_bits);
     let b = 4usize;
     let mut st = MambaState::new_quantized(t, b);
     let mut scratch = StepScratch::new(1);
@@ -103,15 +111,16 @@ fn assert_w8a8_step_zero_alloc(t: &MambaTier) {
     assert_eq!(
         after - before,
         0,
-        "tier {}: W8A8 step_into heap-allocated {} time(s) across 16 post-warmup calls",
+        "tier {}: W{}A8 step_into heap-allocated {} time(s) across 16 post-warmup calls",
         t.name,
+        weight_bits,
         after - before
     );
 }
 
 #[test]
 fn w8a8_step_is_allocation_free_after_warmup() {
-    assert_w8a8_step_zero_alloc(&tier());
+    assert_quantized_step_zero_alloc(&tier(), 8);
 }
 
 #[test]
@@ -119,19 +128,26 @@ fn w8a8_step_is_allocation_free_for_paley_base_d_inner() {
     // ISSUE 3 satellite (ROADMAP item): the 12·2^k tier used to
     // allocate its Hadamard base matrix + temp inside fwht_rows every
     // step; the cached per-layer FwhtPlan removes that
-    assert_w8a8_step_zero_alloc(&paley_tier());
+    assert_quantized_step_zero_alloc(&paley_tier(), 8);
 }
 
 #[test]
-fn w8a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
-    // ISSUE 5 acceptance: the unified scheduler's (B, T) batched chunk
-    // prefill executes out of the caller's scratch — once buffers have
-    // peaked at B·T_max rows, advancing in-flight prompts chunk by
-    // chunk costs zero heap allocations (ragged pads included)
+fn w4a8_step_is_allocation_free_after_warmup() {
+    // ISSUE 8 satellite: the packed-nibble tier accumulates into stack
+    // tiles inside `matmul_w4a8_with` — no i32 scratch Vec at all, so
+    // the decode step stays zero-alloc on both FWHT paths
+    assert_quantized_step_zero_alloc(&tier(), 4);
+    assert_quantized_step_zero_alloc(&paley_tier(), 4);
+}
+
+fn assert_quantized_batched_prefill_zero_alloc(weight_bits: u8) {
+    // ISSUE 5 acceptance (and the ISSUE 8 W4A8 twin): the unified
+    // scheduler's (B, T) batched chunk prefill executes out of the
+    // caller's scratch — once buffers have peaked at B·T_max rows,
+    // advancing in-flight prompts chunk by chunk costs zero heap
+    // allocations (ragged pads included)
     let t = tier();
-    let model = MambaModel::synthetic(t.clone(), 7);
-    let calib: Vec<u16> = (0..256u16).map(|i| i % t.vocab as u16).collect();
-    let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+    let qm = quantized_model(&t, weight_bits);
     let b = 3usize;
     let mut st = MambaState::new_quantized(&t, b);
     let mut scratch = StepScratch::new(1);
@@ -153,9 +169,20 @@ fn w8a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
     assert_eq!(
         after - before,
         0,
-        "chunked (B,T) prefill heap-allocated {} time(s) across 8 post-warmup rounds",
+        "W{}A8 chunked (B,T) prefill heap-allocated {} time(s) across 8 post-warmup rounds",
+        weight_bits,
         after - before
     );
+}
+
+#[test]
+fn w8a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
+    assert_quantized_batched_prefill_zero_alloc(8);
+}
+
+#[test]
+fn w4a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
+    assert_quantized_batched_prefill_zero_alloc(4);
 }
 
 #[test]
