@@ -11,7 +11,7 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--bits 8] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--bits 8] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1] [--verbose] [--trace-out FILE] [--manual-clock MS]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
@@ -49,6 +49,16 @@
 //! report (also under `--burst`) gains a `failures` line with the
 //! rejected/deadline/cancelled/failed counters and the shed rate —
 //! the live demo of `docs/ARCHITECTURE.md` §7.
+//!
+//! Observability (docs/ARCHITECTURE.md §8): `--verbose` prints every
+//! response's per-request timeline (queued → admitted → first token →
+//! finished, all on the engine clock); `--trace-out FILE` arms the
+//! flight recorder and dumps Chrome trace-event JSON on drain;
+//! `--manual-clock MS` (native backend) runs the whole workload on
+//! `Clock::Manual` — timestamps advance MS per tick instead of
+//! reading the wall clock, requests are submitted up-front, and two
+//! identically-seeded runs produce **byte-identical** trace dumps and
+//! equal metrics snapshots.
 
 use anyhow::Result;
 use quamba::bench_support::{burst_itl_max_report, Workload};
@@ -63,7 +73,7 @@ use quamba::util::cli::Args;
 use quamba::util::rng::Pcg32;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&[]);
+    let args = Args::from_env(&["verbose"]);
     let n = args.get_usize("requests", 24);
     let rate = args.get_f64("rate", 8.0);
     let max_new = args.get_usize("max-new", 24);
@@ -83,7 +93,14 @@ fn main() -> Result<()> {
 /// Feed the Poisson workload into a running server; returns
 /// (completed, wall seconds, metrics report). With an armed prefix
 /// cache, appends a one-line hit/bytes summary from the engine thread.
-fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64, Option<String>) {
+/// `--verbose` prints every response's per-request timeline and
+/// `--trace-out FILE` dumps the flight recorder before shutdown.
+fn drive(
+    mut server: ServerHandle,
+    wl: &Workload,
+    max_new: usize,
+    args: &Args,
+) -> (usize, f64, Option<String>) {
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for (i, prompt) in wl.prompts.iter().enumerate() {
@@ -96,11 +113,15 @@ fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64
     }
     // count clean finishes only — shed/cancelled/failed requests are
     // still answered (typed), and show up on the report's failures line
-    let done = rxs
-        .into_iter()
-        .filter(|rx| rx.recv().map(|r| r.finish.is_ok()).unwrap_or(false))
-        .count();
+    let mut responses: Vec<_> = rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
+    let done = responses.iter().filter(|r| r.finish.is_ok()).count();
     let wall = t0.elapsed().as_secs_f64();
+    if args.has("verbose") {
+        responses.sort_by_key(|r| r.id);
+        for r in &responses {
+            println!("{}", r.timeline());
+        }
+    }
     let mut report = server.metrics_report();
     if let Some(c) = server.cache_stats() {
         let line = format!(
@@ -114,6 +135,18 @@ fn drive(mut server: ServerHandle, wl: &Workload, max_new: usize) -> (usize, f64
             Some(r) => format!("{r}\n{line}"),
             None => line,
         });
+    }
+    if let Some(path) = args.get("trace-out") {
+        match server.dump_trace() {
+            Some(json) => {
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("trace: failed to write {path}: {e}");
+                } else {
+                    println!("trace: wrote {} bytes of Chrome trace JSON to {path}", json.len());
+                }
+            }
+            None => println!("trace: this backend has no flight recorder"),
+        }
     }
     server.shutdown();
     (done, wall, report)
@@ -148,7 +181,7 @@ fn serve_xla(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> {
         }
         println!("\n=== xla {tier}/{method}: {n} requests, ~{rate}/s, {max_new} new tokens each ===");
         let server = ServerHandle::spawn(root.clone(), EngineConfig::new(&tier, method))?;
-        let (done, wall, report) = drive(server, &wl, max_new);
+        let (done, wall, report) = drive(server, &wl, max_new, args);
         println!("completed {done}/{n} in {wall:.2}s");
         if let Some(r) = report {
             println!("{r}");
@@ -278,6 +311,9 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
     if args.get_usize("burst", 0) > 0 {
         return serve_burst(args, &tier);
     }
+    if args.get("manual-clock").is_some() {
+        return serve_manual_clock(args, &tier, n, max_new);
+    }
     let bits = weight_bits(args);
     let model = MambaModel::synthetic(tier.clone(), seed);
     let mut rng = Pcg32::new(seed ^ 0x5EED);
@@ -355,14 +391,89 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
                 max_tokens_per_tick,
                 faults: faults.clone(),
                 weight_bits: wb,
+                trace: args.get("trace-out").is_some(),
                 ..Default::default()
             },
         )?;
-        let (done, wall, report) = drive(server, &wl, max_new);
+        let (done, wall, report) = drive(server, &wl, max_new, args);
         println!("completed {done}/{n} in {wall:.2}s");
         if let Some(r) = report {
             println!("{r}");
         }
     }
+    Ok(())
+}
+
+/// `--manual-clock MS`: the deterministic observability path. The
+/// engine runs on [`Clock::Manual`] — every timestamp is ticks ×
+/// MS, never a wall-clock read — with the flight recorder armed.
+/// Requests are submitted up-front and the engine is driven to
+/// completion on this thread, so two runs with the same seed produce
+/// **byte-identical** `--trace-out` dumps and equal
+/// [`MetricsSnapshot`]s (the determinism the obs integration tests
+/// assert).
+fn serve_manual_clock(args: &Args, tier: &MambaTier, n: usize, max_new: usize) -> Result<()> {
+    use quamba::coordinator::request::Request;
+    use quamba::coordinator::{Clock, NativeEngine};
+    let ms_per_tick = args.get_f64("manual-clock", 1.0);
+    let seed = args.get_usize("seed", 7) as u64;
+    let bits = weight_bits(args);
+    let model = MambaModel::synthetic(tier.clone(), seed);
+    let mut rng = Pcg32::new(seed ^ 0x5EED);
+    let calib: Vec<u16> = (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let qcfg = QuantConfig { weight_bits: bits, ..QuantConfig::default() };
+    let qmodel = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
+    let cfg = NativeEngineConfig {
+        weight_bits: bits,
+        clock: Clock::Manual { ms_per_tick },
+        trace: true,
+        cache_bytes: args.get_mb("cache-mb", 0.0),
+        snapshot_stride: args.get_usize("snapshot-stride", 64),
+        prefill_chunk: args.get_usize("prefill-chunk", 64),
+        max_tokens_per_tick: args.get_usize("max-tokens-per-tick", 0),
+        ..Default::default()
+    };
+    println!(
+        "manual clock: {ms_per_tick} ms/tick, {n} requests submitted up-front \
+         (W{bits}A8, tier {}) — deterministic traces + snapshots",
+        tier.name
+    );
+    let mut eng = NativeEngine::new(Box::new(qmodel), cfg);
+    let stream: Vec<u16> = (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
+    let wl = Workload::poisson(&stream, n, 8.0, 8, 40, max_new, 7);
+    for (i, prompt) in wl.prompts.iter().enumerate() {
+        eng.submit(Request {
+            id: (i + 1) as u64,
+            prompt: prompt.clone(),
+            max_new_tokens: max_new,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    let mut responses = eng.run_to_completion()?;
+    responses.sort_by_key(|r| r.id);
+    let snap = eng.metrics_snapshot();
+    println!(
+        "drained {} responses in {:.0} engine-ms ({} tokens)",
+        responses.len(),
+        snap.elapsed_ms,
+        snap.tokens_out
+    );
+    if args.has("verbose") {
+        for r in &responses {
+            println!("{}", r.timeline());
+        }
+    }
+    if let Some(path) = args.get("trace-out") {
+        if let Some(json) = eng.dump_trace() {
+            std::fs::write(path, &json)?;
+            println!(
+                "trace: wrote {} bytes of Chrome trace JSON to {path} \
+                 (byte-identical run-to-run at a fixed seed)",
+                json.len()
+            );
+        }
+    }
+    println!("\n{}", eng.metrics.report());
     Ok(())
 }

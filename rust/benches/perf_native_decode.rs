@@ -23,6 +23,10 @@
 //!   and `tok_per_s_w4a8`/`tok_per_s_w8a8` — acceptance: W4A8 decode
 //!   tokens/s ≥ W8A8, and the nibble tier stores EXACTLY half the
 //!   W8A8 GEMM weight bytes (hard `assert_eq!`, not a report line);
+//! * (ISSUE 9) the flight recorder: `decode_step_w8a8_engine` vs
+//!   `decode_step_w8a8_traced` run the identical steady-state decode
+//!   tick through `NativeEngine::step` with the trace ring off/on —
+//!   acceptance: tracing overhead ≤ 2%;
 //! * persists the whole table to `BENCH_native_decode.json` (override
 //!   the path with `QUAMBA_BENCH_JSON`) so CI can diff runs against
 //!   the committed baseline (`tools/bench_diff.py`).
@@ -473,6 +477,59 @@ fn main() {
     bt.row(vec!["burst max ITL gap, unchunked".into(), ms(gap_unchunked)]);
     bt.print();
 
+    // ---- flight recorder: traced vs untraced engine decode tick ----
+    // ISSUE 9 acceptance: with the recorder armed (`trace: true`) the
+    // steady-state decode tick through the full `NativeEngine::step`
+    // path may cost at most 2% more than the untraced engine. The span
+    // ring is preallocated and each record is one clock read + one
+    // `Copy` store, so tracing must be effectively free at tick
+    // granularity. Identical prompts, never-finishing lanes: after the
+    // warmup ticks both engines run pure B=8 decode rounds.
+    let trace_prompts: Vec<Vec<u16>> = (0..b)
+        .map(|_| (0..ctx).map(|_| rng.below(tier.vocab as u32) as u16).collect())
+        .collect();
+    let mk_traced_eng = |trace: bool| {
+        let mut eng = NativeEngine::new(
+            Box::new(mk_qm()),
+            NativeEngineConfig { trace, ..Default::default() },
+        );
+        for (i, prompt) in trace_prompts.iter().enumerate() {
+            eng.submit(Request {
+                id: (i + 1) as u64,
+                prompt: prompt.clone(),
+                max_new_tokens: 1 << 20, // never finishes inside the bench window
+                params: SamplingParams::default(),
+                stop_at_eos: false,
+            });
+        }
+        eng
+    };
+    let mut eng_plain = mk_traced_eng(false);
+    let tick_plain = bench_ms(8, iters(160), || {
+        let done = eng_plain.step().expect("untraced engine tick");
+        std::hint::black_box(done.len());
+    });
+    let mut eng_traced = mk_traced_eng(true);
+    let tick_traced = bench_ms(8, iters(160), || {
+        let done = eng_traced.step().expect("traced engine tick");
+        std::hint::black_box(done.len());
+    });
+    let spans_recorded =
+        eng_traced.trace_ring().map(|r| r.total_recorded()).unwrap_or(0);
+    assert!(spans_recorded > 0, "traced engine recorded no spans — the 2% claim would be vacuous");
+    let trace_overhead_pct = 100.0 * (tick_traced.mean / tick_plain.mean - 1.0);
+    let mut tt = Table::new(
+        &format!("§Perf — flight recorder: engine decode tick at B={b} (ms/tick)"),
+        &["path", "ms", "overhead"],
+    );
+    tt.row(vec!["trace off (engine baseline)".into(), ms(tick_plain.mean), f2(0.0) + "%"]);
+    tt.row(vec![
+        format!("trace on ({spans_recorded} spans recorded)"),
+        ms(tick_traced.mean),
+        format!("{}%", f2(trace_overhead_pct)),
+    ]);
+    tt.print();
+
     let speedup = before.mean / q_step.mean;
     println!(
         "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
@@ -527,6 +584,14 @@ fn main() {
         gap_chunked,
         gap_unchunked,
         gap_unchunked / gap_chunked.max(1e-9),
+    );
+    println!(
+        "acceptance (flight-recorder tracing overhead ≤ 2% on the B={b} engine decode tick): {} \
+         ({:+.2}%: {:.4} ms traced vs {:.4} ms untraced, {spans_recorded} spans)",
+        if trace_overhead_pct <= 2.0 { "PASS" } else { "FAIL" },
+        trace_overhead_pct,
+        tick_traced.mean,
+        tick_plain.mean,
     );
 
     // ---- machine-readable trajectory ----
@@ -664,6 +729,20 @@ fn main() {
         shape: format!("chunk=inf burst={burst_n}x{burst_len} tier={}", tier.name),
         ms: gap_unchunked,
         speedup: 1.0,
+    });
+    // flight-recorder pair (ISSUE 9). `speedup` on the traced entry is
+    // untraced/traced tick time — ≥ 0.98 is the ≤2%-overhead acceptance
+    entries.push(Entry {
+        op: "decode_step_w8a8_engine",
+        shape: format!("B={b} tier={}", tier.name),
+        ms: tick_plain.mean,
+        speedup: 1.0,
+    });
+    entries.push(Entry {
+        op: "decode_step_w8a8_traced",
+        shape: format!("B={b} tier={}", tier.name),
+        ms: tick_traced.mean,
+        speedup: tick_plain.mean / tick_traced.mean,
     });
     let path = std::env::var("QUAMBA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_decode.json".to_string());

@@ -43,6 +43,13 @@
 //!   `pool.release` stay confined to `fn finish_live`, the single
 //!   documented slot-reclaim point every retirement path funnels
 //!   through (ISSUE 7).
+//! * **clock discipline** ([`rules::scan_clock_discipline`]) —
+//!   non-test `coordinator/` and `obs/` code never calls
+//!   `Instant::now()` / `SystemTime::now()` directly; the one
+//!   sanctioned wall-clock reader is `coordinator/faults.rs`
+//!   (`WallAnchor` / `Clock`), so `Clock::Manual` serving stays
+//!   deterministic — byte-identical flight-recorder dumps and equal
+//!   metrics snapshots run-to-run (ISSUE 9).
 //!
 //! The scanner is a deliberate line-level pass (the offline vendor set
 //! has no `syn`): strings and comments are stripped per line, module
@@ -162,6 +169,10 @@ pub fn audit_repo(root: &Path) -> Result<Report, String> {
         }
         if rel == rules::NATIVE_FILE {
             report.findings.extend(rules::scan_native_engine(&rel, &text));
+        }
+        if (rel.starts_with("coordinator/") || rel.starts_with("obs/")) && rel != rules::CLOCK_FILE
+        {
+            report.findings.extend(rules::scan_clock_discipline(&rel, &text));
         }
         if rel == "ssm/qmamba.rs" {
             let (fs, n) = scales::audit_scales(&rel, &text);

@@ -540,6 +540,45 @@ pub fn scan_native_engine(rel: &str, text: &str) -> Vec<Finding> {
     out
 }
 
+/// The one serving-layer file allowed to read the wall clock: the
+/// `Clock` / `WallAnchor` implementation every other coordinator and
+/// obs timestamp must route through.
+pub const CLOCK_FILE: &str = "coordinator/faults.rs";
+
+/// ISSUE 9 observability rule (`clock-discipline`): non-test code in
+/// `coordinator/` and `obs/` must take timestamps from the injectable
+/// engine clock — [`CLOCK_FILE`]'s `WallAnchor` / `Clock` — never
+/// from raw `Instant::now()` / `SystemTime::now()`. A raw read
+/// silently breaks `Clock::Manual` determinism: flight-recorder
+/// dumps and metrics snapshots stop being byte-identical run-to-run.
+/// Stops at the first `#[cfg(test)]`, same convention as
+/// [`scan_unsafe_free`].
+pub fn scan_clock_discipline(rel: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = code_portion(raw);
+        for tok in ["Instant::now(", "SystemTime::now("] {
+            if code.contains(tok) {
+                out.push(Finding {
+                    rule: "clock-discipline",
+                    file: rel.to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "raw `{}..)` in serving code — route timestamps through the \
+                         injectable engine clock (WallAnchor / Clock in {CLOCK_FILE}) \
+                         so Clock::Manual stays deterministic",
+                        tok.trim_end_matches('(')
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
 /// The brace-balanced body starting at the first `{` at/after `start`
 /// (string/comment-stripped brace counting).
 pub fn body_after(text: &str, start: usize) -> String {
@@ -712,6 +751,28 @@ mod tests {
                 .len(),
             1
         );
+    }
+
+    #[test]
+    fn clock_discipline_fires_on_raw_reads_and_honors_conventions() {
+        let bad = "fn f() {\n\
+                   \x20   let t0 = std::time::Instant::now();\n\
+                   \x20   let _ = SystemTime::now();\n\
+                   }\n";
+        let fs = scan_clock_discipline("coordinator/engine.rs", bad);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(fs.iter().all(|f| f.rule == "clock-discipline"));
+        assert_eq!(fs[0].line, 2);
+        // comments / strings / test regions don't count
+        let ok = "fn f() {\n\
+                  \x20   // Instant::now() is banned here\n\
+                  \x20   let s = \"Instant::now()\";\n\
+                  }\n\
+                  #[cfg(test)]\n\
+                  mod tests {\n\
+                  \x20   fn t() { let _ = std::time::Instant::now(); }\n\
+                  }\n";
+        assert!(scan_clock_discipline("obs/trace.rs", ok).is_empty());
     }
 
     #[test]

@@ -15,7 +15,8 @@ use anyhow::{anyhow, Result};
 use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::config::Manifest;
 use crate::coordinator::batcher;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::faults::WallAnchor;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::state::{SsmSlab, SsmStatePool};
@@ -80,6 +81,10 @@ pub struct Engine {
     vocab: usize,
     /// exact-prompt snapshot cache (`cfg.cache_bytes > 0`)
     cache: Option<PrefixCache>,
+    /// engine clock zero: every request stamp (`submitted_ms`,
+    /// `prefill_done_ms`, ITL gaps) is ms since this anchor — the only
+    /// wall-time source (clock-discipline audit rule)
+    anchor: WallAnchor,
 }
 
 impl Engine {
@@ -133,6 +138,7 @@ impl Engine {
             prefill_len,
             vocab,
             cache,
+            anchor: WallAnchor::new(),
             rt,
             cfg,
         })
@@ -141,6 +147,11 @@ impl Engine {
     /// Prefix-cache counters; `None` when serving with the cache off.
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Typed metrics snapshot stamped with the engine clock.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot(self.anchor.elapsed_ms())
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -211,12 +222,13 @@ impl Engine {
         }
         // -- harvest --
         let mut finished = Vec::new();
+        let now = self.anchor.elapsed_ms();
         let mut i = 0;
         while i < self.live.len() {
             if self.live[i].done() {
                 let lr = self.live.swap_remove(i);
                 self.pool.release(lr.state_slot);
-                let resp = lr.into_response();
+                let resp = lr.into_response(now);
                 self.metrics.record_response(
                     resp.ttft_ms,
                     resp.tpot_ms,
@@ -267,7 +279,11 @@ impl Engine {
         // seeded but unused — the XLA scheduler never reorders sampling
         // for a fixed workload, so the shared sampler stays exact here
         let mut lr = LiveRequest::new(req, slot, self.cfg.sampler_seed);
-        let t0 = std::time::Instant::now();
+        // prefill runs inline at admission here, so queued and admitted
+        // coincide on this engine's timeline
+        lr.submitted_ms = self.anchor.elapsed_ms();
+        lr.admitted_ms = lr.submitted_ms;
+        let t0 = WallAnchor::new();
         // exact whole-prompt hit: restore the end-of-prompt state and
         // sample from the cached last logits row — no graph execution.
         // (Partial prefixes are not replayable here: the fixed-length
@@ -281,14 +297,14 @@ impl Engine {
             // a cold prefill instead of panicking the serving thread
             if let Some(row) = h.logits_row {
                 self.pool.write(slot, h.slab);
-                self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+                self.metrics.prefill_ms.record(t0.elapsed_ms());
                 let stats = self.cache.as_ref().unwrap().stats();
                 self.metrics.record_cache_stats(stats);
                 let tok = self.sampler.sample(&row, self.vocab, &lr.req.params);
                 lr.generated.push(tok);
                 lr.phase = Phase::Decoding;
-                lr.prefill_done = Some(std::time::Instant::now());
-                lr.last_token = lr.prefill_done;
+                lr.prefill_done_ms = Some(self.anchor.elapsed_ms());
+                lr.last_token_ms = lr.prefill_done_ms;
                 self.live.push(lr);
                 return Ok(());
             }
@@ -305,8 +321,7 @@ impl Engine {
         ];
         let g = self.prefill_graph.clone();
         let out = self.rt.execute_lit(&g, &inputs)?;
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.metrics.prefill_ms.record(ms);
+        self.metrics.prefill_ms.record(t0.elapsed_ms());
         let (logits, conv, ssm) = unpack3_lit(&out)?;
         // store state
         self.pool.scatter_raw(&[slot], 1, &conv, &ssm);
@@ -326,8 +341,8 @@ impl Engine {
         let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
         lr.generated.push(tok);
         lr.phase = Phase::Decoding;
-        lr.prefill_done = Some(std::time::Instant::now());
-        lr.last_token = lr.prefill_done;
+        lr.prefill_done_ms = Some(self.anchor.elapsed_ms());
+        lr.last_token_ms = lr.prefill_done_ms;
         self.live.push(lr);
         Ok(())
     }
@@ -374,23 +389,22 @@ impl Engine {
             crate::runtime::lit_from_f32(&ss, &ssm)?,
         ];
         let graph = self.decode_graph_name(b)?;
-        let t0 = std::time::Instant::now();
+        let t0 = WallAnchor::new();
         let out = self.rt.execute_lit(&graph, &inputs)?;
-        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.metrics.decode_step_ms.record(step_ms);
+        self.metrics.decode_step_ms.record(t0.elapsed_ms());
         let (logits, conv_o, ssm_o) = unpack3_lit(&out)?;
         self.pool.scatter_raw(&slots, b, &conv_o, &ssm_o);
         let v = logits.len() / b;
+        let now = self.anchor.elapsed_ms();
         for (bi, &i) in group.iter().enumerate() {
             let row = &logits[bi * v..(bi + 1) * v];
             let lr = &mut self.live[i];
             let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
             lr.generated.push(tok);
-            let now = std::time::Instant::now();
-            if let Some(last) = lr.last_token {
-                lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+            if let Some(last) = lr.last_token_ms {
+                lr.decode_ms.push(now - last);
             }
-            lr.last_token = Some(now);
+            lr.last_token_ms = Some(now);
         }
         Ok(())
     }

@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 use anyhow::{anyhow, Result};
 
 use crate::config::TransformerTierInfo;
+use crate::coordinator::faults::WallAnchor;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{LiveRequest, Phase, Request, Response};
 use crate::coordinator::sampler::Sampler;
@@ -37,6 +38,9 @@ pub struct TransformerEngine {
     vocab: usize,
     /// KV byte budget across live requests (backpressure watermark)
     pub byte_budget: usize,
+    /// engine clock zero — the only wall-time source here
+    /// (clock-discipline audit rule)
+    anchor: WallAnchor,
 }
 
 impl TransformerEngine {
@@ -77,6 +81,7 @@ impl TransformerEngine {
             decode_graph,
             vocab,
             byte_budget,
+            anchor: WallAnchor::new(),
         })
     }
 
@@ -131,11 +136,12 @@ impl TransformerEngine {
         }
         // harvest
         let mut finished = Vec::new();
+        let now = self.anchor.elapsed_ms();
         let mut i = 0;
         while i < self.live.len() {
             if self.live[i].0.done() {
                 let (lr, _, _, _) = self.live.swap_remove(i);
-                let resp = lr.into_response();
+                let resp = lr.into_response(now);
                 self.metrics.record_response(resp.ttft_ms, resp.tpot_ms, resp.ttlt_ms,
                                              resp.tokens.len(), &resp.itl_ms);
                 finished.push(resp);
@@ -167,9 +173,11 @@ impl TransformerEngine {
         // per-request RNG stream unused here (this engine keeps its
         // shared sampler; `set_sampler_seed` predates the config route)
         let mut lr = LiveRequest::new(req, usize::MAX, super::engine::DEFAULT_SAMPLER_SEED);
+        lr.submitted_ms = self.anchor.elapsed_ms();
+        lr.admitted_ms = lr.submitted_ms;
         let n = self.cache_elems();
         let sh = self.cache_shape();
-        let t0 = std::time::Instant::now();
+        let t0 = WallAnchor::new();
         let inputs = [
             lit_from_i32(&[1, t], &toks)?,
             lit_from_f32(&sh, &vec![0.0; n])?,
@@ -178,7 +186,7 @@ impl TransformerEngine {
         ];
         let g = self.prefill_graph.clone();
         let out = self.rt.execute_lit(&g, &inputs)?;
-        self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        self.metrics.prefill_ms.record(t0.elapsed_ms());
         let logits = lit_to_f32(&out[0])?;
         let k = lit_to_f32(&out[1])?;
         let v = lit_to_f32(&out[2])?;
@@ -187,8 +195,8 @@ impl TransformerEngine {
         let tok = self.sampler.sample(row, self.vocab, &lr.req.params);
         lr.generated.push(tok);
         lr.phase = Phase::Decoding;
-        lr.prefill_done = Some(std::time::Instant::now());
-        lr.last_token = lr.prefill_done;
+        lr.prefill_done_ms = Some(self.anchor.elapsed_ms());
+        lr.last_token_ms = lr.prefill_done_ms;
         self.live.push((lr, k, v, t));
         Ok(())
     }
@@ -211,21 +219,21 @@ impl TransformerEngine {
             lit_from_i32(&[], &[pos as i32])?,
         ];
         let g = self.decode_graph.clone();
-        let t0 = std::time::Instant::now();
+        let t0 = WallAnchor::new();
         let out = self.rt.execute_lit(&g, &inputs)?;
-        self.metrics.decode_step_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+        self.metrics.decode_step_ms.record(t0.elapsed_ms());
         let logits = lit_to_f32(&out[0])?;
+        let now = self.anchor.elapsed_ms();
         let (lr, kc, vc, len) = &mut self.live[idx];
         *kc = lit_to_f32(&out[1])?;
         *vc = lit_to_f32(&out[2])?;
         *len = (*len + 1).min(self.tier.max_ctx);
         let next = self.sampler.sample(&logits, self.vocab, &lr.req.params);
         lr.generated.push(next);
-        let now = std::time::Instant::now();
-        if let Some(last) = lr.last_token {
-            lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+        if let Some(last) = lr.last_token_ms {
+            lr.decode_ms.push(now - last);
         }
-        lr.last_token = Some(now);
+        lr.last_token_ms = Some(now);
         Ok(())
     }
 }

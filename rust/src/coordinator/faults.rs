@@ -18,8 +18,19 @@
 //! boundaries against `Clock::Wall` (real time) or `Clock::Manual`
 //! (tick count × a fixed ms-per-tick), the latter making deadline
 //! expiry — and therefore whole chaos schedules — bit-reproducible.
+//!
+//! **Clock discipline (ISSUE 9):** this module is the ONLY place in
+//! `coordinator/` and `obs/` allowed to read raw time. Everything else
+//! — engines, metrics, request stamps, the flight recorder — takes
+//! `f64` milliseconds that originated either from `Clock::Manual`
+//! arithmetic or from a [`WallAnchor`] held by an engine. The
+//! `clock-discipline` rule in `quamba-audit` enforces this: a raw
+//! `Instant::now()` / `SystemTime::now()` anywhere else on the serving
+//! path is a finding, because it would make traces and metrics
+//! snapshots non-reproducible under the manual clock.
 
 use std::any::Any;
+use std::time::Instant;
 
 /// Engine time source for deadline checks. `Wall` anchors at engine
 /// construction; `Manual` is deterministic — `now = tick ×
@@ -34,6 +45,32 @@ pub enum Clock {
 impl Default for Clock {
     fn default() -> Self {
         Clock::Wall
+    }
+}
+
+/// The sanctioned wall-clock reader for the serving path: a fixed
+/// epoch captured at construction, read as `f64` milliseconds since.
+///
+/// Engines hold one `WallAnchor` and derive every `Clock::Wall`
+/// timestamp from it; under `Clock::Manual` they never consult it, so
+/// manual-clock runs stay bit-reproducible. Confining the raw
+/// `Instant` reads to this type (checked by the auditor's
+/// `clock-discipline` rule) keeps time injectable everywhere else.
+#[derive(Debug, Clone, Copy)]
+pub struct WallAnchor {
+    epoch: Instant,
+}
+
+impl WallAnchor {
+    #[allow(clippy::new_without_default)] // an anchor is an explicit act, not a default
+    pub fn new() -> WallAnchor {
+        WallAnchor { epoch: Instant::now() }
+    }
+
+    /// Milliseconds elapsed since the anchor was created.
+    #[inline]
+    pub fn elapsed_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
     }
 }
 
@@ -316,5 +353,14 @@ mod tests {
     #[test]
     fn clock_default_is_wall() {
         assert_eq!(Clock::default(), Clock::Wall);
+    }
+
+    #[test]
+    fn wall_anchor_is_monotone_nonnegative() {
+        let a = WallAnchor::new();
+        let t0 = a.elapsed_ms();
+        let t1 = a.elapsed_ms();
+        assert!(t0 >= 0.0);
+        assert!(t1 >= t0, "anchor reads must be monotone: {t0} then {t1}");
     }
 }

@@ -1,24 +1,24 @@
-//! Serving metrics: TTFT / TPOT / TTLT histograms, throughput and
-//! queue gauges — the quantities behind paper Table 1 and Fig. 1(a/b)
-//! — plus the prefix-cache counters (hits / misses / evicted bytes /
-//! prefill tokens saved) behind the warm-TTFT serving story.
-
-use std::time::Instant;
+//! Serving metrics: TTFT / TPOT / ITL / TTLT, per-tick duration and
+//! queue-depth distributions, throughput and outcome counters — the
+//! quantities behind paper Table 1 and Fig. 1(a/b) — plus the
+//! prefix-cache counters (hits / misses / evicted bytes / prefill
+//! tokens saved) behind the warm-TTFT serving story.
+//!
+//! Since ISSUE 9 every distribution is a mergeable constant-memory
+//! log₂-bucket histogram ([`LogHistogram`]): no retained sample
+//! vectors, no reservoir cap — memory is fixed at ~600 bytes per
+//! distribution no matter how many tokens flow, mean/max/count stay
+//! exact, interior percentiles are bucket-quantized (≤ one power of
+//! two), and two engines' metrics merge into exactly what one engine
+//! would have recorded. The whole state also crosses the engine
+//! mailbox as a typed [`MetricsSnapshot`] (not a formatted string), so
+//! the `/metrics` exporter and tests consume numbers.
 
 use crate::cache::CacheStats;
+use crate::coordinator::faults::WallAnchor;
 use crate::coordinator::request::FinishReason;
-use crate::util::rng::Pcg32;
-use crate::util::stats::{LogHistogram, Summary};
-
-/// Retained inter-token-gap samples for the exact `itl_summary`. ITL
-/// records one sample per generated *token* (unlike the per-request
-/// ttft/tpot/ttlt vecs), so an unbounded buffer would grow ~8
-/// bytes/token for the life of a serving process; above the cap the
-/// buffer switches to deterministic reservoir sampling (Algorithm R,
-/// seeded) — exact below the cap (every test/bench workload is), an
-/// unbiased sample above it. The `itl_ms` histogram keeps the full
-/// stream either way.
-pub const ITL_SAMPLE_CAP: usize = 65_536;
+use crate::obs::hist::LogHistogram;
+use crate::util::stats::Summary;
 
 pub struct Metrics {
     pub ttft_ms: LogHistogram,
@@ -27,19 +27,14 @@ pub struct Metrics {
     pub decode_step_ms: LogHistogram,
     pub prefill_ms: LogHistogram,
     /// per-token inter-token gaps across all finished requests — the
-    /// tail of this distribution (p95/max) is what chunked prefill
-    /// bounds under bursty long-prompt arrivals
+    /// tail of this distribution (p95/p99/max) is what chunked prefill
+    /// bounds under bursty long-prompt arrivals, and the p99 is the
+    /// multi-tenant SLO gauge the exporter publishes
     pub itl_ms: LogHistogram,
-    /// raw samples for exact summaries in reports (per-request counts
-    /// — bounded by workload size)
-    ttft_raw: Vec<f64>,
-    tpot_raw: Vec<f64>,
-    ttlt_raw: Vec<f64>,
-    /// per-token gap samples, reservoir-capped at [`ITL_SAMPLE_CAP`]
-    itl_raw: Vec<f64>,
-    /// gaps observed so far (reservoir denominator)
-    itl_seen: u64,
-    itl_rng: Pcg32,
+    /// wall duration of each engine tick (engine clock)
+    pub tick_ms: LogHistogram,
+    /// submit-queue depth sampled once per tick
+    pub queue_depth: LogHistogram,
     pub tokens_out: u64,
     pub requests_done: u64,
     /// failure-model outcome counters (ISSUE 7): every submitted
@@ -58,7 +53,7 @@ pub struct Metrics {
     /// last-synced prefix-cache counters (None until an engine with an
     /// active cache calls [`Self::record_cache_stats`])
     pub cache: Option<CacheStats>,
-    started: Instant,
+    anchor: WallAnchor,
 }
 
 impl Default for Metrics {
@@ -70,18 +65,14 @@ impl Default for Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Metrics {
-            ttft_ms: LogHistogram::new(0.01, 60_000.0, 64),
-            tpot_ms: LogHistogram::new(0.01, 10_000.0, 64),
-            ttlt_ms: LogHistogram::new(0.01, 600_000.0, 64),
-            decode_step_ms: LogHistogram::new(0.01, 10_000.0, 64),
-            prefill_ms: LogHistogram::new(0.01, 60_000.0, 64),
-            itl_ms: LogHistogram::new(0.01, 60_000.0, 64),
-            ttft_raw: Vec::new(),
-            tpot_raw: Vec::new(),
-            ttlt_raw: Vec::new(),
-            itl_raw: Vec::new(),
-            itl_seen: 0,
-            itl_rng: Pcg32::new(0x17A7),
+            ttft_ms: LogHistogram::new(),
+            tpot_ms: LogHistogram::new(),
+            ttlt_ms: LogHistogram::new(),
+            decode_step_ms: LogHistogram::new(),
+            prefill_ms: LogHistogram::new(),
+            itl_ms: LogHistogram::new(),
+            tick_ms: LogHistogram::new(),
+            queue_depth: LogHistogram::new(),
             tokens_out: 0,
             requests_done: 0,
             rejected: 0,
@@ -92,7 +83,7 @@ impl Metrics {
             padded_lanes: 0,
             total_lanes: 0,
             cache: None,
-            started: Instant::now(),
+            anchor: WallAnchor::new(),
         }
     }
 
@@ -108,8 +99,10 @@ impl Metrics {
     }
 
     /// `itl` is the request's per-token inter-token gaps
-    /// (`Response::itl_ms`) — recorded individually so the summary can
-    /// report true tail percentiles, not just the per-request mean.
+    /// (`Response::itl_ms`) — recorded individually so the pooled
+    /// distribution keeps true tail percentiles, not just the
+    /// per-request mean. Non-finite samples (no-gap sentinels) are
+    /// dropped by the histogram.
     pub fn record_response(
         &mut self,
         ttft: f64,
@@ -118,32 +111,11 @@ impl Metrics {
         n_tokens: usize,
         itl: &[f64],
     ) {
-        if ttft.is_finite() {
-            self.ttft_ms.record(ttft);
-            self.ttft_raw.push(ttft);
-        }
-        if tpot.is_finite() {
-            self.tpot_ms.record(tpot);
-            self.tpot_raw.push(tpot);
-        }
-        if ttlt.is_finite() {
-            self.ttlt_ms.record(ttlt);
-            self.ttlt_raw.push(ttlt);
-        }
+        self.ttft_ms.record(ttft);
+        self.tpot_ms.record(tpot);
+        self.ttlt_ms.record(ttlt);
         for &gap in itl {
-            if gap.is_finite() {
-                self.itl_ms.record(gap);
-                self.itl_seen += 1;
-                if self.itl_raw.len() < ITL_SAMPLE_CAP {
-                    self.itl_raw.push(gap);
-                } else {
-                    // Algorithm R: keep each seen gap with prob cap/seen
-                    let j = (self.itl_rng.next_u64() % self.itl_seen) as usize;
-                    if j < ITL_SAMPLE_CAP {
-                        self.itl_raw[j] = gap;
-                    }
-                }
-            }
+            self.itl_ms.record(gap);
         }
         self.tokens_out += n_tokens as u64;
         self.requests_done += 1;
@@ -182,8 +154,18 @@ impl Metrics {
         self.padded_lanes += (bucket - live) as u64;
     }
 
+    /// One engine tick: its duration and the submit-queue depth at its
+    /// end, both on the engine clock.
+    pub fn record_tick(&mut self, tick_ms: f64, queue_depth: usize) {
+        self.tick_ms.record(tick_ms);
+        self.queue_depth.record(queue_depth as f64);
+    }
+
+    /// Wall-clock throughput since construction (real time, even under
+    /// `Clock::Manual` — this is the operator-facing report gauge; the
+    /// deterministic equivalent lives in [`Self::snapshot`]).
     pub fn throughput_tok_s(&self) -> f64 {
-        self.tokens_out as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+        self.tokens_out as f64 / (self.anchor.elapsed_ms() / 1e3).max(1e-9)
     }
 
     pub fn padding_fraction(&self) -> f64 {
@@ -195,21 +177,48 @@ impl Metrics {
     }
 
     pub fn ttft_summary(&self) -> Summary {
-        Summary::of(&self.ttft_raw)
+        self.ttft_ms.summary()
     }
     pub fn tpot_summary(&self) -> Summary {
-        Summary::of(&self.tpot_raw)
+        self.tpot_ms.summary()
     }
     pub fn ttlt_summary(&self) -> Summary {
-        Summary::of(&self.ttlt_raw)
+        self.ttlt_ms.summary()
     }
-    /// Summary over the pooled inter-token gaps — exact while at most
-    /// [`ITL_SAMPLE_CAP`] gaps have been recorded, a seeded reservoir
-    /// sample beyond that (the `itl_ms` histogram always covers the
-    /// full stream). p95/max are the chunked-prefill acceptance
-    /// quantities.
+    /// Summary over the pooled inter-token gaps (full stream, constant
+    /// memory — mean/max/count exact, percentiles bucket-quantized).
+    /// p95/p99/max are the chunked-prefill and SLO tail quantities.
     pub fn itl_summary(&self) -> Summary {
-        Summary::of(&self.itl_raw)
+        self.itl_ms.summary()
+    }
+
+    /// The typed state that crosses the engine mailbox: every counter
+    /// and histogram by value. `now_ms` is the engine-clock timestamp
+    /// (deterministic under `Clock::Manual`, so two identical seeded
+    /// runs produce *equal* snapshots), used for the deterministic
+    /// `tok_per_s` gauge.
+    pub fn snapshot(&self, now_ms: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_done: self.requests_done,
+            rejected: self.rejected,
+            deadline_missed: self.deadline_missed,
+            cancelled: self.cancelled,
+            failed: self.failed,
+            tokens_out: self.tokens_out,
+            snapshot_drops: self.snapshot_drops,
+            padded_lanes: self.padded_lanes,
+            total_lanes: self.total_lanes,
+            elapsed_ms: now_ms,
+            tok_per_s: self.tokens_out as f64 / (now_ms / 1e3).max(1e-9),
+            shed_rate: self.shed_rate(),
+            ttft_ms: self.ttft_ms.clone(),
+            tpot_ms: self.tpot_ms.clone(),
+            ttlt_ms: self.ttlt_ms.clone(),
+            itl_ms: self.itl_ms.clone(),
+            tick_ms: self.tick_ms.clone(),
+            queue_depth: self.queue_depth.clone(),
+            cache: self.cache,
+        }
     }
 
     pub fn report(&self) -> String {
@@ -221,7 +230,7 @@ impl Metrics {
             "requests={} tokens={} throughput={:.1} tok/s padding={:.1}%\n\
              TTFT ms  mean={:.2} p50={:.2} p95={:.2} p99={:.2}\n\
              TPOT ms  mean={:.3} p50={:.3} p99={:.3}\n\
-             ITL  ms  mean={:.3} p50={:.3} p95={:.3} max={:.3}\n\
+             ITL  ms  mean={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}\n\
              TTLT ms  mean={:.1} p50={:.1} p99={:.1}",
             self.requests_done,
             self.tokens_out,
@@ -229,7 +238,7 @@ impl Metrics {
             100.0 * self.padding_fraction(),
             t.mean, t.p50, t.p95, t.p99,
             p.mean, p.p50, p.p99,
-            i.mean, i.p50, i.p95, i.max,
+            i.mean, i.p50, i.p95, i.p99, i.max,
             l.mean, l.p50, l.p99,
         );
         let fail_total = self.rejected + self.deadline_missed + self.cancelled + self.failed;
@@ -265,6 +274,44 @@ impl Metrics {
     }
 }
 
+/// Every metric by value: the typed struct that crosses the engine
+/// mailbox (`Msg::MetricsSnapshot`) so exporters and tests consume
+/// numbers, not a formatted report string. `PartialEq` + `Clone` so
+/// determinism tests can assert two seeded manual-clock runs produce
+/// *equal* snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests_done: u64,
+    pub rejected: u64,
+    pub deadline_missed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    pub tokens_out: u64,
+    pub snapshot_drops: u64,
+    pub padded_lanes: u64,
+    pub total_lanes: u64,
+    /// engine-clock timestamp the snapshot was taken at
+    pub elapsed_ms: f64,
+    /// tokens / engine-clock seconds (deterministic under the manual
+    /// clock, wall throughput under `Clock::Wall`)
+    pub tok_per_s: f64,
+    pub shed_rate: f64,
+    pub ttft_ms: LogHistogram,
+    pub tpot_ms: LogHistogram,
+    pub ttlt_ms: LogHistogram,
+    pub itl_ms: LogHistogram,
+    pub tick_ms: LogHistogram,
+    pub queue_depth: LogHistogram,
+    pub cache: Option<CacheStats>,
+}
+
+impl MetricsSnapshot {
+    /// Requests that reached any terminal outcome.
+    pub fn total_outcomes(&self) -> u64 {
+        self.requests_done + self.rejected + self.deadline_missed + self.cancelled + self.failed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,12 +328,13 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("ITL"), "report must surface inter-token latency: {r}");
+        assert!(r.contains("p99="), "ITL p99 is the SLO gauge and must be printed: {r}");
         assert!(!r.contains("prefix-cache"), "no cache line until stats are synced");
-        assert!((m.ttft_summary().mean - 15.0).abs() < 1e-9);
+        assert!((m.ttft_summary().mean - 15.0).abs() < 1e-9, "histogram means stay exact");
         let i = m.itl_summary();
         assert_eq!(i.n, 4);
-        assert_eq!(i.max, 9.0, "pooled ITL must keep the per-token tail");
-        assert_eq!(m.itl_ms.n, 4);
+        assert_eq!(i.max, 9.0, "pooled ITL must keep the per-token tail exactly");
+        assert_eq!(m.itl_ms.count, 4);
     }
 
     #[test]
@@ -294,20 +342,75 @@ mod tests {
         let mut m = Metrics::new();
         m.record_response(1.0, f64::NAN, 2.0, 1, &[f64::NAN]);
         assert_eq!(m.itl_summary().n, 0);
+        assert_eq!(m.tpot_ms.count, 0, "NaN TPOT must not be recorded");
         assert_eq!(m.requests_done, 1);
     }
 
     #[test]
-    fn itl_raw_buffer_is_bounded() {
-        // the retained sample set must stop growing at the cap while
-        // the histogram keeps counting the full stream
+    fn itl_memory_is_constant_and_stream_is_uncapped() {
+        // the old reservoir capped the retained ITL sample set; the
+        // histogram records the FULL stream in constant memory — count,
+        // sum and max stay exact at any volume
         let mut m = Metrics::new();
         let gaps = vec![1.0f64; 4096];
-        for _ in 0..((2 * ITL_SAMPLE_CAP) / gaps.len()) {
+        let rounds = 64usize; // 256k gaps — 4x the old reservoir cap
+        for _ in 0..rounds {
             m.record_response(1.0, 1.0, 1.0, gaps.len(), &gaps);
         }
-        assert_eq!(m.itl_summary().n, ITL_SAMPLE_CAP);
-        assert_eq!(m.itl_ms.n, 2 * ITL_SAMPLE_CAP as u64);
+        let n = (rounds * gaps.len()) as u64;
+        assert_eq!(m.itl_ms.count, n);
+        assert_eq!(m.itl_summary().n, n as usize, "no sample cap anymore");
+        assert_eq!(m.itl_ms.sum, n as f64);
+        assert_eq!(
+            std::mem::size_of_val(&m.itl_ms),
+            std::mem::size_of::<LogHistogram>(),
+            "the histogram is a flat fixed-size value — nothing grows with the stream"
+        );
+    }
+
+    #[test]
+    fn snapshot_is_typed_and_deterministic() {
+        let mk = || {
+            let mut m = Metrics::new();
+            m.record_response(10.0, 1.0, 50.0, 40, &[1.0, 1.5]);
+            m.record_failure(FinishReason::Rejected);
+            m.record_tick(2.0, 3);
+            m.snapshot(100.0)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "identical recording → equal snapshots (wall time never leaks in)");
+        assert_eq!(a.requests_done, 1);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.tokens_out, 40);
+        assert_eq!(a.total_outcomes(), 2);
+        assert!((a.tok_per_s - 400.0).abs() < 1e-9, "40 tokens / 0.1 s on the engine clock");
+        assert_eq!(a.tick_ms.count, 1);
+        assert_eq!(a.queue_depth.count, 1);
+        assert_eq!(a.itl_ms.count, 2);
+    }
+
+    #[test]
+    fn merged_snapshots_equal_single_recorder() {
+        // the replica-routing story: two engines' histograms combine
+        // into exactly one engine's view
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        let mut whole = Metrics::new();
+        for i in 0..40 {
+            let ttft = 1.0 + i as f64;
+            whole.record_response(ttft, 0.5, ttft * 2.0, 4, &[0.5, 0.7]);
+            if i % 2 == 0 { &mut a } else { &mut b }.record_response(
+                ttft,
+                0.5,
+                ttft * 2.0,
+                4,
+                &[0.5, 0.7],
+            );
+        }
+        let mut merged = a.ttft_ms.clone();
+        merged.merge(&b.ttft_ms);
+        assert_eq!(merged, whole.ttft_ms);
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //!                  (`plan_tick`: token budget, prefill chunks)
 //! * [`sampler`]  — greedy / temperature / top-k sampling (per-request
 //!                  RNG streams on the native path)
-//! * [`metrics`]  — TTFT / TPOT / ITL / TTLT histograms + queue gauges
+//! * [`metrics`]  — TTFT / TPOT / ITL / TTLT as mergeable
+//!                  constant-memory log₂ histograms
+//!                  ([`crate::obs::hist`]) + per-tick duration and
+//!                  queue-depth gauges, snapshotted across the mailbox
+//!                  as a typed [`metrics::MetricsSnapshot`]
 //! * [`engine`]   — the single-owner execution loop over [`crate::runtime`]
 //!                  (two-phase: fixed-length AOT prefill graphs cannot
 //!                  pause mid-prompt)
@@ -50,5 +54,6 @@ pub mod state;
 
 pub use engine::{Engine, EngineConfig};
 pub use faults::{Clock, FaultPlan, FaultSite, TargetedFault};
+pub use metrics::MetricsSnapshot;
 pub use native::{NativeEngine, NativeEngineConfig};
 pub use request::{FinishReason, Phase, Request, RequestId, Response, SamplingParams};

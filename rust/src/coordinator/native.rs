@@ -90,12 +90,15 @@ use anyhow::Result;
 use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, Snapshot};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::DEFAULT_SAMPLER_SEED;
-use crate::coordinator::faults::{panic_message, Clock, FaultPlan, FaultSite, InjectedFault};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::faults::{
+    panic_message, Clock, FaultPlan, FaultSite, InjectedFault, WallAnchor,
+};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{FinishReason, LiveRequest, Phase, Request, RequestId, Response};
 use crate::coordinator::sampler;
 use crate::coordinator::state::SsmStatePool;
 use crate::data::BOS;
+use crate::obs::trace::{SpanKind, SpanRecord, TraceRing, NO_REQ};
 use crate::quant::{KernelBackend, Kernels};
 use crate::ssm::{MambaState, StepModel, StepScratch};
 
@@ -167,6 +170,16 @@ pub struct NativeEngineConfig {
     /// model construction (`QuantConfig::weight_bits`) — this field
     /// records it for telemetry and `quamba serve --bits` plumbing.
     pub weight_bits: u8,
+    /// flight-recorder tick tracing (ISSUE 9): record one
+    /// [`SpanRecord`] per tick phase into a preallocated overwrite-
+    /// oldest [`TraceRing`], dumpable as Chrome trace-event JSON
+    /// ([`NativeEngine::dump_trace`]). Off (default) costs one
+    /// `Option` discriminant check per phase; on, each span is one
+    /// clock read + one O(1) ring write — no allocation either way.
+    pub trace: bool,
+    /// span slots preallocated for the flight recorder (min 1); the
+    /// ring retains the most recent `trace_capacity` spans
+    pub trace_capacity: usize,
 }
 
 impl Default for NativeEngineConfig {
@@ -187,6 +200,8 @@ impl Default for NativeEngineConfig {
             clock: Clock::Wall,
             faults: FaultPlan::none(),
             weight_bits: 8,
+            trace: false,
+            trace_capacity: 65_536,
         }
     }
 }
@@ -257,7 +272,11 @@ fn run_round(
     ws: &mut RoundScratch,
 ) {
     ws.scratch.threads = threads;
-    let t0 = std::time::Instant::now();
+    // per-round model wall time (WallAnchor keeps the raw Instant
+    // confined to faults.rs per the clock-discipline audit rule);
+    // intentionally real time even under Clock::Manual — it feeds the
+    // perf-facing decode_step_ms histogram, not the snapshot/trace path
+    let t0 = WallAnchor::new();
     let lanes = &r.lanes;
     let toks = &r.toks;
     let state = &mut r.state;
@@ -268,7 +287,7 @@ fn run_round(
         }
         model.step_into(toks, state, &mut ws.scratch, &mut ws.logits);
     }));
-    r.step_ms = t0.elapsed().as_secs_f64() * 1e3;
+    r.step_ms = t0.elapsed_ms();
     if let Err(p) = res {
         r.panic = Some(p);
     }
@@ -298,8 +317,11 @@ pub struct NativeEngine {
     /// injected latency accumulated under `Clock::Manual` (wall-clock
     /// engines sleep instead)
     manual_extra_ms: f64,
-    /// wall anchor for `Clock::Wall` deadline sweeps
-    started: std::time::Instant,
+    /// wall anchor for `Clock::Wall` deadline sweeps and trace stamps
+    anchor: WallAnchor,
+    /// flight recorder (`cfg.trace`): fixed-capacity span ring, written
+    /// once per tick phase, overwrite-oldest. `None` = tracing off.
+    trace: Option<TraceRing>,
 }
 
 impl NativeEngine {
@@ -335,7 +357,8 @@ impl NativeEngine {
             next_admission_seq: 0,
             tick: 0,
             manual_extra_ms: 0.0,
-            started: std::time::Instant::now(),
+            anchor: WallAnchor::new(),
+            trace: cfg.trace.then(|| TraceRing::new(cfg.trace_capacity)),
             model,
             cfg,
         }
@@ -361,9 +384,54 @@ impl NativeEngine {
     /// injected latency under `Clock::Manual`).
     fn now_ms(&self) -> f64 {
         match self.cfg.clock {
-            Clock::Wall => self.started.elapsed().as_secs_f64() * 1e3,
+            Clock::Wall => self.anchor.elapsed_ms(),
             Clock::Manual { ms_per_tick } => self.tick as f64 * ms_per_tick + self.manual_extra_ms,
         }
+    }
+
+    /// Span-open stamp for the flight recorder: the engine clock when
+    /// tracing is on, a dead constant when it is off — so the disabled
+    /// path costs one `Option` discriminant check per phase.
+    #[inline]
+    fn span_start(&self) -> f64 {
+        if self.trace.is_some() {
+            self.now_ms()
+        } else {
+            0.0
+        }
+    }
+
+    /// Close a phase span opened at `start_ms`. No-op (no clock read,
+    /// no write) when tracing is off; zero-allocation O(1) ring write
+    /// when on.
+    #[inline]
+    fn push_span(&mut self, kind: SpanKind, start_ms: f64, req_id: u64, tokens: u32, lanes: u32) {
+        if self.trace.is_none() {
+            return;
+        }
+        let end_ms = self.now_ms();
+        let tick = self.tick;
+        if let Some(ring) = self.trace.as_mut() {
+            ring.record(SpanRecord { kind, tick, start_ms, end_ms, req_id, tokens, lanes });
+        }
+    }
+
+    /// Typed metrics snapshot stamped with the engine clock —
+    /// deterministic (equal run-to-run) under `Clock::Manual`.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot(self.now_ms())
+    }
+
+    /// Chrome trace-event JSON dump of the retained flight-recorder
+    /// spans (`chrome://tracing` / `ui.perfetto.dev`); `None` when the
+    /// engine was built with `cfg.trace = false`.
+    pub fn dump_trace(&self) -> Option<String> {
+        self.trace.as_ref().map(|t| t.to_chrome_json())
+    }
+
+    /// Direct view of the flight recorder (tests/tooling).
+    pub fn trace_ring(&self) -> Option<&TraceRing> {
+        self.trace.as_ref()
     }
 
     /// Admission control: reject immediately when the bounded submit
@@ -512,9 +580,23 @@ impl NativeEngine {
                 Clock::Wall => std::thread::sleep(std::time::Duration::from_secs_f64(lat / 1e3)),
             }
         }
+        // tick timing: start stamp for the per-tick histogram (always)
+        // and the enclosing Tick span (when tracing). Under
+        // `Clock::Manual` both stamps of a tick coincide, so tick_ms
+        // is deterministically 0 and traces are byte-stable.
+        let t_tick = self.now_ms();
+        let trace_on = self.trace.is_some();
+        let tok_before = if trace_on { self.tokens_generated() } else { 0 };
         let mut finished = Vec::new();
+        let t_adm = self.span_start();
+        let seq_before = self.next_admission_seq;
         self.sweep_deadlines(&mut finished);
         self.admit(&mut finished);
+        if trace_on {
+            let admitted = (self.next_admission_seq - seq_before) as u32;
+            self.push_span(SpanKind::Admission, t_adm, NO_REQ, admitted, self.live.len() as u32);
+        }
+        let t_plan = self.span_start();
         let dec_idx: Vec<usize> = (0..self.live.len())
             .filter(|&i| self.live[i].phase == Phase::Decoding && self.live[i].fault.is_none())
             .collect();
@@ -537,6 +619,11 @@ impl NativeEngine {
             self.cfg.prefill_chunk,
             self.cfg.max_tokens_per_tick,
         );
+        if trace_on {
+            let planned: usize =
+                dec_idx.len() + plan.chunks.iter().map(|c| c.tokens).sum::<usize>();
+            self.push_span(SpanKind::Plan, t_plan, NO_REQ, planned as u32, dec_idx.len() as u32);
+        }
         // decode first: the latency-critical lanes never wait behind
         // this tick's prefill work
         if !dec_idx.is_empty() {
@@ -548,6 +635,9 @@ impl NativeEngine {
         // harvest: natural completions + this tick's fault verdicts
         // (cancellations landed mid-tick, deadline expiry, isolated
         // panics) — all through the single reclaim point
+        let t_harv = self.span_start();
+        let live_at_harvest = self.live.len();
+        let harvested_before = finished.len();
         let mut i = 0;
         while i < self.live.len() {
             if self.live[i].done() || self.live[i].fault.is_some() {
@@ -556,6 +646,14 @@ impl NativeEngine {
                 i += 1;
             }
         }
+        if trace_on {
+            let harvested = (finished.len() - harvested_before) as u32;
+            self.push_span(SpanKind::Harvest, t_harv, NO_REQ, harvested, live_at_harvest as u32);
+            let tok_delta = self.tokens_generated().saturating_sub(tok_before) as u32;
+            self.push_span(SpanKind::Tick, t_tick, NO_REQ, tok_delta, self.live.len() as u32);
+        }
+        let t_end = self.now_ms();
+        self.metrics.record_tick(t_end - t_tick, self.queue.len());
         self.done.extend(finished.iter().cloned());
         Ok(finished)
     }
@@ -580,9 +678,10 @@ impl NativeEngine {
     /// `quamba-audit`'s `slot-reclaim` rule confines `live.swap_remove`
     /// and `pool.release` in this file to this function.
     fn finish_live(&mut self, i: usize) -> Response {
+        let now = self.now_ms();
         let lr = self.live.swap_remove(i);
         self.pool.release(lr.state_slot);
-        let resp = lr.into_response();
+        let resp = lr.into_response(now);
         if resp.finish.is_ok() {
             self.metrics.record_response(
                 resp.ttft_ms,
@@ -654,6 +753,7 @@ impl NativeEngine {
     /// restore per request, and their *compute* is paced by the
     /// planner across the following ticks.
     fn admit(&mut self, out: &mut Vec<Response>) {
+        let now = self.now_ms();
         for _ in 0..self.cfg.max_prefills_per_tick {
             if self.queue.is_empty() || self.pool.in_use() >= self.pool.capacity() {
                 break;
@@ -682,6 +782,7 @@ impl NativeEngine {
             };
             let mut lr = LiveRequest::new(req, slot, self.cfg.sampler_seed);
             lr.submitted_ms = submit_ms;
+            lr.admitted_ms = now;
             lr.admitted_seq = self.next_admission_seq;
             self.next_admission_seq += 1;
             let hit = match self.cache.as_mut() {
@@ -697,8 +798,8 @@ impl NativeEngine {
                     let tok = sampler::sample_row(&mut lr.rng, &row, self.vocab, &lr.req.params);
                     lr.generated.push(tok);
                     lr.phase = Phase::Decoding;
-                    lr.prefill_done = Some(std::time::Instant::now());
-                    lr.last_token = lr.prefill_done;
+                    lr.prefill_done_ms = Some(now);
+                    lr.last_token_ms = lr.prefill_done_ms;
                 } else if h.len < lr.prompt.len() {
                     // partial hit: the restored prefix is this model's
                     // deterministic state for those tokens, so the
@@ -748,10 +849,6 @@ impl NativeEngine {
             self.scratches.push(RoundScratch::new(self.kernels));
         }
         // execute phase
-        let model = &*self.model;
-        let faults = &self.cfg.faults;
-        let live = &self.live;
-        let scratches = &mut self.scratches;
         let threads = self.cfg.threads.max(1);
         if threads > 1 && io.len() > 1 {
             // group-level parallelism, capped at `threads` scoped
@@ -761,19 +858,43 @@ impl NativeEngine {
             // below, so tokens match the sequential schedule exactly.
             // Panics are caught *inside* each worker (run_round), so a
             // poisoned round never tears down the scope.
-            let per = io.len().div_ceil(threads);
-            std::thread::scope(|sc| {
-                for (rs, wss) in io.chunks_mut(per).zip(scratches.chunks_mut(per)) {
-                    sc.spawn(move || {
-                        for (r, ws) in rs.iter_mut().zip(wss.iter_mut()) {
-                            run_round(model, faults, live, 1, r, ws);
-                        }
-                    });
-                }
-            });
+            let t0 = self.span_start();
+            {
+                let model = &*self.model;
+                let faults = &self.cfg.faults;
+                let live = &self.live;
+                let scratches = &mut self.scratches;
+                let per = io.len().div_ceil(threads);
+                std::thread::scope(|sc| {
+                    for (rs, wss) in io.chunks_mut(per).zip(scratches.chunks_mut(per)) {
+                        sc.spawn(move || {
+                            for (r, ws) in rs.iter_mut().zip(wss.iter_mut()) {
+                                run_round(model, faults, live, 1, r, ws);
+                            }
+                        });
+                    }
+                });
+            }
+            // the rounds overlapped in time across workers, so the
+            // recorder keeps ONE DecodeRound span covering the whole
+            // parallel section (per-round spans would double-count the
+            // window in span-sum accounting)
+            let real: usize = io.iter().map(|r| r.lanes.len()).sum();
+            let padded: usize = rounds[..io.len()].iter().sum();
+            self.push_span(SpanKind::DecodeRound, t0, NO_REQ, real as u32, padded as u32);
         } else {
-            for (r, ws) in io.iter_mut().zip(scratches.iter_mut()) {
-                run_round(model, faults, live, threads, r, ws);
+            for i in 0..io.len() {
+                let t0 = self.span_start();
+                run_round(
+                    &*self.model,
+                    &self.cfg.faults,
+                    &self.live,
+                    threads,
+                    &mut io[i],
+                    &mut self.scratches[i],
+                );
+                let (real, b) = (io[i].lanes.len() as u32, rounds[i] as u32);
+                self.push_span(SpanKind::DecodeRound, t0, NO_REQ, real, b);
             }
         }
         // one latency sample per round, in deterministic group order
@@ -826,17 +947,20 @@ impl NativeEngine {
             let RoundIo { lanes, slots, state, .. } = r;
             // only live slots are scattered back; padded-lane outputs drop
             self.pool.scatter_state(&slots, state);
+            // one engine-clock stamp per committed round: ITL gaps are
+            // inter-tick quantities, and the engine clock keeps them
+            // deterministic under Clock::Manual
+            let now = self.now_ms();
             let logits = &self.scratches[gi].logits;
             for (bi, &li) in lanes.iter().enumerate() {
                 let row = &logits[bi * v..(bi + 1) * v];
                 let lr = &mut self.live[li];
                 let tok = sampler::sample_row(&mut lr.rng, row, v, &lr.req.params);
                 lr.generated.push(tok);
-                let now = std::time::Instant::now();
-                if let Some(last) = lr.last_token {
-                    lr.decode_ms.push((now - last).as_secs_f64() * 1e3);
+                if let Some(last) = lr.last_token_ms {
+                    lr.decode_ms.push(now - last);
                 }
-                lr.last_token = Some(now);
+                lr.last_token_ms = Some(now);
             }
         }
     }
@@ -851,6 +975,13 @@ impl NativeEngine {
         if self.cache.is_none() {
             return;
         }
+        let t0 = self.span_start();
+        let req_id = self.live[live_i].req.id;
+        self.insert_snapshot_inner(live_i, end, logits_row);
+        self.push_span(SpanKind::SnapshotInsert, t0, req_id, end as u32, 1);
+    }
+
+    fn insert_snapshot_inner(&mut self, live_i: usize, end: usize, logits_row: Option<Vec<f32>>) {
         let req_id = self.live[live_i].req.id;
         let mut slab = self.pool.snapshot(self.live[live_i].state_slot);
         if self.cfg.faults.should_fail(FaultSite::Snapshot, req_id, end as u64) {
@@ -915,6 +1046,7 @@ impl NativeEngine {
         let mut logits: Vec<f32> = Vec::new();
         let v = self.vocab;
         while lanes.iter().any(|l| l.next < l.target) {
+            let t_chunk = self.span_start();
             // this sub-round's spans: (index into `lanes`, start, end),
             // ends snapped to the global stride grid so interior
             // snapshots land on one aligned cut set whatever chunk
@@ -948,7 +1080,7 @@ impl NativeEngine {
                     .iter()
                     .map(|&(i, s, e)| &live[lanes[i].live_i].prompt[s..e])
                     .collect();
-                let t0 = std::time::Instant::now();
+                let t0 = WallAnchor::new();
                 let res = catch_unwind(AssertUnwindSafe(|| {
                     for &(i, s, _) in &round {
                         let lr = &live[lanes[i].live_i];
@@ -958,9 +1090,16 @@ impl NativeEngine {
                 }));
                 // prefill_ms samples per batched sub-round (the unit
                 // the scheduler actually executes), like decode_step_ms
-                self.metrics.prefill_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+                self.metrics.prefill_ms.record(t0.elapsed_ms());
                 res
             };
+            // the chunk span closes on the model execution, before the
+            // commit bookkeeping: a panicked sub-round still records
+            // its span (tokens = the planned allotment)
+            let planned: usize = round.iter().map(|&(_, s, e)| e - s).sum();
+            let chunk_req =
+                if b == 1 { self.live[lanes[round[0].0].live_i].req.id } else { NO_REQ };
+            self.push_span(SpanKind::PrefillChunk, t_chunk, chunk_req, planned as u32, b as u32);
             if let Err(p) = exec {
                 // panic isolation: mark the victim (or, when the
                 // payload is unattributable, every lane in this
@@ -984,6 +1123,7 @@ impl NativeEngine {
                 continue;
             }
             self.pool.scatter_state(&slots, state);
+            let now = self.now_ms();
             for (bi, &(i, start, end)) in round.iter().enumerate() {
                 let tl = end - start;
                 let live_i = lanes[i].live_i;
@@ -1010,8 +1150,8 @@ impl NativeEngine {
                     let tok = sampler::sample_row(&mut lr.rng, row, v, &lr.req.params);
                     lr.generated.push(tok);
                     lr.phase = Phase::Decoding;
-                    lr.prefill_done = Some(std::time::Instant::now());
-                    lr.last_token = lr.prefill_done;
+                    lr.prefill_done_ms = Some(now);
+                    lr.last_token_ms = lr.prefill_done_ms;
                 } else {
                     lr.phase = Phase::Prefilling { next: end };
                 }

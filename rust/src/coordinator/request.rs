@@ -11,8 +11,14 @@
 //! the scheduler interleaved it with other requests — the property
 //! that keeps chunked, warm (cache-hit) and cold paths token-identical
 //! under sampling, not just greedy decode.
-
-use std::time::Instant;
+//!
+//! **Clock discipline (ISSUE 9):** every timestamp in this module is a
+//! plain `f64` of clock-relative milliseconds handed in by the owning
+//! engine (wall ms from its `WallAnchor` under `Clock::Wall`,
+//! deterministic tick-derived ms under `Clock::Manual`). No type here
+//! reads raw time — that is what keeps responses, traces and metrics
+//! snapshots bit-reproducible under the manual clock, and what the
+//! auditor's `clock-discipline` rule enforces.
 
 use crate::util::rng::Pcg32;
 
@@ -111,6 +117,16 @@ pub struct Response {
     /// `Failed`, a human-readable cause for `Rejected` /
     /// `DeadlineExceeded` / `Cancelled`. `None` on natural completion.
     pub error: Option<String>,
+    /// when the request entered the engine queue (clock-relative ms —
+    /// the per-request timeline, ISSUE 9; NaN on [`Self::terminal`]
+    /// responses, which never carried stamps)
+    pub queued_ms: f64,
+    /// when admission moved it into the live set
+    pub admitted_ms: f64,
+    /// when its first token was sampled (NaN if none was)
+    pub first_token_ms: f64,
+    /// when it reached its terminal outcome
+    pub finished_ms: f64,
 }
 
 impl Response {
@@ -134,7 +150,28 @@ impl Response {
             ttlt_ms: f64::NAN,
             itl_ms: Vec::new(),
             error: Some(error.into()),
+            queued_ms: f64::NAN,
+            admitted_ms: f64::NAN,
+            first_token_ms: f64::NAN,
+            finished_ms: f64::NAN,
         }
+    }
+
+    /// One-line per-request timeline (the `serve_batch --verbose`
+    /// format): clock-relative queue/admit/first-token/finish stamps
+    /// plus outcome and token count.
+    pub fn timeline(&self) -> String {
+        format!(
+            "req {:>4}  queued={:.2}ms admitted={:.2}ms first-token={:.2}ms \
+             finished={:.2}ms  {:?} ({} tokens)",
+            self.id,
+            self.queued_ms,
+            self.admitted_ms,
+            self.first_token_ms,
+            self.finished_ms,
+            self.finish,
+            self.tokens.len(),
+        )
     }
 }
 
@@ -166,19 +203,21 @@ pub struct LiveRequest {
     /// this request's private sampler stream — scheduling order cannot
     /// perturb it (see module docs)
     pub rng: Pcg32,
-    pub submitted: Instant,
     /// submission time on the engine's injectable clock
     /// ([`crate::coordinator::faults::Clock`]); deadline sweeps compare
-    /// against this, never against `submitted` (wall time), so
-    /// `Clock::Manual` runs are deterministic
+    /// against this, and it becomes `Response::queued_ms`
     pub submitted_ms: f64,
+    /// when admission moved the request into the live set (same clock)
+    pub admitted_ms: f64,
     /// failure-model verdict set by the engine (cancellation, deadline
     /// expiry, isolated panic). A set verdict overrides the natural
     /// finish reason in [`Self::into_response`] and marks the request
     /// for harvest this tick.
     pub fault: Option<(FinishReason, String)>,
-    pub prefill_done: Option<Instant>,
-    pub last_token: Option<Instant>,
+    /// first-token stamp (engine clock); `None` until prefill completes
+    pub prefill_done_ms: Option<f64>,
+    /// last sampled-token stamp (engine clock) — the ITL gap anchor
+    pub last_token_ms: Option<f64>,
     pub decode_ms: Vec<f64>,
 }
 
@@ -211,11 +250,11 @@ impl LiveRequest {
             generated: Vec::new(),
             state_slot,
             rng,
-            submitted: Instant::now(),
             submitted_ms: 0.0,
+            admitted_ms: 0.0,
             fault: None,
-            prefill_done: None,
-            last_token: None,
+            prefill_done_ms: None,
+            last_token_ms: None,
             decode_ms: Vec::new(),
             req,
         }
@@ -250,12 +289,10 @@ impl LiveRequest {
         }
     }
 
-    pub fn into_response(self) -> Response {
-        let now = Instant::now();
-        let ttft = self
-            .prefill_done
-            .map(|t| (t - self.submitted).as_secs_f64() * 1e3)
-            .unwrap_or(f64::NAN);
+    /// `now_ms` is the harvest-time stamp on the owning engine's clock
+    /// — the same clock every other stamp in this request came from.
+    pub fn into_response(self, now_ms: f64) -> Response {
+        let ttft = self.prefill_done_ms.map(|t| t - self.submitted_ms).unwrap_or(f64::NAN);
         let tpot = if self.decode_ms.is_empty() {
             f64::NAN
         } else {
@@ -275,9 +312,13 @@ impl LiveRequest {
             finish,
             ttft_ms: ttft,
             tpot_ms: tpot,
-            ttlt_ms: (now - self.submitted).as_secs_f64() * 1e3,
+            ttlt_ms: now_ms - self.submitted_ms,
             itl_ms: self.decode_ms,
             error,
+            queued_ms: self.submitted_ms,
+            admitted_ms: self.admitted_ms,
+            first_token_ms: self.prefill_done_ms.unwrap_or(f64::NAN),
+            finished_ms: now_ms,
         }
     }
 }
@@ -354,13 +395,33 @@ mod tests {
         lr.phase = Phase::Decoding;
         lr.generated.extend([3, 4, 5]);
         lr.decode_ms.extend([1.0, 5.0, 2.0]);
-        let resp = lr.into_response();
+        let resp = lr.into_response(10.0);
         assert_eq!(resp.itl_ms, vec![1.0, 5.0, 2.0]);
         assert_eq!(resp.itl_max_ms(), 5.0);
         let mut lr2 = LiveRequest::new(req(1), 0, 0);
         lr2.phase = Phase::Decoding;
         lr2.generated.push(3);
-        assert!(lr2.into_response().itl_max_ms().is_nan());
+        assert!(lr2.into_response(10.0).itl_max_ms().is_nan());
+    }
+
+    #[test]
+    fn response_timeline_stamps_come_from_the_engine_clock() {
+        let mut lr = LiveRequest::new(req(2), 0, 0);
+        lr.submitted_ms = 1.0;
+        lr.admitted_ms = 2.0;
+        lr.prefill_done_ms = Some(5.0);
+        lr.phase = Phase::Decoding;
+        lr.generated.extend([3, 4]);
+        let resp = lr.into_response(9.0);
+        assert_eq!(resp.queued_ms, 1.0);
+        assert_eq!(resp.admitted_ms, 2.0);
+        assert_eq!(resp.first_token_ms, 5.0);
+        assert_eq!(resp.finished_ms, 9.0);
+        assert_eq!(resp.ttft_ms, 4.0, "TTFT = first token - queued");
+        assert_eq!(resp.ttlt_ms, 8.0, "TTLT = finished - queued");
+        let line = resp.timeline();
+        assert!(line.contains("queued=1.00ms"), "{line}");
+        assert!(line.contains("first-token=5.00ms"), "{line}");
     }
 
     #[test]
@@ -371,7 +432,7 @@ mod tests {
         lr.phase = Phase::Decoding;
         lr.generated.extend([3, 4]);
         lr.fault = Some((FinishReason::Cancelled, "cancelled by client".into()));
-        let resp = lr.into_response();
+        let resp = lr.into_response(10.0);
         assert_eq!(resp.finish, FinishReason::Cancelled);
         assert_eq!(resp.tokens, vec![3, 4]);
         assert_eq!(resp.error.as_deref(), Some("cancelled by client"));

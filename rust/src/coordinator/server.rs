@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::cache::CacheStats;
 use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::native::{NativeEngine, NativeEngineConfig};
 use crate::coordinator::request::{Request, RequestId, Response, SamplingParams};
 use crate::runtime::Runtime;
@@ -51,6 +52,16 @@ pub trait EngineCore {
     fn cancel(&mut self, _id: RequestId) -> Option<Response> {
         None
     }
+    /// Typed metrics snapshot for the `/metrics` exporter; `None` for
+    /// cores that only format a report string.
+    fn metrics_snapshot(&self) -> Option<MetricsSnapshot> {
+        None
+    }
+    /// Chrome trace-event JSON dump of the flight recorder; `None`
+    /// when the core traces nothing (the default).
+    fn dump_trace(&self) -> Option<String> {
+        None
+    }
 }
 
 impl EngineCore for Engine {
@@ -71,6 +82,9 @@ impl EngineCore for Engine {
     }
     fn cache_stats(&self) -> Option<CacheStats> {
         Engine::cache_stats(self)
+    }
+    fn metrics_snapshot(&self) -> Option<MetricsSnapshot> {
+        Some(Engine::metrics_snapshot(self))
     }
 }
 
@@ -99,6 +113,12 @@ impl EngineCore for NativeEngine {
     fn cancel(&mut self, id: RequestId) -> Option<Response> {
         NativeEngine::cancel(self, id)
     }
+    fn metrics_snapshot(&self) -> Option<MetricsSnapshot> {
+        Some(NativeEngine::metrics_snapshot(self))
+    }
+    fn dump_trace(&self) -> Option<String> {
+        NativeEngine::dump_trace(self)
+    }
 }
 
 enum Msg {
@@ -106,6 +126,8 @@ enum Msg {
     Cancel(RequestId),
     Report(Sender<String>),
     CacheStats(Sender<Option<CacheStats>>),
+    MetricsSnapshot(Sender<Option<MetricsSnapshot>>),
+    DumpTrace(Sender<Option<String>>),
     Shutdown,
 }
 
@@ -179,6 +201,12 @@ impl ServerHandle {
                         }
                         Some(Msg::CacheStats(tx)) => {
                             let _ = tx.send(engine.cache_stats());
+                        }
+                        Some(Msg::MetricsSnapshot(tx)) => {
+                            let _ = tx.send(engine.metrics_snapshot());
+                        }
+                        Some(Msg::DumpTrace(tx)) => {
+                            let _ = tx.send(engine.dump_trace());
                         }
                         Some(Msg::Shutdown) => break,
                         None => {}
@@ -283,6 +311,35 @@ impl ServerHandle {
         let (tx, rx) = channel();
         self.tx.send(Msg::CacheStats(tx)).ok()?;
         rx.recv().ok().flatten()
+    }
+
+    /// Typed metrics snapshot from the engine thread (`None` when the
+    /// core doesn't expose one, or the engine is gone).
+    pub fn metrics_snapshot(&self) -> Option<MetricsSnapshot> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::MetricsSnapshot(tx)).ok()?;
+        rx.recv().ok().flatten()
+    }
+
+    /// Chrome trace-event JSON from the engine thread's flight
+    /// recorder (`None` when tracing is off or the engine is gone).
+    pub fn dump_trace(&self) -> Option<String> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::DumpTrace(tx)).ok()?;
+        rx.recv().ok().flatten()
+    }
+
+    /// A `Send` fetch closure for [`crate::obs::MetricsExporter`]: each
+    /// scrape round-trips the mailbox for a fresh snapshot. The clone
+    /// of the sender keeps the engine thread alive no longer than the
+    /// exporter — a dropped engine answers `None` (scrape → 503).
+    pub fn snapshot_fetch(&self) -> crate::obs::SnapshotFetch {
+        let tx = self.tx.clone();
+        Box::new(move || {
+            let (stx, srx) = channel();
+            tx.send(Msg::MetricsSnapshot(stx)).ok()?;
+            srx.recv().ok().flatten()
+        })
     }
 
     pub fn shutdown(mut self) {

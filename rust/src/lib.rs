@@ -44,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod ssm;

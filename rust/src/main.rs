@@ -13,6 +13,8 @@
 //!                      [--prefill-chunk 64] [--max-tokens-per-tick 0]
 //!                      [--threads N] [--kernels auto|scalar|avx2|neon]
 //!                      [--bits 8|4]
+//!                      [--metrics-port P] [--trace-out FILE]
+//!                      [--metrics-linger-ms MS]
 //!   quamba eval-ppl    [--tier m130] [--methods fp16,quamba] [--windows 16]
 //!   quamba eval-tasks  [--tier m130] [--methods fp16,quamba] [--examples 40]
 //!   quamba profile     [--tier m2p8] [--methods fp16,quamba] [--seqs 256,512]
@@ -27,7 +29,8 @@ use quamba::coordinator::server::ServerHandle;
 use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
 use quamba::data;
 use quamba::eval;
-use quamba::quant::KernelBackend;
+use quamba::obs::{ExporterLabels, MetricsExporter};
+use quamba::quant::{KernelBackend, Kernels};
 use quamba::runtime::Runtime;
 use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
 use quamba::tensor::qtz;
@@ -83,7 +86,14 @@ fn print_help() {
          \x20              --calib-file feeds a real W8A8 calibration\n\
          \x20              token stream instead of synthetic tokens;\n\
          \x20              --bits 4 serves the packed-nibble W4A8 tier\n\
-         \x20              — half the weight bytes, per-group scales)\n\
+         \x20              — half the weight bytes, per-group scales;\n\
+         \x20              --metrics-port P exposes Prometheus text at\n\
+         \x20              http://127.0.0.1:P/metrics (0 = ephemeral,\n\
+         \x20              the bound port is printed), --trace-out FILE\n\
+         \x20              dumps the flight recorder as Chrome\n\
+         \x20              trace-event JSON on drain, and\n\
+         \x20              --metrics-linger-ms MS keeps the exporter up\n\
+         \x20              after the workload for external scrapers)\n\
          \x20 eval-ppl     perplexity on wiki-synth / pile-synth (Table 2)\n\
          \x20 eval-tasks   six zero-shot tasks (Table 3)\n\
          \x20 profile      TTFT/TPOT latency profile (Table 1)\n\
@@ -199,6 +209,52 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--metrics-port P`: start the std-only Prometheus exporter
+/// ([`quamba::obs::exporter`]) against the server mailbox. Port 0
+/// binds an ephemeral port; the bound port is always printed so
+/// scrapers (and the CI metrics-smoke test) can find it. Returns the
+/// guard — keep it alive for the serving window.
+fn maybe_spawn_exporter(
+    args: &Args,
+    server: &ServerHandle,
+    labels: ExporterLabels,
+) -> Result<Option<MetricsExporter>> {
+    let Some(raw) = args.get("metrics-port") else { return Ok(None) };
+    let port: u16 =
+        raw.parse().map_err(|_| anyhow!("--metrics-port {raw}: not a port number"))?;
+    let exp = MetricsExporter::spawn(port, labels, server.snapshot_fetch())
+        .map_err(|e| anyhow!("metrics exporter: {e}"))?;
+    println!("metrics: listening on http://127.0.0.1:{}/metrics", exp.port());
+    Ok(Some(exp))
+}
+
+/// `--metrics-linger-ms MS`: hold the process (and the exporter) open
+/// after the workload drains so an external scraper can read a final
+/// `/metrics` — the CI smoke test relies on this window.
+fn metrics_linger(args: &Args) {
+    let ms = args.get_f64("metrics-linger-ms", 0.0);
+    if ms > 0.0 {
+        println!("metrics: lingering {ms} ms for scrapers");
+        std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+}
+
+/// `--trace-out FILE`: write the engine's flight-recorder dump
+/// (Chrome trace-event JSON) before shutdown.
+fn maybe_write_trace(args: &Args, server: &ServerHandle) -> Result<()> {
+    let Some(path) = args.get("trace-out") else { return Ok(()) };
+    match server.dump_trace() {
+        Some(json) => {
+            std::fs::write(path, &json).map_err(|e| anyhow!("{path}: {e}"))?;
+            println!("trace: wrote {} bytes of Chrome trace JSON to {path}", json.len());
+        }
+        None => println!(
+            "trace: this backend has no flight recorder (--trace-out is a native-backend flag)"
+        ),
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     // backend dispatch: `native` serves artifact-free (from --weights
     // x.qtz or a synthetic tier); `xla` needs the AOT artifact tree;
@@ -227,6 +283,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::new(tier, method);
     cfg.cache_bytes = args.get_mb("cache-mb", 0.0);
     let mut server = ServerHandle::spawn(root, cfg)?;
+    let _exporter = maybe_spawn_exporter(
+        args,
+        &server,
+        ExporterLabels {
+            backend: "xla".into(),
+            kernels: "xla".into(),
+            weight_bits: if method == "fp16" { "16".into() } else { "8".into() },
+        },
+    )?;
     println!("serving {n} requests at ~{rate}/s on {tier}/{method} ...");
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -249,6 +314,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(r) = server.metrics_report() {
         println!("\n{r}");
     }
+    maybe_write_trace(args, &server)?;
+    metrics_linger(args);
     server.shutdown();
     Ok(())
 }
@@ -380,6 +447,8 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
         // deadline (0 = none) for requests that don't set their own
         max_queue: args.get_usize("max-queue", 0),
         default_deadline_ms: args.get_f64("default-deadline-ms", 0.0),
+        // flight recorder: on iff the dump is going somewhere
+        trace: args.get("trace-out").is_some(),
         ..Default::default()
     };
     println!(
@@ -401,7 +470,16 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     let stream: Vec<u16> =
         (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let wl = Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
+    let labels = ExporterLabels {
+        backend: "native".into(),
+        kernels: cfg
+            .kernel_backend
+            .map(|k| k.label().to_string())
+            .unwrap_or_else(|| Kernels::detect().backend.label().to_string()),
+        weight_bits: cfg.weight_bits.to_string(),
+    };
     let mut server = ServerHandle::spawn_native(boxed, cfg)?;
+    let _exporter = maybe_spawn_exporter(args, &server, labels)?;
     println!("serving {n} requests at ~{rate}/s on {}/{method} (native) ...", tier.name);
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -423,6 +501,8 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     if let Some(r) = server.metrics_report() {
         println!("\n{r}");
     }
+    maybe_write_trace(args, &server)?;
+    metrics_linger(args);
     server.shutdown();
     Ok(())
 }

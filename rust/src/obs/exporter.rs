@@ -1,0 +1,489 @@
+//! Prometheus-style `/metrics` exporter (ISSUE 9): a tiny std-only
+//! HTTP responder on one background thread — `TcpListener`, GET-only,
+//! no routing beyond `/metrics`, no dependencies — rendering the
+//! engine's typed [`MetricsSnapshot`] in the Prometheus text
+//! exposition format (version 0.0.4).
+//!
+//! The exporter owns a *fetch closure* rather than the metrics
+//! themselves: each scrape calls it to pull a fresh snapshot across
+//! the engine mailbox, so the engine thread remains the only metrics
+//! writer and the exporter never touches engine state. A fetch that
+//! returns `None` (engine gone, mailbox closed) answers `503` so the
+//! scraper sees the difference between "engine down" and "no traffic".
+//!
+//! Every series carries the `backend` / `kernels` / `weight_bits`
+//! labels, so dashboards can overlay the fp32 arm against the W8A8 and
+//! W4A8 tiers — the serving-side view of the paper's accuracy/latency
+//! trade-off. Histograms use the log₂ bucket bounds from
+//! [`crate::obs::hist::LogHistogram`] verbatim: `_bucket{le=...}`
+//! cumulative counts, exact `_sum` / `_count`, plus a bucket-quantized
+//! ITL quantile gauge for the p50/p95/p99 SLO lines.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::obs::hist::LogHistogram;
+
+/// Labels attached to every exported series.
+#[derive(Debug, Clone)]
+pub struct ExporterLabels {
+    /// engine backend (`native`, `threaded`, ...)
+    pub backend: String,
+    /// kernel backend reported by the runtime (`scalar`, `pallas`, ...)
+    pub kernels: String,
+    /// weight tier (`fp32`, `w8`, `w4`)
+    pub weight_bits: String,
+}
+
+impl ExporterLabels {
+    /// `backend="...",kernels="...",weight_bits="..."` — the shared
+    /// label body (values are escaped per the exposition format).
+    fn body(&self) -> String {
+        format!(
+            "backend=\"{}\",kernels=\"{}\",weight_bits=\"{}\"",
+            escape_label(&self.backend),
+            escape_label(&self.kernels),
+            escape_label(&self.weight_bits),
+        )
+    }
+}
+
+/// Escape a label value per the text exposition format: backslash,
+/// double quote, and newline must be escaped.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value. Prometheus accepts integer, decimal, and
+/// scientific notation; Rust's shortest-roundtrip `{}` emits exactly
+/// those (and `NaN` for NaN, which the format also allows).
+fn fmt_val(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_owned()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_owned()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn push_gauge(out: &mut String, name: &str, help: &str, labels: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+    out.push_str(&format!("{name}{{{labels}}} {}\n", fmt_val(v)));
+}
+
+fn push_counter(out: &mut String, name: &str, help: &str, labels: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+    out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+}
+
+fn push_histogram(out: &mut String, name: &str, help: &str, labels: &str, h: &LogHistogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (ub, c) in h.cumulative_buckets() {
+        out.push_str(&format!(
+            "{name}_bucket{{{labels},le=\"{}\"}} {c}\n",
+            fmt_val(ub)
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{{labels},le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{name}_sum{{{labels}}} {}\n", fmt_val(h.sum)));
+    out.push_str(&format!("{name}_count{{{labels}}} {}\n", h.count));
+}
+
+/// Render a snapshot as the Prometheus text exposition (deterministic:
+/// fixed series order, label order, and bucket order).
+pub fn render_prometheus(snap: &MetricsSnapshot, labels: &ExporterLabels) -> String {
+    let lb = labels.body();
+    let mut out = String::with_capacity(4096);
+
+    // request outcomes: one labeled counter per terminal FinishReason class
+    out.push_str(
+        "# HELP quamba_requests_total Requests that reached a terminal outcome.\n\
+         # TYPE quamba_requests_total counter\n",
+    );
+    for (outcome, v) in [
+        ("done", snap.requests_done),
+        ("rejected", snap.rejected),
+        ("deadline", snap.deadline_missed),
+        ("cancelled", snap.cancelled),
+        ("failed", snap.failed),
+    ] {
+        out.push_str(&format!(
+            "quamba_requests_total{{{lb},outcome=\"{outcome}\"}} {v}\n"
+        ));
+    }
+
+    push_counter(
+        &mut out,
+        "quamba_tokens_generated_total",
+        "Decoded tokens emitted.",
+        &lb,
+        snap.tokens_out,
+    );
+    push_gauge(
+        &mut out,
+        "quamba_tokens_per_second",
+        "Decode throughput over the engine-clock lifetime.",
+        &lb,
+        snap.tok_per_s,
+    );
+    push_gauge(
+        &mut out,
+        "quamba_shed_rate",
+        "Fraction of outcomes shed by overload policy (rejected + deadline).",
+        &lb,
+        snap.shed_rate,
+    );
+    push_counter(
+        &mut out,
+        "quamba_snapshot_drops_total",
+        "Prefix-cache snapshot inserts dropped by validation or cache panic.",
+        &lb,
+        snap.snapshot_drops,
+    );
+    push_counter(
+        &mut out,
+        "quamba_lanes_total",
+        "Batch lanes scheduled across all decode rounds.",
+        &lb,
+        snap.total_lanes,
+    );
+    push_counter(
+        &mut out,
+        "quamba_padded_lanes_total",
+        "Scheduled lanes that carried padding, not a live request.",
+        &lb,
+        snap.padded_lanes,
+    );
+
+    if let Some(c) = &snap.cache {
+        push_counter(&mut out, "quamba_cache_hits_total", "Prefix-cache hits.", &lb, c.hits);
+        push_counter(&mut out, "quamba_cache_misses_total", "Prefix-cache misses.", &lb, c.misses);
+        push_counter(
+            &mut out,
+            "quamba_cache_evictions_total",
+            "Prefix-cache entries evicted.",
+            &lb,
+            c.evictions,
+        );
+        push_counter(
+            &mut out,
+            "quamba_cache_evicted_bytes_total",
+            "Bytes reclaimed by prefix-cache eviction.",
+            &lb,
+            c.evicted_bytes,
+        );
+        push_counter(
+            &mut out,
+            "quamba_cache_prefill_tokens_saved_total",
+            "Prompt tokens the prefix cache kept out of prefill.",
+            &lb,
+            c.prefill_tokens_saved,
+        );
+        push_gauge(
+            &mut out,
+            "quamba_cache_entries",
+            "Live prefix-cache entries.",
+            &lb,
+            c.entries as f64,
+        );
+        push_gauge(
+            &mut out,
+            "quamba_cache_bytes_in_use",
+            "Bytes held by live prefix-cache entries.",
+            &lb,
+            c.bytes_in_use as f64,
+        );
+    }
+
+    push_histogram(
+        &mut out,
+        "quamba_ttft_ms",
+        "Time to first token, ms (log2 buckets).",
+        &lb,
+        &snap.ttft_ms,
+    );
+    push_histogram(
+        &mut out,
+        "quamba_itl_ms",
+        "Inter-token latency per emitted token, ms (log2 buckets).",
+        &lb,
+        &snap.itl_ms,
+    );
+    push_histogram(
+        &mut out,
+        "quamba_tick_ms",
+        "Engine tick duration, ms (log2 buckets).",
+        &lb,
+        &snap.tick_ms,
+    );
+    push_histogram(
+        &mut out,
+        "quamba_queue_depth",
+        "Submit-queue depth sampled each tick.",
+        &lb,
+        &snap.queue_depth,
+    );
+
+    // the SLO tail as ready-to-read gauges (bucket-quantized, clamped
+    // to the exact min/max envelope)
+    out.push_str(
+        "# HELP quamba_itl_ms_quantile Bucket-quantized ITL quantiles, ms.\n\
+         # TYPE quamba_itl_ms_quantile gauge\n",
+    );
+    for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+        out.push_str(&format!(
+            "quamba_itl_ms_quantile{{{lb},quantile=\"{qs}\"}} {}\n",
+            fmt_val(snap.itl_ms.quantile(q))
+        ));
+    }
+    out
+}
+
+/// The background scrape endpoint. One thread, blocking accept loop;
+/// [`MetricsExporter::stop`] (also run on drop) flips a flag and
+/// self-connects to unblock the accept.
+pub struct MetricsExporter {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Pulls a fresh snapshot per scrape; `None` means the engine is gone.
+pub type SnapshotFetch = Box<dyn Fn() -> Option<MetricsSnapshot> + Send>;
+
+impl MetricsExporter {
+    /// Bind `127.0.0.1:port` (`port` 0 picks an ephemeral port — read it
+    /// back with [`MetricsExporter::port`]) and start serving scrapes.
+    pub fn spawn(port: u16, labels: ExporterLabels, fetch: SnapshotFetch) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let port = listener.local_addr()?.port();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("quamba-metrics".into())
+            .spawn(move || serve_loop(listener, labels, fetch, stop_in))?;
+        Ok(MetricsExporter { port, stop, thread: Some(thread) })
+    }
+
+    /// The bound port (resolved when `spawn` was given port 0).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Stop the serve loop and join the thread. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept; a failed connect means the listener is
+        // already gone, which is fine
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(
+    listener: TcpListener,
+    labels: ExporterLabels,
+    fetch: SnapshotFetch,
+    stop: Arc<AtomicBool>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // a stuck client must not wedge the exporter
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+        let _ = handle_conn(&mut stream, &labels, &fetch);
+    }
+}
+
+fn handle_conn(
+    stream: &mut TcpStream,
+    labels: &ExporterLabels,
+    fetch: &SnapshotFetch,
+) -> std::io::Result<()> {
+    // the request line is all we route on; drain up to 4 KiB of headers
+    let mut buf = [0u8; 4096];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let line = req.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_owned())
+    } else if path != "/metrics" {
+        ("404 Not Found", "text/plain", "try /metrics\n".to_owned())
+    } else {
+        match fetch() {
+            Some(snap) => (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                render_prometheus(&snap, labels),
+            ),
+            None => ("503 Service Unavailable", "text/plain", "engine unavailable\n".to_owned()),
+        }
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let mut itl = LogHistogram::new();
+        for g in [1.0, 1.5, 2.0, 9.0] {
+            itl.record(g);
+        }
+        let mut ttft = LogHistogram::new();
+        ttft.record(12.0);
+        let mut tick = LogHistogram::new();
+        tick.record(0.25);
+        let mut depth = LogHistogram::new();
+        depth.record(3.0);
+        MetricsSnapshot {
+            requests_done: 2,
+            rejected: 1,
+            deadline_missed: 0,
+            cancelled: 0,
+            failed: 0,
+            tokens_out: 70,
+            snapshot_drops: 0,
+            padded_lanes: 3,
+            total_lanes: 8,
+            elapsed_ms: 100.0,
+            tok_per_s: 700.0,
+            shed_rate: 1.0 / 3.0,
+            ttft_ms: ttft,
+            tpot_ms: LogHistogram::new(),
+            ttlt_ms: LogHistogram::new(),
+            itl_ms: itl,
+            tick_ms: tick,
+            queue_depth: depth,
+            cache: None,
+        }
+    }
+
+    fn labels() -> ExporterLabels {
+        ExporterLabels {
+            backend: "native".into(),
+            kernels: "scalar".into(),
+            weight_bits: "w8".into(),
+        }
+    }
+
+    #[test]
+    fn exposition_has_counters_histograms_and_quantiles() {
+        let text = render_prometheus(&sample_snapshot(), &labels());
+        assert!(text.contains(
+            "quamba_requests_total{backend=\"native\",kernels=\"scalar\",weight_bits=\"w8\",outcome=\"done\"} 2"
+        ), "{text}");
+        assert!(text.contains("outcome=\"rejected\"} 1"), "{text}");
+        assert!(text.contains("quamba_tokens_generated_total{"), "{text}");
+        assert!(text.contains("} 70\n"), "{text}");
+        assert!(text.contains("# TYPE quamba_itl_ms histogram"), "{text}");
+        assert!(text.contains("quamba_itl_ms_bucket{"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("quamba_itl_ms_count{"), "{text}");
+        assert!(text.contains("quamba_itl_ms_quantile{"), "{text}");
+        assert!(text.contains("quantile=\"0.99\""), "{text}");
+        // no cache stats synced → no cache series
+        assert!(!text.contains("quamba_cache_"), "{text}");
+        // deterministic rendering
+        assert_eq!(text, render_prometheus(&sample_snapshot(), &labels()));
+    }
+
+    #[test]
+    fn histogram_bucket_counts_are_cumulative_and_sum_exact() {
+        let text = render_prometheus(&sample_snapshot(), &labels());
+        let mut prev = 0u64;
+        let mut n_buckets = 0;
+        for line in text.lines().filter(|l| l.starts_with("quamba_itl_ms_bucket{")) {
+            let c: u64 = line.rsplit(' ').next().and_then(|v| v.parse().ok()).expect("count");
+            assert!(c >= prev, "bucket counts must be cumulative: {line}");
+            prev = c;
+            n_buckets += 1;
+        }
+        assert!(n_buckets >= 2, "expected multiple le buckets:\n{text}");
+        assert_eq!(prev, 4, "+Inf bucket must equal the total count");
+        assert!(text.contains("quamba_itl_ms_sum{") && text.contains("} 13.5\n"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(fmt_val(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_val(0.5), "0.5");
+    }
+
+    #[test]
+    fn exporter_serves_scrapes_and_404s_other_paths() {
+        let mut ex = MetricsExporter::spawn(
+            0,
+            labels(),
+            Box::new(|| Some(sample_snapshot())),
+        )
+        .expect("bind ephemeral port");
+        let port = ex.port();
+        assert_ne!(port, 0);
+
+        let body = http_get(port, "/metrics");
+        assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+        assert!(body.contains("quamba_tokens_generated_total"), "{body}");
+
+        let miss = http_get(port, "/nope");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+
+        ex.stop();
+        ex.stop(); // idempotent
+    }
+
+    #[test]
+    fn exporter_answers_503_when_engine_is_gone() {
+        let mut ex = MetricsExporter::spawn(0, labels(), Box::new(|| None)).expect("bind");
+        let body = http_get(ex.port(), "/metrics");
+        assert!(body.starts_with("HTTP/1.1 503"), "{body}");
+        ex.stop();
+    }
+
+    fn http_get(port: u16, path: &str) -> String {
+        let mut s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").as_bytes())
+            .expect("send");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read");
+        out
+    }
+}

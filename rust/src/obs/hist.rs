@@ -1,0 +1,304 @@
+//! Mergeable constant-memory log₂-bucket histograms (ISSUE 9).
+//!
+//! The metrics path used to keep raw sample vectors (capped by an
+//! Algorithm-R reservoir for ITL) and sort them at report time. That
+//! shape cannot cross the engine mailbox as numbers, cannot be merged
+//! across engines/replicas, and its memory scales with traffic. This
+//! histogram replaces it with a fixed 64-bucket power-of-two layout:
+//!
+//! * bucket `b` counts values `v` with `floor(log2(v)) + OFFSET == b`
+//!   (clamped into `0..64`), i.e. bucket `b` covers
+//!   `[2^(b-OFFSET), 2^(b+1-OFFSET))` milliseconds — ~58% worst-case
+//!   relative quantile error, constant 600-ish bytes, no allocation
+//!   after construction;
+//! * exact first moments ride alongside (`count`, `sum`, `sum_sq`,
+//!   `min`, `max`), so mean/std/min/max in summaries are *exact* and
+//!   only the interior percentiles are bucket-quantized;
+//! * `merge` is bucket-wise addition plus moment addition — two
+//!   histograms recorded on different engines combine into exactly the
+//!   histogram a single engine would have recorded (the property the
+//!   ROADMAP's replica-routing item needs);
+//! * bucket indexing reads the f64 exponent field directly
+//!   ([`bucket_of`]), so identical inputs give identical histograms on
+//!   every platform — no libm `log2` ULP drift.
+//!
+//! This is intentionally a *different* type from
+//! [`crate::util::stats::LogHistogram`] (lo/ratio-parameterized, not
+//! mergeable), which the bench harness keeps using.
+
+use crate::util::stats::Summary;
+
+/// Number of log₂ buckets (fixed; the struct is `Copy`-sized).
+pub const N_BUCKETS: usize = 64;
+
+/// Bucket shift: bucket 0's upper bound is `2^(1-OFFSET)` ms (≈ 1.9 ns),
+/// bucket 62's is `2^43` ms; bucket 63 is the +∞ clamp. Wide enough for
+/// nanosecond phase durations and day-long uptimes alike.
+const OFFSET: i32 = 20;
+
+/// Bucket index for a value (total order, clamped at both ends).
+/// Non-finite inputs are the caller's job to filter ([`LogHistogram::record`]
+/// drops them); zero and negatives land in bucket 0.
+#[inline]
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 {
+        return 0;
+    }
+    // IEEE-754 exponent = floor(log2(v)) for normal v; subnormals give
+    // -1023 which clamps to bucket 0 anyway.
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i32 - 1023;
+    (e + OFFSET).clamp(0, N_BUCKETS as i32 - 1) as usize
+}
+
+/// Upper bound (exclusive) of bucket `b`, in ms; bucket 63 reports +∞.
+#[inline]
+pub fn bucket_upper_bound(b: usize) -> f64 {
+    if b >= N_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        // 2^(b+1-OFFSET), exactly representable
+        (2.0f64).powi(b as i32 + 1 - OFFSET)
+    }
+}
+
+/// A mergeable fixed-memory log₂ histogram (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: [u64; N_BUCKETS],
+    /// exact number of recorded samples
+    pub count: u64,
+    /// exact sum of recorded samples
+    pub sum: f64,
+    /// exact sum of squares (for std)
+    pub sum_sq: f64,
+    /// exact minimum (+∞ when empty)
+    pub min: f64,
+    /// exact maximum (-∞ when empty)
+    pub max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. Non-finite values are dropped (the ITL path
+    /// feeds NaN for the first token of a request, where no gap
+    /// exists); zero-allocation, O(1).
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        self.counts[bucket_of(x)] += 1;
+    }
+
+    /// Bucket-wise merge: `self` becomes the histogram a single
+    /// recorder observing both sample streams would hold.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Exact mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Sample standard deviation from the exact moments (0 for n < 2).
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    /// Bucket-quantized quantile, `q` in [0, 1]: the upper bound of the
+    /// bucket holding the ⌈q·n⌉-th sample, clamped to the exact
+    /// `[min, max]` envelope (NaN when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_upper_bound(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Latency [`Summary`] view: `n`/`mean`/`std`/`min`/`max` are exact,
+    /// the interior percentiles are bucket-quantized.
+    pub fn summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary::default();
+        }
+        Summary {
+            n: self.count as usize,
+            mean: self.mean(),
+            std: self.std_dev(),
+            min: self.min,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max,
+        }
+    }
+
+    /// Cumulative `(upper_bound_ms, cumulative_count)` pairs for
+    /// Prometheus `_bucket` series: one pair per bucket up to the last
+    /// non-empty bucket (the exporter appends the `+Inf` bucket, whose
+    /// count is [`LogHistogram::count`]). Empty histogram → no pairs.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let last = match self.counts.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let mut acc = 0u64;
+        self.counts[..=last]
+            .iter()
+            .enumerate()
+            .map(|(b, &c)| {
+                acc += c;
+                (bucket_upper_bound(b), acc)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_moments_and_bucketed_quantiles() {
+        let mut h = LogHistogram::new();
+        for x in [10.0, 20.0, 10.0, 9.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 49.0);
+        assert_eq!(h.min, 9.0);
+        assert_eq!(h.max, 20.0);
+        assert!((h.mean() - 12.25).abs() < 1e-12);
+        // quantiles are bucket bounds clamped into [min, max]
+        let p50 = h.quantile(0.5);
+        assert!((9.0..=20.0).contains(&p50), "p50={p50}");
+        assert_eq!(h.quantile(1.0), 20.0);
+        let s = h.summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.max, 20.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn nan_and_infinite_are_dropped() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(1.0);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.sum, 1.0);
+    }
+
+    #[test]
+    fn merge_equals_single_recorder() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 * 0.37).collect();
+        let mut whole = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must be exactly bucket-wise + moment-wise addition");
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotone_powers_of_two() {
+        let mut prev = 0.0;
+        for b in 0..N_BUCKETS - 1 {
+            let ub = bucket_upper_bound(b);
+            assert!(ub > prev, "bucket {b}: {ub} <= {prev}");
+            assert_eq!(ub.log2().fract(), 0.0, "bound must be a power of two");
+            prev = ub;
+        }
+        assert!(bucket_upper_bound(N_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn extremes_clamp_into_end_buckets() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1e300);
+        assert_eq!(h.count, 3);
+        let cb = h.cumulative_buckets();
+        assert_eq!(cb.first().map(|&(_, c)| c), Some(2), "0 and -3 land in bucket 0");
+        assert_eq!(cb.last().map(|&(_, c)| c), Some(3));
+    }
+
+    #[test]
+    fn cumulative_buckets_are_nondecreasing_and_end_at_count() {
+        let mut h = LogHistogram::new();
+        for i in 0..50 {
+            h.record(0.5 + i as f64);
+        }
+        let cb = h.cumulative_buckets();
+        let mut prev = 0;
+        for &(ub, c) in &cb {
+            assert!(c >= prev);
+            assert!(ub.is_finite());
+            prev = c;
+        }
+        assert_eq!(prev, h.count);
+    }
+}

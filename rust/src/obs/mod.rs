@@ -1,0 +1,28 @@
+//! Observability for the native serving engine (ISSUE 9): flight-recorder
+//! tick tracing, mergeable constant-memory histograms, and a
+//! Prometheus-style `/metrics` exporter. Std-only — no new dependencies.
+//!
+//! * [`trace`] — [`trace::TraceRing`]: a preallocated overwrite-oldest
+//!   ring of fixed-size per-phase span records, recorded from
+//!   `NativeEngine::step` with zero allocation after construction and
+//!   dumpable as Chrome trace-event JSON (`chrome://tracing`).
+//! * [`hist`] — [`hist::LogHistogram`]: 64 log₂ buckets + exact
+//!   moments; constant memory, bucket-wise mergeable, deterministic
+//!   bucket indexing via the f64 exponent field.
+//! * [`exporter`] — [`exporter::MetricsExporter`]: a one-thread
+//!   GET-only `TcpListener` responder rendering the engine's typed
+//!   `MetricsSnapshot` in the Prometheus text exposition format.
+//!
+//! Clock discipline (audited by the `clock-discipline` rule of
+//! `quamba-audit`): nothing in this module reads wall time directly —
+//! all timestamps arrive from the engine's injectable
+//! [`crate::coordinator::faults::Clock`], so under `Clock::Manual` a
+//! seeded run produces byte-identical traces and snapshots.
+
+pub mod exporter;
+pub mod hist;
+pub mod trace;
+
+pub use exporter::{render_prometheus, ExporterLabels, MetricsExporter, SnapshotFetch};
+pub use hist::LogHistogram;
+pub use trace::{SpanKind, SpanRecord, TraceRing, NO_REQ};

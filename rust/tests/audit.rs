@@ -155,6 +155,22 @@ fn fixture_native_leaky_release_fails() {
 }
 
 #[test]
+fn fixture_clock_discipline_fails() {
+    let txt = include_str!("fixtures/audit/clock_discipline.rs.txt");
+    let fs = rules::scan_clock_discipline("coordinator/evil_clock.rs", txt);
+    // exactly the two raw reads — the string mention and the
+    // test-region read must stay exempt
+    assert_eq!(fs.len(), 2, "{fs:?}");
+    assert!(fs.iter().all(|f| f.rule == "clock-discipline"));
+    assert!(fs.iter().any(|f| f.message.contains("Instant::now")), "{fs:?}");
+    assert!(fs.iter().any(|f| f.message.contains("SystemTime::now")), "{fs:?}");
+    // the sanctioned implementation file itself is exempt by
+    // registration (audit_repo skips CLOCK_FILE), not by content —
+    // prove the registration guard matters
+    assert_eq!(rules::CLOCK_FILE, "coordinator/faults.rs");
+}
+
+#[test]
 fn native_engine_without_reclaim_point_is_whole_file_violation() {
     let fs = rules::scan_native_engine(
         rules::NATIVE_FILE,
@@ -244,6 +260,22 @@ fn planted_w4a8_wrong_bound_fails_end_to_end() {
             .findings
             .iter()
             .any(|f| f.rule == "accumulator-bound" && f.message.contains("MAX_SAFE_K_I4")),
+        "{:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn planted_raw_clock_read_fails_end_to_end() {
+    let report = audit_planted(
+        "clock",
+        "coordinator/evil_clock.rs",
+        include_str!("fixtures/audit/clock_discipline.rs.txt"),
+    );
+    assert!(!report.ok(), "planted raw clock read came back clean");
+    assert_eq!(
+        report.findings.iter().filter(|f| f.rule == "clock-discipline").count(),
+        2,
         "{:?}",
         report.findings
     );

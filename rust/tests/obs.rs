@@ -1,0 +1,233 @@
+//! Observability integration tests (ISSUE 9 / docs/ARCHITECTURE.md §8):
+//! flight-recorder determinism under `Clock::Manual`, Chrome
+//! trace-event dump shape, span/tick duration accounting under
+//! `Clock::Wall`, trace on/off token parity, per-request timelines,
+//! and the typed-metrics + Prometheus exporter path through the
+//! server mailbox.
+
+use std::io::{Read as _, Write as _};
+
+use quamba::coordinator::server::ServerHandle;
+use quamba::coordinator::{Clock, NativeEngine, NativeEngineConfig, Request, SamplingParams};
+use quamba::obs::{MetricsExporter, SpanKind};
+use quamba::ssm::{MambaModel, MambaTier, StepModel};
+use quamba::util::rng::Pcg32;
+
+fn obs_tier() -> MambaTier {
+    MambaTier {
+        name: "obs16".into(),
+        d_model: 16,
+        n_layer: 2,
+        d_state: 4,
+        d_conv: 4,
+        d_inner: 32,
+        dt_rank: 4,
+        vocab: 32,
+    }
+}
+
+fn model() -> Box<dyn StepModel + Send + Sync> {
+    Box::new(MambaModel::synthetic(obs_tier(), 7))
+}
+
+/// Deterministic mixed workload: shortish prompts (so chunked
+/// prefill emits several PrefillChunk spans) plus varying max_new.
+fn workload(n: usize) -> Vec<(Vec<u16>, usize)> {
+    let mut r = Pcg32::new(0x0B5);
+    (0..n)
+        .map(|i| {
+            let len = 6 + (i % 3) * 5;
+            let prompt = (0..len).map(|_| r.below(32) as u16).collect();
+            (prompt, 4 + i % 4)
+        })
+        .collect()
+}
+
+fn manual_cfg() -> NativeEngineConfig {
+    NativeEngineConfig {
+        clock: Clock::Manual { ms_per_tick: 2.0 },
+        trace: true,
+        prefill_chunk: 4,
+        cache_bytes: 1 << 20,
+        snapshot_stride: 8,
+        ..Default::default()
+    }
+}
+
+/// Run the canonical workload to completion on a fresh engine.
+fn run_manual(cfg: NativeEngineConfig) -> (NativeEngine, Vec<quamba::coordinator::Response>) {
+    let mut eng = NativeEngine::new(model(), cfg);
+    for (i, (prompt, max_new)) in workload(6).into_iter().enumerate() {
+        eng.submit(Request {
+            id: (i + 1) as u64,
+            prompt,
+            max_new_tokens: max_new,
+            params: SamplingParams::default(),
+            stop_at_eos: false,
+        });
+    }
+    let mut resp = eng.run_to_completion().expect("run");
+    resp.sort_by_key(|r| r.id);
+    (eng, resp)
+}
+
+#[test]
+fn manual_clock_traces_and_snapshots_are_deterministic() {
+    // ISSUE 9 acceptance: two identically-seeded Clock::Manual runs
+    // produce BYTE-identical trace dumps and equal typed snapshots
+    let (a, ra) = run_manual(manual_cfg());
+    let (b, rb) = run_manual(manual_cfg());
+    let (da, db) = (a.dump_trace().expect("trace on"), b.dump_trace().expect("trace on"));
+    assert!(!da.is_empty());
+    assert_eq!(da, db, "trace dumps differ between identical Manual-clock runs");
+    assert_eq!(a.metrics_snapshot(), b.metrics_snapshot());
+    // and the workload itself was deterministic
+    let toks = |rs: &[quamba::coordinator::Response]| {
+        rs.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(toks(&ra), toks(&rb));
+}
+
+#[test]
+fn chrome_trace_dump_has_the_documented_shape() {
+    let (eng, _) = run_manual(manual_cfg());
+    let dump = eng.dump_trace().expect("trace on");
+    assert!(dump.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), "{dump:.120}");
+    assert!(dump.ends_with("]}\n"), "dump must be a newline-terminated JSON object");
+    // complete events + per-kind thread metadata
+    assert!(dump.contains("\"ph\":\"X\""));
+    assert!(dump.contains("\"ph\":\"M\""));
+    for kind in SpanKind::all() {
+        assert!(dump.contains(kind.name()), "missing {} events/metadata", kind.name());
+    }
+    // ts/dur are microseconds — a 2 ms Manual tick must show up as 2000
+    assert!(dump.contains("\"ts\":"));
+    assert!(dump.contains("\"dur\":"));
+}
+
+#[test]
+fn span_rows_nest_inside_their_tick_and_sum_within_it() {
+    // duration accounting under the REAL clock: every phase span lies
+    // inside its tick's [start, end], and per tick the phase durations
+    // sum to no more than the measured tick wall time (the phases are
+    // disjoint sequential sections of step())
+    let cfg = NativeEngineConfig { clock: Clock::Wall, ..manual_cfg() };
+    let (eng, _) = run_manual(cfg);
+    let ring = eng.trace_ring().expect("trace on");
+    let spans: Vec<_> = ring.iter().copied().collect();
+    assert!(!spans.is_empty());
+    let ticks: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Tick).collect();
+    assert!(!ticks.is_empty(), "no tick spans recorded");
+    let mut phases_seen = 0usize;
+    for t in &ticks {
+        let children: Vec<_> =
+            spans.iter().filter(|s| s.tick == t.tick && s.kind != SpanKind::Tick).collect();
+        let mut sum = 0.0;
+        for c in &children {
+            assert!(
+                c.start_ms >= t.start_ms - 1e-6 && c.end_ms <= t.end_ms + 1e-6,
+                "{:?} span [{:.4}, {:.4}] escapes tick {} [{:.4}, {:.4}]",
+                c.kind,
+                c.start_ms,
+                c.end_ms,
+                t.tick,
+                t.start_ms,
+                t.end_ms
+            );
+            sum += c.duration_ms();
+        }
+        phases_seen += children.len();
+        // bookkeeping slack: the tick also spends (unspanned) time in
+        // scheduling glue, so children can only undershoot — allow a
+        // hair of float noise on top
+        assert!(
+            sum <= t.duration_ms() + 0.5,
+            "phase spans sum to {sum:.4} ms > tick {} duration {:.4} ms",
+            t.tick,
+            t.duration_ms()
+        );
+    }
+    assert!(phases_seen > 0, "ticks recorded but no phase spans at all");
+}
+
+#[test]
+fn tokens_are_identical_with_tracing_on_and_off() {
+    let on = manual_cfg();
+    let off = NativeEngineConfig { trace: false, ..manual_cfg() };
+    let (eng_off, r_off) = run_manual(off);
+    let (_, r_on) = run_manual(on);
+    assert!(eng_off.dump_trace().is_none(), "trace off must dump None");
+    assert_eq!(
+        r_on.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>(),
+        r_off.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>(),
+        "tracing must never move tokens"
+    );
+}
+
+#[test]
+fn per_request_timelines_are_ordered() {
+    let (_, responses) = run_manual(manual_cfg());
+    assert!(!responses.is_empty());
+    for r in &responses {
+        assert!(r.finish.is_ok(), "{:?}", r.finish);
+        assert!(r.queued_ms <= r.admitted_ms, "{}", r.timeline());
+        assert!(r.admitted_ms <= r.first_token_ms, "{}", r.timeline());
+        assert!(r.first_token_ms <= r.finished_ms, "{}", r.timeline());
+        // the printable line carries all four stamps
+        let line = r.timeline();
+        for key in ["queued=", "admitted=", "first-token=", "finished="] {
+            assert!(line.contains(key), "{line}");
+        }
+    }
+}
+
+/// End-to-end mailbox + exporter path: a native server behind
+/// `ServerHandle`, typed snapshots over the channel, a live HTTP
+/// scrape of `/metrics`, and the trace dump through `Msg::DumpTrace`.
+#[test]
+fn server_snapshot_trace_and_live_scrape() {
+    let cfg = NativeEngineConfig { trace: true, prefill_chunk: 4, ..Default::default() };
+    let mut server = ServerHandle::spawn_native(model(), cfg).expect("spawn");
+    let rxs: Vec<_> = workload(4)
+        .into_iter()
+        .map(|(prompt, max_new)| server.submit(prompt, max_new, SamplingParams::default()))
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().expect("response")).collect();
+    assert!(responses.iter().all(|r| r.finish.is_ok()));
+
+    // typed snapshot over the mailbox
+    let snap = server.metrics_snapshot().expect("native engine snapshots");
+    assert!(snap.tokens_out > 0);
+    assert_eq!(snap.requests_done, responses.len() as u64);
+    assert!(snap.tick_ms.count > 0, "tick histogram empty");
+
+    // trace dump over the mailbox
+    let dump = server.dump_trace().expect("trace was enabled");
+    assert!(dump.contains("\"traceEvents\""));
+
+    // live scrape through a real TCP socket on an ephemeral port
+    let labels = quamba::obs::ExporterLabels {
+        backend: "native".into(),
+        kernels: "test".into(),
+        weight_bits: "32".into(),
+    };
+    let mut exp = MetricsExporter::spawn(0, labels, server.snapshot_fetch()).expect("bind");
+    let mut conn =
+        std::net::TcpStream::connect(("127.0.0.1", exp.port())).expect("connect exporter");
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").expect("send");
+    let mut body = String::new();
+    let _ = conn.read_to_string(&mut body);
+    assert!(body.starts_with("HTTP/1.1 200 OK"), "{body:.200}");
+    assert!(body.contains("quamba_tokens_generated_total"), "{body}");
+    let tokens: f64 = body
+        .lines()
+        .find(|l| l.starts_with("quamba_tokens_generated_total{"))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .expect("token counter line");
+    assert!(tokens > 0.0, "scrape shows zero generated tokens:\n{body}");
+    assert!(body.contains("quamba_ttft_ms_bucket"), "{body}");
+    assert!(body.contains("le=\"+Inf\""), "{body}");
+    exp.stop();
+    server.shutdown();
+}

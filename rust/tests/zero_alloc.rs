@@ -186,6 +186,44 @@ fn w4a8_chunked_batched_prefill_is_allocation_free_after_warmup() {
 }
 
 #[test]
+fn trace_ring_recording_is_allocation_free_after_warmup() {
+    // ISSUE 9 overhead contract: the flight recorder preallocates its
+    // whole ring at construction, so recording a span — including
+    // wrapping around and overwriting the oldest records — never
+    // touches the heap
+    use quamba::obs::{SpanKind, SpanRecord, TraceRing, NO_REQ};
+    let mut ring = TraceRing::new(256);
+    let span = |i: u64| SpanRecord {
+        kind: SpanKind::DecodeRound,
+        tick: i,
+        start_ms: i as f64,
+        end_ms: i as f64 + 0.5,
+        req_id: NO_REQ,
+        tokens: 4,
+        lanes: 4,
+    };
+    // warmup (the ring is prefilled at new(), but hold the same
+    // measurement shape as the other tests)
+    for i in 0..8 {
+        ring.record(span(i));
+    }
+    let before = allocs_on_this_thread();
+    // 1024 records through a 256-slot ring: crosses the wrap point
+    // many times over
+    for i in 0..1024 {
+        ring.record(span(i));
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "TraceRing::record heap-allocated {} time(s) across 1024 post-warmup records",
+        after - before
+    );
+    assert_eq!(ring.iter().count(), 256, "ring retains exactly its capacity");
+}
+
+#[test]
 fn fp32_step_is_allocation_free_after_warmup() {
     // the fp32 reference shares the scratch design; hold it to the
     // same standard so regressions can't hide behind the quantized test

@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition (0.0.4) lint for the quamba `/metrics`
+endpoint (rust/src/obs/exporter.rs).
+
+Usage:
+    python3 tools/check_exposition.py [FILE] [--require NAME[>MIN]]...
+
+Reads the exposition body from FILE (or stdin) and validates:
+
+* every sample line parses as `name{labels} value` with legal metric
+  and label names and properly quoted label values;
+* every sample's base metric carries a `# TYPE` declaration, and the
+  declared type is one the exporter emits (counter/gauge/histogram);
+* counters are non-negative and finite;
+* for each histogram: `le` upper bounds strictly increase and end at
+  `+Inf`, bucket counts are cumulative (non-decreasing), the `+Inf`
+  bucket equals `_count`, and `_sum`/`_count` are present;
+* `--require NAME` fails unless a sample of NAME exists;
+  `--require NAME>MIN` additionally demands some sample value > MIN
+  (how the CI smoke asserts traffic actually flowed).
+
+Exit code 0 = clean, 1 = findings (each printed as `exposition: ...`),
+2 = usage/IO error. Stdlib only; importable (`validate(text)` returns
+the findings list) so tools/metrics_smoke.py reuses the checks.
+"""
+
+import re
+import sys
+
+METRIC_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+# one label pair: name="value" with \\ \" \n escapes allowed in value
+PAIR_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+KNOWN_TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def parse_value(tok):
+    """Prometheus sample value: decimal/scientific, +Inf/-Inf/NaN."""
+    if tok == "+Inf":
+        return float("inf")
+    if tok == "-Inf":
+        return float("-inf")
+    try:
+        return float(tok)
+    except ValueError:
+        return None
+
+
+def parse_sample(line):
+    """Return (name, labels-dict, value) or None if unparseable."""
+    m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(\S+)$", line)
+    if not m:
+        return None
+    name, labelblob, valtok = m.group(1), m.group(2), m.group(3)
+    labels = {}
+    if labelblob:
+        # strict sequential scan: pairs only, separated by commas — any
+        # leading/interstitial junk makes the whole sample malformed
+        body = labelblob[1:-1]
+        pos = 0
+        while pos < len(body):
+            pm = PAIR_RE.match(body, pos)
+            if not pm:
+                return None
+            labels[pm.group(1)] = pm.group(2)
+            pos = pm.end()
+            if pos < len(body):
+                if body[pos] != ",":
+                    return None
+                pos += 1
+    value = parse_value(valtok)
+    if value is None:
+        return None
+    return name, labels, value
+
+
+def base_name(name, types):
+    """Strip the histogram sample suffix when the base is a histogram."""
+    for suf in HIST_SUFFIXES:
+        if name.endswith(suf) and types.get(name[: -len(suf)]) == "histogram":
+            return name[: -len(suf)]
+    return name
+
+
+def validate(text, require=()):
+    """Lint an exposition body; returns a list of finding strings."""
+    findings = []
+    types = {}
+    helps = set()
+    samples = []  # (lineno, name, labels, value)
+    for i, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or not METRIC_RE.match(parts[2]):
+                findings.append(f"line {i}: malformed HELP: {raw!r}")
+            else:
+                helps.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or not METRIC_RE.match(parts[2]):
+                findings.append(f"line {i}: malformed TYPE: {raw!r}")
+            elif parts[3] not in KNOWN_TYPES:
+                findings.append(f"line {i}: unknown type {parts[3]!r}")
+            elif parts[2] in types:
+                findings.append(f"line {i}: duplicate TYPE for {parts[2]}")
+            else:
+                types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # plain comment
+        s = parse_sample(line)
+        if s is None:
+            findings.append(f"line {i}: unparseable sample: {raw!r}")
+            continue
+        name, labels, value = s
+        for ln in labels:
+            if not LABEL_RE.match(ln):
+                findings.append(f"line {i}: bad label name {ln!r}")
+        samples.append((i, name, labels, value))
+
+    by_base = {}
+    for i, name, labels, value in samples:
+        base = base_name(name, types)
+        if base not in types:
+            findings.append(f"line {i}: sample {name} has no # TYPE declaration")
+            continue
+        by_base.setdefault(base, []).append((i, name, labels, value))
+        if types[base] == "counter" and not (value >= 0 and value != float("inf")):
+            findings.append(f"line {i}: counter {name} = {value} (must be finite, >= 0)")
+
+    for base, rows in sorted(by_base.items()):
+        if types.get(base) != "histogram":
+            continue
+        # group buckets by their non-`le` label set: one series each
+        series = {}
+        sums, counts = {}, {}
+        for i, name, labels, value in rows:
+            key = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+            if name == base + "_bucket":
+                if "le" not in labels:
+                    findings.append(f"line {i}: {name} without le label")
+                    continue
+                le = parse_value(labels["le"])
+                if le is None:
+                    findings.append(f"line {i}: {name} has non-numeric le={labels['le']!r}")
+                    continue
+                series.setdefault(key, []).append((i, le, value))
+            elif name == base + "_sum":
+                sums[key] = (i, value)
+            elif name == base + "_count":
+                counts[key] = (i, value)
+        for key, buckets in series.items():
+            les = [le for _, le, _ in buckets]
+            if sorted(les) != les or len(set(les)) != len(les):
+                findings.append(f"{base}: le bounds not strictly increasing: {les}")
+            if not les or les[-1] != float("inf"):
+                findings.append(f"{base}: bucket series does not end at le=\"+Inf\"")
+            prev = -1.0
+            for i, le, c in buckets:
+                if c < prev:
+                    findings.append(
+                        f"line {i}: {base}_bucket counts not cumulative ({c} < {prev})"
+                    )
+                prev = c
+            if key not in counts:
+                findings.append(f"{base}: missing _count for series {dict(key)}")
+            elif buckets and buckets[-1][1] == float("inf") and buckets[-1][2] != counts[key][1]:
+                findings.append(
+                    f"{base}: +Inf bucket {buckets[-1][2]} != _count {counts[key][1]}"
+                )
+            if key not in sums:
+                findings.append(f"{base}: missing _sum for series {dict(key)}")
+
+    for req in require:
+        if ">" in req:
+            name, minval = req.split(">", 1)
+            minval = float(minval)
+        else:
+            name, minval = req, None
+        hits = [v for _, n, _, v in samples if n == name]
+        if not hits:
+            findings.append(f"required metric {name} has no samples")
+        elif minval is not None and not any(v > minval for v in hits):
+            findings.append(f"required metric {name} <= {minval} (samples: {hits})")
+    return findings
+
+
+def main(argv):
+    args = argv[1:]
+    require = []
+    path = None
+    i = 0
+    while i < len(args):
+        if args[i] == "--require":
+            if i + 1 >= len(args):
+                print(__doc__)
+                return 2
+            require.append(args[i + 1])
+            i += 2
+        elif args[i] in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        elif path is None:
+            path = args[i]
+            i += 1
+        else:
+            print(__doc__)
+            return 2
+    try:
+        text = sys.stdin.read() if path in (None, "-") else open(path).read()
+    except OSError as e:
+        print(f"exposition: cannot read {path}: {e}")
+        return 2
+    findings = validate(text, require)
+    for f in findings:
+        print(f"exposition: {f}")
+    if not findings:
+        n = len([l for l in text.splitlines() if l and not l.startswith("#")])
+        print(f"exposition: clean ({n} samples)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""CI smoke for the /metrics exporter: launch `quamba serve --backend
+native` on a synthetic tier with an ephemeral metrics port, scrape the
+live endpoint over real HTTP while the server lingers, and lint the
+exposition body with tools/check_exposition.py.
+
+Usage:
+    python3 tools/metrics_smoke.py [--bin "cargo run --release --"]
+
+`--bin` is split shell-style, so it takes either a binary path
+(`target/release/quamba`) or a cargo invocation (the default — reuses
+the build cache the tier-1 step warmed).
+
+Flow:
+  1. spawn `quamba serve --backend native --requests 8 --max-new 8
+     --rate 1000 --metrics-port 0 --metrics-linger-ms 15000`
+     (ephemeral port; the linger keeps the exporter up after the
+     workload drains so the scrape can't race the shutdown);
+  2. parse "metrics: listening on http://127.0.0.1:PORT/metrics"
+     from its stdout;
+  3. poll the endpoint until a 200 scrape reports
+     quamba_tokens_generated_total > 0 and 8 done requests;
+  4. validate the final body with check_exposition.validate()
+     (format lint + histogram cumulativity + required series);
+  5. also assert non-/metrics paths 404.
+
+Exit 0 on success; non-zero with the reason (and the server's output)
+on any failure. Stdlib only.
+"""
+
+import argparse
+import os
+import re
+import shlex
+import signal
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import check_exposition
+
+PORT_RE = re.compile(r"metrics: listening on http://127\.0\.0\.1:(\d+)/metrics")
+
+
+def pump(stream, sink):
+    for line in iter(stream.readline, ""):
+        sink.append(line)
+    stream.close()
+
+
+def scrape(port, path="/metrics", timeout=2.0):
+    """Return (status, body) for one HTTP GET; raises on socket errors."""
+    url = f"http://127.0.0.1:{port}{path}"
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as r:
+            return r.status, r.read().decode("utf-8", "replace")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8", "replace")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--bin",
+        default="cargo run --release --",
+        help="quamba binary path or cargo invocation (split shell-style)",
+    )
+    ap.add_argument("--timeout-s", type=float, default=300.0)
+    args = ap.parse_args()
+
+    cmd = shlex.split(args.bin) + [
+        "serve", "--backend", "native",
+        "--requests", "8", "--max-new", "8", "--rate", "1000",
+        "--metrics-port", "0", "--metrics-linger-ms", "15000",
+    ]
+    print("metrics-smoke:", " ".join(cmd))
+    # own process group: `cargo run` wraps the real server, so signal
+    # the whole group or the grandchild would outlive a kill
+    proc = subprocess.Popen(
+        cmd,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+        start_new_session=True,
+    )
+    lines = []
+    t = threading.Thread(target=pump, args=(proc.stdout, lines), daemon=True)
+    t.start()
+
+    def stop(sig):
+        try:
+            os.killpg(os.getpgid(proc.pid), sig)
+        except (ProcessLookupError, PermissionError):
+            pass
+
+    def fail(reason):
+        stop(signal.SIGKILL)
+        t.join(timeout=5)
+        print(f"metrics-smoke: FAIL — {reason}")
+        print("---- server output ----")
+        sys.stdout.write("".join(lines))
+        return 1
+
+    deadline = time.time() + args.timeout_s
+    port = None
+    while port is None:
+        for line in lines:
+            m = PORT_RE.search(line)
+            if m:
+                port = int(m.group(1))
+                break
+        if port is None:
+            if proc.poll() is not None:
+                return fail("server exited before announcing the metrics port")
+            if time.time() > deadline:
+                return fail("timed out waiting for the metrics-port banner")
+            time.sleep(0.1)
+    print(f"metrics-smoke: exporter on port {port}")
+
+    # poll until the workload has drained into the counters (the linger
+    # window guarantees the endpoint outlives the last response)
+    body = None
+    while True:
+        if time.time() > deadline:
+            return fail("timed out waiting for a scrape showing 8 done requests")
+        try:
+            status, text = scrape(port)
+        except OSError:
+            time.sleep(0.2)
+            continue
+        if status == 200:
+            body = text
+            done = re.search(r'quamba_requests_total\{[^}]*outcome="done"[^}]*\} (\d+)', text)
+            toks = re.search(r"quamba_tokens_generated_total\{[^}]*\} (\d+)", text)
+            if done and int(done.group(1)) >= 8 and toks and int(toks.group(1)) > 0:
+                print(
+                    f"metrics-smoke: scrape shows {done.group(1)} done requests, "
+                    f"{toks.group(1)} tokens"
+                )
+                break
+        if proc.poll() is not None:
+            return fail(f"server exited (rc={proc.returncode}) before a full scrape")
+        time.sleep(0.2)
+
+    findings = check_exposition.validate(
+        body,
+        require=[
+            "quamba_tokens_generated_total>0",
+            "quamba_requests_total",
+            "quamba_ttft_ms_bucket",
+            "quamba_itl_ms_quantile",
+            "quamba_tick_ms_count>0",
+            "quamba_queue_depth_count",
+        ],
+    )
+    if findings:
+        for f in findings:
+            print(f"metrics-smoke: exposition: {f}")
+        return fail(f"{len(findings)} exposition finding(s)")
+    print(f"metrics-smoke: exposition clean ({len(body.splitlines())} lines)")
+
+    try:
+        status, _ = scrape(port, path="/nope")
+        if status != 404:
+            return fail(f"GET /nope answered {status}, expected 404")
+    except OSError as e:
+        return fail(f"404 probe failed: {e}")
+    print("metrics-smoke: non-/metrics path 404s as documented")
+
+    # done validating — no need to sit out the linger window
+    stop(signal.SIGTERM)
+    t.join(timeout=10)
+    print("metrics-smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
