@@ -11,7 +11,7 @@
 //!                         "edge serving from a bare machine" story
 //! Default is `auto`: XLA when an artifact tree is present, else native.
 //!
-//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--bits 8] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1] [--verbose] [--trace-out FILE] [--manual-clock MS]
+//!     cargo run --release --example serve_batch -- [--requests 24] [--rate 8] [--backend native] [--threads 4] [--kernels avx2] [--bits 8] [--spec-tokens 4] [--spec-draft w4a8] [--cache-mb 8] [--snapshot-stride 64] [--shared-prefix 32] [--prefill-chunk 64] [--max-tokens-per-tick 0] [--burst 2] [--fault-rate 0.02] [--fault-seed 1] [--verbose] [--trace-out FILE] [--manual-clock MS]
 //!
 //! `--threads N` (native backend) runs decode rounds on N scoped
 //! workers — token streams are bit-identical to `--threads 1`.
@@ -22,6 +22,13 @@
 //! instead of W8A8: half the GEMM weight bytes, per-group scales,
 //! activations still int8 — the quantized arm's label becomes
 //! `quamba-w4a8`.
+//! `--spec-tokens K` (native backend, 0 = off) arms self-speculative
+//! decoding: a cheap draft twin (`--spec-draft w4a8|fp32`, default
+//! w4a8) proposes K tokens per decoding lane and the target verifies
+//! all of them in one batched prefill, rolling the lane's O(1) SSM
+//! state snapshot back on the first rejection — token streams stay
+//! bit-identical to `--spec-tokens 0`, only throughput moves. The
+//! report gains a `spec` line with rounds and mean acceptance length.
 //! `--cache-mb M` (native backend, 0 = off) arms the prefix-sharing
 //! state cache with an M-megabyte snapshot budget and
 //! `--snapshot-stride N` interior cut points; `--shared-prefix L`
@@ -65,7 +72,7 @@ use quamba::bench_support::{burst_itl_max_report, Workload};
 use quamba::config::Manifest;
 use quamba::coordinator::faults::silence_injected_panics;
 use quamba::coordinator::server::ServerHandle;
-use quamba::coordinator::{EngineConfig, FaultPlan, NativeEngineConfig, SamplingParams};
+use quamba::coordinator::{EngineConfig, FaultPlan, NativeEngineConfig, SamplingParams, SpecDraft};
 use quamba::data;
 use quamba::quant::{KernelBackend, Kernels};
 use quamba::ssm::{MambaModel, MambaTier, QuantConfig, QuantizedMambaModel, StepModel};
@@ -373,28 +380,59 @@ fn serve_native(args: &Args, n: usize, rate: f64, max_new: usize) -> Result<()> 
          (0 = unchunked/unlimited; chunking moves latency, never tokens)"
     );
     let faults = fault_plan(args);
+    // speculative decoding: each arm gets its own draft twin built
+    // from the same weights (drafts are cheap — W4A8 twins share the
+    // calibration stream, fp32 drafts regenerate from the seed)
+    let spec_tokens = args.get_usize("spec-tokens", 0);
+    let spec_draft = {
+        let raw = args.get_or("spec-draft", "w4a8");
+        SpecDraft::parse(raw)
+            .unwrap_or_else(|| panic!("--spec-draft {raw}: expected w4a8 or fp32"))
+    };
+    let drafts: Vec<Option<Box<dyn StepModel + Send + Sync>>> = if spec_tokens == 0 {
+        vec![None, None]
+    } else {
+        let mk = || -> Box<dyn StepModel + Send + Sync> {
+            match spec_draft {
+                SpecDraft::W4A8 => {
+                    let qcfg = QuantConfig { weight_bits: 4, ..QuantConfig::default() };
+                    Box::new(QuantizedMambaModel::from_model(&model, &calib, &qcfg))
+                }
+                SpecDraft::Fp32 => Box::new(MambaModel::synthetic(tier.clone(), seed)),
+            }
+        };
+        println!(
+            "speculative decoding: K={spec_tokens} draft={} \
+             (tokens bit-identical to --spec-tokens 0, only throughput moves)",
+            spec_draft.label()
+        );
+        vec![Some(mk()), Some(mk())]
+    };
     let backends: Vec<(&str, u8, Box<dyn StepModel + Send + Sync>)> =
         vec![("fp32", 32, Box::new(model)), (qname, bits, Box::new(qmodel))];
-    for (name, wb, m) in backends {
+    for ((name, wb, m), draft) in backends.into_iter().zip(drafts) {
         println!(
             "\n=== native {}/{name}: {n} requests, ~{rate}/s, {max_new} new tokens each ===",
             tier.name
         );
-        let server = ServerHandle::spawn_native(
-            m,
-            NativeEngineConfig {
-                threads,
-                kernel_backend,
-                cache_bytes,
-                snapshot_stride,
-                prefill_chunk,
-                max_tokens_per_tick,
-                faults: faults.clone(),
-                weight_bits: wb,
-                trace: args.get("trace-out").is_some(),
-                ..Default::default()
-            },
-        )?;
+        let cfg = NativeEngineConfig {
+            threads,
+            kernel_backend,
+            cache_bytes,
+            snapshot_stride,
+            prefill_chunk,
+            max_tokens_per_tick,
+            faults: faults.clone(),
+            weight_bits: wb,
+            trace: args.get("trace-out").is_some(),
+            spec_tokens,
+            spec_draft,
+            ..Default::default()
+        };
+        let server = match draft {
+            Some(d) => ServerHandle::spawn_native_with_draft(m, d, cfg)?,
+            None => ServerHandle::spawn_native(m, cfg)?,
+        };
         let (done, wall, report) = drive(server, &wl, max_new, args);
         println!("completed {done}/{n} in {wall:.2}s");
         if let Some(r) = report {

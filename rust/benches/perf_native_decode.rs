@@ -27,6 +27,11 @@
 //!   `decode_step_w8a8_traced` run the identical steady-state decode
 //!   tick through `NativeEngine::step` with the trace ring off/on —
 //!   acceptance: tracing overhead ≤ 2%;
+//! * (ISSUE 10) self-speculative decoding: the plain W8A8 engine vs
+//!   the same engine with its W4A8 twin drafting K=8 tokens/lane
+//!   (`tok_per_s_spec`, `accept_len_mean`) — acceptance: spec greedy
+//!   decode ≥1.5x plain tokens/s, streams bit-identical (hard
+//!   `assert_eq!` in the bench, not a report line);
 //! * persists the whole table to `BENCH_native_decode.json` (override
 //!   the path with `QUAMBA_BENCH_JSON`) so CI can diff runs against
 //!   the committed baseline (`tools/bench_diff.py`).
@@ -530,6 +535,85 @@ fn main() {
     ]);
     tt.print();
 
+    // ---- speculative decoding: plain vs spec engine, greedy B=8 ----
+    // ISSUE 10: the W4A8 twin drafts K tokens per lane; the target
+    // verifies all K+1 positions in ONE batched prefill and rolls the
+    // lane's O(1) snapshot back on the first rejection. The drafts are
+    // quantization-close to the target, so greedy acceptance is high
+    // and the engine amortizes K+1 stepwise target passes into one
+    // batched read of the weights. Streams are asserted bit-identical
+    // — the speedup is pure scheduling, not sampling drift.
+    let (spec_b, spec_k, spec_new) = (8usize, 8usize, 96usize);
+    let spec_prompts: Vec<Vec<u16>> = (0..spec_b)
+        .map(|_| (0..16).map(|_| rng.below(tier.vocab as u32) as u16).collect())
+        .collect();
+    let mk_spec_reqs = || -> Vec<Request> {
+        spec_prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                id: (i + 1) as u64,
+                prompt: p.clone(),
+                max_new_tokens: spec_new,
+                params: SamplingParams::default(), // greedy
+                stop_at_eos: false,
+            })
+            .collect()
+    };
+    let mk_q4 = || {
+        QuantizedMambaModel::from_model(
+            &model,
+            &calib,
+            &QuantConfig { weight_bits: 4, ..QuantConfig::default() },
+        )
+    };
+    let mut plain_eng = NativeEngine::new(Box::new(mk_qm()), NativeEngineConfig::default());
+    for r in mk_spec_reqs() {
+        plain_eng.submit(r);
+    }
+    let t0 = std::time::Instant::now();
+    let mut plain_out = plain_eng.run_to_completion().expect("plain decode run");
+    let plain_s = t0.elapsed().as_secs_f64();
+    plain_out.sort_by_key(|r| r.id);
+    let mut spec_eng = NativeEngine::with_draft(
+        Box::new(mk_qm()),
+        Box::new(mk_q4()),
+        NativeEngineConfig { spec_tokens: spec_k, ..Default::default() },
+    );
+    for r in mk_spec_reqs() {
+        spec_eng.submit(r);
+    }
+    let t0 = std::time::Instant::now();
+    let mut spec_out = spec_eng.run_to_completion().expect("spec decode run");
+    let spec_s = t0.elapsed().as_secs_f64();
+    spec_out.sort_by_key(|r| r.id);
+    for (a, s) in plain_out.iter().zip(&spec_out) {
+        assert_eq!(
+            (a.id, &a.tokens),
+            (s.id, &s.tokens),
+            "speculative decoding changed the token stream"
+        );
+    }
+    let spec_total = (spec_b * spec_new) as f64;
+    let tok_s_plain_dec = spec_total / plain_s.max(1e-9);
+    let tok_s_spec = spec_total / spec_s.max(1e-9);
+    let spec_speedup = tok_s_spec / tok_s_plain_dec.max(1e-9);
+    let accept_len_mean = spec_eng.metrics.spec_accept_len_mean();
+    let mut spt = Table::new(
+        &format!(
+            "§Perf — speculative decoding: greedy B={spec_b}, K={spec_k}, \
+             {spec_new} tokens/lane (streams bit-identical, asserted)"
+        ),
+        &["path", "tok/s", "mean accept len"],
+    );
+    spt.row(vec!["plain W8A8 decode".into(), format!("{tok_s_plain_dec:.0}"), "-".into()]);
+    spt.row(vec![
+        format!("spec W8A8 + W4A8 draft (K={spec_k})"),
+        format!("{tok_s_spec:.0}"),
+        f2(accept_len_mean),
+    ]);
+    spt.print();
+
     let speedup = before.mean / q_step.mean;
     println!(
         "\nacceptance (≥2x W8A8 batched step vs per-token fp32 full-seq at B=8): {} ({:.2}x)",
@@ -592,6 +676,15 @@ fn main() {
         trace_overhead_pct,
         tick_traced.mean,
         tick_plain.mean,
+    );
+    println!(
+        "acceptance (spec decode ≥1.5x plain greedy tokens/s at B={spec_b}, K={spec_k}): {} \
+         ({:.2}x: {:.0} vs {:.0} tok/s; mean acceptance length {:.2}; streams bit-identical)",
+        if spec_speedup >= 1.5 { "PASS" } else { "FAIL" },
+        spec_speedup,
+        tok_s_spec,
+        tok_s_plain_dec,
+        accept_len_mean,
     );
 
     // ---- machine-readable trajectory ----
@@ -743,6 +836,23 @@ fn main() {
         shape: format!("B={b} tier={}", tier.name),
         ms: tick_traced.mean,
         speedup: tick_plain.mean / tick_traced.mean,
+    });
+    // speculative decoding (ISSUE 10). Same convention as the other
+    // tok_per_s_* keys: ms = per-token latency, speedup = tokens/s.
+    // accept_len_mean carries the mean acceptance length in `ms` (a
+    // count, not a time) and the spec/plain throughput ratio in
+    // `speedup` — the two acceptance quantities of the spec path.
+    entries.push(Entry {
+        op: "tok_per_s_spec",
+        shape: format!("B={spec_b} K={spec_k} draft=w4a8 tier={}", tier.name),
+        ms: 1000.0 * spec_s / spec_total,
+        speedup: tok_s_spec,
+    });
+    entries.push(Entry {
+        op: "accept_len_mean",
+        shape: format!("B={spec_b} K={spec_k} draft=w4a8 tier={}", tier.name),
+        ms: accept_len_mean,
+        speedup: spec_speedup,
     });
     let path = std::env::var("QUAMBA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_decode.json".to_string());

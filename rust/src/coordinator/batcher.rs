@@ -87,11 +87,18 @@ pub struct ChunkAssignment {
 }
 
 /// One scheduler tick's mixed work plan: the decode rounds (bucket
-/// sizes, from [`plan_rounds`]) plus the prefill chunks that fit the
-/// remaining token budget.
+/// sizes, from [`plan_rounds`]), the per-lane speculative draft grants
+/// (`spec_ks[i]` ≤ the lane's ask), plus the prefill chunks that fit
+/// the remaining token budget.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TickPlan {
     pub decode_rounds: Vec<usize>,
+    /// Draft tokens granted per speculating lane, aligned with the
+    /// planner's `spec_asks` input. A lane granted 0 still runs its
+    /// baseline 1-token verify (= plain decode through the verify
+    /// path), so speculation degrades under budget pressure instead of
+    /// stalling.
+    pub spec_ks: Vec<usize>,
     pub chunks: Vec<ChunkAssignment>,
 }
 
@@ -100,28 +107,49 @@ impl TickPlan {
     pub fn prefill_tokens(&self) -> usize {
         self.chunks.iter().map(|c| c.tokens).sum()
     }
+
+    /// Total draft tokens granted across speculating lanes.
+    pub fn spec_tokens(&self) -> usize {
+        self.spec_ks.iter().sum()
+    }
 }
 
-/// Plan one unified tick over `n_decode` decoding lanes and the
+/// Token-budget cost of one *granted* draft token: one draft-model
+/// step plus one extra target verify row. The speculating lane's
+/// baseline verify row (the token plain decode would have produced)
+/// is budgeted at 1 alongside decode lanes.
+pub const SPEC_TOKEN_COST: usize = 2;
+
+/// Plan one unified tick over `n_decode` plain decoding lanes, the
+/// speculating lanes asking `spec_asks[i]` draft tokens each, and the
 /// in-flight prefills with `prefill_remaining[i]` prompt tokens left
 /// (admission order — FIFO gets budget first).
 ///
 /// Budget semantics (`0` = unlimited for both knobs):
 /// * every decode lane is always scheduled (1 token each) — decode is
 ///   the latency-critical work and there are at most `capacity` lanes;
+/// * every speculating lane is likewise guaranteed its baseline
+///   1-token verify (plain decode through the verify path), then draft
+///   tokens are granted round-robin across lanes at [`SPEC_TOKEN_COST`]
+///   each while budget lasts, capped at the lane's ask — a tight tick
+///   spreads speculation thin rather than filling lane 0 first;
 /// * prefill chunks share what is left of `max_tokens_per_tick` after
-///   decode, each request taking
+///   decode + speculation, each request taking
 ///   `min(prefill_chunk, remaining, budget_left)` in FIFO order;
-/// * **minimum-progress guarantee**: if decode alone consumes the
-///   whole budget while prefills are pending, the oldest prefill still
-///   gets exactly 1 token — a saturated decode pool can stretch a
-///   prefill, never livelock it.
+/// * **minimum-progress guarantee**: while prefills are pending, one
+///   token is reserved *before* draft granting, so speculation can
+///   never spend the whole budget out from under them — the oldest
+///   prefill always gets at least 1 token, even when decode +
+///   speculation baselines alone exceed the budget. A saturated pool
+///   can stretch a prefill, never livelock it.
 ///
 /// Invariant (tested below): when `max_tokens_per_tick > 0`,
-/// `plan.prefill_tokens() <= max(max_tokens_per_tick - n_decode, 1)`,
-/// with the `1` arm only under the minimum-progress guarantee.
+/// `SPEC_TOKEN_COST * plan.spec_tokens() + plan.prefill_tokens() <=
+/// max(max_tokens_per_tick - n_decode - spec_asks.len(), 1)`, with the
+/// `1` arm only under the minimum-progress guarantee.
 pub fn plan_tick(
     n_decode: usize,
+    spec_asks: &[usize],
     prefill_remaining: &[usize],
     buckets: &[usize],
     prefill_chunk: usize,
@@ -129,13 +157,36 @@ pub fn plan_tick(
 ) -> TickPlan {
     let decode_rounds = plan_rounds(n_decode, buckets);
     let cap = if prefill_chunk == 0 { usize::MAX } else { prefill_chunk };
+    let baseline = n_decode + spec_asks.len();
     let mut budget = if max_tokens_per_tick == 0 {
         usize::MAX
     } else {
-        max_tokens_per_tick.saturating_sub(n_decode)
+        max_tokens_per_tick.saturating_sub(baseline)
     };
-    if budget == 0 && prefill_remaining.iter().any(|&r| r > 0) {
-        budget = 1;
+    // Reserve the minimum-progress token up front: draft grants must
+    // not be able to spend the pending prefill's guaranteed token
+    // (re-adding it AFTER granting keeps the tick within allowance —
+    // a post-grant `budget = 1` bump on an exactly-consumed even
+    // allowance would over-schedule by one).
+    let pending_prefill = prefill_remaining.iter().any(|&r| r > 0);
+    if pending_prefill {
+        budget = budget.saturating_sub(1);
+    }
+    // draft-token grants, round-robin in waves of +1 per lane
+    let mut spec_ks = vec![0usize; spec_asks.len()];
+    let mut granting = true;
+    while granting && budget >= SPEC_TOKEN_COST {
+        granting = false;
+        for (k, &ask) in spec_ks.iter_mut().zip(spec_asks) {
+            if *k < ask && budget >= SPEC_TOKEN_COST {
+                *k += 1;
+                budget -= SPEC_TOKEN_COST;
+                granting = true;
+            }
+        }
+    }
+    if pending_prefill {
+        budget = budget.saturating_add(1);
     }
     let mut chunks = Vec::new();
     for (idx, &remaining) in prefill_remaining.iter().enumerate() {
@@ -149,7 +200,7 @@ pub fn plan_tick(
         chunks.push(ChunkAssignment { idx, tokens });
         budget -= tokens;
     }
-    TickPlan { decode_rounds, chunks }
+    TickPlan { decode_rounds, spec_ks, chunks }
 }
 
 /// Assign request indices to rounds following a plan.
@@ -274,7 +325,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "no decode buckets")]
     fn plan_tick_rejects_empty_bucket_list() {
-        let _ = plan_tick(1, &[4], &[], 0, 0);
+        let _ = plan_tick(1, &[], &[4], &[], 0, 0);
     }
 
     #[test]
@@ -302,7 +353,7 @@ mod tests {
 
     #[test]
     fn plan_tick_unlimited_gives_full_chunks() {
-        let p = plan_tick(3, &[100, 5, 40], &[1, 2, 4, 8], 16, 0);
+        let p = plan_tick(3, &[], &[100, 5, 40], &[1, 2, 4, 8], 16, 0);
         assert_eq!(plan_rounds(3, &[1, 2, 4, 8]), p.decode_rounds);
         assert_eq!(
             p.chunks,
@@ -316,7 +367,7 @@ mod tests {
 
     #[test]
     fn plan_tick_unchunked_takes_whole_prompts() {
-        let p = plan_tick(0, &[100, 5], &[1, 2], 0, 0);
+        let p = plan_tick(0, &[], &[100, 5], &[1, 2], 0, 0);
         assert!(p.decode_rounds.is_empty());
         assert_eq!(p.prefill_tokens(), 105);
     }
@@ -324,7 +375,7 @@ mod tests {
     #[test]
     fn plan_tick_budget_is_fifo_and_tight() {
         // budget 20, 4 decode lanes → 16 tokens for prefill, oldest first
-        let p = plan_tick(4, &[10, 10, 10], &[1, 2, 4, 8], 8, 20);
+        let p = plan_tick(4, &[], &[10, 10, 10], &[1, 2, 4, 8], 8, 20);
         assert_eq!(
             p.chunks,
             vec![
@@ -339,32 +390,44 @@ mod tests {
     fn plan_tick_minimum_progress_under_decode_saturation() {
         // decode alone fills the budget: the oldest prefill still gets
         // exactly one token (no livelock), nothing else runs
-        let p = plan_tick(8, &[500, 500], &[1, 2, 4, 8], 64, 8);
+        let p = plan_tick(8, &[], &[500, 500], &[1, 2, 4, 8], 64, 8);
         assert_eq!(p.chunks, vec![ChunkAssignment { idx: 0, tokens: 1 }]);
         // ...but an idle prefill queue adds nothing
-        let p = plan_tick(8, &[], &[1, 2, 4, 8], 64, 8);
+        let p = plan_tick(8, &[], &[], &[1, 2, 4, 8], 64, 8);
         assert!(p.chunks.is_empty());
-        let p = plan_tick(8, &[0, 0], &[1, 2, 4, 8], 64, 8);
+        let p = plan_tick(8, &[], &[0, 0], &[1, 2, 4, 8], 64, 8);
         assert!(p.chunks.is_empty(), "drained prefills must not trigger the guarantee");
     }
 
     #[test]
     fn prop_plan_tick_token_budget_invariant() {
-        // seeded sweep: the mixed plan never over-schedules — prefill
-        // tokens fit max(budget − n_decode, 1), chunks respect the
-        // per-request cap and remaining counts, FIFO order, ≤ 1 chunk
-        // per request — and always makes progress when work exists
+        // seeded sweep: the mixed plan never over-schedules — spec
+        // grants (at SPEC_TOKEN_COST each) plus prefill tokens fit
+        // max(budget − n_decode − n_spec, 1), grants respect per-lane
+        // asks, chunks respect the per-request cap and remaining
+        // counts, FIFO order, ≤ 1 chunk per request — and always makes
+        // progress when work exists
         let mut r = crate::util::rng::Pcg32::new(0x71C4);
         for _ in 0..1000 {
             let n_decode = r.below(12) as usize;
+            let n_spec = r.below(5) as usize;
+            let asks: Vec<usize> = (0..n_spec).map(|_| r.below(9) as usize).collect();
             let n_pf = r.below(6) as usize;
             let remaining: Vec<usize> = (0..n_pf).map(|_| 1 + r.below(300) as usize).collect();
             let chunk = if r.f32() < 0.3 { 0 } else { 1 + r.below(64) as usize };
             let budget = if r.f32() < 0.3 { 0 } else { 1 + r.below(40) as usize };
-            let p = plan_tick(n_decode, &remaining, &[1, 2, 4, 8], chunk, budget);
+            let p = plan_tick(n_decode, &asks, &remaining, &[1, 2, 4, 8], chunk, budget);
             // decode side: covers every decoding lane
             let lanes: usize = p.decode_rounds.iter().sum();
             assert!(lanes >= n_decode);
+            // spec side: one grant slot per lane, capped by its ask
+            assert_eq!(p.spec_ks.len(), asks.len());
+            for (k, ask) in p.spec_ks.iter().zip(&asks) {
+                assert!(k <= ask, "grant {k} exceeds ask {ask}");
+            }
+            if budget == 0 {
+                assert_eq!(p.spec_ks, asks, "unlimited budget must grant full asks");
+            }
             // chunk-shape invariants
             let mut last_idx = None;
             for c in &p.chunks {
@@ -380,10 +443,10 @@ mod tests {
             }
             // budget invariant
             if budget > 0 {
-                let allowance = budget.saturating_sub(n_decode).max(1);
+                let allowance = budget.saturating_sub(n_decode + asks.len()).max(1);
                 assert!(
-                    p.prefill_tokens() <= allowance,
-                    "n_decode={n_decode} budget={budget} chunk={chunk} \
+                    SPEC_TOKEN_COST * p.spec_tokens() + p.prefill_tokens() <= allowance,
+                    "n_decode={n_decode} asks={asks:?} budget={budget} chunk={chunk} \
                      remaining={remaining:?} plan={p:?}"
                 );
             }
@@ -392,5 +455,44 @@ mod tests {
                 assert!(p.prefill_tokens() >= 1, "prefill starved: {p:?}");
             }
         }
+    }
+
+    // ---- speculative-lane grants ----
+
+    #[test]
+    fn plan_tick_spec_unlimited_grants_full_asks() {
+        let p = plan_tick(2, &[4, 0, 8], &[], &[1, 2, 4, 8], 0, 0);
+        assert_eq!(p.spec_ks, vec![4, 0, 8]);
+        assert_eq!(p.spec_tokens(), 12);
+    }
+
+    #[test]
+    fn plan_tick_spec_grants_are_round_robin_under_pressure() {
+        // budget 13, 1 decode + 2 spec lanes → baseline 3, 10 left →
+        // 5 grants of cost 2 spread in waves: [3, 2], not [4, 1]
+        let p = plan_tick(1, &[4, 4], &[], &[1, 2, 4, 8], 0, 13);
+        assert_eq!(p.spec_ks, vec![3, 2]);
+        // an exhausted ask releases its wave slot to the others
+        let p = plan_tick(1, &[1, 4], &[], &[1, 2, 4, 8], 0, 13);
+        assert_eq!(p.spec_ks, vec![1, 4]);
+    }
+
+    #[test]
+    fn plan_tick_spec_baseline_always_scheduled() {
+        // budget ≤ baseline: every spec lane still verifies 1 token
+        // (k=0 = plain decode through the verify path), prefill keeps
+        // its minimum-progress token
+        let p = plan_tick(4, &[8, 8], &[100], &[1, 2, 4, 8], 16, 6);
+        assert_eq!(p.spec_ks, vec![0, 0]);
+        assert_eq!(p.chunks, vec![ChunkAssignment { idx: 0, tokens: 1 }]);
+    }
+
+    #[test]
+    fn plan_tick_spec_leaves_leftover_budget_to_prefill() {
+        // budget 12, 1 decode + 1 spec(ask 2) → baseline 2, grants eat
+        // 4, prefill gets the remaining 6
+        let p = plan_tick(1, &[2], &[100], &[1, 2, 4, 8], 64, 12);
+        assert_eq!(p.spec_ks, vec![2]);
+        assert_eq!(p.chunks, vec![ChunkAssignment { idx: 0, tokens: 6 }]);
     }
 }

@@ -86,6 +86,13 @@ pub enum FaultSite {
     Alloc,
     /// corrupt the snapshot slab before a prefix-cache insert
     Snapshot,
+    /// panic inside a speculative draft round (catch-up prefill or
+    /// proposal steps), keyed by (request, tokens sampled)
+    Draft,
+    /// panic inside a speculative verify batch, keyed by (request,
+    /// tokens sampled) — the chaos suite asserts the pre-draft
+    /// snapshot survives and the lane's token stream stays bit-exact
+    Verify,
 }
 
 /// One explicit injection: fire at exactly this (site, request, step)
@@ -122,6 +129,12 @@ pub struct FaultPlan {
     /// per-insert probability of corrupting the snapshot slab (the
     /// engine's validation must catch it and drop the insert)
     pub snapshot_corrupt: f64,
+    /// per-(request, step) probability of a draft-round panic
+    /// (speculative decoding's draft catch-up / proposal phase)
+    pub draft_panic: f64,
+    /// per-(request, step) probability of a verify-batch panic
+    /// (speculative decoding's target verification phase)
+    pub verify_panic: f64,
     /// per-tick probability of `tick_latency_ms` of injected latency
     pub tick_latency_p: f64,
     /// injected latency magnitude (advances `Clock::Manual` time;
@@ -163,6 +176,8 @@ impl FaultPlan {
             prefill_panic: rate,
             alloc_fail: rate,
             snapshot_corrupt: rate,
+            draft_panic: rate,
+            verify_panic: rate,
             tick_latency_p: rate,
             tick_latency_ms: 3.0,
             targeted: Vec::new(),
@@ -174,6 +189,8 @@ impl FaultPlan {
             || self.prefill_panic > 0.0
             || self.alloc_fail > 0.0
             || self.snapshot_corrupt > 0.0
+            || self.draft_panic > 0.0
+            || self.verify_panic > 0.0
             || self.tick_latency_p > 0.0
             || !self.targeted.is_empty()
     }
@@ -184,6 +201,8 @@ impl FaultPlan {
             FaultSite::Prefill => 2,
             FaultSite::Alloc => 3,
             FaultSite::Snapshot => 4,
+            FaultSite::Draft => 5,
+            FaultSite::Verify => 6,
         }
     }
 
@@ -197,6 +216,8 @@ impl FaultPlan {
             FaultSite::Prefill => self.prefill_panic,
             FaultSite::Alloc => self.alloc_fail,
             FaultSite::Snapshot => self.snapshot_corrupt,
+            FaultSite::Draft => self.draft_panic,
+            FaultSite::Verify => self.verify_panic,
         };
         p > 0.0 && unit(mix(self.seed, Self::site_kind(site), req_id, step)) < p
     }
@@ -323,6 +344,32 @@ mod tests {
         assert!(!p.should_fail(FaultSite::Decode, 3, 1));
         assert!(!p.should_fail(FaultSite::Decode, 2, 2));
         assert!(!p.should_fail(FaultSite::Prefill, 3, 2));
+    }
+
+    #[test]
+    fn spec_sites_are_independent_keys() {
+        // Draft and Verify are distinct hash kinds: a plan targeting
+        // one never fires the other, and seeded rates roll separate
+        // decisions per site (ISSUE 10 chaos coverage)
+        let p = FaultPlan {
+            draft_panic: 1.0,
+            ..FaultPlan::none()
+        };
+        assert!(p.enabled());
+        assert!(p.should_fail(FaultSite::Draft, 3, 2));
+        assert!(!p.should_fail(FaultSite::Verify, 3, 2));
+        let t = FaultPlan {
+            targeted: vec![TargetedFault { site: FaultSite::Verify, req_id: 5, step: 4 }],
+            ..FaultPlan::none()
+        };
+        assert!(t.enabled());
+        assert!(t.should_fail(FaultSite::Verify, 5, 4));
+        assert!(!t.should_fail(FaultSite::Draft, 5, 4));
+        assert!(!t.should_fail(FaultSite::Verify, 5, 3));
+        let s = FaultPlan::seeded(11, 0.3);
+        let da: Vec<bool> = (0..256).map(|k| s.should_fail(FaultSite::Draft, k, 0)).collect();
+        let dv: Vec<bool> = (0..256).map(|k| s.should_fail(FaultSite::Verify, k, 0)).collect();
+        assert_ne!(da, dv, "Draft and Verify must hash as different sites");
     }
 
     #[test]

@@ -50,6 +50,17 @@ pub struct Metrics {
     pub snapshot_drops: u64,
     pub padded_lanes: u64,
     pub total_lanes: u64,
+    /// per-round speculative acceptance length (accepted draft tokens
+    /// per verify round, ISSUE 10) — the distribution behind the
+    /// adaptive-K policy and the `accept_len_mean` bench key
+    pub spec_accept_len: LogHistogram,
+    /// completed draft→verify rounds
+    pub spec_rounds: u64,
+    /// draft tokens proposed across all rounds
+    pub spec_drafted_tokens: u64,
+    /// draft tokens accepted by target verification (the
+    /// `quamba_spec_accepted_tokens` exporter series)
+    pub spec_accepted_tokens: u64,
     /// last-synced prefix-cache counters (None until an engine with an
     /// active cache calls [`Self::record_cache_stats`])
     pub cache: Option<CacheStats>,
@@ -82,6 +93,10 @@ impl Metrics {
             snapshot_drops: 0,
             padded_lanes: 0,
             total_lanes: 0,
+            spec_accept_len: LogHistogram::new(),
+            spec_rounds: 0,
+            spec_drafted_tokens: 0,
+            spec_accepted_tokens: 0,
             cache: None,
             anchor: WallAnchor::new(),
         }
@@ -154,6 +169,28 @@ impl Metrics {
         self.padded_lanes += (bucket - live) as u64;
     }
 
+    /// One speculative draft→verify round for one lane: `drafted`
+    /// tokens proposed, `accepted` of them confirmed by the target
+    /// (`accepted <= drafted`). The resampled/bonus token is *not*
+    /// counted here — it exists in plain decode too.
+    pub fn record_spec_round(&mut self, drafted: usize, accepted: usize) {
+        debug_assert!(accepted <= drafted);
+        self.spec_rounds += 1;
+        self.spec_drafted_tokens += drafted as u64;
+        self.spec_accepted_tokens += accepted as u64;
+        self.spec_accept_len.record(accepted as f64);
+    }
+
+    /// Mean accepted draft tokens per verify round (0 when speculation
+    /// never ran) — the `accept_len_mean` bench / report gauge.
+    pub fn spec_accept_len_mean(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_accepted_tokens as f64 / self.spec_rounds as f64
+        }
+    }
+
     /// One engine tick: its duration and the submit-queue depth at its
     /// end, both on the engine clock.
     pub fn record_tick(&mut self, tick_ms: f64, queue_depth: usize) {
@@ -208,6 +245,10 @@ impl Metrics {
             snapshot_drops: self.snapshot_drops,
             padded_lanes: self.padded_lanes,
             total_lanes: self.total_lanes,
+            spec_accept_len: self.spec_accept_len.clone(),
+            spec_rounds: self.spec_rounds,
+            spec_drafted_tokens: self.spec_drafted_tokens,
+            spec_accepted_tokens: self.spec_accepted_tokens,
             elapsed_ms: now_ms,
             tok_per_s: self.tokens_out as f64 / (now_ms / 1e3).max(1e-9),
             shed_rate: self.shed_rate(),
@@ -256,6 +297,22 @@ impl Metrics {
                 100.0 * self.shed_rate(),
             ));
         }
+        if self.spec_rounds > 0 {
+            // only when speculation actually ran — plain-decode
+            // reports stay unchanged
+            out.push_str(&format!(
+                "\nspec-decode rounds={} drafted={} accepted={} accept-rate={:.1}% \
+                 accept-len mean={:.2} p50={:.0} max={:.0}",
+                self.spec_rounds,
+                self.spec_drafted_tokens,
+                self.spec_accepted_tokens,
+                100.0 * self.spec_accepted_tokens as f64
+                    / (self.spec_drafted_tokens as f64).max(1.0),
+                self.spec_accept_len_mean(),
+                self.spec_accept_len.summary().p50,
+                self.spec_accept_len.summary().max,
+            ));
+        }
         if let Some(c) = &self.cache {
             out.push_str(&format!(
                 "\nprefix-cache  hits={} misses={} hit-rate={:.1}% entries={} \
@@ -290,6 +347,11 @@ pub struct MetricsSnapshot {
     pub snapshot_drops: u64,
     pub padded_lanes: u64,
     pub total_lanes: u64,
+    /// accepted-draft-tokens-per-round distribution (ISSUE 10)
+    pub spec_accept_len: LogHistogram,
+    pub spec_rounds: u64,
+    pub spec_drafted_tokens: u64,
+    pub spec_accepted_tokens: u64,
     /// engine-clock timestamp the snapshot was taken at
     pub elapsed_ms: f64,
     /// tokens / engine-clock seconds (deterministic under the manual
@@ -436,6 +498,31 @@ mod tests {
         assert!(r.contains("failed=1"), "{r}");
         assert!(r.contains("snapshot-drops=1"), "{r}");
         assert!(r.contains("shed-rate=50.0%"), "{r}");
+    }
+
+    #[test]
+    fn spec_rounds_surface_in_report_and_snapshot() {
+        let mut m = Metrics::new();
+        // no speculation → no spec line (plain-decode reports unchanged)
+        assert!(!m.report().contains("spec-decode"), "{}", m.report());
+        assert_eq!(m.spec_accept_len_mean(), 0.0);
+        m.record_spec_round(4, 4);
+        m.record_spec_round(4, 1);
+        m.record_spec_round(2, 0);
+        assert_eq!(m.spec_rounds, 3);
+        assert_eq!(m.spec_drafted_tokens, 10);
+        assert_eq!(m.spec_accepted_tokens, 5);
+        assert!((m.spec_accept_len_mean() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.spec_accept_len.count, 3);
+        let r = m.report();
+        assert!(r.contains("spec-decode rounds=3"), "{r}");
+        assert!(r.contains("drafted=10"), "{r}");
+        assert!(r.contains("accepted=5"), "{r}");
+        assert!(r.contains("accept-rate=50.0%"), "{r}");
+        let s = m.snapshot(100.0);
+        assert_eq!(s.spec_rounds, 3);
+        assert_eq!(s.spec_accepted_tokens, 5);
+        assert_eq!(s.spec_accept_len.count, 3);
     }
 
     #[test]

@@ -55,5 +55,5 @@ pub mod state;
 pub use engine::{Engine, EngineConfig};
 pub use faults::{Clock, FaultPlan, FaultSite, TargetedFault};
 pub use metrics::MetricsSnapshot;
-pub use native::{NativeEngine, NativeEngineConfig};
-pub use request::{FinishReason, Phase, Request, RequestId, Response, SamplingParams};
+pub use native::{NativeEngine, NativeEngineConfig, SpecDraft};
+pub use request::{FinishReason, Phase, Request, RequestId, Response, SamplingParams, SpecState};

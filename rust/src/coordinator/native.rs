@@ -94,13 +94,59 @@ use crate::coordinator::faults::{
     panic_message, Clock, FaultPlan, FaultSite, InjectedFault, WallAnchor,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{FinishReason, LiveRequest, Phase, Request, RequestId, Response};
+use crate::coordinator::request::{
+    FinishReason, LiveRequest, Phase, Request, RequestId, Response, SpecState,
+};
 use crate::coordinator::sampler;
-use crate::coordinator::state::SsmStatePool;
+use crate::coordinator::state::{SsmSlab, SsmStatePool};
 use crate::data::BOS;
 use crate::obs::trace::{SpanKind, SpanRecord, TraceRing, NO_REQ};
 use crate::quant::{KernelBackend, Kernels};
-use crate::ssm::{MambaState, StepModel, StepScratch};
+use crate::ssm::{verify_row, MambaState, StepModel, StepScratch};
+use crate::util::rng::Pcg32;
+
+/// Which draft-model family the CLI builds for the speculative-decode
+/// tier (`quamba serve --spec-draft`). Advisory metadata like
+/// `NativeEngineConfig::weight_bits`: the engine itself receives a
+/// pre-built draft [`StepModel`] via [`NativeEngine::with_draft`], so
+/// this records the choice for telemetry and CLI plumbing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecDraft {
+    /// W4A8 packed-nibble twin of the W8A8 target (default): same
+    /// calibration, half the GEMM weight bytes — the memory-bound
+    /// decode GEMMs run ~2× lighter, and the shared calibration keeps
+    /// acceptance high
+    #[default]
+    W4A8,
+    /// the fp32 reference model drafting for a quantized target (the
+    /// configurable alternative; higher-fidelity proposals at fp32
+    /// compute cost)
+    Fp32,
+}
+
+impl SpecDraft {
+    /// CLI label (`--spec-draft w4a8|fp32`).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpecDraft::W4A8 => "w4a8",
+            SpecDraft::Fp32 => "fp32",
+        }
+    }
+
+    /// Parse a `--spec-draft` argument.
+    pub fn parse(s: &str) -> Option<SpecDraft> {
+        match s {
+            "w4a8" => Some(SpecDraft::W4A8),
+            "fp32" => Some(SpecDraft::Fp32),
+            _ => None,
+        }
+    }
+}
+
+/// Consecutive zero-accept speculative rounds before a lane degrades
+/// to plain decode permanently (`SpecState::dry_rounds` threshold):
+/// adversarial prompts stop paying the draft cost.
+const SPEC_DRY_LIMIT: u32 = 4;
 
 #[derive(Debug, Clone)]
 pub struct NativeEngineConfig {
@@ -170,6 +216,20 @@ pub struct NativeEngineConfig {
     /// model construction (`QuantConfig::weight_bits`) — this field
     /// records it for telemetry and `quamba serve --bits` plumbing.
     pub weight_bits: u8,
+    /// speculative decoding (ISSUE 10): per round, a cheap draft model
+    /// proposes up to `spec_tokens` tokens per decoding lane and the
+    /// target model verifies all of them (plus the pending token) in
+    /// ONE batched prefill; accepted tokens commit, the first
+    /// rejection restores the lane's constant-size pre-verify state
+    /// snapshot (O(1) rollback) and resamples from the target's own
+    /// logits row. Token streams are **bit-identical** to plain decode
+    /// for greedy and temperature sampling — speculation moves
+    /// latency, never tokens. 0 (default) = off. Requires a draft
+    /// model ([`NativeEngine::with_draft`]); ignored without one.
+    pub spec_tokens: usize,
+    /// which draft family the CLI builds when `spec_tokens > 0`
+    /// (advisory metadata — see [`SpecDraft`])
+    pub spec_draft: SpecDraft,
     /// flight-recorder tick tracing (ISSUE 9): record one
     /// [`SpanRecord`] per tick phase into a preallocated overwrite-
     /// oldest [`TraceRing`], dumpable as Chrome trace-event JSON
@@ -200,6 +260,8 @@ impl Default for NativeEngineConfig {
             clock: Clock::Wall,
             faults: FaultPlan::none(),
             weight_bits: 8,
+            spec_tokens: 0,
+            spec_draft: SpecDraft::W4A8,
             trace: false,
             trace_capacity: 65_536,
         }
@@ -322,6 +384,13 @@ pub struct NativeEngine {
     /// flight recorder (`cfg.trace`): fixed-capacity span ring, written
     /// once per tick phase, overwrite-oldest. `None` = tracing off.
     trace: Option<TraceRing>,
+    /// speculative-decode draft model ([`Self::with_draft`]); `None`
+    /// serves plain decode regardless of `cfg.spec_tokens`
+    draft: Option<Box<dyn StepModel + Send + Sync>>,
+    /// per-lane draft-state slabs, same capacity as the target pool so
+    /// every live lane can speculate; slots attach lazily
+    /// ([`SpecState`]) and release only through [`Self::finish_live`]
+    draft_pool: Option<SsmStatePool>,
 }
 
 impl NativeEngine {
@@ -359,9 +428,51 @@ impl NativeEngine {
             manual_extra_ms: 0.0,
             anchor: WallAnchor::new(),
             trace: cfg.trace.then(|| TraceRing::new(cfg.trace_capacity)),
+            draft: None,
+            draft_pool: None,
             model,
             cfg,
         }
+    }
+
+    /// Build an engine with a speculative-decode draft model (ISSUE
+    /// 10). The draft proposes tokens that the target model verifies;
+    /// the two must share a vocabulary but may differ in every other
+    /// dimension (the canonical pairing is a W4A8 twin drafting for
+    /// the W8A8 target — same calibration, half the weight bytes).
+    /// Speculation activates when `cfg.spec_tokens > 0`; with a draft
+    /// but `spec_tokens = 0` the engine serves plain decode.
+    pub fn with_draft(
+        model: Box<dyn StepModel + Send + Sync>,
+        draft: Box<dyn StepModel + Send + Sync>,
+        cfg: NativeEngineConfig,
+    ) -> NativeEngine {
+        let mut eng = NativeEngine::new(model, cfg);
+        let dt = draft.tier();
+        assert_eq!(
+            dt.vocab, eng.vocab,
+            "draft/target vocab mismatch: the verify step compares token ids"
+        );
+        let mut dpool =
+            SsmStatePool::with_dims(dt.n_layer, dt.d_inner, dt.d_conv, dt.d_state, eng.cfg.capacity);
+        if draft.quantized_conv_state() {
+            dpool = dpool.with_quantized_conv();
+        }
+        eng.draft_pool = Some(dpool);
+        eng.draft = Some(draft);
+        eng
+    }
+
+    /// Whether speculative decoding is active (draft present and
+    /// `cfg.spec_tokens > 0`).
+    pub fn spec_enabled(&self) -> bool {
+        self.cfg.spec_tokens > 0 && self.draft.is_some()
+    }
+
+    /// Draft-pool slots currently attached to live lanes (tests /
+    /// chaos-suite conservation checks). 0 without a draft.
+    pub fn draft_pool_in_use(&self) -> usize {
+        self.draft_pool.as_ref().map_or(0, |p| p.in_use())
     }
 
     /// Prefix-cache counters; `None` when serving with the cache off.
@@ -544,6 +655,24 @@ impl NativeEngine {
         if slots.len() != self.live.len() {
             return Err("duplicate state_slot among live requests".to_string());
         }
+        if let Some(dp) = &self.draft_pool {
+            dp.check_conservation()?;
+            let n_spec = self.live.iter().filter(|lr| lr.spec.is_some()).count();
+            if dp.in_use() != n_spec {
+                return Err(format!(
+                    "{} draft slots in use for {} speculating lanes (leak or double-book)",
+                    dp.in_use(),
+                    n_spec
+                ));
+            }
+            let mut dslots: Vec<usize> =
+                self.live.iter().filter_map(|lr| lr.spec.map(|s| s.draft_slot)).collect();
+            dslots.sort_unstable();
+            dslots.dedup();
+            if dslots.len() != n_spec {
+                return Err("duplicate draft_slot among speculating lanes".to_string());
+            }
+        }
         Ok(())
     }
 
@@ -597,9 +726,42 @@ impl NativeEngine {
             self.push_span(SpanKind::Admission, t_adm, NO_REQ, admitted, self.live.len() as u32);
         }
         let t_plan = self.span_start();
-        let dec_idx: Vec<usize> = (0..self.live.len())
-            .filter(|&i| self.live[i].phase == Phase::Decoding && self.live[i].fault.is_none())
-            .collect();
+        // lane split: decoding lanes with an attached draft slot run
+        // the speculative verify path; the rest run plain decode
+        // rounds. Attachment is lazy — a decoding lane picks up a
+        // draft slot the first tick one is free — and permanent until
+        // harvest, so a lane never flip-flops between the two paths
+        // within a round's bookkeeping.
+        let spec_on = self.spec_enabled();
+        let mut dec_idx: Vec<usize> = Vec::new();
+        let mut spec_idx: Vec<usize> = Vec::new();
+        for i in 0..self.live.len() {
+            if self.live[i].phase != Phase::Decoding || self.live[i].fault.is_some() {
+                continue;
+            }
+            if spec_on && self.live[i].spec.is_none() {
+                let slot = self.draft_pool.as_mut().and_then(|dp| dp.alloc());
+                if let Some(draft_slot) = slot {
+                    let s = self.live[i].prompt.len() + self.live[i].generated.len();
+                    // the target slab of a decoding lane has consumed
+                    // everything but the pending token
+                    self.live[i].spec = Some(SpecState {
+                        draft_slot,
+                        target_next: s - 1,
+                        draft_next: 0,
+                        k: self.cfg.spec_tokens,
+                        dry_rounds: 0,
+                    });
+                }
+            }
+            if self.live[i].spec.is_some() {
+                spec_idx.push(i);
+            } else {
+                dec_idx.push(i);
+            }
+        }
+        let spec_asks: Vec<usize> =
+            spec_idx.iter().map(|&i| self.live[i].spec.map_or(0, |s| s.k)).collect();
         let mut pf_idx: Vec<usize> = (0..self.live.len())
             .filter(|&i| {
                 matches!(self.live[i].phase, Phase::Prefilling { .. })
@@ -614,20 +776,26 @@ impl NativeEngine {
             pf_idx.iter().map(|&i| self.live[i].prefill_remaining()).collect();
         let plan = batcher::plan_tick(
             dec_idx.len(),
+            &spec_asks,
             &remaining,
             &self.cfg.decode_buckets,
             self.cfg.prefill_chunk,
             self.cfg.max_tokens_per_tick,
         );
         if trace_on {
-            let planned: usize =
-                dec_idx.len() + plan.chunks.iter().map(|c| c.tokens).sum::<usize>();
+            let planned: usize = dec_idx.len()
+                + spec_idx.len()
+                + plan.spec_tokens()
+                + plan.chunks.iter().map(|c| c.tokens).sum::<usize>();
             self.push_span(SpanKind::Plan, t_plan, NO_REQ, planned as u32, dec_idx.len() as u32);
         }
         // decode first: the latency-critical lanes never wait behind
         // this tick's prefill work
         if !dec_idx.is_empty() {
             self.decode_tick(&dec_idx, &plan.decode_rounds);
+        }
+        if !spec_idx.is_empty() {
+            self.spec_tick(&spec_idx, &plan.spec_ks);
         }
         if !plan.chunks.is_empty() {
             self.prefill_tick(&pf_idx, &plan.chunks);
@@ -681,6 +849,9 @@ impl NativeEngine {
         let now = self.now_ms();
         let lr = self.live.swap_remove(i);
         self.pool.release(lr.state_slot);
+        if let (Some(spec), Some(dp)) = (lr.spec, self.draft_pool.as_mut()) {
+            dp.release(spec.draft_slot);
+        }
         let resp = lr.into_response(now);
         if resp.finish.is_ok() {
             self.metrics.record_response(
@@ -1162,6 +1333,343 @@ impl NativeEngine {
             self.metrics.record_cache_stats(c.stats());
         }
     }
+
+    /// One speculative decode round over the speculating lanes `spec`
+    /// (indices into `self.live`) with per-lane draft grants `ks` from
+    /// the planner (ISSUE 10). Three sub-phases:
+    ///
+    /// 1. **draft catch-up** — lanes whose draft slab lags the stream
+    ///    replay the missing tokens as one batched draft prefill
+    ///    (tokens committed on the target in earlier rounds re-enter
+    ///    the draft here — the draft trails, it never speculates about
+    ///    its own past);
+    /// 2. **proposals** — up to `k` draft steps on a gathered COPY of
+    ///    the draft state (never scattered back, so a rejected run
+    ///    needs no draft-side rollback). Greedy lanes propose via the
+    ///    shared deterministic argmax; temperature lanes sample with a
+    ///    CLONE of the lane RNG, so the draft predicts exactly the
+    ///    draw sequence the verify walk will consume;
+    /// 3. **verify + commit** — ONE batched target prefill over every
+    ///    lane's unverified stream suffix plus its proposals, then a
+    ///    commit walk that samples each verify row with the lane's
+    ///    TRUE RNG. Acceptance is `sampled == drafted`, so the emitted
+    ///    stream is plain decode's **by construction** — for greedy
+    ///    and temperature alike — and each token costs exactly the
+    ///    draws plain decode would spend. The first rejection restores
+    ///    the lane's constant-size pre-verify snapshot — the **O(1)
+    ///    rollback** the SSM's fixed-size recurrent state makes free,
+    ///    where a KV-cache transformer would truncate a token-length-
+    ///    proportional cache — and the rejecting row's sample IS the
+    ///    corrective token.
+    ///
+    /// Fault isolation mirrors decode/prefill: the model only ever
+    /// sees gathered copies; scatter follows clean runs. A draft-side
+    /// panic is never fatal — affected lanes verify `k = 0` (a plain
+    /// decode step through the verify path) this tick and retry later.
+    /// A verify panic retires the named victim exactly like a decode
+    /// panic; survivors emit nothing this tick (no RNG draws, pool
+    /// untouched) and re-verify next tick — streams stay
+    /// bit-identical, only tick alignment moves.
+    fn spec_tick(&mut self, spec: &[usize], ks: &[usize]) {
+        debug_assert_eq!(spec.len(), ks.len());
+        let v = self.vocab;
+        let spec_max = self.cfg.spec_tokens;
+        // per-lane draft grant this tick (plan-capped ask); draft-side
+        // faults shrink it, never past the proposals actually drafted
+        let mut tick_k: Vec<usize> = ks.to_vec();
+        let mut states: Vec<SpecState> = Vec::with_capacity(spec.len());
+        for &li in spec {
+            match self.live[li].spec {
+                Some(sp) => states.push(sp),
+                // defensive: the lane split only routes attached lanes
+                // here — never panic the serving loop
+                None => return,
+            }
+        }
+        // full stream (prompt ++ generated) per lane; catch-up and
+        // verify chunks slice into these
+        let streams: Vec<Vec<u16>> = spec
+            .iter()
+            .map(|&li| {
+                let lr = &self.live[li];
+                let mut s = Vec::with_capacity(lr.prompt.len() + lr.generated.len());
+                s.extend_from_slice(&lr.prompt);
+                s.extend_from_slice(&lr.generated);
+                s
+            })
+            .collect();
+        let mut proposals: Vec<Vec<u16>> = vec![Vec::new(); spec.len()];
+        if tick_k.iter().any(|&k| k > 0) {
+            self.spec_draft_phase(spec, &states, &streams, &mut tick_k, &mut proposals);
+        }
+        for j in 0..spec.len() {
+            tick_k[j] = tick_k[j].min(proposals[j].len());
+        }
+        // --- sub-phase 3: one batched target verify + commit walk ---
+        let t_verify = self.span_start();
+        // chunk per lane: unverified stream suffix (the pending token,
+        // plus any tokens emitted-then-rolled-back in earlier rounds)
+        // ++ this round's proposals
+        let chunks_data: Vec<Vec<u16>> = (0..spec.len())
+            .map(|j| {
+                let mut c = streams[j][states[j].target_next..].to_vec();
+                c.extend_from_slice(&proposals[j][..tick_k[j]]);
+                c
+            })
+            .collect();
+        // pre-verify snapshots for lanes that can reject (k >= 1): the
+        // constant-size slab IS the O(1) rollback
+        let snaps: Vec<Option<SsmSlab>> = (0..spec.len())
+            .map(|j| (tick_k[j] > 0).then(|| self.pool.snapshot(self.live[spec[j]].state_slot)))
+            .collect();
+        let b = spec.len();
+        let slots: Vec<usize> = spec.iter().map(|&li| self.live[li].state_slot).collect();
+        let t_max = chunks_data.iter().map(|c| c.len()).max().unwrap_or(1);
+        let mut state = self.pool.gather_state(self.model.tier(), &slots, b);
+        let mut scratch = StepScratch::with_kernels(1, self.kernels);
+        let mut logits: Vec<f32> = Vec::new();
+        let exec = {
+            let live = &self.live;
+            let faults = &self.cfg.faults;
+            let model = &*self.model;
+            let chunk_slices: Vec<&[u16]> = chunks_data.iter().map(|c| c.as_slice()).collect();
+            let t0 = WallAnchor::new();
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                for &li in spec {
+                    let lr = &live[li];
+                    faults.check(FaultSite::Verify, lr.req.id, lr.generated.len() as u64);
+                }
+                model.prefill_batch_into(&chunk_slices, &mut state, &mut scratch, &mut logits);
+            }));
+            // the verify is decode work routed through the prefill
+            // path; its latency samples the decode-step histogram
+            self.metrics.decode_step_ms.record(t0.elapsed_ms());
+            res
+        };
+        let total: usize = chunks_data.iter().map(|c| c.len()).sum();
+        self.push_span(SpanKind::VerifyChunk, t_verify, NO_REQ, total as u32, b as u32);
+        if let Err(p) = exec {
+            // verify is target-model execution: the named victim fails
+            // exactly like a decode panic. Survivors emitted nothing —
+            // no RNG draws, pool untouched (the model only saw the
+            // gathered copy) — so they re-verify next tick: streams
+            // stay bit-identical, only tick alignment moves.
+            let msg = panic_message(&*p);
+            let injected = p.downcast_ref::<InjectedFault>().map(|f| f.req_id);
+            for &li in spec {
+                let is_victim = match injected {
+                    Some(id) => self.live[li].req.id == id,
+                    None => true,
+                };
+                if is_victim {
+                    self.live[li].fault = Some((FinishReason::Failed, msg.clone()));
+                }
+            }
+            return;
+        }
+        self.pool.scatter_state(&slots, state);
+        let now = self.now_ms();
+        for (bi, &li) in spec.iter().enumerate() {
+            let chunk_len = chunks_data[bi].len();
+            let k = tick_k[bi];
+            let c = chunk_len - k; // catch-up rows incl. pending token, >= 1
+            let mut accepted = 0usize;
+            let mut rejected = false;
+            // the commit walk: rows (c-1)..=(c-1+k) are the target's
+            // next-token distributions at and past the stream tip
+            for t in 0..=k {
+                if self.live[li].done() {
+                    // max_new / EOS reached mid-walk: the lane is
+                    // harvested this tick, remaining rows are unused
+                    // (and crucially unsampled — no stray RNG draws)
+                    break;
+                }
+                let tok = {
+                    let row = verify_row(&logits, bi, t_max, c - 1 + t, v);
+                    let lr = &mut self.live[li];
+                    sampler::sample_row(&mut lr.rng, row, v, &lr.req.params)
+                };
+                let lr = &mut self.live[li];
+                lr.generated.push(tok);
+                if let Some(last) = lr.last_token_ms {
+                    lr.decode_ms.push(now - last);
+                }
+                lr.last_token_ms = Some(now);
+                if t == k {
+                    // the bonus token after a fully-accepted draft run
+                    break;
+                }
+                if tok != chunks_data[bi][c + t] {
+                    // first mismatch: `tok` IS the corrective sample,
+                    // taken from the target's own logits row
+                    rejected = true;
+                    break;
+                }
+                accepted += 1;
+            }
+            if rejected {
+                // O(1) rollback: restore the constant-size pre-verify
+                // slab. The tokens emitted this round re-enter the
+                // verify chunk as catch-up next round.
+                if let Some(snap) = snaps[bi].as_ref() {
+                    let slot = self.live[li].state_slot;
+                    self.pool.restore(slot, snap);
+                }
+            }
+            if k > 0 {
+                self.metrics.record_spec_round(k, accepted);
+            }
+            if let Some(sp) = self.live[li].spec.as_mut() {
+                if !rejected {
+                    // clean walk: the slab consumed the whole chunk
+                    sp.target_next += chunk_len;
+                }
+                if k > 0 {
+                    if rejected {
+                        // shrink toward 1 on rejection; after
+                        // SPEC_DRY_LIMIT consecutive zero-accept
+                        // rounds, degrade to plain decode permanently
+                        sp.k = (sp.k / 2).max(1);
+                        if accepted == 0 {
+                            sp.dry_rounds += 1;
+                            if sp.dry_rounds >= SPEC_DRY_LIMIT {
+                                sp.k = 0;
+                            }
+                        } else {
+                            sp.dry_rounds = 0;
+                        }
+                    } else if accepted == k {
+                        // full accept: grow back toward the cap
+                        sp.k = (sp.k + 1).min(spec_max);
+                        sp.dry_rounds = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sub-phases 1–2 of [`Self::spec_tick`]: batched draft catch-up
+    /// (scattered back only on a clean run) plus proposal steps on a
+    /// gathered copy. On return `proposals[j]` holds lane `j`'s
+    /// drafted tokens; `tick_k[j]` shrinks (possibly to 0 — plain
+    /// decode this tick) when a draft-side panic interrupts the work.
+    fn spec_draft_phase(
+        &mut self,
+        spec: &[usize],
+        states: &[SpecState],
+        streams: &[Vec<u16>],
+        tick_k: &mut [usize],
+        proposals: &mut [Vec<u16>],
+    ) {
+        let v = self.vocab;
+        let t0 = self.span_start();
+        // --- sub-phase 1: catch-up lanes whose draft slab lags the
+        // pending-token point (first round: the whole prompt) ---
+        let cu: Vec<usize> = (0..spec.len())
+            .filter(|&j| tick_k[j] > 0 && states[j].draft_next + 1 < streams[j].len())
+            .collect();
+        if !cu.is_empty() {
+            let b = cu.len();
+            let slots: Vec<usize> = cu.iter().map(|&j| states[j].draft_slot).collect();
+            let ok = {
+                let Some(draft) = self.draft.as_deref() else { return };
+                let Some(dpool) = self.draft_pool.as_mut() else { return };
+                let mut state = dpool.gather_state(draft.tier(), &slots, b);
+                let mut scratch = StepScratch::with_kernels(1, self.kernels);
+                let mut logits: Vec<f32> = Vec::new();
+                let chunk_slices: Vec<&[u16]> = cu
+                    .iter()
+                    .map(|&j| &streams[j][states[j].draft_next..streams[j].len() - 1])
+                    .collect();
+                let live = &self.live;
+                let faults = &self.cfg.faults;
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    for &j in &cu {
+                        let lr = &live[spec[j]];
+                        faults.check(FaultSite::Draft, lr.req.id, lr.generated.len() as u64);
+                    }
+                    draft.prefill_batch_into(&chunk_slices, &mut state, &mut scratch, &mut logits);
+                }));
+                match res {
+                    Ok(()) => {
+                        dpool.scatter_state(&slots, state);
+                        true
+                    }
+                    Err(_) => false,
+                }
+            };
+            if ok {
+                for &j in &cu {
+                    if let Some(sp) = self.live[spec[j]].spec.as_mut() {
+                        sp.draft_next = streams[j].len() - 1;
+                    }
+                }
+            } else {
+                // a draft fault is never fatal: the lane verifies k=0
+                // (a plain decode step) this tick and the untouched
+                // draft slab retries its catch-up next round
+                for &j in &cu {
+                    tick_k[j] = 0;
+                }
+            }
+        }
+        // --- sub-phase 2: proposals on a gathered, never-scattered
+        // copy of the draft state ---
+        let pj: Vec<usize> = (0..spec.len()).filter(|&j| tick_k[j] > 0).collect();
+        if !pj.is_empty() {
+            let b = pj.len();
+            let k_max = pj.iter().map(|&j| tick_k[j]).max().unwrap_or(0);
+            let slots: Vec<usize> = pj.iter().map(|&j| states[j].draft_slot).collect();
+            // temperature lanes propose with a CLONE of the lane RNG —
+            // the true stream advances only when the verify walk emits
+            let mut prop_rng: Vec<Pcg32> =
+                pj.iter().map(|&j| self.live[spec[j]].rng.clone()).collect();
+            // first draft input: the stream's pending token
+            let mut toks: Vec<u16> =
+                pj.iter().map(|&j| streams[j][streams[j].len() - 1]).collect();
+            let Some(draft) = self.draft.as_deref() else { return };
+            let Some(dpool) = self.draft_pool.as_ref() else { return };
+            let mut state = dpool.gather_state(draft.tier(), &slots, b);
+            let mut scratch = StepScratch::with_kernels(1, self.kernels);
+            let mut logits: Vec<f32> = Vec::new();
+            let live = &self.live;
+            let faults = &self.cfg.faults;
+            for si in 0..k_max {
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    for &j in &pj {
+                        if si < tick_k[j] {
+                            let lr = &live[spec[j]];
+                            faults.check(
+                                FaultSite::Draft,
+                                lr.req.id,
+                                (lr.generated.len() + 1 + si) as u64,
+                            );
+                        }
+                    }
+                    draft.step_into(&toks, &mut state, &mut scratch, &mut logits);
+                }));
+                if res.is_err() {
+                    // keep what was drafted so far; lanes verify a
+                    // shorter (possibly empty) proposal run
+                    break;
+                }
+                for (bi, &j) in pj.iter().enumerate() {
+                    if si >= tick_k[j] {
+                        // shorter grant: this lane's copy keeps
+                        // stepping as batch padding, output unused
+                        continue;
+                    }
+                    let row = &logits[bi * v..(bi + 1) * v];
+                    let lr = &live[spec[j]];
+                    let tok = sampler::sample_row(&mut prop_rng[bi], row, v, &lr.req.params);
+                    proposals[j].push(tok);
+                    toks[bi] = tok;
+                }
+            }
+        }
+        let proposed: usize = proposals.iter().map(|p| p.len()).sum();
+        self.push_span(SpanKind::DraftRound, t0, NO_REQ, proposed as u32, pj.len() as u32);
+    }
 }
 #[cfg(test)]
 mod tests {
@@ -1324,6 +1832,109 @@ mod tests {
             .collect();
         done.sort_by_key(|(id, _)| *id);
         done
+    }
+
+    /// Mixed greedy/temperature workload through `eng` — the plain and
+    /// speculative arms of the bit-identity tests run the same one.
+    fn run_mixed(eng: &mut NativeEngine) -> Vec<(u64, Vec<u16>)> {
+        for i in 0..9u64 {
+            let plen = 2 + (i as usize % 4);
+            let prompt: Vec<u16> = (0..plen).map(|j| ((i as usize + j) % 16) as u16).collect();
+            let r = if i % 2 == 0 {
+                req(i, prompt, 6 + i as usize % 5)
+            } else {
+                sampled_req(i, prompt, 6 + i as usize % 5)
+            };
+            eng.submit(r);
+        }
+        let mut done: Vec<(u64, Vec<u16>)> = eng
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        done.sort_by_key(|(id, _)| *id);
+        done
+    }
+
+    fn w8a8_target() -> Box<dyn StepModel + Send + Sync> {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 13);
+        let calib: Vec<u16> = (0..64u16).map(|i| i % t.vocab as u16).collect();
+        Box::new(QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default()))
+    }
+
+    fn w4a8_draft() -> Box<dyn StepModel + Send + Sync> {
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 13);
+        let calib: Vec<u16> = (0..64u16).map(|i| i % t.vocab as u16).collect();
+        Box::new(QuantizedMambaModel::from_model(
+            &model,
+            &calib,
+            &QuantConfig { weight_bits: 4, ..QuantConfig::default() },
+        ))
+    }
+
+    #[test]
+    fn spec_decode_streams_bit_identical_to_plain() {
+        // tentpole acceptance (unit scale): for K in {2, 4, 8}, the
+        // W4A8-drafted speculative engine emits exactly the plain
+        // W8A8 engine's streams — greedy and temperature lanes alike
+        let mut base = NativeEngine::new(w8a8_target(), NativeEngineConfig::default());
+        let plain = run_mixed(&mut base);
+        for k in [2usize, 4, 8] {
+            let cfg = NativeEngineConfig { spec_tokens: k, ..Default::default() };
+            let mut eng = NativeEngine::with_draft(w8a8_target(), w4a8_draft(), cfg);
+            let spec = run_mixed(&mut eng);
+            assert_eq!(spec, plain, "spec_tokens={k} changed the token streams");
+            assert!(eng.metrics.spec_rounds > 0, "speculation never engaged at k={k}");
+            assert!(
+                eng.metrics.spec_accepted_tokens > 0,
+                "the W4A8 twin accepted nothing at k={k}"
+            );
+            assert_eq!(eng.draft_pool_in_use(), 0, "draft slots leaked at k={k}");
+            eng.check_slot_conservation().unwrap();
+        }
+        // spec_tokens = 0 with a draft attached is exactly plain decode
+        let cfg = NativeEngineConfig::default();
+        let mut z = NativeEngine::with_draft(w8a8_target(), w4a8_draft(), cfg);
+        let zs = run_mixed(&mut z);
+        assert_eq!(zs, plain);
+        assert_eq!(z.metrics.spec_rounds, 0, "spec_tokens=0 must not speculate");
+    }
+
+    #[test]
+    fn spec_degrades_to_plain_on_hopeless_draft() {
+        // a draft from an unrelated model proposes garbage: streams
+        // must still be bit-identical (acceptance just collapses, and
+        // dry lanes degrade to k = 0 instead of thrashing forever)
+        let mut base = NativeEngine::new(w8a8_target(), NativeEngineConfig::default());
+        let plain = run_mixed(&mut base);
+        let bad: Box<dyn StepModel + Send + Sync> = Box::new(MambaModel::synthetic(tier(), 99));
+        let cfg = NativeEngineConfig { spec_tokens: 4, ..Default::default() };
+        let mut eng = NativeEngine::with_draft(w8a8_target(), bad, cfg);
+        let spec = run_mixed(&mut eng);
+        assert_eq!(spec, plain, "a bad draft may cost speed, never tokens");
+        assert!(eng.metrics.spec_rounds > 0);
+        assert!(
+            eng.metrics.spec_accepted_tokens < eng.metrics.spec_drafted_tokens,
+            "an unrelated draft should not be fully accepted"
+        );
+        eng.check_slot_conservation().unwrap();
+    }
+
+    #[test]
+    fn spec_lane_cancel_releases_draft_slot() {
+        let cfg = NativeEngineConfig { spec_tokens: 4, ..Default::default() };
+        let mut eng = NativeEngine::with_draft(w8a8_target(), w4a8_draft(), cfg);
+        eng.submit(sampled_req(1, vec![1, 2, 3], 64));
+        eng.step().unwrap(); // admit + prefill + first token
+        eng.step().unwrap(); // first speculative round
+        assert_eq!(eng.draft_pool_in_use(), 1, "decoding lane must attach a draft slot");
+        eng.check_slot_conservation().unwrap();
+        eng.cancel(1).expect("live request must be cancellable");
+        assert_eq!(eng.draft_pool_in_use(), 0, "cancel must release the draft slot");
+        eng.check_slot_conservation().unwrap();
     }
 
     #[test]

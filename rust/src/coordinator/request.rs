@@ -175,6 +175,48 @@ impl Response {
     }
 }
 
+/// Per-lane speculative-decoding bookkeeping (ISSUE 10). A decoding
+/// lane *attaches* one of these when the engine runs with a draft
+/// model and a slot is free in the draft-state pool; it keeps it until
+/// harvest (the draft slot is released in `finish_live`, the one
+/// slot-reclaim point).
+///
+/// The two cursors count **stream tokens** (prompt ++ generated)
+/// consumed by each model's state slab:
+/// * the target slab always holds `target_next` consumed tokens with
+///   `stream[target_next..]` still pending — exactly the plain-decode
+///   pending-token invariant (`target_next == stream_len - 1` between
+///   rounds), so a verify chunk is `stream[target_next..] ++ drafts`
+///   and a rejected round restores the pre-verify snapshot (O(1),
+///   constant-size — the SSM rollback asset) leaving `target_next`
+///   untouched;
+/// * the draft slab lags at `draft_next ≤ stream_len - 1` and catches
+///   up through a batched prefill before proposing, so a round that
+///   emitted nothing (fault isolation) needs no draft-side rollback at
+///   all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecState {
+    /// this lane's slot in the engine's draft-state pool
+    pub draft_slot: usize,
+    /// stream tokens consumed by the target slab (pending-token
+    /// invariant: equals `prompt.len() + generated.len() - 1` between
+    /// rounds)
+    pub target_next: usize,
+    /// stream tokens consumed by the draft slab (lags `target_next`;
+    /// catch-up prefill closes the gap each round)
+    pub draft_next: usize,
+    /// current per-lane draft length ask — adapted by the engine:
+    /// halved on rejection, +1 on full acceptance (capped at the
+    /// configured `spec_tokens`), pinned to 0 once `dry_rounds`
+    /// crosses the degrade threshold
+    pub k: usize,
+    /// consecutive rounds with zero accepted draft tokens; crossing
+    /// the engine's threshold degrades the lane to plain decode
+    /// (k = 0) permanently — adversarial prompts stop paying the
+    /// draft cost
+    pub dry_rounds: u32,
+}
+
 /// Where a live request sits in the unified scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -219,6 +261,10 @@ pub struct LiveRequest {
     /// last sampled-token stamp (engine clock) — the ITL gap anchor
     pub last_token_ms: Option<f64>,
     pub decode_ms: Vec<f64>,
+    /// speculative-decoding state: `Some` once a decoding lane attaches
+    /// a draft slot (engine configured with `spec_tokens > 0` and a
+    /// draft model), `None` on the plain decode path
+    pub spec: Option<SpecState>,
 }
 
 /// Derive a per-request sampler stream seed. Splitmix-style mixing so
@@ -256,6 +302,7 @@ impl LiveRequest {
             prefill_done_ms: None,
             last_token_ms: None,
             decode_ms: Vec::new(),
+            spec: None,
             req,
         }
     }

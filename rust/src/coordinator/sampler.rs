@@ -15,6 +15,16 @@ use crate::util::rng::Pcg32;
 
 /// Sample a token from one logits row (`vocab` live entries) using the
 /// caller's RNG stream.
+///
+/// **Greedy tie-break contract (ISSUE 10):** at `temperature <= 0.0`
+/// this returns [`argmax`], which resolves exact float ties toward the
+/// **lowest index**. Speculative decoding leans on this being a total,
+/// deterministic function of the row: the draft's proposal and the
+/// target's verification both call the same argmax, so a duplicated
+/// maximum can never make acceptance depend on evaluation order.
+/// Greedy sampling consumes **no** RNG draws; each temperature sample
+/// consumes exactly one `weighted` draw — the accounting that lets the
+/// verify path replay a lane's stream bit-exactly.
 pub fn sample_row(rng: &mut Pcg32, logits: &[f32], vocab: usize, p: &SamplingParams) -> u16 {
     let row = &logits[..vocab.min(logits.len())];
     if p.temperature <= 0.0 {
@@ -49,6 +59,9 @@ impl Sampler {
     }
 }
 
+/// Index of the row maximum; exact ties resolve to the **lowest**
+/// index (strict `>` comparison). This tie-break is load-bearing for
+/// speculative decoding's draft/target agreement — see [`sample_row`].
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
     for i in 1..row.len() {
@@ -69,6 +82,25 @@ mod tests {
         let logits = vec![0.0, 5.0, -1.0, 4.9];
         let p = SamplingParams::default();
         assert_eq!(s.sample(&logits, 4, &p), 1);
+    }
+
+    #[test]
+    fn greedy_ties_break_to_lowest_index() {
+        // duplicated maxima: strict `>` keeps the first occurrence,
+        // wherever the duplicates sit — the speculative-decoding
+        // acceptance check depends on this exact contract
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[4.0, 4.0, 4.0]), 0);
+        assert_eq!(argmax(&[-1.0, 0.5, -1.0, 0.5, 0.5]), 1);
+        // all-equal rows (the BOS-padded cold start) pick index 0
+        assert_eq!(argmax(&[0.0; 8]), 0);
+        // and sample_row at temperature 0 routes through argmax
+        // without consuming any RNG draws
+        let mut rng = Pcg32::new(7);
+        let before = rng.clone().next_u32();
+        let p = SamplingParams::default();
+        assert_eq!(sample_row(&mut rng, &[2.0, 9.0, 9.0, 1.0], 4, &p), 1);
+        assert_eq!(rng.next_u32(), before, "greedy must not advance the stream");
     }
 
     #[test]

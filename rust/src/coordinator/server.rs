@@ -259,6 +259,20 @@ impl ServerHandle {
         Self::spawn_core(move || Ok(Box::new(NativeEngine::new(model, cfg)) as Box<dyn EngineCore>))
     }
 
+    /// Spawn the native engine with a speculative-decoding draft model
+    /// alongside the target. `cfg.spec_tokens > 0` activates the
+    /// draft/verify loop; the token streams stay bit-identical to
+    /// [`spawn_native`](Self::spawn_native) by construction.
+    pub fn spawn_native_with_draft(
+        model: Box<dyn StepModel + Send + Sync>,
+        draft: Box<dyn StepModel + Send + Sync>,
+        cfg: NativeEngineConfig,
+    ) -> Result<ServerHandle> {
+        Self::spawn_core(move || {
+            Ok(Box::new(NativeEngine::with_draft(model, draft, cfg)) as Box<dyn EngineCore>)
+        })
+    }
+
     /// Submit a prompt; returns a receiver for the final response.
     pub fn submit(
         &mut self,

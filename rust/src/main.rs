@@ -13,6 +13,7 @@
 //!                      [--prefill-chunk 64] [--max-tokens-per-tick 0]
 //!                      [--threads N] [--kernels auto|scalar|avx2|neon]
 //!                      [--bits 8|4]
+//!                      [--spec-tokens K] [--spec-draft w4a8|fp32]
 //!                      [--metrics-port P] [--trace-out FILE]
 //!                      [--metrics-linger-ms MS]
 //!   quamba eval-ppl    [--tier m130] [--methods fp16,quamba] [--windows 16]
@@ -26,7 +27,7 @@ use anyhow::{anyhow, Result};
 use quamba::bench_support::{f2, ms, Table, Workload};
 use quamba::config::Manifest;
 use quamba::coordinator::server::ServerHandle;
-use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams};
+use quamba::coordinator::{EngineConfig, NativeEngineConfig, SamplingParams, SpecDraft};
 use quamba::data;
 use quamba::eval;
 use quamba::obs::{ExporterLabels, MetricsExporter};
@@ -87,6 +88,12 @@ fn print_help() {
          \x20              token stream instead of synthetic tokens;\n\
          \x20              --bits 4 serves the packed-nibble W4A8 tier\n\
          \x20              — half the weight bytes, per-group scales;\n\
+         \x20              --spec-tokens K enables self-speculative\n\
+         \x20              decoding: a cheap draft twin (--spec-draft\n\
+         \x20              w4a8|fp32) proposes K tokens/lane that the\n\
+         \x20              target verifies in one batched prefill —\n\
+         \x20              token streams stay bit-identical to plain\n\
+         \x20              decode (0 = off);\n\
          \x20              --metrics-port P exposes Prometheus text at\n\
          \x20              http://127.0.0.1:P/metrics (0 = ephemeral,\n\
          \x20              the bound port is printed), --trace-out FILE\n\
@@ -366,6 +373,11 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     if bits != 8 && bits != 4 {
         return Err(anyhow!("--bits {bits}: supported weight widths are 8 (W8A8) and 4 (W4A8)"));
     }
+    let spec_tokens = args.get_usize("spec-tokens", 0);
+    let spec_draft = {
+        let raw = args.get_or("spec-draft", "w4a8");
+        SpecDraft::parse(raw).ok_or_else(|| anyhow!("--spec-draft {raw}: expected w4a8 or fp32"))?
+    };
 
     let model = match args.get("weights") {
         Some(path) => {
@@ -398,12 +410,15 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
     };
     let tier = model.tier.clone();
     let mut rng = Pcg32::new(seed ^ 0x5EED);
-    let boxed: Box<dyn StepModel + Send + Sync> = if method == "fp32" {
-        Box::new(model)
+    // calibration stream: a real token stream via --calib-file, or
+    // deterministic synthetic tokens as the artifact-free fallback.
+    // Shared by the quantized target and the W4A8 draft twin so they
+    // calibrate identically.
+    let need_calib = method != "fp32" || (spec_tokens > 0 && spec_draft == SpecDraft::W4A8);
+    let calib: Vec<u16> = if !need_calib {
+        Vec::new()
     } else {
-        // calibration stream: a real token stream via --calib-file, or
-        // deterministic synthetic tokens as the artifact-free fallback
-        let calib: Vec<u16> = match args.get("calib-file") {
+        match args.get("calib-file") {
             Some(path) => {
                 let toks = load_calib_tokens(Path::new(path), tier.vocab)?;
                 println!("calibration stream: {} tokens from {path}", toks.len());
@@ -416,7 +431,41 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
                 );
                 (0..512).map(|_| rng.below(tier.vocab as u32) as u16).collect()
             }
-        };
+        }
+    };
+    // speculative draft: a cheap twin built from the same weights —
+    // packed-nibble W4A8 (default) or the fp32 reference rebuilt from
+    // its source. Correctness never depends on the draft: the target's
+    // verify pass keeps token streams bit-identical to plain decode.
+    let draft: Option<Box<dyn StepModel + Send + Sync>> = if spec_tokens == 0 {
+        None
+    } else {
+        Some(match spec_draft {
+            SpecDraft::W4A8 => {
+                let qcfg = QuantConfig { weight_bits: 4, ..QuantConfig::default() };
+                let dm = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
+                println!(
+                    "spec draft: W4A8 twin ({} KiB GEMM weights), K={spec_tokens}",
+                    dm.gemm_weight_bytes() as f64 / 1024.0,
+                );
+                Box::new(dm) as Box<dyn StepModel + Send + Sync>
+            }
+            SpecDraft::Fp32 => {
+                let dm = match args.get("weights") {
+                    Some(path) => {
+                        let q = qtz::load(Path::new(path))?;
+                        MambaModel::from_qtz(tier.clone(), &q).map_err(|e| anyhow!("{path}: {e}"))?
+                    }
+                    None => MambaModel::synthetic(tier.clone(), seed),
+                };
+                println!("spec draft: fp32 reference, K={spec_tokens}");
+                Box::new(dm) as Box<dyn StepModel + Send + Sync>
+            }
+        })
+    };
+    let boxed: Box<dyn StepModel + Send + Sync> = if method == "fp32" {
+        Box::new(model)
+    } else {
         let qcfg = QuantConfig { weight_bits: bits as u8, ..QuantConfig::default() };
         let qm = QuantizedMambaModel::from_model(&model, &calib, &qcfg);
         println!(
@@ -449,6 +498,9 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
         default_deadline_ms: args.get_f64("default-deadline-ms", 0.0),
         // flight recorder: on iff the dump is going somewhere
         trace: args.get("trace-out").is_some(),
+        // speculative decoding: K draft tokens per lane per round
+        spec_tokens,
+        spec_draft,
         ..Default::default()
     };
     println!(
@@ -467,6 +519,13 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
             cfg.max_queue, cfg.default_deadline_ms,
         );
     }
+    if cfg.spec_tokens > 0 {
+        println!(
+            "speculative decoding: K={} draft={} (token streams bit-identical to plain decode)",
+            cfg.spec_tokens,
+            cfg.spec_draft.label(),
+        );
+    }
     let stream: Vec<u16> =
         (0..4096).map(|_| rng.below(tier.vocab as u32) as u16).collect();
     let wl = Workload::poisson(&stream, n, rate, 8, 48, max_new, 42);
@@ -478,7 +537,10 @@ fn cmd_serve_native(args: &Args) -> Result<()> {
             .unwrap_or_else(|| Kernels::detect().backend.label().to_string()),
         weight_bits: cfg.weight_bits.to_string(),
     };
-    let mut server = ServerHandle::spawn_native(boxed, cfg)?;
+    let mut server = match draft {
+        Some(d) => ServerHandle::spawn_native_with_draft(boxed, d, cfg)?,
+        None => ServerHandle::spawn_native(boxed, cfg)?,
+    };
     let _exporter = maybe_spawn_exporter(args, &server, labels)?;
     println!("serving {n} requests at ~{rate}/s on {}/{method} (native) ...", tier.name);
     let t0 = std::time::Instant::now();

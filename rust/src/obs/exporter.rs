@@ -169,6 +169,37 @@ pub fn render_prometheus(snap: &MetricsSnapshot, labels: &ExporterLabels) -> Str
         snap.padded_lanes,
     );
 
+    // speculative decoding (ISSUE 10): emitted even at zero so
+    // dashboards can tell "spec off" from "scrape missing"
+    push_counter(
+        &mut out,
+        "quamba_spec_rounds_total",
+        "Speculative draft-verify rounds completed.",
+        &lb,
+        snap.spec_rounds,
+    );
+    push_counter(
+        &mut out,
+        "quamba_spec_drafted_tokens_total",
+        "Draft tokens proposed by the speculative draft model.",
+        &lb,
+        snap.spec_drafted_tokens,
+    );
+    push_counter(
+        &mut out,
+        "quamba_spec_accepted_tokens",
+        "Draft tokens accepted by target verification.",
+        &lb,
+        snap.spec_accepted_tokens,
+    );
+    push_histogram(
+        &mut out,
+        "quamba_spec_accept_len",
+        "Accepted draft tokens per verify round (log2 buckets).",
+        &lb,
+        &snap.spec_accept_len,
+    );
+
     if let Some(c) = &snap.cache {
         push_counter(&mut out, "quamba_cache_hits_total", "Prefix-cache hits.", &lb, c.hits);
         push_counter(&mut out, "quamba_cache_misses_total", "Prefix-cache misses.", &lb, c.misses);
@@ -383,6 +414,15 @@ mod tests {
             snapshot_drops: 0,
             padded_lanes: 3,
             total_lanes: 8,
+            spec_accept_len: {
+                let mut h = LogHistogram::new();
+                h.record(3.0);
+                h.record(1.0);
+                h
+            },
+            spec_rounds: 2,
+            spec_drafted_tokens: 8,
+            spec_accepted_tokens: 4,
             elapsed_ms: 100.0,
             tok_per_s: 700.0,
             shed_rate: 1.0 / 3.0,
@@ -419,6 +459,9 @@ mod tests {
         assert!(text.contains("quamba_itl_ms_count{"), "{text}");
         assert!(text.contains("quamba_itl_ms_quantile{"), "{text}");
         assert!(text.contains("quantile=\"0.99\""), "{text}");
+        assert!(text.contains("quamba_spec_accepted_tokens{"), "{text}");
+        assert!(text.contains("quamba_spec_rounds_total{"), "{text}");
+        assert!(text.contains("# TYPE quamba_spec_accept_len histogram"), "{text}");
         // no cache stats synced → no cache series
         assert!(!text.contains("quamba_cache_"), "{text}");
         // deterministic rendering

@@ -45,6 +45,12 @@ pub enum SpanKind {
     SnapshotInsert,
     /// the finished-lane harvest loop
     Harvest,
+    /// one speculative draft round: catch-up prefill + K proposal
+    /// steps on the draft model (ISSUE 10)
+    DraftRound,
+    /// one batched target verification of the speculating lanes'
+    /// pending + drafted tokens (ISSUE 10)
+    VerifyChunk,
 }
 
 impl SpanKind {
@@ -58,6 +64,8 @@ impl SpanKind {
             SpanKind::PrefillChunk => "prefill_chunk",
             SpanKind::SnapshotInsert => "snapshot_insert",
             SpanKind::Harvest => "harvest",
+            SpanKind::DraftRound => "draft_round",
+            SpanKind::VerifyChunk => "verify_chunk",
         }
     }
 
@@ -71,11 +79,13 @@ impl SpanKind {
             SpanKind::PrefillChunk => 4,
             SpanKind::SnapshotInsert => 5,
             SpanKind::Harvest => 6,
+            SpanKind::DraftRound => 7,
+            SpanKind::VerifyChunk => 8,
         }
     }
 
     /// Every kind, in tid order (tests/tooling iterate this).
-    pub fn all() -> [SpanKind; 7] {
+    pub fn all() -> [SpanKind; 9] {
         [
             SpanKind::Tick,
             SpanKind::Admission,
@@ -84,6 +94,8 @@ impl SpanKind {
             SpanKind::PrefillChunk,
             SpanKind::SnapshotInsert,
             SpanKind::Harvest,
+            SpanKind::DraftRound,
+            SpanKind::VerifyChunk,
         ]
     }
 }

@@ -24,7 +24,9 @@ pub mod scan;
 pub mod step;
 
 pub use mamba::{MambaModel, MambaTier};
-pub use qmamba::{fused_conv_silu_i8, fused_conv_silu_i8_with, QuantConfig, QuantizedMambaModel};
+pub use qmamba::{
+    fused_conv_silu_i8, fused_conv_silu_i8_with, verify_row, QuantConfig, QuantizedMambaModel,
+};
 pub use scan::{
     selective_scan, selective_scan_into, selective_scan_q, selective_scan_q_into,
     selective_scan_q_into_with, ScanParams,

@@ -280,6 +280,22 @@ pub fn fused_conv_silu_i8_with(
     }
 }
 
+/// Index one logits row out of a [`StepModel::prefill_batch_into`]
+/// output (ISSUE 10's speculative verify path reads draft/verify rows
+/// through this, so the lane-major `(bi·t_max + t)·vocab` layout is
+/// spelled in exactly one place).
+///
+/// `bi` is the lane, `t_max` the padded time grid (the longest chunk
+/// in the batch), `t` the 0-based row within lane `bi`'s real chunk,
+/// `vocab` the row width. Row `t` holds the next-token distribution
+/// after the lane has consumed `chunk[..=t]` — verification walks rows
+/// `c-1 ..= c-1+k` for a chunk of `c` catch-up tokens plus `k` drafts.
+pub fn verify_row(logits: &[f32], bi: usize, t_max: usize, t: usize, vocab: usize) -> &[f32] {
+    debug_assert!(t < t_max, "row {t} outside the padded grid {t_max}");
+    let off = (bi * t_max + t) * vocab;
+    &logits[off..off + vocab]
+}
+
 impl QuantizedMambaModel {
     /// Build by calibrating the fp32 model over `calib_tokens` (one
     /// pass is enough for the static per-tensor scales; concatenate
@@ -897,6 +913,42 @@ mod tests {
         assert_eq!(st_batched.conv_q, st_step.conv_q, "conv window codes diverged");
         for (i, (a, b)) in st_batched.ssm.iter().zip(&st_step.ssm).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "ssm state {i}: {a} != {b}");
+        }
+    }
+
+    #[test]
+    fn verify_row_addresses_the_batched_logits_grid() {
+        // two ragged chunks (lengths 3 and 1) through the batched
+        // prefill: every row verify_row returns must equal the
+        // single-lane oracle's row at the same token position
+        let t = tier();
+        let model = MambaModel::synthetic(t.clone(), 7);
+        let mut r = crate::util::rng::Pcg32::new(0xB00);
+        let calib: Vec<u16> = (0..256).map(|_| r.below(t.vocab as u32) as u16).collect();
+        let qm = QuantizedMambaModel::from_model(&model, &calib, &QuantConfig::default());
+        let chunks: Vec<Vec<u16>> = vec![vec![1, 2, 3], vec![4]];
+        let slices: Vec<&[u16]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let mut st = MambaState::new_quantized(&t, 2);
+        let mut scratch = StepScratch::new(1);
+        let mut logits = Vec::new();
+        qm.prefill_batch_into(&slices, &mut st, &mut scratch, &mut logits);
+        let t_max = 3;
+        assert_eq!(logits.len(), 2 * t_max * t.vocab);
+        for (bi, chunk) in chunks.iter().enumerate() {
+            let mut st1 = MambaState::new_quantized(&t, 1);
+            let mut l1 = Vec::new();
+            qm.prefill_batch_into(&[chunk.as_slice()], &mut st1, &mut scratch, &mut l1);
+            for ti in 0..chunk.len() {
+                let got = verify_row(&logits, bi, t_max, ti, t.vocab);
+                let want = verify_row(&l1, 0, chunk.len(), ti, t.vocab);
+                for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "lane {bi} row {ti} logit {i}: batched {a} != oracle {b}"
+                    );
+                }
+            }
         }
     }
 

@@ -53,8 +53,16 @@ fn tier() -> MambaTier {
     }
 }
 
+/// Target model (and, for spec-enabled configs, a *different* seed-14
+/// draft — imperfect proposals exercise the rollback path constantly;
+/// the seeded Draft/Verify fault sites fire on top of that).
 fn engine(cfg: NativeEngineConfig) -> NativeEngine {
-    NativeEngine::new(Box::new(MambaModel::synthetic(tier(), 13)), cfg)
+    let model = Box::new(MambaModel::synthetic(tier(), 13));
+    if cfg.spec_tokens > 0 {
+        NativeEngine::with_draft(model, Box::new(MambaModel::synthetic(tier(), 14)), cfg)
+    } else {
+        NativeEngine::new(model, cfg)
+    }
 }
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -83,6 +91,11 @@ fn schedule(seed: u64) -> Schedule {
         default_deadline_ms: if r.below(3) == 0 { 40.0 } else { 0.0 },
         clock: Clock::Manual { ms_per_tick: 1.0 },
         faults: FaultPlan::seeded(seed, 0.02 + 0.03 * r.f64()),
+        // a third of the schedules run speculative decoding (draft +
+        // verify + rollback under fire: the seeded plan injects at the
+        // Draft/Verify sites too); the clean reference stays spec-off —
+        // valid because speculation never moves tokens
+        spec_tokens: [0, 0, 2, 4][r.below(4) as usize],
         ..Default::default()
     };
     let n_req = 4 + r.below(4) as u64;
@@ -185,6 +198,7 @@ fn run_seed(seed: u64) {
     ids.dedup();
     assert_eq!(ids.len(), n_req, "seed {seed}: duplicate response ids");
     assert_eq!(eng.pool_in_use(), 0, "seed {seed}: leaked slots after drain");
+    assert_eq!(eng.draft_pool_in_use(), 0, "seed {seed}: leaked draft slots after drain");
     assert_eq!(
         eng.metrics.total_outcomes(),
         n_req as u64,
@@ -266,6 +280,92 @@ fn worker_panic_fails_one_request_while_server_keeps_serving() {
     assert_eq!(resp.finish, FinishReason::Length);
     assert_eq!(resp.tokens.len(), 4);
     handle.shutdown();
+}
+
+/// ISSUE 10 targeted chaos: a panic mid-verify (the speculative
+/// target pass) retires exactly the named victim with its pre-verify
+/// tokens intact — the O(1) pre-draft snapshot restore means nothing
+/// half-committed survives — while co-batched spec lanes finish
+/// bit-identical to a fault-free, spec-OFF engine.
+#[test]
+fn verify_panic_restores_snapshot_and_survivors_stay_bit_identical() {
+    silence_injected_panics();
+    let arrivals: Vec<(u64, Request)> = (1..=3).map(|id| (1, req(id))).collect();
+    let clean = clean_streams(&arrivals);
+    // every lane enters speculation holding exactly the one token its
+    // prefill emitted, so (Verify, req 2, step 1) fires on the
+    // victim's FIRST verify round regardless of draft acceptance
+    let faults = FaultPlan {
+        targeted: vec![TargetedFault { site: FaultSite::Verify, req_id: 2, step: 1 }],
+        ..FaultPlan::none()
+    };
+    let cfg = NativeEngineConfig { capacity: 8, spec_tokens: 4, faults, ..Default::default() };
+    let mut eng = engine(cfg);
+    for (_, r) in &arrivals {
+        eng.submit(r.clone());
+    }
+    let mut done: Vec<Response> = Vec::new();
+    for _ in 0..1000 {
+        done.extend(eng.step().unwrap());
+        eng.check_slot_conservation().unwrap();
+        if eng.n_live() == 0 && eng.n_queued() == 0 {
+            break;
+        }
+    }
+    assert_eq!(done.len(), 3, "all requests must reach a terminal outcome");
+    let victim = done.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(victim.finish, FinishReason::Failed);
+    assert!(victim.error.as_deref().unwrap_or("").contains("injected"), "{:?}", victim.error);
+    assert_eq!(
+        victim.tokens,
+        clean[&2][..1],
+        "the pre-verify token survives; nothing half-verified leaks"
+    );
+    for r in done.iter().filter(|r| r.id != 2) {
+        assert_eq!(r.finish, FinishReason::Length, "survivor {} must finish clean", r.id);
+        assert_eq!(&r.tokens, &clean[&r.id], "survivor {} diverged", r.id);
+    }
+    assert_eq!(eng.pool_in_use(), 0, "target slots leaked");
+    assert_eq!(eng.draft_pool_in_use(), 0, "draft slots leaked");
+}
+
+/// Draft panics are never fatal: the draft runs on scratch copies, so
+/// an injected panic in catch-up or proposal steps only costs that
+/// tick's speculation — every request still finishes clean with
+/// tokens bit-identical to the spec-off reference.
+#[test]
+fn draft_panic_never_fails_requests_and_tokens_stay_bit_identical() {
+    silence_injected_panics();
+    let arrivals: Vec<(u64, Request)> = (1..=3).map(|id| (1, req(id))).collect();
+    let clean = clean_streams(&arrivals);
+    let faults = FaultPlan {
+        targeted: vec![
+            // proposal-step key (generated + 1 + step_index) on the
+            // first round, and a catch-up key later in the stream
+            TargetedFault { site: FaultSite::Draft, req_id: 2, step: 2 },
+            TargetedFault { site: FaultSite::Draft, req_id: 3, step: 4 },
+        ],
+        ..FaultPlan::none()
+    };
+    let cfg = NativeEngineConfig { capacity: 8, spec_tokens: 4, faults, ..Default::default() };
+    let mut eng = engine(cfg);
+    for (_, r) in &arrivals {
+        eng.submit(r.clone());
+    }
+    let mut done: Vec<Response> = Vec::new();
+    for _ in 0..1000 {
+        done.extend(eng.step().unwrap());
+        eng.check_slot_conservation().unwrap();
+        if eng.n_live() == 0 && eng.n_queued() == 0 {
+            break;
+        }
+    }
+    assert_eq!(done.len(), 3);
+    for r in &done {
+        assert_eq!(r.finish, FinishReason::Length, "req {} must survive draft panics", r.id);
+        assert_eq!(&r.tokens, &clean[&r.id], "req {} diverged", r.id);
+    }
+    assert_eq!(eng.draft_pool_in_use(), 0, "draft slots leaked");
 }
 
 /// Helper for the serving-layer tests: the server assigns ids 1..;

@@ -405,6 +405,163 @@ fn w4a8_forced_kernel_backends_identical_under_chunking() {
     }
 }
 
+/// Serve [`workload`] through a speculative engine: W8A8 target plus
+/// a draft twin (the W4A8 sibling by default, the fp32 reference when
+/// `fp32_draft`), proposing `spec_tokens` tokens per lane per round.
+fn run_spec(
+    cfg: NativeEngineConfig,
+    spec_tokens: usize,
+    fp32_draft: bool,
+    seed: u64,
+) -> Vec<(u64, Vec<u16>)> {
+    let cfg = NativeEngineConfig { spec_tokens, ..cfg };
+    let draft: Box<dyn StepModel + Send + Sync> = if fp32_draft {
+        Box::new(fp32_model(seed))
+    } else {
+        Box::new(w4a8_model(seed))
+    };
+    let mut eng = NativeEngine::with_draft(Box::new(w8a8_model(seed)), draft, cfg);
+    for req in workload(seed) {
+        eng.submit(req);
+    }
+    let mut done: Vec<(u64, Vec<u16>)> = eng
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    done
+}
+
+#[test]
+fn spec_decode_never_changes_tokens_across_schedules() {
+    // ISSUE 10 acceptance sweep: speculative decoding is a pure
+    // throughput optimization — K ∈ {0, 2, 4, 8} × chunk {∞, 1, 16} ×
+    // threads {1, 3} × cache off/on must serve token streams
+    // bit-identical to the plain W8A8 engine, greedy AND temperature
+    // requests alike (workload() mixes both).
+    let seed = 2u64;
+    let baseline = run(NativeEngineConfig::default(), true, seed);
+    for k in [0usize, 2, 4, 8] {
+        for chunk in [0usize, 1, 16] {
+            for threads in [1usize, 3] {
+                for cache_bytes in [0usize, 1 << 20] {
+                    let cfg = NativeEngineConfig {
+                        prefill_chunk: chunk,
+                        threads,
+                        cache_bytes,
+                        snapshot_stride: if cache_bytes > 0 { 3 } else { 0 },
+                        ..Default::default()
+                    };
+                    let got = run_spec(cfg, k, false, seed);
+                    assert_eq!(
+                        baseline, got,
+                        "spec decode moved tokens (K={k} chunk={chunk} \
+                         threads={threads} cache={cache_bytes})"
+                    );
+                }
+            }
+        }
+    }
+    // second seed, spot-checked at the matrix corners
+    let seed = 19u64;
+    let baseline = run(NativeEngineConfig::default(), true, seed);
+    for (k, chunk, threads) in [(2usize, 0usize, 1usize), (8, 1, 3), (4, 16, 3)] {
+        let cfg = NativeEngineConfig { prefill_chunk: chunk, threads, ..Default::default() };
+        assert_eq!(
+            baseline,
+            run_spec(cfg, k, false, seed),
+            "spec decode moved tokens (seed={seed} K={k} chunk={chunk} threads={threads})"
+        );
+    }
+}
+
+#[test]
+fn spec_decode_with_fp32_draft_never_changes_tokens() {
+    // the draft tier is a free choice: an fp32 draft proposes
+    // different tokens than the W4A8 twin (different acceptance
+    // rates), but the verify pass pins the output stream regardless
+    for seed in [2u64, 19] {
+        let baseline = run(NativeEngineConfig::default(), true, seed);
+        for k in [2usize, 8] {
+            assert_eq!(
+                baseline,
+                run_spec(NativeEngineConfig::default(), k, true, seed),
+                "fp32-draft spec decode moved tokens (seed={seed} K={k})"
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_decode_identical_across_kernel_backends() {
+    let base = NativeEngineConfig {
+        prefill_chunk: 5,
+        cache_bytes: 1 << 20,
+        snapshot_stride: 4,
+        kernel_backend: Some(KernelBackend::Scalar),
+        ..Default::default()
+    };
+    let want = run_spec(base.clone(), 4, false, 11);
+    assert_eq!(want, run(base.clone(), true, 11), "spec scalar run diverged from plain");
+    for backend in Kernels::available() {
+        let cfg = NativeEngineConfig { kernel_backend: Some(backend), ..base.clone() };
+        let got = run_spec(cfg, 4, false, 11);
+        assert_eq!(want, got, "spec backend {} changed tokens", backend.label());
+    }
+}
+
+#[test]
+fn verify_rows_bit_identical_to_step_decode() {
+    // the mechanism spec_tick relies on: feeding already-emitted
+    // tokens through prefill_batch_into must produce, row for row,
+    // the same logits step_into would have produced one token at a
+    // time — for the fp32 reference AND both quantized tiers.
+    use quamba::ssm::verify_row;
+    let t = tier();
+    let v = t.vocab;
+    let fp = fp32_model(7);
+    let q8 = w8a8_model(7);
+    let q4 = w4a8_model(7);
+    for model in [&fp as &dyn StepModel, &q8, &q4] {
+        let quantized = model.quantized_conv_state();
+        let mut r = Pcg32::new(0x5bec);
+        let prompt: Vec<u16> = (0..6).map(|_| r.below(v as u32) as u16).collect();
+        let pending: Vec<u16> = (0..9).map(|_| r.below(v as u32) as u16).collect();
+        let mut scratch = StepScratch::new(1);
+
+        // oracle: stepwise decode from the prefilled state
+        let mut st_step = MambaState::new_for(&t, 1, quantized);
+        let mut lg = Vec::new();
+        model.prefill_into(&prompt, &mut st_step, &mut scratch, &mut lg);
+        let mut step_rows: Vec<Vec<f32>> = Vec::new();
+        for &tok in &pending {
+            let mut row = vec![0.0f32; v];
+            model.step_into(&[tok], &mut st_step, &mut scratch, &mut row);
+            step_rows.push(row);
+        }
+
+        // spec path: the same tokens as ONE batched verify chunk
+        let mut st_batch = MambaState::new_for(&t, 1, quantized);
+        let mut lg2 = Vec::new();
+        model.prefill_into(&prompt, &mut st_batch, &mut scratch, &mut lg2);
+        let mut logits = Vec::new();
+        model.prefill_batch_into(&[&pending], &mut st_batch, &mut scratch, &mut logits);
+        for (ti, want) in step_rows.iter().enumerate() {
+            assert_bits_eq(
+                want,
+                verify_row(&logits, 0, pending.len(), ti, v),
+                &format!("verify row {ti}"),
+            );
+        }
+        // and the rolled-forward state matches the stepwise one
+        assert_eq!(st_step.conv_q, st_batch.conv_q, "conv codes");
+        assert_bits_eq(&st_step.conv, &st_batch.conv, "conv");
+        assert_bits_eq(&st_step.ssm, &st_batch.ssm, "ssm");
+    }
+}
+
 #[test]
 fn token_budget_never_changes_tokens() {
     // tight budgets reorder work across ticks (incl. the

@@ -31,6 +31,12 @@ import sys
 # ops carrying end-to-end serving latency rather than per-op kernel time
 LATENCY_PREFIXES = ("ttft_", "itl_", "burst_")
 
+# ops whose `ms` field is a count, not a time (e.g. accept_len_mean,
+# the speculative-decoding mean acceptance length): printed in the
+# table for trajectory, but a higher value is better or neutral, so
+# they are exempt from the regression budget entirely
+COUNT_PREFIXES = ("accept_len_",)
+
 
 def load(path):
     with open(path) as f:
@@ -90,6 +96,10 @@ def main(argv):
         is_latency = key[0].startswith(LATENCY_PREFIXES)
         budget = latency_warn_pct if is_latency else warn_pct
         flag = ""
+        if key[0].startswith(COUNT_PREFIXES):
+            # counts (acceptance length etc.): trajectory display only
+            print(f"{key[0]:<28} {key[1]:<34} {b:>10.4f} {f:>10.4f} {delta:>+7.1f}%  (count)")
+            continue
         if delta > budget:
             regressions += 1
             flag = "  <-- REGRESSION"
